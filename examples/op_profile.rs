@@ -1,0 +1,42 @@
+//! Per-operator timing profile: the perf-pass instrumentation used for the
+//! iteration log in EXPERIMENTS.md section Perf.
+//!
+//! ```bash
+//! cargo run --release --example op_profile -- [n] [variant]
+//! ```
+use claire::runtime::OpRegistry;
+use claire::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let variant = std::env::args().nth(2).unwrap_or_else(|| "opt-fd8-cubic".into());
+    let reg = OpRegistry::open_default().unwrap();
+    let m = n * n * n;
+    let mut rng = Rng::new(1);
+    let f: Vec<f32> = (0..m).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+    let v: Vec<f32> = (0..3 * m).map(|_| rng.uniform_f32(-0.3, 0.3)).collect();
+    let q: Vec<f32> = (0..3 * m).map(|_| rng.uniform_f32(0.0, n as f32)).collect();
+    let traj: Vec<f32> = (0..5 * m).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+    let bg = [5e-4f32, 1e-4];
+
+    let time = |name: &str, inputs: &[&[f32]]| {
+        let op = reg.get(name, &variant, n).unwrap();
+        op.call(inputs).unwrap();
+        let t0 = Instant::now();
+        let reps = 3;
+        for _ in 0..reps { op.call(inputs).unwrap(); }
+        println!("{name:16} {:?}", t0.elapsed() / reps);
+    };
+    println!("== n={n} variant={variant} ==");
+    time("newton_setup", &[&v, &f, &f, &bg]);
+    time("hess_matvec", &[&v, &traj, &q, &q, &f, &bg]);
+    time("objective", &[&v, &f, &f, &bg]);
+    time("precond", &[&v, &bg]);
+    time("interp_spl", &[&f, &q]);
+    time("interp_linbf16", &[&f, &q]);
+    time("prefilter", &[&f]);
+    time("grad_fd8", &[&f]);
+    time("grad_fft", &[&f]);
+    time("reg_apply", &[&v]);
+}

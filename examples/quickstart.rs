@@ -1,0 +1,40 @@
+//! Quickstart: register one synthetic brain pair and print the metrics.
+//!
+//! ```bash
+//! make artifacts                       # once: AOT-compile the operators
+//! cargo run --release --example quickstart
+//! ```
+
+use claire::data::synth;
+use claire::registration::{GnSolver, RegParams, RunReport};
+use claire::runtime::OpRegistry;
+use claire::util::bench::Table;
+
+fn main() -> claire::Result<()> {
+    // 1. Open the artifact registry (PJRT CPU client + manifest).
+    let reg = OpRegistry::open_default()?;
+
+    // 2. Build a synthetic template/reference pair (NIREP na02->na01
+    //    analog) at 16^3 — small enough to solve in under a second.
+    let prob = synth::nirep_analog_pair(&reg, 16, "na02")?;
+
+    // 3. Solve with the paper's default configuration: Gauss-Newton-Krylov,
+    //    beta continuation to 5e-4, FD8 derivatives + cubic B-spline
+    //    interpolation kernels (the gpu-fd8-cubic analog).
+    let solver = GnSolver::new(&reg, RegParams::default());
+    println!("compiling operators (one-time per process) ...");
+    let tc = solver.precompile(prob.n())?;
+    println!("compiled in {tc:.1}s; solving ...");
+    let res = solver.solve(&prob)?;
+
+    // 4. Report the paper's Table-7 metrics.
+    let report = RunReport::build(&solver, &prob, &res)?;
+    let mut t = Table::new(&RunReport::headers());
+    t.row(&report.row());
+    t.print();
+    println!(
+        "\nregistered in {:.2}s ({} Gauss-Newton iters, {} Hessian matvecs)",
+        res.time_s, res.iters, res.matvecs
+    );
+    Ok(())
+}

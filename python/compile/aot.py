@@ -1,0 +1,205 @@
+"""AOT compile path: lower every operator to HLO text artifacts.
+
+Python runs ONCE, at build time (``make artifacts``); the Rust coordinator
+loads the HLO text with ``HloModuleProto::from_text_file``, compiles it on
+the PJRT CPU client and executes it on the request path. Python is never on
+the request path.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming: ``<op>__<variant>__n<N>.hlo.txt`` plus a ``manifest.json``
+describing inputs/outputs of every artifact (the Rust side is manifest
+driven; no shapes are hard-coded over there).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --sizes 16,32,64
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax-lowered computation to XLA HLO text.
+
+    CRITICAL: the default printer elides constants larger than a few
+    elements as ``constant({...})``; the XLA text *parser* then silently
+    materializes zeros. Every spectral operator bakes wavenumber grids in
+    as constants, so we must print with ``print_large_constants``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The consuming parser (xla_extension 0.5.1) predates newer metadata
+    # attributes (source_end_line etc.); strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+@dataclasses.dataclass
+class OpDef:
+    """One artifact: a callable plus its example input specs."""
+
+    name: str
+    fn: object
+    inputs: list  # [(name, ShapeDtypeStruct)]
+
+
+def op_defs(p: model.Problem, kernel_level: bool) -> list:
+    """Operator definitions for one (variant, n) pair."""
+    n, nt = p.n, p.nt
+    m = n * n * n
+    v3 = spec(3, n, n, n)
+    s3 = spec(n, n, n)
+    q3 = spec(3, m)
+    traj = spec(nt + 1, n, n, n)
+    bg = spec(2)
+
+    ops = [
+        OpDef("objective", model.build_objective(p), [("v", v3), ("m0", s3), ("m1", s3), ("bg", bg)]),
+        OpDef(
+            "newton_setup",
+            model.build_newton_setup(p),
+            [("v", v3), ("m0", s3), ("m1", s3), ("bg", bg)],
+        ),
+        OpDef(
+            "hess_matvec",
+            model.build_hess_matvec(p),
+            [("vt", v3), ("m_traj", traj), ("yb", q3), ("yf", q3), ("divv", s3), ("bg", bg)],
+        ),
+        OpDef("transport", model.build_transport(p), [("v", v3), ("f", s3)]),
+    ]
+    if kernel_level:
+        kops = model.build_kernel_ops(p)
+        sigs = {
+            "grad_fft": [("f", s3)],
+            "grad_fd8": [("f", s3)],
+            "grad_fd8_jnp": [("f", s3)],
+            "div_fft": [("w", v3)],
+            "div_fd8": [("w", v3)],
+            "interp_lin": [("f", s3), ("q", q3)],
+            "interp_linbf16": [("f", s3), ("q", q3)],
+            "interp_lag": [("f", s3), ("q", q3)],
+            "interp_spl": [("f", s3), ("q", q3)],
+            "interp_lag_jnp": [("f", s3), ("q", q3)],
+            "prefilter": [("f", s3)],
+            "reg_apply": [("w", v3)],
+            "precond_fixed": [("w", v3)],
+            "leray": [("w", v3)],
+            "gauss_smooth": [("f", s3)],
+            "sl_step": [("v", v3), ("m", s3)],
+        }
+        for name, fn in kops.items():
+            ops.append(OpDef(name, fn, sigs[name]))
+        # Shared (variant-independent) solver ops live with the kernel set.
+        ops.append(OpDef("precond", model.build_precond(p), [("r", v3), ("bg", bg)]))
+        ops.append(OpDef("defmap", model.build_defmap(p), [("v", v3)]))
+        ops.append(OpDef("detf", model.build_detf(p), [("v", v3)]))
+        # Grid-continuation transfer operators (CLAIRE multi-resolution):
+        # upsample from this level (emitted below the top size), restrict
+        # to the previous level (emitted above the bottom size).
+        if n <= 32:
+            ops.append(OpDef("upsample2x", model.build_upsample2x(p), [("v", v3)]))
+        if n >= 32:
+            ops.append(OpDef("restrict2x", model.build_restrict2x(p), [("f", s3)]))
+    return ops
+
+
+def lower_one(opdef: OpDef, out_path: pathlib.Path) -> dict:
+    """Lower one op, write HLO text, return its manifest entry."""
+    t0 = time.time()
+    specs = [s for _, s in opdef.inputs]
+    lowered = jax.jit(opdef.fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_path.write_text(text)
+    out_shapes = [
+        list(map(int, getattr(s, "shape", ()))) for s in jax.tree.leaves(lowered.out_info)
+    ]
+    dt = time.time() - t0
+    print(f"  {out_path.name}: {len(text) / 1e6:.2f} MB in {dt:.1f}s")
+    return {
+        "file": out_path.name,
+        "inputs": [
+            {"name": nm, "shape": list(map(int, s.shape)), "dtype": F32}
+            for nm, s in opdef.inputs
+        ],
+        "outputs": [{"shape": sh, "dtype": F32} for sh in out_shapes],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="16,32,64")
+    ap.add_argument("--variants", default=",".join(model.VARIANTS))
+    ap.add_argument("--nt", type=int, default=model.DEFAULT_NT)
+    ap.add_argument("--ops", default="", help="only lower ops whose name is listed")
+    ap.add_argument("--force", action="store_true", help="re-lower even if file exists")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    variants = [v for v in args.variants.split(",") if v]
+    only = set(args.ops.split(",")) if args.ops else None
+
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"nt": args.nt, "artifacts": {}}
+    if manifest_path.exists():
+        try:
+            manifest = json.loads(manifest_path.read_text())
+            manifest.setdefault("artifacts", {})
+        except json.JSONDecodeError:
+            pass
+    manifest["nt"] = args.nt
+
+    for n in sizes:
+        for variant in variants:
+            p = model.Problem(n=n, nt=args.nt, variant=variant)
+            # Kernel-level + shared ops are variant-independent; emit them
+            # once per size, attached to the default optimized variant.
+            kernel_level = variant == "opt-fd8-cubic"
+            print(f"[aot] n={n} variant={variant}")
+            for opdef in op_defs(p, kernel_level):
+                if only and opdef.name not in only:
+                    continue
+                key = f"{opdef.name}__{variant}__n{n}"
+                fname = out_dir / f"{key}.hlo.txt"
+                if fname.exists() and not args.force and key in manifest["artifacts"]:
+                    continue
+                entry = lower_one(opdef, fname)
+                entry.update({"op": opdef.name, "variant": variant, "n": n, "nt": args.nt})
+                manifest["artifacts"][key] = entry
+                manifest_path.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+
+    print(f"[aot] manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Pallas FD8 kernels: 8th-order first derivatives (gradient / divergence).
+
+Paper section 2.3.2: the V100 kernel stages a 2-D tile plus halo points in
+shared memory, evaluates the 9-point axis-aligned stencil, and writes the
+tile back. The TPU-style restatement here: the grid iterates over slabs of
+the (periodically pre-padded) volume; each grid step loads ``slab + halo``
+into the kernel's fast-memory window (VMEM analog), evaluates all partials as
+vectorized shifted-slice FMAs, and writes the interior slab.
+
+Periodic boundaries are handled by wrap-padding with ``HALO = 4`` cells
+outside the kernel (the analog of the CUDA kernel's out-of-bound halo loads
+from global memory, which the paper measures at ~2% bandwidth overhead).
+
+All kernels run with ``interpret=True``: on this image's CPU-only PJRT stack
+a real TPU lowering would emit Mosaic custom-calls that cannot execute; the
+interpret lowering emits plain HLO with identical arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+HALO = 4  # FD8 stencil half-width
+
+
+# Fast-memory budget for one kernel block (bytes). Real TPU VMEM is ~16 MiB;
+# we keep the same discipline on the CPU-interpret path so the BlockSpec
+# schedule documented in DESIGN.md is the one we actually measure.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _slab_size(n: int) -> int:
+    """Slab height per grid step.
+
+    Perf pass (EXPERIMENTS.md section Perf, L1): a single whole-volume block
+    is fastest whenever block + halo fits the fast-memory budget — the grid
+    loop's per-step window loads dominate otherwise (measured 14.5 ms ->
+    8.3 ms for grad_fd8 at 64^3). Fall back to 8-slab tiling beyond the
+    budget (the 256^3-class sizes the paper runs on the V100).
+    """
+    full_bytes = (n + 2 * HALO) ** 3 * 4
+    if full_bytes <= VMEM_BUDGET:
+        return n
+    return min(8, n)
+
+
+def pad_periodic(f: jnp.ndarray, w: int = HALO) -> jnp.ndarray:
+    """Wrap-pad all three axes by ``w`` cells."""
+    return jnp.pad(f, ((w, w), (w, w), (w, w)), mode="wrap")
+
+
+def _fd8_axis(win: jnp.ndarray, axis: int, lo: tuple, hi: tuple, h: float) -> jnp.ndarray:
+    """Apply the FD8 stencil along ``axis`` of a padded window.
+
+    ``lo``/``hi`` give the interior slice bounds per axis (halo trimmed on
+    the non-derivative axes).
+    """
+    acc = None
+    for k, c in enumerate(ref.FD8_COEFFS, start=1):
+
+        def cut(off: int):
+            idx = []
+            for a in range(3):
+                start = lo[a] + (off if a == axis else 0)
+                stop = hi[a] + (off if a == axis else 0)
+                idx.append(slice(start, stop))
+            return win[tuple(idx)]
+
+        term = np.float32(c) * (cut(+k) - cut(-k))
+        acc = term if acc is None else acc + term
+    return acc / np.float32(h)
+
+
+def _grad_kernel(slab: int, n: int, h: float, fp_ref, o1_ref, o2_ref, o3_ref):
+    i = pl.program_id(0)
+    win = pl.load(
+        fp_ref,
+        (pl.dslice(i * slab, slab + 2 * HALO), slice(None), slice(None)),
+    )
+    lo = (HALO, HALO, HALO)
+    hi = (HALO + slab, HALO + n, HALO + n)
+    o1_ref[...] = _fd8_axis(win, 0, lo, hi, h)
+    o2_ref[...] = _fd8_axis(win, 1, lo, hi, h)
+    o3_ref[...] = _fd8_axis(win, 2, lo, hi, h)
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def grad(f: jnp.ndarray, h: float) -> jnp.ndarray:
+    """FD8 gradient of a scalar field -> ``[3, N, N, N]`` (Pallas)."""
+    n = f.shape[0]
+    slab = _slab_size(n)
+    fp = pad_periodic(f)
+    out_shape = jax.ShapeDtypeStruct((n, n, n), f.dtype)
+    o1, o2, o3 = pl.pallas_call(
+        functools.partial(_grad_kernel, slab, n, h),
+        grid=(n // slab,),
+        in_specs=[pl.BlockSpec(fp.shape, lambda i: (0, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((slab, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, n, n), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=True,
+    )(fp)
+    return jnp.stack([o1, o2, o3])
+
+
+def _div_kernel(slab: int, n: int, h: float, v1_ref, v2_ref, v3_ref, o_ref):
+    i = pl.program_id(0)
+    idx = (pl.dslice(i * slab, slab + 2 * HALO), slice(None), slice(None))
+    lo = (HALO, HALO, HALO)
+    hi = (HALO + slab, HALO + n, HALO + n)
+    w1 = pl.load(v1_ref, idx)
+    w2 = pl.load(v2_ref, idx)
+    w3 = pl.load(v3_ref, idx)
+    o_ref[...] = (
+        _fd8_axis(w1, 0, lo, hi, h)
+        + _fd8_axis(w2, 1, lo, hi, h)
+        + _fd8_axis(w3, 2, lo, hi, h)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def div(v: jnp.ndarray, h: float) -> jnp.ndarray:
+    """FD8 divergence of a vector field ``v[3, N, N, N]`` (Pallas)."""
+    n = v.shape[-1]
+    slab = _slab_size(n)
+    vp = [pad_periodic(v[a]) for a in range(3)]
+    full = pl.BlockSpec(vp[0].shape, lambda i: (0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_div_kernel, slab, n, h),
+        grid=(n // slab,),
+        in_specs=[full, full, full],
+        out_specs=pl.BlockSpec((slab, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n, n), v.dtype),
+        interpret=True,
+    )(*vp)

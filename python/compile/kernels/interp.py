@@ -1,0 +1,203 @@
+"""Pallas scattered-data interpolation kernels (paper section 2.3.1).
+
+The paper's kernels are built around the V100 texture unit; the table below
+gives the mapping used here (see DESIGN.md section "Hardware adaptation").
+
+    paper kernel   idea                               this module
+    ------------   --------------------------------   -----------------------
+    GPU-TXTLIN     HW trilinear, 9-bit weights        ``linear_bf16`` (bf16
+                                                      weights/loads, f32 acc)
+    GPU-LAG        cubic Lagrange, table-lookup       ``cubic_lagrange``
+    GPU-TXTSPL     prefiltered cubic B-spline as 8    ``cubic_bspline`` +
+                   trilinear texture fetches          ``prefilter`` stencil
+    (full f32)     reference trilinear                ``linear``
+
+Structure: the kernel grid tiles the *target points* (the scattered reads of
+the semi-Lagrangian characteristic ends); each grid step holds one tile of
+query coordinates plus the full coefficient volume in its fast-memory window
+and evaluates the tensor-product basis fully vectorized over the tile. The
+gathers are CFL-bounded in the registration solver (|v| dt small), which is
+what makes the block+halo VMEM schedule viable on real hardware; in interpret
+mode the gather is an advanced-indexed load from the flattened volume.
+
+All queries are in grid units with periodic wraparound; ``q`` is ``[3, M]``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Query points per grid step. Perf pass (EXPERIMENTS.md section Perf, L1):
+# the linear kernels are fastest with a single whole-set tile (4.8 ms vs
+# 14.7 ms at 64^3) — their working set (8 gathers) stays cache-resident;
+# the cubic kernels' 64-gather working set thrashes beyond ~64k points
+# (50 ms single-tile vs 42 ms at 65536), so they stay tiled.
+LINEAR_TILE_MAX = 1 << 22
+CUBIC_TILE = 65536
+
+
+def _tile_size(m: int, cubic: bool) -> int:
+    t = min(CUBIC_TILE, m) if cubic else min(LINEAR_TILE_MAX, m)
+    # The grid requires an exact division; shrink to the largest divisor.
+    while m % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _flat_index(n: int, ix, iy, iz):
+    return (jnp.mod(ix, n) * n + jnp.mod(iy, n)) * n + jnp.mod(iz, n)
+
+
+def _linear_kernel(n, reduced, f_ref, q_ref, o_ref):
+    q = q_ref[...]
+    i0 = jnp.floor(q).astype(jnp.int32)
+    frac = q - i0
+    t = frac.astype(jnp.bfloat16) if reduced else frac
+    one = t.dtype.type(1.0)
+    acc = jnp.zeros(q.shape[1], dtype=jnp.float32)
+    for dx in range(2):
+        wx = t[0] if dx else one - t[0]
+        for dy in range(2):
+            wy = t[1] if dy else one - t[1]
+            for dz in range(2):
+                wz = t[2] if dz else one - t[2]
+                idx = _flat_index(n, i0[0] + dx, i0[1] + dy, i0[2] + dz)
+                c = f_ref[idx]
+                if reduced:
+                    c = c.astype(jnp.bfloat16).astype(jnp.float32)
+                    w = (wx * wy * wz).astype(jnp.float32)
+                else:
+                    w = wx * wy * wz
+                acc = acc + w * c
+    o_ref[...] = acc.astype(jnp.float32)
+
+
+def _cubic_kernel(n, weight_fn, f_ref, q_ref, o_ref):
+    q = q_ref[...]
+    i0 = jnp.floor(q).astype(jnp.int32)
+    t = q - i0
+    wx = weight_fn(t[0])
+    wy = weight_fn(t[1])
+    wz = weight_fn(t[2])
+    acc = jnp.zeros(q.shape[1], dtype=jnp.float32)
+    for dx in range(4):
+        for dy in range(4):
+            part = jnp.zeros(q.shape[1], dtype=jnp.float32)
+            for dz in range(4):
+                idx = _flat_index(n, i0[0] + dx - 1, i0[1] + dy - 1, i0[2] + dz - 1)
+                part = part + wz[dz] * f_ref[idx]
+            acc = acc + wx[dx] * wy[dy] * part
+    o_ref[...] = acc
+
+
+def _call(kernel, f: jnp.ndarray, q: jnp.ndarray, cubic: bool = False) -> jnp.ndarray:
+    n = f.shape[0]
+    m = q.shape[1]
+    tile = _tile_size(m, cubic)
+    assert m % tile == 0, f"query count {m} not divisible by tile {tile}"
+    return pl.pallas_call(
+        functools.partial(kernel, n),
+        grid=(m // tile,),
+        in_specs=[
+            pl.BlockSpec((n * n * n,), lambda i: (0,)),
+            pl.BlockSpec((3, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(f.reshape(-1), q)
+
+
+@jax.jit
+def linear(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Full-precision trilinear interpolation (Pallas)."""
+    return _call(lambda n, *refs: _linear_kernel(n, False, *refs), f, q)
+
+
+@jax.jit
+def linear_bf16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Reduced-precision trilinear (GPU-TXTLIN analog; Pallas)."""
+    return _call(lambda n, *refs: _linear_kernel(n, True, *refs), f, q)
+
+
+@jax.jit
+def cubic_lagrange(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Cubic Lagrange interpolation (GPU-LAG analog; Pallas)."""
+    return _call(
+        lambda n, *refs: _cubic_kernel(n, ref.lagrange_weights, *refs), f, q, cubic=True
+    )
+
+
+@jax.jit
+def cubic_bspline(c: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Cubic B-spline interpolation over prefiltered coefficients ``c``
+    (GPU-TXTSPL analog; Pallas). Apply :func:`prefilter` to grid values
+    first."""
+    return _call(
+        lambda n, *refs: _cubic_kernel(n, ref.bspline_weights, *refs), c, q, cubic=True
+    )
+
+
+# ---------------------------------------------------------------------------
+# B-spline prefilter: separable 15-point stencil (paper section 2.3.1,
+# GPU-TXTSPL bullet: "a 15-point axis aligned stencil operation ...
+# implemented using the FD scheme used in the CUDA SDK example")
+# ---------------------------------------------------------------------------
+
+PF_HALF = 7  # taps per side; 15-point stencil
+
+
+def _prefilter_kernel(slab: int, n: int, axis: int, taps: np.ndarray, fp_ref, o_ref):
+    i = pl.program_id(0)
+    pad = PF_HALF if axis == 0 else 0
+    win = pl.load(
+        fp_ref,
+        (pl.dslice(i * slab, slab + 2 * pad), slice(None), slice(None)),
+    )
+    lo = [PF_HALF if a == axis else 0 for a in range(3)]
+    if axis == 0:
+        lo[0] = PF_HALF
+    acc = None
+    for j, w in enumerate(taps):
+        off = j - PF_HALF
+        idx = []
+        for a in range(3):
+            start = lo[a] + (off if a == axis else 0)
+            size = slab if a == 0 else n
+            idx.append(slice(start, start + size))
+        term = np.float32(w) * win[tuple(idx)]
+        acc = term if acc is None else acc + term
+    o_ref[...] = acc
+
+
+def _prefilter_axis(f: jnp.ndarray, axis: int) -> jnp.ndarray:
+    n = f.shape[0]
+    # Same whole-volume-block policy as the FD8 stencils (perf pass).
+    slab = n if (n + 2 * PF_HALF) ** 3 * 4 <= 8 * 1024 * 1024 else min(8, n)
+    taps = ref.prefilter_taps(PF_HALF)
+    pad = [(0, 0)] * 3
+    pad[axis] = (PF_HALF, PF_HALF)
+    fp = jnp.pad(f, pad, mode="wrap")
+    return pl.pallas_call(
+        functools.partial(_prefilter_kernel, slab, n, axis, taps),
+        grid=(n // slab,),
+        in_specs=[pl.BlockSpec(fp.shape, lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((slab, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n, n), f.dtype),
+        interpret=True,
+    )(fp)
+
+
+@jax.jit
+def prefilter(f: jnp.ndarray) -> jnp.ndarray:
+    """Separable 3-D cubic-B-spline prefilter (Pallas, 15-pt per axis)."""
+    for axis in range(3):
+        f = _prefilter_axis(f, axis)
+    return f

@@ -1,0 +1,129 @@
+"""Spectral (FFT) operators retained from CLAIRE.
+
+The paper replaces *first-order* derivatives with FD8 but deliberately keeps
+spectral differentiation for the high-order regularization operator ``A``,
+its inverse (the Newton-Krylov preconditioner), and the Leray projection,
+because these must be *inverted* and are diagonal in the spectral domain
+(paper section 2.3: "Notice that we keep the spectral differentiation for
+high-order differential operators, since we need to evaluate their inverses
+in our solver").
+
+Operator definitions (default CLAIRE H1-div regularization):
+
+    reg(v)      = beta/2 <A v, v> + gamma/2 ||div v||^2,  A = -Laplacian
+    reg_grad(v) = beta * A v - gamma * grad(div v)
+    precond(r)  = (beta * A + gamma * grad div + eps I)^{-1} r   (Sherman-
+                  Morrison closed form per spectral mode)
+    leray(v)    = v - grad(Delta^{-1} div v)   (projection onto div-free)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def wavenumber_grids(n: int, zero_nyquist: bool = False):
+    """Integer wavenumber meshgrid ``(k1, k2, k3)`` for an n^3 grid.
+
+    ``zero_nyquist=True`` matches the first-derivative convention used by
+    ``ref.fft_grad``/``ref.fft_div`` (the Nyquist mode of an odd-order
+    derivative of a real field is not representable); operators that must
+    commute with the discrete divergence (the Leray projection) need it.
+    """
+    k = np.fft.fftfreq(n, d=1.0 / n).astype(np.float32)
+    if zero_nyquist and n % 2 == 0:
+        k = k.copy()
+        k[n // 2] = 0.0
+    k1 = k.reshape(n, 1, 1)
+    k2 = k.reshape(1, n, 1)
+    k3 = k.reshape(1, 1, n)
+    return k1, k2, k3
+
+
+def _ksq(n: int) -> np.ndarray:
+    k1, k2, k3 = wavenumber_grids(n)
+    return (k1 * k1 + k2 * k2 + k3 * k3).astype(np.float32)
+
+
+def reg_apply(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
+    """Gradient of the regularization: ``beta*(-Lap) v - gamma*grad(div v)``.
+
+    Applied mode-by-mode: ``(beta*|k|^2 I + gamma * k k^T) v_hat``.
+    """
+    n = v.shape[-1]
+    k1, k2, k3 = (jnp.asarray(k) for k in wavenumber_grids(n))
+    ksq = jnp.asarray(_ksq(n))
+    vh = [jnp.fft.fftn(v[a]) for a in range(3)]
+    kdotv = k1 * vh[0] + k2 * vh[1] + k3 * vh[2]
+    out = []
+    for a, ka in enumerate((k1, k2, k3)):
+        oh = beta * ksq * vh[a] + gamma * ka * kdotv
+        out.append(jnp.real(jnp.fft.ifftn(oh)).astype(v.dtype))
+    return jnp.stack(out)
+
+
+def reg_energy(v: jnp.ndarray, beta: float, gamma: float, h: float) -> jnp.ndarray:
+    """``beta/2 <Av, v> + gamma/2 ||div v||^2`` with h^3 quadrature weights."""
+    av = reg_apply(v, beta, gamma)
+    return 0.5 * jnp.sum(av * v) * np.float32(h**3)
+
+
+def precond_apply(r: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
+    """Inverse of ``beta*|k|^2 I + gamma*k k^T`` per mode (Sherman-Morrison).
+
+    For ``M = a I + g k k^T`` with ``a = beta|k|^2``:
+        ``M^{-1} = (1/a) (I - g k k^T / (a + g |k|^2))``.
+    The zero mode (a = 0) is mapped to the identity: the regularization has a
+    null space of constant fields, on which the Hessian is the data term.
+    """
+    n = r.shape[-1]
+    k1, k2, k3 = (jnp.asarray(k) for k in wavenumber_grids(n))
+    ksq = jnp.asarray(_ksq(n))
+    a = beta * ksq
+    safe_a = jnp.where(a > 0, a, 1.0)
+    rh = [jnp.fft.fftn(r[c]) for c in range(3)]
+    kdotr = k1 * rh[0] + k2 * rh[1] + k3 * rh[2]
+    coef = gamma / (safe_a * (safe_a + gamma * ksq))
+    out = []
+    for c, kc in enumerate((k1, k2, k3)):
+        oh = rh[c] / safe_a - coef * kc * kdotr
+        oh = jnp.where(a > 0, oh, rh[c])  # identity on the zero mode
+        out.append(jnp.real(jnp.fft.ifftn(oh)).astype(r.dtype))
+    return jnp.stack(out)
+
+
+def leray(v: jnp.ndarray) -> jnp.ndarray:
+    """Leray projection onto divergence-free fields (spectral).
+
+    Uses Nyquist-zeroed wavenumbers so the output is divergence-free under
+    the same discrete divergence as ``ref.fft_div`` (and FD8, which has no
+    Nyquist pathology).
+    """
+    n = v.shape[-1]
+    k1, k2, k3 = (jnp.asarray(k) for k in wavenumber_grids(n, zero_nyquist=True))
+    ksq = k1 * k1 + k2 * k2 + k3 * k3
+    safe = jnp.where(ksq > 0, ksq, 1.0)
+    vh = [jnp.fft.fftn(v[a]) for a in range(3)]
+    kdotv = (k1 * vh[0] + k2 * vh[1] + k3 * vh[2]) / safe
+    kdotv = jnp.where(ksq > 0, kdotv, 0.0)
+    out = []
+    for a, ka in enumerate((k1, k2, k3)):
+        out.append(jnp.real(jnp.fft.ifftn(vh[a] - ka * kdotv)).astype(v.dtype))
+    return jnp.stack(out)
+
+
+def gauss_smooth(f: jnp.ndarray, sigma_h: float) -> jnp.ndarray:
+    """Periodic Gaussian smoothing with std ``sigma_h`` grid cells (spectral).
+
+    CLAIRE smooths input images with a Gaussian of one grid cell before
+    registration; we reproduce that preprocessing here so it can be fused
+    into the AOT artifacts.
+    """
+    n = f.shape[-1]
+    ksq = jnp.asarray(_ksq(n))
+    # x is in grid units: exp(-sigma^2 |k|^2 / 2) with k in cycles scaled by
+    # 2*pi/N per grid unit.
+    scale = (2.0 * np.pi / n) * sigma_h
+    kern = jnp.exp(-0.5 * (scale**2) * ksq)
+    return jnp.real(jnp.fft.ifftn(jnp.fft.fftn(f) * kern)).astype(f.dtype)

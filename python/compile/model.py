@@ -1,0 +1,548 @@
+"""L2: CLAIRE's PDE operators as JAX compute graphs.
+
+This module builds every operator the Rust Gauss-Newton-Krylov coordinator
+executes at runtime (paper Algorithm 2.1). Each builder returns a pure
+function of arrays that ``aot.py`` lowers to a shape-specialized HLO artifact.
+
+Operator inventory (see DESIGN.md section 2):
+
+* ``objective(v, m0, m1)``       -> scalars [J, msumsq, reg]
+* ``newton_setup(v, m0, m1)``    -> g, m_traj, yb, yf, divv, scalars
+* ``hess_matvec(vt, m_traj, yb, yf, divv)`` -> H vt  (Gauss-Newton)
+* ``precond(r)``                 -> (beta A + gamma grad div)^{-1} r
+* ``transport(v, f)``            -> f advected over [0, 1]
+* ``defmap(v)``                  -> full characteristic map y (grid units)
+* ``detf(v)``                    -> det of deformation gradient
+* kernel-level ops (grad/div/interp/prefilter/sl_step/...) for benches
+
+The discretization follows CLAIRE (Mang & Biros, SISC 2017): semi-Lagrangian
+transport with an RK2 (explicit midpoint) characteristic trace and
+trapezoidal handling of source terms; Nt = 4 time steps; spectral
+regularization operators (see ``kernels/spectral.py``); FD8 or FFT first
+derivatives and one of four interpolation kernels selected per variant
+(paper Table 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fd8, interp, ref, spectral
+
+# ---------------------------------------------------------------------------
+# Variants (paper Table 6)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A combination of computational kernels (paper Table 6)."""
+
+    tag: str
+    deriv: str  # "fft" | "fd8"  (first-order derivatives)
+    interp: str  # "lin" | "linbf16" | "lag" | "spl"
+    impl: str  # "pallas" | "jnp"
+
+
+VARIANTS = {
+    # Baseline: direct translation of CPU CLAIRE (FFT derivatives, cubic
+    # Lagrange interpolation, plain-XLA kernels). Analog of cpu-fft-cubic.
+    "ref-fft-cubic": Variant("ref-fft-cubic", "fft", "lag", "jnp"),
+    # Optimized kernels, FFT derivatives retained. Analog of gpu-fft-cubic
+    # (which pairs FFT derivatives with the GPU-TXTSPL B-spline kernel).
+    "opt-fft-cubic": Variant("opt-fft-cubic", "fft", "spl", "pallas"),
+    # FD8 derivatives + prefiltered B-spline. Analog of gpu-fd8-cubic.
+    "opt-fd8-cubic": Variant("opt-fd8-cubic", "fd8", "spl", "pallas"),
+    # FD8 + reduced-precision trilinear. Analog of gpu-fd8-linear
+    # (GPU-TXTLIN's 9-bit texture weights -> bf16 weights here).
+    "opt-fd8-linear": Variant("opt-fd8-linear", "fd8", "linbf16", "pallas"),
+}
+
+DEFAULT_NT = 4  # paper: Nt = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Static description of one registration problem instance."""
+
+    n: int
+    nt: int = DEFAULT_NT
+    beta: float = 5e-4  # target regularization weight (paper section 4.1.2)
+    gamma: float = 1e-4  # divergence penalty (paper section 4.1.2)
+    variant: str = "opt-fd8-cubic"
+
+    @property
+    def h(self) -> float:
+        return 2.0 * np.pi / self.n
+
+    @property
+    def dt(self) -> float:
+        return 1.0 / self.nt
+
+    @property
+    def var(self) -> Variant:
+        return VARIANTS[self.variant]
+
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch
+# ---------------------------------------------------------------------------
+
+
+def grad_op(p: Problem) -> Callable:
+    v = p.var
+    if v.deriv == "fft":
+        return lambda f: ref.fft_grad(f, p.h)
+    if v.impl == "pallas":
+        return lambda f: fd8.grad(f, p.h)
+    return lambda f: ref.fd8_grad(f, p.h)
+
+
+def div_op(p: Problem) -> Callable:
+    v = p.var
+    if v.deriv == "fft":
+        return lambda w: ref.fft_div(w, p.h)
+    if v.impl == "pallas":
+        return lambda w: fd8.div(w, p.h)
+    return lambda w: ref.fd8_div(w, p.h)
+
+
+def interp_op(p: Problem) -> Callable:
+    """Scalar interpolation ``(f[N,N,N], q[3,M]) -> [M]`` for the variant.
+
+    For the B-spline kernel the prefilter is applied per call (its cost is
+    part of the kernel, as in the paper's GPU-TXTSPL timings).
+    """
+    v = p.var
+    if v.impl == "pallas":
+        table = {
+            "lin": interp.linear,
+            "linbf16": interp.linear_bf16,
+            "lag": interp.cubic_lagrange,
+            "spl": lambda f, q: interp.cubic_bspline(interp.prefilter(f), q),
+        }
+    else:
+        table = {
+            "lin": ref.interp_linear,
+            "linbf16": ref.interp_linear_bf16,
+            "lag": ref.interp_cubic_lagrange,
+            "spl": lambda f, q: ref.interp_cubic_bspline(ref.prefilter(f), q),
+        }
+    return table[v.interp]
+
+
+# ---------------------------------------------------------------------------
+# Semi-Lagrangian machinery
+# ---------------------------------------------------------------------------
+
+
+def grid_coords(n: int) -> jnp.ndarray:
+    """Regular grid coordinates in grid units, ``[3, N^3]``."""
+    r = jnp.arange(n, dtype=jnp.float32)
+    g = jnp.meshgrid(r, r, r, indexing="ij")
+    return jnp.stack([c.reshape(-1) for c in g])
+
+
+def interp_vec(p: Problem, w: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Interpolate a vector field component-wise at query points."""
+    ip = interp_op(p)
+    return jnp.stack([ip(w[a], q) for a in range(3)])
+
+
+def characteristics(p: Problem, v: jnp.ndarray):
+    """RK2 characteristic end points for one time step, both directions.
+
+    Because v is *stationary* the characteristics are identical for every
+    step of every transport solve; CLAIRE computes them once per velocity
+    iterate and so do we (they are part of the ``newton_setup`` cache).
+
+    Returns ``(yb, yf)`` as ``[3, N^3]`` grid-unit coordinates:
+    ``yb = x - dt*v(x - dt/2 v(x))`` (backward trace; state equation) and
+    ``yf = x + dt*v(x + dt/2 v(x))`` (forward trace; adjoint equation).
+    """
+    n = p.n
+    x = grid_coords(n)
+    vg = v.reshape(3, -1) / np.float32(p.h)  # displacement field, grid units
+    half = np.float32(0.5 * p.dt)
+    full = np.float32(p.dt)
+    vb = interp_vec(p, v, x - half * vg) / np.float32(p.h)
+    yb = x - full * vb
+    vf = interp_vec(p, v, x + half * vg) / np.float32(p.h)
+    yf = x + full * vf
+    return yb, yf
+
+
+def state_step(p: Problem, m: jnp.ndarray, yb: jnp.ndarray) -> jnp.ndarray:
+    """One semi-Lagrangian step of the state equation: m <- m o yb."""
+    ip = interp_op(p)
+    return ip(m, yb).reshape(m.shape)
+
+
+def state_solve(p: Problem, v_unused, m0: jnp.ndarray, yb: jnp.ndarray):
+    """Forward transport; returns the trajectory ``[Nt+1, N, N, N]``."""
+    ms = [m0]
+    for _ in range(p.nt):
+        ms.append(state_step(p, ms[-1], yb))
+    return jnp.stack(ms)
+
+
+def adjoint_step(p: Problem, lam, yf, divv, divv_flat):
+    """One semi-Lagrangian step of the adjoint equation in tau = 1 - t.
+
+    The adjoint transport ``lam_tau = v . grad(lam) + lam div v`` is solved
+    along forward characteristics with an explicit Heun (trapezoidal
+    predictor-corrector) source term:
+
+        a    = lam(yf),  b = (lam divv)(yf)
+        pred = a + dt b                       (Euler predictor)
+        lam' = a + dt/2 (b + pred divv(x))    (trapezoid corrector)
+
+    A semi-implicit variant (dividing by ``1 - dt/2 divv``) is second-order
+    too but has a pole at ``divv = 2/dt`` that destabilizes strongly
+    compressive iterates at high resolution; Heun has no pole.
+    """
+    ip = interp_op(p)
+    a = ip(lam, yf)
+    b = ip(lam * divv, yf)
+    dt = np.float32(p.dt)
+    half = np.float32(0.5 * p.dt)
+    pred = a + dt * b
+    out = a + half * (b + pred * divv_flat)
+    return out.reshape(lam.shape)
+
+
+def adjoint_solve(p: Problem, lam1: jnp.ndarray, yf, divv):
+    """Backward (adjoint) transport; trajectory indexed by tau = 1 - t."""
+    divv_flat = divv.reshape(-1)
+    ls = [lam1]
+    for _ in range(p.nt):
+        ls.append(adjoint_step(p, ls[-1], yf, divv, divv_flat))
+    return jnp.stack(ls)
+
+
+def time_quadrature(p: Problem) -> np.ndarray:
+    """Trapezoidal weights over the Nt+1 time nodes."""
+    w = np.full(p.nt + 1, p.dt, dtype=np.float32)
+    w[0] *= 0.5
+    w[-1] *= 0.5
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Reduced-space operators (the AOT artifacts)
+# ---------------------------------------------------------------------------
+
+
+def build_objective(p: Problem) -> Callable:
+    """J(v) evaluation for the line search. Returns [J, msumsq, reg].
+
+    ``bg`` is the runtime ``[beta, gamma]`` pair: the regularization weights
+    are *inputs*, not compile-time constants, so the coordinator can run the
+    paper's beta-continuation scheme against a single compiled artifact.
+    """
+
+    def objective(v, m0, m1, bg):
+        yb, _ = characteristics(p, v)
+        m = m0
+        for _ in range(p.nt):
+            m = state_step(p, m, yb)
+        h3 = np.float32(p.h**3)
+        msumsq = jnp.sum((m - m1) ** 2) * h3
+        reg = spectral.reg_energy(v, bg[0], bg[1], p.h)
+        return (jnp.stack([0.5 * msumsq + reg, msumsq, reg]),)
+
+    return objective
+
+
+def build_newton_setup(p: Problem) -> Callable:
+    """State + adjoint solve and reduced gradient; emits the per-Newton-
+    iteration caches reused by every Hessian matvec of the PCG solve."""
+
+    def newton_setup(v, m0, m1, bg):
+        yb, yf = characteristics(p, v)
+        divv = div_op(p)(v)
+        m_traj = state_solve(p, v, m0, yb)
+        lam1 = m1 - m_traj[-1]
+        l_traj = adjoint_solve(p, lam1, yf, divv)
+        g_op = grad_op(p)
+        w = time_quadrature(p)
+        body = None
+        for nidx in range(p.nt + 1):
+            gm = g_op(m_traj[nidx])
+            lam = l_traj[p.nt - nidx]  # lam at t_n is tau index Nt - n
+            term = np.float32(w[nidx]) * lam[None, ...] * gm
+            body = term if body is None else body + term
+        av = spectral.reg_apply(v, bg[0], bg[1])
+        g = av + body
+        h3 = np.float32(p.h**3)
+        msumsq = jnp.sum((m_traj[-1] - m1) ** 2) * h3
+        # <reg_apply(v), v>/2 equals the regularization energy (both the
+        # Laplacian and the div-penalty terms are quadratic forms of A).
+        reg = 0.5 * jnp.sum(av * v) * h3
+        scalars = jnp.stack([0.5 * msumsq + reg, msumsq, reg])
+        return g, m_traj, yb, yf, divv, scalars
+
+    return newton_setup
+
+
+def build_hess_matvec(p: Problem) -> Callable:
+    """Gauss-Newton Hessian matvec using the newton_setup caches.
+
+    H vt = beta A vt + gamma ... + int lamt grad(m) dt, with the incremental
+    state (forced transport) and incremental adjoint solves of Algorithm 2.1.
+    """
+
+    def hess_matvec(vt, m_traj, yb, yf, divv, bg):
+        ip = interp_op(p)
+        g_op = grad_op(p)
+        half = np.float32(0.5 * p.dt)
+        grads_m = [g_op(m_traj[nidx]) for nidx in range(p.nt + 1)]
+
+        # Incremental state: mt_t + v.grad(mt) = -vt.grad(m), mt(0) = 0,
+        # i.e. d(mt)/dt = -s along the backward characteristic with
+        # s = vt.grad(m); trapezoid:
+        #   mt'(x) = mt(yb) - dt/2 [ s^n(yb) + s^{n+1}(x) ].
+        def source(nidx):
+            return jnp.sum(vt * grads_m[nidx], axis=0)
+
+        mt = jnp.zeros_like(m_traj[0])
+        s_prev = source(0)
+        for nidx in range(p.nt):
+            s_next = source(nidx + 1)
+            adv = ip(mt, yb) - half * ip(s_prev, yb)
+            mt = adv.reshape(mt.shape) - half * s_next
+            s_prev = s_next
+
+        # Incremental adjoint: terminal condition -mt(1) (Gauss-Newton).
+        lt_traj = adjoint_solve(p, -mt, yf, divv)
+
+        # H vt = beta A vt + gamma ... + int lt grad(m) dt. With the
+        # terminal condition above the data term is J'J (positive
+        # semi-definite), mirroring how the gradient's data term pairs
+        # lambda(1) = -(m(1) - m1) with +int lambda grad(m).
+        w = time_quadrature(p)
+        body = None
+        for nidx in range(p.nt + 1):
+            lt = lt_traj[p.nt - nidx]
+            term = np.float32(w[nidx]) * lt[None, ...] * grads_m[nidx]
+            body = term if body is None else body + term
+        hv = spectral.reg_apply(vt, bg[0], bg[1]) + body
+        return (hv,)
+
+    return hess_matvec
+
+
+def build_precond(p: Problem) -> Callable:
+    """Spectral preconditioner ``(beta A + gamma grad div)^{-1}``."""
+
+    def precond(r, bg):
+        return (spectral.precond_apply(r, bg[0], bg[1]),)
+
+    return precond
+
+
+def build_transport(p: Problem) -> Callable:
+    """Advect an arbitrary scalar field over [0, 1] with velocity v."""
+
+    def transport(v, f):
+        yb, _ = characteristics(p, v)
+        m = f
+        for _ in range(p.nt):
+            m = state_step(p, m, yb)
+        return (m,)
+
+    return transport
+
+
+def build_defmap(p: Problem) -> Callable:
+    """Full backward characteristic map y with m(1) = m0(y(x)).
+
+    Composes the per-step map Nt times: y = Y o Y o ... o Y where
+    Y(x) = x + D(x) and D is the (periodic) one-step displacement.
+    Interpolation of D uses cubic Lagrange regardless of variant so that the
+    deformation-quality metrics (det F, DICE) are measured consistently
+    across variants.
+    """
+
+    def defmap(v):
+        n = p.n
+        x = grid_coords(n)
+        pq = dataclasses.replace(p, variant="ref-fft-cubic")  # lag/jnp interp
+        yb, _ = characteristics(p, v)
+        d = yb - x  # one-step displacement, grid units (periodic field)
+        dg = d.reshape(3, n, n, n)
+        y = yb
+        for _ in range(p.nt - 1):
+            y = y + interp_vec(pq, dg, y)
+        return (y.reshape(3, n, n, n),)
+
+    return defmap
+
+
+def build_detf(p: Problem) -> Callable:
+    """Determinant of the deformation gradient F = grad(y) per voxel."""
+
+    defmap = build_defmap(p)
+
+    def detf(v):
+        n = p.n
+        (y,) = defmap(v)
+        x = grid_coords(n).reshape(3, n, n, n)
+        d = (y - x) * np.float32(p.h)  # displacement in physical units
+        # J[a][b] = d(d_a)/d(x_b), FD8 (consistent metric across variants)
+        jac = [[ref.fd8_partial(d[a], b, p.h) for b in range(3)] for a in range(3)]
+        f00 = 1.0 + jac[0][0]
+        f11 = 1.0 + jac[1][1]
+        f22 = 1.0 + jac[2][2]
+        det = (
+            f00 * (f11 * f22 - jac[1][2] * jac[2][1])
+            - jac[0][1] * (jac[1][0] * f22 - jac[1][2] * jac[2][0])
+            + jac[0][2] * (jac[1][0] * jac[2][1] - f11 * jac[2][0])
+        )
+        return (det,)
+
+    return detf
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level ops (benches, instrumented breakdown solver, data generation)
+# ---------------------------------------------------------------------------
+
+
+def build_kernel_ops(p: Problem) -> dict:
+    """Standalone kernel executables for the paper's kernel tables."""
+    h = p.h
+
+    def sl_step(v, m):
+        yb, _ = characteristics(p, v)
+        return (state_step(p, m, yb),)
+
+    ops = {
+        "grad_fft": lambda f: (ref.fft_grad(f, h),),
+        "grad_fd8": lambda f: (fd8.grad(f, h),),
+        "grad_fd8_jnp": lambda f: (ref.fd8_grad(f, h),),
+        "div_fft": lambda w: (ref.fft_div(w, h),),
+        "div_fd8": lambda w: (fd8.div(w, h),),
+        "interp_lin": lambda f, q: (interp.linear(f, q),),
+        "interp_linbf16": lambda f, q: (interp.linear_bf16(f, q),),
+        "interp_lag": lambda f, q: (interp.cubic_lagrange(f, q),),
+        "interp_spl": lambda f, q: (interp.cubic_bspline(interp.prefilter(f), q),),
+        "interp_lag_jnp": lambda f, q: (ref.interp_cubic_lagrange(f, q),),
+        "prefilter": lambda f: (interp.prefilter(f),),
+        "reg_apply": lambda w: (spectral.reg_apply(w, p.beta, p.gamma),),
+        "precond_fixed": lambda w: (spectral.precond_apply(w, p.beta, p.gamma),),
+        "leray": lambda w: (spectral.leray(w),),
+        "gauss_smooth": lambda f: (spectral.gauss_smooth(f, 1.0),),
+        "sl_step": sl_step,
+    }
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Grid continuation (CLAIRE's multi-resolution scheme): spectral transfer
+# operators between levels. Upsampling zero-pads the spectrum; restriction
+# truncates it. Both are exact on band-limited fields.
+# ---------------------------------------------------------------------------
+
+
+def _spectral_pad(fh: jnp.ndarray, n: int, n2: int) -> jnp.ndarray:
+    """Zero-pad an n^3 complex spectrum into an n2^3 spectrum (n2 = 2n)."""
+    h = n // 2
+    out = jnp.zeros((n2, n2, n2), fh.dtype)
+    # Scatter the 8 corner blocks (positive/negative frequency octants).
+    for sx in (0, 1):
+        for sy in (0, 1):
+            for sz in (0, 1):
+                src_ix = slice(0, h) if sx == 0 else slice(n - h, n)
+                dst_ix = slice(0, h) if sx == 0 else slice(n2 - h, n2)
+                src_iy = slice(0, h) if sy == 0 else slice(n - h, n)
+                dst_iy = slice(0, h) if sy == 0 else slice(n2 - h, n2)
+                src_iz = slice(0, h) if sz == 0 else slice(n - h, n)
+                dst_iz = slice(0, h) if sz == 0 else slice(n2 - h, n2)
+                out = out.at[dst_ix, dst_iy, dst_iz].set(fh[src_ix, src_iy, src_iz])
+    return out
+
+
+def upsample2x_scalar(f: jnp.ndarray) -> jnp.ndarray:
+    n = f.shape[0]
+    n2 = 2 * n
+    fh = jnp.fft.fftn(f)
+    out = jnp.fft.ifftn(_spectral_pad(fh, n, n2)) * np.float32(8.0)
+    return jnp.real(out).astype(f.dtype)
+
+
+def build_upsample2x(p: Problem) -> Callable:
+    """Prolong a velocity field to the next grid level (spectral)."""
+
+    def upsample2x(v):
+        return (jnp.stack([upsample2x_scalar(v[a]) for a in range(3)]),)
+
+    return upsample2x
+
+
+def restrict2x_scalar(f: jnp.ndarray) -> jnp.ndarray:
+    n = f.shape[0]
+    h = n // 4
+    fh = jnp.fft.fftn(f)
+    n2 = n // 2
+    out = jnp.zeros((n2, n2, n2), fh.dtype)
+    for sx in (0, 1):
+        for sy in (0, 1):
+            for sz in (0, 1):
+                src_ix = slice(0, h) if sx == 0 else slice(n - h, n)
+                dst_ix = slice(0, h) if sx == 0 else slice(n2 - h, n2)
+                src_iy = slice(0, h) if sy == 0 else slice(n - h, n)
+                dst_iy = slice(0, h) if sy == 0 else slice(n2 - h, n2)
+                src_iz = slice(0, h) if sz == 0 else slice(n - h, n)
+                dst_iz = slice(0, h) if sz == 0 else slice(n2 - h, n2)
+                out = out.at[dst_ix, dst_iy, dst_iz].set(fh[src_ix, src_iy, src_iz])
+    return jnp.real(jnp.fft.ifftn(out) / np.float32(8.0)).astype(f.dtype)
+
+
+def build_restrict2x(p: Problem) -> Callable:
+    """Restrict a scalar image to the previous grid level (spectral)."""
+
+    def restrict2x(f):
+        return (restrict2x_scalar(f),)
+
+    return restrict2x
+
+
+# ---------------------------------------------------------------------------
+# Complexity accounting (paper Table 1)
+# ---------------------------------------------------------------------------
+
+
+def complexity(p: Problem) -> dict:
+    """Analytic kernel counts per operator evaluation (paper Table 1).
+
+    Counts are per call, d = 3 ambient dimensions. "first" are first-order
+    derivative applications (FFT or FD8 by variant), "fft_other" are
+    high-order/inverse spectral operators (always FFT), "ips" are scalar
+    interpolation kernel calls.
+    """
+    d, nt = 3, p.nt
+    char = 2 * d  # two RK2 stages x d components per characteristic trace
+    return {
+        "objective": {"first": 0, "fft_other": 2 * d, "ips": char + nt},
+        "newton_setup": {
+            # div v + (Nt+1) gradients of m for the reduced gradient
+            "first": 1 + d * (nt + 1),
+            # reg_apply in g + reg_energy (objective part)
+            "fft_other": 4 * d,
+            # both characteristic traces + Nt state + 2*Nt adjoint interps
+            "ips": 2 * char + nt + 2 * nt,
+        },
+        "hess_matvec": {
+            "first": d * (nt + 1),  # gradients of cached m trajectory
+            "fft_other": 2 * d,  # reg_apply(vt)
+            # inc. state: 2 interps per step; inc. adjoint: 2 per step
+            "ips": 2 * nt + 2 * nt,
+        },
+    }

@@ -1,0 +1,24 @@
+"""Shared fixtures for the kernel/model test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC1A12E)
+
+
+def band_limited_field(rng, n, kmax=3, terms=4, dtype=np.float32):
+    """Smooth random periodic field (shared helper)."""
+    x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+    X = np.meshgrid(x, x, x, indexing="ij")
+    f = np.zeros((n, n, n))
+    for _ in range(terms):
+        k = rng.integers(1, kmax + 1, 3)
+        ph = rng.uniform(0, 2 * np.pi, 3)
+        a = rng.standard_normal()
+        f += a * np.sin(k[0] * X[0] + ph[0]) * np.sin(k[1] * X[1] + ph[1]) * np.sin(
+            k[2] * X[2] + ph[2]
+        )
+    return f.astype(dtype)

@@ -1,0 +1,283 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py),
+plus analytic properties of the oracles themselves.
+
+This is the core correctness signal of the compile path: every kernel that
+ends up inside an HLO artifact is exercised here, including hypothesis
+sweeps over shapes and query distributions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fd8, interp, ref
+
+from .conftest import band_limited_field
+
+
+def rand_field(seed, n):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal((n, n, n)).astype(np.float32))
+
+
+def rand_queries(seed, n, m):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(-n, 2 * n, (3, m)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# FD8 (Pallas) vs reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_fd8_grad_matches_ref(n):
+    h = 2 * np.pi / n
+    f = rand_field(n, n)
+    got = fd8.grad(f, h)
+    want = ref.fd8_grad(f, h)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_fd8_div_matches_ref(n):
+    h = 2 * np.pi / n
+    r = np.random.default_rng(n)
+    v = jnp.asarray(r.standard_normal((3, n, n, n)).astype(np.float32))
+    got = fd8.div(v, h)
+    want = ref.fd8_div(v, h)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_fd8_constant_is_zero():
+    n, h = 16, 2 * np.pi / 16
+    f = jnp.full((n, n, n), 3.25, jnp.float32)
+    np.testing.assert_allclose(fd8.grad(f, h), 0.0, atol=1e-5)
+
+
+def test_fd8_low_freq_trig_accuracy():
+    n = 32
+    h = 2 * np.pi / n
+    x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+    X = np.meshgrid(x, x, x, indexing="ij")
+    f = jnp.asarray(np.sin(2 * X[1]).astype(np.float32))
+    got = fd8.grad(f, h)
+    want = 2 * np.cos(2 * X[1])
+    np.testing.assert_allclose(got[1], want, atol=5e-5)
+    np.testing.assert_allclose(got[0], 0.0, atol=5e-5)
+    np.testing.assert_allclose(got[2], 0.0, atol=5e-5)
+
+
+def test_fd8_error_grows_with_frequency():
+    # Paper Fig 2: FD8 error increases toward Nyquist.
+    n = 32
+    h = 2 * np.pi / n
+    x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+    X = np.meshgrid(x, x, x, indexing="ij")
+
+    def err(w):
+        f = jnp.asarray(np.sin(w * X[2]).astype(np.float32))
+        d = fd8.grad(f, h)[2]
+        return float(jnp.max(jnp.abs(d - w * np.cos(w * X[2]))))
+
+    assert err(2) < err(6) < err(12)
+
+
+def test_fft_first_derivative_exact_below_nyquist():
+    n = 32
+    h = 2 * np.pi / n
+    x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+    X = np.meshgrid(x, x, x, indexing="ij")
+    for w in (2, 9, 14):
+        f = jnp.asarray(np.sin(w * X[2]).astype(np.float32))
+        d = ref.fft_grad(f, h)[2]
+        np.testing.assert_allclose(d, w * np.cos(w * X[2]), atol=5e-3)
+
+
+def test_fft_div_matches_sum_of_partials():
+    n = 16
+    h = 2 * np.pi / n
+    r = np.random.default_rng(5)
+    v = jnp.asarray(r.standard_normal((3, n, n, n)).astype(np.float32))
+    want = sum(ref.fft_partial(v[a], a, h) for a in range(3))
+    got = ref.fft_div(v, h)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Interpolation (Pallas) vs reference
+# ---------------------------------------------------------------------------
+
+PALLAS_VS_REF = [
+    (interp.linear, ref.interp_linear, 1e-5),
+    (interp.cubic_lagrange, ref.interp_cubic_lagrange, 1e-5),
+]
+
+
+@pytest.mark.parametrize("n", [8, 16])
+@pytest.mark.parametrize("pk,rk,tol", PALLAS_VS_REF)
+def test_interp_pallas_matches_ref(n, pk, rk, tol):
+    f = rand_field(n + 1, n)
+    q = rand_queries(n + 2, n, 2048)
+    np.testing.assert_allclose(pk(f, q), rk(f, q), atol=tol)
+
+
+def test_interp_bf16_close_to_f32():
+    # The reduced-precision texture analog: error bounded by bf16 epsilon.
+    n = 16
+    f = rand_field(3, n)
+    q = rand_queries(4, n, 2048)
+    a = interp.linear_bf16(f, q)
+    b = ref.interp_linear(f, q)
+    err = float(jnp.max(jnp.abs(a - b)))
+    assert 1e-7 < err < 0.05, err
+
+
+def test_bspline_pallas_matches_ref():
+    n = 16
+    f = rand_field(9, n)
+    q = rand_queries(10, n, 2048)
+    got = interp.cubic_bspline(interp.prefilter(f), q)
+    want = ref.interp_cubic_bspline(ref.prefilter(f), q)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_interp_at_grid_points_identity():
+    n = 8
+    f = rand_field(11, n)
+    g = jnp.arange(n, dtype=jnp.float32)
+    qg = jnp.stack(jnp.meshgrid(g, g, g, indexing="ij")).reshape(3, -1)
+    for fn in (interp.linear, interp.cubic_lagrange):
+        np.testing.assert_allclose(fn(f, qg), f.reshape(-1), atol=1e-5)
+    # B-spline with *exact* prefilter also interpolates at nodes.
+    c = ref.prefilter_exact(f)
+    np.testing.assert_allclose(ref.interp_cubic_bspline(c, qg), f.reshape(-1), atol=1e-4)
+
+
+def test_interp_periodic_wrap():
+    n = 8
+    f = rand_field(12, n)
+    q = rand_queries(13, n, 512)
+    shifted = q + jnp.float32(n)  # one full period
+    np.testing.assert_allclose(
+        interp.linear(f, q), interp.linear(f, shifted), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        interp.cubic_lagrange(f, q), interp.cubic_lagrange(f, shifted), atol=1e-4
+    )
+
+
+def test_cubic_interp_order_of_accuracy():
+    # Error of cubic interpolation on a smooth function drops ~h^4.
+    r = np.random.default_rng(14)
+
+    def max_err(n):
+        x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+        X = np.meshgrid(x, x, x, indexing="ij")
+        f = jnp.asarray(np.sin(2 * X[0]) * np.cos(X[1]) * np.sin(X[2]), jnp.float32)
+        m = 4096
+        q = jnp.asarray(r.uniform(0, n, (3, m)).astype(np.float32))
+        got = ref.interp_cubic_lagrange(f, q)
+        h = 2 * np.pi / n
+        xs = np.asarray(q) * h
+        want = np.sin(2 * xs[0]) * np.cos(xs[1]) * np.sin(xs[2])
+        return float(jnp.max(jnp.abs(got - want)))
+
+    e16, e32 = max_err(16), max_err(32)
+    assert e32 < e16 / 8, (e16, e32)  # ~16x expected; 8x with f32 headroom
+
+
+def test_bspline_more_accurate_than_lagrange_on_smooth():
+    # Paper Table 4: GPU-TXTSPL is ~2x more accurate than LAG at moderate
+    # resolution on band-limited data.
+    n = 16
+    r = np.random.default_rng(15)
+    x = np.linspace(0, 2 * np.pi, n, endpoint=False)
+    X = np.meshgrid(x, x, x, indexing="ij")
+    f64 = (np.sin(8 * X[0]) ** 2 + np.sin(2 * X[1]) ** 2 + np.sin(4 * X[2]) ** 2) / 3
+    f = jnp.asarray(f64.astype(np.float32))
+    m = 4096
+    q = jnp.asarray((r.uniform(-0.5, 0.5, (3, m)) + r.integers(0, n, (3, m))).astype(np.float32))
+    h = 2 * np.pi / n
+    xs = np.asarray(q) * h
+    want = (np.sin(8 * xs[0]) ** 2 + np.sin(2 * xs[1]) ** 2 + np.sin(4 * xs[2]) ** 2) / 3
+    e_lag = float(jnp.sqrt(jnp.mean((ref.interp_cubic_lagrange(f, q) - want) ** 2)))
+    e_spl = float(
+        jnp.sqrt(jnp.mean((ref.interp_cubic_bspline(ref.prefilter(f), q) - want) ** 2))
+    )
+    e_lin = float(jnp.sqrt(jnp.mean((ref.interp_linear(f, q) - want) ** 2)))
+    assert e_spl < e_lag < e_lin, (e_spl, e_lag, e_lin)
+
+
+# ---------------------------------------------------------------------------
+# Prefilter
+# ---------------------------------------------------------------------------
+
+
+def test_prefilter_taps_sum_and_symmetry():
+    taps = ref.prefilter_taps()
+    assert taps[7] == max(taps)  # center dominates
+    np.testing.assert_allclose(taps, taps[::-1], rtol=1e-6)  # symmetric
+    np.testing.assert_allclose(np.sum(taps), 1.0 / ((4 + 2) / 6), rtol=1e-6)
+
+
+def test_prefilter_close_to_exact():
+    n = 16
+    f = jnp.asarray(band_limited_field(np.random.default_rng(16), n))
+    approx = ref.prefilter(f)
+    exact = ref.prefilter_exact(f)
+    err = float(jnp.max(jnp.abs(approx - exact))) / float(jnp.max(jnp.abs(exact)))
+    assert err < 5e-3, err
+
+
+def test_prefilter_pallas_matches_ref():
+    n = 16
+    f = rand_field(17, n)
+    np.testing.assert_allclose(interp.prefilter(f), ref.prefilter(f), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.1, 10.0),
+)
+def test_hyp_interp_linear_within_data_range(n, seed, scale):
+    """Trilinear interpolation never overshoots the data range."""
+    r = np.random.default_rng(seed)
+    f = jnp.asarray((r.standard_normal((n, n, n)) * scale).astype(np.float32))
+    q = jnp.asarray(r.uniform(-2 * n, 2 * n, (3, 1024)).astype(np.float32))
+    out = ref.interp_linear(f, q)
+    assert float(jnp.min(out)) >= float(jnp.min(f)) - 1e-4 * scale
+    assert float(jnp.max(out)) <= float(jnp.max(f)) + 1e-4 * scale
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([8, 16]), seed=st.integers(0, 2**16), axis=st.integers(0, 2))
+def test_hyp_fd8_antisymmetry(n, seed, axis):
+    """FD8 anticommutes with axis reversal: d(flip f) = -flip(d f)."""
+    r = np.random.default_rng(seed)
+    f = jnp.asarray(r.standard_normal((n, n, n)).astype(np.float32))
+    h = 2 * np.pi / n
+    d = ref.fd8_partial(f, axis, h)
+    dr = ref.fd8_partial(jnp.flip(f, axis=axis), axis, h)
+    np.testing.assert_allclose(dr, -jnp.flip(d, axis=axis), atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_hyp_pallas_interp_agrees_on_random_queries(seed):
+    n = 8
+    r = np.random.default_rng(seed)
+    f = jnp.asarray(r.standard_normal((n, n, n)).astype(np.float32))
+    q = jnp.asarray(r.uniform(-n, 2 * n, (3, 512)).astype(np.float32))
+    np.testing.assert_allclose(interp.linear(f, q), ref.interp_linear(f, q), atol=1e-5)
+    np.testing.assert_allclose(
+        interp.cubic_lagrange(f, q), ref.interp_cubic_lagrange(f, q), atol=1e-5
+    )

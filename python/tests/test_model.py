@@ -1,0 +1,393 @@
+"""L2 model correctness: transport invariants, adjoint/gradient
+consistency, Gauss-Newton Hessian structure, preconditioner and spectral
+operator identities. These are the tests that make the registration solver
+trustworthy; the Rust integration tests then verify the same operators
+*through the artifacts*.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import spectral
+
+from .conftest import band_limited_field
+
+N = 16
+
+
+def _unit_velocity(r, scale):
+    """Band-limited velocity normalized to a max amplitude.
+
+    Unnormalized draws can stack to |v| ~ 1 with |div v| ~ 3, producing
+    non-diffeomorphic unit-time maps (det F < 0) — outside the regime any
+    of the consistency identities below are meant to hold in.
+    """
+    v = np.stack([band_limited_field(r, N) for _ in range(3)])
+    v *= scale / np.abs(v).max()
+    return jnp.asarray(v.astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def fields():
+    r = np.random.default_rng(0xA11CE)
+    m0 = jnp.asarray(band_limited_field(r, N) * 0.5 + 1.0)
+    m1 = jnp.asarray(band_limited_field(r, N) * 0.5 + 1.0)
+    v = _unit_velocity(r, 0.3)
+    vt = _unit_velocity(r, 0.3)
+    return m0, m1, v, vt
+
+
+def prob(variant="ref-fft-cubic", **kw):
+    return model.Problem(n=N, variant=variant, **kw)
+
+
+BG = jnp.asarray([1e-2, 1e-3], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Transport
+# ---------------------------------------------------------------------------
+
+
+def test_transport_zero_velocity_is_identity(fields):
+    m0, *_ = fields
+    p = prob()
+    (out,) = model.build_transport(p)(jnp.zeros((3, N, N, N), jnp.float32), m0)
+    np.testing.assert_allclose(out, m0, atol=1e-6)
+
+
+def test_transport_constant_field_invariant(fields):
+    *_, v, _ = fields
+    p = prob()
+    c = jnp.full((N, N, N), 2.5, jnp.float32)
+    (out,) = model.build_transport(p)(v, c)
+    np.testing.assert_allclose(out, c, atol=1e-4)
+
+
+def test_transport_forward_backward_roundtrip(fields):
+    # Paper Table 3's experiment: advect forward then backward, compare.
+    m0, _, v, _ = fields
+    p = prob()
+    tr = model.build_transport(p)
+    (fwd,) = tr(v, m0)
+    (back,) = tr(-v, fwd)
+    rel = float(jnp.linalg.norm(back - m0) / jnp.linalg.norm(m0))
+    assert rel < 0.15, rel
+
+
+@pytest.mark.parametrize("variant", list(model.VARIANTS))
+def test_transport_all_variants_close(fields, variant):
+    # All kernel variants must transport to within interpolation accuracy.
+    m0, _, v, _ = fields
+    p_ref = prob()
+    p_var = prob(variant=variant)
+    (a,) = model.build_transport(p_ref)(v, m0)
+    (b,) = model.build_transport(p_var)(v, m0)
+    rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a))
+    # Cubic variants within 7%; the bf16 trilinear texture analog trades
+    # accuracy for speed (paper Table 4: TXTLIN ~5x worse) — allow 10%.
+    tol = 0.10 if variant == 'opt-fd8-linear' else 0.07
+    assert rel < tol, (variant, rel)
+
+
+def test_translation_transport_shifts_image():
+    # Constant velocity translates: m(1, x) = m0(x - v) for div-free const v.
+    p = prob()
+    x = np.linspace(0, 2 * np.pi, N, endpoint=False)
+    X = np.meshgrid(x, x, x, indexing="ij")
+    m0 = jnp.asarray(np.sin(X[0]).astype(np.float32))
+    shift = 2 * np.pi / N * 2  # two grid cells
+    v = jnp.zeros((3, N, N, N), jnp.float32).at[0].set(shift)
+    (out,) = model.build_transport(p)(v, m0)
+    want = np.sin(X[0] - shift)
+    # Half-cell interp offsets per step: cubic error ~ h^4 * max|f_xxxx|.
+    np.testing.assert_allclose(out, want, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Objective / gradient / Hessian consistency
+# ---------------------------------------------------------------------------
+
+
+def test_objective_scalars_consistent(fields):
+    m0, m1, v, _ = fields
+    p = prob()
+    (s,) = model.build_objective(p)(v, m0, m1, BG)
+    j, msq, reg = (float(x) for x in s)
+    assert abs(j - (0.5 * msq + reg)) < 1e-5 * max(1.0, j)
+    assert msq >= 0 and reg >= 0
+
+
+def test_newton_setup_matches_objective(fields):
+    m0, m1, v, _ = fields
+    p = prob()
+    _, _, _, _, _, s1 = model.build_newton_setup(p)(v, m0, m1, BG)
+    (s2,) = model.build_objective(p)(v, m0, m1, BG)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)
+
+
+def test_gradient_directional_derivative_at_zero(fields):
+    # At v = 0 the transport is the identity and the reduced gradient has
+    # the closed form (m1 - m0) grad(m0): the FD check must be tight.
+    m0, m1, _, vt = fields
+    p = prob()
+    setup = model.build_newton_setup(p)
+    obj = model.build_objective(p)
+    v0 = jnp.zeros((3, N, N, N), jnp.float32)
+    g = setup(v0, m0, m1, BG)[0]
+    h3 = p.h**3
+    gd = float(jnp.sum(g * vt)) * h3
+    eps = 1e-2
+    jp = float(obj(v0 + eps * vt, m0, m1, BG)[0][0])
+    jm = float(obj(v0 - eps * vt, m0, m1, BG)[0][0])
+    fd = (jp - jm) / (2 * eps)
+    rel = abs(fd - gd) / abs(fd)
+    assert rel < 0.05, rel
+
+
+def test_gradient_descends_objective(fields):
+    # At finite deformation the continuous-adjoint gradient is *inexact*
+    # (CLAIRE's choice too: the discrete forward and the discretized
+    # adjoint are not exact transposes; the mismatch grows with |v| and
+    # div v). What Gauss-Newton needs is that -g is a descent direction
+    # and that the inexactness shrinks with the deformation.
+    m0, m1, v, _ = fields
+    p = prob()
+    setup = model.build_newton_setup(p)
+    obj = model.build_objective(p)
+    h3 = p.h**3
+    j0 = float(obj(v, m0, m1, BG)[0][0])
+    g = setup(v, m0, m1, BG)[0]
+    gnorm2 = float(jnp.sum(g * g)) * h3
+    step = 1e-2 / np.sqrt(gnorm2)
+    j1 = float(obj(v - np.float32(step) * g, m0, m1, BG)[0][0])
+    assert j1 < j0, (j1, j0)
+    # FD-vs-analytic relative error decreases as the deformation shrinks.
+    def rel_err(scale):
+        vs = v * scale
+        gs = setup(vs, m0, m1, BG)[0]
+        gd = float(jnp.sum(gs * gs)) * h3  # directional derivative along g
+        e = 1e-2
+        d = gs / np.float32(np.sqrt(float(jnp.sum(gs * gs)) * h3))
+        gd = float(jnp.sum(gs * d)) * h3
+        jp = float(obj(vs + e * d, m0, m1, BG)[0][0])
+        jm = float(obj(vs - e * d, m0, m1, BG)[0][0])
+        fd = (jp - jm) / (2 * e)
+        return abs(fd - gd) / abs(fd)
+    assert rel_err(0.1) < 0.2, rel_err(0.1)
+
+
+def test_gradient_zero_at_identical_images(fields):
+    m0, *_ = fields
+    p = prob()
+    v0 = jnp.zeros((3, N, N, N), jnp.float32)
+    g = model.build_newton_setup(p)(v0, m0, m0, BG)[0]
+    assert float(jnp.max(jnp.abs(g))) < 1e-5
+
+
+def test_gauss_newton_hessian_psd_and_data_term(fields):
+    m0, m1, v, vt = fields
+    p = prob()
+    bg0 = jnp.asarray([0.0, 0.0], jnp.float32)  # isolate the data term
+    setup = model.build_newton_setup(p)
+    hmv = model.build_hess_matvec(p)
+    _, m_traj, yb, yf, divv, _ = setup(v, m0, m1, bg0)
+    (hv,) = hmv(vt, m_traj, yb, yf, divv, bg0)
+    h3 = p.h**3
+    quad = float(jnp.sum(hv * vt)) * h3
+    assert quad > 0
+    # Data term equals || mt(1) ||^2 with mt(1) from FD of the state solve.
+    tr = model.build_transport(p)
+    eps = 1e-3
+    (mp,) = tr(v + eps * vt, m0)
+    (mm,) = tr(v - eps * vt, m0)
+    mt1 = (mp - mm) / (2 * eps)
+    want = float(jnp.sum(mt1 * mt1)) * h3
+    assert abs(quad - want) / want < 0.1, (quad, want)
+
+
+def test_hessian_approximately_symmetric(fields):
+    m0, m1, v, vt = fields
+    r = np.random.default_rng(77)
+    u = jnp.asarray(np.stack([band_limited_field(r, N) for _ in range(3)]) * 0.3)
+    p = prob()
+    setup = model.build_newton_setup(p)
+    hmv = model.build_hess_matvec(p)
+    _, m_traj, yb, yf, divv, _ = setup(v, m0, m1, BG)
+    (hv,) = hmv(vt, m_traj, yb, yf, divv, BG)
+    (hu,) = hmv(u, m_traj, yb, yf, divv, BG)
+    a = float(jnp.sum(hu * vt))
+    b = float(jnp.sum(hv * u))
+    assert abs(a - b) / max(abs(a), abs(b)) < 0.15
+
+
+def test_hessian_reduces_to_reg_on_constant_image():
+    # With a *constant* image the data term of the GN Hessian vanishes
+    # identically (grad m = 0), so H must equal the regularization alone.
+    # (Zero *mismatch* with a non-constant image does NOT suffice: J'J is
+    # the squared linearized-residual operator and is nonzero there.)
+    p = prob()
+    c = jnp.full((N, N, N), 1.0, jnp.float32)
+    v0 = jnp.zeros((3, N, N, N), jnp.float32)
+    r = np.random.default_rng(78)
+    vt = jnp.asarray(np.stack([band_limited_field(r, N) for _ in range(3)]))
+    setup = model.build_newton_setup(p)
+    hmv = model.build_hess_matvec(p)
+    _, m_traj, yb, yf, divv, _ = setup(v0, c, c, BG)
+    (hv,) = hmv(vt, m_traj, yb, yf, divv, BG)
+    want = spectral.reg_apply(vt, BG[0], BG[1])
+    np.testing.assert_allclose(hv, want, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Spectral operators
+# ---------------------------------------------------------------------------
+
+
+def test_precond_inverts_reg_apply(fields):
+    *_, v, _ = fields
+    beta, gamma = 1e-2, 1e-3
+    av = spectral.reg_apply(v, beta, gamma)
+    back = spectral.precond_apply(av, beta, gamma)
+    # Identity up to the zero mode (where reg_apply annihilates constants).
+    vm = v - jnp.mean(v, axis=(1, 2, 3), keepdims=True)
+    np.testing.assert_allclose(back, vm, atol=1e-4)
+
+
+def test_leray_projection_kills_divergence(fields):
+    *_, v, _ = fields
+    from compile.kernels import ref
+
+    w = spectral.leray(v)
+    div_w = ref.fft_div(w, 2 * np.pi / N)
+    assert float(jnp.max(jnp.abs(div_w))) < 1e-4
+    # Idempotent.
+    w2 = spectral.leray(w)
+    np.testing.assert_allclose(w, w2, atol=1e-5)
+
+
+def test_leray_kills_divergence_of_white_noise():
+    # White noise has Nyquist content: the projection must use the same
+    # wavenumber convention as the discrete divergence (regression test).
+    from compile.kernels import ref
+
+    r = np.random.default_rng(99)
+    v = jnp.asarray(r.standard_normal((3, N, N, N)).astype(np.float32))
+    w = spectral.leray(v)
+    div_w = ref.fft_div(w, 2 * np.pi / N)
+    div_v = ref.fft_div(v, 2 * np.pi / N)
+    assert float(jnp.linalg.norm(div_w)) < 1e-4 * float(jnp.linalg.norm(div_v))
+
+
+def test_reg_energy_is_quadratic_form(fields):
+    *_, v, _ = fields
+    beta, gamma, h = 1e-2, 1e-3, 2 * np.pi / N
+    e = float(spectral.reg_energy(v, beta, gamma, h))
+    av = spectral.reg_apply(v, beta, gamma)
+    e2 = 0.5 * float(jnp.sum(av * v)) * h**3
+    assert abs(e - e2) / abs(e) < 1e-5
+    # Scaling: E(2v) = 4 E(v).
+    e4 = float(spectral.reg_energy(2.0 * v, beta, gamma, h))
+    assert abs(e4 - 4 * e) / e4 < 1e-5
+
+
+def test_gauss_smooth_preserves_mean_and_smooths(fields):
+    m0, *_ = fields
+    sm = spectral.gauss_smooth(m0, 1.0)
+    assert abs(float(jnp.mean(sm) - jnp.mean(m0))) < 1e-6
+    # High-frequency content decreases.
+    from compile.kernels import ref
+
+    g_orig = ref.fft_grad(m0, 2 * np.pi / N)
+    g_sm = ref.fft_grad(sm, 2 * np.pi / N)
+    assert float(jnp.linalg.norm(g_sm)) < float(jnp.linalg.norm(g_orig))
+
+
+# ---------------------------------------------------------------------------
+# Deformation map / det F
+# ---------------------------------------------------------------------------
+
+
+def test_defmap_zero_velocity_is_identity_map():
+    p = prob()
+    v0 = jnp.zeros((3, N, N, N), jnp.float32)
+    (y,) = model.build_defmap(p)(v0)
+    x = model.grid_coords(N).reshape(3, N, N, N)
+    np.testing.assert_allclose(y, x, atol=1e-5)
+
+
+def test_detf_identity_is_one():
+    p = prob()
+    v0 = jnp.zeros((3, N, N, N), jnp.float32)
+    (d,) = model.build_detf(p)(v0)
+    np.testing.assert_allclose(d, 1.0, atol=1e-5)
+
+
+def test_detf_translation_is_one(fields):
+    p = prob()
+    v = jnp.full((3, N, N, N), 0.3, jnp.float32)
+    (d,) = model.build_detf(p)(v)
+    np.testing.assert_allclose(d, 1.0, atol=1e-3)
+
+
+def test_detf_positive_for_smooth_small_velocity(fields):
+    *_, v, _ = fields
+    p = prob()
+    (d,) = model.build_detf(p)(v)
+    assert float(jnp.min(d)) > 0.2, float(jnp.min(d))
+    assert abs(float(jnp.mean(d)) - 1.0) < 0.1
+
+
+def test_detf_flags_violent_velocity_as_nondiffeomorphic():
+    # An unnormalized strong field must be flagged by det F — the quality
+    # metric the paper relies on (Table 7).
+    r = np.random.default_rng(0xA11CE)
+    _ = band_limited_field(r, N), band_limited_field(r, N)
+    v = jnp.asarray(np.stack([band_limited_field(r, N) for _ in range(3)]) * 0.3)
+    p = prob()
+    (d,) = model.build_detf(p)(v)
+    assert float(jnp.min(d)) < 0.2
+
+
+def test_defmap_consistent_with_transport(fields):
+    # m(1) = m0 o y: composing transport should equal sampling m0 at y.
+    m0, _, v, _ = fields
+    p = prob()
+    (mfinal,) = model.build_transport(p)(v, m0)
+    (y,) = model.build_defmap(p)(v)
+    from compile.kernels import ref
+
+    direct = ref.interp_cubic_lagrange(m0, y.reshape(3, -1)).reshape(N, N, N)
+    rel = float(jnp.linalg.norm(mfinal - direct) / jnp.linalg.norm(mfinal))
+    # Nt repeated interpolation vs one composed sample: O(h^4) per step.
+    assert rel < 0.08, rel
+
+
+# ---------------------------------------------------------------------------
+# Variant structure
+# ---------------------------------------------------------------------------
+
+
+def test_variant_table_complete():
+    assert set(model.VARIANTS) == {
+        "ref-fft-cubic",
+        "opt-fft-cubic",
+        "opt-fd8-cubic",
+        "opt-fd8-linear",
+    }
+    v = model.VARIANTS["opt-fd8-linear"]
+    assert v.deriv == "fd8" and v.interp == "linbf16" and v.impl == "pallas"
+    assert model.VARIANTS["ref-fft-cubic"].impl == "jnp"
+
+
+def test_complexity_counts_scale_with_nt():
+    c4 = model.complexity(model.Problem(n=8, nt=4))
+    c8 = model.complexity(model.Problem(n=8, nt=8))
+    assert c8["hess_matvec"]["ips"] == 2 * c4["hess_matvec"]["ips"]
+    assert c8["newton_setup"]["first"] > c4["newton_setup"]["first"]
+    # Regularization FFT counts are Nt-independent.
+    assert c8["hess_matvec"]["fft_other"] == c4["hess_matvec"]["fft_other"]

@@ -1,0 +1,69 @@
+//! Paper Table 8: the proposed Gauss-Newton-Krylov solver vs first-order
+//! LDDMM baselines (PyCA ~ gradient descent, deformetrica ~ L-BFGS), run
+//! over the *same* objective/gradient artifacts so only the optimizer
+//! differs.
+//!
+//! The paper's argument reproduced here: first-order methods do cheap
+//! iterations but need far more of them to reach a given mismatch; the
+//! second-order solver reaches a ~10x better mismatch in less time.
+//!
+//! Run: `cargo bench --bench bench_baselines`.
+
+use claire::data::synth;
+use claire::registration::{run_baseline, BaselineKind, GnSolver, RegParams};
+use claire::runtime::OpRegistry;
+use claire::util::bench::{fmt_time, Table};
+
+fn main() -> claire::Result<()> {
+    let n: usize = std::env::var("CLAIRE_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let reg = OpRegistry::open_default()?;
+    let params = RegParams::default();
+
+    println!("== Table 8 analog: proposed GN-Krylov vs PyCA/deformetrica ==\n");
+    let mut t = Table::new(&["data", "method", "#iter", "mism", "time[s]"]);
+
+    for subject in ["na02", "na03", "na10"] {
+        let prob = synth::nirep_analog_pair(&reg, n, subject)?;
+
+        // PyCA analog: gradient descent at increasing iteration budgets
+        // (the paper varies 100..1000 GD steps).
+        for iters in [25, 50, 100] {
+            let r = run_baseline(&reg, &prob, &params, BaselineKind::GradientDescent, iters)?;
+            t.row(&[
+                subject.into(),
+                format!("gd (PyCA-like), cap {iters}"),
+                r.iters.to_string(),
+                format!("{:.1e}", r.mismatch_rel),
+                fmt_time(r.time_s),
+            ]);
+        }
+        // deformetrica analog: L-BFGS (paper default 50 iterations).
+        for iters in [25, 50] {
+            let r = run_baseline(&reg, &prob, &params, BaselineKind::Lbfgs, iters)?;
+            t.row(&[
+                subject.into(),
+                format!("lbfgs (deformetrica-like), cap {iters}"),
+                r.iters.to_string(),
+                format!("{:.1e}", r.mismatch_rel),
+                fmt_time(r.time_s),
+            ]);
+        }
+        // The proposed method.
+        let solver = GnSolver::new(&reg, params.clone());
+        solver.precompile(n)?;
+        let res = solver.solve(&prob)?;
+        t.row(&[
+            subject.into(),
+            "proposed (GN-Krylov)".into(),
+            res.iters.to_string(),
+            format!("{:.1e}", res.mismatch_rel),
+            fmt_time(res.time_s),
+        ]);
+    }
+    t.print();
+    println!("\n(expected shape per paper Table 8: the proposed method reaches a");
+    println!(" mismatch an order of magnitude lower than the first-order");
+    println!(" baselines at comparable or lower runtime; baseline mismatch");
+    println!(" improves only slowly with more iterations.)");
+    Ok(())
+}

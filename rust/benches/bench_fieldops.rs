@@ -1,0 +1,63 @@
+//! L3 hot-path vector algebra throughput (PCG axpy/dot/fused kernels).
+//!
+//! Not a paper table per se, but the coordinator-side roofline check the
+//! perf pass (EXPERIMENTS.md section Perf) tracks: the PCG vector ops must
+//! not be the bottleneck next to the PJRT operator calls.
+//!
+//! Run: `cargo bench --bench bench_fieldops`.
+
+use claire::field::ops;
+use claire::util::bench::{Bench, Table};
+use claire::util::rng::Rng;
+
+fn main() {
+    let bench = Bench { warmup: 3, samples: 11 };
+    let mut t = Table::new(&["op", "len", "time[us]", "GB/s"]);
+    for n in [16usize, 32, 64] {
+        let len = 3 * n * n * n;
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..len).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let q: Vec<f32> = (0..len).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let mut y: Vec<f32> = (0..len).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+
+        let s = bench.run("axpy", || ops::axpy(0.5, &x, &mut y));
+        t.row(&[
+            "axpy".into(),
+            format!("3x{n}^3"),
+            format!("{:.1}", s.median_s * 1e6),
+            format!("{:.1}", s.throughput_gbs(12 * len)),
+        ]);
+
+        let mut acc = 0.0;
+        let s = bench.run("dot", || acc += ops::dot(&x, &q));
+        std::hint::black_box(acc);
+        t.row(&[
+            "dot".into(),
+            format!("3x{n}^3"),
+            format!("{:.1}", s.median_s * 1e6),
+            format!("{:.1}", s.throughput_gbs(8 * len)),
+        ]);
+
+        let mut acc = 0.0;
+        let s = bench.run("axpy_dot_self", || acc += ops::axpy_dot_self(-0.5, &q, &mut y));
+        std::hint::black_box(acc);
+        t.row(&[
+            "axpy+dot fused".into(),
+            format!("3x{n}^3"),
+            format!("{:.1}", s.median_s * 1e6),
+            format!("{:.1}", s.throughput_gbs(12 * len)),
+        ]);
+
+        let s = bench.run("norm2", || acc += ops::norm2(&x));
+        std::hint::black_box(acc);
+        t.row(&[
+            "norm2".into(),
+            format!("3x{n}^3"),
+            format!("{:.1}", s.median_s * 1e6),
+            format!("{:.1}", s.throughput_gbs(4 * len)),
+        ]);
+    }
+    t.print();
+    println!("\n(fused axpy+dot saves one full pass over r vs separate calls;");
+    println!(" see EXPERIMENTS.md section Perf for the L3 iteration log.)");
+}

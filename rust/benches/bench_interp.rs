@@ -1,0 +1,91 @@
+//! Paper Table 3 + Table 4: interpolation kernels in the semi-Lagrangian
+//! transport (runtime, effective bandwidth, accuracy).
+//!
+//! Table 3 analog: apply an LDDMM transformation to the synthetic brain
+//! image forward in time, then backward, and compare to the original —
+//! runtime and relative error per interpolation kernel variant.
+//! Table 4 analog: per-call kernel runtime on scattered queries.
+//!
+//! Run: `cargo bench --bench bench_interp` (sizes via CLAIRE_BENCH_SIZES).
+
+use claire::data::synth;
+use claire::math::stats::rel_l2;
+use claire::runtime::OpRegistry;
+use claire::util::bench::{fmt_time, Bench, Table};
+use claire::util::rng::Rng;
+
+fn sizes() -> Vec<usize> {
+    std::env::var("CLAIRE_BENCH_SIZES")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![16, 32, 64])
+}
+
+fn main() -> claire::Result<()> {
+    let reg = OpRegistry::open_default()?;
+    let bench = Bench::default();
+
+    // ------------------------------------------------------------ Table 3
+    // Forward+backward advection of the brain atlas per kernel variant.
+    // The paper's variants map: CPU-LAG ~ ref-fft-cubic (jnp Lagrange),
+    // GPU-TXTSPL ~ opt-fd8-cubic (prefiltered B-spline), GPU-TXTLIN ~
+    // opt-fd8-linear (bf16 trilinear).
+    println!("== Table 3 analog: semi-Lagrangian transport per interp kernel ==");
+    let mut t3 = Table::new(&["N", "variant (paper analog)", "time[s]", "BW[GB/s]", "rel.err"]);
+    for n in sizes() {
+        let (atlas, _) = synth::brain_atlas(n);
+        let v = synth::smooth_random_velocity(n, 42, 2, 0.5);
+        for (variant, analog) in [
+            ("ref-fft-cubic", "CPU/GPU-LAG"),
+            ("opt-fft-cubic", "GPU-TXTSPL+FFT"),
+            ("opt-fd8-cubic", "GPU-TXTSPL"),
+            ("opt-fd8-linear", "GPU-TXTLIN"),
+        ] {
+            let op = reg.get("transport", variant, n)?;
+            let mut back = Vec::new();
+            let neg: Vec<f32> = v.data.iter().map(|x| -x).collect();
+            let s = bench.run(variant, || {
+                let fwd = op.call(&[&v.data, &atlas.data]).unwrap().remove(0);
+                back = op.call(&[&neg, &fwd]).unwrap().remove(0);
+            });
+            let err = rel_l2(&back, &atlas.data);
+            // Two transport solves = 14 interpolation kernel calls total
+            // (paper Table 3 protocol); MOPS model 20 B/point per call.
+            let bytes = 14 * 20 * n * n * n;
+            t3.row(&[
+                format!("{n}^3"),
+                format!("{variant} ({analog})"),
+                fmt_time(s.median_s),
+                format!("{:.1}", s.throughput_gbs(bytes)),
+                format!("{err:.1e}"),
+            ]);
+        }
+    }
+    t3.print();
+
+    // ------------------------------------------------------------ Table 4
+    println!("\n== Table 4 analog: per-call interpolation kernel time ==");
+    let mut t4 = Table::new(&["N", "kernel", "t_syn[s]", "BW[GB/s]"]);
+    for n in sizes() {
+        let m = n * n * n;
+        let mut rng = Rng::new(5);
+        let f: Vec<f32> = (0..m).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+        let q: Vec<f32> = (0..3 * m).map(|_| rng.uniform_f32(0.0, n as f32)).collect();
+        for op_name in ["interp_lin", "interp_linbf16", "interp_lag", "interp_spl", "interp_lag_jnp"]
+        {
+            let op = reg.get(op_name, "opt-fd8-cubic", n)?;
+            let s = bench.run(op_name, || {
+                op.call(&[&f, &q]).unwrap();
+            });
+            t4.row(&[
+                format!("{n}^3"),
+                op_name.into(),
+                fmt_time(s.median_s),
+                format!("{:.1}", s.throughput_gbs(20 * m)),
+            ]);
+        }
+    }
+    t4.print();
+    println!("\n(expected shape per paper: TXTLIN < TXTSPL < TXTLAG < LAG-jnp runtime;");
+    println!(" roundtrip error: TXTSPL < LAG < TXTLIN.)");
+    Ok(())
+}

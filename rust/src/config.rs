@@ -1,0 +1,129 @@
+//! Run configuration: `key = value` files plus CLI overrides.
+//!
+//! A deliberate TOML subset (serde/toml are unavailable offline): comments
+//! with `#`, flat `key = value` pairs, strings unquoted or quoted. This is
+//! the launcher's config surface — the analog of CLAIRE's PETSc options
+//! files.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::registration::problem::RegParams;
+
+/// Flat configuration map with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value, got '{raw}'", lineno + 1))
+            })?;
+            let v = v.trim().trim_matches('"').trim_matches('\'');
+            values.insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| Error::Config(format!("{key}: bad number '{v}'")))
+            }
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| Error::Config(format!("{key}: bad integer '{v}'")))
+            }
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => Err(Error::Config(format!("{key}: bad bool '{v}'"))),
+        }
+    }
+
+    /// Materialize solver parameters from this config.
+    pub fn reg_params(&self) -> Result<RegParams> {
+        let d = RegParams::default();
+        Ok(RegParams {
+            variant: self.get("variant").unwrap_or(&d.variant).to_string(),
+            beta: self.get_f64("beta", d.beta)?,
+            gamma: self.get_f64("gamma", d.gamma)?,
+            gtol: self.get_f64("gtol", d.gtol)?,
+            max_iter: self.get_usize("max_iter", d.max_iter)?,
+            max_krylov: self.get_usize("max_krylov", d.max_krylov)?,
+            continuation: self.get_bool("continuation", d.continuation)?,
+            incompressible: self.get_bool("incompressible", d.incompressible)?,
+            verbose: self.get_bool("verbose", d.verbose)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = Config::parse("a = 1\n# comment\nb = \"hello\"  # trailing\n\nbeta = 5e-4\n")
+            .unwrap();
+        assert_eq!(c.get("a"), Some("1"));
+        assert_eq!(c.get("b"), Some("hello"));
+        assert_eq!(c.get_f64("beta", 0.0).unwrap(), 5e-4);
+    }
+
+    #[test]
+    fn bad_line_rejected() {
+        assert!(Config::parse("just a line\n").is_err());
+    }
+
+    #[test]
+    fn reg_params_defaults_and_overrides() {
+        let c = Config::parse("variant = opt-fd8-linear\nmax_iter = 7\ncontinuation = false\n")
+            .unwrap();
+        let p = c.reg_params().unwrap();
+        assert_eq!(p.variant, "opt-fd8-linear");
+        assert_eq!(p.max_iter, 7);
+        assert!(!p.continuation);
+        assert_eq!(p.beta, 5e-4); // default preserved
+    }
+
+    #[test]
+    fn bool_parsing() {
+        let c = Config::parse("x = yes\ny = 0\n").unwrap();
+        assert!(c.get_bool("x", false).unwrap());
+        assert!(!c.get_bool("y", true).unwrap());
+        assert!(c.get_bool("missing", true).unwrap());
+    }
+}

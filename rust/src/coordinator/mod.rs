@@ -1,0 +1,16 @@
+//! Batch registration coordinator.
+//!
+//! The paper's deployment setting (section 5): "clinical workflows require
+//! high-throughput, with one or more registration tasks per node ...
+//! multiple registration tasks can take place in an embarrassingly parallel
+//! way". This module is that layer: a thread-pool service that schedules
+//! many registration jobs against one shared operator registry (compiled
+//! executables are shared; each worker runs an independent Gauss-Newton
+//! solve), with queueing, cancellation-on-error policy, and throughput
+//! accounting.
+
+pub mod service;
+pub mod workload;
+
+pub use service::{run_queue, BatchReport, BatchService, Job, JobOutcome, JobStatus};
+pub use workload::{poisson_arrivals, simulate_queue, summarize, LatencySummary, Request};

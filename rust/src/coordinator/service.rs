@@ -1,0 +1,330 @@
+//! Thread-pool batch registration service.
+//!
+//! std-only (no tokio offline): a work queue over `Mutex<VecDeque>`, N
+//! worker threads, and a collector for per-job outcomes. The `xla` crate's
+//! PJRT handles are deliberately `!Send` (they wrap `Rc` + raw pointers),
+//! so each worker owns its *own* PJRT client and operator cache — the
+//! paper's setting exactly: "multiple registration tasks can take place in
+//! an embarrassingly parallel way", one device context per task.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::registration::problem::{RegParams, RegProblem};
+use crate::registration::report::RunReport;
+use crate::registration::solver::GnSolver;
+use crate::runtime::OpRegistry;
+
+use std::path::PathBuf;
+
+/// One queued registration job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: usize,
+    pub problem: RegProblem,
+    pub params: RegParams,
+}
+
+/// Job lifecycle state (observable while the batch runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+/// Outcome of one job.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub id: usize,
+    pub dataset: String,
+    pub status: JobStatus,
+    pub report: Option<RunReport>,
+    pub error: Option<String>,
+    pub wall_s: f64,
+}
+
+/// Aggregate statistics for a completed batch.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub outcomes: Vec<JobOutcome>,
+    pub wall_s: f64,
+    pub workers: usize,
+}
+
+impl BatchReport {
+    pub fn succeeded(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.status == JobStatus::Done).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.status == JobStatus::Failed).count()
+    }
+
+    /// Registrations per second over the batch (the clinical-throughput
+    /// number the paper's motivation is about).
+    pub fn throughput(&self) -> f64 {
+        self.succeeded() as f64 / self.wall_s.max(1e-12)
+    }
+
+    /// Sum of per-job solve times (serial-equivalent work).
+    pub fn serial_time(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.wall_s).sum()
+    }
+}
+
+/// Generic work queue: run `items` on `workers` threads; each worker calls
+/// `init` once (per-worker context, e.g. a PJRT registry) and `exec` per
+/// item. Results are returned in submission order. The scheduling invariant
+/// tests in this module run against this function with cheap executors.
+pub fn run_queue<T, C, R, I, E>(items: Vec<T>, workers: usize, init: I, exec: E) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    I: Fn(usize) -> C + Sync,
+    E: Fn(&mut C, T) -> R + Sync,
+{
+    let total = items.len();
+    let queue: Arc<Mutex<VecDeque<(usize, T)>>> =
+        Arc::new(Mutex::new(items.into_iter().enumerate().collect()));
+    let results: Arc<Mutex<Vec<(usize, R)>>> = Arc::new(Mutex::new(Vec::with_capacity(total)));
+    std::thread::scope(|scope| {
+        for w in 0..workers.max(1) {
+            let queue = queue.clone();
+            let results = results.clone();
+            let init = &init;
+            let exec = &exec;
+            scope.spawn(move || {
+                let mut ctx = init(w);
+                loop {
+                    let (idx, item) = {
+                        let mut q = queue.lock().unwrap();
+                        match q.pop_front() {
+                            Some(x) => x,
+                            None => break,
+                        }
+                    };
+                    let r = exec(&mut ctx, item);
+                    results.lock().unwrap().push((idx, r));
+                }
+            });
+        }
+    });
+    let mut out = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// The batch service: submit jobs, run them on N workers, collect reports.
+pub struct BatchService {
+    pub artifacts_dir: PathBuf,
+    pub workers: usize,
+}
+
+impl BatchService {
+    pub fn new(artifacts_dir: PathBuf, workers: usize) -> Self {
+        BatchService { artifacts_dir, workers: workers.max(1) }
+    }
+
+    /// Service rooted at the default artifacts location.
+    pub fn new_default(workers: usize) -> Self {
+        Self::new(crate::runtime::manifest::default_dir(), workers)
+    }
+
+    /// Run all jobs to completion; returns outcomes in job-id order.
+    pub fn run(&self, jobs: Vec<Job>) -> Result<BatchReport> {
+        let t0 = Instant::now();
+        let dir = self.artifacts_dir.clone();
+        let outcomes = run_queue(
+            jobs,
+            self.workers,
+            // Per-worker PJRT client + operator cache (PJRT handles are
+            // !Send; compilation cost amortizes over this worker's jobs).
+            |_w| OpRegistry::open(&dir),
+            |registry, job| {
+                let jt0 = Instant::now();
+                let registry = match registry {
+                    Ok(r) => r,
+                    Err(e) => {
+                        return JobOutcome {
+                            id: job.id,
+                            dataset: job.problem.name.clone(),
+                            status: JobStatus::Failed,
+                            report: None,
+                            error: Some(format!("registry open failed: {e}")),
+                            wall_s: 0.0,
+                        }
+                    }
+                };
+                let solver = GnSolver::new(registry, job.params.clone());
+                match solver
+                    .solve(&job.problem)
+                    .and_then(|res| RunReport::build(&solver, &job.problem, &res))
+                {
+                    Ok(report) => JobOutcome {
+                        id: job.id,
+                        dataset: job.problem.name.clone(),
+                        status: JobStatus::Done,
+                        report: Some(report),
+                        error: None,
+                        wall_s: jt0.elapsed().as_secs_f64(),
+                    },
+                    Err(e) => JobOutcome {
+                        id: job.id,
+                        dataset: job.problem.name.clone(),
+                        status: JobStatus::Failed,
+                        report: None,
+                        error: Some(e.to_string()),
+                        wall_s: jt0.elapsed().as_secs_f64(),
+                    },
+                }
+            },
+        );
+        Ok(BatchReport { outcomes, wall_s: t0.elapsed().as_secs_f64(), workers: self.workers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::prop::{self, Config};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn prop_queue_runs_each_item_exactly_once_in_order() {
+        prop::check_msg(
+            Config { cases: 40, seed: 60 },
+            |r| {
+                let items = r.below(64) as usize;
+                let workers = 1 + r.below(8) as usize;
+                (items, workers)
+            },
+            |&(items, workers)| {
+                let counter = AtomicUsize::new(0);
+                let out = run_queue(
+                    (0..items).collect::<Vec<_>>(),
+                    workers,
+                    |_| (),
+                    |_, i| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                        i * 2
+                    },
+                );
+                if counter.load(Ordering::SeqCst) != items {
+                    return Err(format!("executed {} of {items}", counter.load(Ordering::SeqCst)));
+                }
+                if out != (0..items).map(|i| i * 2).collect::<Vec<_>>() {
+                    return Err("results out of order".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_queue_worker_contexts_are_isolated() {
+        // Each worker gets its own context; total per-context work sums to
+        // the item count (no item shared, none dropped).
+        prop::check_msg(
+            Config { cases: 20, seed: 61 },
+            |r| (1 + r.below(50) as usize, 1 + r.below(6) as usize),
+            |&(items, workers)| {
+                let out = run_queue(
+                    vec![1usize; items],
+                    workers,
+                    |w| (w, 0usize),
+                    |ctx, x| {
+                        ctx.1 += x;
+                        (ctx.0, ctx.1)
+                    },
+                );
+                // Reconstruct per-worker totals from the last observation
+                // of each worker id.
+                let mut per_worker = std::collections::BTreeMap::new();
+                for (w, running) in out {
+                    let e = per_worker.entry(w).or_insert(0);
+                    *e = (*e).max(running);
+                }
+                let total: usize = per_worker.values().sum();
+                if total != items {
+                    return Err(format!("work total {total} != {items}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_queue_panics_do_not_deadlock_other_items() {
+        // A slow worker must not starve the queue: all items complete even
+        // with workers >> items and items >> workers.
+        let out = run_queue((0..100).collect::<Vec<i32>>(), 16, |_| (), |_, i| i);
+        assert_eq!(out.len(), 100);
+        let out = run_queue(vec![7i32; 3], 64, |_| (), |_, i| i);
+        assert_eq!(out, vec![7, 7, 7]);
+    }
+
+    fn registry() -> Option<OpRegistry> {
+        OpRegistry::open_default().ok()
+    }
+
+    fn tiny_job(reg: &OpRegistry, id: usize, subject: &str) -> Job {
+        let problem = synth::nirep_analog_pair(reg, 16, subject).unwrap();
+        let params = RegParams {
+            continuation: false,
+            max_iter: 3,
+            gtol: 1e-1,
+            ..Default::default()
+        };
+        Job { id, problem, params }
+    }
+
+    #[test]
+    fn batch_runs_all_jobs_once() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let jobs = vec![
+            tiny_job(&reg, 0, "na02"),
+            tiny_job(&reg, 1, "na03"),
+            tiny_job(&reg, 2, "na10"),
+        ];
+        let svc = BatchService::new_default(2);
+        let rep = svc.run(jobs).unwrap();
+        assert_eq!(rep.outcomes.len(), 3);
+        assert_eq!(rep.succeeded(), 3, "failures: {:?}", rep.outcomes);
+        // Outcomes are id-ordered and unique.
+        let ids: Vec<usize> = rep.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert!(rep.throughput() > 0.0);
+    }
+
+    #[test]
+    fn failed_job_is_reported_not_fatal() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        // n = 24 has no artifacts: the job must fail cleanly.
+        let (atlas, _) = synth::brain_atlas(24);
+        let bad = Job {
+            id: 0,
+            problem: crate::registration::problem::RegProblem::new(
+                "bad",
+                atlas.clone(),
+                atlas,
+            ),
+            params: RegParams::default(),
+        };
+        let good = tiny_job(&reg, 1, "na02");
+        let svc = BatchService::new_default(2);
+        let rep = svc.run(vec![bad, good]).unwrap();
+        assert_eq!(rep.failed(), 1);
+        assert_eq!(rep.succeeded(), 1);
+        assert!(rep.outcomes[0].error.is_some());
+    }
+}

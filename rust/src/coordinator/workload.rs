@@ -1,0 +1,186 @@
+//! Clinical workload simulation: arrival processes and latency accounting.
+//!
+//! The paper's motivation (section 1): "large clinical, cross-center,
+//! population-study workflows require thousands of registrations, reducing
+//! the compute time of a single registration to seconds translates to a
+//! reduction of clinical study time from weeks to a few days". This module
+//! models that setting: registration requests arriving as a Poisson
+//! process at a given rate, served by the batch coordinator, with
+//! queueing-latency percentiles as the figure of merit.
+
+use crate::util::rng::Rng;
+
+/// One simulated request: arrival offset (seconds from study start) plus
+/// the subject it asks to register.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub subject: String,
+}
+
+/// Generate Poisson arrivals at `rate_per_s` over `horizon_s`, cycling
+/// through the study subjects deterministically.
+pub fn poisson_arrivals(seed: u64, rate_per_s: f64, horizon_s: f64, subjects: &[&str]) -> Vec<Request> {
+    assert!(rate_per_s > 0.0 && horizon_s > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    loop {
+        // Exponential inter-arrival times.
+        t += -rng.uniform().max(1e-12).ln() / rate_per_s;
+        if t > horizon_s {
+            break;
+        }
+        out.push(Request {
+            id: out.len(),
+            arrival_s: t,
+            subject: subjects[out.len() % subjects.len()].to_string(),
+        });
+    }
+    out
+}
+
+/// Latency record for one served request.
+#[derive(Clone, Copy, Debug)]
+pub struct Served {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub done_s: f64,
+}
+
+impl Served {
+    /// Queueing delay before service started.
+    pub fn wait_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+
+    /// End-to-end latency (arrival to completion).
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+}
+
+/// Deterministic queueing simulation: given arrivals and a fixed per-job
+/// service time on each of `workers` servers, compute start/finish times
+/// (M/D/c queue, first-come-first-served). Used to extrapolate measured
+/// single-registration times to study-scale workloads without running
+/// thousands of solves.
+pub fn simulate_queue(arrivals: &[Request], service_s: f64, workers: usize) -> Vec<Served> {
+    assert!(workers >= 1);
+    let mut free_at = vec![0.0f64; workers];
+    let mut out = Vec::with_capacity(arrivals.len());
+    for req in arrivals {
+        // Earliest-free server.
+        let (w, &t_free) = free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = t_free.max(req.arrival_s);
+        let done = start + service_s;
+        free_at[w] = done;
+        out.push(Served { id: req.id, arrival_s: req.arrival_s, start_s: start, done_s: done });
+    }
+    out
+}
+
+/// Latency summary (p50/p95/max end-to-end, mean wait, utilization).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+    pub mean_wait_s: f64,
+    /// Served requests per second of simulated horizon.
+    pub throughput: f64,
+}
+
+pub fn summarize(served: &[Served]) -> LatencySummary {
+    assert!(!served.is_empty());
+    let mut lat: Vec<f64> = served.iter().map(Served::latency_s).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let horizon = served.iter().map(|s| s.done_s).fold(0.0, f64::max);
+    LatencySummary {
+        p50_s: crate::math::stats::percentile_sorted(&lat, 50.0),
+        p95_s: crate::math::stats::percentile_sorted(&lat, 95.0),
+        max_s: *lat.last().unwrap(),
+        mean_wait_s: served.iter().map(Served::wait_s).sum::<f64>() / served.len() as f64,
+        throughput: served.len() as f64 / horizon.max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, Config};
+
+    #[test]
+    fn arrivals_are_sorted_and_bounded() {
+        let reqs = poisson_arrivals(1, 2.0, 100.0, &["a", "b"]);
+        assert!(!reqs.is_empty());
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(reqs.last().unwrap().arrival_s <= 100.0);
+        // Expected count ~ rate * horizon = 200; loose band.
+        assert!(reqs.len() > 120 && reqs.len() < 300, "{}", reqs.len());
+    }
+
+    #[test]
+    fn queue_respects_causality_and_capacity() {
+        prop::check_msg(
+            Config { cases: 40, seed: 70 },
+            |r| {
+                let rate = 0.5 + r.uniform() * 4.0;
+                let service = 0.1 + r.uniform() * 2.0;
+                let workers = 1 + r.below(4) as usize;
+                (poisson_arrivals(r.next_u64(), rate, 50.0, &["x"]), service, workers)
+            },
+            |(reqs, service, workers)| {
+                if reqs.is_empty() {
+                    return Ok(());
+                }
+                let served = simulate_queue(reqs, *service, *workers);
+                // Causality: no job starts before it arrives.
+                for s in &served {
+                    if s.start_s < s.arrival_s - 1e-12 {
+                        return Err(format!("job {} started early", s.id));
+                    }
+                }
+                // Capacity: at most `workers` jobs in service at any time.
+                for s in &served {
+                    let mid = s.start_s + service / 2.0;
+                    let in_service = served
+                        .iter()
+                        .filter(|o| o.start_s <= mid && mid < o.done_s)
+                        .count();
+                    if in_service > *workers {
+                        return Err(format!("{in_service} jobs in service at t={mid}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_workers_reduce_latency_under_load() {
+        let reqs = poisson_arrivals(3, 1.0, 200.0, &["x"]);
+        let s1 = summarize(&simulate_queue(&reqs, 1.5, 1)); // overloaded
+        let s4 = summarize(&simulate_queue(&reqs, 1.5, 4)); // comfortable
+        assert!(s4.p95_s < s1.p95_s, "p95 {} !< {}", s4.p95_s, s1.p95_s);
+        assert!(s4.mean_wait_s < s1.mean_wait_s);
+    }
+
+    #[test]
+    fn idle_system_latency_equals_service_time() {
+        // Very low rate: every request finds a free server.
+        let reqs = poisson_arrivals(4, 0.01, 1000.0, &["x"]);
+        let served = simulate_queue(&reqs, 2.0, 2);
+        let s = summarize(&served);
+        assert!((s.p50_s - 2.0).abs() < 1e-9);
+        assert!(s.mean_wait_s < 1e-9);
+    }
+}

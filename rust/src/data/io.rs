@@ -1,0 +1,119 @@
+//! Raw volume IO: little-endian f32/u16 volumes with a JSON sidecar.
+//!
+//! Stands in for NIfTI in the original pipeline; enough to dump and reload
+//! registration inputs/outputs (mismatch maps, det F fields, label maps)
+//! for the qualitative Fig-5/6 style inspection.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::field::Field3;
+use crate::util::json::Json;
+
+/// Write a scalar field as `<path>.f32` + `<path>.json` metadata.
+pub fn write_field(path: &Path, f: &Field3, desc: &str) -> Result<()> {
+    let mut bytes = Vec::with_capacity(f.data.len() * 4);
+    for &x in &f.data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    fs::File::create(path.with_extension("f32"))?.write_all(&bytes)?;
+    let meta = format!(
+        "{{\"n\": {}, \"dtype\": \"f32\", \"order\": \"x1x2x3\", \"desc\": \"{}\"}}\n",
+        f.n,
+        desc.replace('"', "'")
+    );
+    fs::write(path.with_extension("json"), meta)?;
+    Ok(())
+}
+
+/// Read a scalar field written by `write_field`.
+pub fn read_field(path: &Path) -> Result<Field3> {
+    let meta = fs::read_to_string(path.with_extension("json"))?;
+    let j = Json::parse(&meta)?;
+    let n = j
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Data("missing n in volume meta".into()))?;
+    let mut bytes = Vec::new();
+    fs::File::open(path.with_extension("f32"))?.read_to_end(&mut bytes)?;
+    if bytes.len() != n * n * n * 4 {
+        return Err(Error::ShapeMismatch {
+            what: format!("{}", path.display()),
+            expected: n * n * n * 4,
+            got: bytes.len(),
+        });
+    }
+    let data = bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect();
+    Field3::from_vec(n, data)
+}
+
+/// Write a label map as u16 little-endian.
+pub fn write_labels(path: &Path, labels: &[u16], n: usize) -> Result<()> {
+    let mut bytes = Vec::with_capacity(labels.len() * 2);
+    for &x in labels {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    fs::File::create(path.with_extension("u16"))?.write_all(&bytes)?;
+    fs::write(
+        path.with_extension("json"),
+        format!("{{\"n\": {n}, \"dtype\": \"u16\", \"order\": \"x1x2x3\"}}\n"),
+    )?;
+    Ok(())
+}
+
+/// Read a label map written by `write_labels`.
+pub fn read_labels(path: &Path) -> Result<(Vec<u16>, usize)> {
+    let meta = fs::read_to_string(path.with_extension("json"))?;
+    let j = Json::parse(&meta)?;
+    let n = j
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Data("missing n in labels meta".into()))?;
+    let mut bytes = Vec::new();
+    fs::File::open(path.with_extension("u16"))?.read_to_end(&mut bytes)?;
+    let labels = bytes.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
+    Ok((labels, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn field_roundtrip() {
+        let dir = std::env::temp_dir().join("claire_io_test");
+        fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(1);
+        let f = Field3::from_vec(8, (0..512).map(|_| rng.uniform_f32(-1.0, 1.0)).collect())
+            .unwrap();
+        let p = dir.join("vol");
+        write_field(&p, &f, "test volume").unwrap();
+        let g = read_field(&p).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let dir = std::env::temp_dir().join("claire_io_test");
+        fs::create_dir_all(&dir).unwrap();
+        let labels: Vec<u16> = (0..64u16).collect();
+        let p = dir.join("lab");
+        write_labels(&p, &labels, 4).unwrap();
+        let (got, n) = read_labels(&p).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(got, labels);
+    }
+
+    #[test]
+    fn truncated_file_is_error() {
+        let dir = std::env::temp_dir().join("claire_io_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad");
+        fs::write(p.with_extension("json"), "{\"n\": 8, \"dtype\": \"f32\"}").unwrap();
+        fs::write(p.with_extension("f32"), [0u8; 12]).unwrap();
+        assert!(read_field(&p).is_err());
+    }
+}

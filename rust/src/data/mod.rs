@@ -1,0 +1,8 @@
+//! Data substrate: synthetic neuroimaging volumes (NIREP substitution) and
+//! raw volume IO.
+
+pub mod io;
+pub mod synth;
+pub mod viz;
+
+pub use synth::{brain_atlas, make_subject, nirep_analog_pair, smooth_random_velocity, Subject};

@@ -1,0 +1,129 @@
+//! Terminal volume inspection: ASCII renderings of axial/coronal slices.
+//!
+//! Stands in for the paper's Figure 5/6 visual panels in a headless
+//! environment: `claire register --dump-volumes` writes raw volumes, and
+//! this renderer gives an immediate qualitative check (mismatch before vs
+//! after, det F hot spots) without leaving the terminal.
+
+use crate::field::Field3;
+
+/// Intensity ramp from dark to bright.
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// Slicing plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// Fixed x1 (paper's axial view analog).
+    Axial,
+    /// Fixed x2 (coronal).
+    Coronal,
+    /// Fixed x3 (sagittal).
+    Sagittal,
+}
+
+/// Extract one slice as rows of f32 (row-major).
+pub fn slice_of(f: &Field3, plane: Plane, index: usize) -> Vec<Vec<f32>> {
+    let n = f.n;
+    assert!(index < n, "slice index {index} out of range for n={n}");
+    let mut rows = Vec::with_capacity(n);
+    for a in 0..n {
+        let mut row = Vec::with_capacity(n);
+        for b in 0..n {
+            let v = match plane {
+                Plane::Axial => f.at(index, a, b),
+                Plane::Coronal => f.at(a, index, b),
+                Plane::Sagittal => f.at(a, b, index),
+            };
+            row.push(v);
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+/// Render a slice to ASCII with a linear ramp over [min, max] of the slice.
+/// `width` columns are downsampled from the grid by nearest sampling.
+pub fn render_slice(f: &Field3, plane: Plane, index: usize, width: usize) -> String {
+    let rows = slice_of(f, plane, index);
+    let n = rows.len();
+    let w = width.clamp(8, 160).min(n.max(8));
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for row in &rows {
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut out = String::new();
+    // Terminal cells are ~2x taller than wide: halve the row count.
+    let step = (n as f64 / w as f64).max(1.0);
+    let mut a = 0.0;
+    while (a as usize) < n {
+        let row = &rows[a as usize];
+        let mut b = 0.0;
+        while (b as usize) < n {
+            let v = row[b as usize];
+            let t = ((v - lo) / span).clamp(0.0, 1.0);
+            let ci = ((t * (RAMP.len() - 1) as f32).round()) as usize;
+            out.push(RAMP[ci] as char);
+            b += step;
+        }
+        out.push('\n');
+        a += step * 2.0;
+    }
+    out.push_str(&format!("[{plane:?} slice {index}; range {lo:.3}..{hi:.3}]\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient_field(n: usize) -> Field3 {
+        let mut f = Field3::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    f.set(i, j, k, (i + j + k) as f32);
+                }
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn slice_extracts_correct_plane() {
+        let f = gradient_field(8);
+        let s = slice_of(&f, Plane::Axial, 3);
+        assert_eq!(s[2][5], (3 + 2 + 5) as f32);
+        let s = slice_of(&f, Plane::Sagittal, 1);
+        assert_eq!(s[4][6], (4 + 6 + 1) as f32);
+    }
+
+    #[test]
+    fn render_has_expected_shape_and_ramp() {
+        let f = gradient_field(16);
+        let art = render_slice(&f, Plane::Axial, 8, 16);
+        assert!(art.contains("slice 8"));
+        // Dark at origin corner, bright at far corner.
+        let first_line = art.lines().next().unwrap();
+        assert!(first_line.starts_with(' ') || first_line.starts_with('.'));
+        assert!(art.contains('@'));
+    }
+
+    #[test]
+    fn constant_field_renders_without_nan() {
+        let f = Field3::zeros(8);
+        let art = render_slice(&f, Plane::Coronal, 0, 8);
+        assert!(!art.contains("NaN"));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_index_panics() {
+        let f = gradient_field(8);
+        slice_of(&f, Plane::Axial, 8);
+    }
+}

@@ -1,0 +1,36 @@
+//! Error types for the CLAIRE coordinator.
+
+use thiserror::Error;
+
+/// Unified error type across runtime, solver, data and coordinator layers.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("XLA/PJRT error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("artifact not found: op={op} variant={variant} n={n} (run `make artifacts`)")]
+    ArtifactNotFound { op: String, variant: String, n: usize },
+
+    #[error("shape mismatch for {what}: expected {expected} elements, got {got}")]
+    ShapeMismatch { what: String, expected: usize, got: usize },
+
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("JSON parse error at byte {at}: {msg}")]
+    Json { at: usize, msg: String },
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

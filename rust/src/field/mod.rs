@@ -1,0 +1,149 @@
+//! 3-D field containers and the PCG hot-path vector algebra.
+//!
+//! The Gauss-Newton-Krylov outer loops live in Rust and operate on velocity
+//! fields of 3*N^3 f32 values; the axpy/dot/norm kernels here are the L3
+//! analog of PETSc's Vec operations in CLAIRE. They are written as blocked
+//! loops with f64 accumulators (dot products over 50M elements in f32 lose
+//! digits otherwise) and are benchmarked in `bench_fieldops`.
+
+pub mod ops;
+
+use crate::error::{Error, Result};
+
+/// A scalar field on an N^3 periodic grid, row-major `[x1, x2, x3]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field3 {
+    pub n: usize,
+    pub data: Vec<f32>,
+}
+
+impl Field3 {
+    pub fn zeros(n: usize) -> Field3 {
+        Field3 { n, data: vec![0.0; n * n * n] }
+    }
+
+    pub fn from_vec(n: usize, data: Vec<f32>) -> Result<Field3> {
+        if data.len() != n * n * n {
+            return Err(Error::ShapeMismatch {
+                what: "Field3".into(),
+                expected: n * n * n,
+                got: data.len(),
+            });
+        }
+        Ok(Field3 { n, data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize, k: usize) -> f32 {
+        self.data[(i * self.n + j) * self.n + k]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        self.data[(i * self.n + j) * self.n + k] = v;
+    }
+
+    /// Grid spacing h = 2*pi / n.
+    pub fn h(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.n as f64
+    }
+}
+
+/// A velocity (vector) field: 3 components stored contiguously
+/// `[3, N, N, N]`, matching the artifact input layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VecField3 {
+    pub n: usize,
+    pub data: Vec<f32>,
+}
+
+impl VecField3 {
+    pub fn zeros(n: usize) -> VecField3 {
+        VecField3 { n, data: vec![0.0; 3 * n * n * n] }
+    }
+
+    pub fn from_vec(n: usize, data: Vec<f32>) -> Result<VecField3> {
+        if data.len() != 3 * n * n * n {
+            return Err(Error::ShapeMismatch {
+                what: "VecField3".into(),
+                expected: 3 * n * n * n,
+                got: data.len(),
+            });
+        }
+        Ok(VecField3 { n, data })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// View of one component.
+    pub fn comp(&self, a: usize) -> &[f32] {
+        let m = self.n * self.n * self.n;
+        &self.data[a * m..(a + 1) * m]
+    }
+
+    pub fn comp_mut(&mut self, a: usize) -> &mut [f32] {
+        let m = self.n * self.n * self.n;
+        &mut self.data[a * m..(a + 1) * m]
+    }
+
+    /// Pointwise max |v| over the grid (CFL diagnostics).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()))
+    }
+
+    pub fn h(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_shape_checked() {
+        assert!(Field3::from_vec(4, vec![0.0; 64]).is_ok());
+        assert!(Field3::from_vec(4, vec![0.0; 63]).is_err());
+        assert!(VecField3::from_vec(4, vec![0.0; 192]).is_ok());
+        assert!(VecField3::from_vec(4, vec![0.0; 64]).is_err());
+    }
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut f = Field3::zeros(4);
+        f.set(1, 2, 3, 9.0);
+        assert_eq!(f.at(1, 2, 3), 9.0);
+        assert_eq!(f.data[(1 * 4 + 2) * 4 + 3], 9.0);
+    }
+
+    #[test]
+    fn components_disjoint() {
+        let mut v = VecField3::zeros(2);
+        v.comp_mut(1)[0] = 5.0;
+        assert_eq!(v.comp(0).iter().sum::<f32>(), 0.0);
+        assert_eq!(v.comp(1)[0], 5.0);
+        assert_eq!(v.comp(2).iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn max_abs() {
+        let mut v = VecField3::zeros(2);
+        v.data[5] = -3.0;
+        v.data[10] = 2.0;
+        assert_eq!(v.max_abs(), 3.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! # CLAIRE-rs
+//!
+//! A Rust + JAX + Pallas reproduction of *"Fast GPU 3D Diffeomorphic Image
+//! Registration"* (Brunn, Himthani, Biros, Mehl, Mang — JPDC 2020): a
+//! Gauss-Newton-Krylov solver for stationary-velocity LDDMM registration
+//! with optimized scattered-data interpolation and 8th-order finite
+//! difference kernels.
+//!
+//! Architecture (three layers, see DESIGN.md):
+//! * **L1** Pallas kernels + **L2** JAX PDE operators are authored in
+//!   `python/compile/` and AOT-lowered to HLO text artifacts at build time.
+//! * **L3** (this crate) is the coordinator: it loads the artifacts via the
+//!   PJRT C API and runs the paper's Algorithm 2.1 — Gauss-Newton outer
+//!   loop, PCG on the Gauss-Newton Hessian, Armijo line search, parameter
+//!   continuation — plus baseline optimizers, metrics, synthetic data, and
+//!   a batch registration service for the paper's "clinical workflow"
+//!   setting. Python never runs at request time.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod field;
+pub mod math;
+pub mod optim;
+pub mod registration;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

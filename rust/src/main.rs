@@ -1,0 +1,302 @@
+//! `claire` — CLI launcher for the registration coordinator.
+//!
+//! Subcommands:
+//!   register   run one registration (synthetic NIREP-analog pair)
+//!   batch      run the clinical-style batch service over many jobs
+//!   transport  warp the atlas with a random velocity (data utility)
+//!   info       artifact inventory and platform info
+//!   complexity Table-1 style kernel counts per operator
+
+use std::path::PathBuf;
+
+use claire::coordinator::{BatchService, Job};
+use claire::data::synth;
+use claire::error::Result;
+use claire::registration::{BaselineKind, GnSolver, RegParams, RunReport};
+use claire::runtime::OpRegistry;
+use claire::util::args::{flag, opt, usage, Args, OptSpec};
+use claire::util::bench::Table;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn common_specs() -> Vec<OptSpec> {
+    vec![
+        opt("artifacts", "artifacts directory", "artifacts"),
+        opt("n", "grid size (16|32|64)", "16"),
+        opt("variant", "kernel variant tag", "opt-fd8-cubic"),
+        opt("subject", "synthetic subject (na02|na03|na10)", "na02"),
+        opt("beta", "target regularization weight", "5e-4"),
+        opt("gamma", "divergence penalty", "1e-4"),
+        opt("gtol", "relative gradient tolerance", "5e-2"),
+        opt("max-iter", "max Gauss-Newton iterations", "50"),
+        opt("workers", "batch worker threads", "2"),
+        opt("optimizer", "gn | gd | lbfgs", "gn"),
+        opt("max-fo-iter", "iteration cap for gd/lbfgs", "100"),
+        opt("dump-volumes", "directory to write before/after volumes", ""),
+        opt("config", "key=value config file (overridden by flags)", ""),
+        opt("multires", "grid-continuation levels (1 = single grid)", "1"),
+        flag("no-continuation", "disable beta continuation"),
+        flag("incompressible", "project onto divergence-free fields (Leray)"),
+        flag("verbose", "per-iteration progress"),
+    ]
+}
+
+fn params_from(args: &Args) -> Result<RegParams> {
+    let mut params = match args.get("config") {
+        Some(path) if !path.is_empty() => {
+            claire::config::Config::load(&PathBuf::from(path))?.reg_params()?
+        }
+        _ => RegParams::default(),
+    };
+    if let Some(v) = args.get("variant") {
+        params.variant = v.to_string();
+    }
+    params.beta = args.get_f64("beta", params.beta)?;
+    params.gamma = args.get_f64("gamma", params.gamma)?;
+    params.gtol = args.get_f64("gtol", params.gtol)?;
+    params.max_iter = args.get_usize("max-iter", params.max_iter)?;
+    if args.flag("no-continuation") {
+        params.continuation = false;
+    }
+    if args.flag("incompressible") {
+        params.incompressible = true;
+    }
+    if args.flag("verbose") {
+        params.verbose = true;
+    }
+    Ok(params)
+}
+
+fn open_registry(args: &Args) -> Result<OpRegistry> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    OpRegistry::open(&dir)
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let specs = common_specs();
+    let args = Args::parse(argv[1..].to_vec(), &specs)?;
+    match cmd.as_str() {
+        "register" => cmd_register(&args),
+        "batch" => cmd_batch(&args),
+        "transport" => cmd_transport(&args),
+        "info" => cmd_info(&args),
+        "complexity" => cmd_complexity(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(claire::Error::Config(format!("unknown command '{other}'")))
+        }
+    }
+}
+
+fn print_help() {
+    println!("claire — diffeomorphic image registration (JPDC 2020 reproduction)\n");
+    println!("usage: claire <register|batch|transport|info|complexity> [options]\n");
+    println!("{}", usage(&common_specs()));
+}
+
+fn cmd_register(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let n = args.get_usize("n", 16)?;
+    let subject = args.get_or("subject", "na02");
+    let params = params_from(args)?;
+    println!("[claire] generating synthetic pair {subject}->na01 at {n}^3 ...");
+    let prob = synth::nirep_analog_pair(&reg, n, &subject)?;
+    let solver = GnSolver::new(&reg, params.clone());
+    let tc = solver.precompile(n)?;
+    println!("[claire] operators compiled in {tc:.1}s (one-time per process)");
+
+    match args.get_or("optimizer", "gn").as_str() {
+        "gn" => {
+            let levels = args.get_usize("multires", 1)?;
+            let res = if levels > 1 {
+                solver.solve_multires(&prob, levels)?
+            } else {
+                solver.solve(&prob)?
+            };
+            let report = RunReport::build(&solver, &prob, &res)?;
+            let mut t = Table::new(&RunReport::headers());
+            t.row(&report.row());
+            t.print();
+            if !res.converged {
+                println!("(not converged to gtol within iteration budget)");
+            }
+            dump_volumes(args, &reg, &solver, &prob, &res)?;
+        }
+        "gd" | "lbfgs" => {
+            let kind = if args.get_or("optimizer", "gn") == "gd" {
+                BaselineKind::GradientDescent
+            } else {
+                BaselineKind::Lbfgs
+            };
+            let max_iter = args.get_usize("max-fo-iter", 100)?;
+            let res = claire::registration::run_baseline(&reg, &prob, &params, kind, max_iter)?;
+            println!(
+                "{}: iters={} evals={} mismatch={:.2e} J={:.4e} time={:.2}s",
+                kind.label(),
+                res.iters,
+                res.evals,
+                res.mismatch_rel,
+                res.j,
+                res.time_s
+            );
+        }
+        other => return Err(claire::Error::Config(format!("unknown optimizer '{other}'"))),
+    }
+    Ok(())
+}
+
+fn dump_volumes(
+    args: &Args,
+    _reg: &OpRegistry,
+    solver: &GnSolver,
+    prob: &claire::registration::RegProblem,
+    res: &claire::registration::RegResult,
+) -> Result<()> {
+    let dir = args.get_or("dump-volumes", "");
+    if dir.is_empty() {
+        return Ok(());
+    }
+    let dir = PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)?;
+    let n = prob.n();
+    use claire::data::io::write_field;
+    use claire::field::Field3;
+    write_field(&dir.join("m0"), &prob.m0, "template image")?;
+    write_field(&dir.join("m1"), &prob.m1, "reference image")?;
+    let warped = solver.transport(&res.v, &prob.m0.data)?;
+    let mism_before: Vec<f32> =
+        prob.m0.data.iter().zip(&prob.m1.data).map(|(a, b)| (a - b).abs()).collect();
+    let mism_after: Vec<f32> =
+        warped.iter().zip(&prob.m1.data).map(|(a, b)| (a - b).abs()).collect();
+    write_field(&dir.join("m0_warped"), &Field3::from_vec(n, warped)?, "deformed template")?;
+    write_field(&dir.join("mismatch_before"), &Field3::from_vec(n, mism_before)?, "|m0-m1|")?;
+    write_field(&dir.join("mismatch_after"), &Field3::from_vec(n, mism_after)?, "|m(1)-m1|")?;
+    let detf = solver.detf(&res.v)?;
+    write_field(&dir.join("detf"), &Field3::from_vec(n, detf)?, "det of deformation gradient")?;
+    println!("[claire] volumes written to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let n = args.get_usize("n", 16)?;
+    let params = params_from(args)?;
+    let workers = args.get_usize("workers", 2)?;
+    let mut jobs = Vec::new();
+    for (i, subject) in ["na02", "na03", "na10"].iter().enumerate() {
+        jobs.push(Job {
+            id: i,
+            problem: synth::nirep_analog_pair(&reg, n, subject)?,
+            params: params.clone(),
+        });
+    }
+    println!("[claire] batch: {} jobs on {workers} workers ...", jobs.len());
+    drop(reg); // workers open their own registries
+    let svc = BatchService::new(PathBuf::from(args.get_or("artifacts", "artifacts")), workers);
+    let rep = svc.run(jobs)?;
+    let mut t = Table::new(&RunReport::headers());
+    for o in &rep.outcomes {
+        if let Some(r) = &o.report {
+            t.row(&r.row());
+        } else {
+            println!("job {} FAILED: {}", o.id, o.error.as_deref().unwrap_or("?"));
+        }
+    }
+    t.print();
+    println!(
+        "batch: {}/{} ok, wall {:.2}s, serial-equivalent {:.2}s, {:.3} reg/s",
+        rep.succeeded(),
+        rep.outcomes.len(),
+        rep.wall_s,
+        rep.serial_time(),
+        rep.throughput()
+    );
+    Ok(())
+}
+
+fn cmd_transport(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    let n = args.get_usize("n", 16)?;
+    let (atlas, _) = synth::brain_atlas(n);
+    let v = synth::smooth_random_velocity(n, 42, 2, 0.5);
+    let op = reg.get("transport", &args.get_or("variant", "opt-fd8-cubic"), n)?;
+    let out = op.call(&[&v.data, &atlas.data])?.remove(0);
+    let rel = claire::math::stats::rel_l2(&out, &atlas.data);
+    println!("transported atlas at {n}^3: relative change {rel:.4}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let reg = open_registry(args)?;
+    println!(
+        "platform: {} ({} devices)",
+        reg.client.platform_name(),
+        reg.client.device_count()
+    );
+    println!("artifacts: {} entries, Nt = {}", reg.manifest.artifacts.len(), reg.manifest.nt);
+    let mut t = Table::new(&["op", "sizes", "variants(16^3)"]);
+    let mut ops: Vec<String> = reg.manifest.artifacts.values().map(|a| a.op.clone()).collect();
+    ops.sort();
+    ops.dedup();
+    for op in ops {
+        let sizes = reg
+            .manifest
+            .sizes_for(&op)
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let vars = reg.manifest.variants_for(&op, 16).join(",");
+        t.row(&[op, sizes, vars]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_complexity(args: &Args) -> Result<()> {
+    // Paper Table 1: kernel counts per operator evaluation (d = 3, Nt = 4).
+    let reg = open_registry(args)?;
+    let nt = reg.manifest.nt;
+    let d = 3;
+    let mut t = Table::new(&["function", "#1st-order (FFT or FD)", "#FFT (other)", "#IPs"]);
+    let char_ips = 2 * d; // RK2 trace: 2 stages x d components
+    t.row(&[
+        "objective (state eq)".into(),
+        "0".into(),
+        format!("{}", 2 * d),
+        format!("{}", char_ips + nt),
+    ]);
+    t.row(&[
+        "gradient (newton_setup)".into(),
+        format!("{}", 1 + d * (nt + 1)),
+        format!("{}", 4 * d),
+        format!("{}", 2 * char_ips + 3 * nt),
+    ]);
+    t.row(&[
+        "Hessian matvec".into(),
+        format!("{}", d * (nt + 1)),
+        format!("{}", 2 * d),
+        format!("{}", 4 * nt),
+    ]);
+    t.print();
+    println!("(d = {d}, Nt = {nt}; compare paper Table 1)");
+    Ok(())
+}

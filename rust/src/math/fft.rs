@@ -1,0 +1,324 @@
+//! Radix-2 complex FFT substrate (power-of-two sizes).
+//!
+//! The paper's CPU baseline uses FFTW/AccFFT and the GPU version cuFFT; at
+//! runtime our spectral operators run inside XLA artifacts. This module is
+//! the crate-internal *oracle*: it cross-validates the spectral artifacts'
+//! numerics from the Rust side (tests), powers the Table-2 style intensity
+//! accounting, and provides spectral utilities for synthetic-data checks.
+//!
+//! Iterative Cooley-Tukey with bit-reversal permutation; f64 throughout so
+//! the oracle has headroom over the f32 artifacts it validates.
+
+use std::f64::consts::PI;
+
+/// Complex number (f64).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// In-place forward FFT (no normalization). `data.len()` must be a power of 2.
+pub fn fft(data: &mut [C64]) {
+    transform(data, -1.0);
+}
+
+/// In-place inverse FFT (normalized by 1/N).
+pub fn ifft(data: &mut [C64]) {
+    transform(data, 1.0);
+    let inv = 1.0 / data.len() as f64;
+    for x in data.iter_mut() {
+        *x = x.scale(inv);
+    }
+}
+
+fn transform(data: &mut [C64], sign: f64) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FFT size must be a power of two, got {n}");
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if j > i {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = C64::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::new(1.0, 0.0);
+            for j in 0..len / 2 {
+                let u = data[i + j];
+                let v = data[i + j + len / 2].mul(w);
+                data[i + j] = u.add(v);
+                data[i + j + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward 3-D FFT over a cubic grid stored row-major `[n, n, n]`.
+pub fn fft3(data: &mut [C64], n: usize) {
+    transform3(data, n, false);
+}
+
+/// Inverse 3-D FFT (normalized).
+pub fn ifft3(data: &mut [C64], n: usize) {
+    transform3(data, n, true);
+}
+
+fn transform3(data: &mut [C64], n: usize, inverse: bool) {
+    assert_eq!(data.len(), n * n * n);
+    let mut line = vec![C64::default(); n];
+    let run = |line: &mut Vec<C64>| {
+        if inverse {
+            ifft(line);
+        } else {
+            fft(line);
+        }
+    };
+    // Axis 2 (contiguous).
+    for row in data.chunks_mut(n) {
+        line.copy_from_slice(row);
+        run(&mut line);
+        row.copy_from_slice(&line);
+    }
+    // Axis 1 (stride n).
+    for i in 0..n {
+        for k in 0..n {
+            for j in 0..n {
+                line[j] = data[(i * n + j) * n + k];
+            }
+            run(&mut line);
+            for j in 0..n {
+                data[(i * n + j) * n + k] = line[j];
+            }
+        }
+    }
+    // Axis 0 (stride n*n).
+    for j in 0..n {
+        for k in 0..n {
+            for i in 0..n {
+                line[i] = data[(i * n + j) * n + k];
+            }
+            run(&mut line);
+            for i in 0..n {
+                data[(i * n + j) * n + k] = line[i];
+            }
+        }
+    }
+}
+
+/// Integer wavenumber for index `i` on an n-point periodic grid.
+pub fn wavenumber(i: usize, n: usize) -> f64 {
+    if i <= n / 2 {
+        i as f64
+    } else {
+        i as f64 - n as f64
+    }
+}
+
+/// Spectral first derivative of a real f32 field along `axis` (oracle).
+pub fn spectral_partial(f: &[f32], n: usize, axis: usize) -> Vec<f32> {
+    let mut buf: Vec<C64> = f.iter().map(|&x| C64::new(x as f64, 0.0)).collect();
+    fft3(&mut buf, n);
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let idx = [i, j, k][axis];
+                let mut kk = wavenumber(idx, n);
+                if n % 2 == 0 && idx == n / 2 {
+                    kk = 0.0; // Nyquist of odd derivative
+                }
+                let v = buf[(i * n + j) * n + k];
+                buf[(i * n + j) * n + k] = C64::new(-kk * v.im, kk * v.re);
+            }
+        }
+    }
+    ifft3(&mut buf, n);
+    buf.iter().map(|c| c.re as f32).collect()
+}
+
+/// Naive DFT for validating the FFT (O(n^2); test sizes only).
+pub fn dft_naive(data: &[C64]) -> Vec<C64> {
+    let n = data.len();
+    let mut out = vec![C64::default(); n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::default();
+        for (t, &x) in data.iter().enumerate() {
+            let ang = -2.0 * PI * (k * t) as f64 / n as f64;
+            acc = acc.add(x.mul(C64::new(ang.cos(), ang.sin())));
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_signal(r: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(r.normal(), r.normal())).collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        prop::check_msg(
+            prop::Config { cases: 24, seed: 10 },
+            |r| {
+                let n = prop::pow2(r, 2, 64);
+                rand_signal(r, n)
+            },
+            |sig| {
+                let want = dft_naive(sig);
+                let mut got = sig.clone();
+                fft(&mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    if a.sub(*b).abs() > 1e-9 * (1.0 + b.abs()) {
+                        return Err(format!("mismatch {a:?} vs {b:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        prop::check_msg(
+            prop::Config { cases: 24, seed: 11 },
+            |r| {
+                let n = prop::pow2(r, 2, 256);
+                rand_signal(r, n)
+            },
+            |sig| {
+                let mut got = sig.clone();
+                fft(&mut got);
+                ifft(&mut got);
+                for (a, b) in got.iter().zip(sig) {
+                    if a.sub(*b).abs() > 1e-10 {
+                        return Err(format!("roundtrip {a:?} vs {b:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let mut r = Rng::new(12);
+        let sig = rand_signal(&mut r, 128);
+        let e_time: f64 = sig.iter().map(|c| c.abs() * c.abs()).sum();
+        let mut freq = sig.clone();
+        fft(&mut freq);
+        let e_freq: f64 = freq.iter().map(|c| c.abs() * c.abs()).sum::<f64>() / 128.0;
+        assert!((e_time - e_freq).abs() < 1e-8 * e_time);
+    }
+
+    #[test]
+    fn fft3_roundtrip() {
+        let mut r = Rng::new(13);
+        let n = 8;
+        let sig = rand_signal(&mut r, n * n * n);
+        let mut got = sig.clone();
+        fft3(&mut got, n);
+        ifft3(&mut got, n);
+        for (a, b) in got.iter().zip(&sig) {
+            assert!(a.sub(*b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft3_plane_wave_is_delta() {
+        // f(x) = exp(i k.x) transforms to a single spike at k.
+        let n = 8;
+        let kvec = [2usize, 5, 1];
+        let mut data = vec![C64::default(); n * n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let ph = 2.0 * PI * (kvec[0] * i + kvec[1] * j + kvec[2] * k) as f64 / n as f64;
+                    data[(i * n + j) * n + k] = C64::new(ph.cos(), ph.sin());
+                }
+            }
+        }
+        fft3(&mut data, n);
+        let spike = (kvec[0] * n + kvec[1]) * n + kvec[2];
+        for (idx, c) in data.iter().enumerate() {
+            if idx == spike {
+                assert!((c.re - (n * n * n) as f64).abs() < 1e-6);
+            } else {
+                assert!(c.abs() < 1e-6, "leak at {idx}: {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_partial_of_sin_is_cos() {
+        let n = 16;
+        let mut f = vec![0f32; n * n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let x3 = 2.0 * PI * k as f64 / n as f64;
+                    f[(i * n + j) * n + k] = (3.0 * x3).sin() as f32;
+                }
+            }
+        }
+        let df = spectral_partial(&f, n, 2);
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let x3 = 2.0 * PI * k as f64 / n as f64;
+                    let want = 3.0 * (3.0 * x3).cos();
+                    let got = df[(i * n + j) * n + k] as f64;
+                    assert!((got - want).abs() < 1e-4, "at {k}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_rejected() {
+        let mut d = vec![C64::default(); 6];
+        fft(&mut d);
+    }
+}

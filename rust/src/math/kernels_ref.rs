@@ -1,0 +1,286 @@
+//! Pure-Rust reference implementations of the paper's two hot kernels.
+//!
+//! These mirror `python/compile/kernels/ref.py` and serve three purposes:
+//! 1. cross-language validation of the HLO artifacts (integration tests
+//!    compare artifact outputs against these implementations);
+//! 2. host-side fallbacks for utilities that do not warrant a PJRT call
+//!    (e.g. nearest-neighbor label warping for DICE);
+//! 3. the Fig-2 style accuracy study can run without artifacts.
+
+use std::f64::consts::PI;
+
+/// Centered 8th-order first-derivative coefficients (offsets 1..4).
+pub const FD8_COEFFS: [f64; 4] = [4.0 / 5.0, -1.0 / 5.0, 4.0 / 105.0, -1.0 / 280.0];
+
+#[inline]
+fn wrap(i: isize, n: usize) -> usize {
+    i.rem_euclid(n as isize) as usize
+}
+
+/// FD8 partial derivative of scalar field `f[n,n,n]` along `axis`.
+pub fn fd8_partial(f: &[f32], n: usize, axis: usize, h: f64) -> Vec<f32> {
+    assert_eq!(f.len(), n * n * n);
+    let stride = [n * n, n, 1][axis];
+    let mut out = vec![0f32; f.len()];
+    let at = |i: usize, j: usize, k: usize| (i * n + j) * n + k;
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let ijk = [i, j, k];
+                let base = at(i, j, k) as isize;
+                let pos = ijk[axis] as isize;
+                let mut acc = 0.0f64;
+                for (o, c) in FD8_COEFFS.iter().enumerate() {
+                    let off = (o + 1) as isize;
+                    let plus = base + (wrap(pos + off, n) as isize - pos) * stride as isize;
+                    let minus = base + (wrap(pos - off, n) as isize - pos) * stride as isize;
+                    acc += c * (f[plus as usize] as f64 - f[minus as usize] as f64);
+                }
+                out[at(i, j, k)] = (acc / h) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// FD8 divergence of a vector field stored as 3 contiguous scalar fields.
+pub fn fd8_div(v: &[f32], n: usize, h: f64) -> Vec<f32> {
+    let m = n * n * n;
+    assert_eq!(v.len(), 3 * m);
+    let mut out = fd8_partial(&v[0..m], n, 0, h);
+    for (axis, chunk) in [(1usize, &v[m..2 * m]), (2usize, &v[2 * m..3 * m])] {
+        let d = fd8_partial(chunk, n, axis, h);
+        for (o, x) in out.iter_mut().zip(d) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// Trilinear periodic interpolation at one query point (grid units).
+pub fn interp_linear_at(f: &[f32], n: usize, q: [f64; 3]) -> f64 {
+    let i0: Vec<isize> = q.iter().map(|&x| x.floor() as isize).collect();
+    let t: Vec<f64> = q.iter().zip(&i0).map(|(&x, &i)| x - i as f64).collect();
+    let mut acc = 0.0f64;
+    for dx in 0..2 {
+        let wx = if dx == 1 { t[0] } else { 1.0 - t[0] };
+        for dy in 0..2 {
+            let wy = if dy == 1 { t[1] } else { 1.0 - t[1] };
+            for dz in 0..2 {
+                let wz = if dz == 1 { t[2] } else { 1.0 - t[2] };
+                let idx = (wrap(i0[0] + dx, n) * n + wrap(i0[1] + dy, n)) * n
+                    + wrap(i0[2] + dz, n);
+                acc += wx * wy * wz * f[idx] as f64;
+            }
+        }
+    }
+    acc
+}
+
+/// Cubic Lagrange basis at offsets (-1, 0, 1, 2) evaluated at t in [0,1).
+pub fn lagrange_weights(t: f64) -> [f64; 4] {
+    [
+        -t * (t - 1.0) * (t - 2.0) / 6.0,
+        (t + 1.0) * (t - 1.0) * (t - 2.0) / 2.0,
+        -(t + 1.0) * t * (t - 2.0) / 2.0,
+        (t + 1.0) * t * (t - 1.0) / 6.0,
+    ]
+}
+
+/// Cubic Lagrange periodic interpolation at one query point (grid units).
+pub fn interp_cubic_at(f: &[f32], n: usize, q: [f64; 3]) -> f64 {
+    let i0: Vec<isize> = q.iter().map(|&x| x.floor() as isize).collect();
+    let w: Vec<[f64; 4]> =
+        q.iter().zip(&i0).map(|(&x, &i)| lagrange_weights(x - i as f64)).collect();
+    let mut acc = 0.0f64;
+    for dx in 0..4 {
+        for dy in 0..4 {
+            for dz in 0..4 {
+                let idx = (wrap(i0[0] + dx - 1, n) * n + wrap(i0[1] + dy - 1, n)) * n
+                    + wrap(i0[2] + dz - 1, n);
+                acc += w[0][dx as usize] * w[1][dy as usize] * w[2][dz as usize] * f[idx] as f64;
+            }
+        }
+    }
+    acc
+}
+
+/// Nearest-neighbor periodic lookup (label warping for DICE).
+pub fn sample_nearest(labels: &[u16], n: usize, q: [f64; 3]) -> u16 {
+    let i = wrap(q[0].round() as isize, n);
+    let j = wrap(q[1].round() as isize, n);
+    let k = wrap(q[2].round() as isize, n);
+    labels[(i * n + j) * n + k]
+}
+
+/// Evaluate `sin(w x3) + cos(w x3)` on the grid (the paper's Fig-2 probe).
+pub fn fig2_probe(n: usize, omega: f64) -> Vec<f32> {
+    let mut f = vec![0f32; n * n * n];
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let x3 = 2.0 * PI * k as f64 / n as f64;
+                f[(i * n + j) * n + k] = ((omega * x3).sin() + (omega * x3).cos()) as f32;
+            }
+        }
+    }
+    f
+}
+
+/// Analytic x3-derivative of the Fig-2 probe.
+pub fn fig2_probe_deriv(n: usize, omega: f64) -> Vec<f32> {
+    let mut f = vec![0f32; n * n * n];
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let x3 = 2.0 * PI * k as f64 / n as f64;
+                f[(i * n + j) * n + k] = (omega * ((omega * x3).cos() - (omega * x3).sin())) as f32;
+            }
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fd8_exact_on_low_frequency() {
+        // FD8 differentiates low-frequency trig almost exactly.
+        let n = 16;
+        let h = 2.0 * PI / n as f64;
+        let f = fig2_probe(n, 2.0);
+        let want = fig2_probe_deriv(n, 2.0);
+        let got = fd8_partial(&f, n, 2, h);
+        for (a, b) in got.iter().zip(&want) {
+            // 8th-order truncation at (omega*h) ~ 0.79 leaves ~4e-4.
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fd8_error_grows_with_frequency() {
+        let n = 32;
+        let h = 2.0 * PI / n as f64;
+        let err = |omega: f64| {
+            let f = fig2_probe(n, omega);
+            let want = fig2_probe_deriv(n, omega);
+            let got = fd8_partial(&f, n, 2, h);
+            crate::math::stats::rel_l2(&got, &want)
+        };
+        // Paper Fig 2: FD error increases toward the Nyquist frequency.
+        assert!(err(2.0) < err(8.0) && err(8.0) < err(14.0));
+    }
+
+    #[test]
+    fn fd8_constant_field_zero_derivative() {
+        let n = 8;
+        let f = vec![3.5f32; n * n * n];
+        let d = fd8_partial(&f, n, 1, 0.1);
+        assert!(d.iter().all(|&x| x.abs() < 1e-5));
+    }
+
+    #[test]
+    fn div_of_rotation_is_zero() {
+        // v = (-x2, x1, 0) as periodic trig analog: v = (-sin x2, sin x1, 0)
+        // has zero divergence.
+        let n = 16;
+        let h = 2.0 * PI / n as f64;
+        let m = n * n * n;
+        let mut v = vec![0f32; 3 * m];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let x1 = 2.0 * PI * i as f64 / n as f64;
+                    let x2 = 2.0 * PI * j as f64 / n as f64;
+                    v[(i * n + j) * n + k] = -(x2.sin()) as f32;
+                    v[m + (i * n + j) * n + k] = x1.sin() as f32;
+                }
+            }
+        }
+        let d = fd8_div(&v, n, h);
+        assert!(d.iter().all(|&x| x.abs() < 1e-5));
+    }
+
+    #[test]
+    fn trilinear_exact_at_nodes_and_affine() {
+        prop::check_msg(
+            prop::Config { cases: 32, seed: 20 },
+            |r| {
+                let n = 8usize;
+                let q = [
+                    r.uniform_in(-8.0, 16.0),
+                    r.uniform_in(-8.0, 16.0),
+                    r.uniform_in(-8.0, 16.0),
+                ];
+                (n, q)
+            },
+            |&(n, q)| {
+                // Constant field: interpolation is exact everywhere.
+                let f = vec![2.5f32; n * n * n];
+                let v = interp_linear_at(&f, n, q);
+                if (v - 2.5).abs() > 1e-6 {
+                    return Err(format!("constant broken: {v}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cubic_partition_of_unity() {
+        let mut r = Rng::new(21);
+        for _ in 0..64 {
+            let t = r.uniform();
+            let w = lagrange_weights(t);
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cubic_reproduces_cubics_1d() {
+        // Cubic Lagrange reproduces polynomials of degree <= 3 away from
+        // wrap effects: test on f(k) = k^3 within the interior.
+        let n = 16;
+        let mut f = vec![0f32; n * n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    f[(i * n + j) * n + k] = (k * k * k) as f32;
+                }
+            }
+        }
+        for &t in &[4.25, 7.5, 9.75] {
+            let v = interp_cubic_at(&f, n, [5.0, 5.0, t]);
+            assert!((v - t * t * t).abs() < 1e-3, "{v} vs {}", t * t * t);
+        }
+    }
+
+    #[test]
+    fn interp_at_grid_points_is_identity() {
+        let mut r = Rng::new(22);
+        let n = 8;
+        let f: Vec<f32> = (0..n * n * n).map(|_| r.uniform_f32(-1.0, 1.0)).collect();
+        for _ in 0..32 {
+            let i = r.below(n as u64) as usize;
+            let j = r.below(n as u64) as usize;
+            let k = r.below(n as u64) as usize;
+            let q = [i as f64, j as f64, k as f64];
+            let want = f[(i * n + j) * n + k] as f64;
+            assert!((interp_linear_at(&f, n, q) - want).abs() < 1e-6);
+            assert!((interp_cubic_at(&f, n, q) - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nearest_sample_wraps() {
+        let n = 4;
+        let mut labels = vec![0u16; n * n * n];
+        labels[0] = 7;
+        assert_eq!(sample_nearest(&labels, n, [4.0, 0.1, -0.2]), 7);
+    }
+}

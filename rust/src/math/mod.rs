@@ -1,0 +1,5 @@
+//! Numerical substrates: FFT oracle, pure-Rust kernel references, stats.
+
+pub mod fft;
+pub mod kernels_ref;
+pub mod stats;

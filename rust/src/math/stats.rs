@@ -1,0 +1,79 @@
+//! Small statistics helpers used by metrics and benches.
+
+/// Min / mean / max summary of a slice (paper Table 7 reports these for
+/// the determinant of the deformation gradient).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f32]) -> Summary {
+        assert!(!xs.is_empty());
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        for &x in xs {
+            let x = x as f64;
+            min = min.min(x);
+            max = max.max(x);
+            sum += x;
+        }
+        Summary { min, mean: sum / xs.len() as f64, max }
+    }
+}
+
+/// Percentile (nearest-rank) of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Relative L2 difference ||a-b|| / ||b||.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 50.0), 3.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn rel_l2_zero_for_equal() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert_eq!(rel_l2(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_l2_scales() {
+        let a = [2.0f32, 0.0];
+        let b = [1.0f32, 0.0];
+        assert!((rel_l2(&a, &b) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,80 @@
+//! Regularization-parameter continuation (paper section 4.1.2; detailed in
+//! Mang & Biros, SIIMS 2015).
+//!
+//! CLAIRE does not solve directly at the small target beta: it starts from
+//! a strongly regularized problem and reduces beta geometrically, warm-
+//! starting each level from the previous solution. Intermediate levels run
+//! to a loose gradient tolerance; only the final (target) level uses the
+//! paper's convergence criteria.
+
+/// One continuation level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Level {
+    pub beta: f64,
+    /// Relative gradient tolerance for this level.
+    pub gtol_rel: f64,
+    /// Gauss-Newton iteration cap for this level.
+    pub max_iter: usize,
+}
+
+/// Build the beta schedule from `beta_init` down to `beta_target` dividing
+/// by `step` per level. The final level carries the target tolerances.
+pub fn schedule(
+    beta_init: f64,
+    beta_target: f64,
+    step: f64,
+    level_gtol: f64,
+    level_max_iter: usize,
+    final_gtol: f64,
+    final_max_iter: usize,
+) -> Vec<Level> {
+    assert!(beta_target > 0.0 && step > 1.0);
+    let mut levels = Vec::new();
+    let mut beta = beta_init;
+    while beta > beta_target * (1.0 + 1e-12) {
+        levels.push(Level { beta, gtol_rel: level_gtol, max_iter: level_max_iter });
+        beta /= step;
+    }
+    levels.push(Level { beta: beta_target, gtol_rel: final_gtol, max_iter: final_max_iter });
+    levels
+}
+
+/// The default CLAIRE-style schedule for a target beta (paper: target
+/// beta = 5e-4 with continuation; gradient tolerance 5e-2; <= 50 GN iters).
+pub fn default_schedule(beta_target: f64) -> Vec<Level> {
+    schedule(1e-1, beta_target, 10.0, 2.5e-1, 5, 5e-2, 50)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_reaches_target() {
+        let levels = default_schedule(5e-4);
+        assert_eq!(levels.last().unwrap().beta, 5e-4);
+        assert_eq!(levels.last().unwrap().gtol_rel, 5e-2);
+        assert_eq!(levels.last().unwrap().max_iter, 50);
+        // 1e-1, 1e-2, 1e-3, then 5e-4
+        assert_eq!(levels.len(), 4);
+        for w in levels.windows(2) {
+            assert!(w[1].beta < w[0].beta);
+        }
+    }
+
+    #[test]
+    fn target_above_init_is_single_level() {
+        let levels = schedule(1e-1, 0.5, 10.0, 0.25, 5, 5e-2, 50);
+        assert_eq!(levels.len(), 1);
+        assert_eq!(levels[0].beta, 0.5);
+    }
+
+    #[test]
+    fn exact_decade_has_no_duplicate_target() {
+        let levels = schedule(1e-1, 1e-3, 10.0, 0.25, 5, 5e-2, 50);
+        let betas: Vec<f64> = levels.iter().map(|l| l.beta).collect();
+        // 1e-1, 1e-2 as intermediates, then the 1e-3 target exactly once.
+        assert_eq!(betas.len(), 3);
+        assert!((betas[2] - 1e-3).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,136 @@
+//! Armijo backtracking line search (paper: Gauss-Newton globalized with an
+//! Armijo line search; Nocedal & Wright section 3.1).
+
+use crate::error::{Error, Result};
+
+/// Line search options.
+#[derive(Clone, Copy, Debug)]
+pub struct ArmijoOptions {
+    /// Sufficient-decrease constant c1.
+    pub c1: f64,
+    /// Backtracking factor.
+    pub shrink: f64,
+    /// Maximum trial steps.
+    pub max_trials: usize,
+    /// Upper bound for forward expansion. With the default 1.0 the search
+    /// is pure backtracking from alpha = 1 (Newton-style). First-order
+    /// methods whose directions are not naturally unit-scaled (L-BFGS with
+    /// stale curvature, plain GD) set this larger: when alpha = 1 is
+    /// accepted immediately, the step doubles while the sufficient-decrease
+    /// condition keeps improving.
+    pub max_alpha: f64,
+}
+
+impl Default for ArmijoOptions {
+    fn default() -> Self {
+        ArmijoOptions { c1: 1e-4, shrink: 0.5, max_trials: 24, max_alpha: 1.0 }
+    }
+}
+
+impl ArmijoOptions {
+    /// Variant with forward expansion enabled (first-order baselines).
+    pub fn expanding() -> Self {
+        ArmijoOptions { max_alpha: 1024.0, ..Default::default() }
+    }
+}
+
+/// Outcome of a line search.
+#[derive(Clone, Copy, Debug)]
+pub struct LineSearchResult {
+    pub alpha: f64,
+    pub j_new: f64,
+    pub evals: usize,
+}
+
+/// Backtrack from alpha=1 until `J(v + alpha dv) <= J + c1 alpha <g, dv>`.
+///
+/// `eval(alpha)` returns the objective at the trial point (one artifact
+/// call per trial). `gdx` must be the directional derivative `<g, dv>`
+/// (negative for a descent direction).
+pub fn armijo<F>(j0: f64, gdx: f64, opts: ArmijoOptions, mut eval: F) -> Result<LineSearchResult>
+where
+    F: FnMut(f64) -> Result<f64>,
+{
+    if gdx >= 0.0 {
+        return Err(Error::Solver(format!(
+            "line search requires a descent direction (<g,dv> = {gdx:.3e} >= 0)"
+        )));
+    }
+    let mut alpha = 1.0f64;
+    for trial in 0..opts.max_trials {
+        let j = eval(alpha)?;
+        if j.is_finite() && j <= j0 + opts.c1 * alpha * gdx {
+            let mut best = LineSearchResult { alpha, j_new: j, evals: trial + 1 };
+            if trial == 0 {
+                // Forward expansion: keep doubling while the Armijo bound
+                // holds at the larger step AND the value keeps improving.
+                let mut next = alpha * 2.0;
+                while next <= opts.max_alpha && best.evals < opts.max_trials {
+                    let jn = eval(next)?;
+                    best.evals += 1;
+                    if jn.is_finite()
+                        && jn <= j0 + opts.c1 * next * gdx
+                        && jn < best.j_new
+                    {
+                        best.alpha = next;
+                        best.j_new = jn;
+                        next *= 2.0;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            return Ok(best);
+        }
+        alpha *= opts.shrink;
+    }
+    Err(Error::Solver(format!(
+        "Armijo line search failed after {} trials (J0={j0:.6e}, <g,dv>={gdx:.3e})",
+        opts.max_trials
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_step_accepted_on_quadratic() {
+        // J(a) = (1-a)^2, J0 = 1, gdx = -2: alpha=1 gives 0 <= 1 - 2e-4.
+        let res = armijo(1.0, -2.0, ArmijoOptions::default(), |a| Ok((1.0 - a).powi(2))).unwrap();
+        assert_eq!(res.alpha, 1.0);
+        assert_eq!(res.evals, 1);
+    }
+
+    #[test]
+    fn backtracks_on_overshoot() {
+        // J(a) = (1 - 4a)^2: full step increases J; needs backtracking.
+        let res = armijo(1.0, -8.0, ArmijoOptions::default(), |a| Ok((1.0 - 4.0 * a).powi(2)))
+            .unwrap();
+        assert!(res.alpha < 1.0);
+        assert!(res.j_new < 1.0);
+    }
+
+    #[test]
+    fn rejects_ascent_direction() {
+        assert!(armijo(1.0, 0.5, ArmijoOptions::default(), |_| Ok(0.0)).is_err());
+    }
+
+    #[test]
+    fn fails_cleanly_when_no_decrease() {
+        let res = armijo(1.0, -1.0, ArmijoOptions { max_trials: 5, ..Default::default() }, |_| {
+            Ok(2.0)
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn nan_objective_rejected() {
+        // NaN trial values must not be accepted (CFL blowup guard).
+        let res = armijo(1.0, -2.0, ArmijoOptions::default(), |a| {
+            Ok(if a > 0.1 { f64::NAN } else { 0.5 })
+        })
+        .unwrap();
+        assert!(res.alpha <= 0.1);
+    }
+}

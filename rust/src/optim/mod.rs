@@ -1,0 +1,12 @@
+//! Optimization algorithms: the Gauss-Newton-Krylov machinery of Algorithm
+//! 2.1 plus the first-order baselines used in the paper's comparisons.
+
+pub mod continuation;
+pub mod first_order;
+pub mod line_search;
+pub mod pcg;
+
+pub use continuation::{default_schedule, Level};
+pub use first_order::{gradient_descent, lbfgs, FoOptions, FoTrace, Oracle};
+pub use line_search::{armijo, ArmijoOptions, LineSearchResult};
+pub use pcg::{PcgOptions, PcgResult, PcgStop};

@@ -1,0 +1,160 @@
+//! Registration quality metrics (paper section 4.1.3): relative mismatch,
+//! DICE overlap of label maps, and determinant-of-deformation-gradient
+//! statistics.
+
+use crate::math::kernels_ref::sample_nearest;
+use crate::math::stats::Summary;
+
+/// DICE coefficient between the *unions* of foreground labels, as used by
+/// the paper for the NIREP gray-matter masks: 2|A and B| / (|A| + |B|).
+pub fn dice_union(a: &[u16], b: &[u16]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut inter = 0usize;
+    let mut na = 0usize;
+    let mut nb = 0usize;
+    for (&x, &y) in a.iter().zip(b) {
+        let fa = x != 0;
+        let fb = y != 0;
+        na += fa as usize;
+        nb += fb as usize;
+        inter += (fa && fb) as usize;
+    }
+    if na + nb == 0 {
+        return 1.0;
+    }
+    2.0 * inter as f64 / (na + nb) as f64
+}
+
+/// Mean per-label DICE over the labels present in either map.
+pub fn dice_per_label(a: &[u16], b: &[u16], num_labels: u16) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut inter = vec![0usize; num_labels as usize + 1];
+    let mut ca = vec![0usize; num_labels as usize + 1];
+    let mut cb = vec![0usize; num_labels as usize + 1];
+    for (&x, &y) in a.iter().zip(b) {
+        ca[x as usize] += 1;
+        cb[y as usize] += 1;
+        if x == y {
+            inter[x as usize] += 1;
+        }
+    }
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for l in 1..=num_labels as usize {
+        if ca[l] + cb[l] > 0 {
+            sum += 2.0 * inter[l] as f64 / (ca[l] + cb[l]) as f64;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        1.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Warp a label map through the deformation map `y` (grid-unit coordinates,
+/// `[3, N^3]` layout) with nearest-neighbor lookup: the paper resamples
+/// label maps with nearest-neighbor interpolation.
+pub fn warp_labels(labels: &[u16], n: usize, ymap: &[f32]) -> Vec<u16> {
+    let m = n * n * n;
+    assert_eq!(labels.len(), m);
+    assert_eq!(ymap.len(), 3 * m);
+    let mut out = vec![0u16; m];
+    for idx in 0..m {
+        let q = [ymap[idx] as f64, ymap[m + idx] as f64, ymap[2 * m + idx] as f64];
+        out[idx] = sample_nearest(labels, n, q);
+    }
+    out
+}
+
+/// det F statistics (paper Table 7 columns min/mean/max).
+pub fn detf_summary(detf: &[f32]) -> Summary {
+    Summary::of(detf)
+}
+
+/// Fraction of voxels with non-positive Jacobian determinant (a map is
+/// locally non-diffeomorphic where det F <= 0).
+pub fn nondiffeo_fraction(detf: &[f32]) -> f64 {
+    detf.iter().filter(|&&x| x <= 0.0).count() as f64 / detf.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dice_identical_is_one() {
+        let a = vec![0u16, 1, 2, 1];
+        assert_eq!(dice_union(&a, &a), 1.0);
+        assert_eq!(dice_per_label(&a, &a, 2), 1.0);
+    }
+
+    #[test]
+    fn dice_disjoint_is_zero() {
+        let a = vec![1u16, 1, 0, 0];
+        let b = vec![0u16, 0, 1, 1];
+        assert_eq!(dice_union(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn dice_half_overlap() {
+        let a = vec![1u16, 1, 0, 0];
+        let b = vec![1u16, 0, 0, 0];
+        // 2*1 / (2+1)
+        assert!((dice_union(&a, &b) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dice_empty_maps() {
+        let a = vec![0u16; 8];
+        assert_eq!(dice_union(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn warp_identity_map_is_noop() {
+        let n = 4;
+        let m = n * n * n;
+        let labels: Vec<u16> = (0..m as u16).collect();
+        let mut ymap = vec![0f32; 3 * m];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let idx = (i * n + j) * n + k;
+                    ymap[idx] = i as f32;
+                    ymap[m + idx] = j as f32;
+                    ymap[2 * m + idx] = k as f32;
+                }
+            }
+        }
+        assert_eq!(warp_labels(&labels, n, &ymap), labels);
+    }
+
+    #[test]
+    fn warp_shift_by_one() {
+        let n = 4;
+        let m = n * n * n;
+        let mut labels = vec![0u16; m];
+        labels[(1 * n + 0) * n + 0] = 9; // at (1,0,0)
+        // y(x) = x + e1: value at (0,0,0) comes from (1,0,0).
+        let mut ymap = vec![0f32; 3 * m];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let idx = (i * n + j) * n + k;
+                    ymap[idx] = (i + 1) as f32;
+                    ymap[m + idx] = j as f32;
+                    ymap[2 * m + idx] = k as f32;
+                }
+            }
+        }
+        let w = warp_labels(&labels, n, &ymap);
+        assert_eq!(w[0], 9);
+    }
+
+    #[test]
+    fn nondiffeo_fraction_counts() {
+        let d = [1.0f32, -0.5, 0.0, 2.0];
+        assert!((nondiffeo_fraction(&d) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Registration layer: problem definition, the Gauss-Newton-Krylov solver
+//! over the AOT artifacts, baselines, metrics, and performance models.
+
+pub mod baseline;
+pub mod intensity;
+pub mod metrics;
+pub mod problem;
+pub mod report;
+pub mod solver;
+
+pub use baseline::{run_baseline, BaselineKind, BaselineResult};
+pub use problem::{RegParams, RegProblem};
+pub use report::RunReport;
+pub use solver::{GnSolver, IterRecord, RegResult};

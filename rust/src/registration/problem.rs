@@ -1,0 +1,100 @@
+//! Registration problem definition and solver parameters.
+
+use crate::field::Field3;
+
+/// Solver parameters (defaults follow the paper, section 4.1.2).
+#[derive(Clone, Debug)]
+pub struct RegParams {
+    /// Kernel variant tag (paper Table 6 analog; see model.py VARIANTS).
+    pub variant: String,
+    /// Target regularization weight (paper: 5e-4).
+    pub beta: f64,
+    /// Divergence penalty (paper: 1e-4).
+    pub gamma: f64,
+    /// Relative gradient tolerance (paper: 5e-2).
+    pub gtol: f64,
+    /// Max Gauss-Newton iterations at the target level (paper: 50).
+    pub max_iter: usize,
+    /// Max PCG iterations per Newton step (paper: 500).
+    pub max_krylov: usize,
+    /// Run the beta continuation schedule (paper default: yes).
+    pub continuation: bool,
+    /// Project iterates onto divergence-free fields (Leray projection):
+    /// the incompressible-flow extension of the CLAIRE formulation. The
+    /// default H1-div model penalizes divergence via gamma instead.
+    pub incompressible: bool,
+    /// Print per-iteration progress.
+    pub verbose: bool,
+}
+
+impl Default for RegParams {
+    fn default() -> Self {
+        RegParams {
+            variant: "opt-fd8-cubic".into(),
+            beta: 5e-4,
+            gamma: 1e-4,
+            gtol: 5e-2,
+            max_iter: 50,
+            max_krylov: 500,
+            continuation: true,
+            incompressible: false,
+            verbose: false,
+        }
+    }
+}
+
+/// One registration instance: reference (fixed) and template (moving)
+/// images, optional label maps for DICE evaluation.
+#[derive(Clone, Debug)]
+pub struct RegProblem {
+    pub name: String,
+    /// Template image m0 (to be deformed).
+    pub m0: Field3,
+    /// Reference image m1.
+    pub m1: Field3,
+    /// Label maps aligned with m0 / m1 (for DICE; 0 = background).
+    pub labels0: Option<Vec<u16>>,
+    pub labels1: Option<Vec<u16>>,
+}
+
+impl RegProblem {
+    pub fn n(&self) -> usize {
+        self.m0.n
+    }
+
+    pub fn new(name: impl Into<String>, m0: Field3, m1: Field3) -> Self {
+        assert_eq!(m0.n, m1.n, "image sizes must match");
+        RegProblem { name: name.into(), m0, m1, labels0: None, labels1: None }
+    }
+
+    pub fn with_labels(mut self, l0: Vec<u16>, l1: Vec<u16>) -> Self {
+        assert_eq!(l0.len(), self.m0.len());
+        assert_eq!(l1.len(), self.m1.len());
+        self.labels0 = Some(l0);
+        self.labels1 = Some(l1);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = RegParams::default();
+        assert_eq!(p.beta, 5e-4);
+        assert_eq!(p.gamma, 1e-4);
+        assert_eq!(p.gtol, 5e-2);
+        assert_eq!(p.max_iter, 50);
+        assert_eq!(p.max_krylov, 500);
+        assert!(p.continuation);
+        assert!(!p.incompressible);
+    }
+
+    #[test]
+    #[should_panic(expected = "image sizes must match")]
+    fn size_mismatch_rejected() {
+        RegProblem::new("x", Field3::zeros(4), Field3::zeros(8));
+    }
+}

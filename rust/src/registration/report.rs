@@ -1,0 +1,85 @@
+//! Full run report: one paper-Table-7 row with quality metrics attached.
+
+use crate::error::Result;
+use crate::math::stats::Summary;
+use crate::registration::metrics::{dice_union, nondiffeo_fraction, warp_labels};
+use crate::registration::problem::RegProblem;
+use crate::registration::solver::{GnSolver, RegResult};
+
+/// Everything the paper reports per registration run (Table 7 columns).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub dataset: String,
+    pub variant: String,
+    pub n: usize,
+    pub detf: Summary,
+    pub nondiffeo_frac: f64,
+    pub dice_before: Option<f64>,
+    pub dice_after: Option<f64>,
+    pub mismatch_rel: f64,
+    pub grad_rel: f64,
+    pub iters: usize,
+    pub matvecs: usize,
+    pub time_s: f64,
+    pub converged: bool,
+}
+
+impl RunReport {
+    /// Assemble the report from a solve result: runs defmap/detf artifacts
+    /// and warps labels for DICE if present.
+    pub fn build(solver: &GnSolver, prob: &RegProblem, res: &RegResult) -> Result<RunReport> {
+        let n = prob.n();
+        let detf_field = solver.detf(&res.v)?;
+        let detf = Summary::of(&detf_field);
+        let nondiffeo = nondiffeo_fraction(&detf_field);
+        let (mut dice_before, mut dice_after) = (None, None);
+        if let (Some(l0), Some(l1)) = (&prob.labels0, &prob.labels1) {
+            dice_before = Some(dice_union(l0, l1));
+            // m(1,x) = m0(y(x)): warped template labels = l0 o y.
+            let ymap = solver.defmap(&res.v)?;
+            let warped = warp_labels(l0, n, &ymap);
+            dice_after = Some(dice_union(&warped, l1));
+        }
+        Ok(RunReport {
+            dataset: prob.name.clone(),
+            variant: solver.params.variant.clone(),
+            n,
+            detf,
+            nondiffeo_frac: nondiffeo,
+            dice_before,
+            dice_after,
+            mismatch_rel: res.mismatch_rel,
+            grad_rel: res.grad_rel,
+            iters: res.iters,
+            matvecs: res.matvecs,
+            time_s: res.time_s,
+            converged: res.converged,
+        })
+    }
+
+    /// Render as a paper-style table row.
+    pub fn row(&self) -> Vec<String> {
+        let fmt_opt = |o: Option<f64>| o.map(|d| format!("{d:.2}")).unwrap_or_else(|| "-".into());
+        vec![
+            self.variant.clone(),
+            self.dataset.clone(),
+            format!("{:.2}", self.detf.min),
+            format!("{:.2}", self.detf.mean),
+            format!("{:.2}", self.detf.max),
+            fmt_opt(self.dice_before),
+            fmt_opt(self.dice_after),
+            format!("{:.1e}", self.mismatch_rel),
+            format!("{:.1e}", self.grad_rel),
+            format!("{}", self.iters),
+            format!("{}", self.matvecs),
+            format!("{:.2}", self.time_s),
+        ]
+    }
+
+    pub fn headers() -> Vec<&'static str> {
+        vec![
+            "variant", "data", "detF.min", "detF.mean", "detF.max", "DICE.pre", "DICE.post",
+            "mism", "|g|rel", "#iter", "#MV", "time[s]",
+        ]
+    }
+}

@@ -1,0 +1,403 @@
+//! The Gauss-Newton-Krylov registration solver (paper Algorithm 2.1).
+//!
+//! The L3 coordinator owns the outer loops; all PDE work executes through
+//! the AOT artifacts:
+//!
+//! ```text
+//! for beta in continuation schedule:
+//!   loop (Newton):
+//!     newton_setup(v)          -> g, m_traj, yb, yf, divv, [J, msq, reg]
+//!     PCG on H dv = -g         -> hess_matvec(dv, caches) per iteration,
+//!                                 precond(r) spectral preconditioner
+//!     Armijo                   -> objective(v + alpha dv) per trial
+//!     v <- v + alpha dv
+//! ```
+//!
+//! The per-Newton-iteration caches (`m_traj`, characteristics, div v) are
+//! marshalled into XLA literals once and reused by every Hessian matvec of
+//! the PCG solve — the same amortization CLAIRE performs (section 2.2.3).
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::field::{ops, VecField3};
+use crate::optim::line_search::{armijo, ArmijoOptions};
+use crate::optim::pcg::{self, PcgOptions, PcgStop};
+use crate::optim::{continuation, Level};
+use crate::registration::problem::{RegParams, RegProblem};
+use crate::runtime::OpRegistry;
+
+/// Record of one Gauss-Newton iteration (drives convergence tables/plots).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub level_beta: f64,
+    pub j: f64,
+    pub mismatch_rel: f64,
+    pub grad_rel: f64,
+    pub cg_iters: usize,
+    pub alpha: f64,
+}
+
+/// Full result of one registration solve (paper Table 7 row material).
+#[derive(Clone, Debug)]
+pub struct RegResult {
+    pub v: VecField3,
+    pub iters: usize,
+    pub matvecs: usize,
+    pub obj_evals: usize,
+    pub j: f64,
+    /// ||m(1) - m1|| / ||m0 - m1||.
+    pub mismatch_rel: f64,
+    /// ||g*|| / ||g0|| with g0 the gradient at v = 0 for the target beta.
+    pub grad_rel: f64,
+    pub history: Vec<IterRecord>,
+    pub time_s: f64,
+    pub converged: bool,
+}
+
+/// Gauss-Newton-Krylov solver bound to an operator registry.
+pub struct GnSolver<'a> {
+    pub reg: &'a OpRegistry,
+    pub params: RegParams,
+}
+
+impl<'a> GnSolver<'a> {
+    pub fn new(reg: &'a OpRegistry, params: RegParams) -> Self {
+        GnSolver { reg, params }
+    }
+
+    /// Compile (or fetch cached) the operators this solve needs. Returns
+    /// the wall time spent compiling. XLA compilation is a one-time,
+    /// per-process cost (the analog of CLAIRE's CUDA build step, which the
+    /// paper's runtimes also exclude); `solve` reports pure solver time.
+    pub fn precompile(&self, n: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        for op in ["newton_setup", "hess_matvec", "objective", "precond"] {
+            self.reg.get(op, &self.params.variant, n)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Run the full solve (with continuation if enabled).
+    pub fn solve(&self, prob: &RegProblem) -> Result<RegResult> {
+        self.solve_from(prob, None)
+    }
+
+    /// Run the solve from an optional warm-start velocity (grid
+    /// continuation hands the prolonged coarse solution in here).
+    pub fn solve_from(&self, prob: &RegProblem, v0: Option<VecField3>) -> Result<RegResult> {
+        let n = prob.n();
+        let p = &self.params;
+        let setup = self.reg.get("newton_setup", &p.variant, n)?;
+        let hess = self.reg.get("hess_matvec", &p.variant, n)?;
+        let obj = self.reg.get("objective", &p.variant, n)?;
+        let prec = self.reg.get("precond", &p.variant, n)?;
+        let leray = if p.incompressible {
+            Some(self.reg.get("leray", &p.variant, n)?)
+        } else {
+            None
+        };
+        let t0 = Instant::now();
+
+        let m0 = &prob.m0.data;
+        let m1 = &prob.m1.data;
+        let msq0 = ops::sumsq_diff(m0, m1).max(1e-300);
+
+        let levels: Vec<Level> = if p.continuation {
+            continuation::default_schedule(p.beta)
+        } else {
+            vec![Level { beta: p.beta, gtol_rel: p.gtol, max_iter: p.max_iter }]
+        };
+
+        let mut v = match v0 {
+            Some(v0) => {
+                assert_eq!(v0.n, n, "warm start resolution mismatch");
+                v0
+            }
+            None => VecField3::zeros(n),
+        };
+        let mut history: Vec<IterRecord> = Vec::new();
+        let mut matvecs = 0usize;
+        let mut obj_evals = 0usize;
+        let mut iters = 0usize;
+        let mut final_state = (f64::NAN, f64::NAN, f64::NAN); // (J, mism, grel)
+        let mut converged = false;
+        // Reference gradient norm ||g0|| at v = 0 with the *target* beta:
+        // the paper's convergence metric (||g*|| / ||g0||, g0 at the
+        // initial guess v = 0). One extra setup call, reused as the first
+        // iteration's gradient when there is no continuation.
+        let g0_target: f64 = {
+            let bg = [p.beta as f32, p.gamma as f32];
+            let outs = setup.call(&[&v.data, m0, m1, &bg])?;
+            ops::norm2(&outs[0]).max(1e-300)
+        };
+
+        for (li, level) in levels.iter().enumerate() {
+            let is_final = li == levels.len() - 1;
+            let bg = [level.beta as f32, p.gamma as f32];
+            let mut g0_level: Option<f64> = None;
+
+            for _it in 0..level.max_iter {
+                // -- Newton setup: gradient + caches -----------------------
+                let outs = setup.call(&[&v.data, m0, m1, &bg])?;
+                let [g, m_traj, yb, yf, divv, scalars] = match <[Vec<f32>; 6]>::try_from(outs) {
+                    Ok(a) => a,
+                    Err(_) => return Err(Error::Solver("newton_setup arity".into())),
+                };
+                let j = scalars[0] as f64;
+                let msq = scalars[1] as f64;
+                let mism = (msq / (prob.m0.h().powi(3) * msq0)).sqrt();
+                let gnorm = ops::norm2(&g);
+                let g0 = *g0_level.get_or_insert(gnorm);
+                // Intermediate levels converge relative to their own entry
+                // gradient; the final level uses the paper's metric.
+                let grel_target = gnorm / g0_target;
+                let grel =
+                    if is_final { grel_target } else { gnorm / g0.max(1e-300) };
+                final_state = (j, mism, grel_target);
+
+                if p.verbose {
+                    println!(
+                        "[gn] beta={:.1e} it={_it} J={j:.6e} mism={mism:.4} |g|rel={grel:.3e}",
+                        level.beta
+                    );
+                }
+                if grel <= level.gtol_rel {
+                    if is_final {
+                        converged = true;
+                    }
+                    break;
+                }
+
+                // -- PCG on the Gauss-Newton system ------------------------
+                // Literals for the caches are marshalled once per Newton
+                // iteration and shared across all matvecs of this solve.
+                let hess_lits = hess.literals(&[&vec![0f32; 3 * n * n * n], &m_traj, &yb, &yf, &divv, &bg])?;
+                let prec_lits = prec.literals(&[&vec![0f32; 3 * n * n * n], &bg])?;
+                let forcing = grel.sqrt().min(0.5); // superlinear forcing
+                let mut local_mv = 0usize;
+                let pcg_res = pcg::solve(
+                    &g.iter().map(|x| -x).collect::<Vec<f32>>(),
+                    PcgOptions { rtol: forcing, max_iter: p.max_krylov },
+                    |vt| {
+                        local_mv += 1;
+                        let outs = hess.call_mixed(&hess_lits, &[(0, vt)])?;
+                        Ok(outs.into_iter().next().unwrap())
+                    },
+                    |r| {
+                        let outs = prec.call_mixed(&prec_lits, &[(0, r)])?;
+                        Ok(outs.into_iter().next().unwrap())
+                    },
+                )?;
+                matvecs += local_mv;
+                if pcg_res.stop == PcgStop::NegativeCurvature && p.verbose {
+                    println!("[gn]   negative curvature after {} CG iters", pcg_res.iters);
+                }
+                let mut dv = pcg_res.x;
+                if let Some(lr) = &leray {
+                    // Incompressible extension: project the search
+                    // direction onto divergence-free fields. With v kept
+                    // divergence-free by induction (v0 = 0), the iterates
+                    // remain in the constraint manifold.
+                    dv = lr.call(&[&dv])?.remove(0);
+                }
+
+                // -- Armijo line search ------------------------------------
+                // The objective carries h^3 quadrature weights; the
+                // directional derivative of the discrete J along dv is
+                // h^3 <g, dv> (g is the function-space gradient field).
+                let h3 = prob.m0.h().powi(3);
+                let gdx = h3 * ops::dot(&g, &dv);
+                if gdx >= 0.0 {
+                    return Err(Error::Solver(format!(
+                        "PCG returned a non-descent direction (<g,dv>={gdx:.3e})"
+                    )));
+                }
+                let obj_lits = obj.literals(&[&v.data, m0, m1, &bg])?;
+                let mut trial = vec![0f32; v.data.len()];
+                let mut local_evals = 0usize;
+                let ls = armijo(j, gdx, ArmijoOptions::default(), |alpha| {
+                    local_evals += 1;
+                    ops::add_scaled(&v.data, alpha as f32, &dv, &mut trial);
+                    let outs = obj.call_mixed(&obj_lits, &[(0, &trial)])?;
+                    Ok(outs[0][0] as f64)
+                });
+                let ls = match ls {
+                    Ok(ls) => ls,
+                    Err(_) => {
+                        // No decrease achievable at f32 resolution: the
+                        // iterate is at the numerical floor for this level
+                        // (CLAIRE terminates the level the same way).
+                        if p.verbose {
+                            println!("[gn]   line search stagnated; ending level");
+                        }
+                        obj_evals += local_evals;
+                        if is_final {
+                            converged = grel <= 2.0 * level.gtol_rel;
+                        }
+                        break;
+                    }
+                };
+                obj_evals += local_evals;
+                ops::axpy(ls.alpha as f32, &dv, &mut v.data);
+                iters += 1;
+                history.push(IterRecord {
+                    level_beta: level.beta,
+                    j,
+                    mismatch_rel: mism,
+                    grad_rel: grel,
+                    cg_iters: pcg_res.iters,
+                    alpha: ls.alpha,
+                });
+                // Stagnation guard: stop the level when J no longer moves
+                // at f32-resolvable scale.
+                if history.len() >= 2 {
+                    let prev = &history[history.len() - 2];
+                    if prev.level_beta == level.beta
+                        && (prev.j - j).abs() <= 1e-6 * j.abs().max(1e-12)
+                    {
+                        if is_final {
+                            converged = grel <= 2.0 * level.gtol_rel;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+
+        let (j, mismatch_rel, grad_rel) = final_state;
+        Ok(RegResult {
+            v,
+            iters,
+            matvecs,
+            obj_evals,
+            j,
+            mismatch_rel,
+            grad_rel,
+            history,
+            time_s: t0.elapsed().as_secs_f64(),
+            converged,
+        })
+    }
+
+    /// Compute the deformation map y (grid units) for a solved velocity.
+    pub fn defmap(&self, v: &VecField3) -> Result<Vec<f32>> {
+        let op = self.reg.get("defmap", &self.params.variant, v.n)?;
+        Ok(op.call(&[&v.data])?.remove(0))
+    }
+
+    /// Determinant of the deformation gradient field.
+    pub fn detf(&self, v: &VecField3) -> Result<Vec<f32>> {
+        let op = self.reg.get("detf", &self.params.variant, v.n)?;
+        Ok(op.call(&[&v.data])?.remove(0))
+    }
+
+    /// Transport an arbitrary scalar field with the solved velocity.
+    pub fn transport(&self, v: &VecField3, f: &[f32]) -> Result<Vec<f32>> {
+        let op = self.reg.get("transport", &self.params.variant, v.n)?;
+        Ok(op.call(&[&v.data, f])?.remove(0))
+    }
+
+    /// Grid continuation (CLAIRE's multi-resolution scheme): restrict the
+    /// images down a pyramid of factor-2 levels, solve coarse-to-fine and
+    /// prolong the velocity spectrally between levels. `levels` is the
+    /// number of grid levels including the finest (e.g. 3 for 16-32-64).
+    ///
+    /// The coarse levels run with loose tolerances (they only produce warm
+    /// starts); the finest level uses the configured convergence criteria.
+    pub fn solve_multires(&self, prob: &RegProblem, levels: usize) -> Result<RegResult> {
+        let n_fine = prob.n();
+        assert!(levels >= 1);
+        // Compile every level's operators up front so the reported solve
+        // time is pure solver time (same convention as `solve`).
+        // A coarser level is only usable if solver artifacts exist for it.
+        let can_descend = |n: usize| -> bool {
+            n % 2 == 0
+                && self.reg.manifest.find("newton_setup", &self.params.variant, n / 2).is_ok()
+                && self.reg.manifest.find("restrict2x", &self.params.variant, n).is_ok()
+                && self.reg.manifest.find("upsample2x", &self.params.variant, n / 2).is_ok()
+        };
+        {
+            let mut n = n_fine;
+            for li in 0..levels {
+                self.precompile(n)?;
+                if li + 1 < levels && can_descend(n) {
+                    self.reg.get("restrict2x", &self.params.variant, n)?;
+                    self.reg.get("upsample2x", &self.params.variant, n / 2)?;
+                    n /= 2;
+                } else {
+                    break;
+                }
+            }
+        }
+        let t0 = Instant::now();
+        // Build the image pyramid via the spectral restriction operator.
+        let mut pyramid: Vec<RegProblem> = vec![prob.clone()];
+        for _ in 1..levels {
+            let cur = pyramid.last().unwrap();
+            let n = cur.n();
+            if !can_descend(n) {
+                break;
+            }
+            let restrict = self.reg.get("restrict2x", &self.params.variant, n)?;
+            let m0 = restrict.call(&[&cur.m0.data])?.remove(0);
+            let m1 = restrict.call(&[&cur.m1.data])?.remove(0);
+            pyramid.push(RegProblem::new(
+                format!("{}@{}", prob.name, n / 2),
+                crate::field::Field3::from_vec(n / 2, m0)?,
+                crate::field::Field3::from_vec(n / 2, m1)?,
+            ));
+        }
+        pyramid.reverse(); // coarse to fine
+
+        let mut v: Option<VecField3> = None;
+        let mut total = RegResult {
+            v: VecField3::zeros(n_fine),
+            iters: 0,
+            matvecs: 0,
+            obj_evals: 0,
+            j: f64::NAN,
+            mismatch_rel: f64::NAN,
+            grad_rel: f64::NAN,
+            history: Vec::new(),
+            time_s: 0.0,
+            converged: false,
+        };
+        for (li, p) in pyramid.iter().enumerate() {
+            let is_finest = li == pyramid.len() - 1;
+            let mut params = self.params.clone();
+            if !is_finest {
+                // Coarse levels: loose gradient tolerance, few iterations.
+                params.gtol = (params.gtol * 4.0).min(0.5);
+                params.max_iter = params.max_iter.min(10);
+            }
+            if li > 0 {
+                // Warm-started levels go straight to the target beta; the
+                // beta continuation already happened on the coarsest level
+                // (running it again from beta_init would discard the warm
+                // start's progress).
+                params.continuation = false;
+            }
+            let level_solver = GnSolver::new(self.reg, params);
+            let mut res = level_solver.solve_from(p, v.take())?;
+            total.iters += res.iters;
+            total.matvecs += res.matvecs;
+            total.obj_evals += res.obj_evals;
+            total.history.append(&mut res.history);
+            if is_finest {
+                total.j = res.j;
+                total.mismatch_rel = res.mismatch_rel;
+                total.grad_rel = res.grad_rel;
+                total.converged = res.converged;
+                total.v = res.v;
+            } else {
+                // Prolong the velocity to the next level.
+                let up = self.reg.get("upsample2x", &self.params.variant, p.n())?;
+                let vd = up.call(&[&res.v.data])?.remove(0);
+                v = Some(VecField3::from_vec(p.n() * 2, vd)?);
+            }
+        }
+        total.time_s = t0.elapsed().as_secs_f64();
+        Ok(total)
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. No shapes are hard-coded in Rust; everything is read from
+//! `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One tensor signature (name, shape) of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One HLO artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub key: String,
+    pub file: PathBuf,
+    pub op: String,
+    pub variant: String,
+    pub n: usize,
+    pub nt: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub nt: usize,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Manifest("shape is not an array".into()))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| Error::Manifest("bad shape entry".into())))
+        .collect()
+}
+
+fn sigs_of(j: &Json, named: bool) -> Result<Vec<TensorSig>> {
+    let arr = j.as_arr().ok_or_else(|| Error::Manifest("signatures not an array".into()))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let name = if named {
+                e.get("name").and_then(Json::as_str).unwrap_or("").to_string()
+            } else {
+                format!("out{i}")
+            };
+            let shape =
+                shape_of(e.get("shape").ok_or_else(|| Error::Manifest("missing shape".into()))?)?;
+            Ok(TensorSig { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!("cannot read {} ({e}); run `make artifacts`", path.display()))
+        })?;
+        let root = Json::parse(&text)?;
+        let nt = root
+            .get("nt")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Manifest("missing nt".into()))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Manifest("missing artifacts map".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (key, entry) in arts {
+            let get_str = |k: &str| -> Result<String> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Manifest(format!("{key}: missing {k}")))
+            };
+            let art = Artifact {
+                key: key.clone(),
+                file: dir.join(get_str("file")?),
+                op: get_str("op")?,
+                variant: get_str("variant")?,
+                n: entry
+                    .get("n")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Manifest(format!("{key}: missing n")))?,
+                nt: entry.get("nt").and_then(Json::as_usize).unwrap_or(nt),
+                inputs: sigs_of(
+                    entry.get("inputs").ok_or_else(|| Error::Manifest("missing inputs".into()))?,
+                    true,
+                )?,
+                outputs: sigs_of(
+                    entry
+                        .get("outputs")
+                        .ok_or_else(|| Error::Manifest("missing outputs".into()))?,
+                    false,
+                )?,
+            };
+            artifacts.insert(key.clone(), art);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), nt, artifacts })
+    }
+
+    /// Find the artifact for (op, variant, n). Kernel-level and shared ops
+    /// are emitted under the default variant; fall back to any variant that
+    /// provides the op at this size.
+    pub fn find(&self, op: &str, variant: &str, n: usize) -> Result<&Artifact> {
+        let key = format!("{op}__{variant}__n{n}");
+        if let Some(a) = self.artifacts.get(&key) {
+            return Ok(a);
+        }
+        self.artifacts
+            .values()
+            .find(|a| a.op == op && a.n == n)
+            .ok_or_else(|| Error::ArtifactNotFound {
+                op: op.into(),
+                variant: variant.into(),
+                n,
+            })
+    }
+
+    /// All grid sizes present for a given op.
+    pub fn sizes_for(&self, op: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.values().filter(|a| a.op == op).map(|a| a.n).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// All variants present for a given (op, n).
+    pub fn variants_for(&self, op: &str, n: usize) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .values()
+            .filter(|a| a.op == op && a.n == n)
+            .map(|a| a.variant.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// Default artifacts directory: `$CLAIRE_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("CLAIRE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.nt, 4);
+        assert!(!m.artifacts.is_empty());
+        // Every artifact file referenced must exist.
+        for a in m.artifacts.values() {
+            assert!(a.file.exists(), "missing {}", a.file.display());
+        }
+    }
+
+    #[test]
+    fn find_and_fallback() {
+        let Some(dir) = manifest_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find("newton_setup", "opt-fd8-cubic", 16).unwrap();
+        assert_eq!(a.op, "newton_setup");
+        assert_eq!(a.inputs.len(), 4); // v, m0, m1, bg
+        assert_eq!(a.inputs[0].shape, vec![3, 16, 16, 16]);
+        // kernel op lowered only for the default variant: fallback works
+        let k = m.find("grad_fd8", "ref-fft-cubic", 16).unwrap();
+        assert_eq!(k.op, "grad_fd8");
+        // missing size errors
+        assert!(m.find("newton_setup", "opt-fd8-cubic", 1024).is_err());
+    }
+
+    #[test]
+    fn sizes_and_variants() {
+        let Some(dir) = manifest_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let sizes = m.sizes_for("newton_setup");
+        assert!(sizes.contains(&16));
+        let vars = m.variants_for("newton_setup", 16);
+        assert!(vars.iter().any(|v| v == "opt-fd8-cubic"));
+        assert!(vars.iter().any(|v| v == "ref-fft-cubic"));
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest-driven loading, compilation and execution of the
+//! AOT artifacts produced by `python/compile/aot.py`.
+
+pub mod manifest;
+pub mod operator;
+pub mod registry;
+
+pub use manifest::{Artifact, Manifest, TensorSig};
+pub use operator::{literal_f32, OpStats, Operator};
+pub use registry::OpRegistry;

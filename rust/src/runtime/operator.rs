@@ -1,0 +1,147 @@
+//! Compiled operator: an HLO artifact loaded, compiled on the PJRT CPU
+//! client, and callable with f32 host buffers.
+//!
+//! This is the runtime half of the AOT bridge (see /opt/xla-example): HLO
+//! *text* is parsed with `HloModuleProto::from_text_file` (the text parser
+//! reassigns the 64-bit instruction ids jax >= 0.5 emits, which
+//! xla_extension 0.5.1 would reject in proto form), compiled once, and
+//! executed from the solver hot loop. Python is never involved.
+
+use std::time::Instant;
+
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::Artifact;
+
+/// Runtime counters for one operator (drives the Fig 3/4 breakdowns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpStats {
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+/// A compiled, executable operator.
+pub struct Operator {
+    pub art: Artifact,
+    exe: PjRtLoadedExecutable,
+    stats: std::cell::Cell<OpStats>,
+}
+
+fn f32_bytes(xs: &[f32]) -> &[u8] {
+    // f32 -> u8 reinterpretation; alignment 4 -> 1 is always valid and the
+    // length is exact. Used to build XLA literals without copies.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let expected: usize = shape.iter().product();
+    if data.len() != expected {
+        return Err(Error::ShapeMismatch {
+            what: "literal".into(),
+            expected,
+            got: data.len(),
+        });
+    }
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, f32_bytes(data))?)
+}
+
+impl Operator {
+    /// Load + compile an artifact on the given client.
+    pub fn compile(client: &PjRtClient, art: &Artifact) -> Result<Operator> {
+        let proto = xla::HloModuleProto::from_text_file(&art.file)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Operator { art: art.clone(), exe, stats: Default::default() })
+    }
+
+    /// Execute with f32 slices in manifest input order; returns one Vec<f32>
+    /// per manifest output. Input shapes are validated against the manifest.
+    pub fn call(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let lits = self.literals(inputs)?;
+        self.call_literals(&lits)
+    }
+
+    /// Pre-build input literals (reusable across calls: the PCG loop reuses
+    /// the newton_setup caches for every matvec without re-marshalling).
+    pub fn literals(&self, inputs: &[&[f32]]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.art.inputs.len() {
+            return Err(Error::ShapeMismatch {
+                what: format!("{} inputs", self.art.key),
+                expected: self.art.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        self.art
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(sig, data)| literal_f32(&sig.shape, data))
+            .collect()
+    }
+
+    /// Execute with pre-built literals (borrowed; reusable).
+    pub fn call_literals(&self, lits: &[Literal]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<&Literal>(&lits.iter().collect::<Vec<_>>())?;
+        // aot.py lowers with return_tuple=True: one tuple buffer.
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.art.outputs.len() {
+            return Err(Error::ShapeMismatch {
+                what: format!("{} outputs", self.art.key),
+                expected: self.art.outputs.len(),
+                got: parts.len(),
+            });
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        let mut s = self.stats.get();
+        s.calls += 1;
+        s.total_s += t0.elapsed().as_secs_f64();
+        self.stats.set(s);
+        Ok(out)
+    }
+
+    /// Mixed-literal call where some inputs are cached literals and others
+    /// fresh slices: `inputs[i]` overrides cache position i when Some.
+    pub fn call_mixed(&self, cached: &[Literal], fresh: &[(usize, &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits: Vec<&Literal> = cached.iter().collect();
+        let mut owned: Vec<(usize, Literal)> = Vec::with_capacity(fresh.len());
+        for &(idx, data) in fresh {
+            let sig = self
+                .art
+                .inputs
+                .get(idx)
+                .ok_or_else(|| Error::Manifest(format!("input index {idx} out of range")))?;
+            owned.push((idx, literal_f32(&sig.shape, data)?));
+        }
+        for (idx, lit) in &owned {
+            lits[*idx] = lit;
+        }
+        let t0 = Instant::now();
+        let result = self.exe.execute::<&Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        let mut s = self.stats.get();
+        s.calls += 1;
+        s.total_s += t0.elapsed().as_secs_f64();
+        self.stats.set(s);
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> OpStats {
+        self.stats.get()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.set(OpStats::default());
+    }
+}

@@ -1,0 +1,134 @@
+//! Operator registry: lazy compilation cache over the artifact manifest.
+//!
+//! One PJRT client per process; operators compile on first use and are
+//! shared by reference afterwards (executables are stateless; the batch
+//! coordinator shares one registry across worker threads via `Mutex`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use xla::PjRtClient;
+
+use crate::error::Result;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::operator::Operator;
+
+/// Lazily compiled operator cache keyed by (op, variant, n).
+pub struct OpRegistry {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<Operator>>>,
+}
+
+impl OpRegistry {
+    /// Open the registry over an artifacts directory.
+    pub fn open(dir: &Path) -> Result<OpRegistry> {
+        let client = PjRtClient::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        Ok(OpRegistry { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Open at the default artifacts location.
+    pub fn open_default() -> Result<OpRegistry> {
+        Self::open(&crate::runtime::manifest::default_dir())
+    }
+
+    /// Get (compiling on first use) the operator for (op, variant, n).
+    pub fn get(&self, op: &str, variant: &str, n: usize) -> Result<Arc<Operator>> {
+        let art = self.manifest.find(op, variant, n)?.clone();
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(o) = cache.get(&art.key) {
+            return Ok(o.clone());
+        }
+        let compiled = Arc::new(Operator::compile(&self.client, &art)?);
+        cache.insert(art.key.clone(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Number of compiled operators currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_dir;
+
+    fn registry() -> Option<OpRegistry> {
+        let dir = default_dir();
+        dir.join("manifest.json").exists().then(|| OpRegistry::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn compile_and_cache() {
+        let Some(reg) = registry() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let a = reg.get("grad_fd8", "opt-fd8-cubic", 16).unwrap();
+        let b = reg.get("grad_fd8", "opt-fd8-cubic", 16).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.compiled_count(), 1);
+    }
+
+    #[test]
+    fn grad_fd8_artifact_matches_rust_reference() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let n = 16usize;
+        let h = 2.0 * std::f64::consts::PI / n as f64;
+        let op = reg.get("grad_fd8", "opt-fd8-cubic", n).unwrap();
+        let mut rng = crate::util::rng::Rng::new(99);
+        let f: Vec<f32> = (0..n * n * n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let out = op.call(&[&f]).unwrap();
+        assert_eq!(out.len(), 1);
+        let g = &out[0];
+        assert_eq!(g.len(), 3 * n * n * n);
+        for axis in 0..3 {
+            let want = crate::math::kernels_ref::fd8_partial(&f, n, axis, h);
+            let got = &g[axis * n * n * n..(axis + 1) * n * n * n];
+            let rel = crate::math::stats::rel_l2(got, &want);
+            assert!(rel < 1e-5, "axis {axis}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn interp_lin_artifact_matches_rust_reference() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let n = 16usize;
+        let m = n * n * n;
+        let op = reg.get("interp_lin", "opt-fd8-cubic", n).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let f: Vec<f32> = (0..m).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let mut q = vec![0f32; 3 * m];
+        for x in q.iter_mut() {
+            *x = rng.uniform_f32(-(n as f32), 2.0 * n as f32);
+        }
+        let out = op.call(&[&f, &q]).unwrap();
+        let got = &out[0];
+        for idx in (0..m).step_by(997) {
+            let qp = [q[idx] as f64, q[m + idx] as f64, q[2 * m + idx] as f64];
+            let want = crate::math::kernels_ref::interp_linear_at(&f, n, qp);
+            assert!(
+                (got[idx] as f64 - want).abs() < 1e-4,
+                "at {idx}: {} vs {want}",
+                got[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn bad_input_count_is_error() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let op = reg.get("grad_fd8", "opt-fd8-cubic", 16).unwrap();
+        assert!(op.call(&[]).is_err());
+    }
+}

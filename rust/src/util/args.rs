@@ -1,0 +1,202 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declarative description of one option for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line: options + positionals, with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, specs: &[OptSpec]) -> Result<Args> {
+        let mut out = Args::default();
+        let flag_names: Vec<&str> =
+            specs.iter().filter(|s| s.is_flag).map(|s| s.name).collect();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        out.opts.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        // Reject unknown options when specs are provided.
+        if !specs.is_empty() {
+            let known: Vec<&str> = specs.iter().map(|s| s.name).collect();
+            for k in out.opts.keys().map(String::as_str).chain(out.flags.iter().map(String::as_str))
+            {
+                if !known.contains(&k) {
+                    return Err(Error::Config(format!(
+                        "unknown option --{k}\n{}",
+                        usage(specs)
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--sizes 16,32,64`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{name}: bad integer '{s}'")))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+/// Render usage text from option specs.
+pub fn usage(specs: &[OptSpec]) -> String {
+    let mut s = String::from("options:\n");
+    for spec in specs {
+        let d = spec
+            .default
+            .as_ref()
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+    }
+    s
+}
+
+/// Helper to build an OptSpec concisely.
+pub fn opt(name: &'static str, help: &'static str, default: &str) -> OptSpec {
+    OptSpec { name, help, default: Some(default.to_string()), is_flag: false }
+}
+
+/// Helper to build a boolean flag spec.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_flag: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_kv_and_flags() {
+        let specs = [opt("n", "size", "16"), flag("verbose", "talk more"), opt("beta", "reg", "5e-4")];
+        let a = Args::parse(sv(&["--n", "32", "--verbose", "--beta=1e-3", "pos1"]), &specs).unwrap();
+        assert_eq!(a.get_usize("n", 16).unwrap(), 32);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_f64("beta", 0.0).unwrap(), 1e-3);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let specs = [opt("n", "size", "16")];
+        let a = Args::parse(sv(&[]), &specs).unwrap();
+        assert_eq!(a.get_usize("n", 16).unwrap(), 16);
+        assert!(!a.flag("anything"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let specs = [opt("n", "size", "16")];
+        assert!(Args::parse(sv(&["--bogus", "1"]), &specs).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let specs = [opt("sizes", "grid sizes", "16"), opt("variants", "kernel variants", "all")];
+        let a = Args::parse(sv(&["--sizes", "16,32,64", "--variants", "a,b"]), &specs).unwrap();
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![16, 32, 64]);
+        assert_eq!(a.get_str_list("variants", &[]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let specs = [opt("n", "size", "16")];
+        let a = Args::parse(sv(&["--n", "abc"]), &specs).unwrap();
+        assert!(a.get_usize("n", 16).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_like_value() {
+        let specs = [flag("x", "flag"), opt("k", "key", "")];
+        let a = Args::parse(sv(&["--k", "--x"]), &specs).unwrap();
+        // --k followed by a --flag keeps both as separate options
+        assert!(a.flag("k") || a.get("k").is_some());
+        assert!(a.flag("x"));
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the `[[bench]]` binaries with `harness = false`; each
+//! bench uses this module: warmup, fixed sample count, robust statistics
+//! (median + MAD), and aligned table output matching the paper's tables.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    /// Median absolute deviation, seconds.
+    pub mad_s: f64,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn throughput_gbs(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.median_s / 1e9
+    }
+}
+
+/// Benchmark runner with warmup and sample statistics.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 7 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, samples: 3 }
+    }
+
+    /// Time `f` (one call per sample) and return robust statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Sample {
+            name: name.to_string(),
+            median_s: median,
+            min_s: times[0],
+            max_s: *times.last().unwrap(),
+            mad_s: devs[devs.len() / 2],
+            iters: self.samples,
+        }
+    }
+}
+
+/// Format seconds in engineering style (matches paper tables: 1.5, 1.1e1).
+pub fn fmt_time(s: f64) -> String {
+    if s == 0.0 {
+        return "0".into();
+    }
+    let exp = s.abs().log10().floor() as i32;
+    if (-1..=2).contains(&exp) {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.1e}")
+    }
+}
+
+/// Simple aligned table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            line.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.headers, &w));
+        out.push_str(&format!("{}\n", "-".repeat(w.iter().sum::<usize>() + 2 * (ncol - 1))));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let b = Bench::quick();
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert!(s.median_s > 0.0);
+    }
+
+    #[test]
+    fn fmt_time_styles() {
+        assert_eq!(fmt_time(1.53), "1.53");
+        assert_eq!(fmt_time(0.0), "0");
+        assert!(fmt_time(1.1e-4).contains('e'));
+        assert!(fmt_time(84.0).contains("84"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["N", "time", "BW"]);
+        t.row(&["64^3".into(), "1.5".into(), "50".into()]);
+        t.row(&["256^3".into(), "8.4e1".into(), "56".into()]);
+        let s = t.render();
+        assert!(s.contains("N"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates: the offline build has no clap /
+//! criterion / proptest / rand / serde, so this crate carries its own
+//! equivalents (see DESIGN.md section 4).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,101 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded generators and a `check` runner that reports the failing
+//! case number and seed on failure so tests are reproducible. No shrinking;
+//! generators are kept small instead, which is adequate for the invariants
+//! tested in this crate (field-algebra identities, scheduler invariants,
+//! FFT/interp kernel properties).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC1A1_2E } // "CLAIRE"
+    }
+}
+
+/// Run `prop` against `cases` generated inputs; panic with diagnostics on
+/// the first failure. `gen` receives a per-case RNG.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.split();
+        let input = gen(&mut r);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): input = {:?}",
+                cfg.seed, input
+            );
+        }
+    }
+}
+
+/// Like `check` but the property returns `Result<(), String>` for richer
+/// failure messages.
+pub fn check_msg<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.split();
+        let input = gen(&mut r);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): {msg}\ninput = {:?}",
+                cfg.seed, input
+            );
+        }
+    }
+}
+
+// -- Common generators ------------------------------------------------------
+
+/// Vector of f32 in [lo, hi].
+pub fn vec_f32(r: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| r.uniform_f32(lo, hi)).collect()
+}
+
+/// Power-of-two size in [lo, hi] (both must be powers of two).
+pub fn pow2(r: &mut Rng, lo: usize, hi: usize) -> usize {
+    let lo_b = lo.trailing_zeros();
+    let hi_b = hi.trailing_zeros();
+    1 << (lo_b + r.below((hi_b - lo_b + 1) as u64) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(Config::default(), |r| r.uniform(), |x| (0.0..1.0).contains(x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(Config { cases: 16, seed: 1 }, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        let mut r = Rng::new(2);
+        for _ in 0..100 {
+            let n = pow2(&mut r, 4, 64);
+            assert!(n.is_power_of_two() && (4..=64).contains(&n));
+        }
+    }
+}

@@ -10,17 +10,66 @@
 //! ```bash
 //! cargo run --release --example clinical_batch -- [n] [max_workers]
 //! ```
+//!
+//! With `CLAIRE_SERVE_ADDR` set (e.g. after `claire serve`), the same
+//! population-study batch is submitted to the live daemon over the NDJSON
+//! wire protocol instead of an in-process pool — the deployment shape:
+//! compilation stays warm in the daemon across study batches.
+//!
+//! ```bash
+//! claire serve --workers 4 &
+//! CLAIRE_SERVE_ADDR=127.0.0.1:7464 cargo run --release --example clinical_batch -- 16
+//! ```
 
 use claire::coordinator::{poisson_arrivals, simulate_queue, summarize, BatchService, Job};
 use claire::data::synth;
 use claire::registration::{RegParams, RunReport};
 use claire::runtime::OpRegistry;
+use claire::serve::{Client, JobSpec, Priority};
 use claire::util::bench::Table;
+
+/// Run the study batch against a live daemon over the wire protocol.
+fn run_against_daemon(addr: &str, n: usize) -> claire::Result<()> {
+    let mut client = Client::connect(addr)?;
+    client.ping()?;
+    println!("daemon batch: submitting 3 subjects x 2 variants at {n}^3 to {addr}");
+    let mut ids = Vec::new();
+    for variant in ["opt-fd8-cubic", "opt-fd8-linear"] {
+        for subject in ["na02", "na03", "na10"] {
+            let spec = JobSpec {
+                subject: subject.into(),
+                n,
+                variant: variant.into(),
+                priority: Priority::Batch,
+                ..Default::default()
+            };
+            ids.push(client.submit(&spec)?);
+        }
+    }
+    // Wait on *our* job ids, not daemon-global idleness: the daemon may
+    // be serving other clients concurrently (that's its purpose).
+    let views = ids
+        .into_iter()
+        .map(|id| client.wait_terminal(id, 600.0))
+        .collect::<claire::Result<Vec<_>>>()?;
+    let stats = client.stats()?;
+    claire::serve::client::job_table(&views).print();
+    println!(
+        "daemon stats: {} done / {} failed; op cache {} compiles, {} warm hits \
+         (reuse is the daemon's whole point: later batches skip compilation)",
+        stats.completed, stats.failed, stats.cache_compiles, stats.cache_hits
+    );
+    Ok(())
+}
 
 fn main() -> claire::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(16);
     let max_workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    if let Ok(addr) = std::env::var("CLAIRE_SERVE_ADDR") {
+        return run_against_daemon(&addr, n);
+    }
 
     // Job generation uses its own registry; workers open their own.
     let reg = OpRegistry::open_default()?;

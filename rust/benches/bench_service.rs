@@ -1,0 +1,133 @@
+//! Scheduler throughput/latency bench: N concurrent synthetic 64^3 jobs
+//! through the serve scheduler, sweeping worker counts.
+//!
+//! Reports jobs/sec and p50/p95 submit-to-done latency (the clinical
+//! figure of merit from `coordinator::workload`) and writes a
+//! `BENCH_service.json` summary. Uses stub executors with a calibrated
+//! busy-wait service time so the bench measures *scheduling* overhead and
+//! scaling, not PJRT solve time — it runs on machines without artifacts
+//! (pass a real artifacts dir via CLAIRE_ARTIFACTS + `claire batch` for
+//! end-to-end solve throughput).
+//!
+//! Run: `cargo bench --bench bench_service`.
+
+use std::time::{Duration, Instant};
+
+use claire::error::Result;
+use claire::math::stats::percentile_sorted;
+use claire::registration::RunReport;
+use claire::serve::scheduler::stub_report;
+use claire::serve::{worker_loop, Executor, JobPayload, JobSpec, Priority, Scheduler};
+use claire::util::bench::Table;
+use claire::util::json::Json;
+
+/// Busy-wait executor: emulates a fixed per-job solve cost without
+/// sleeping (sleep granularity would swamp sub-ms scheduling overhead).
+struct SpinExec {
+    service: Duration,
+}
+
+impl Executor for SpinExec {
+    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+        let t0 = Instant::now();
+        while t0.elapsed() < self.service {
+            std::hint::spin_loop();
+        }
+        Ok(stub_report(&payload.name()))
+    }
+}
+
+struct Row {
+    workers: usize,
+    wall_s: f64,
+    jobs_per_s: f64,
+    p50_s: f64,
+    p95_s: f64,
+}
+
+fn run_once(jobs: usize, workers: usize, service: Duration) -> Row {
+    let sched = Scheduler::new(jobs, workers);
+    for i in 0..jobs {
+        let spec = JobSpec {
+            subject: ["na02", "na03", "na10"][i % 3].into(),
+            n: 64,
+            priority: Priority::Batch,
+            ..Default::default()
+        };
+        sched.submit(Priority::Batch, JobPayload::Spec(spec)).unwrap();
+    }
+    sched.shutdown(true); // drain
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let sched = sched.clone();
+            scope.spawn(move || {
+                let mut exec = SpinExec { service };
+                worker_loop(&sched, w, &mut exec);
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = sched.jobs().iter().filter_map(|v| v.latency_s).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Row {
+        workers,
+        wall_s,
+        jobs_per_s: jobs as f64 / wall_s.max(1e-12),
+        p50_s: percentile_sorted(&lat, 50.0),
+        p95_s: percentile_sorted(&lat, 95.0),
+    }
+}
+
+fn main() {
+    let jobs = 48usize;
+    let service = Duration::from_millis(4);
+    println!("== serve scheduler: {jobs} synthetic 64^3 jobs, {service:?} service time ==\n");
+
+    let mut table = Table::new(&["workers", "wall[s]", "jobs/s", "p50 lat[s]", "p95 lat[s]"]);
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        // Warmup pass absorbs thread spawn + allocator effects.
+        run_once(jobs / 4, workers, service);
+        let row = run_once(jobs, workers, service);
+        table.row(&[
+            row.workers.to_string(),
+            format!("{:.3}", row.wall_s),
+            format!("{:.1}", row.jobs_per_s),
+            format!("{:.4}", row.p50_s),
+            format!("{:.4}", row.p95_s),
+        ]);
+        rows.push(row);
+    }
+    table.print();
+    println!("\n(expected: jobs/s scales ~linearly in workers until core count;");
+    println!(" p95 latency drops as queue wait shrinks — cf. workload.rs M/D/c model)");
+
+    let summary = Json::object([
+        ("bench", Json::str("service")),
+        ("jobs", Json::num(jobs as f64)),
+        ("n", Json::num(64.0)),
+        ("service_ms", Json::num(service.as_secs_f64() * 1e3)),
+        (
+            "sweeps",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::object([
+                            ("workers", Json::num(r.workers as f64)),
+                            ("wall_s", Json::num(r.wall_s)),
+                            ("jobs_per_s", Json::num(r.jobs_per_s)),
+                            ("p50_s", Json::num(r.p50_s)),
+                            ("p95_s", Json::num(r.p95_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = "BENCH_service.json";
+    match std::fs::write(out, summary.render() + "\n") {
+        Ok(()) => println!("\nsummary written to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

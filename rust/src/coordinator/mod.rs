@@ -3,11 +3,11 @@
 //! The paper's deployment setting (section 5): "clinical workflows require
 //! high-throughput, with one or more registration tasks per node ...
 //! multiple registration tasks can take place in an embarrassingly parallel
-//! way". This module is that layer: a thread-pool service that schedules
-//! many registration jobs against one shared operator registry (compiled
-//! executables are shared; each worker runs an independent Gauss-Newton
-//! solve), with queueing, cancellation-on-error policy, and throughput
-//! accounting.
+//! way". This module is that layer's one-shot front door: `BatchService`
+//! submits a job vector to the serve scheduler (`crate::serve`), drains it
+//! on per-worker PJRT contexts, and aggregates throughput accounting. The
+//! long-lived daemon over the same execution backend lives in
+//! `crate::serve::daemon`; `workload` models study-scale arrival processes.
 
 pub mod service;
 pub mod workload;

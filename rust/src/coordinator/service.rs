@@ -1,11 +1,15 @@
-//! Thread-pool batch registration service.
+//! One-shot batch registration API over the serve scheduler.
 //!
-//! std-only (no tokio offline): a work queue over `Mutex<VecDeque>`, N
-//! worker threads, and a collector for per-job outcomes. The `xla` crate's
-//! PJRT handles are deliberately `!Send` (they wrap `Rc` + raw pointers),
-//! so each worker owns its *own* PJRT client and operator cache — the
-//! paper's setting exactly: "multiple registration tasks can take place in
-//! an embarrassingly parallel way", one device context per task.
+//! Historically this module owned its own `Mutex<VecDeque>` thread pool;
+//! that pool is now the daemon's execution backend (`serve::scheduler`),
+//! and `BatchService` is the one-shot front door: submit a vector of jobs
+//! at batch priority, drain, and collect a `BatchReport`. The `xla`
+//! crate's PJRT handles are deliberately `!Send` (they wrap `Rc` + raw
+//! pointers), so each worker owns its *own* PJRT client and operator
+//! cache — the paper's setting exactly: "multiple registration tasks can
+//! take place in an embarrassingly parallel way", one device context per
+//! task. The generic `run_queue` helper remains for cheap fan-out work
+//! that needs no lifecycle tracking.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -14,8 +18,10 @@ use std::time::Instant;
 use crate::error::Result;
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::registration::report::RunReport;
-use crate::registration::solver::GnSolver;
-use crate::runtime::OpRegistry;
+use crate::serve::proto::Priority;
+use crate::serve::scheduler::{
+    worker_loop, FailingExecutor, JobPayload, JobState as ServeState, PjrtExecutor, Scheduler,
+};
 
 use std::path::PathBuf;
 
@@ -134,55 +140,60 @@ impl BatchService {
         Self::new(crate::runtime::manifest::default_dir(), workers)
     }
 
-    /// Run all jobs to completion; returns outcomes in job-id order.
+    /// Run all jobs to completion; returns outcomes in submission order.
+    ///
+    /// Implementation: a drain-mode serve scheduler — submit everything at
+    /// batch priority, spawn one PJRT worker per thread, exit when the
+    /// queue is dry. Same-priority jobs dispatch FIFO, preserving the old
+    /// queue-drain semantics.
     pub fn run(&self, jobs: Vec<Job>) -> Result<BatchReport> {
         let t0 = Instant::now();
-        let dir = self.artifacts_dir.clone();
-        let outcomes = run_queue(
-            jobs,
-            self.workers,
-            // Per-worker PJRT client + operator cache (PJRT handles are
-            // !Send; compilation cost amortizes over this worker's jobs).
-            |_w| OpRegistry::open(&dir),
-            |registry, job| {
-                let jt0 = Instant::now();
-                let registry = match registry {
-                    Ok(r) => r,
+        let sched = Scheduler::new(jobs.len().max(1), self.workers);
+        let mut submitted = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let dataset = job.problem.name.clone();
+            let sid = sched.submit(
+                Priority::Batch,
+                JobPayload::Problem { problem: job.problem, params: job.params },
+            )?;
+            submitted.push((sid, job.id, dataset));
+        }
+        // Drain mode before workers start: they exit once the queue is dry.
+        sched.shutdown(true);
+        std::thread::scope(|scope| {
+            for w in 0..self.workers {
+                let sched = sched.clone();
+                let dir = self.artifacts_dir.clone();
+                scope.spawn(move || match PjrtExecutor::open(&dir) {
+                    Ok(mut exec) => worker_loop(&sched, w, &mut exec),
                     Err(e) => {
-                        return JobOutcome {
-                            id: job.id,
-                            dataset: job.problem.name.clone(),
-                            status: JobStatus::Failed,
-                            report: None,
-                            error: Some(format!("registry open failed: {e}")),
-                            wall_s: 0.0,
-                        }
+                        // A worker that cannot open the registry fails its
+                        // jobs cleanly instead of poisoning the pool.
+                        let mut failing =
+                            FailingExecutor { msg: format!("registry open failed: {e}") };
+                        worker_loop(&sched, w, &mut failing);
                     }
+                });
+            }
+        });
+        let outcomes = submitted
+            .into_iter()
+            .map(|(sid, id, dataset)| {
+                let view = sched.status(sid).expect("submitted job has a record");
+                let status = match view.state {
+                    ServeState::Done => JobStatus::Done,
+                    _ => JobStatus::Failed,
                 };
-                let solver = GnSolver::new(registry, job.params.clone());
-                match solver
-                    .solve(&job.problem)
-                    .and_then(|res| RunReport::build(&solver, &job.problem, &res))
-                {
-                    Ok(report) => JobOutcome {
-                        id: job.id,
-                        dataset: job.problem.name.clone(),
-                        status: JobStatus::Done,
-                        report: Some(report),
-                        error: None,
-                        wall_s: jt0.elapsed().as_secs_f64(),
-                    },
-                    Err(e) => JobOutcome {
-                        id: job.id,
-                        dataset: job.problem.name.clone(),
-                        status: JobStatus::Failed,
-                        report: None,
-                        error: Some(e.to_string()),
-                        wall_s: jt0.elapsed().as_secs_f64(),
-                    },
+                JobOutcome {
+                    id,
+                    dataset,
+                    status,
+                    report: sched.full_report(sid),
+                    error: view.error,
+                    wall_s: view.wall_s.unwrap_or(0.0),
                 }
-            },
-        );
+            })
+            .collect();
         Ok(BatchReport { outcomes, wall_s: t0.elapsed().as_secs_f64(), workers: self.workers })
     }
 }
@@ -191,8 +202,68 @@ impl BatchService {
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::runtime::OpRegistry;
     use crate::util::prop::{self, Config};
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn outcome(id: usize, status: JobStatus) -> JobOutcome {
+        JobOutcome { id, dataset: format!("d{id}"), status, report: None, error: None, wall_s: 0.1 }
+    }
+
+    #[test]
+    fn batch_report_counts_succeeded_and_failed() {
+        let rep = BatchReport {
+            outcomes: vec![
+                outcome(0, JobStatus::Done),
+                outcome(1, JobStatus::Failed),
+                outcome(2, JobStatus::Done),
+                outcome(3, JobStatus::Done),
+            ],
+            wall_s: 2.0,
+            workers: 2,
+        };
+        assert_eq!(rep.succeeded(), 3);
+        assert_eq!(rep.failed(), 1);
+        assert!((rep.throughput() - 1.5).abs() < 1e-12);
+        assert!((rep.serial_time() - 0.4).abs() < 1e-12);
+    }
+
+    /// Problems that need no artifacts (the worker will fail them, which is
+    /// the point: lifecycle must be correct even when execution is not).
+    fn artifact_free_jobs(count: usize) -> Vec<Job> {
+        let (atlas, _) = synth::brain_atlas(8);
+        (0..count)
+            .map(|i| Job {
+                id: i,
+                problem: RegProblem::new(format!("j{i}"), atlas.clone(), atlas.clone()),
+                params: RegParams::default(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bad_registry_fails_jobs_cleanly_in_submission_order() {
+        // Nonexistent artifacts dir: every worker degrades to the failing
+        // executor; all jobs drain, each marked Failed, none lost, pool
+        // not poisoned, outcomes in submission order.
+        let svc = BatchService::new(PathBuf::from("/nonexistent/claire-artifacts"), 3);
+        let rep = svc.run(artifact_free_jobs(7)).unwrap();
+        assert_eq!(rep.outcomes.len(), 7);
+        assert_eq!(rep.failed(), 7);
+        assert_eq!(rep.succeeded(), 0);
+        let ids: Vec<usize> = rep.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        for o in &rep.outcomes {
+            assert!(o.error.as_deref().unwrap().contains("registry open failed"), "{o:?}");
+        }
+    }
+
+    // Dispatch drain order for same-priority jobs is covered at the engine
+    // level by serve::scheduler::tests::fifo_within_priority_band; here we
+    // pin the API contract that outcomes come back in submission order
+    // (bad_registry_fails_jobs_cleanly_in_submission_order, above) and that
+    // a mixed batch reports per-job status (failed_job_is_reported_not_fatal,
+    // below, artifact-gated).
 
     #[test]
     fn prop_queue_runs_each_item_exactly_once_in_order() {

@@ -22,7 +22,7 @@ pub fn write_field(path: &Path, f: &Field3, desc: &str) -> Result<()> {
     let meta = format!(
         "{{\"n\": {}, \"dtype\": \"f32\", \"order\": \"x1x2x3\", \"desc\": \"{}\"}}\n",
         f.n,
-        desc.replace('"', "'")
+        crate::util::json::escape(desc)
     );
     fs::write(path.with_extension("json"), meta)?;
     Ok(())
@@ -105,6 +105,22 @@ mod tests {
         let (got, n) = read_labels(&p).unwrap();
         assert_eq!(n, 4);
         assert_eq!(got, labels);
+    }
+
+    #[test]
+    fn sidecar_desc_with_hostile_characters_roundtrips() {
+        // Backslashes, quotes, and newlines in the description used to
+        // produce invalid JSON sidecars (only '"' was rewritten).
+        let dir = std::env::temp_dir().join("claire_io_test");
+        fs::create_dir_all(&dir).unwrap();
+        let f = Field3::zeros(4);
+        let p = dir.join("hostile");
+        let desc = "path C:\\vol \"quoted\"\nline2\ttabbed";
+        write_field(&p, &f, desc).unwrap();
+        let meta = fs::read_to_string(p.with_extension("json")).unwrap();
+        let j = Json::parse(&meta).unwrap();
+        assert_eq!(j.get("desc").and_then(Json::as_str), Some(desc));
+        assert_eq!(read_field(&p).unwrap(), f);
     }
 
     #[test]

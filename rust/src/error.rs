@@ -31,6 +31,9 @@ pub enum Error {
 
     #[error("JSON parse error at byte {at}: {msg}")]
     Json { at: usize, msg: String },
+
+    #[error("serve error: {0}")]
+    Serve(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

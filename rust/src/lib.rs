@@ -12,9 +12,11 @@
 //! * **L3** (this crate) is the coordinator: it loads the artifacts via the
 //!   PJRT C API and runs the paper's Algorithm 2.1 — Gauss-Newton outer
 //!   loop, PCG on the Gauss-Newton Hessian, Armijo line search, parameter
-//!   continuation — plus baseline optimizers, metrics, synthetic data, and
-//!   a batch registration service for the paper's "clinical workflow"
-//!   setting. Python never runs at request time.
+//!   continuation — plus baseline optimizers, metrics, synthetic data, a
+//!   one-shot batch service, and a persistent registration daemon
+//!   (`serve/`: priority scheduler, warm operator caches, NDJSON wire
+//!   protocol) for the paper's "clinical workflow" setting. Python never
+//!   runs at request time.
 
 pub mod config;
 pub mod coordinator;
@@ -25,6 +27,7 @@ pub mod math;
 pub mod optim;
 pub mod registration;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -3,6 +3,11 @@
 //! Subcommands:
 //!   register   run one registration (synthetic NIREP-analog pair)
 //!   batch      run the clinical-style batch service over many jobs
+//!   serve      start the persistent registration daemon (NDJSON over TCP)
+//!   submit     submit job(s) to a running daemon
+//!   status     job table + stats from a running daemon
+//!   cancel     cancel a queued job on a running daemon
+//!   shutdown   stop a running daemon (drain by default)
 //!   transport  warp the atlas with a random velocity (data utility)
 //!   info       artifact inventory and platform info
 //!   complexity Table-1 style kernel counts per operator
@@ -14,6 +19,8 @@ use claire::data::synth;
 use claire::error::Result;
 use claire::registration::{BaselineKind, GnSolver, RegParams, RunReport};
 use claire::runtime::OpRegistry;
+use claire::serve::client::job_table;
+use claire::serve::{pjrt_factory, Client, Daemon, DaemonConfig, JobSpec, Priority};
 use claire::util::args::{flag, opt, usage, Args, OptSpec};
 use claire::util::bench::Table;
 
@@ -45,6 +52,13 @@ fn common_specs() -> Vec<OptSpec> {
         opt("dump-volumes", "directory to write before/after volumes", ""),
         opt("config", "key=value config file (overridden by flags)", ""),
         opt("multires", "grid-continuation levels (1 = single grid)", "1"),
+        opt("addr", "daemon address (serve/submit/status/shutdown)", "127.0.0.1:7464"),
+        opt("queue-cap", "serve: max waiting batch/urgent jobs", "64"),
+        opt("journal", "serve: job journal path ('' disables)", "serve_journal.ndjson"),
+        opt("priority", "submit: batch | urgent | emergency", "batch"),
+        opt("count", "submit: number of jobs (subjects cycle)", "1"),
+        opt("id", "status/cancel: job id", ""),
+        flag("now", "shutdown: stop without draining queued jobs"),
         flag("no-continuation", "disable beta continuation"),
         flag("incompressible", "project onto divergence-free fields (Leray)"),
         flag("verbose", "per-iteration progress"),
@@ -92,6 +106,11 @@ fn run(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "register" => cmd_register(&args),
         "batch" => cmd_batch(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_status(&args),
+        "cancel" => cmd_cancel(&args),
+        "shutdown" => cmd_shutdown(&args),
         "transport" => cmd_transport(&args),
         "info" => cmd_info(&args),
         "complexity" => cmd_complexity(&args),
@@ -108,7 +127,8 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn print_help() {
     println!("claire — diffeomorphic image registration (JPDC 2020 reproduction)\n");
-    println!("usage: claire <register|batch|transport|info|complexity> [options]\n");
+    println!("usage: claire <register|batch|serve|submit|status|cancel|shutdown|");
+    println!("               transport|info|complexity> [options]\n");
     println!("{}", usage(&common_specs()));
 }
 
@@ -229,6 +249,125 @@ fn cmd_batch(args: &Args) -> Result<()> {
         rep.serial_time(),
         rep.throughput()
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let journal = args.get_or("journal", "serve_journal.ndjson");
+    let cfg = DaemonConfig {
+        addr: args.get_or("addr", "127.0.0.1:7464"),
+        workers: args.get_usize("workers", 2)?,
+        queue_cap: args.get_usize("queue-cap", 64)?,
+        journal: (!journal.is_empty()).then(|| PathBuf::from(journal)),
+    };
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let handle = Daemon::start(cfg.clone(), pjrt_factory(artifacts))?;
+    println!(
+        "[claire] daemon listening on {} ({} workers, queue cap {}, journal {})",
+        handle.addr(),
+        cfg.workers,
+        cfg.queue_cap,
+        cfg.journal.as_ref().map(|p| p.display().to_string()).unwrap_or_else(|| "off".into())
+    );
+    let prior = handle.scheduler().stats().prior_completed;
+    if prior > 0 {
+        println!("[claire] journal reports {prior} jobs completed by previous runs");
+    }
+    println!("[claire] stop with: claire shutdown --addr {}", handle.addr());
+    handle.join()
+}
+
+/// Build a JobSpec from the common CLI flags.
+fn spec_from(args: &Args) -> Result<JobSpec> {
+    Ok(JobSpec {
+        subject: args.get_or("subject", "na02"),
+        n: args.get_usize("n", 16)?,
+        variant: args.get_or("variant", "opt-fd8-cubic"),
+        priority: Priority::parse(&args.get_or("priority", "batch"))?,
+        max_iter: args.get("max-iter").map(|_| args.get_usize("max-iter", 50)).transpose()?,
+        beta: args.get("beta").map(|_| args.get_f64("beta", 5e-4)).transpose()?,
+        gtol: args.get("gtol").map(|_| args.get_f64("gtol", 5e-2)).transpose()?,
+        continuation: args.flag("no-continuation").then_some(false),
+    })
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    let base = spec_from(args)?;
+    let count = args.get_usize("count", 1)?;
+    // Cycle through the study subjects only when the user did not pin one.
+    let cycle = count > 1 && args.get("subject").is_none();
+    let subjects = ["na02", "na03", "na10"];
+    for i in 0..count {
+        let spec = if cycle {
+            JobSpec { subject: subjects[i % subjects.len()].into(), ..base.clone() }
+        } else {
+            base.clone()
+        };
+        let name = spec.name();
+        let id = client.submit(&spec)?;
+        println!("submitted job {id}: {name} [{}]", spec.priority.as_str());
+    }
+    Ok(())
+}
+
+/// `--id` as a job id: `Ok(None)` when absent/empty, error on non-integer.
+fn arg_job_id(args: &Args) -> Result<Option<u64>> {
+    match args.get("id").filter(|s| !s.is_empty()) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| claire::Error::Config(format!("--id expects an integer, got '{v}'"))),
+    }
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    match arg_job_id(args)? {
+        Some(id) => {
+            let v = client.status(id)?;
+            job_table(std::slice::from_ref(&v)).print();
+        }
+        None => {
+            let jobs = client.jobs()?;
+            job_table(&jobs).print();
+            let s = client.stats()?;
+            println!(
+                "stats: {} submitted, {} queued, {} running, {} done, {} failed, {} cancelled, \
+                 {} rejected, {} prior; op cache: {} compiles, {} warm hits ({} workers)",
+                s.submitted,
+                s.queued,
+                s.running,
+                s.completed,
+                s.failed,
+                s.cancelled,
+                s.rejected,
+                s.prior_completed,
+                s.cache_compiles,
+                s.cache_hits,
+                s.workers
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    let Some(id) = arg_job_id(args)? else {
+        return Err(claire::Error::Config("cancel requires --id".into()));
+    };
+    client.cancel(id)?;
+    println!("cancelled job {id}");
+    Ok(())
+}
+
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    let drain = !args.flag("now");
+    client.shutdown(drain)?;
+    println!("shutdown requested ({})", if drain { "drain" } else { "immediate" });
     Ok(())
 }
 

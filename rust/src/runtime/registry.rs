@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use xla::PjRtClient;
@@ -19,6 +20,8 @@ pub struct OpRegistry {
     pub client: PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<BTreeMap<String, Arc<Operator>>>,
+    hits: AtomicU64,
+    compiles: AtomicU64,
 }
 
 impl OpRegistry {
@@ -26,7 +29,13 @@ impl OpRegistry {
     pub fn open(dir: &Path) -> Result<OpRegistry> {
         let client = PjRtClient::cpu()?;
         let manifest = Manifest::load(dir)?;
-        Ok(OpRegistry { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+        Ok(OpRegistry {
+            client,
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+        })
     }
 
     /// Open at the default artifacts location.
@@ -39,16 +48,29 @@ impl OpRegistry {
         let art = self.manifest.find(op, variant, n)?.clone();
         let mut cache = self.cache.lock().unwrap();
         if let Some(o) = cache.get(&art.key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(o.clone());
         }
         let compiled = Arc::new(Operator::compile(&self.client, &art)?);
         cache.insert(art.key.clone(), compiled.clone());
+        self.compiles.fetch_add(1, Ordering::Relaxed);
         Ok(compiled)
     }
 
     /// Number of compiled operators currently cached.
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+
+    /// Warm-cache hits: `get` calls served without compiling. The serve
+    /// stats endpoint reports this as compiled-operator reuse.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of first-use compilations performed by this registry.
+    pub fn cache_compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
     }
 }
 
@@ -72,6 +94,8 @@ mod tests {
         let b = reg.get("grad_fd8", "opt-fd8-cubic", 16).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(reg.compiled_count(), 1);
+        assert_eq!(reg.cache_compiles(), 1);
+        assert_eq!(reg.cache_hits(), 1);
     }
 
     #[test]

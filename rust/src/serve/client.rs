@@ -1,0 +1,145 @@
+//! Typed client for the registration daemon's NDJSON wire protocol.
+//!
+//! One TCP connection, synchronous request/response: write one line, read
+//! one line. Used by the `submit`/`status`/`shutdown` CLI subcommands and
+//! by `examples/clinical_batch.rs` when pointed at a live daemon.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::serve::proto::{read_line_bounded, JobSpec, Request, Response, MAX_LINE_BYTES};
+use crate::serve::scheduler::{JobId, JobView, ServeStats};
+use crate::util::bench::Table;
+
+/// Render job views as an aligned table (shared by the CLI `status`
+/// subcommand and the daemon-mode example).
+pub fn job_table(jobs: &[JobView]) -> Table {
+    let mut t =
+        Table::new(&["id", "job", "prio", "state", "order", "lat[s]", "solve[s]", "mism", "err"]);
+    let fo = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
+    for v in jobs {
+        t.row(&[
+            v.id.to_string(),
+            v.name.clone(),
+            v.priority.as_str().into(),
+            v.state.as_str().into(),
+            v.dispatch_seq.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            fo(v.latency_s),
+            fo(v.wall_s),
+            v.mismatch_rel.map(|m| format!("{m:.1e}")).unwrap_or_else(|| "-".into()),
+            v.error.clone().unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. "127.0.0.1:7464").
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Serve(format!("cannot reach daemon at {addr}: {e}")))?;
+        let read_half = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(read_half), writer: stream })
+    }
+
+    /// One request/response exchange.
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        self.writer.write_all(req.to_line().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let Some(line) = read_line_bounded(&mut self.reader, MAX_LINE_BYTES)? else {
+            return Err(Error::Serve("daemon closed the connection".into()));
+        };
+        match Response::parse(&line)? {
+            Response::Error(msg) => Err(Error::Serve(msg)),
+            other => Ok(other),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(&Request::Ping).map(|_| ())
+    }
+
+    /// Submit a job; returns the daemon-assigned job id.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
+        match self.call(&Request::Submit(spec.clone()))? {
+            Response::Submitted { id } => Ok(id),
+            other => Err(Error::Serve(format!("unexpected submit response: {other:?}"))),
+        }
+    }
+
+    pub fn status(&mut self, id: JobId) -> Result<JobView> {
+        match self.call(&Request::Status(Some(id)))? {
+            Response::Job(v) => Ok(v),
+            other => Err(Error::Serve(format!("unexpected status response: {other:?}"))),
+        }
+    }
+
+    /// All jobs the daemon knows about, id-ordered.
+    pub fn jobs(&mut self) -> Result<Vec<JobView>> {
+        match self.call(&Request::Status(None))? {
+            Response::Jobs(v) => Ok(v),
+            other => Err(Error::Serve(format!("unexpected status response: {other:?}"))),
+        }
+    }
+
+    pub fn cancel(&mut self, id: JobId) -> Result<()> {
+        self.call(&Request::Cancel(id)).map(|_| ())
+    }
+
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(Error::Serve(format!("unexpected stats response: {other:?}"))),
+        }
+    }
+
+    pub fn shutdown(&mut self, drain: bool) -> Result<()> {
+        self.call(&Request::Shutdown { drain }).map(|_| ())
+    }
+
+    /// Poll `status` until the job reaches a terminal state or `timeout_s`
+    /// elapses.
+    pub fn wait_terminal(&mut self, id: JobId, timeout_s: f64) -> Result<JobView> {
+        let t0 = Instant::now();
+        loop {
+            let view = self.status(id)?;
+            if view.state.is_terminal() {
+                return Ok(view);
+            }
+            if t0.elapsed().as_secs_f64() > timeout_s {
+                return Err(Error::Serve(format!(
+                    "timeout waiting for job {id} (still {})",
+                    view.state.as_str()
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Poll until the daemon is idle (no queued or running jobs) or
+    /// `timeout_s` elapses; returns the final stats.
+    pub fn wait_idle(&mut self, timeout_s: f64) -> Result<ServeStats> {
+        let t0 = Instant::now();
+        loop {
+            let s = self.stats()?;
+            if s.queued == 0 && s.running == 0 {
+                return Ok(s);
+            }
+            if t0.elapsed().as_secs_f64() > timeout_s {
+                return Err(Error::Serve(format!(
+                    "timeout waiting for idle ({} queued, {} running)",
+                    s.queued, s.running
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}

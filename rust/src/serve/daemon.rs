@@ -1,0 +1,360 @@
+//! The persistent registration daemon.
+//!
+//! A long-lived process that amortizes operator compilation across
+//! requests: N worker threads each own a PJRT client and a shared-warm
+//! operator cache (PJRT handles are `!Send`, so the cache is per-worker —
+//! the paper's "one device context per task" setting), fed by the priority
+//! scheduler, fronted by a TCP accept loop speaking the NDJSON protocol
+//! from `proto.rs`. One thread per connection; connections are cheap and
+//! clients are few (CLI, batch drivers, monitoring).
+//!
+//! Lifecycle: `Daemon::start` binds, spawns workers + accept loop, and
+//! returns a handle. Shutdown arrives either over the wire
+//! (`{"cmd":"shutdown"}`) or via `DaemonHandle::shutdown`; `drain` finishes
+//! queued work first. With a journal configured, every job event is
+//! appended to an NDJSON sidecar and replayed on restart so the daemon
+//! reports work done by previous incarnations.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::serve::journal::Journal;
+use crate::serve::proto::{read_line_bounded, Request, Response, MAX_LINE_BYTES};
+use crate::serve::scheduler::{
+    worker_loop, Executor, FailingExecutor, JobPayload, PjrtExecutor, Scheduler,
+};
+
+/// Daemon configuration (CLI flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests).
+    pub addr: String,
+    pub workers: usize,
+    /// Admission-control bound on *waiting* batch/urgent jobs.
+    pub queue_cap: usize,
+    /// Job journal path; `None` disables persistence.
+    pub journal: Option<PathBuf>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            addr: "127.0.0.1:7464".into(),
+            workers: 2,
+            queue_cap: 64,
+            journal: None,
+        }
+    }
+}
+
+/// Per-worker executor constructor. Called once on each worker thread; a
+/// failing factory degrades that worker to a clean job-failing stub rather
+/// than taking the daemon down.
+pub type ExecutorFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Executor>> + Send + Sync>;
+
+/// The production factory: each worker opens its own PJRT client + warm
+/// operator cache over `artifacts_dir`.
+pub fn pjrt_factory(artifacts_dir: PathBuf) -> ExecutorFactory {
+    Arc::new(move |_worker| {
+        Ok(Box::new(PjrtExecutor::open(&artifacts_dir)?) as Box<dyn Executor>)
+    })
+}
+
+/// Handle to a started daemon: address, scheduler access, and join.
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    scheduler: Scheduler,
+    accept_thread: Option<JoinHandle<()>>,
+    worker_threads: Vec<JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct scheduler access for in-process embedding (tests, benches).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    /// Trigger shutdown from the host process (equivalent to the wire verb).
+    pub fn shutdown(&self, drain: bool) {
+        self.scheduler.shutdown(drain);
+        wake_accept(self.addr);
+    }
+
+    /// Wait for workers and the accept loop to exit. Blocks until someone
+    /// (wire or host) triggers shutdown.
+    pub fn join(mut self) -> Result<()> {
+        for t in self.worker_threads.drain(..) {
+            t.join().map_err(|_| Error::Serve("worker thread panicked".into()))?;
+        }
+        if let Some(t) = self.accept_thread.take() {
+            t.join().map_err(|_| Error::Serve("accept thread panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Connect once to the listener so a blocked `accept` re-checks shutdown.
+/// Wildcard binds (0.0.0.0 / ::) are not connectable on every platform,
+/// so target loopback with the bound port in that case.
+fn wake_accept(addr: SocketAddr) {
+    let mut target = addr;
+    if target.ip().is_unspecified() {
+        target.set_ip(match target {
+            SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect(target);
+}
+
+pub struct Daemon;
+
+impl Daemon {
+    /// Bind, replay the journal, spawn workers and the accept loop.
+    pub fn start(cfg: DaemonConfig, factory: ExecutorFactory) -> Result<DaemonHandle> {
+        let scheduler = Scheduler::new(cfg.queue_cap, cfg.workers);
+
+        if let Some(path) = &cfg.journal {
+            let prior = Journal::replay(path)?;
+            scheduler.seed_prior_completed(Journal::completed_count(&prior));
+            let journal = Arc::new(Journal::open(path)?);
+            scheduler.set_event_sink(Box::new(move |ev| {
+                // Journal IO failure must not take down the scheduler; the
+                // journal is an audit trail, not the source of truth.
+                let _ = journal.append(ev);
+            }));
+        }
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+
+        let mut worker_threads = Vec::with_capacity(cfg.workers.max(1));
+        for w in 0..cfg.workers.max(1) {
+            let sched = scheduler.clone();
+            let factory = factory.clone();
+            worker_threads.push(std::thread::spawn(move || match factory(w) {
+                Ok(mut exec) => worker_loop(&sched, w, exec.as_mut()),
+                Err(e) => {
+                    let mut failing =
+                        FailingExecutor { msg: format!("worker {w} init failed: {e}") };
+                    worker_loop(&sched, w, &mut failing);
+                }
+            }));
+        }
+
+        let sched = scheduler.clone();
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if sched.is_shutting_down() {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let sched = sched.clone();
+                std::thread::spawn(move || handle_connection(stream, sched, addr));
+            }
+        });
+
+        Ok(DaemonHandle {
+            addr,
+            scheduler,
+            accept_thread: Some(accept_thread),
+            worker_threads,
+        })
+    }
+}
+
+/// Serve one client connection: one NDJSON request per line, one NDJSON
+/// response per line, until EOF or a shutdown request.
+fn handle_connection(stream: TcpStream, sched: Scheduler, addr: SocketAddr) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let line = match read_line_bounded(&mut reader, MAX_LINE_BYTES) {
+            Ok(Some(l)) => l,
+            Ok(None) => return,
+            Err(e) => {
+                // Oversized or broken line: answer once, drop the peer.
+                let resp = Response::Error(format!("bad request line: {e}"));
+                let _ = writer.write_all(resp.to_line().as_bytes());
+                let _ = writer.write_all(b"\n");
+                return;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, shutdown) = dispatch(&line, &sched);
+        if writer.write_all(response.to_line().as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            return;
+        }
+        if let Some(drain) = shutdown {
+            sched.shutdown(drain);
+            wake_accept(addr);
+            return;
+        }
+    }
+}
+
+/// Decode one request line and run it against the scheduler. Returns the
+/// response plus `Some(drain)` when the daemon should shut down.
+fn dispatch(line: &str, sched: &Scheduler) -> (Response, Option<bool>) {
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => return (Response::Error(e.to_string()), None),
+    };
+    match req {
+        Request::Ping => (Response::Ok, None),
+        Request::Submit(spec) => {
+            let priority = spec.priority;
+            match sched.submit(priority, JobPayload::Spec(spec)) {
+                Ok(id) => (Response::Submitted { id }, None),
+                Err(e) => (Response::Error(e.to_string()), None),
+            }
+        }
+        Request::Status(None) => (Response::Jobs(sched.jobs()), None),
+        Request::Status(Some(id)) => match sched.status(id) {
+            Some(v) => (Response::Job(v), None),
+            None => (Response::Error(format!("no such job {id}")), None),
+        },
+        Request::Cancel(id) => match sched.cancel(id) {
+            Ok(()) => (Response::Ok, None),
+            Err(e) => (Response::Error(e.to_string()), None),
+        },
+        Request::Stats => (Response::Stats(sched.stats()), None),
+        Request::Shutdown { drain } => (Response::Ok, Some(drain)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::client::Client;
+    use crate::serve::proto::{JobSpec, Priority};
+    use crate::serve::scheduler::{stub_report, JobState};
+
+    /// Instant stub executor with a per-(variant, n) warm cache emulation.
+    struct Stub {
+        seen: std::collections::BTreeSet<(String, usize)>,
+        compiles: u64,
+        hits: u64,
+    }
+
+    impl Executor for Stub {
+        fn execute(&mut self, payload: &JobPayload) -> Result<crate::registration::RunReport> {
+            let (variant, n, name) = match payload {
+                JobPayload::Spec(s) => (s.variant.clone(), s.n, s.name()),
+                JobPayload::Problem { problem, params } => {
+                    (params.variant.clone(), problem.n(), problem.name.clone())
+                }
+            };
+            // Each job touches a handful of operators for its (variant, n):
+            // first job compiles them, subsequent same-shape jobs hit warm.
+            if self.seen.insert((variant, n)) {
+                self.compiles += 5;
+            } else {
+                self.hits += 5;
+            }
+            Ok(stub_report(&name))
+        }
+
+        fn cache_stats(&self) -> (u64, u64) {
+            (self.compiles, self.hits)
+        }
+    }
+
+    fn stub_factory() -> ExecutorFactory {
+        Arc::new(|_w| {
+            Ok(Box::new(Stub { seen: Default::default(), compiles: 0, hits: 0 })
+                as Box<dyn Executor>)
+        })
+    }
+
+    fn test_config() -> DaemonConfig {
+        DaemonConfig { addr: "127.0.0.1:0".into(), workers: 1, queue_cap: 16, journal: None }
+    }
+
+    #[test]
+    fn serve_round_trip_smoke() {
+        // The CI smoke test: ping, submit, poll to done, stats, shutdown.
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        client.ping().unwrap();
+        let id = client
+            .submit(&JobSpec { priority: Priority::Urgent, ..Default::default() })
+            .unwrap();
+        let view = client.wait_terminal(id, 5.0).unwrap();
+        assert_eq!(view.state, JobState::Done);
+        assert_eq!(view.priority, Priority::Urgent);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.submitted, 1);
+        client.shutdown(true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn wire_errors_are_reported_not_fatal() {
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        // Unknown job id and malformed cancel both produce error responses
+        // on a connection that stays usable.
+        assert!(client.status(999).is_err());
+        assert!(client.cancel(999).is_err());
+        client.ping().unwrap();
+        client.shutdown(false).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_line_is_rejected_not_buffered() {
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut s = TcpStream::connect(handle.addr()).unwrap();
+        // Stream past the protocol cap with no newline; the daemon must
+        // answer with an error and drop us rather than buffer forever.
+        // Writes may hit a broken pipe once the daemon gives up — fine.
+        let chunk = vec![b'a'; 64 * 1024];
+        for _ in 0..((MAX_LINE_BYTES / chunk.len()) + 2) {
+            if s.write_all(&chunk).is_err() {
+                break;
+            }
+        }
+        let _ = s.flush();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        match read_line_bounded(&mut reader, MAX_LINE_BYTES) {
+            Ok(Some(resp)) => {
+                assert!(resp.contains("\"ok\":false"), "unexpected response: {resp}")
+            }
+            // Connection may be reset before the error line reaches us;
+            // the property under test is that the daemon cut us off.
+            Ok(None) | Err(_) => {}
+        }
+        handle.shutdown(false);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn failing_worker_factory_fails_jobs_cleanly() {
+        let factory: ExecutorFactory =
+            Arc::new(|_w| Err(Error::Serve("no artifacts here".into())));
+        let handle = Daemon::start(test_config(), factory).unwrap();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let id = client.submit(&JobSpec::default()).unwrap();
+        let view = client.wait_terminal(id, 5.0).unwrap();
+        assert_eq!(view.state, JobState::Failed);
+        assert!(view.error.unwrap().contains("no artifacts here"));
+        client.shutdown(true).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,227 @@
+//! Persistent job journal: NDJSON sidecar in the style of `data/io.rs`.
+//!
+//! Every lifecycle event is appended as one JSON line, so a restarted
+//! daemon can report work completed by previous incarnations (the `stats`
+//! verb's `prior_completed`) and an operator can audit what a node did
+//! with `grep`. Append-only and line-oriented: a torn final line (daemon
+//! killed mid-write) is skipped on replay rather than poisoning the file.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::error::Result;
+use crate::serve::scheduler::{JobEvent, JobState};
+use crate::util::json::Json;
+
+/// One replayed journal entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalEntry {
+    /// "submitted" | "done" | "failed" | "cancelled".
+    pub event: String,
+    pub id: u64,
+    pub name: String,
+    pub unix_s: f64,
+}
+
+/// Append-only NDJSON journal.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+fn now_unix() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+impl Journal {
+    /// Open (creating if absent) the journal at `path`.
+    pub fn open(path: &Path) -> Result<Journal> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Journal { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one scheduler event as a JSON line.
+    pub fn append(&self, ev: &JobEvent) -> Result<()> {
+        let j = match ev {
+            JobEvent::Submitted { id, name, priority } => Json::object([
+                ("event", Json::str("submitted")),
+                ("id", Json::num(*id as f64)),
+                ("name", Json::str(name)),
+                ("priority", Json::str(priority.as_str())),
+                ("unix_s", Json::num(now_unix())),
+            ]),
+            JobEvent::Finished { id, name, state, wall_s } => Json::object([
+                (
+                    "event",
+                    Json::str(if *state == JobState::Done { "done" } else { "failed" }),
+                ),
+                ("id", Json::num(*id as f64)),
+                ("name", Json::str(name)),
+                ("wall_s", Json::num(*wall_s)),
+                ("unix_s", Json::num(now_unix())),
+            ]),
+            JobEvent::Cancelled { id, name } => Json::object([
+                ("event", Json::str("cancelled")),
+                ("id", Json::num(*id as f64)),
+                ("name", Json::str(name)),
+                ("unix_s", Json::num(now_unix())),
+            ]),
+        };
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{}", j.render())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Replay the journal at `path`. Unparseable lines (torn tail writes,
+    /// including writes torn mid-UTF-8-codepoint) are skipped rather than
+    /// preventing startup. Missing file = empty history.
+    pub fn replay(path: &Path) -> Result<Vec<JournalEntry>> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        // Lossy decode: a crash mid-write must not poison the whole file.
+        let text = String::from_utf8_lossy(&bytes);
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let Ok(j) = Json::parse(line) else { continue };
+            let (Some(event), Some(id), Some(name)) = (
+                j.get("event").and_then(Json::as_str),
+                j.get("id").and_then(Json::as_usize),
+                j.get("name").and_then(Json::as_str),
+            ) else {
+                continue;
+            };
+            out.push(JournalEntry {
+                event: event.to_string(),
+                id: id as u64,
+                name: name.to_string(),
+                unix_s: j.get("unix_s").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Completed-job count in a replayed history (what a restarted daemon
+    /// reports as `prior_completed`).
+    pub fn completed_count(entries: &[JournalEntry]) -> u64 {
+        entries.iter().filter(|e| e.event == "done").count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::proto::Priority;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("claire_journal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let p = tmp("roundtrip.ndjson");
+        let journal = Journal::open(&p).unwrap();
+        journal
+            .append(&JobEvent::Submitted {
+                id: 1,
+                name: "na02 \"quoted\"\\n".into(),
+                priority: Priority::Emergency,
+            })
+            .unwrap();
+        journal
+            .append(&JobEvent::Finished {
+                id: 1,
+                name: "na02 \"quoted\"\\n".into(),
+                state: JobState::Done,
+                wall_s: 1.5,
+            })
+            .unwrap();
+        journal.append(&JobEvent::Cancelled { id: 2, name: "na03".into() }).unwrap();
+        journal
+            .append(&JobEvent::Finished {
+                id: 3,
+                name: "na10".into(),
+                state: JobState::Failed,
+                wall_s: 0.2,
+            })
+            .unwrap();
+        let entries = Journal::replay(&p).unwrap();
+        assert_eq!(entries.len(), 4);
+        assert_eq!(entries[0].event, "submitted");
+        assert_eq!(entries[0].name, "na02 \"quoted\"\\n");
+        assert_eq!(entries[1].event, "done");
+        assert_eq!(entries[2].event, "cancelled");
+        assert_eq!(entries[3].event, "failed");
+        assert_eq!(Journal::completed_count(&entries), 1);
+    }
+
+    #[test]
+    fn replay_missing_file_is_empty() {
+        let p = tmp("absent.ndjson");
+        assert_eq!(Journal::replay(&p).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn replay_skips_torn_tail() {
+        let p = tmp("torn.ndjson");
+        let journal = Journal::open(&p).unwrap();
+        journal.append(&JobEvent::Cancelled { id: 7, name: "ok".into() }).unwrap();
+        // Simulate a crash mid-write: unterminated garbage tail, torn in
+        // the middle of a multi-byte UTF-8 codepoint ("é" = 0xC3 0xA9).
+        let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+        f.write_all(b"{\"event\":\"done\",\"id\":8,\"name\":\"caf\xC3").unwrap();
+        drop(f);
+        let entries = Journal::replay(&p).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].id, 7);
+    }
+
+    #[test]
+    fn reopen_appends_across_incarnations() {
+        let p = tmp("reopen.ndjson");
+        {
+            let j = Journal::open(&p).unwrap();
+            j.append(&JobEvent::Finished {
+                id: 1,
+                name: "a".into(),
+                state: JobState::Done,
+                wall_s: 0.1,
+            })
+            .unwrap();
+        }
+        {
+            let j = Journal::open(&p).unwrap();
+            j.append(&JobEvent::Finished {
+                id: 2,
+                name: "b".into(),
+                state: JobState::Done,
+                wall_s: 0.1,
+            })
+            .unwrap();
+        }
+        let entries = Journal::replay(&p).unwrap();
+        assert_eq!(Journal::completed_count(&entries), 2);
+    }
+}

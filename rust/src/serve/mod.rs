@@ -1,0 +1,32 @@
+//! Persistent registration service: daemon, scheduler, wire protocol.
+//!
+//! The paper's deployment story ("multiple registration tasks ... in an
+//! embarrassingly parallel way", section 5) scaled past one-shot batches in
+//! the follow-up multi-node CLAIRE work; this subsystem is the repo's
+//! equivalent: a long-lived daemon that amortizes operator compilation
+//! across requests instead of paying `OpRegistry` warm-up per invocation.
+//!
+//! * [`scheduler`] — priority queue with bounded-queue admission control
+//!   and the pluggable [`scheduler::Executor`] execution backend (also the
+//!   engine under `coordinator::BatchService`).
+//! * [`daemon`] — TCP accept loop + worker pool + journal replay.
+//! * [`proto`] — newline-delimited JSON request/response encoding.
+//! * [`client`] — typed synchronous client for the protocol.
+//! * [`journal`] — append-only NDJSON job history for restart reporting.
+//!
+//! See DESIGN.md for the wire-protocol reference.
+
+pub mod client;
+pub mod daemon;
+pub mod journal;
+pub mod proto;
+pub mod scheduler;
+
+pub use client::Client;
+pub use daemon::{pjrt_factory, Daemon, DaemonConfig, DaemonHandle, ExecutorFactory};
+pub use journal::{Journal, JournalEntry};
+pub use proto::{JobSpec, Priority, Request, Response};
+pub use scheduler::{
+    worker_loop, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView, PjrtExecutor,
+    Scheduler, ServeStats,
+};

@@ -1,0 +1,603 @@
+//! Wire protocol for the registration daemon: newline-delimited JSON.
+//!
+//! Every request and every response is one JSON object on one line. The
+//! protocol is deliberately small — five verbs plus ping — and builds on
+//! `util/json.rs` (the offline image has no serde). Responses always carry
+//! an `"ok"` boolean; errors carry `"error"`.
+//!
+//! Requests:
+//! ```text
+//! {"cmd":"ping"}
+//! {"cmd":"submit","job":{"subject":"na02","n":16,"variant":"opt-fd8-cubic",
+//!                        "priority":"emergency","max_iter":50}}
+//! {"cmd":"status"}              all jobs
+//! {"cmd":"status","id":3}       one job
+//! {"cmd":"cancel","id":3}
+//! {"cmd":"stats"}
+//! {"cmd":"shutdown","drain":true}
+//! ```
+
+use crate::error::{Error, Result};
+use crate::registration::RegParams;
+use crate::serve::scheduler::{JobId, JobState, JobView, ServeStats};
+use crate::util::json::Json;
+
+/// Hard cap on one protocol line, both directions. Requests are tiny;
+/// responses are bounded by the scheduler's record retention. The cap
+/// keeps one misbehaving peer from growing an unbounded buffer.
+pub const MAX_LINE_BYTES: usize = 4 * 1024 * 1024;
+
+/// Hard cap on the wire-submittable grid size. The paper's largest runs
+/// are 256^3; 512^3 leaves headroom. Without this bound, a typo'd
+/// `"n": 5000` would allocate n^3 buffers in the worker (hundreds of GB)
+/// before the artifact lookup could reject the size — aborting the
+/// daemon, not just failing the job.
+pub const MAX_GRID_N: usize = 512;
+
+/// Read one `\n`-terminated line of at most `cap` bytes. `Ok(None)` on
+/// clean EOF; a line exceeding the cap is an `InvalidData` IO error (the
+/// caller should answer with a protocol error and drop the connection).
+pub fn read_line_bounded<R: std::io::BufRead>(
+    r: &mut R,
+    cap: usize,
+) -> std::io::Result<Option<String>> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let available = r.fill_buf()?;
+            if available.is_empty() {
+                (true, 0)
+            } else if let Some(pos) = available.iter().position(|&b| b == b'\n') {
+                buf.extend_from_slice(&available[..pos]);
+                (true, pos + 1)
+            } else {
+                buf.extend_from_slice(available);
+                (false, available.len())
+            }
+        };
+        r.consume(used);
+        if buf.len() > cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("protocol line exceeds {cap} bytes"),
+            ));
+        }
+        if done {
+            return Ok(if buf.is_empty() && used == 0 {
+                None
+            } else {
+                Some(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+    }
+}
+
+/// Dispatch priority. Higher priorities jump the queue (they do not kill
+/// running solves): the paper's emergency clinical scan is served before
+/// queued batch research jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Research / population-study batch work (default).
+    Batch = 0,
+    /// Interactive clinical sessions.
+    Urgent = 1,
+    /// Emergency scans: always admitted, dispatched first.
+    Emergency = 2,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Urgent => "urgent",
+            Priority::Emergency => "emergency",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "batch" => Ok(Priority::Batch),
+            "urgent" => Ok(Priority::Urgent),
+            "emergency" => Ok(Priority::Emergency),
+            other => Err(Error::Serve(format!("unknown priority '{other}'"))),
+        }
+    }
+}
+
+/// A wire-submittable registration job: a synthetic NIREP-analog subject
+/// at a given grid size and kernel variant, with the solver knobs that
+/// matter for scheduling experiments. (Volume upload is out of scope for
+/// the NDJSON protocol; the daemon synthesizes the pair, exactly like the
+/// CLI `register`/`batch` paths do.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub subject: String,
+    pub n: usize,
+    pub variant: String,
+    pub priority: Priority,
+    pub max_iter: Option<usize>,
+    pub beta: Option<f64>,
+    pub gtol: Option<f64>,
+    pub continuation: Option<bool>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            subject: "na02".into(),
+            n: 16,
+            variant: "opt-fd8-cubic".into(),
+            priority: Priority::Batch,
+            max_iter: None,
+            beta: None,
+            gtol: None,
+            continuation: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Display name used in job records and the journal.
+    pub fn name(&self) -> String {
+        format!("{}@{}^3/{}", self.subject, self.n, self.variant)
+    }
+
+    /// Solver parameters with the spec's overrides applied.
+    pub fn reg_params(&self) -> RegParams {
+        let mut p = RegParams { variant: self.variant.clone(), ..Default::default() };
+        if let Some(m) = self.max_iter {
+            p.max_iter = m;
+        }
+        if let Some(b) = self.beta {
+            p.beta = b;
+        }
+        if let Some(g) = self.gtol {
+            p.gtol = g;
+        }
+        if let Some(c) = self.continuation {
+            p.continuation = c;
+        }
+        p
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("subject", Json::str(&self.subject)),
+            ("n", Json::num(self.n as f64)),
+            ("variant", Json::str(&self.variant)),
+            ("priority", Json::str(self.priority.as_str())),
+        ];
+        if let Some(m) = self.max_iter {
+            pairs.push(("max_iter", Json::num(m as f64)));
+        }
+        if let Some(b) = self.beta {
+            pairs.push(("beta", Json::num(b)));
+        }
+        if let Some(g) = self.gtol {
+            pairs.push(("gtol", Json::num(g)));
+        }
+        if let Some(c) = self.continuation {
+            pairs.push(("continuation", Json::Bool(c)));
+        }
+        Json::object(pairs)
+    }
+
+    /// Strict decode: absent fields take defaults, but a field that is
+    /// present with the wrong type is an error — a clinical daemon must
+    /// not silently run a default job because `"n": "32"` was a string.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        if j.as_obj().is_none() {
+            return Err(Error::Serve("'job' must be an object".into()));
+        }
+        fn field<'a, T>(
+            j: &'a Json,
+            key: &str,
+            conv: impl Fn(&'a Json) -> Option<T>,
+            what: &str,
+        ) -> Result<Option<T>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => conv(v)
+                    .map(Some)
+                    .ok_or_else(|| Error::Serve(format!("job field '{key}' must be {what}"))),
+            }
+        }
+        let d = JobSpec::default();
+        let n = match field(j, "n", Json::as_index, "a non-negative integer")? {
+            None => d.n,
+            Some(x) if (1..=MAX_GRID_N as u64).contains(&x) => x as usize,
+            Some(x) => {
+                return Err(Error::Serve(format!(
+                    "job field 'n' = {x} out of range (1..={MAX_GRID_N})"
+                )))
+            }
+        };
+        Ok(JobSpec {
+            subject: field(j, "subject", Json::as_str, "a string")?
+                .map(str::to_string)
+                .unwrap_or(d.subject),
+            n,
+            variant: field(j, "variant", Json::as_str, "a string")?
+                .map(str::to_string)
+                .unwrap_or(d.variant),
+            priority: match field(j, "priority", Json::as_str, "a string")? {
+                Some(s) => Priority::parse(s)?,
+                None => d.priority,
+            },
+            max_iter: field(j, "max_iter", Json::as_index, "a non-negative integer")?
+                .map(|x| x as usize),
+            beta: field(j, "beta", Json::as_f64, "a number")?,
+            gtol: field(j, "gtol", Json::as_f64, "a number")?,
+            continuation: field(j, "continuation", Json::as_bool, "a boolean")?,
+        })
+    }
+}
+
+/// One decoded client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Submit(JobSpec),
+    /// `None` lists every job the daemon knows about.
+    Status(Option<JobId>),
+    Cancel(JobId),
+    Stats,
+    Shutdown { drain: bool },
+}
+
+impl Request {
+    pub fn to_line(&self) -> String {
+        let j = match self {
+            Request::Ping => Json::object([("cmd", Json::str("ping"))]),
+            Request::Submit(spec) => {
+                Json::object([("cmd", Json::str("submit")), ("job", spec.to_json())])
+            }
+            Request::Status(None) => Json::object([("cmd", Json::str("status"))]),
+            Request::Status(Some(id)) => {
+                Json::object([("cmd", Json::str("status")), ("id", Json::num(*id as f64))])
+            }
+            Request::Cancel(id) => {
+                Json::object([("cmd", Json::str("cancel")), ("id", Json::num(*id as f64))])
+            }
+            Request::Stats => Json::object([("cmd", Json::str("stats"))]),
+            Request::Shutdown { drain } => {
+                Json::object([("cmd", Json::str("shutdown")), ("drain", Json::Bool(*drain))])
+            }
+        };
+        j.render()
+    }
+
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line.trim())?;
+        let cmd = j
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Serve("request missing 'cmd'".into()))?;
+        let id_of = |j: &Json| -> Result<JobId> {
+            j.get("id")
+                .and_then(Json::as_index)
+                .ok_or_else(|| Error::Serve(format!("'{cmd}' requires an integer 'id'")))
+        };
+        match cmd {
+            "ping" => Ok(Request::Ping),
+            "submit" => {
+                let job = j
+                    .get("job")
+                    .ok_or_else(|| Error::Serve("submit requires a 'job' object".into()))?;
+                Ok(Request::Submit(JobSpec::from_json(job)?))
+            }
+            // A present-but-malformed id must error, not degrade to "all".
+            "status" => match j.get("id") {
+                None => Ok(Request::Status(None)),
+                Some(_) => Ok(Request::Status(Some(id_of(&j)?))),
+            },
+            "cancel" => Ok(Request::Cancel(id_of(&j)?)),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown {
+                drain: match j.get("drain") {
+                    None => true,
+                    Some(v) => v.as_bool().ok_or_else(|| {
+                        Error::Serve("shutdown field 'drain' must be a boolean".into())
+                    })?,
+                },
+            }),
+            other => Err(Error::Serve(format!("unknown command '{other}'"))),
+        }
+    }
+}
+
+/// One encoded daemon response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Ok,
+    Submitted { id: JobId },
+    Job(JobView),
+    Jobs(Vec<JobView>),
+    Stats(ServeStats),
+    Error(String),
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    x.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn job_to_json(v: &JobView) -> Json {
+    Json::object([
+        ("id", Json::num(v.id as f64)),
+        ("name", Json::str(&v.name)),
+        ("priority", Json::str(v.priority.as_str())),
+        ("state", Json::str(v.state.as_str())),
+        (
+            "dispatch_seq",
+            v.dispatch_seq.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
+        ),
+        ("latency_s", opt_num(v.latency_s)),
+        ("wall_s", opt_num(v.wall_s)),
+        ("mismatch_rel", opt_num(v.mismatch_rel)),
+        (
+            "iters",
+            v.iters.map(|i| Json::num(i as f64)).unwrap_or(Json::Null),
+        ),
+        (
+            "converged",
+            v.converged.map(Json::Bool).unwrap_or(Json::Null),
+        ),
+        (
+            "error",
+            v.error.as_deref().map(Json::str).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn job_from_json(j: &Json) -> Result<JobView> {
+    let miss = |k: &str| Error::Serve(format!("job view missing '{k}'"));
+    Ok(JobView {
+        id: j.get("id").and_then(Json::as_usize).ok_or_else(|| miss("id"))? as JobId,
+        name: j.get("name").and_then(Json::as_str).ok_or_else(|| miss("name"))?.to_string(),
+        priority: Priority::parse(
+            j.get("priority").and_then(Json::as_str).ok_or_else(|| miss("priority"))?,
+        )?,
+        state: JobState::parse(
+            j.get("state").and_then(Json::as_str).ok_or_else(|| miss("state"))?,
+        )?,
+        dispatch_seq: j.get("dispatch_seq").and_then(Json::as_usize).map(|x| x as u64),
+        latency_s: j.get("latency_s").and_then(Json::as_f64),
+        wall_s: j.get("wall_s").and_then(Json::as_f64),
+        mismatch_rel: j.get("mismatch_rel").and_then(Json::as_f64),
+        iters: j.get("iters").and_then(Json::as_usize),
+        converged: j.get("converged").and_then(Json::as_bool),
+        error: j.get("error").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+fn stats_to_json(s: &ServeStats) -> Json {
+    Json::object([
+        ("submitted", Json::num(s.submitted as f64)),
+        ("queued", Json::num(s.queued as f64)),
+        ("running", Json::num(s.running as f64)),
+        ("completed", Json::num(s.completed as f64)),
+        ("failed", Json::num(s.failed as f64)),
+        ("cancelled", Json::num(s.cancelled as f64)),
+        ("rejected", Json::num(s.rejected as f64)),
+        ("prior_completed", Json::num(s.prior_completed as f64)),
+        ("workers", Json::num(s.workers as f64)),
+        ("cache_compiles", Json::num(s.cache_compiles as f64)),
+        ("cache_hits", Json::num(s.cache_hits as f64)),
+    ])
+}
+
+fn stats_from_json(j: &Json) -> Result<ServeStats> {
+    let g = |k: &str| -> Result<u64> {
+        j.get(k)
+            .and_then(Json::as_usize)
+            .map(|x| x as u64)
+            .ok_or_else(|| Error::Serve(format!("stats missing '{k}'")))
+    };
+    Ok(ServeStats {
+        submitted: g("submitted")?,
+        queued: g("queued")? as usize,
+        running: g("running")? as usize,
+        completed: g("completed")?,
+        failed: g("failed")?,
+        cancelled: g("cancelled")?,
+        rejected: g("rejected")?,
+        prior_completed: g("prior_completed")?,
+        workers: g("workers")? as usize,
+        cache_compiles: g("cache_compiles")?,
+        cache_hits: g("cache_hits")?,
+    })
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        let j = match self {
+            Response::Ok => Json::object([("ok", Json::Bool(true))]),
+            Response::Submitted { id } => {
+                Json::object([("ok", Json::Bool(true)), ("id", Json::num(*id as f64))])
+            }
+            Response::Job(v) => Json::object([("ok", Json::Bool(true)), ("job", job_to_json(v))]),
+            Response::Jobs(vs) => Json::object([
+                ("ok", Json::Bool(true)),
+                ("jobs", Json::Arr(vs.iter().map(job_to_json).collect())),
+            ]),
+            Response::Stats(s) => {
+                Json::object([("ok", Json::Bool(true)), ("stats", stats_to_json(s))])
+            }
+            Response::Error(msg) => {
+                Json::object([("ok", Json::Bool(false)), ("error", Json::str(msg))])
+            }
+        };
+        j.render()
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        let j = Json::parse(line.trim())?;
+        let ok = j
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| Error::Serve("response missing 'ok'".into()))?;
+        if !ok {
+            let msg = j.get("error").and_then(Json::as_str).unwrap_or("unspecified");
+            return Ok(Response::Error(msg.to_string()));
+        }
+        if let Some(s) = j.get("stats") {
+            return Ok(Response::Stats(stats_from_json(s)?));
+        }
+        if let Some(v) = j.get("job") {
+            return Ok(Response::Job(job_from_json(v)?));
+        }
+        if let Some(vs) = j.get("jobs").and_then(Json::as_arr) {
+            return Ok(Response::Jobs(vs.iter().map(job_from_json).collect::<Result<_>>()?));
+        }
+        if let Some(id) = j.get("id").and_then(Json::as_usize) {
+            return Ok(Response::Submitted { id: id as JobId });
+        }
+        Ok(Response::Ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_all_verbs() {
+        let spec = JobSpec {
+            subject: "na03".into(),
+            n: 32,
+            variant: "opt-fd8-linear".into(),
+            priority: Priority::Emergency,
+            max_iter: Some(7),
+            beta: Some(1e-3),
+            gtol: None,
+            continuation: Some(false),
+        };
+        for req in [
+            Request::Ping,
+            Request::Submit(spec),
+            Request::Status(None),
+            Request::Status(Some(4)),
+            Request::Cancel(9),
+            Request::Stats,
+            Request::Shutdown { drain: false },
+        ] {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "one line: {line}");
+            assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn spec_defaults_and_params() {
+        let spec = JobSpec::from_json(&Json::parse(r#"{"subject":"na10"}"#).unwrap()).unwrap();
+        assert_eq!(spec.subject, "na10");
+        assert_eq!(spec.n, 16);
+        assert_eq!(spec.priority, Priority::Batch);
+        let p = spec.reg_params();
+        assert_eq!(p.variant, "opt-fd8-cubic");
+        assert_eq!(p.max_iter, RegParams::default().max_iter);
+
+        let spec2 = JobSpec { max_iter: Some(3), continuation: Some(false), ..spec };
+        let p2 = spec2.reg_params();
+        assert_eq!(p2.max_iter, 3);
+        assert!(!p2.continuation);
+    }
+
+    #[test]
+    fn bad_requests_are_errors() {
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse(r#"{"cmd":"warp"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"cancel"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit","job":{"priority":"asap"}}"#).is_err());
+        assert!(Request::parse("not json").is_err());
+        // Present-but-malformed status id errors instead of listing all.
+        assert!(Request::parse(r#"{"cmd":"status","id":"7"}"#).is_err());
+        assert_eq!(Request::parse(r#"{"cmd":"status"}"#).unwrap(), Request::Status(None));
+        // Non-integral ids must not truncate onto a different job.
+        assert!(Request::parse(r#"{"cmd":"cancel","id":1.9}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"status","id":-1}"#).is_err());
+        // Mistyped job fields error instead of silently running defaults.
+        assert!(Request::parse(r#"{"cmd":"submit","job":{"n":"32"}}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit","job":{"max_iter":2.5}}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit","job":5}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit","job":{"continuation":"yes"}}"#).is_err());
+        // Mistyped drain must not silently become a drain=true shutdown.
+        assert!(Request::parse(r#"{"cmd":"shutdown","drain":"false"}"#).is_err());
+        // Grid size is bounded: n^3 allocations must be rejected up front.
+        assert!(Request::parse(r#"{"cmd":"submit","job":{"n":5000}}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit","job":{"n":0}}"#).is_err());
+    }
+
+    #[test]
+    fn bounded_line_reader() {
+        use std::io::BufReader;
+        let mut r = BufReader::new(&b"one\ntwo\nlast-no-newline"[..]);
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap().as_deref(), Some("one"));
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap().as_deref(), Some("two"));
+        assert_eq!(
+            read_line_bounded(&mut r, 64).unwrap().as_deref(),
+            Some("last-no-newline")
+        );
+        assert_eq!(read_line_bounded(&mut r, 64).unwrap(), None);
+        // Over-cap line is an error even without a newline in sight.
+        let big = vec![b'a'; 100];
+        let mut r = BufReader::new(&big[..]);
+        let err = read_line_bounded(&mut r, 64).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let v = JobView {
+            id: 3,
+            name: "na02@16^3/opt-fd8-cubic".into(),
+            priority: Priority::Urgent,
+            state: JobState::Done,
+            dispatch_seq: Some(5),
+            latency_s: Some(1.25),
+            wall_s: Some(0.5),
+            mismatch_rel: Some(3e-2),
+            iters: Some(11),
+            converged: Some(true),
+            error: None,
+        };
+        match Response::parse(&Response::Job(v.clone()).to_line()).unwrap() {
+            Response::Job(got) => {
+                assert_eq!(got.id, v.id);
+                assert_eq!(got.state, JobState::Done);
+                assert_eq!(got.dispatch_seq, Some(5));
+                assert_eq!(got.iters, Some(11));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match Response::parse(&Response::Submitted { id: 12 }.to_line()).unwrap() {
+            Response::Submitted { id } => assert_eq!(id, 12),
+            other => panic!("unexpected {other:?}"),
+        }
+        match Response::parse(&Response::Error("queue full".into()).to_line()).unwrap() {
+            Response::Error(m) => assert_eq!(m, "queue full"),
+            other => panic!("unexpected {other:?}"),
+        }
+        let s = ServeStats {
+            submitted: 8,
+            queued: 1,
+            running: 2,
+            completed: 4,
+            failed: 1,
+            cancelled: 0,
+            rejected: 3,
+            prior_completed: 9,
+            workers: 2,
+            cache_compiles: 6,
+            cache_hits: 18,
+        };
+        match Response::parse(&Response::Stats(s).to_line()).unwrap() {
+            Response::Stats(got) => {
+                assert_eq!(got.cache_hits, 18);
+                assert_eq!(got.prior_completed, 9);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

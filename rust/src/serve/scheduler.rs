@@ -1,0 +1,918 @@
+//! Job scheduler: priority queue, admission control, lifecycle tracking.
+//!
+//! This is the daemon's execution backend and — since the serve refactor —
+//! also the engine under `coordinator::BatchService`. Workers block on
+//! `next_job`; jobs are dispatched highest-priority-first (FIFO within a
+//! priority band), so an emergency clinical scan submitted after a pile of
+//! batch research jobs is served next without killing running solves. A
+//! bounded queue provides backpressure: batch/urgent submissions are
+//! rejected once `queue_cap` jobs are waiting, emergency submissions are
+//! always admitted.
+//!
+//! The `Executor` trait decouples scheduling from PJRT so the scheduler's
+//! invariants (and the daemon's wire protocol) are testable without
+//! compiled artifacts; `PjrtExecutor` is the production implementation with
+//! the per-worker shared-warm operator cache keyed by `(op, variant, n)`.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::registration::problem::{RegParams, RegProblem};
+use crate::registration::report::RunReport;
+use crate::registration::solver::GnSolver;
+use crate::runtime::OpRegistry;
+use crate::serve::proto::{JobSpec, Priority};
+
+pub type JobId = u64;
+
+/// Observable job lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobState> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "done" => Ok(JobState::Done),
+            "failed" => Ok(JobState::Failed),
+            "cancelled" => Ok(JobState::Cancelled),
+            other => Err(Error::Serve(format!("unknown job state '{other}'"))),
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// What a worker executes. Wire submissions carry a spec (the worker
+/// synthesizes the problem against its own registry); the batch API hands
+/// over pre-built problems.
+#[derive(Clone, Debug)]
+pub enum JobPayload {
+    Spec(JobSpec),
+    Problem { problem: RegProblem, params: RegParams },
+}
+
+impl JobPayload {
+    pub fn name(&self) -> String {
+        match self {
+            JobPayload::Spec(s) => s.name(),
+            JobPayload::Problem { problem, .. } => problem.name.clone(),
+        }
+    }
+}
+
+/// Wire-friendly snapshot of one job (flat scalars only; the full
+/// `RunReport` stays daemon-side, see `Scheduler::full_report`).
+#[derive(Clone, Debug)]
+pub struct JobView {
+    pub id: JobId,
+    pub name: String,
+    pub priority: Priority,
+    pub state: JobState,
+    /// Monotonic dispatch counter: lower = started earlier. `None` until
+    /// a worker picks the job up (or forever, if cancelled while queued).
+    pub dispatch_seq: Option<u64>,
+    /// Submit-to-finish seconds (queue wait + solve) for terminal jobs.
+    pub latency_s: Option<f64>,
+    /// Solve seconds on the worker.
+    pub wall_s: Option<f64>,
+    pub mismatch_rel: Option<f64>,
+    pub iters: Option<usize>,
+    pub converged: Option<bool>,
+    pub error: Option<String>,
+}
+
+/// Aggregate daemon statistics (the `stats` wire verb).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub queued: usize,
+    pub running: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Submissions refused by admission control (bounded queue).
+    pub rejected: u64,
+    /// Jobs completed by previous daemon incarnations (from the journal).
+    pub prior_completed: u64,
+    pub workers: usize,
+    /// Operator compilations across all workers' caches.
+    pub cache_compiles: u64,
+    /// Warm-cache reuses across all workers: > 0 whenever several jobs
+    /// share a grid size and variant — the whole point of the daemon.
+    pub cache_hits: u64,
+}
+
+struct JobRecord {
+    name: String,
+    priority: Priority,
+    state: JobState,
+    payload: Option<JobPayload>,
+    submitted_at: Instant,
+    dispatch_seq: Option<u64>,
+    latency_s: Option<f64>,
+    wall_s: Option<f64>,
+    error: Option<String>,
+    report: Option<RunReport>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct QEntry {
+    priority: Priority,
+    seq: u64,
+    id: JobId,
+}
+
+impl Ord for QEntry {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Max-heap: highest priority first, then FIFO (lowest seq first).
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for QEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ShutdownMode {
+    Open,
+    /// Finish queued + running work, then workers exit.
+    Drain,
+    /// Workers exit as soon as their current job finishes.
+    Now,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    cancelled: u64,
+    rejected: u64,
+    prior_completed: u64,
+}
+
+struct State {
+    queue: BinaryHeap<QEntry>,
+    jobs: BTreeMap<JobId, JobRecord>,
+    next_id: JobId,
+    next_seq: u64,
+    next_dispatch: u64,
+    /// Jobs in `Queued` state (the heap may also hold stale entries for
+    /// cancelled jobs until a pop skips them — never count the heap).
+    queued: usize,
+    /// Queued batch/urgent jobs only: the admission-control denominator.
+    waiting_normal: usize,
+    running: usize,
+    /// Terminal job ids in completion order, for bounded retention.
+    terminal_order: VecDeque<JobId>,
+    shutdown: ShutdownMode,
+    counters: Counters,
+    /// Per-worker cumulative (compiles, hits) from each worker's operator
+    /// cache; summed in `stats`.
+    worker_cache: BTreeMap<usize, (u64, u64)>,
+}
+
+impl State {
+    fn note_dequeued(&mut self, priority: Priority) {
+        self.queued = self.queued.saturating_sub(1);
+        if priority < Priority::Emergency {
+            self.waiting_normal = self.waiting_normal.saturating_sub(1);
+        }
+    }
+
+    /// Record a terminal transition and evict the oldest terminal records
+    /// beyond `retention` so a long-lived daemon's history stays bounded.
+    fn note_terminal(&mut self, id: JobId, retention: usize) {
+        self.terminal_order.push_back(id);
+        while self.terminal_order.len() > retention {
+            if let Some(old) = self.terminal_order.pop_front() {
+                self.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+struct Inner {
+    st: Mutex<State>,
+    cv: Condvar,
+    queue_cap: usize,
+    /// Max terminal job records kept for status queries.
+    retention: usize,
+    workers: usize,
+}
+
+/// Lifecycle event, surfaced to an optional sink (the daemon journals
+/// these so a restarted process can report prior completed work).
+#[derive(Clone, Debug)]
+pub enum JobEvent {
+    Submitted { id: JobId, name: String, priority: Priority },
+    Finished { id: JobId, name: String, state: JobState, wall_s: f64 },
+    Cancelled { id: JobId, name: String },
+}
+
+type EventSink = Box<dyn Fn(&JobEvent) + Send + Sync>;
+
+/// Cloneable handle to the shared scheduler.
+#[derive(Clone)]
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    /// Events are *sequenced* under the state lock (pushed here) but
+    /// *delivered* to the sink outside it, so journal disk stalls never
+    /// block submit/status/worker traffic. The sink lock doubles as the
+    /// single-flusher guard: whoever holds it drains the queue FIFO.
+    events: Arc<Mutex<VecDeque<JobEvent>>>,
+    sink: Arc<Mutex<Option<EventSink>>>,
+}
+
+impl Scheduler {
+    /// `queue_cap` bounds the number of *waiting* batch/urgent jobs
+    /// (emergency jobs are exempt and do not count toward the bound);
+    /// `workers` is advisory (reported in stats). Terminal job records are
+    /// retained for status queries up to `4 * queue_cap` (min 1024), then
+    /// evicted oldest-first so a long-lived daemon stays bounded.
+    pub fn new(queue_cap: usize, workers: usize) -> Scheduler {
+        Scheduler {
+            inner: Arc::new(Inner {
+                st: Mutex::new(State {
+                    queue: BinaryHeap::new(),
+                    jobs: BTreeMap::new(),
+                    next_id: 1,
+                    next_seq: 0,
+                    next_dispatch: 0,
+                    queued: 0,
+                    waiting_normal: 0,
+                    running: 0,
+                    terminal_order: VecDeque::new(),
+                    shutdown: ShutdownMode::Open,
+                    counters: Counters::default(),
+                    worker_cache: BTreeMap::new(),
+                }),
+                cv: Condvar::new(),
+                queue_cap: queue_cap.max(1),
+                retention: (queue_cap.max(1) * 4).max(1024),
+                workers: workers.max(1),
+            }),
+            events: Arc::new(Mutex::new(VecDeque::new())),
+            sink: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// Install the lifecycle event sink (journal). Called before workers
+    /// start. The sink observes lifecycle order (a job's `Submitted`
+    /// always precedes its `Finished`) and runs outside the state lock;
+    /// it must not call back into the scheduler.
+    pub fn set_event_sink(&self, sink: EventSink) {
+        *self.sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Queue an event in sequence. Must be called with the state lock
+    /// held (that is what defines the sequence); cheap, memory-only.
+    fn emit_locked(&self, ev: JobEvent) {
+        self.events.lock().unwrap().push_back(ev);
+    }
+
+    /// Deliver queued events to the sink, FIFO. Called after the state
+    /// lock is released. The sink lock serializes flushers, so a thread
+    /// blocked here never holds up scheduler state — and a contended
+    /// flusher's events are drained by whoever currently holds the sink.
+    fn flush_events(&self) {
+        let sink = self.sink.lock().unwrap();
+        let Some(f) = sink.as_ref() else {
+            self.events.lock().unwrap().clear();
+            return;
+        };
+        loop {
+            let ev = self.events.lock().unwrap().pop_front();
+            let Some(ev) = ev else { break };
+            f(&ev);
+        }
+    }
+
+    /// Seed the completed-work counter from a replayed journal.
+    pub fn seed_prior_completed(&self, n: u64) {
+        self.inner.st.lock().unwrap().counters.prior_completed = n;
+    }
+
+    /// Admit a job, or reject it (queue full / shutting down). Emergency
+    /// jobs bypass the queue bound: the clinic never gets a busy signal.
+    pub fn submit(&self, priority: Priority, payload: JobPayload) -> Result<JobId> {
+        let name = payload.name();
+        let id;
+        {
+            let mut st = self.inner.st.lock().unwrap();
+            if st.shutdown != ShutdownMode::Open {
+                return Err(Error::Serve("daemon is shutting down".into()));
+            }
+            if priority < Priority::Emergency && st.waiting_normal >= self.inner.queue_cap {
+                st.counters.rejected += 1;
+                return Err(Error::Serve(format!(
+                    "queue full ({} waiting, cap {})",
+                    st.waiting_normal,
+                    self.inner.queue_cap
+                )));
+            }
+            id = st.next_id;
+            st.next_id += 1;
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            st.jobs.insert(
+                id,
+                JobRecord {
+                    name: name.clone(),
+                    priority,
+                    state: JobState::Queued,
+                    payload: Some(payload),
+                    submitted_at: Instant::now(),
+                    dispatch_seq: None,
+                    latency_s: None,
+                    wall_s: None,
+                    error: None,
+                    report: None,
+                },
+            );
+            st.queue.push(QEntry { priority, seq, id });
+            st.queued += 1;
+            if priority < Priority::Emergency {
+                st.waiting_normal += 1;
+            }
+            st.counters.submitted += 1;
+            // Sequence under the state lock: the journal must see
+            // Submitted before any worker can sequence this job's
+            // Finished.
+            self.emit_locked(JobEvent::Submitted { id, name, priority });
+        }
+        self.inner.cv.notify_one();
+        self.flush_events();
+        Ok(id)
+    }
+
+    /// Blocking highest-priority pop. Returns `None` when the scheduler is
+    /// draining and the queue is empty, or shutting down now.
+    pub fn next_job(&self, _worker: usize) -> Option<(JobId, JobPayload)> {
+        let mut st = self.inner.st.lock().unwrap();
+        loop {
+            if st.shutdown == ShutdownMode::Now {
+                return None;
+            }
+            // Pop, skipping stale entries: jobs cancelled while queued, and
+            // cancelled jobs whose record retention already evicted.
+            while let Some(entry) = st.queue.pop() {
+                let dispatch = st.next_dispatch;
+                let Some(rec) = st.jobs.get_mut(&entry.id) else { continue };
+                if rec.state != JobState::Queued {
+                    continue;
+                }
+                rec.state = JobState::Running;
+                rec.dispatch_seq = Some(dispatch);
+                let payload =
+                    rec.payload.take().expect("queued job still holds its payload");
+                st.note_dequeued(entry.priority);
+                st.next_dispatch += 1;
+                st.running += 1;
+                return Some((entry.id, payload));
+            }
+            if st.shutdown == ShutdownMode::Drain {
+                return None;
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Record a finished job. `wall_s` is the worker-side solve time.
+    pub fn complete(&self, id: JobId, result: Result<RunReport>, wall_s: f64) {
+        let mut st = self.inner.st.lock().unwrap();
+        let Some(rec) = st.jobs.get_mut(&id) else { return };
+        let latency = rec.submitted_at.elapsed().as_secs_f64();
+        rec.latency_s = Some(latency);
+        rec.wall_s = Some(wall_s);
+        match result {
+            Ok(report) => {
+                rec.state = JobState::Done;
+                rec.report = Some(report);
+            }
+            Err(e) => {
+                rec.state = JobState::Failed;
+                rec.error = Some(e.to_string());
+            }
+        }
+        let state = rec.state;
+        let ev = JobEvent::Finished { id, name: rec.name.clone(), state, wall_s };
+        st.running = st.running.saturating_sub(1);
+        match state {
+            JobState::Done => st.counters.completed += 1,
+            _ => st.counters.failed += 1,
+        }
+        st.note_terminal(id, self.inner.retention);
+        self.emit_locked(ev);
+        drop(st);
+        self.flush_events();
+    }
+
+    /// Cancel a queued job. Running jobs are not preempted mid-solve
+    /// (PJRT executions are not interruptible); terminal jobs are final.
+    pub fn cancel(&self, id: JobId) -> Result<()> {
+        let mut st = self.inner.st.lock().unwrap();
+        let Some(rec) = st.jobs.get_mut(&id) else {
+            return Err(Error::Serve(format!("no such job {id}")));
+        };
+        match rec.state {
+            JobState::Queued => {
+                rec.state = JobState::Cancelled;
+                rec.payload = None;
+                let priority = rec.priority;
+                let ev = JobEvent::Cancelled { id, name: rec.name.clone() };
+                // The stale heap entry is skipped at pop time, but the
+                // admission counters must release the slot immediately.
+                st.note_dequeued(priority);
+                st.counters.cancelled += 1;
+                st.note_terminal(id, self.inner.retention);
+                self.emit_locked(ev);
+                drop(st);
+                self.flush_events();
+                Ok(())
+            }
+            other => Err(Error::Serve(format!(
+                "job {id} is {} and cannot be cancelled",
+                other.as_str()
+            ))),
+        }
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobView> {
+        let st = self.inner.st.lock().unwrap();
+        st.jobs.get(&id).map(|r| view_of(id, r))
+    }
+
+    /// All known jobs, id-ordered.
+    pub fn jobs(&self) -> Vec<JobView> {
+        let st = self.inner.st.lock().unwrap();
+        st.jobs.iter().map(|(id, r)| view_of(*id, r)).collect()
+    }
+
+    /// Full report for a terminal job (daemon-side consumers: BatchService).
+    pub fn full_report(&self, id: JobId) -> Option<RunReport> {
+        let st = self.inner.st.lock().unwrap();
+        st.jobs.get(&id).and_then(|r| r.report.clone())
+    }
+
+    /// Workers report their cumulative operator-cache counters here after
+    /// each job; `stats` sums across workers.
+    pub fn report_cache(&self, worker: usize, compiles: u64, hits: u64) {
+        let mut st = self.inner.st.lock().unwrap();
+        st.worker_cache.insert(worker, (compiles, hits));
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let st = self.inner.st.lock().unwrap();
+        let (compiles, hits) = st
+            .worker_cache
+            .values()
+            .fold((0, 0), |(c, h), &(wc, wh)| (c + wc, h + wh));
+        ServeStats {
+            submitted: st.counters.submitted,
+            queued: st.queued,
+            running: st.running,
+            completed: st.counters.completed,
+            failed: st.counters.failed,
+            cancelled: st.counters.cancelled,
+            rejected: st.counters.rejected,
+            prior_completed: st.counters.prior_completed,
+            workers: self.inner.workers,
+            cache_compiles: compiles,
+            cache_hits: hits,
+        }
+    }
+
+    /// Begin shutdown. `drain = true` finishes queued work first.
+    pub fn shutdown(&self, drain: bool) {
+        let mut st = self.inner.st.lock().unwrap();
+        let mode = if drain { ShutdownMode::Drain } else { ShutdownMode::Now };
+        // Never downgrade Now back to Drain.
+        if st.shutdown != ShutdownMode::Now {
+            st.shutdown = mode;
+        }
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.inner.st.lock().unwrap().shutdown != ShutdownMode::Open
+    }
+
+    /// True once every submitted job is terminal.
+    pub fn idle(&self) -> bool {
+        let st = self.inner.st.lock().unwrap();
+        st.running == 0 && st.queued == 0
+    }
+}
+
+fn view_of(id: JobId, r: &JobRecord) -> JobView {
+    JobView {
+        id,
+        name: r.name.clone(),
+        priority: r.priority,
+        state: r.state,
+        dispatch_seq: r.dispatch_seq,
+        latency_s: r.latency_s,
+        wall_s: r.wall_s,
+        mismatch_rel: r.report.as_ref().map(|rep| rep.mismatch_rel),
+        iters: r.report.as_ref().map(|rep| rep.iters),
+        converged: r.report.as_ref().map(|rep| rep.converged),
+        error: r.error.clone(),
+    }
+}
+
+// -- Execution backend ------------------------------------------------------
+
+/// One worker's job runner. Implementations own whatever per-worker context
+/// they need (the real one owns a PJRT client + operator cache; tests use
+/// stubs so scheduler/daemon behavior is checkable without artifacts).
+pub trait Executor {
+    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport>;
+
+    /// Cumulative (compiles, warm hits) of this worker's operator cache.
+    fn cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// Production executor: per-worker PJRT client and shared-warm operator
+/// cache keyed by `(op, variant, n)` — compilation cost is paid once per
+/// worker process lifetime, not once per request.
+pub struct PjrtExecutor {
+    registry: OpRegistry,
+}
+
+impl PjrtExecutor {
+    pub fn open(artifacts_dir: &Path) -> Result<PjrtExecutor> {
+        Ok(PjrtExecutor { registry: OpRegistry::open(artifacts_dir)? })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+        let (problem, params) = match payload {
+            JobPayload::Spec(spec) => (
+                crate::data::synth::nirep_analog_pair(&self.registry, spec.n, &spec.subject)?,
+                spec.reg_params(),
+            ),
+            JobPayload::Problem { problem, params } => (problem.clone(), params.clone()),
+        };
+        let solver = GnSolver::new(&self.registry, params);
+        let res = solver.solve(&problem)?;
+        RunReport::build(&solver, &problem, &res)
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        (self.registry.cache_compiles(), self.registry.cache_hits())
+    }
+}
+
+/// Executor used when a worker's context failed to initialize (e.g. no
+/// artifacts directory): every job fails cleanly with the init error, and
+/// the rest of the pool keeps serving.
+pub struct FailingExecutor {
+    pub msg: String,
+}
+
+impl Executor for FailingExecutor {
+    fn execute(&mut self, _payload: &JobPayload) -> Result<RunReport> {
+        Err(Error::Serve(self.msg.clone()))
+    }
+}
+
+/// Run jobs until the scheduler says stop. This is the whole worker.
+///
+/// Executor panics are contained: the job is marked `Failed` and the
+/// worker keeps serving — otherwise one buggy solve would strand its job
+/// in `Running` forever (never completed, `idle()` never true) and
+/// silently shrink the pool.
+pub fn worker_loop<E: Executor + ?Sized>(sched: &Scheduler, worker: usize, exec: &mut E) {
+    while let Some((id, payload)) = sched.next_job(worker) {
+        let t0 = Instant::now();
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.execute(&payload)))
+                .unwrap_or_else(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic payload".into());
+                    Err(Error::Serve(format!("job panicked in executor: {msg}")))
+                });
+        let (compiles, hits) = exec.cache_stats();
+        sched.report_cache(worker, compiles, hits);
+        sched.complete(id, result, t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Synthetic `RunReport` for stub executors in tests and benches (the
+/// scheduler does not inspect report contents).
+pub fn stub_report(name: &str) -> RunReport {
+    RunReport {
+        dataset: name.to_string(),
+        variant: "stub".into(),
+        n: 16,
+        detf: crate::math::stats::Summary { min: 1.0, mean: 1.0, max: 1.0 },
+        nondiffeo_frac: 0.0,
+        dice_before: None,
+        dice_after: None,
+        mismatch_rel: 0.1,
+        grad_rel: 0.01,
+        iters: 1,
+        matvecs: 1,
+        time_s: 0.0,
+        converged: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Recording {
+        ran: Vec<String>,
+    }
+
+    impl Executor for Recording {
+        fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+            let name = payload.name();
+            self.ran.push(name.clone());
+            if name.contains("poison") {
+                return Err(Error::Serve("injected failure".into()));
+            }
+            Ok(stub_report(&name))
+        }
+
+        fn cache_stats(&self) -> (u64, u64) {
+            (3, self.ran.len().saturating_sub(1) as u64 * 3)
+        }
+    }
+
+    fn spec(subject: &str, priority: Priority) -> JobPayload {
+        JobPayload::Spec(JobSpec { subject: subject.into(), priority, ..Default::default() })
+    }
+
+    #[test]
+    fn priorities_jump_the_queue() {
+        let sched = Scheduler::new(64, 1);
+        let b1 = sched.submit(Priority::Batch, spec("b1", Priority::Batch)).unwrap();
+        let b2 = sched.submit(Priority::Batch, spec("b2", Priority::Batch)).unwrap();
+        let e1 = sched.submit(Priority::Emergency, spec("e1", Priority::Emergency)).unwrap();
+        let u1 = sched.submit(Priority::Urgent, spec("u1", Priority::Urgent)).unwrap();
+        sched.shutdown(true);
+        let mut order = Vec::new();
+        while let Some((id, _)) = sched.next_job(0) {
+            order.push(id);
+            sched.complete(id, Ok(stub_report("x")), 0.0);
+        }
+        assert_eq!(order, vec![e1, u1, b1, b2]);
+    }
+
+    #[test]
+    fn fifo_within_priority_band() {
+        let sched = Scheduler::new(64, 1);
+        let ids: Vec<JobId> = (0..5)
+            .map(|i| {
+                sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap()
+            })
+            .collect();
+        sched.shutdown(true);
+        let mut order = Vec::new();
+        while let Some((id, _)) = sched.next_job(0) {
+            order.push(id);
+            sched.complete(id, Ok(stub_report("x")), 0.0);
+        }
+        assert_eq!(order, ids, "same-priority jobs drain in submission order");
+    }
+
+    #[test]
+    fn bounded_queue_rejects_batch_admits_emergency() {
+        let sched = Scheduler::new(2, 1);
+        sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
+        let rejected = sched.submit(Priority::Batch, spec("c", Priority::Batch));
+        assert!(rejected.is_err(), "third batch job must hit admission control");
+        assert!(rejected.unwrap_err().to_string().contains("queue full"));
+        // Emergency bypasses the bound.
+        sched.submit(Priority::Emergency, spec("e", Priority::Emergency)).unwrap();
+        let s = sched.stats();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.queued, 3);
+    }
+
+    #[test]
+    fn cancelled_jobs_release_admission_slots_immediately() {
+        let sched = Scheduler::new(2, 1);
+        let a = sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        let b = sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
+        assert!(sched.submit(Priority::Batch, spec("c", Priority::Batch)).is_err());
+        sched.cancel(a).unwrap();
+        sched.cancel(b).unwrap();
+        // Stale heap entries remain, but the slots must free right away.
+        let c = sched.submit(Priority::Batch, spec("c", Priority::Batch)).unwrap();
+        assert_eq!(sched.stats().queued, 1);
+        sched.shutdown(true);
+        let mut order = Vec::new();
+        while let Some((id, _)) = sched.next_job(0) {
+            order.push(id);
+            sched.complete(id, Ok(stub_report("x")), 0.0);
+        }
+        assert_eq!(order, vec![c]);
+    }
+
+    #[test]
+    fn queued_emergencies_do_not_consume_batch_slots() {
+        let sched = Scheduler::new(2, 1);
+        for i in 0..5 {
+            sched
+                .submit(Priority::Emergency, spec(&format!("e{i}"), Priority::Emergency))
+                .unwrap();
+        }
+        // Five queued emergencies, yet both batch slots are still free.
+        sched.submit(Priority::Batch, spec("b1", Priority::Batch)).unwrap();
+        sched.submit(Priority::Batch, spec("b2", Priority::Batch)).unwrap();
+        assert!(sched.submit(Priority::Batch, spec("b3", Priority::Batch)).is_err());
+        assert_eq!(sched.stats().queued, 7);
+    }
+
+    #[test]
+    fn terminal_records_are_evicted_beyond_retention() {
+        // queue_cap 1 -> retention floor of 1024 terminal records.
+        let sched = Scheduler::new(1, 1);
+        let total = 1100u64;
+        for i in 0..total {
+            let id =
+                sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap();
+            let (got, _) = sched.next_job(0).unwrap();
+            assert_eq!(got, id);
+            sched.complete(id, Ok(stub_report("x")), 0.0);
+        }
+        let views = sched.jobs();
+        assert_eq!(views.len(), 1024, "history bounded at retention");
+        // Oldest records evicted, newest kept; counters still see all work.
+        assert!(sched.status(1).is_none());
+        assert!(sched.status(total).is_some());
+        assert_eq!(sched.stats().completed, total);
+    }
+
+    #[test]
+    fn stale_heap_entry_for_evicted_record_is_skipped_not_panic() {
+        // A cancelled job's QEntry can stay buried in the heap (under
+        // higher-priority traffic) until retention evicts its record;
+        // popping the stale entry must skip, not panic.
+        let sched = Scheduler::new(1, 1);
+        let x = sched.submit(Priority::Batch, spec("x", Priority::Batch)).unwrap();
+        sched.cancel(x).unwrap();
+        for i in 0..1100u64 {
+            let id = sched
+                .submit(Priority::Emergency, spec(&format!("e{i}"), Priority::Emergency))
+                .unwrap();
+            let (got, _) = sched.next_job(0).unwrap();
+            assert_eq!(got, id, "emergencies pop before the stale batch entry");
+            sched.complete(id, Ok(stub_report("e")), 0.0);
+        }
+        assert!(sched.status(x).is_none(), "cancelled record evicted by retention");
+        sched.shutdown(true);
+        assert!(sched.next_job(0).is_none(), "stale entry skipped cleanly");
+    }
+
+    #[test]
+    fn cancel_queued_only() {
+        let sched = Scheduler::new(64, 1);
+        let a = sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        let b = sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
+        sched.cancel(b).unwrap();
+        assert_eq!(sched.status(b).unwrap().state, JobState::Cancelled);
+        assert!(sched.cancel(b).is_err(), "cancel is not idempotent on terminal jobs");
+        assert!(sched.cancel(999).is_err());
+        sched.shutdown(true);
+        let mut order = Vec::new();
+        while let Some((id, _)) = sched.next_job(0) {
+            order.push(id);
+            sched.complete(id, Ok(stub_report("x")), 0.0);
+        }
+        assert_eq!(order, vec![a], "cancelled job is never dispatched");
+        assert_eq!(sched.status(b).unwrap().dispatch_seq, None);
+        assert_eq!(sched.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn worker_loop_drains_and_reports() {
+        let sched = Scheduler::new(64, 2);
+        for i in 0..6 {
+            sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap();
+        }
+        let poisoned = sched.submit(Priority::Batch, spec("poison", Priority::Batch)).unwrap();
+        sched.shutdown(true);
+        std::thread::scope(|s| {
+            for w in 0..2 {
+                let sched = sched.clone();
+                s.spawn(move || {
+                    let mut exec = Recording { ran: Vec::new() };
+                    worker_loop(&sched, w, &mut exec);
+                });
+            }
+        });
+        let stats = sched.stats();
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.failed, 1, "poisoned job fails without taking the pool down");
+        assert_eq!(sched.status(poisoned).unwrap().state, JobState::Failed);
+        assert!(sched.status(poisoned).unwrap().error.is_some());
+        assert!(stats.cache_hits > 0, "warm cache reuse across same-size jobs");
+        assert!(sched.idle());
+        // Every non-cancelled job has latency >= wall time.
+        for v in sched.jobs() {
+            let (Some(lat), Some(wall)) = (v.latency_s, v.wall_s) else {
+                panic!("terminal job missing timing: {v:?}");
+            };
+            assert!(lat + 1e-9 >= wall, "{lat} < {wall}");
+        }
+    }
+
+    #[test]
+    fn panicking_executor_fails_job_and_worker_survives() {
+        struct Panicky;
+        impl Executor for Panicky {
+            fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+                if payload.name().contains("boom") {
+                    panic!("solver exploded");
+                }
+                Ok(stub_report(&payload.name()))
+            }
+        }
+        let sched = Scheduler::new(8, 1);
+        let bad = sched.submit(Priority::Batch, spec("boom", Priority::Batch)).unwrap();
+        let good = sched.submit(Priority::Batch, spec("fine", Priority::Batch)).unwrap();
+        sched.shutdown(true);
+        let mut exec = Panicky;
+        worker_loop(&sched, 0, &mut exec);
+        let v = sched.status(bad).unwrap();
+        assert_eq!(v.state, JobState::Failed);
+        assert!(v.error.unwrap().contains("panicked"));
+        // The same worker went on to serve the next job.
+        assert_eq!(sched.status(good).unwrap().state, JobState::Done);
+        assert!(sched.idle());
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let sched = Scheduler::new(4, 1);
+        sched.shutdown(true);
+        assert!(sched.submit(Priority::Emergency, spec("late", Priority::Emergency)).is_err());
+    }
+
+    #[test]
+    fn event_sink_sees_lifecycle() {
+        use std::sync::Mutex as StdMutex;
+        let events: Arc<StdMutex<Vec<String>>> = Arc::new(StdMutex::new(Vec::new()));
+        let sched = Scheduler::new(8, 1);
+        let ev2 = events.clone();
+        sched.set_event_sink(Box::new(move |ev| {
+            let tag = match ev {
+                JobEvent::Submitted { .. } => "submitted",
+                JobEvent::Finished { state, .. } => state.as_str(),
+                JobEvent::Cancelled { .. } => "cancelled",
+            };
+            ev2.lock().unwrap().push(tag.to_string());
+        }));
+        let a = sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        let b = sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
+        sched.cancel(b).unwrap();
+        sched.shutdown(true);
+        let (id, _) = sched.next_job(0).unwrap();
+        assert_eq!(id, a);
+        sched.complete(id, Ok(stub_report("a")), 0.0);
+        assert_eq!(
+            *events.lock().unwrap(),
+            vec!["submitted", "submitted", "cancelled", "done"]
+        );
+    }
+}

@@ -1,12 +1,33 @@
-//! Minimal JSON parser (manifest files only).
+//! Minimal JSON parser + serializer (manifest, wire protocol, sidecars).
 //!
-//! The offline image has no `serde`; the artifact manifest is the only JSON
-//! we consume, so a small recursive-descent parser over a value enum is the
-//! right size. Supports the full JSON grammar minus exotic number forms.
+//! The offline image has no `serde`; the artifact manifest, the serve wire
+//! protocol, and the volume sidecars are the only JSON we touch, so a small
+//! recursive-descent parser over a value enum is the right size. Supports
+//! the full JSON grammar minus exotic number forms. `render` is the inverse
+//! used by the daemon's newline-delimited protocol and the job journal.
 
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
+
+/// Escape a string for embedding inside a JSON string literal (no quotes
+/// added). Shared by the serializer, the volume sidecars in `data/io.rs`,
+/// and the serve wire protocol.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -56,6 +77,16 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Strict non-negative integer: rejects fractional and negative
+    /// numbers instead of truncating/clamping like `as_usize`. Use for
+    /// identifiers, where 1.9 must not silently become job 1.
+    pub fn as_index(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x < 9e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -67,6 +98,80 @@ impl Json {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Build an object from (key, value) pairs (keys are sorted by BTreeMap;
+    /// the wire protocol is order-insensitive).
+    pub fn object<'a>(pairs: impl IntoIterator<Item = (&'a str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    /// Serialize compactly (one line, no trailing newline). Integral finite
+    /// numbers render without a fractional part so ids/counts round-trip
+    /// through `as_usize`; non-finite numbers render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    e.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
         }
     }
 }
@@ -287,5 +392,45 @@ mod tests {
     fn parse_unicode_multibyte() {
         let v = Json::parse("\"caf\u{e9} \u{1F600}\"").unwrap();
         assert_eq!(v.as_str(), Some("café 😀"));
+    }
+
+    #[test]
+    fn escape_covers_control_and_quotes() {
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let v = Json::object([
+            ("id", Json::num(42.0)),
+            ("name", Json::str("a\"b\\c\nd")),
+            ("ok", Json::Bool(true)),
+            ("xs", Json::Arr(vec![Json::num(1.5), Json::Null])),
+        ]);
+        let s = v.render();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        // Integral numbers render without a fraction (ids survive as_usize).
+        assert!(s.contains("\"id\":42"));
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn as_index_is_strict() {
+        assert_eq!(Json::num(7.0).as_index(), Some(7));
+        assert_eq!(Json::num(0.0).as_index(), Some(0));
+        assert_eq!(Json::num(1.9).as_index(), None);
+        assert_eq!(Json::num(-1.0).as_index(), None);
+        assert_eq!(Json::str("7").as_index(), None);
+        // as_usize keeps its lenient truncating behavior.
+        assert_eq!(Json::num(1.9).as_usize(), Some(1));
     }
 }

@@ -1,0 +1,244 @@
+//! Daemon integration tests over the real wire protocol (TCP loopback).
+//!
+//! The executors are stubs (sleep + per-(variant, n) warm-cache emulation)
+//! so scheduling, admission control, cancellation, stats, and journal
+//! restart behavior are exercised deterministically without compiled
+//! artifacts; the PJRT execution path itself is covered by the
+//! artifact-gated tests in `integration_registration.rs` and
+//! `coordinator::service`.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use claire::error::Result;
+use claire::registration::RunReport;
+use claire::serve::{
+    scheduler::stub_report, Client, Daemon, DaemonConfig, Executor, ExecutorFactory, JobPayload,
+    JobSpec, JobState, Priority,
+};
+
+/// Stub worker: sleeps `max_iter` milliseconds per job (so tests control
+/// service time through the spec) and emulates the shared-warm operator
+/// cache: the first job at a given (variant, n) "compiles" a handful of
+/// operators, every later same-shape job hits them warm.
+struct StubExec {
+    warm: BTreeSet<(String, usize)>,
+    compiles: u64,
+    hits: u64,
+}
+
+impl Executor for StubExec {
+    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+        let JobPayload::Spec(spec) = payload else {
+            return Ok(stub_report("problem"));
+        };
+        if self.warm.insert((spec.variant.clone(), spec.n)) {
+            self.compiles += 5;
+        } else {
+            self.hits += 5;
+        }
+        let delay_ms = spec.max_iter.unwrap_or(1) as u64;
+        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        Ok(stub_report(&spec.name()))
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        (self.compiles, self.hits)
+    }
+}
+
+fn stub_factory() -> ExecutorFactory {
+    Arc::new(|_w| {
+        Ok(Box::new(StubExec { warm: BTreeSet::new(), compiles: 0, hits: 0 })
+            as Box<dyn Executor>)
+    })
+}
+
+fn spec(subject: &str, priority: Priority, delay_ms: usize) -> JobSpec {
+    JobSpec {
+        subject: subject.into(),
+        priority,
+        max_iter: Some(delay_ms),
+        ..Default::default()
+    }
+}
+
+/// Block until `running` workers are busy (so subsequent submissions are
+/// queueing decisions, not dispatch races).
+fn wait_running(client: &mut Client, running: usize) {
+    let t0 = std::time::Instant::now();
+    while client.stats().unwrap().running < running {
+        assert!(t0.elapsed().as_secs_f64() < 10.0, "workers never picked up blockers");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
+fn tmp_journal(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("claire_serve_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// The acceptance scenario: in-process daemon, >= 8 concurrent jobs with
+/// mixed priorities over the wire, priority dispatch order, cancellation
+/// of a queued job, and compiled-operator reuse visible in stats.
+#[test]
+fn daemon_schedules_by_priority_cancels_and_reports_reuse() {
+    let journal = tmp_journal("accept.ndjson");
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_cap: 32,
+        journal: Some(journal.clone()),
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let addr = handle.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    // Two long blockers occupy both workers so the next 8 submissions are
+    // genuinely concurrent in the queue when dispatch decisions happen.
+    let blocker_a = client.submit(&spec("na02", Priority::Batch, 600)).unwrap();
+    let blocker_b = client.submit(&spec("na03", Priority::Batch, 600)).unwrap();
+    wait_running(&mut client, 2);
+
+    // 8 queued jobs, mixed priorities, submitted batch-first so priority
+    // (not submission order) must explain the dispatch order.
+    let subjects = ["na02", "na03", "na10"];
+    let batch: Vec<u64> = (0..3)
+        .map(|i| client.submit(&spec(subjects[i], Priority::Batch, 10)).unwrap())
+        .collect();
+    let urgent: Vec<u64> =
+        (0..2).map(|_| client.submit(&spec("na02", Priority::Urgent, 10)).unwrap()).collect();
+    let emergency: Vec<u64> =
+        (0..3).map(|_| client.submit(&spec("na03", Priority::Emergency, 10)).unwrap()).collect();
+
+    // Cancel one still-queued batch job before the blockers finish.
+    client.cancel(batch[2]).unwrap();
+    // Cancelling again (or cancelling a finished job) is a wire error, not
+    // a dead connection.
+    assert!(client.cancel(batch[2]).is_err());
+    client.ping().unwrap();
+
+    let stats = client.wait_idle(30.0).unwrap();
+
+    // Every job terminal; the cancelled one never ran.
+    let cancelled = client.status(batch[2]).unwrap();
+    assert_eq!(cancelled.state, JobState::Cancelled);
+    assert_eq!(cancelled.dispatch_seq, None);
+    for &id in [blocker_a, blocker_b].iter().chain(&batch[..2]).chain(&urgent).chain(&emergency) {
+        assert_eq!(client.status(id).unwrap().state, JobState::Done, "job {id}");
+    }
+
+    // Priority order: every emergency job dispatched before every urgent
+    // job, every urgent before every surviving batch job (blockers aside —
+    // they were dispatched first, while the queue was empty).
+    let mut dseq = |id: u64| client.status(id).unwrap().dispatch_seq.unwrap();
+    let max_emergency = emergency.iter().map(|&id| dseq(id)).max().unwrap();
+    let min_urgent = urgent.iter().map(|&id| dseq(id)).min().unwrap();
+    let max_urgent = urgent.iter().map(|&id| dseq(id)).max().unwrap();
+    let min_batch = batch[..2].iter().map(|&id| dseq(id)).min().unwrap();
+    assert!(
+        max_emergency < min_urgent,
+        "emergency jobs must dispatch before urgent (max_e {max_emergency} vs min_u {min_urgent})"
+    );
+    assert!(
+        max_urgent < min_batch,
+        "urgent jobs must dispatch before batch (max_u {max_urgent} vs min_b {min_batch})"
+    );
+
+    // Shared-warm operator cache: all jobs share (variant, n), so every
+    // job after each worker's first is a warm hit.
+    assert!(stats.cache_hits > 0, "expected compiled-operator reuse, got {stats:?}");
+    assert!(stats.cache_compiles > 0);
+    assert_eq!(stats.completed, 9);
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.submitted, 10);
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+
+    // Restarted daemon replays the journal and reports prior work.
+    let cfg2 = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: Some(journal),
+    };
+    let handle2 = Daemon::start(cfg2, stub_factory()).unwrap();
+    let mut client2 = Client::connect(&handle2.addr().to_string()).unwrap();
+    let s2 = client2.stats().unwrap();
+    assert_eq!(s2.prior_completed, 9, "restarted daemon must report journaled work");
+    assert_eq!(s2.submitted, 0);
+    client2.shutdown(false).unwrap();
+    handle2.join().unwrap();
+}
+
+/// Admission control over the wire: once `queue_cap` batch jobs wait, new
+/// batch submissions are rejected with a useful error while emergency
+/// submissions still get through.
+#[test]
+fn daemon_applies_backpressure_but_admits_emergencies() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 2,
+        journal: None,
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    // One running blocker + two queued fill the bound.
+    client.submit(&spec("na02", Priority::Batch, 500)).unwrap();
+    wait_running(&mut client, 1);
+    client.submit(&spec("na02", Priority::Batch, 10)).unwrap();
+    client.submit(&spec("na03", Priority::Batch, 10)).unwrap();
+    let err = client.submit(&spec("na10", Priority::Batch, 10)).unwrap_err();
+    assert!(err.to_string().contains("queue full"), "{err}");
+    let ok = client.submit(&spec("na10", Priority::Emergency, 10));
+    assert!(ok.is_ok(), "emergency must bypass the bound: {ok:?}");
+
+    let stats = client.wait_idle(30.0).unwrap();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.completed, 4);
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// Multiple concurrent client connections against one daemon.
+#[test]
+fn daemon_serves_concurrent_clients() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_cap: 64,
+        journal: None,
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let addr = handle.addr().to_string();
+    let ids: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    (0..3)
+                        .map(|_| c.submit(&spec("na02", Priority::Batch, 5)).unwrap())
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    // All 12 ids are distinct.
+    assert_eq!(ids.iter().collect::<BTreeSet<_>>().len(), 12);
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.wait_idle(30.0).unwrap();
+    assert_eq!(stats.completed, 12);
+    assert_eq!(client.jobs().unwrap().len(), 12);
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}

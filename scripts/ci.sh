@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verify + formatting + serve round-trip smoke test.
+# Usage: scripts/ci.sh  (from anywhere; cd's to the rust crate)
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo fmt --check (advisory) =="
+# Advisory until the tree is normalized: the seed predates rustfmt and
+# carries >100-col lines in a dozen files. First session with a Rust
+# toolchain: run `cargo fmt`, commit, then drop the `|| true`.
+cargo fmt --check || echo "WARNING: tree is not rustfmt-clean (see scripts/ci.sh note)"
+
+echo "== serve round-trip smoke (fail-fast) =="
+cargo test -q serve_round_trip_smoke
+
+echo "== cargo test -q (tier-1) =="
+cargo test -q
+
+echo "CI OK"

@@ -12,10 +12,14 @@ round-trips cleanly (see /opt/xla-example/README.md).
 
 Artifact naming: ``<op>__<variant>__n<N>.hlo.txt`` plus a ``manifest.json``
 describing inputs/outputs of every artifact (the Rust side is manifest
-driven; no shapes are hard-coded over there).
+driven; no shapes are hard-coded over there). Mixed-precision artifacts
+append ``__mixed`` to the key, carry ``"precision": "mixed"`` and declare
+per-tensor ``dtype`` entries (``f16`` cache inputs) — the Rust runtime
+marshals literals by these dtypes.
 
 Usage:
     python -m compile.aot --out-dir ../artifacts --sizes 16,32,64
+    python -m compile.aot --out-dir ../artifacts --precisions full,mixed
 """
 
 from __future__ import annotations
@@ -33,7 +37,16 @@ from jax._src.lib import xla_client as xc
 
 from . import model
 
-F32 = "f32"
+# Manifest dtype tags by numpy dtype name (runtime/manifest.rs mirrors).
+DTYPE_TAGS = {"float32": "f32", "float16": "f16", "bfloat16": "bf16"}
+
+
+def dtype_tag(dt) -> str:
+    name = np.dtype(dt).name
+    try:
+        return DTYPE_TAGS[name]
+    except KeyError:
+        raise ValueError(f"no manifest tag for dtype {dt!r}") from None
 
 
 def to_hlo_text(lowered) -> str:
@@ -58,8 +71,8 @@ def to_hlo_text(lowered) -> str:
     return text
 
 
-def spec(*shape):
-    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
 @dataclasses.dataclass
@@ -105,8 +118,10 @@ def op_defs(p: model.Problem, kernel_level: bool) -> list:
             "div_fd8": [("w", v3)],
             "interp_lin": [("f", s3), ("q", q3)],
             "interp_linbf16": [("f", s3), ("q", q3)],
+            "interp_lin_f16": [("f", s3), ("q", q3)],
             "interp_lag": [("f", s3), ("q", q3)],
             "interp_spl": [("f", s3), ("q", q3)],
+            "interp_spl_f16": [("f", s3), ("q", q3)],
             "interp_lag_jnp": [("f", s3), ("q", q3)],
             "prefilter": [("f", s3)],
             "reg_apply": [("w", v3)],
@@ -131,6 +146,36 @@ def op_defs(p: model.Problem, kernel_level: bool) -> list:
     return ops
 
 
+def mixed_op_defs(p: model.Problem) -> list:
+    """Reduced-precision artifacts for one (variant, n) pair.
+
+    The solver's precision split (paper §3) runs only the Hessian matvec
+    inner loop reduced, so ``mixed`` lowers exactly that operator: the
+    *field-valued* caches (``m_traj``, ``divv``) marshal as fp16 (halved
+    boundary bytes), fp16-storage interpolation/stencil kernels run inside,
+    and ``vt`` in / ``H vt`` out stay f32. The characteristic coordinates
+    ``yb``/``yf`` also stay f32 — they carry absolute positions whose f16
+    ulp grows with n (a quarter voxel at 256^3); the paper's texture unit
+    reduces interpolation *data*, never query coordinates. Gradient/
+    objective/line-search artifacts stay full precision.
+    """
+    assert p.precision == "mixed"
+    n, nt = p.n, p.nt
+    m = n * n * n
+    v3 = spec(3, n, n, n)
+    q3 = spec(3, m)
+    bg = spec(2)
+    traj16 = spec(nt + 1, n, n, n, dtype=jnp.float16)
+    s16 = spec(n, n, n, dtype=jnp.float16)
+    return [
+        OpDef(
+            "hess_matvec",
+            model.build_hess_matvec(p),
+            [("vt", v3), ("m_traj", traj16), ("yb", q3), ("yf", q3), ("divv", s16), ("bg", bg)],
+        ),
+    ]
+
+
 def lower_one(opdef: OpDef, out_path: pathlib.Path) -> dict:
     """Lower one op, write HLO text, return its manifest entry."""
     t0 = time.time()
@@ -138,18 +183,22 @@ def lower_one(opdef: OpDef, out_path: pathlib.Path) -> dict:
     lowered = jax.jit(opdef.fn).lower(*specs)
     text = to_hlo_text(lowered)
     out_path.write_text(text)
-    out_shapes = [
-        list(map(int, getattr(s, "shape", ()))) for s in jax.tree.leaves(lowered.out_info)
+    outs = [
+        {
+            "shape": list(map(int, getattr(s, "shape", ()))),
+            "dtype": dtype_tag(getattr(s, "dtype", np.float32)),
+        }
+        for s in jax.tree.leaves(lowered.out_info)
     ]
     dt = time.time() - t0
     print(f"  {out_path.name}: {len(text) / 1e6:.2f} MB in {dt:.1f}s")
     return {
         "file": out_path.name,
         "inputs": [
-            {"name": nm, "shape": list(map(int, s.shape)), "dtype": F32}
+            {"name": nm, "shape": list(map(int, s.shape)), "dtype": dtype_tag(s.dtype)}
             for nm, s in opdef.inputs
         ],
-        "outputs": [{"shape": sh, "dtype": F32} for sh in out_shapes],
+        "outputs": outs,
     }
 
 
@@ -158,6 +207,11 @@ def main() -> None:
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--sizes", default="16,32,64")
     ap.add_argument("--variants", default=",".join(model.VARIANTS))
+    ap.add_argument(
+        "--precisions",
+        default=",".join(model.PRECISIONS),
+        help="comma list of full,mixed; mixed lowers the reduced hess_matvec",
+    )
     ap.add_argument("--nt", type=int, default=model.DEFAULT_NT)
     ap.add_argument("--ops", default="", help="only lower ops whose name is listed")
     ap.add_argument("--force", action="store_true", help="re-lower even if file exists")
@@ -167,6 +221,9 @@ def main() -> None:
     out_dir.mkdir(parents=True, exist_ok=True)
     sizes = [int(s) for s in args.sizes.split(",") if s]
     variants = [v for v in args.variants.split(",") if v]
+    precisions = [p for p in args.precisions.split(",") if p]
+    for prec in precisions:
+        assert prec in model.PRECISIONS, f"unknown precision {prec!r}"
     only = set(args.ops.split(",")) if args.ops else None
 
     manifest_path = out_dir / "manifest.json"
@@ -181,22 +238,36 @@ def main() -> None:
 
     for n in sizes:
         for variant in variants:
-            p = model.Problem(n=n, nt=args.nt, variant=variant)
-            # Kernel-level + shared ops are variant-independent; emit them
-            # once per size, attached to the default optimized variant.
-            kernel_level = variant == "opt-fd8-cubic"
-            print(f"[aot] n={n} variant={variant}")
-            for opdef in op_defs(p, kernel_level):
-                if only and opdef.name not in only:
-                    continue
-                key = f"{opdef.name}__{variant}__n{n}"
-                fname = out_dir / f"{key}.hlo.txt"
-                if fname.exists() and not args.force and key in manifest["artifacts"]:
-                    continue
-                entry = lower_one(opdef, fname)
-                entry.update({"op": opdef.name, "variant": variant, "n": n, "nt": args.nt})
-                manifest["artifacts"][key] = entry
-                manifest_path.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+            for prec in precisions:
+                if prec == "full":
+                    p = model.Problem(n=n, nt=args.nt, variant=variant)
+                    # Kernel-level + shared ops are variant-independent;
+                    # emit them once per size, attached to the default
+                    # optimized variant.
+                    defs = op_defs(p, kernel_level=variant == "opt-fd8-cubic")
+                    suffix = ""
+                else:
+                    p = model.Problem(n=n, nt=args.nt, variant=variant, precision="mixed")
+                    defs = mixed_op_defs(p)
+                    suffix = "__mixed"
+                print(f"[aot] n={n} variant={variant} precision={prec}")
+                for opdef in defs:
+                    if only and opdef.name not in only:
+                        continue
+                    key = f"{opdef.name}__{variant}__n{n}{suffix}"
+                    fname = out_dir / f"{key}.hlo.txt"
+                    if fname.exists() and not args.force and key in manifest["artifacts"]:
+                        continue
+                    entry = lower_one(opdef, fname)
+                    entry.update(
+                        {"op": opdef.name, "variant": variant, "n": n, "nt": args.nt}
+                    )
+                    if prec != "full":
+                        entry["precision"] = prec
+                    manifest["artifacts"][key] = entry
+                    manifest_path.write_text(
+                        json.dumps(manifest, indent=1, sort_keys=True)
+                    )
 
     print(f"[aot] manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
 

@@ -14,6 +14,12 @@ from global memory, which the paper measures at ~2% bandwidth overhead).
 All kernels run with ``interpret=True``: on this image's CPU-only PJRT stack
 a real TPU lowering would emit Mosaic custom-calls that cannot execute; the
 interpret lowering emits plain HLO with identical arithmetic.
+
+Mixed precision: every kernel takes a static ``storage`` dtype. With
+``storage=jnp.float16`` the padded field is held (and the stencil taps are
+read) at fp16 while each tap *difference* is widened to f32 before the
+coefficient FMA — fp16 storage under f32 accumulators, the paper's §3
+scheme. ``storage=None`` is the full-precision f32 path.
 """
 
 from __future__ import annotations
@@ -60,7 +66,9 @@ def _fd8_axis(win: jnp.ndarray, axis: int, lo: tuple, hi: tuple, h: float) -> jn
     """Apply the FD8 stencil along ``axis`` of a padded window.
 
     ``lo``/``hi`` give the interior slice bounds per axis (halo trimmed on
-    the non-derivative axes).
+    the non-derivative axes). The window may be stored at reduced precision;
+    tap pairs subtract at storage precision, then every product and the
+    running sum are f32 (explicit widening — the f32-accumulator rule).
     """
     acc = None
     for k, c in enumerate(ref.FD8_COEFFS, start=1):
@@ -73,7 +81,7 @@ def _fd8_axis(win: jnp.ndarray, axis: int, lo: tuple, hi: tuple, h: float) -> jn
                 idx.append(slice(start, stop))
             return win[tuple(idx)]
 
-        term = np.float32(c) * (cut(+k) - cut(-k))
+        term = np.float32(c) * (cut(+k) - cut(-k)).astype(jnp.float32)
         acc = term if acc is None else acc + term
     return acc / np.float32(h)
 
@@ -91,13 +99,17 @@ def _grad_kernel(slab: int, n: int, h: float, fp_ref, o1_ref, o2_ref, o3_ref):
     o3_ref[...] = _fd8_axis(win, 2, lo, hi, h)
 
 
-@functools.partial(jax.jit, static_argnames=("h",))
-def grad(f: jnp.ndarray, h: float) -> jnp.ndarray:
-    """FD8 gradient of a scalar field -> ``[3, N, N, N]`` (Pallas)."""
+@functools.partial(jax.jit, static_argnames=("h", "storage"))
+def grad(f: jnp.ndarray, h: float, storage=None) -> jnp.ndarray:
+    """FD8 gradient of a scalar field -> ``[3, N, N, N]`` (Pallas).
+
+    ``storage`` (e.g. ``jnp.float16``) holds the padded field at reduced
+    precision inside the kernel window; output stays f32.
+    """
     n = f.shape[0]
     slab = _slab_size(n)
-    fp = pad_periodic(f)
-    out_shape = jax.ShapeDtypeStruct((n, n, n), f.dtype)
+    fp = pad_periodic(f if storage is None else f.astype(storage))
+    out_shape = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
     o1, o2, o3 = pl.pallas_call(
         functools.partial(_grad_kernel, slab, n, h),
         grid=(n // slab,),
@@ -128,18 +140,22 @@ def _div_kernel(slab: int, n: int, h: float, v1_ref, v2_ref, v3_ref, o_ref):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("h",))
-def div(v: jnp.ndarray, h: float) -> jnp.ndarray:
-    """FD8 divergence of a vector field ``v[3, N, N, N]`` (Pallas)."""
+@functools.partial(jax.jit, static_argnames=("h", "storage"))
+def div(v: jnp.ndarray, h: float, storage=None) -> jnp.ndarray:
+    """FD8 divergence of a vector field ``v[3, N, N, N]`` (Pallas).
+
+    ``storage`` reduces the in-window component precision; output is f32.
+    """
     n = v.shape[-1]
     slab = _slab_size(n)
-    vp = [pad_periodic(v[a]) for a in range(3)]
+    vs = v if storage is None else v.astype(storage)
+    vp = [pad_periodic(vs[a]) for a in range(3)]
     full = pl.BlockSpec(vp[0].shape, lambda i: (0, 0, 0))
     return pl.pallas_call(
         functools.partial(_div_kernel, slab, n, h),
         grid=(n // slab,),
         in_specs=[full, full, full],
         out_specs=pl.BlockSpec((slab, n, n), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, n, n), v.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, n, n), jnp.float32),
         interpret=True,
     )(*vp)

@@ -12,6 +12,13 @@ gives the mapping used here (see DESIGN.md section "Hardware adaptation").
                    trilinear texture fetches          ``prefilter`` stencil
     (full f32)     reference trilinear                ``linear``
 
+Every kernel is dtype-parameterized by a static ``storage`` argument: the
+coefficient volume (and, for the linear kernels, the weights) are held at
+``storage`` precision while the tensor-product sum accumulates in f32 —
+the paper's fp16-storage / f32-accumulate split. ``linear_f16`` /
+``cubic_bspline_f16`` are the mixed-policy entry points used by the
+``*__mixed`` artifacts; ``storage=None`` keeps everything f32.
+
 Structure: the kernel grid tiles the *target points* (the scattered reads of
 the semi-Lagrangian characteristic ends); each grid step holds one tile of
 query coordinates plus the full coefficient volume in its fast-memory window
@@ -55,11 +62,13 @@ def _flat_index(n: int, ix, iy, iz):
     return (jnp.mod(ix, n) * n + jnp.mod(iy, n)) * n + jnp.mod(iz, n)
 
 
-def _linear_kernel(n, reduced, f_ref, q_ref, o_ref):
+def _linear_kernel(n, storage, f_ref, q_ref, o_ref):
+    """Trilinear gather; ``storage`` (None = f32) sets the precision the
+    weights and coefficient loads are held at, accumulation is f32."""
     q = q_ref[...]
     i0 = jnp.floor(q).astype(jnp.int32)
     frac = q - i0
-    t = frac.astype(jnp.bfloat16) if reduced else frac
+    t = frac if storage is None else frac.astype(storage)
     one = t.dtype.type(1.0)
     acc = jnp.zeros(q.shape[1], dtype=jnp.float32)
     for dx in range(2):
@@ -70,16 +79,21 @@ def _linear_kernel(n, reduced, f_ref, q_ref, o_ref):
                 wz = t[2] if dz else one - t[2]
                 idx = _flat_index(n, i0[0] + dx, i0[1] + dy, i0[2] + dz)
                 c = f_ref[idx]
-                if reduced:
-                    c = c.astype(jnp.bfloat16).astype(jnp.float32)
-                    w = (wx * wy * wz).astype(jnp.float32)
-                else:
+                if storage is None:
                     w = wx * wy * wz
+                else:
+                    # Coefficient volume already holds `storage` (see
+                    # _call); widen load and weight product to f32.
+                    c = c.astype(jnp.float32)
+                    w = (wx * wy * wz).astype(jnp.float32)
                 acc = acc + w * c
     o_ref[...] = acc.astype(jnp.float32)
 
 
 def _cubic_kernel(n, weight_fn, f_ref, q_ref, o_ref):
+    """64-point tensor-product gather. Weights are f32; the coefficient
+    volume carries whatever storage dtype ``_call`` cast it to (reduced
+    loads widen on multiply), and both running sums are f32."""
     q = q_ref[...]
     i0 = jnp.floor(q).astype(jnp.int32)
     t = q - i0
@@ -92,16 +106,18 @@ def _cubic_kernel(n, weight_fn, f_ref, q_ref, o_ref):
             part = jnp.zeros(q.shape[1], dtype=jnp.float32)
             for dz in range(4):
                 idx = _flat_index(n, i0[0] + dx - 1, i0[1] + dy - 1, i0[2] + dz - 1)
-                part = part + wz[dz] * f_ref[idx]
+                part = part + wz[dz] * f_ref[idx].astype(jnp.float32)
             acc = acc + wx[dx] * wy[dy] * part
     o_ref[...] = acc
 
 
-def _call(kernel, f: jnp.ndarray, q: jnp.ndarray, cubic: bool = False) -> jnp.ndarray:
+def _call(kernel, f: jnp.ndarray, q: jnp.ndarray, cubic: bool = False, storage=None) -> jnp.ndarray:
     n = f.shape[0]
     m = q.shape[1]
     tile = _tile_size(m, cubic)
     assert m % tile == 0, f"query count {m} not divisible by tile {tile}"
+    if storage is not None:
+        f = f.astype(storage)  # coefficient volume at storage precision
     return pl.pallas_call(
         functools.partial(kernel, n),
         grid=(m // tile,),
@@ -115,34 +131,58 @@ def _call(kernel, f: jnp.ndarray, q: jnp.ndarray, cubic: bool = False) -> jnp.nd
     )(f.reshape(-1), q)
 
 
-@jax.jit
-def linear(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Full-precision trilinear interpolation (Pallas)."""
-    return _call(lambda n, *refs: _linear_kernel(n, False, *refs), f, q)
+@functools.partial(jax.jit, static_argnames=("storage",))
+def linear(f: jnp.ndarray, q: jnp.ndarray, storage=None) -> jnp.ndarray:
+    """Trilinear interpolation (Pallas); ``storage`` reduces weight/load
+    precision under the f32 accumulator (None = full f32)."""
+    return _call(
+        lambda n, *refs: _linear_kernel(n, storage, *refs), f, q, storage=storage
+    )
 
 
 @jax.jit
 def linear_bf16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     """Reduced-precision trilinear (GPU-TXTLIN analog; Pallas)."""
-    return _call(lambda n, *refs: _linear_kernel(n, True, *refs), f, q)
+    return linear(f, q, storage=jnp.bfloat16)
 
 
 @jax.jit
-def cubic_lagrange(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+def linear_f16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """fp16-storage trilinear: the mixed policy's linear kernel."""
+    return linear(f, q, storage=jnp.float16)
+
+
+@functools.partial(jax.jit, static_argnames=("storage",))
+def cubic_lagrange(f: jnp.ndarray, q: jnp.ndarray, storage=None) -> jnp.ndarray:
     """Cubic Lagrange interpolation (GPU-LAG analog; Pallas)."""
     return _call(
-        lambda n, *refs: _cubic_kernel(n, ref.lagrange_weights, *refs), f, q, cubic=True
+        lambda n, *refs: _cubic_kernel(n, ref.lagrange_weights, *refs),
+        f,
+        q,
+        cubic=True,
+        storage=storage,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("storage",))
+def cubic_bspline(c: jnp.ndarray, q: jnp.ndarray, storage=None) -> jnp.ndarray:
+    """Cubic B-spline interpolation over prefiltered coefficients ``c``
+    (GPU-TXTSPL analog; Pallas). Apply :func:`prefilter` to grid values
+    first. ``storage`` holds the coefficient volume reduced (the texture
+    analog: the prefilter itself stays f32)."""
+    return _call(
+        lambda n, *refs: _cubic_kernel(n, ref.bspline_weights, *refs),
+        c,
+        q,
+        cubic=True,
+        storage=storage,
     )
 
 
 @jax.jit
-def cubic_bspline(c: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Cubic B-spline interpolation over prefiltered coefficients ``c``
-    (GPU-TXTSPL analog; Pallas). Apply :func:`prefilter` to grid values
-    first."""
-    return _call(
-        lambda n, *refs: _cubic_kernel(n, ref.bspline_weights, *refs), c, q, cubic=True
-    )
+def cubic_bspline_f16(c: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """fp16-storage B-spline: the mixed policy's cubic kernel."""
+    return cubic_bspline(c, q, storage=jnp.float16)
 
 
 # ---------------------------------------------------------------------------

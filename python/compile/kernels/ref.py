@@ -29,24 +29,30 @@ import numpy as np
 FD8_COEFFS = np.array([4.0 / 5.0, -1.0 / 5.0, 4.0 / 105.0, -1.0 / 280.0])
 
 
-def fd8_partial(f: jnp.ndarray, axis: int, h: float) -> jnp.ndarray:
-    """8th-order accurate periodic first derivative along ``axis``."""
-    out = jnp.zeros_like(f)
+def fd8_partial(f: jnp.ndarray, axis: int, h: float, storage=None) -> jnp.ndarray:
+    """8th-order accurate periodic first derivative along ``axis``.
+
+    ``storage`` (e.g. ``jnp.float16``) emulates reduced-precision field
+    storage: tap pairs subtract at storage precision, the coefficient FMA
+    and running sum are f32 (the mixed policy's accumulator rule).
+    """
+    if storage is not None:
+        f = f.astype(storage)
+    out = jnp.zeros(f.shape, dtype=jnp.float32)
     for k, c in enumerate(FD8_COEFFS, start=1):
-        out = out + np.float32(c) * (
-            jnp.roll(f, -k, axis=axis) - jnp.roll(f, k, axis=axis)
-        )
+        diff = jnp.roll(f, -k, axis=axis) - jnp.roll(f, k, axis=axis)
+        out = out + np.float32(c) * diff.astype(jnp.float32)
     return out / np.float32(h)
 
 
-def fd8_grad(f: jnp.ndarray, h: float) -> jnp.ndarray:
+def fd8_grad(f: jnp.ndarray, h: float, storage=None) -> jnp.ndarray:
     """Gradient of a scalar field, stacked as ``[3, N, N, N]``."""
-    return jnp.stack([fd8_partial(f, a, h) for a in range(3)])
+    return jnp.stack([fd8_partial(f, a, h, storage=storage) for a in range(3)])
 
 
-def fd8_div(v: jnp.ndarray, h: float) -> jnp.ndarray:
+def fd8_div(v: jnp.ndarray, h: float, storage=None) -> jnp.ndarray:
     """Divergence of a vector field ``v[3, N, N, N]``."""
-    return sum(fd8_partial(v[a], a, h) for a in range(3))
+    return sum(fd8_partial(v[a], a, h, storage=storage) for a in range(3))
 
 
 # ---------------------------------------------------------------------------
@@ -132,18 +138,18 @@ def interp_linear(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
-def interp_linear_bf16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Reduced-precision trilinear interpolation.
+def interp_linear_rp(f: jnp.ndarray, q: jnp.ndarray, storage) -> jnp.ndarray:
+    """Reduced-precision trilinear interpolation at ``storage`` dtype.
 
-    The analog of the paper's GPU-TXTLIN kernel: the V100 texture unit stores
-    interpolation weights in 9-bit fixed point. We re-express that hardware
-    trade on our substrate as bf16 weights and bf16 corner values with an f32
-    accumulator.
+    The analog of the paper's GPU-TXTLIN kernel: the V100 texture unit
+    stores interpolation weights in 9-bit fixed point. We re-express that
+    hardware trade on our substrate as ``storage`` (bf16/f16) weights and
+    corner values with an f32 accumulator.
     """
     i0 = jnp.floor(q).astype(jnp.int32)
-    t = (q - i0).astype(jnp.bfloat16)
+    t = (q - i0).astype(storage)
     out = jnp.zeros(q.shape[1], dtype=jnp.float32)
-    one = jnp.bfloat16(1.0)
+    one = t.dtype.type(1.0)
     for dx in range(2):
         wx = t[0] if dx else one - t[0]
         for dy in range(2):
@@ -152,8 +158,18 @@ def interp_linear_bf16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
                 wz = t[2] if dz else one - t[2]
                 c = _gather(f, i0[0] + dx, i0[1] + dy, i0[2] + dz)
                 w = (wx * wy * wz).astype(jnp.float32)
-                out = out + w * c.astype(jnp.bfloat16).astype(jnp.float32)
+                out = out + w * c.astype(storage).astype(jnp.float32)
     return out
+
+
+def interp_linear_bf16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """bf16-storage trilinear (GPU-TXTLIN analog)."""
+    return interp_linear_rp(f, q, jnp.bfloat16)
+
+
+def interp_linear_f16(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """fp16-storage trilinear: the mixed policy's linear oracle."""
+    return interp_linear_rp(f, q, jnp.float16)
 
 
 def lagrange_weights(t: jnp.ndarray):
@@ -175,32 +191,36 @@ def bspline_weights(t: jnp.ndarray):
     return w0, w1, w2, w3
 
 
-def _interp_cubic(f: jnp.ndarray, q: jnp.ndarray, weight_fn) -> jnp.ndarray:
+def _interp_cubic(f: jnp.ndarray, q: jnp.ndarray, weight_fn, storage=None) -> jnp.ndarray:
+    """Tensor-product cubic; ``storage`` reduces coefficient fetches while
+    both running sums accumulate in f32."""
+    if storage is not None:
+        f = f.astype(storage)
     i0 = jnp.floor(q).astype(jnp.int32)
-    t = (q - i0).astype(f.dtype)
+    t = (q - i0).astype(jnp.float32)
     wx = weight_fn(t[0])
     wy = weight_fn(t[1])
     wz = weight_fn(t[2])
-    out = jnp.zeros(q.shape[1], dtype=f.dtype)
+    out = jnp.zeros(q.shape[1], dtype=jnp.float32)
     for dx in range(4):
         for dy in range(4):
-            part = jnp.zeros(q.shape[1], dtype=f.dtype)
+            part = jnp.zeros(q.shape[1], dtype=jnp.float32)
             for dz in range(4):
                 c = _gather(f, i0[0] + dx - 1, i0[1] + dy - 1, i0[2] + dz - 1)
-                part = part + wz[dz] * c
+                part = part + wz[dz] * c.astype(jnp.float32)
             out = out + wx[dx] * wy[dy] * part
     return out
 
 
-def interp_cubic_lagrange(f: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+def interp_cubic_lagrange(f: jnp.ndarray, q: jnp.ndarray, storage=None) -> jnp.ndarray:
     """Cubic Lagrange interpolation (the paper's GPU-LAG / CPU-LAG kernel).
 
     Coefficients equal grid values; 64-point tensor-product stencil.
     """
-    return _interp_cubic(f, q, lagrange_weights)
+    return _interp_cubic(f, q, lagrange_weights, storage=storage)
 
 
-def interp_cubic_bspline(c: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+def interp_cubic_bspline(c: jnp.ndarray, q: jnp.ndarray, storage=None) -> jnp.ndarray:
     """Cubic B-spline interpolation given *prefiltered* coefficients ``c``.
 
     The paper's GPU-TXTSPL kernel: B-spline basis over prefiltered
@@ -208,7 +228,12 @@ def interp_cubic_bspline(c: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     texture fetches; here the tensor-product weights are vectorized directly
     (the factorization is a scheduling detail of the texture unit).
     """
-    return _interp_cubic(c, q, bspline_weights)
+    return _interp_cubic(c, q, bspline_weights, storage=storage)
+
+
+def interp_cubic_bspline_f16(c: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """fp16-storage B-spline: the mixed policy's cubic oracle."""
+    return interp_cubic_bspline(c, q, storage=jnp.float16)
 
 
 # ---------------------------------------------------------------------------

@@ -15,12 +15,23 @@ Operator definitions (default CLAIRE H1-div regularization):
     precond(r)  = (beta * A + gamma * grad div + eps I)^{-1} r   (Sherman-
                   Morrison closed form per spectral mode)
     leray(v)    = v - grad(Delta^{-1} div v)   (projection onto div-free)
+
+Precision policy: spectral operators are pinned to f32 regardless of the
+caller's storage dtype — they are exactly the operators the solver must
+*invert*, and the mixed policy (paper §3) keeps all outer/regularization
+quantities at full precision. ``_f32`` widens reduced-storage inputs at
+entry; every operator returns f32.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
+
+
+def _f32(x: jnp.ndarray) -> jnp.ndarray:
+    """Widen a (possibly reduced-storage) field to the f32 compute type."""
+    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
 
 
 def wavenumber_grids(n: int, zero_nyquist: bool = False):
@@ -51,6 +62,7 @@ def reg_apply(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
 
     Applied mode-by-mode: ``(beta*|k|^2 I + gamma * k k^T) v_hat``.
     """
+    v = _f32(v)
     n = v.shape[-1]
     k1, k2, k3 = (jnp.asarray(k) for k in wavenumber_grids(n))
     ksq = jnp.asarray(_ksq(n))
@@ -59,7 +71,7 @@ def reg_apply(v: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
     out = []
     for a, ka in enumerate((k1, k2, k3)):
         oh = beta * ksq * vh[a] + gamma * ka * kdotv
-        out.append(jnp.real(jnp.fft.ifftn(oh)).astype(v.dtype))
+        out.append(jnp.real(jnp.fft.ifftn(oh)).astype(jnp.float32))
     return jnp.stack(out)
 
 
@@ -77,6 +89,7 @@ def precond_apply(r: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
     The zero mode (a = 0) is mapped to the identity: the regularization has a
     null space of constant fields, on which the Hessian is the data term.
     """
+    r = _f32(r)
     n = r.shape[-1]
     k1, k2, k3 = (jnp.asarray(k) for k in wavenumber_grids(n))
     ksq = jnp.asarray(_ksq(n))
@@ -89,7 +102,7 @@ def precond_apply(r: jnp.ndarray, beta: float, gamma: float) -> jnp.ndarray:
     for c, kc in enumerate((k1, k2, k3)):
         oh = rh[c] / safe_a - coef * kc * kdotr
         oh = jnp.where(a > 0, oh, rh[c])  # identity on the zero mode
-        out.append(jnp.real(jnp.fft.ifftn(oh)).astype(r.dtype))
+        out.append(jnp.real(jnp.fft.ifftn(oh)).astype(jnp.float32))
     return jnp.stack(out)
 
 
@@ -100,6 +113,7 @@ def leray(v: jnp.ndarray) -> jnp.ndarray:
     the same discrete divergence as ``ref.fft_div`` (and FD8, which has no
     Nyquist pathology).
     """
+    v = _f32(v)
     n = v.shape[-1]
     k1, k2, k3 = (jnp.asarray(k) for k in wavenumber_grids(n, zero_nyquist=True))
     ksq = k1 * k1 + k2 * k2 + k3 * k3
@@ -109,7 +123,7 @@ def leray(v: jnp.ndarray) -> jnp.ndarray:
     kdotv = jnp.where(ksq > 0, kdotv, 0.0)
     out = []
     for a, ka in enumerate((k1, k2, k3)):
-        out.append(jnp.real(jnp.fft.ifftn(vh[a] - ka * kdotv)).astype(v.dtype))
+        out.append(jnp.real(jnp.fft.ifftn(vh[a] - ka * kdotv)).astype(jnp.float32))
     return jnp.stack(out)
 
 
@@ -120,10 +134,11 @@ def gauss_smooth(f: jnp.ndarray, sigma_h: float) -> jnp.ndarray:
     registration; we reproduce that preprocessing here so it can be fused
     into the AOT artifacts.
     """
+    f = _f32(f)
     n = f.shape[-1]
     ksq = jnp.asarray(_ksq(n))
     # x is in grid units: exp(-sigma^2 |k|^2 / 2) with k in cycles scaled by
     # 2*pi/N per grid unit.
     scale = (2.0 * np.pi / n) * sigma_h
     kern = jnp.exp(-0.5 * (scale**2) * ksq)
-    return jnp.real(jnp.fft.ifftn(jnp.fft.fftn(f) * kern)).astype(f.dtype)
+    return jnp.real(jnp.fft.ifftn(jnp.fft.fftn(f) * kern)).astype(jnp.float32)

@@ -66,6 +66,13 @@ VARIANTS = {
 
 DEFAULT_NT = 4  # paper: Nt = 4
 
+# Precision policies (paper section 3). "full" is f32 everywhere; "mixed"
+# holds interpolation/stencil storage at fp16 with f32 accumulators —
+# applied to the operators the solver runs at reduced precision (the
+# Hessian matvec inner loop). Spectral operators stay f32 under both
+# policies (they are inverted; see kernels/spectral.py).
+PRECISIONS = ("full", "mixed")
+
 
 @dataclasses.dataclass(frozen=True)
 class Problem:
@@ -76,6 +83,10 @@ class Problem:
     beta: float = 5e-4  # target regularization weight (paper section 4.1.2)
     gamma: float = 1e-4  # divergence penalty (paper section 4.1.2)
     variant: str = "opt-fd8-cubic"
+    precision: str = "full"
+
+    def __post_init__(self):
+        assert self.precision in PRECISIONS, f"unknown precision {self.precision!r}"
 
     @property
     def h(self) -> float:
@@ -89,6 +100,11 @@ class Problem:
     def var(self) -> Variant:
         return VARIANTS[self.variant]
 
+    @property
+    def storage(self):
+        """Reduced storage dtype for this policy (None = keep f32)."""
+        return jnp.float16 if self.precision == "mixed" else None
+
 
 # ---------------------------------------------------------------------------
 # Kernel dispatch
@@ -97,42 +113,53 @@ class Problem:
 
 def grad_op(p: Problem) -> Callable:
     v = p.var
+    st = p.storage
     if v.deriv == "fft":
+        # Spectral first derivatives stay f32 under both policies.
         return lambda f: ref.fft_grad(f, p.h)
     if v.impl == "pallas":
-        return lambda f: fd8.grad(f, p.h)
-    return lambda f: ref.fd8_grad(f, p.h)
+        return lambda f: fd8.grad(f, p.h, storage=st)
+    return lambda f: ref.fd8_grad(f, p.h, storage=st)
 
 
 def div_op(p: Problem) -> Callable:
     v = p.var
+    st = p.storage
     if v.deriv == "fft":
         return lambda w: ref.fft_div(w, p.h)
     if v.impl == "pallas":
-        return lambda w: fd8.div(w, p.h)
-    return lambda w: ref.fd8_div(w, p.h)
+        return lambda w: fd8.div(w, p.h, storage=st)
+    return lambda w: ref.fd8_div(w, p.h, storage=st)
 
 
 def interp_op(p: Problem) -> Callable:
     """Scalar interpolation ``(f[N,N,N], q[3,M]) -> [M]`` for the variant.
 
     For the B-spline kernel the prefilter is applied per call (its cost is
-    part of the kernel, as in the paper's GPU-TXTSPL timings).
+    part of the kernel, as in the paper's GPU-TXTSPL timings; the prefilter
+    itself is f32 under every policy — it inverts a stencil). Under the
+    mixed policy the variant's kernel runs with fp16 storage / f32
+    accumulation; the bf16 "linbf16" variant keeps its own reduction.
     """
     v = p.var
+    st = p.storage
     if v.impl == "pallas":
         table = {
-            "lin": interp.linear,
+            "lin": lambda f, q: interp.linear(f, q, storage=st),
             "linbf16": interp.linear_bf16,
-            "lag": interp.cubic_lagrange,
-            "spl": lambda f, q: interp.cubic_bspline(interp.prefilter(f), q),
+            "lag": lambda f, q: interp.cubic_lagrange(f, q, storage=st),
+            "spl": lambda f, q: interp.cubic_bspline(interp.prefilter(f), q, storage=st),
         }
     else:
         table = {
-            "lin": ref.interp_linear,
+            "lin": (
+                ref.interp_linear
+                if st is None
+                else lambda f, q: ref.interp_linear_rp(f, q, st)
+            ),
             "linbf16": ref.interp_linear_bf16,
-            "lag": ref.interp_cubic_lagrange,
-            "spl": lambda f, q: ref.interp_cubic_bspline(ref.prefilter(f), q),
+            "lag": lambda f, q: ref.interp_cubic_lagrange(f, q, storage=st),
+            "spl": lambda f, q: ref.interp_cubic_bspline(ref.prefilter(f), q, storage=st),
         }
     return table[v.interp]
 
@@ -296,9 +323,21 @@ def build_hess_matvec(p: Problem) -> Callable:
 
     H vt = beta A vt + gamma ... + int lamt grad(m) dt, with the incremental
     state (forced transport) and incremental adjoint solves of Algorithm 2.1.
+
+    Under ``p.precision == "mixed"`` the cached tensors arrive as fp16
+    artifact inputs (halved marshalling; see aot.py) and are widened here —
+    reduced precision then re-enters *inside* the interpolation/stencil
+    kernels via the storage dispatch, keeping all transport algebra and the
+    regularization term at f32 (paper §3: matvec inner loop reduced, outer
+    quantities full).
     """
 
     def hess_matvec(vt, m_traj, yb, yf, divv, bg):
+        if p.precision == "mixed":
+            m_traj = m_traj.astype(jnp.float32)
+            yb = yb.astype(jnp.float32)
+            yf = yf.astype(jnp.float32)
+            divv = divv.astype(jnp.float32)
         ip = interp_op(p)
         g_op = grad_op(p)
         half = np.float32(0.5 * p.dt)
@@ -431,8 +470,10 @@ def build_kernel_ops(p: Problem) -> dict:
         "div_fd8": lambda w: (fd8.div(w, h),),
         "interp_lin": lambda f, q: (interp.linear(f, q),),
         "interp_linbf16": lambda f, q: (interp.linear_bf16(f, q),),
+        "interp_lin_f16": lambda f, q: (interp.linear_f16(f, q),),
         "interp_lag": lambda f, q: (interp.cubic_lagrange(f, q),),
         "interp_spl": lambda f, q: (interp.cubic_bspline(interp.prefilter(f), q),),
+        "interp_spl_f16": lambda f, q: (interp.cubic_bspline_f16(interp.prefilter(f), q),),
         "interp_lag_jnp": lambda f, q: (ref.interp_cubic_lagrange(f, q),),
         "prefilter": lambda f: (interp.prefilter(f),),
         "reg_apply": lambda w: (spectral.reg_apply(w, p.beta, p.gamma),),

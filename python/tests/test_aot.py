@@ -97,9 +97,18 @@ def test_manifest_consistent_with_files():
         assert f.exists(), f"missing {f}"
         assert entry["op"] in key
         assert f"n{entry['n']}" in key
+        prec = entry.get("precision", "full")
+        assert prec in model.PRECISIONS
+        assert (prec == "mixed") == key.endswith("__mixed")
         for sig in entry["inputs"]:
-            assert sig["dtype"] == "f32"
+            if prec == "full":
+                assert sig["dtype"] == "f32"
+            else:
+                assert sig["dtype"] in ("f32", "f16", "bf16")
             assert all(isinstance(d, int) for d in sig["shape"])
+        # Outputs are f32 under every policy (runtime unmarshals f32).
+        for sig in entry["outputs"]:
+            assert sig["dtype"] == "f32"
 
 
 @pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="no artifacts")

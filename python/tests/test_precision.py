@@ -1,0 +1,140 @@
+"""Mixed-precision policy tests: fp16-storage kernels against their f32
+siblings and oracles, the mixed hess_matvec against the full one, and the
+aot-level dtype/manifest plumbing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import fd8, interp, ref, spectral
+
+from .conftest import band_limited_field
+
+N = 16
+# f16 has a 10-bit mantissa: storage eps ~ 2^-11 per value; a handful of
+# rounded loads/weights per output keeps errors within a few eps.
+F16_TOL = 5e-3
+
+
+@pytest.fixture(scope="module")
+def field(rng):
+    return jnp.asarray(band_limited_field(rng, N))
+
+
+@pytest.fixture(scope="module")
+def queries(rng):
+    q = rng.uniform(-N, 2 * N, size=(3, N * N * N)).astype(np.float32)
+    return jnp.asarray(q)
+
+
+def test_linear_f16_close_to_f32_and_matches_oracle(field, queries):
+    full = interp.linear(field, queries)
+    reduced = interp.linear_f16(field, queries)
+    oracle = ref.interp_linear_f16(field, queries)
+    assert reduced.dtype == jnp.float32
+    err = float(jnp.max(jnp.abs(reduced - full)))
+    assert 0 < err < F16_TOL, f"f16 trilinear err {err}"
+    # Pallas kernel and jnp oracle implement the same storage rounding.
+    assert float(jnp.max(jnp.abs(reduced - oracle))) < 1e-6
+
+
+def test_bspline_f16_close_to_f32(field, queries):
+    coeff = interp.prefilter(field)
+    full = interp.cubic_bspline(coeff, queries)
+    reduced = interp.cubic_bspline_f16(coeff, queries)
+    err = float(jnp.max(jnp.abs(reduced - full)))
+    assert 0 < err < 4 * F16_TOL, f"f16 B-spline err {err}"
+    oracle = ref.interp_cubic_bspline_f16(coeff, queries)
+    assert float(jnp.max(jnp.abs(reduced - oracle))) < 1e-6
+
+
+def test_fd8_f16_storage_tracks_f32(field):
+    p = model.Problem(n=N)
+    full = fd8.grad(field, p.h)
+    reduced = fd8.grad(field, p.h, storage=jnp.float16)
+    assert reduced.dtype == jnp.float32
+    rel = float(
+        jnp.linalg.norm((reduced - full).ravel()) / jnp.linalg.norm(full.ravel())
+    )
+    assert 0 < rel < 5e-3, f"f16 FD8 rel {rel}"
+    oracle = ref.fd8_grad(field, p.h, storage=jnp.float16)
+    assert float(jnp.max(jnp.abs(reduced - oracle))) < 1e-5
+
+
+def test_spectral_ops_pin_f32(field):
+    v = jnp.stack([field, field, field]).astype(jnp.float16)
+    out = spectral.reg_apply(v, 1e-2, 1e-3)
+    assert out.dtype == jnp.float32
+    assert spectral.precond_apply(v, 1e-2, 1e-3).dtype == jnp.float32
+    assert spectral.leray(v).dtype == jnp.float32
+
+
+def _setup_caches(p, rng):
+    """Run newton_setup at full precision (the solver's split) and return
+    the caches a hess_matvec consumes."""
+    m0 = jnp.asarray(band_limited_field(rng, p.n)) * 0.5 + 0.5
+    m1 = jnp.asarray(band_limited_field(rng, p.n)) * 0.5 + 0.5
+    v = jnp.asarray(
+        np.stack([band_limited_field(rng, p.n) for _ in range(3)]) * 0.1
+    )
+    bg = jnp.asarray([p.beta, p.gamma], jnp.float32)
+    setup = model.build_newton_setup(p)
+    _, m_traj, yb, yf, divv, _ = setup(v, m0, m1, bg)
+    return v, m_traj, yb, yf, divv, bg
+
+
+def test_mixed_hess_matvec_close_to_full(rng):
+    nt = 2
+    full_p = model.Problem(n=N, nt=nt)
+    mixed_p = model.Problem(n=N, nt=nt, precision="mixed")
+    v, m_traj, yb, yf, divv, bg = _setup_caches(full_p, rng)
+    vt = jnp.asarray(np.stack([band_limited_field(rng, N) for _ in range(3)]) * 0.1)
+
+    (hv_full,) = model.build_hess_matvec(full_p)(vt, m_traj, yb, yf, divv, bg)
+    # Mixed consumes the caches as the artifact would: f16 field values.
+    (hv_mixed,) = model.build_hess_matvec(mixed_p)(
+        vt,
+        m_traj.astype(jnp.float16),
+        yb,
+        yf,
+        divv.astype(jnp.float16),
+        bg,
+    )
+    assert hv_mixed.dtype == jnp.float32
+    rel = float(
+        jnp.linalg.norm((hv_mixed - hv_full).ravel())
+        / jnp.linalg.norm(hv_full.ravel())
+    )
+    assert 0 < rel < 5e-2, f"mixed matvec drifted: rel {rel}"
+    # The Gauss-Newton operator must stay positive on the test direction
+    # under reduced precision (PCG relies on it).
+    h3 = np.float32(full_p.h**3)
+    curv = float(jnp.sum(vt * hv_mixed) * h3)
+    assert curv > 0.0
+
+
+def test_mixed_op_defs_declare_f16_caches():
+    p = model.Problem(n=8, precision="mixed")
+    defs = aot.mixed_op_defs(p)
+    assert [o.name for o in defs] == ["hess_matvec"]
+    sig = {nm: s for nm, s in defs[0].inputs}
+    assert sig["vt"].dtype == jnp.float32  # PCG vector stays f32
+    assert sig["m_traj"].dtype == jnp.float16
+    assert sig["divv"].dtype == jnp.float16
+    # Query coordinates stay f32 (absolute positions; see mixed_op_defs).
+    assert sig["yb"].dtype == jnp.float32
+    assert sig["yf"].dtype == jnp.float32
+
+
+def test_dtype_tags_roundtrip():
+    assert aot.dtype_tag(np.float32) == "f32"
+    assert aot.dtype_tag(jnp.float16) == "f16"
+    assert aot.dtype_tag(jnp.bfloat16) == "bf16"
+    with pytest.raises(ValueError):
+        aot.dtype_tag(np.float64)
+
+
+def test_problem_rejects_unknown_precision():
+    with pytest.raises(AssertionError):
+        model.Problem(n=8, precision="fp8")

@@ -1,0 +1,223 @@
+//! Mixed-precision policy bench: full vs mixed at the two places the
+//! policy touches the runtime — literal marshalling (f32 vs f16/bf16 at
+//! the PJRT boundary) and the PCG Hessian-matvec loop (f32 vs fp16-
+//! emulated matvec through the serve scheduler's stub executors).
+//!
+//! Host-side f16 is *emulation* (bit round-trips from `math/half.rs`): on
+//! this substrate the win is the halved boundary bytes and the per-cache
+//! (not per-matvec) conversion cost; the arithmetic speedup the paper
+//! reports needs accelerator execution. The bench runs artifact-free and
+//! writes a `BENCH_precision.json` summary.
+//!
+//! Run: `cargo bench --bench bench_precision`.
+
+use std::time::Instant;
+
+use claire::error::Result;
+use claire::math::half;
+use claire::optim::pcg::{self, PcgOptions};
+use claire::registration::RunReport;
+use claire::serve::scheduler::stub_report;
+use claire::serve::{worker_loop, Executor, JobPayload, JobSpec, Priority, Scheduler};
+use claire::util::bench::Table;
+use claire::util::json::Json;
+use claire::Precision;
+
+/// 3 * 64^3 f32 elements: one velocity-field cache tensor at the paper's
+/// mid resolution.
+const MARSHAL_ELEMS: usize = 3 * 64 * 64 * 64;
+const MARSHAL_REPS: usize = 20;
+
+struct MarshalRow {
+    dtype: &'static str,
+    bytes: usize,
+    gb_per_s: f64,
+}
+
+fn bench_marshal() -> Vec<MarshalRow> {
+    let data: Vec<f32> = (0..MARSHAL_ELEMS).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut rows = Vec::new();
+
+    // f32: the boundary copy the full-precision path pays per literal.
+    let t0 = Instant::now();
+    let mut sink = 0usize;
+    for _ in 0..MARSHAL_REPS {
+        let copied = data.clone();
+        sink = sink.wrapping_add(copied.len());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    rows.push(MarshalRow {
+        dtype: "f32",
+        bytes: MARSHAL_ELEMS * 4,
+        gb_per_s: (MARSHAL_ELEMS * 4 * MARSHAL_REPS) as f64 / dt / 1e9,
+    });
+
+    // f16 / bf16: conversion at the boundary, half the payload bytes.
+    let t0 = Instant::now();
+    for _ in 0..MARSHAL_REPS {
+        let bits = half::f16_bits_of(&data);
+        sink = sink.wrapping_add(bits.len());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    rows.push(MarshalRow {
+        dtype: "f16",
+        bytes: MARSHAL_ELEMS * 2,
+        gb_per_s: (MARSHAL_ELEMS * 4 * MARSHAL_REPS) as f64 / dt / 1e9,
+    });
+
+    let t0 = Instant::now();
+    for _ in 0..MARSHAL_REPS {
+        let bits = half::bf16_bits_of(&data);
+        sink = sink.wrapping_add(bits.len());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    rows.push(MarshalRow {
+        dtype: "bf16",
+        bytes: MARSHAL_ELEMS * 2,
+        gb_per_s: (MARSHAL_ELEMS * 4 * MARSHAL_REPS) as f64 / dt / 1e9,
+    });
+    assert!(sink > 0); // keep the loops observable
+    rows
+}
+
+/// Stub executor running a small PCG solve whose matvec honors the job's
+/// precision policy — the same split the GnSolver makes, minus PJRT.
+struct PcgExec {
+    dim: usize,
+}
+
+impl Executor for PcgExec {
+    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+        let JobPayload::Spec(spec) = payload else {
+            return Ok(stub_report("problem"));
+        };
+        let dim = self.dim;
+        let d: Vec<f32> = (0..dim).map(|i| 1.0 + i as f32 / dim as f32).collect();
+        let b: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.13).sin()).collect();
+        let opts = PcgOptions {
+            rtol: 1e-4,
+            max_iter: 200,
+            matvec_precision: spec.precision,
+        };
+        let res = pcg::solve(
+            &b,
+            opts,
+            |p| {
+                Ok(p.iter()
+                    .zip(&d)
+                    .map(|(&x, &dd)| match spec.precision {
+                        Precision::Full => dd * x,
+                        Precision::Mixed => half::f16_round(dd * x),
+                    })
+                    .collect())
+            },
+            |r| Ok(r.to_vec()),
+        )?;
+        assert_eq!(res.matvec_precision, spec.precision);
+        Ok(stub_report(&spec.name()))
+    }
+}
+
+struct SolveRow {
+    precision: Precision,
+    jobs: usize,
+    wall_s: f64,
+    jobs_per_s: f64,
+}
+
+fn bench_solves(precision: Precision, jobs: usize) -> SolveRow {
+    let sched = Scheduler::new(jobs, 2);
+    for i in 0..jobs {
+        let spec = JobSpec {
+            subject: ["na02", "na03", "na10"][i % 3].into(),
+            precision,
+            ..Default::default()
+        };
+        sched.submit(Priority::Batch, JobPayload::Spec(spec)).unwrap();
+    }
+    sched.shutdown(true);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..2 {
+            let sched = sched.clone();
+            scope.spawn(move || {
+                let mut exec = PcgExec { dim: 1 << 14 };
+                worker_loop(&sched, w, &mut exec);
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    SolveRow { precision, jobs, wall_s, jobs_per_s: jobs as f64 / wall_s.max(1e-12) }
+}
+
+fn main() {
+    println!("== mixed-precision policy: marshalling + matvec throughput ==\n");
+
+    let marshal = bench_marshal();
+    let mut t = Table::new(&["dtype", "literal bytes", "GB(f32)/s"]);
+    for r in &marshal {
+        t.row(&[r.dtype.to_string(), r.bytes.to_string(), format!("{:.2}", r.gb_per_s)]);
+    }
+    t.print();
+    println!("(f16/bf16 halve the boundary bytes; conversion is paid once per");
+    println!(" Newton-iteration cache, not once per matvec — see solver.rs)\n");
+
+    let jobs = 32usize;
+    let solves = [
+        bench_solves(Precision::Full, jobs),
+        bench_solves(Precision::Mixed, jobs),
+    ];
+    let mut t = Table::new(&["precision", "jobs", "wall[s]", "jobs/s"]);
+    for r in &solves {
+        t.row(&[
+            r.precision.as_str().to_string(),
+            r.jobs.to_string(),
+            format!("{:.3}", r.wall_s),
+            format!("{:.1}", r.jobs_per_s),
+        ]);
+    }
+    t.print();
+    println!("\n(mixed matvec is f16 *emulation* host-side; the policy plumb-");
+    println!(" through is what is measured, not accelerator arithmetic)");
+
+    let summary = Json::object([
+        ("bench", Json::str("precision")),
+        (
+            "marshal",
+            Json::Arr(
+                marshal
+                    .iter()
+                    .map(|r| {
+                        Json::object([
+                            ("dtype", Json::str(r.dtype)),
+                            ("elems", Json::num(MARSHAL_ELEMS as f64)),
+                            ("bytes", Json::num(r.bytes as f64)),
+                            ("gb_per_s", Json::num(r.gb_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "solves",
+            Json::Arr(
+                solves
+                    .iter()
+                    .map(|r| {
+                        Json::object([
+                            ("precision", Json::str(r.precision.as_str())),
+                            ("jobs", Json::num(r.jobs as f64)),
+                            ("wall_s", Json::num(r.wall_s)),
+                            ("jobs_per_s", Json::num(r.jobs_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = "BENCH_precision.json";
+    match std::fs::write(out, summary.render() + "\n") {
+        Ok(()) => println!("\nsummary written to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

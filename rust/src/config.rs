@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::precision::Precision;
 use crate::registration::problem::RegParams;
 
 /// Flat configuration map with typed accessors.
@@ -78,6 +79,10 @@ impl Config {
         let d = RegParams::default();
         Ok(RegParams {
             variant: self.get("variant").unwrap_or(&d.variant).to_string(),
+            precision: match self.get("precision") {
+                None => d.precision,
+                Some(s) => Precision::parse(s)?,
+            },
             beta: self.get_f64("beta", d.beta)?,
             gamma: self.get_f64("gamma", d.gamma)?,
             gtol: self.get_f64("gtol", d.gtol)?,
@@ -117,6 +122,15 @@ mod tests {
         assert_eq!(p.max_iter, 7);
         assert!(!p.continuation);
         assert_eq!(p.beta, 5e-4); // default preserved
+        assert_eq!(p.precision, Precision::Full); // default policy
+    }
+
+    #[test]
+    fn precision_key_parses_and_rejects_unknown() {
+        let c = Config::parse("precision = mixed\n").unwrap();
+        assert_eq!(c.reg_params().unwrap().precision, Precision::Mixed);
+        let bad = Config::parse("precision = fp8\n").unwrap();
+        assert!(bad.reg_params().is_err());
     }
 
     #[test]

@@ -25,9 +25,11 @@ pub mod error;
 pub mod field;
 pub mod math;
 pub mod optim;
+pub mod precision;
 pub mod registration;
 pub mod runtime;
 pub mod serve;
 pub mod util;
 
 pub use error::{Error, Result};
+pub use precision::Precision;

@@ -41,6 +41,7 @@ fn common_specs() -> Vec<OptSpec> {
         opt("artifacts", "artifacts directory", "artifacts"),
         opt("n", "grid size (16|32|64)", "16"),
         opt("variant", "kernel variant tag", "opt-fd8-cubic"),
+        opt("precision", "solver precision policy: full | mixed", "full"),
         opt("subject", "synthetic subject (na02|na03|na10)", "na02"),
         opt("beta", "target regularization weight", "5e-4"),
         opt("gamma", "divergence penalty", "1e-4"),
@@ -74,6 +75,9 @@ fn params_from(args: &Args) -> Result<RegParams> {
     };
     if let Some(v) = args.get("variant") {
         params.variant = v.to_string();
+    }
+    if let Some(v) = args.get("precision") {
+        params.precision = claire::Precision::parse(v)?;
     }
     params.beta = args.get_f64("beta", params.beta)?;
     params.gamma = args.get_f64("gamma", params.gamma)?;
@@ -283,6 +287,7 @@ fn spec_from(args: &Args) -> Result<JobSpec> {
         subject: args.get_or("subject", "na02"),
         n: args.get_usize("n", 16)?,
         variant: args.get_or("variant", "opt-fd8-cubic"),
+        precision: claire::Precision::parse(&args.get_or("precision", "full"))?,
         priority: Priority::parse(&args.get_or("priority", "batch"))?,
         max_iter: args.get("max-iter").map(|_| args.get_usize("max-iter", 50)).transpose()?,
         beta: args.get("beta").map(|_| args.get_f64("beta", 5e-4)).transpose()?,

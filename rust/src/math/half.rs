@@ -1,0 +1,196 @@
+//! Pure-Rust IEEE-754 binary16 (f16) and bfloat16 bit conversions.
+//!
+//! The offline image has no `half` crate; these conversions are the host
+//! side of the mixed-precision policy: `runtime/operator.rs` marshals
+//! f32 host buffers into f16/bf16 XLA literals through them, and
+//! `math/kernels_ref.rs` uses the round-trips to emulate fp16-storage
+//! kernels in pure Rust (cross-validation of mixed artifacts without a
+//! GPU). Rounding is round-to-nearest-even, matching XLA's `ConvertOp`.
+
+/// Convert an f32 to IEEE binary16 bits (round-to-nearest-even; overflow
+/// saturates to infinity, tiny values flush through the subnormal range).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays inf; NaN keeps a quiet payload bit.
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15; // rebias
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal range: shift the full significand (implicit bit set)
+        // into the 10-bit subnormal field. Below 2^-24 everything rounds
+        // to zero (shift > 24 leaves no half-ulp to round up on).
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000;
+        return sign | round_shift(m, (14 - e) as u32) as u16;
+    }
+    // Normal range: drop 13 mantissa bits with RNE. A mantissa carry-out
+    // (0x400) propagates into the exponent field — including e == 30
+    // rounding up to infinity — because the fields are adjacent.
+    sign | (((e as u32) << 10) + round_shift(mant, 13)) as u16
+}
+
+/// Expand IEEE binary16 bits to f32 (exact; every f16 value is an f32).
+pub fn f16_bits_to_f32(b: u16) -> f32 {
+    let sign = ((b as u32) & 0x8000) << 16;
+    let exp = ((b >> 10) & 0x1f) as u32;
+    let mant = (b & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Normalize the subnormal: value = mant * 2^-24.
+            let mut e = 113u32; // pre-shift exponent field (see loop)
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert an f32 to bfloat16 bits (round-to-nearest-even).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet NaN, keep sign
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits + round) >> 16) as u16
+}
+
+/// Expand bfloat16 bits to f32 (exact).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an f32 through f16 storage (the fp16-emulation primitive).
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round an f32 through bf16 storage.
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Marshal a whole f32 slice to f16 bits (literal building).
+pub fn f16_bits_of(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16_bits(x)).collect()
+}
+
+/// Marshal a whole f32 slice to bf16 bits (literal building).
+pub fn bf16_bits_of(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_bf16_bits(x)).collect()
+}
+
+/// Drop a 32-bit significand by `shift` bits, rounding to nearest even.
+fn round_shift(m: u32, shift: u32) -> u32 {
+    let v = m >> shift;
+    let rem = m & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && (v & 1) == 1) {
+        v + 1
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_f16_encodings() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        // Smallest subnormal 2^-24 and smallest normal 2^-14.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-14)), 0x0400);
+        // Below half the smallest subnormal: flush to zero.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1 + 2^-10: ties to
+        // the even mantissa (1.0). 1 + 3*2^-12 is past halfway: rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-12)), 0x3c01);
+        // Halfway above an odd mantissa rounds up to the even one.
+        let odd = f16_bits_to_f32(0x3c01); // 1 + 2^-10
+        assert_eq!(f32_to_f16_bits(odd + 2.0f32.powi(-11)), 0x3c02);
+    }
+
+    #[test]
+    fn f16_roundtrip_is_idempotent_and_accurate() {
+        let mut rng = Rng::new(7);
+        for _ in 0..4096 {
+            let x = rng.uniform_f32(-1e4, 1e4);
+            let r = f16_round(x);
+            // Idempotent: a stored value is exactly representable.
+            assert_eq!(f32_to_f16_bits(r), f32_to_f16_bits(x));
+            // Relative error bounded by the f16 half-ulp (2^-11).
+            if x.abs() > 1e-3 {
+                assert!(
+                    ((r - x) / x).abs() <= 2.0f32.powi(-11),
+                    "{x} -> {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_roundtrip_exactly() {
+        // f32 -> f16 must be the identity on values that came from f16.
+        for b in 0u16..=0xffff {
+            let x = f16_bits_to_f32(b);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(x), b, "bits {b:#06x} ({x})");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_known_and_roundtrip() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-1.5), 0xbfc0);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        let mut rng = Rng::new(8);
+        for _ in 0..4096 {
+            let x = rng.uniform_f32(-1e6, 1e6);
+            let r = bf16_round(x);
+            assert_eq!(f32_to_bf16_bits(r), f32_to_bf16_bits(x));
+            if x.abs() > 1e-3 {
+                assert!(((r - x) / x).abs() <= 2.0f32.powi(-8), "{x} -> {r}");
+            }
+        }
+    }
+}

@@ -6,8 +6,16 @@
 //! 2. host-side fallbacks for utilities that do not warrant a PJRT call
 //!    (e.g. nearest-neighbor label warping for DICE);
 //! 3. the Fig-2 style accuracy study can run without artifacts.
+//!
+//! The `*_f16` variants emulate the mixed-precision kernels: every stored
+//! value round-trips through IEEE binary16 bits (`math/half.rs`) while the
+//! accumulator stays wide — the same fp16-storage / f32-accumulate split
+//! the `*__mixed` artifacts use, so mixed artifacts can be cross-validated
+//! on any host, no GPU (and no PJRT) required.
 
 use std::f64::consts::PI;
+
+use crate::math::half::f16_round;
 
 /// Centered 8th-order first-derivative coefficients (offsets 1..4).
 pub const FD8_COEFFS: [f64; 4] = [4.0 / 5.0, -1.0 / 5.0, 4.0 / 105.0, -1.0 / 280.0];
@@ -55,6 +63,71 @@ pub fn fd8_div(v: &[f32], n: usize, h: f64) -> Vec<f32> {
         }
     }
     out
+}
+
+/// Round a whole field through f16 storage (mixed-cache emulation: this
+/// is what marshalling a tensor as an f16 literal does to its values).
+pub fn round_field_f16(f: &[f32]) -> Vec<f32> {
+    f.iter().map(|&x| f16_round(x)).collect()
+}
+
+/// FD8 partial derivative with fp16-emulated storage, mirroring the mixed
+/// kernels' arithmetic exactly: stored values round through f16, each tap
+/// *pair difference* is computed at f16 (the kernels subtract at storage
+/// precision — `fd8._fd8_axis` widens only after the subtract), and the
+/// coefficient FMA accumulates wide.
+pub fn fd8_partial_f16(f: &[f32], n: usize, axis: usize, h: f64) -> Vec<f32> {
+    assert_eq!(f.len(), n * n * n);
+    let fs = round_field_f16(f);
+    let stride = [n * n, n, 1][axis];
+    let mut out = vec![0f32; f.len()];
+    let at = |i: usize, j: usize, k: usize| (i * n + j) * n + k;
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let ijk = [i, j, k];
+                let base = at(i, j, k) as isize;
+                let pos = ijk[axis] as isize;
+                let mut acc = 0.0f32;
+                for (o, c) in FD8_COEFFS.iter().enumerate() {
+                    let off = (o + 1) as isize;
+                    let plus = base + (wrap(pos + off, n) as isize - pos) * stride as isize;
+                    let minus = base + (wrap(pos - off, n) as isize - pos) * stride as isize;
+                    let diff = f16_round(fs[plus as usize] - fs[minus as usize]);
+                    acc += *c as f32 * diff;
+                }
+                out[at(i, j, k)] = acc / h as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Trilinear periodic interpolation at one query point with fp16-emulated
+/// storage: corner values and weights round through f16, products
+/// accumulate in f32 — mirroring the reduced `interp_lin_f16` kernel.
+pub fn interp_linear_at_f16(f: &[f32], n: usize, q: [f64; 3]) -> f64 {
+    let i0: Vec<isize> = q.iter().map(|&x| x.floor() as isize).collect();
+    let t: Vec<f32> = q
+        .iter()
+        .zip(&i0)
+        .map(|(&x, &i)| f16_round((x - i as f64) as f32))
+        .collect();
+    let mut acc = 0.0f32;
+    for dx in 0..2 {
+        let wx = if dx == 1 { t[0] } else { f16_round(1.0 - t[0]) };
+        for dy in 0..2 {
+            let wy = if dy == 1 { t[1] } else { f16_round(1.0 - t[1]) };
+            for dz in 0..2 {
+                let wz = if dz == 1 { t[2] } else { f16_round(1.0 - t[2]) };
+                let idx = (wrap(i0[0] + dx, n) * n + wrap(i0[1] + dy, n)) * n
+                    + wrap(i0[2] + dz, n);
+                let w = f16_round(f16_round(wx * wy) * wz);
+                acc += w * f16_round(f[idx]);
+            }
+        }
+    }
+    acc as f64
 }
 
 /// Trilinear periodic interpolation at one query point (grid units).
@@ -274,6 +347,48 @@ mod tests {
             assert!((interp_linear_at(&f, n, q) - want).abs() < 1e-6);
             assert!((interp_cubic_at(&f, n, q) - want).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn f16_reference_kernels_track_f32_within_storage_error() {
+        // The fp16-emulating path must agree with the f32 reference to
+        // within the f16 storage error amplified by the stencil: FD8 sums
+        // |c_k| ~ 1.09 over value pairs of O(1), divided by h.
+        let n = 16;
+        let h = 2.0 * PI / n as f64;
+        let f = fig2_probe(n, 2.0);
+        let full = fd8_partial(&f, n, 2, h);
+        let half = fd8_partial_f16(&f, n, 2, h);
+        let rel = crate::math::stats::rel_l2(&half, &full);
+        assert!(rel > 0.0, "f16 emulation must actually perturb the result");
+        assert!(rel < 5e-3, "f16 FD8 drifted: rel {rel}");
+
+        let mut r = Rng::new(23);
+        let fr: Vec<f32> = (0..n * n * n).map(|_| r.uniform_f32(-1.0, 1.0)).collect();
+        let mut max_err = 0.0f64;
+        for _ in 0..256 {
+            let q = [
+                r.uniform_in(-8.0, 24.0),
+                r.uniform_in(-8.0, 24.0),
+                r.uniform_in(-8.0, 24.0),
+            ];
+            let a = interp_linear_at(&fr, n, q);
+            let b = interp_linear_at_f16(&fr, n, q);
+            max_err = max_err.max((a - b).abs());
+        }
+        // 8 corners of O(1) values, each stored at f16 (eps = 2^-11), plus
+        // weight rounding: a few f16 ulps total.
+        assert!(max_err < 5e-3, "f16 interp max err {max_err}");
+    }
+
+    #[test]
+    fn f16_field_roundtrip_is_idempotent() {
+        let mut r = Rng::new(24);
+        let f: Vec<f32> = (0..64).map(|_| r.uniform_f32(-100.0, 100.0)).collect();
+        let once = round_field_f16(&f);
+        let twice = round_field_f16(&once);
+        assert_eq!(once, twice, "f16 storage rounding must be idempotent");
+        assert!(once.iter().zip(&f).any(|(a, b)| a != b));
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Numerical substrates: FFT oracle, pure-Rust kernel references, stats.
+//! Numerical substrates: FFT oracle, pure-Rust kernel references, stats,
+//! and f16/bf16 bit conversions for the mixed-precision policy.
 
 pub mod fft;
+pub mod half;
 pub mod kernels_ref;
 pub mod stats;

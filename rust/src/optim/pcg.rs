@@ -8,6 +8,7 @@
 
 use crate::error::Result;
 use crate::field::ops;
+use crate::precision::Precision;
 
 /// Why PCG stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,19 +30,28 @@ pub struct PcgResult {
     pub stop: PcgStop,
     /// Final residual norm relative to the initial one.
     pub rel_residual: f64,
+    /// Precision the Hessian matvec ran at (echoed from the options into
+    /// the solve record; the PCG vector algebra itself is always f32
+    /// host-side with f64 accumulation).
+    pub matvec_precision: Precision,
 }
 
 /// Solver options. `rtol` is the Eisenstat-Walker style forcing term chosen
 /// by the Newton loop (superlinear: min(0.5, sqrt(||g||rel))).
+/// `matvec_precision` labels the precision of the supplied `matvec`
+/// operator — the Krylov loop itself is precision-agnostic, but the record
+/// of what precision produced an iterate travels with the result.
 #[derive(Clone, Copy, Debug)]
 pub struct PcgOptions {
     pub rtol: f64,
     pub max_iter: usize,
+    pub matvec_precision: Precision,
 }
 
 impl Default for PcgOptions {
     fn default() -> Self {
-        PcgOptions { rtol: 1e-1, max_iter: 500 } // paper: PCG cap 500
+        // paper: PCG cap 500
+        PcgOptions { rtol: 1e-1, max_iter: 500, matvec_precision: Precision::Full }
     }
 }
 
@@ -77,6 +87,7 @@ where
                 iters: it,
                 stop: PcgStop::NegativeCurvature,
                 rel_residual: rr.sqrt() / r0,
+                matvec_precision: opts.matvec_precision,
             });
         }
         let alpha = (rz / php) as f32;
@@ -88,6 +99,7 @@ where
                 iters: it + 1,
                 stop: PcgStop::Converged,
                 rel_residual: rr.sqrt() / r0,
+                matvec_precision: opts.matvec_precision,
             });
         }
         z = precond(&r)?;
@@ -96,7 +108,13 @@ where
         rz = rz_new;
         ops::xpay(&z, beta, &mut p);
     }
-    Ok(PcgResult { x, iters: opts.max_iter, stop: PcgStop::MaxIter, rel_residual: rr.sqrt() / r0 })
+    Ok(PcgResult {
+        x,
+        iters: opts.max_iter,
+        stop: PcgStop::MaxIter,
+        rel_residual: rr.sqrt() / r0,
+        matvec_precision: opts.matvec_precision,
+    })
 }
 
 #[cfg(test)]
@@ -166,7 +184,7 @@ mod tests {
             |(a, b)| {
                 let res = solve(
                     b,
-                    PcgOptions { rtol: 1e-8, max_iter: 500 },
+                    PcgOptions { rtol: 1e-8, max_iter: 500, ..Default::default() },
                     |p| Ok(a.matvec(p)),
                     |r| Ok(r.to_vec()),
                 )
@@ -193,7 +211,7 @@ mod tests {
             a.a[i * n + i] += (i as f64 + 1.0) * 10.0;
         }
         let b = prop::vec_f32(&mut r, n, -1.0, 1.0);
-        let opts = PcgOptions { rtol: 1e-6, max_iter: 500 };
+        let opts = PcgOptions { rtol: 1e-6, max_iter: 500, ..Default::default() };
         let plain = solve(&b, opts, |p| Ok(a.matvec(p)), |r| Ok(r.to_vec())).unwrap();
         // Jacobi preconditioner.
         let diag: Vec<f64> = (0..n).map(|i| a.a[i * n + i]).collect();
@@ -212,7 +230,7 @@ mod tests {
         let b = vec![1.0f32, -2.0, 3.0];
         let res = solve(
             &b,
-            PcgOptions { rtol: 1e-10, max_iter: 10 },
+            PcgOptions { rtol: 1e-10, max_iter: 10, ..Default::default() },
             |p| Ok(p.to_vec()),
             |r| Ok(r.to_vec()),
         )
@@ -238,13 +256,50 @@ mod tests {
     }
 
     #[test]
+    fn reduced_precision_matvec_still_converges() {
+        // Emulate the mixed policy: the matvec output passes through f16
+        // storage (kernels_ref-style emulation) while PCG's own algebra
+        // stays f32/f64. A well-conditioned system still converges to a
+        // residual consistent with f16 resolution, and the result records
+        // which precision produced it.
+        let mut r = Rng::new(44);
+        let n = 32usize;
+        // Well-conditioned diagonal operator, d in [1, 2] (kappa <= 2).
+        let d: Vec<f32> = (0..n).map(|i| 1.0 + i as f32 / (n as f32 - 1.0)).collect();
+        let b = prop::vec_f32(&mut r, n, -1.0, 1.0);
+        let res = solve(
+            &b,
+            PcgOptions { rtol: 1e-2, max_iter: 100, matvec_precision: Precision::Mixed },
+            |p| {
+                Ok(p.iter()
+                    .zip(&d)
+                    .map(|(&x, &dd)| crate::math::half::f16_round(dd * x))
+                    .collect())
+            },
+            |r| Ok(r.to_vec()),
+        )
+        .unwrap();
+        assert_eq!(res.matvec_precision, Precision::Mixed);
+        assert_eq!(res.stop, PcgStop::Converged);
+        // Check against the *exact* operator: the f16 matvec noise must not
+        // push the true residual far past the forcing tolerance.
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            num += ((d[i] * res.x[i] - b[i]) as f64).powi(2);
+            den += (b[i] as f64).powi(2);
+        }
+        let rel = (num / den).sqrt();
+        assert!(rel < 3e-2, "reduced-precision residual {rel}");
+    }
+
+    #[test]
     fn respects_max_iter() {
         let mut r = Rng::new(43);
         let a = Spd::random(&mut r, 32, 1e-6);
         let b = prop::vec_f32(&mut r, 32, -1.0, 1.0);
         let res = solve(
             &b,
-            PcgOptions { rtol: 1e-14, max_iter: 3 },
+            PcgOptions { rtol: 1e-14, max_iter: 3, ..Default::default() },
             |p| Ok(a.matvec(p)),
             |r| Ok(r.to_vec()),
         )

@@ -1,0 +1,73 @@
+//! The mixed-precision policy threaded through all three layers.
+//!
+//! The paper's headline speedup comes from running the scattered
+//! interpolation and the Hessian matvec inner loop at reduced precision
+//! (fp16 storage, f32 accumulation) while keeping the gradient, objective
+//! and line search in full precision (section 3; CLAIRE's follow-ups keep
+//! the same split). `Precision` is the explicit policy object:
+//!
+//! * `Full`  — f32 everywhere (the seed behavior; the default).
+//! * `Mixed` — the PCG Hessian matvec executes a reduced-precision artifact
+//!   whose per-Newton-iteration caches are marshalled as f16 at the PJRT
+//!   boundary; all outer quantities (gradient, objective, line search, PCG
+//!   vector algebra) stay f32.
+//!
+//! The policy flows L1 -> L3: `python/compile` lowers reduced-precision
+//! artifacts (`*__mixed` keys, per-tensor `dtype` manifest entries),
+//! `runtime/` marshals literals by dtype and caches compiled operators per
+//! `(op, variant, n, precision)`, `registration/solver.rs` picks the matvec
+//! artifact by policy, and `serve`/CLI carry a `precision` job field.
+
+use crate::error::{Error, Result};
+
+/// Solver precision policy (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Precision {
+    /// f32 storage and compute everywhere.
+    #[default]
+    Full,
+    /// fp16 storage for the Hessian-matvec caches and interpolation inner
+    /// loop, f32 accumulation and outer quantities.
+    Mixed,
+}
+
+impl Precision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::Full => "full",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "full" => Ok(Precision::Full),
+            "mixed" => Ok(Precision::Mixed),
+            other => Err(Error::Config(format!(
+                "unknown precision '{other}' (expected 'full' or 'mixed')"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_default() {
+        assert_eq!(Precision::default(), Precision::Full);
+        for p in [Precision::Full, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Precision::parse("half").is_err());
+        assert!(Precision::parse("").is_err());
+        assert_eq!(format!("{}", Precision::Mixed), "mixed");
+    }
+}

@@ -1,12 +1,17 @@
 //! Registration problem definition and solver parameters.
 
 use crate::field::Field3;
+use crate::precision::Precision;
 
 /// Solver parameters (defaults follow the paper, section 4.1.2).
 #[derive(Clone, Debug)]
 pub struct RegParams {
     /// Kernel variant tag (paper Table 6 analog; see model.py VARIANTS).
     pub variant: String,
+    /// Precision policy: `Mixed` runs the PCG Hessian matvec through the
+    /// reduced-precision artifact (fp16 caches, f32 accumulation) while
+    /// gradient/objective/line-search stay full precision (paper §3).
+    pub precision: Precision,
     /// Target regularization weight (paper: 5e-4).
     pub beta: f64,
     /// Divergence penalty (paper: 1e-4).
@@ -31,6 +36,7 @@ impl Default for RegParams {
     fn default() -> Self {
         RegParams {
             variant: "opt-fd8-cubic".into(),
+            precision: Precision::Full,
             beta: 5e-4,
             gamma: 1e-4,
             gtol: 5e-2,
@@ -83,6 +89,7 @@ mod tests {
     #[test]
     fn defaults_match_paper() {
         let p = RegParams::default();
+        assert_eq!(p.precision, Precision::Full);
         assert_eq!(p.beta, 5e-4);
         assert_eq!(p.gamma, 1e-4);
         assert_eq!(p.gtol, 5e-2);

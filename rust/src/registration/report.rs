@@ -2,6 +2,7 @@
 
 use crate::error::Result;
 use crate::math::stats::Summary;
+use crate::precision::Precision;
 use crate::registration::metrics::{dice_union, nondiffeo_fraction, warp_labels};
 use crate::registration::problem::RegProblem;
 use crate::registration::solver::{GnSolver, RegResult};
@@ -11,6 +12,9 @@ use crate::registration::solver::{GnSolver, RegResult};
 pub struct RunReport {
     pub dataset: String,
     pub variant: String,
+    /// Precision policy the solve was configured with (the per-iteration
+    /// record of what actually executed lives in `IterRecord`).
+    pub precision: Precision,
     pub n: usize,
     pub detf: Summary,
     pub nondiffeo_frac: f64,
@@ -43,6 +47,7 @@ impl RunReport {
         Ok(RunReport {
             dataset: prob.name.clone(),
             variant: solver.params.variant.clone(),
+            precision: solver.params.precision,
             n,
             detf,
             nondiffeo_frac: nondiffeo,
@@ -62,6 +67,7 @@ impl RunReport {
         let fmt_opt = |o: Option<f64>| o.map(|d| format!("{d:.2}")).unwrap_or_else(|| "-".into());
         vec![
             self.variant.clone(),
+            self.precision.as_str().to_string(),
             self.dataset.clone(),
             format!("{:.2}", self.detf.min),
             format!("{:.2}", self.detf.mean),
@@ -78,8 +84,8 @@ impl RunReport {
 
     pub fn headers() -> Vec<&'static str> {
         vec![
-            "variant", "data", "detF.min", "detF.mean", "detF.max", "DICE.pre", "DICE.post",
-            "mism", "|g|rel", "#iter", "#MV", "time[s]",
+            "variant", "prec", "data", "detF.min", "detF.mean", "detF.max", "DICE.pre",
+            "DICE.post", "mism", "|g|rel", "#iter", "#MV", "time[s]",
         ]
     }
 }

@@ -24,10 +24,17 @@ use crate::field::{ops, VecField3};
 use crate::optim::line_search::{armijo, ArmijoOptions};
 use crate::optim::pcg::{self, PcgOptions, PcgStop};
 use crate::optim::{continuation, Level};
+use crate::precision::Precision;
 use crate::registration::problem::{RegParams, RegProblem};
-use crate::runtime::OpRegistry;
+use crate::runtime::{Operator, OpRegistry};
 
 /// Record of one Gauss-Newton iteration (drives convergence tables/plots).
+///
+/// The two precision fields record the per-phase policy actually executed:
+/// `grad_precision` is the newton_setup/objective/line-search phase (pinned
+/// full precision by the paper's §3 split), `matvec_precision` is what the
+/// PCG Hessian matvecs ran at — `Mixed` under the mixed policy, or `Full`
+/// when the artifact set has no reduced lowering and the solver fell back.
 #[derive(Clone, Debug)]
 pub struct IterRecord {
     pub level_beta: f64,
@@ -36,6 +43,8 @@ pub struct IterRecord {
     pub grad_rel: f64,
     pub cg_iters: usize,
     pub alpha: f64,
+    pub grad_precision: Precision,
+    pub matvec_precision: Precision,
 }
 
 /// Full result of one registration solve (paper Table 7 row material).
@@ -75,7 +84,39 @@ impl<'a> GnSolver<'a> {
         for op in ["newton_setup", "hess_matvec", "objective", "precond"] {
             self.reg.get(op, &self.params.variant, n)?;
         }
+        // Warm the reduced-precision matvec too when the policy asks for
+        // it (ignore absence: `hess_operator` falls back at solve time).
+        if self.params.precision == Precision::Mixed {
+            let _ = self.reg.get_p("hess_matvec", &self.params.variant, n, Precision::Mixed);
+        }
         Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Resolve the Hessian matvec operator for the configured precision.
+    ///
+    /// The mixed policy prefers the `hess_matvec__…__mixed` artifact (fp16
+    /// caches, f32 accumulation); an artifact set that predates mixed
+    /// precision (no mixed entry at all) falls back to the full-precision
+    /// lowering — the record of what actually ran travels in
+    /// `Operator::art.precision`, so the fallback is visible in
+    /// `IterRecord`. A *present but broken* mixed artifact (missing file,
+    /// compile failure) is a deployment bug and propagates as an error
+    /// instead of silently running full precision under a mixed label.
+    fn hess_operator(&self, n: usize) -> Result<std::sync::Arc<Operator>> {
+        if self.params.precision == Precision::Mixed {
+            match self.reg.get_p("hess_matvec", &self.params.variant, n, Precision::Mixed) {
+                Ok(op) => return Ok(op),
+                Err(Error::ArtifactNotFound { .. }) => {
+                    if self.params.verbose {
+                        println!(
+                            "[gn] no mixed hess_matvec artifact at n={n}; using full precision"
+                        );
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.reg.get("hess_matvec", &self.params.variant, n)
     }
 
     /// Run the full solve (with continuation if enabled).
@@ -88,8 +129,13 @@ impl<'a> GnSolver<'a> {
     pub fn solve_from(&self, prob: &RegProblem, v0: Option<VecField3>) -> Result<RegResult> {
         let n = prob.n();
         let p = &self.params;
+        // Paper §3 precision split: setup (gradient), objective and
+        // preconditioner stay full precision; only the Hessian matvec may
+        // run reduced.
         let setup = self.reg.get("newton_setup", &p.variant, n)?;
-        let hess = self.reg.get("hess_matvec", &p.variant, n)?;
+        let hess = self.hess_operator(n)?;
+        let matvec_precision = hess.art.precision;
+        let grad_precision = setup.art.precision;
         let obj = self.reg.get("objective", &p.variant, n)?;
         let prec = self.reg.get("precond", &p.variant, n)?;
         let leray = if p.incompressible {
@@ -120,6 +166,12 @@ impl<'a> GnSolver<'a> {
         let mut matvecs = 0usize;
         let mut obj_evals = 0usize;
         let mut iters = 0usize;
+        // Scratch buffers hoisted out of the Newton/Armijo loops: the
+        // all-zero vt placeholder seeding the hess/precond literal caches
+        // and the line-search trial iterate are allocated once per solve,
+        // not once per iteration (3 n^3 floats each).
+        let zeros3 = vec![0f32; 3 * n * n * n];
+        let mut trial = vec![0f32; 3 * n * n * n];
         let mut final_state = (f64::NAN, f64::NAN, f64::NAN); // (J, mism, grel)
         let mut converged = false;
         // Reference gradient norm ||g0|| at v = 0 with the *target* beta:
@@ -172,13 +224,21 @@ impl<'a> GnSolver<'a> {
                 // -- PCG on the Gauss-Newton system ------------------------
                 // Literals for the caches are marshalled once per Newton
                 // iteration and shared across all matvecs of this solve.
-                let hess_lits = hess.literals(&[&vec![0f32; 3 * n * n * n], &m_traj, &yb, &yf, &divv, &bg])?;
-                let prec_lits = prec.literals(&[&vec![0f32; 3 * n * n * n], &bg])?;
+                // Under the mixed policy the cache tensors convert to f16
+                // here (operator.rs marshals by manifest dtype), so the
+                // reduced-precision cost is amortized exactly like the
+                // marshalling itself.
+                let hess_lits = hess.literals(&[&zeros3, &m_traj, &yb, &yf, &divv, &bg])?;
+                let prec_lits = prec.literals(&[&zeros3, &bg])?;
                 let forcing = grel.sqrt().min(0.5); // superlinear forcing
                 let mut local_mv = 0usize;
                 let pcg_res = pcg::solve(
                     &g.iter().map(|x| -x).collect::<Vec<f32>>(),
-                    PcgOptions { rtol: forcing, max_iter: p.max_krylov },
+                    PcgOptions {
+                        rtol: forcing,
+                        max_iter: p.max_krylov,
+                        matvec_precision,
+                    },
                     |vt| {
                         local_mv += 1;
                         let outs = hess.call_mixed(&hess_lits, &[(0, vt)])?;
@@ -214,7 +274,6 @@ impl<'a> GnSolver<'a> {
                     )));
                 }
                 let obj_lits = obj.literals(&[&v.data, m0, m1, &bg])?;
-                let mut trial = vec![0f32; v.data.len()];
                 let mut local_evals = 0usize;
                 let ls = armijo(j, gdx, ArmijoOptions::default(), |alpha| {
                     local_evals += 1;
@@ -248,6 +307,8 @@ impl<'a> GnSolver<'a> {
                     grad_rel: grel,
                     cg_iters: pcg_res.iters,
                     alpha: ls.alpha,
+                    grad_precision,
+                    matvec_precision: pcg_res.matvec_precision,
                 });
                 // Stagnation guard: stop the level when J no longer moves
                 // at f32-resolvable scale.

@@ -6,13 +6,56 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
+use crate::precision::Precision;
 use crate::util::json::Json;
 
-/// One tensor signature (name, shape) of an artifact.
+/// Element type of one artifact tensor at the PJRT boundary. The manifest
+/// declares it per signature; `runtime/operator.rs` marshals host f32
+/// buffers into the declared storage type. Entries without a `dtype`
+/// field are f32 (pre-mixed-precision manifests stay loadable).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DType {
+    #[default]
+    F32,
+    F16,
+    Bf16,
+}
+
+impl DType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f16" => Ok(DType::F16),
+            "bf16" => Ok(DType::Bf16),
+            other => Err(Error::Manifest(format!(
+                "unknown dtype '{other}' (expected f32, f16 or bf16)"
+            ))),
+        }
+    }
+
+    /// Bytes per element as marshalled on the wire to PJRT.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+        }
+    }
+}
+
+/// One tensor signature (name, shape, storage dtype) of an artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSig {
     pub name: String,
     pub shape: Vec<usize>,
+    pub dtype: DType,
 }
 
 impl TensorSig {
@@ -30,8 +73,20 @@ pub struct Artifact {
     pub variant: String,
     pub n: usize,
     pub nt: usize,
+    /// Precision the artifact was lowered at (missing field = full).
+    pub precision: Precision,
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
+}
+
+/// Manifest key for (op, variant, n, precision). Full-precision keys keep
+/// the historical `op__variant__nN` form; mixed artifacts append a
+/// `__mixed` suffix, so the key itself is the registry cache key.
+pub fn artifact_key(op: &str, variant: &str, n: usize, precision: Precision) -> String {
+    match precision {
+        Precision::Full => format!("{op}__{variant}__n{n}"),
+        Precision::Mixed => format!("{op}__{variant}__n{n}__mixed"),
+    }
 }
 
 /// The parsed manifest.
@@ -62,7 +117,16 @@ fn sigs_of(j: &Json, named: bool) -> Result<Vec<TensorSig>> {
             };
             let shape =
                 shape_of(e.get("shape").ok_or_else(|| Error::Manifest("missing shape".into()))?)?;
-            Ok(TensorSig { name, shape })
+            // Absent dtype defaults to f32 (back-compat); a present but
+            // malformed or unknown dtype is an error — silently marshalling
+            // the wrong element width would corrupt every call.
+            let dtype = match e.get("dtype") {
+                None => DType::F32,
+                Some(v) => DType::parse(
+                    v.as_str().ok_or_else(|| Error::Manifest("dtype is not a string".into()))?,
+                )?,
+            };
+            Ok(TensorSig { name, shape, dtype })
         })
         .collect()
 }
@@ -92,6 +156,14 @@ impl Manifest {
                     .map(str::to_string)
                     .ok_or_else(|| Error::Manifest(format!("{key}: missing {k}")))
             };
+            let precision = match entry.get("precision") {
+                None => Precision::Full,
+                Some(v) => Precision::parse(
+                    v.as_str()
+                        .ok_or_else(|| Error::Manifest(format!("{key}: precision not a string")))?,
+                )
+                .map_err(|e| Error::Manifest(format!("{key}: {e}")))?,
+            };
             let art = Artifact {
                 key: key.clone(),
                 file: dir.join(get_str("file")?),
@@ -102,6 +174,7 @@ impl Manifest {
                     .and_then(Json::as_usize)
                     .ok_or_else(|| Error::Manifest(format!("{key}: missing n")))?,
                 nt: entry.get("nt").and_then(Json::as_usize).unwrap_or(nt),
+                precision,
                 inputs: sigs_of(
                     entry.get("inputs").ok_or_else(|| Error::Manifest("missing inputs".into()))?,
                     true,
@@ -118,22 +191,40 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), nt, artifacts })
     }
 
-    /// Find the artifact for (op, variant, n). Kernel-level and shared ops
-    /// are emitted under the default variant; fall back to any variant that
-    /// provides the op at this size.
+    /// Find the full-precision artifact for (op, variant, n).
     pub fn find(&self, op: &str, variant: &str, n: usize) -> Result<&Artifact> {
-        let key = format!("{op}__{variant}__n{n}");
+        self.find_p(op, variant, n, Precision::Full)
+    }
+
+    /// Find the artifact for (op, variant, n, precision). Kernel-level and
+    /// shared ops are emitted under the default variant; fall back to any
+    /// variant that provides the op at this size *and precision* — a mixed
+    /// request never silently degrades to a full-precision artifact (the
+    /// solver decides its own fallback policy).
+    pub fn find_p(
+        &self,
+        op: &str,
+        variant: &str,
+        n: usize,
+        precision: Precision,
+    ) -> Result<&Artifact> {
+        let key = artifact_key(op, variant, n, precision);
         if let Some(a) = self.artifacts.get(&key) {
             return Ok(a);
         }
         self.artifacts
             .values()
-            .find(|a| a.op == op && a.n == n)
+            .find(|a| a.op == op && a.n == n && a.precision == precision)
             .ok_or_else(|| Error::ArtifactNotFound {
                 op: op.into(),
-                variant: variant.into(),
+                variant: format!("{variant}/{precision}"),
                 n,
             })
+    }
+
+    /// Whether an artifact exists for (op, variant, n, precision).
+    pub fn has(&self, op: &str, variant: &str, n: usize, precision: Precision) -> bool {
+        self.find_p(op, variant, n, precision).is_ok()
     }
 
     /// All grid sizes present for a given op.
@@ -173,6 +264,111 @@ mod tests {
     fn manifest_dir() -> Option<PathBuf> {
         let d = default_dir();
         d.join("manifest.json").exists().then_some(d)
+    }
+
+    /// Write a synthetic manifest.json into a fresh temp dir and load it.
+    fn load_synthetic(name: &str, body: &str) -> Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("claire_manifest_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        Manifest::load(&dir)
+    }
+
+    const MIXED_MANIFEST: &str = r#"{
+      "nt": 4,
+      "artifacts": {
+        "hess_matvec__opt-fd8-cubic__n16": {
+          "file": "hess_matvec__opt-fd8-cubic__n16.hlo.txt",
+          "op": "hess_matvec", "variant": "opt-fd8-cubic", "n": 16,
+          "inputs": [{"name": "vt", "shape": [3,16,16,16]}],
+          "outputs": [{"shape": [3,16,16,16], "dtype": "f32"}]
+        },
+        "hess_matvec__opt-fd8-cubic__n16__mixed": {
+          "file": "hess_matvec__opt-fd8-cubic__n16__mixed.hlo.txt",
+          "op": "hess_matvec", "variant": "opt-fd8-cubic", "n": 16,
+          "precision": "mixed",
+          "inputs": [
+            {"name": "vt", "shape": [3,16,16,16], "dtype": "f32"},
+            {"name": "m_traj", "shape": [5,16,16,16], "dtype": "f16"},
+            {"name": "q", "shape": [3,4096], "dtype": "bf16"}
+          ],
+          "outputs": [{"shape": [3,16,16,16], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn dtype_parsing_with_backcompat_default() {
+        let m = load_synthetic("dtypes", MIXED_MANIFEST).unwrap();
+        let full = m.find_p("hess_matvec", "opt-fd8-cubic", 16, Precision::Full).unwrap();
+        // Missing dtype field defaults to f32 (pre-dtype manifests load).
+        assert_eq!(full.precision, Precision::Full);
+        assert_eq!(full.inputs[0].dtype, DType::F32);
+        let mixed = m.find_p("hess_matvec", "opt-fd8-cubic", 16, Precision::Mixed).unwrap();
+        assert_eq!(mixed.precision, Precision::Mixed);
+        assert_eq!(mixed.inputs[0].dtype, DType::F32);
+        assert_eq!(mixed.inputs[1].dtype, DType::F16);
+        assert_eq!(mixed.inputs[2].dtype, DType::Bf16);
+        assert_eq!(mixed.outputs[0].dtype, DType::F32);
+        // The two precisions resolve to distinct artifact keys.
+        assert_ne!(full.key, mixed.key);
+        assert_eq!(mixed.key, artifact_key("hess_matvec", "opt-fd8-cubic", 16, Precision::Mixed));
+    }
+
+    #[test]
+    fn unknown_dtype_is_rejected() {
+        let bad = MIXED_MANIFEST.replace("\"f16\"", "\"f8\"");
+        let err = load_synthetic("baddtype", &bad).unwrap_err();
+        assert!(err.to_string().contains("unknown dtype"), "{err}");
+        // Wrong JSON type for dtype is also an error, not a silent default.
+        let bad2 = MIXED_MANIFEST.replace("\"f16\"", "16");
+        assert!(load_synthetic("baddtype2", &bad2).is_err());
+    }
+
+    #[test]
+    fn unknown_precision_is_rejected() {
+        let bad = MIXED_MANIFEST.replace("\"mixed\"", "\"half\"");
+        let err = load_synthetic("badprec", &bad).unwrap_err();
+        assert!(err.to_string().contains("unknown precision"), "{err}");
+    }
+
+    #[test]
+    fn mixed_lookup_never_degrades_to_full() {
+        // An op with only a full-precision entry: a Mixed request must not
+        // fall back to it (the solver decides its own fallback policy).
+        let only_full = r#"{
+          "nt": 4,
+          "artifacts": {
+            "hess_matvec__opt-fd8-cubic__n16": {
+              "file": "hess_matvec__opt-fd8-cubic__n16.hlo.txt",
+              "op": "hess_matvec", "variant": "opt-fd8-cubic", "n": 16,
+              "inputs": [{"name": "vt", "shape": [3,16,16,16]}],
+              "outputs": [{"shape": [3,16,16,16]}]
+            }
+          }
+        }"#;
+        let m = load_synthetic("onlyfull", only_full).unwrap();
+        assert!(m.find_p("hess_matvec", "opt-fd8-cubic", 16, Precision::Mixed).is_err());
+        assert!(m.find_p("hess_matvec", "opt-fd8-cubic", 16, Precision::Full).is_ok());
+        assert!(!m.has("hess_matvec", "opt-fd8-cubic", 16, Precision::Mixed));
+        assert!(m.has("hess_matvec", "opt-fd8-cubic", 16, Precision::Full));
+        // Conversely a mixed-only op must not satisfy a Full request.
+        let m2 = load_synthetic("mixedside", MIXED_MANIFEST).unwrap();
+        assert!(m2.find_p("newton_setup", "opt-fd8-cubic", 16, Precision::Mixed).is_err());
+        // The off-key fallback path stays precision-scoped too.
+        let fb = m2.find_p("hess_matvec", "ref-fft-cubic", 16, Precision::Mixed).unwrap();
+        assert_eq!(fb.precision, Precision::Mixed);
+    }
+
+    #[test]
+    fn tensor_sig_accounts_marshalled_bytes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::Bf16.size_bytes(), 2);
+        assert!(DType::parse("f64").is_err());
+        let sig = TensorSig { name: "v".into(), shape: vec![3, 8, 8, 8], dtype: DType::F16 };
+        assert_eq!(sig.elements(), 3 * 512);
+        assert_eq!(sig.elements() * sig.dtype.size_bytes(), 3 * 512 * 2);
     }
 
     #[test]

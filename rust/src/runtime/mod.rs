@@ -5,6 +5,6 @@ pub mod manifest;
 pub mod operator;
 pub mod registry;
 
-pub use manifest::{Artifact, Manifest, TensorSig};
-pub use operator::{literal_f32, OpStats, Operator};
+pub use manifest::{artifact_key, Artifact, DType, Manifest, TensorSig};
+pub use operator::{literal_f32, literal_for, OpStats, Operator};
 pub use registry::OpRegistry;

@@ -6,13 +6,22 @@
 //! reassigns the 64-bit instruction ids jax >= 0.5 emits, which
 //! xla_extension 0.5.1 would reject in proto form), compiled once, and
 //! executed from the solver hot loop. Python is never involved.
+//!
+//! Mixed precision: the host side always works in f32. Each input literal
+//! is marshalled at the *manifest-declared* dtype — f16/bf16 tensors are
+//! converted at this boundary (`math/half.rs`), so a mixed artifact's
+//! per-Newton-iteration caches cost half the literal bytes and the
+//! conversion is paid once per cache build, not once per matvec. Outputs
+//! are declared f32 by every artifact (reduced precision lives *inside*
+//! the kernels; outer quantities stay full precision per paper section 3).
 
 use std::time::Instant;
 
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::error::{Error, Result};
-use crate::runtime::manifest::Artifact;
+use crate::math::half;
+use crate::runtime::manifest::{Artifact, DType, TensorSig};
 
 /// Runtime counters for one operator (drives the Fig 3/4 breakdowns).
 #[derive(Clone, Copy, Debug, Default)]
@@ -34,6 +43,10 @@ fn f32_bytes(xs: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
+fn u16_bytes(xs: &[u16]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 2) }
+}
+
 /// Build an f32 literal of the given shape from a host slice.
 pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
     let expected: usize = shape.iter().product();
@@ -47,9 +60,56 @@ pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, f32_bytes(data))?)
 }
 
+/// Build a literal from an f32 host slice at the signature's declared
+/// storage dtype, converting at the boundary for f16/bf16.
+pub fn literal_for(sig: &TensorSig, data: &[f32]) -> Result<Literal> {
+    let expected = sig.elements();
+    if data.len() != expected {
+        return Err(Error::ShapeMismatch {
+            what: format!("literal '{}'", sig.name),
+            expected,
+            got: data.len(),
+        });
+    }
+    Ok(match sig.dtype {
+        DType::F32 => Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &sig.shape,
+            f32_bytes(data),
+        )?,
+        DType::F16 => {
+            let bits = half::f16_bits_of(data);
+            Literal::create_from_shape_and_untyped_data(
+                ElementType::F16,
+                &sig.shape,
+                u16_bytes(&bits),
+            )?
+        }
+        DType::Bf16 => {
+            let bits = half::bf16_bits_of(data);
+            Literal::create_from_shape_and_untyped_data(
+                ElementType::Bf16,
+                &sig.shape,
+                u16_bytes(&bits),
+            )?
+        }
+    })
+}
+
 impl Operator {
     /// Load + compile an artifact on the given client.
     pub fn compile(client: &PjRtClient, art: &Artifact) -> Result<Operator> {
+        // Outputs are unmarshalled as f32; reject exotic artifacts up
+        // front instead of failing on the first call.
+        if let Some(bad) = art.outputs.iter().find(|s| s.dtype != DType::F32) {
+            return Err(Error::Manifest(format!(
+                "{}: output '{}' is {} — only f32 outputs are marshalled \
+                 (reduced precision lives inside the kernels)",
+                art.key,
+                bad.name,
+                bad.dtype.as_str()
+            )));
+        }
         let proto = xla::HloModuleProto::from_text_file(&art.file)?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp)?;
@@ -65,6 +125,8 @@ impl Operator {
 
     /// Pre-build input literals (reusable across calls: the PCG loop reuses
     /// the newton_setup caches for every matvec without re-marshalling).
+    /// Each literal is built at its manifest-declared dtype, so mixed
+    /// artifacts pay the f32 -> f16 conversion here, once per cache.
     pub fn literals(&self, inputs: &[&[f32]]) -> Result<Vec<Literal>> {
         if inputs.len() != self.art.inputs.len() {
             return Err(Error::ShapeMismatch {
@@ -77,7 +139,7 @@ impl Operator {
             .inputs
             .iter()
             .zip(inputs)
-            .map(|(sig, data)| literal_f32(&sig.shape, data))
+            .map(|(sig, data)| literal_for(sig, data))
             .collect()
     }
 
@@ -117,7 +179,7 @@ impl Operator {
                 .inputs
                 .get(idx)
                 .ok_or_else(|| Error::Manifest(format!("input index {idx} out of range")))?;
-            owned.push((idx, literal_f32(&sig.shape, data)?));
+            owned.push((idx, literal_for(sig, data)?));
         }
         for (idx, lit) in &owned {
             lits[*idx] = lit;
@@ -143,5 +205,35 @@ impl Operator {
 
     pub fn reset_stats(&self) {
         self.stats.set(OpStats::default());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(dtype: DType) -> TensorSig {
+        TensorSig { name: "x".into(), shape: vec![2, 3], dtype }
+    }
+
+    #[test]
+    fn literal_for_validates_element_count() {
+        let data = [1.0f32; 5];
+        for d in [DType::F32, DType::F16, DType::Bf16] {
+            let err = literal_for(&sig(d), &data).unwrap_err();
+            assert!(matches!(err, Error::ShapeMismatch { expected: 6, got: 5, .. }), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn reduced_literals_build_at_every_dtype() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32 * 0.25).collect();
+        for d in [DType::F32, DType::F16, DType::Bf16] {
+            assert!(literal_for(&sig(d), &data).is_ok(), "{d:?}");
+        }
+        // The marshalled byte count is the signature's accounting answer
+        // (the literal itself is opaque): f16/bf16 halve the boundary.
+        assert_eq!(sig(DType::F32).elements() * DType::F32.size_bytes(), 24);
+        assert_eq!(sig(DType::F16).elements() * DType::F16.size_bytes(), 12);
     }
 }

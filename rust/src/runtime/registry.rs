@@ -3,6 +3,11 @@
 //! One PJRT client per process; operators compile on first use and are
 //! shared by reference afterwards (executables are stateless; the batch
 //! coordinator shares one registry across worker threads via `Mutex`).
+//!
+//! The cache key is the artifact key, which encodes the full
+//! `(op, variant, n, precision)` quadruple (`manifest::artifact_key`): a
+//! mixed-precision operator and its full-precision sibling compile and
+//! cache independently, so a daemon serving both policies warms both.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -12,10 +17,11 @@ use std::sync::{Arc, Mutex};
 use xla::PjRtClient;
 
 use crate::error::Result;
+use crate::precision::Precision;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::operator::Operator;
 
-/// Lazily compiled operator cache keyed by (op, variant, n).
+/// Lazily compiled operator cache keyed by (op, variant, n, precision).
 pub struct OpRegistry {
     pub client: PjRtClient,
     pub manifest: Manifest,
@@ -43,9 +49,23 @@ impl OpRegistry {
         Self::open(&crate::runtime::manifest::default_dir())
     }
 
-    /// Get (compiling on first use) the operator for (op, variant, n).
+    /// Get (compiling on first use) the full-precision operator for
+    /// (op, variant, n).
     pub fn get(&self, op: &str, variant: &str, n: usize) -> Result<Arc<Operator>> {
-        let art = self.manifest.find(op, variant, n)?.clone();
+        self.get_p(op, variant, n, Precision::Full)
+    }
+
+    /// Get (compiling on first use) the operator for
+    /// (op, variant, n, precision). Precisions never share cache entries:
+    /// the resolved artifact key encodes the precision.
+    pub fn get_p(
+        &self,
+        op: &str,
+        variant: &str,
+        n: usize,
+        precision: Precision,
+    ) -> Result<Arc<Operator>> {
+        let art = self.manifest.find_p(op, variant, n, precision)?.clone();
         let mut cache = self.cache.lock().unwrap();
         if let Some(o) = cache.get(&art.key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -145,6 +165,36 @@ mod tests {
                 got[idx]
             );
         }
+    }
+
+    #[test]
+    fn precisions_cache_under_distinct_keys() {
+        let Some(reg) = registry() else {
+            return;
+        };
+        let n = 16usize;
+        if !reg.manifest.has("hess_matvec", "opt-fd8-cubic", n, Precision::Mixed) {
+            eprintln!("skipping: artifacts predate mixed precision");
+            return;
+        }
+        let full = reg.get_p("hess_matvec", "opt-fd8-cubic", n, Precision::Full).unwrap();
+        let mixed = reg.get_p("hess_matvec", "opt-fd8-cubic", n, Precision::Mixed).unwrap();
+        // Same (op, variant, n), different precision: distinct compilations.
+        assert!(!Arc::ptr_eq(&full, &mixed));
+        assert_ne!(full.art.key, mixed.art.key);
+        assert_eq!(reg.compiled_count(), 2);
+        assert_eq!(reg.cache_compiles(), 2);
+        // Re-fetching either is a warm hit on its own entry.
+        let full2 = reg.get_p("hess_matvec", "opt-fd8-cubic", n, Precision::Full).unwrap();
+        assert!(Arc::ptr_eq(&full, &full2));
+        assert_eq!(reg.cache_hits(), 1);
+        assert_eq!(reg.compiled_count(), 2);
+        // The mixed artifact declares reduced-storage cache tensors.
+        assert!(mixed
+            .art
+            .inputs
+            .iter()
+            .any(|s| s.dtype == crate::runtime::manifest::DType::F16));
     }
 
     #[test]

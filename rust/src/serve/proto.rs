@@ -18,6 +18,7 @@
 //! ```
 
 use crate::error::{Error, Result};
+use crate::precision::Precision;
 use crate::registration::RegParams;
 use crate::serve::scheduler::{JobId, JobState, JobView, ServeStats};
 use crate::util::json::Json;
@@ -114,6 +115,9 @@ pub struct JobSpec {
     pub subject: String,
     pub n: usize,
     pub variant: String,
+    /// Solver precision policy; `mixed` runs the PCG Hessian matvecs
+    /// through the reduced-precision artifacts. Wire field `"precision"`.
+    pub precision: Precision,
     pub priority: Priority,
     pub max_iter: Option<usize>,
     pub beta: Option<f64>,
@@ -127,6 +131,7 @@ impl Default for JobSpec {
             subject: "na02".into(),
             n: 16,
             variant: "opt-fd8-cubic".into(),
+            precision: Precision::Full,
             priority: Priority::Batch,
             max_iter: None,
             beta: None,
@@ -137,14 +142,25 @@ impl Default for JobSpec {
 }
 
 impl JobSpec {
-    /// Display name used in job records and the journal.
+    /// Display name used in job records and the journal. Mixed-precision
+    /// jobs carry a `+mixed` suffix so status tables and the journal show
+    /// the policy at a glance.
     pub fn name(&self) -> String {
-        format!("{}@{}^3/{}", self.subject, self.n, self.variant)
+        match self.precision {
+            Precision::Full => format!("{}@{}^3/{}", self.subject, self.n, self.variant),
+            Precision::Mixed => {
+                format!("{}@{}^3/{}+mixed", self.subject, self.n, self.variant)
+            }
+        }
     }
 
     /// Solver parameters with the spec's overrides applied.
     pub fn reg_params(&self) -> RegParams {
-        let mut p = RegParams { variant: self.variant.clone(), ..Default::default() };
+        let mut p = RegParams {
+            variant: self.variant.clone(),
+            precision: self.precision,
+            ..Default::default()
+        };
         if let Some(m) = self.max_iter {
             p.max_iter = m;
         }
@@ -165,6 +181,7 @@ impl JobSpec {
             ("subject", Json::str(&self.subject)),
             ("n", Json::num(self.n as f64)),
             ("variant", Json::str(&self.variant)),
+            ("precision", Json::str(self.precision.as_str())),
             ("priority", Json::str(self.priority.as_str())),
         ];
         if let Some(m) = self.max_iter {
@@ -220,6 +237,13 @@ impl JobSpec {
             variant: field(j, "variant", Json::as_str, "a string")?
                 .map(str::to_string)
                 .unwrap_or(d.variant),
+            // Absent precision defaults to full (pre-precision clients keep
+            // working); a present but unknown value is an error.
+            precision: match field(j, "precision", Json::as_str, "a string")? {
+                Some(s) => Precision::parse(s)
+                    .map_err(|_| Error::Serve(format!("unknown job precision '{s}'")))?,
+                None => d.precision,
+            },
             priority: match field(j, "priority", Json::as_str, "a string")? {
                 Some(s) => Priority::parse(s)?,
                 None => d.priority,
@@ -466,6 +490,7 @@ mod tests {
             subject: "na03".into(),
             n: 32,
             variant: "opt-fd8-linear".into(),
+            precision: Precision::Mixed,
             priority: Priority::Emergency,
             max_iter: Some(7),
             beta: Some(1e-3),
@@ -493,14 +518,35 @@ mod tests {
         assert_eq!(spec.subject, "na10");
         assert_eq!(spec.n, 16);
         assert_eq!(spec.priority, Priority::Batch);
+        // Absent precision defaults to full (pre-precision clients).
+        assert_eq!(spec.precision, Precision::Full);
         let p = spec.reg_params();
         assert_eq!(p.variant, "opt-fd8-cubic");
+        assert_eq!(p.precision, Precision::Full);
         assert_eq!(p.max_iter, RegParams::default().max_iter);
 
         let spec2 = JobSpec { max_iter: Some(3), continuation: Some(false), ..spec };
         let p2 = spec2.reg_params();
         assert_eq!(p2.max_iter, 3);
         assert!(!p2.continuation);
+    }
+
+    #[test]
+    fn spec_precision_wire_field() {
+        let spec = JobSpec::from_json(
+            &Json::parse(r#"{"subject":"na02","precision":"mixed"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.precision, Precision::Mixed);
+        assert_eq!(spec.reg_params().precision, Precision::Mixed);
+        assert_eq!(spec.name(), "na02@16^3/opt-fd8-cubic+mixed");
+        // Round-trips through the submit line.
+        let line = Request::Submit(spec.clone()).to_line();
+        assert!(line.contains(r#""precision":"mixed""#), "{line}");
+        assert_eq!(Request::parse(&line).unwrap(), Request::Submit(spec));
+        // Unknown or mistyped precision errors instead of running full.
+        assert!(JobSpec::from_json(&Json::parse(r#"{"precision":"half"}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(&Json::parse(r#"{"precision":16}"#).unwrap()).is_err());
     }
 
     #[test]

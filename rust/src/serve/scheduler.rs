@@ -12,7 +12,8 @@
 //! The `Executor` trait decouples scheduling from PJRT so the scheduler's
 //! invariants (and the daemon's wire protocol) are testable without
 //! compiled artifacts; `PjrtExecutor` is the production implementation with
-//! the per-worker shared-warm operator cache keyed by `(op, variant, n)`.
+//! the per-worker shared-warm operator cache keyed by
+//! `(op, variant, n, precision)`.
 
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
@@ -564,7 +565,7 @@ pub trait Executor {
 }
 
 /// Production executor: per-worker PJRT client and shared-warm operator
-/// cache keyed by `(op, variant, n)` — compilation cost is paid once per
+/// cache keyed by `(op, variant, n, precision)` — compilation cost is paid once per
 /// worker process lifetime, not once per request.
 pub struct PjrtExecutor {
     registry: OpRegistry,
@@ -639,6 +640,7 @@ pub fn stub_report(name: &str) -> RunReport {
     RunReport {
         dataset: name.to_string(),
         variant: "stub".into(),
+        precision: crate::precision::Precision::Full,
         n: 16,
         detf: crate::math::stats::Summary { min: 1.0, mean: 1.0, max: 1.0 },
         nondiffeo_frac: 0.0,

@@ -16,13 +16,15 @@ use claire::serve::{
     scheduler::stub_report, Client, Daemon, DaemonConfig, Executor, ExecutorFactory, JobPayload,
     JobSpec, JobState, Priority,
 };
+use claire::Precision;
 
 /// Stub worker: sleeps `max_iter` milliseconds per job (so tests control
 /// service time through the spec) and emulates the shared-warm operator
-/// cache: the first job at a given (variant, n) "compiles" a handful of
-/// operators, every later same-shape job hits them warm.
+/// cache: the first job at a given (variant, n, precision) "compiles" a
+/// handful of operators, every later same-shape same-policy job hits them
+/// warm — mirroring the registry's precision-separated cache keys.
 struct StubExec {
-    warm: BTreeSet<(String, usize)>,
+    warm: BTreeSet<(String, usize, Precision)>,
     compiles: u64,
     hits: u64,
 }
@@ -32,7 +34,7 @@ impl Executor for StubExec {
         let JobPayload::Spec(spec) = payload else {
             return Ok(stub_report("problem"));
         };
-        if self.warm.insert((spec.variant.clone(), spec.n)) {
+        if self.warm.insert((spec.variant.clone(), spec.n, spec.precision)) {
             self.compiles += 5;
         } else {
             self.hits += 5;
@@ -203,6 +205,44 @@ fn daemon_applies_backpressure_but_admits_emergencies() {
     let stats = client.wait_idle(30.0).unwrap();
     assert_eq!(stats.rejected, 1);
     assert_eq!(stats.completed, 4);
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// A `precision:"mixed"` job round-trips through submit/status over the
+/// real wire protocol, artifact-free: the status view carries the policy
+/// in the job name and the stub cache treats the two precisions as
+/// distinct warm keys (the registry contract).
+#[test]
+fn mixed_precision_job_roundtrips_over_the_wire() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    let mixed = JobSpec { precision: Precision::Mixed, ..spec("na02", Priority::Urgent, 1) };
+    let full = spec("na02", Priority::Batch, 1);
+    let id_mixed = client.submit(&mixed).unwrap();
+    let id_full = client.submit(&full).unwrap();
+
+    let vm = client.wait_terminal(id_mixed, 10.0).unwrap();
+    assert_eq!(vm.state, JobState::Done);
+    assert!(vm.name.ends_with("+mixed"), "status must show the policy: {}", vm.name);
+    let vf = client.wait_terminal(id_full, 10.0).unwrap();
+    assert_eq!(vf.state, JobState::Done);
+    assert!(!vf.name.contains("mixed"), "{}", vf.name);
+
+    // Same (variant, n), different precision: no warm-cache sharing, so
+    // both jobs "compiled" (the stub mirrors the registry cache keys).
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.cache_compiles, 10, "full and mixed must not share cache entries");
+    assert_eq!(stats.cache_hits, 0);
 
     client.shutdown(true).unwrap();
     handle.join().unwrap();

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verify + formatting + serve round-trip smoke test.
+# Tier-1 verify + formatting + lint + serve round-trip smoke test.
 # Usage: scripts/ci.sh  (from anywhere; cd's to the rust crate)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -12,6 +12,16 @@ echo "== cargo fmt --check (advisory) =="
 # carries >100-col lines in a dozen files. First session with a Rust
 # toolchain: run `cargo fmt`, commit, then drop the `|| true`.
 cargo fmt --check || echo "WARNING: tree is not rustfmt-clean (see scripts/ci.sh note)"
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy -- -D warnings
+
+echo "== python -m compileall (syntax gate for the L1/L2 layers) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 -m compileall -q ../python
+else
+  echo "WARNING: python3 not found; skipping compileall"
+fi
 
 echo "== serve round-trip smoke (fail-fast) =="
 cargo test -q serve_round_trip_smoke

@@ -17,7 +17,7 @@ use claire::error::Result;
 use claire::math::stats::percentile_sorted;
 use claire::registration::RunReport;
 use claire::serve::scheduler::stub_report;
-use claire::serve::{worker_loop, Executor, JobPayload, JobSpec, Priority, Scheduler};
+use claire::serve::{worker_loop, Executor, JobPayload, JobSpec, Priority, Scheduler, VolumeStore};
 use claire::util::bench::Table;
 use claire::util::json::Json;
 
@@ -79,6 +79,58 @@ fn run_once(jobs: usize, workers: usize, service: Duration) -> Row {
     }
 }
 
+/// Volume-store throughput: cold puts (hash + insert), dedup re-puts
+/// (hash + LRU touch) and resolves, over 64^3 volumes (1 MiB each) — the
+/// data plane's admission-path costs.
+struct StoreRow {
+    cold_puts_per_s: f64,
+    cold_mb_per_s: f64,
+    dedup_puts_per_s: f64,
+    gets_per_s: f64,
+}
+
+fn run_store_bench(volumes: usize, n: usize) -> StoreRow {
+    let bytes_per = n * n * n * 4;
+    let store = VolumeStore::new((volumes * bytes_per) as u64);
+    let make = |seed: usize| -> Vec<f32> {
+        // Cheap deterministic content; distinct per seed so cold puts
+        // never dedup.
+        (0..n * n * n).map(|i| (seed * 31 + i) as f32).collect()
+    };
+    // Pre-build the volumes — and the owned copies `put` consumes — so the
+    // measured loops are pure store cost (hash + insert / LRU touch), not
+    // generation or memcpy cost.
+    let cold_set: Vec<Vec<f32>> = (0..volumes).map(make).collect();
+    let dedup_set = cold_set.clone();
+
+    let t0 = Instant::now();
+    let ids: Vec<String> =
+        cold_set.into_iter().map(|v| store.put(n, v).unwrap().id).collect();
+    let cold_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+    let t0 = Instant::now();
+    for v in dedup_set {
+        assert!(store.put(n, v).unwrap().dedup);
+    }
+    let dedup_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+    let t0 = Instant::now();
+    for id in &ids {
+        assert!(store.get(id).is_some());
+    }
+    let get_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+    let stats = store.stats();
+    assert_eq!(stats.volumes, volumes);
+    assert_eq!(stats.dedup_hits, volumes as u64);
+    StoreRow {
+        cold_puts_per_s: volumes as f64 / cold_s,
+        cold_mb_per_s: (volumes * bytes_per) as f64 / (1024.0 * 1024.0) / cold_s,
+        dedup_puts_per_s: volumes as f64 / dedup_s,
+        gets_per_s: volumes as f64 / get_s,
+    }
+}
+
 fn main() {
     let jobs = 48usize;
     let service = Duration::from_millis(4);
@@ -103,6 +155,24 @@ fn main() {
     println!("\n(expected: jobs/s scales ~linearly in workers until core count;");
     println!(" p95 latency drops as queue wait shrinks — cf. workload.rs M/D/c model)");
 
+    let store_vols = 32usize;
+    let store_n = 64usize;
+    println!("\n== volume store: {store_vols} x {store_n}^3 volumes (1 MiB each) ==\n");
+    // Warmup pass absorbs allocator effects, as above.
+    run_store_bench(store_vols / 4, store_n);
+    let sr = run_store_bench(store_vols, store_n);
+    let mut st = Table::new(&["cold puts/s", "cold MB/s", "dedup puts/s", "gets/s"]);
+    st.row(&[
+        format!("{:.0}", sr.cold_puts_per_s),
+        format!("{:.0}", sr.cold_mb_per_s),
+        format!("{:.0}", sr.dedup_puts_per_s),
+        format!("{:.0}", sr.gets_per_s),
+    ]);
+    st.print();
+    println!("\n(cold puts pay the FNV-1a content hash over the volume bytes;");
+    println!(" dedup re-puts pay the same hash but skip the copy — upload");
+    println!(" admission cost is hash-bound either way)");
+
     let summary = Json::object([
         ("bench", Json::str("service")),
         ("jobs", Json::num(jobs as f64)),
@@ -123,6 +193,17 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "store",
+            Json::object([
+                ("volumes", Json::num(store_vols as f64)),
+                ("n", Json::num(store_n as f64)),
+                ("cold_puts_per_s", Json::num(sr.cold_puts_per_s)),
+                ("cold_mb_per_s", Json::num(sr.cold_mb_per_s)),
+                ("dedup_puts_per_s", Json::num(sr.dedup_puts_per_s)),
+                ("gets_per_s", Json::num(sr.gets_per_s)),
+            ]),
         ),
     ]);
     let out = "BENCH_service.json";

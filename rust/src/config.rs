@@ -89,6 +89,7 @@ impl Config {
             max_iter: self.get_usize("max_iter", d.max_iter)?,
             max_krylov: self.get_usize("max_krylov", d.max_krylov)?,
             continuation: self.get_bool("continuation", d.continuation)?,
+            multires: self.get_usize("multires", d.multires)?,
             incompressible: self.get_bool("incompressible", d.incompressible)?,
             verbose: self.get_bool("verbose", d.verbose)?,
         })
@@ -123,6 +124,14 @@ mod tests {
         assert!(!p.continuation);
         assert_eq!(p.beta, 5e-4); // default preserved
         assert_eq!(p.precision, Precision::Full); // default policy
+    }
+
+    #[test]
+    fn multires_key_parses() {
+        let c = Config::parse("multires = 3\n").unwrap();
+        assert_eq!(c.reg_params().unwrap().multires, 3);
+        let d = Config::parse("beta = 5e-4\n").unwrap();
+        assert_eq!(d.reg_params().unwrap().multires, 1, "absent = single grid");
     }
 
     #[test]

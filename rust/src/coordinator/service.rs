@@ -25,7 +25,10 @@ use crate::serve::scheduler::{
 
 use std::path::PathBuf;
 
-/// One queued registration job.
+/// One queued registration job. The job shape matches the serve daemon's:
+/// `params` carries the full solver policy — precision *and* the
+/// `multires` level count — so a batch entry runs exactly what the wire's
+/// `submit` would (`GnSolver::solve_auto` dispatches in both paths).
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: usize,

@@ -12,13 +12,31 @@ use crate::error::{Error, Result};
 use crate::field::Field3;
 use crate::util::json::Json;
 
-/// Write a scalar field as `<path>.f32` + `<path>.json` metadata.
-pub fn write_field(path: &Path, f: &Field3, desc: &str) -> Result<()> {
-    let mut bytes = Vec::with_capacity(f.data.len() * 4);
-    for &x in &f.data {
+/// Serialize f32 samples little-endian — the `.f32` on-disk format and the
+/// serve data plane's wire payload format (base64-wrapped there).
+pub fn f32s_to_le_bytes(data: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
         bytes.extend_from_slice(&x.to_le_bytes());
     }
-    fs::File::create(path.with_extension("f32"))?.write_all(&bytes)?;
+    bytes
+}
+
+/// Inverse of [`f32s_to_le_bytes`]; errors unless the byte count is a
+/// multiple of 4.
+pub fn f32s_from_le_bytes(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Data(format!(
+            "f32 volume payload of {} bytes is not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+/// Write a scalar field as `<path>.f32` + `<path>.json` metadata.
+pub fn write_field(path: &Path, f: &Field3, desc: &str) -> Result<()> {
+    fs::File::create(path.with_extension("f32"))?.write_all(&f32s_to_le_bytes(&f.data))?;
     let meta = format!(
         "{{\"n\": {}, \"dtype\": \"f32\", \"order\": \"x1x2x3\", \"desc\": \"{}\"}}\n",
         f.n,
@@ -45,8 +63,7 @@ pub fn read_field(path: &Path) -> Result<Field3> {
             got: bytes.len(),
         });
     }
-    let data = bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect();
-    Field3::from_vec(n, data)
+    Field3::from_vec(n, f32s_from_le_bytes(&bytes)?)
 }
 
 /// Write a label map as u16 little-endian.
@@ -121,6 +138,13 @@ mod tests {
         let j = Json::parse(&meta).unwrap();
         assert_eq!(j.get("desc").and_then(Json::as_str), Some(desc));
         assert_eq!(read_field(&p).unwrap(), f);
+    }
+
+    #[test]
+    fn le_byte_helpers_roundtrip_and_reject_torn() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(f32s_from_le_bytes(&f32s_to_le_bytes(&xs)).unwrap(), xs);
+        assert!(f32s_from_le_bytes(&[0u8; 6]).is_err());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //!   register   run one registration (synthetic NIREP-analog pair)
 //!   batch      run the clinical-style batch service over many jobs
 //!   serve      start the persistent registration daemon (NDJSON over TCP)
-//!   submit     submit job(s) to a running daemon
+//!   upload     ship a fixed/moving volume pair into a running daemon
+//!   submit     submit job(s) to a running daemon (synthetic or uploaded)
 //!   status     job table + stats from a running daemon
 //!   cancel     cancel a queued job on a running daemon
 //!   shutdown   stop a running daemon (drain by default)
@@ -12,7 +13,7 @@
 //!   info       artifact inventory and platform info
 //!   complexity Table-1 style kernel counts per operator
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use claire::coordinator::{BatchService, Job};
 use claire::data::synth;
@@ -20,7 +21,7 @@ use claire::error::Result;
 use claire::registration::{BaselineKind, GnSolver, RegParams, RunReport};
 use claire::runtime::OpRegistry;
 use claire::serve::client::job_table;
-use claire::serve::{pjrt_factory, Client, Daemon, DaemonConfig, JobSpec, Priority};
+use claire::serve::{pjrt_factory, Client, Daemon, DaemonConfig, JobSource, JobSpec, Priority};
 use claire::util::args::{flag, opt, usage, Args, OptSpec};
 use claire::util::bench::Table;
 
@@ -53,9 +54,14 @@ fn common_specs() -> Vec<OptSpec> {
         opt("dump-volumes", "directory to write before/after volumes", ""),
         opt("config", "key=value config file (overridden by flags)", ""),
         opt("multires", "grid-continuation levels (1 = single grid)", "1"),
-        opt("addr", "daemon address (serve/submit/status/shutdown)", "127.0.0.1:7464"),
+        opt("addr", "daemon address (serve/upload/submit/status/shutdown)", "127.0.0.1:7464"),
         opt("queue-cap", "serve: max waiting batch/urgent jobs", "64"),
         opt("journal", "serve: job journal path ('' disables)", "serve_journal.ndjson"),
+        opt("store-mb", "serve: volume store byte budget (MiB)", "1024"),
+        opt("fixed", "upload: fixed/reference volume (data/io .f32+.json path)", ""),
+        opt("moving", "upload: moving/template volume (data/io .f32+.json path)", ""),
+        opt("m0", "submit: content id of the uploaded moving/template volume", ""),
+        opt("m1", "submit: content id of the uploaded fixed/reference volume", ""),
         opt("priority", "submit: batch | urgent | emergency", "batch"),
         opt("count", "submit: number of jobs (subjects cycle)", "1"),
         opt("id", "status/cancel: job id", ""),
@@ -92,6 +98,7 @@ fn params_from(args: &Args) -> Result<RegParams> {
     if args.flag("verbose") {
         params.verbose = true;
     }
+    params.multires = args.get_usize("multires", params.multires)?;
     Ok(params)
 }
 
@@ -111,6 +118,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "register" => cmd_register(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
+        "upload" => cmd_upload(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
         "cancel" => cmd_cancel(&args),
@@ -131,7 +139,7 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn print_help() {
     println!("claire — diffeomorphic image registration (JPDC 2020 reproduction)\n");
-    println!("usage: claire <register|batch|serve|submit|status|cancel|shutdown|");
+    println!("usage: claire <register|batch|serve|upload|submit|status|cancel|shutdown|");
     println!("               transport|info|complexity> [options]\n");
     println!("{}", usage(&common_specs()));
 }
@@ -149,12 +157,10 @@ fn cmd_register(args: &Args) -> Result<()> {
 
     match args.get_or("optimizer", "gn").as_str() {
         "gn" => {
-            let levels = args.get_usize("multires", 1)?;
-            let res = if levels > 1 {
-                solver.solve_multires(&prob, levels)?
-            } else {
-                solver.solve(&prob)?
-            };
+            // `params.multires` (from --multires / config) picks grid
+            // continuation; the report's `lvls` column shows the realized
+            // depth.
+            let res = solver.solve_auto(&prob)?;
             let report = RunReport::build(&solver, &prob, &res)?;
             let mut t = Table::new(&RunReport::headers());
             t.row(&report.row());
@@ -263,6 +269,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2)?,
         queue_cap: args.get_usize("queue-cap", 64)?,
         journal: (!journal.is_empty()).then(|| PathBuf::from(journal)),
+        store_bytes: args.get_usize("store-mb", 1024)? as u64 * 1024 * 1024,
     };
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let handle = Daemon::start(cfg.clone(), pjrt_factory(artifacts))?;
@@ -281,13 +288,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     handle.join()
 }
 
+/// Ship a fixed/moving pair (data/io volume files) into a running daemon's
+/// content-addressed store and print the ids a `submit` references.
+fn cmd_upload(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7464");
+    let (fixed, moving) = (args.get_or("fixed", ""), args.get_or("moving", ""));
+    if fixed.is_empty() || moving.is_empty() {
+        return Err(claire::Error::Config(
+            "upload requires --fixed <path> and --moving <path> (data/io volumes)".into(),
+        ));
+    }
+    let m0 = claire::data::io::read_field(Path::new(&moving))?;
+    let m1 = claire::data::io::read_field(Path::new(&fixed))?;
+    if m0.n != m1.n {
+        return Err(claire::Error::Config(format!(
+            "volume sizes differ: moving {}^3 vs fixed {}^3",
+            m0.n, m1.n
+        )));
+    }
+    let mut client = Client::connect(&addr)?;
+    let r0 = client.upload(m0.n, &m0.data)?;
+    let r1 = client.upload(m1.n, &m1.data)?;
+    let tag = |d: bool| if d { " (dedup hit)" } else { "" };
+    println!("uploaded moving  (m0): {} [{}^3]{}", r0.id, r0.n, tag(r0.dedup));
+    println!("uploaded fixed   (m1): {} [{}^3]{}", r1.id, r1.n, tag(r1.dedup));
+    println!(
+        "submit with: claire submit --addr {addr} --m0 {} --m1 {} --n {} [--multires 3]",
+        r0.id, r1.id, r0.n
+    );
+    Ok(())
+}
+
 /// Build a JobSpec from the common CLI flags.
 fn spec_from(args: &Args) -> Result<JobSpec> {
+    let (m0, m1) = (args.get_or("m0", ""), args.get_or("m1", ""));
+    let source = match (m0.is_empty(), m1.is_empty()) {
+        (true, true) => JobSource::Synthetic,
+        (false, false) => JobSource::Uploaded { m0, m1 },
+        _ => {
+            return Err(claire::Error::Config(
+                "submit needs both --m0 and --m1 content ids (or neither)".into(),
+            ))
+        }
+    };
     Ok(JobSpec {
         subject: args.get_or("subject", "na02"),
         n: args.get_usize("n", 16)?,
         variant: args.get_or("variant", "opt-fd8-cubic"),
+        source,
         precision: claire::Precision::parse(&args.get_or("precision", "full"))?,
+        multires: args.get("multires").map(|_| args.get_usize("multires", 1)).transpose()?,
         priority: Priority::parse(&args.get_or("priority", "batch"))?,
         max_iter: args.get("max-iter").map(|_| args.get_usize("max-iter", 50)).transpose()?,
         beta: args.get("beta").map(|_| args.get_f64("beta", 5e-4)).transpose()?,
@@ -300,8 +350,10 @@ fn cmd_submit(args: &Args) -> Result<()> {
     let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
     let base = spec_from(args)?;
     let count = args.get_usize("count", 1)?;
-    // Cycle through the study subjects only when the user did not pin one.
-    let cycle = count > 1 && args.get("subject").is_none();
+    // Cycle through the study subjects only when the user did not pin one
+    // (uploaded-source jobs always resubmit the same pair).
+    let cycle =
+        count > 1 && args.get("subject").is_none() && base.source == JobSource::Synthetic;
     let subjects = ["na02", "na03", "na10"];
     for i in 0..count {
         let spec = if cycle {
@@ -352,6 +404,14 @@ fn cmd_status(args: &Args) -> Result<()> {
                 s.cache_compiles,
                 s.cache_hits,
                 s.workers
+            );
+            println!(
+                "store: {} volumes ({:.1} MiB), {} uploads, {} dedup hits, {} evictions",
+                s.store.volumes,
+                s.store.bytes as f64 / (1024.0 * 1024.0),
+                s.store.uploads,
+                s.store.dedup_hits,
+                s.store.evictions
             );
         }
     }

@@ -11,4 +11,4 @@ pub mod solver;
 pub use baseline::{run_baseline, BaselineKind, BaselineResult};
 pub use problem::{RegParams, RegProblem};
 pub use report::RunReport;
-pub use solver::{GnSolver, IterRecord, RegResult};
+pub use solver::{plan_pyramid, GnSolver, IterRecord, RegResult};

@@ -24,6 +24,10 @@ pub struct RegParams {
     pub max_krylov: usize,
     /// Run the beta continuation schedule (paper default: yes).
     pub continuation: bool,
+    /// Grid-continuation levels (CLAIRE's coarse-to-fine scheme): 1 runs a
+    /// single grid; k > 1 restricts the images down a factor-2 pyramid and
+    /// warm-starts each finer level (`GnSolver::solve_auto` dispatches).
+    pub multires: usize,
     /// Project iterates onto divergence-free fields (Leray projection):
     /// the incompressible-flow extension of the CLAIRE formulation. The
     /// default H1-div model penalizes divergence via gamma instead.
@@ -43,6 +47,7 @@ impl Default for RegParams {
             max_iter: 50,
             max_krylov: 500,
             continuation: true,
+            multires: 1,
             incompressible: false,
             verbose: false,
         }
@@ -96,6 +101,7 @@ mod tests {
         assert_eq!(p.max_iter, 50);
         assert_eq!(p.max_krylov, 500);
         assert!(p.continuation);
+        assert_eq!(p.multires, 1, "single grid unless asked");
         assert!(!p.incompressible);
     }
 

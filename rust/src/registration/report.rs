@@ -24,6 +24,11 @@ pub struct RunReport {
     pub grad_rel: f64,
     pub iters: usize,
     pub matvecs: usize,
+    /// Grid levels the solve actually ran (1 = single grid). A multires
+    /// job that degraded because coarse artifacts were missing shows fewer
+    /// levels here than its spec requested — same visibility contract as
+    /// the mixed-precision fallback in `IterRecord`.
+    pub levels: usize,
     pub time_s: f64,
     pub converged: bool,
 }
@@ -57,6 +62,7 @@ impl RunReport {
             grad_rel: res.grad_rel,
             iters: res.iters,
             matvecs: res.matvecs,
+            levels: res.levels,
             time_s: res.time_s,
             converged: res.converged,
         })
@@ -78,6 +84,7 @@ impl RunReport {
             format!("{:.1e}", self.grad_rel),
             format!("{}", self.iters),
             format!("{}", self.matvecs),
+            format!("{}", self.levels),
             format!("{:.2}", self.time_s),
         ]
     }
@@ -85,7 +92,7 @@ impl RunReport {
     pub fn headers() -> Vec<&'static str> {
         vec![
             "variant", "prec", "data", "detF.min", "detF.mean", "detF.max", "DICE.pre",
-            "DICE.post", "mism", "|g|rel", "#iter", "#MV", "time[s]",
+            "DICE.post", "mism", "|g|rel", "#iter", "#MV", "lvls", "time[s]",
         ]
     }
 }

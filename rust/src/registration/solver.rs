@@ -62,6 +62,12 @@ pub struct RegResult {
     pub history: Vec<IterRecord>,
     pub time_s: f64,
     pub converged: bool,
+    /// Grid levels the solve *actually* ran: 1 for a single-grid solve; for
+    /// `solve_multires` the realized pyramid depth, which is smaller than
+    /// the requested depth when coarser artifacts are missing. Mirrors how
+    /// the mixed-precision fallback is recorded in `IterRecord` — a
+    /// degraded run must be visible in the result, never silent.
+    pub levels: usize,
 }
 
 /// Gauss-Newton-Krylov solver bound to an operator registry.
@@ -174,14 +180,20 @@ impl<'a> GnSolver<'a> {
         let mut trial = vec![0f32; 3 * n * n * n];
         let mut final_state = (f64::NAN, f64::NAN, f64::NAN); // (J, mism, grel)
         let mut converged = false;
-        // Reference gradient norm ||g0|| at v = 0 with the *target* beta:
-        // the paper's convergence metric (||g*|| / ||g0||, g0 at the
-        // initial guess v = 0). One extra setup call, reused as the first
-        // iteration's gradient when there is no continuation.
-        let g0_target: f64 = {
+        // Reference gradient norm ||g0|| at the initial iterate with the
+        // *target* beta: the paper's convergence metric (||g*|| / ||g0||).
+        // When the first level already runs at the target beta (no
+        // continuation, or a warm-started multires level), all six setup
+        // outputs are reused as the first iteration's gradient + caches —
+        // saving one full gradient+transport evaluation per solve.
+        let (g0_target, mut setup0) = {
             let bg = [p.beta as f32, p.gamma as f32];
             let outs = setup.call(&[&v.data, m0, m1, &bg])?;
-            ops::norm2(&outs[0]).max(1e-300)
+            let g0 = ops::norm2(&outs[0]).max(1e-300);
+            // gamma never varies across levels, so beta equality is the
+            // whole reuse condition.
+            let reusable = levels.first().is_some_and(|l| l.beta == p.beta);
+            (g0, reusable.then_some(outs))
         };
 
         for (li, level) in levels.iter().enumerate() {
@@ -191,7 +203,14 @@ impl<'a> GnSolver<'a> {
 
             for _it in 0..level.max_iter {
                 // -- Newton setup: gradient + caches -----------------------
-                let outs = setup.call(&[&v.data, m0, m1, &bg])?;
+                // The reference-gradient call above already evaluated this
+                // exact (v, beta) point when level 0 runs at the target
+                // beta; reuse it instead of paying the setup twice.
+                let cached = if li == 0 && _it == 0 { setup0.take() } else { None };
+                let outs = match cached {
+                    Some(outs) => outs,
+                    None => setup.call(&[&v.data, m0, m1, &bg])?,
+                };
                 let [g, m_traj, yb, yf, divv, scalars] = match <[Vec<f32>; 6]>::try_from(outs) {
                     Ok(a) => a,
                     Err(_) => return Err(Error::Solver("newton_setup arity".into())),
@@ -338,7 +357,19 @@ impl<'a> GnSolver<'a> {
             history,
             time_s: t0.elapsed().as_secs_f64(),
             converged,
+            levels: 1,
         })
+    }
+
+    /// Dispatch on the configured `multires` level count: the serve
+    /// executor, the batch service and the CLI all funnel through here so
+    /// a job's `multires` field selects grid continuation uniformly.
+    pub fn solve_auto(&self, prob: &RegProblem) -> Result<RegResult> {
+        if self.params.multires > 1 {
+            self.solve_multires(prob, self.params.multires)
+        } else {
+            self.solve(prob)
+        }
     }
 
     /// Compute the deformation map y (grid units) for a solved velocity.
@@ -369,37 +400,30 @@ impl<'a> GnSolver<'a> {
     pub fn solve_multires(&self, prob: &RegProblem, levels: usize) -> Result<RegResult> {
         let n_fine = prob.n();
         assert!(levels >= 1);
-        // Compile every level's operators up front so the reported solve
-        // time is pure solver time (same convention as `solve`).
-        // A coarser level is only usable if solver artifacts exist for it.
+        // A coarser level is only usable if solver artifacts exist for it;
+        // the realized pyramid may therefore be shallower than requested —
+        // the degradation is reported in `RegResult::levels`.
         let can_descend = |n: usize| -> bool {
             n % 2 == 0
                 && self.reg.manifest.find("newton_setup", &self.params.variant, n / 2).is_ok()
                 && self.reg.manifest.find("restrict2x", &self.params.variant, n).is_ok()
                 && self.reg.manifest.find("upsample2x", &self.params.variant, n / 2).is_ok()
         };
-        {
-            let mut n = n_fine;
-            for li in 0..levels {
-                self.precompile(n)?;
-                if li + 1 < levels && can_descend(n) {
-                    self.reg.get("restrict2x", &self.params.variant, n)?;
-                    self.reg.get("upsample2x", &self.params.variant, n / 2)?;
-                    n /= 2;
-                } else {
-                    break;
-                }
+        let sizes = plan_pyramid(n_fine, levels, can_descend);
+        // Compile every level's operators up front so the reported solve
+        // time is pure solver time (same convention as `solve`).
+        for (li, &n) in sizes.iter().enumerate() {
+            self.precompile(n)?;
+            if li + 1 < sizes.len() {
+                self.reg.get("restrict2x", &self.params.variant, n)?;
+                self.reg.get("upsample2x", &self.params.variant, n / 2)?;
             }
         }
         let t0 = Instant::now();
         // Build the image pyramid via the spectral restriction operator.
         let mut pyramid: Vec<RegProblem> = vec![prob.clone()];
-        for _ in 1..levels {
+        for &n in &sizes[..sizes.len() - 1] {
             let cur = pyramid.last().unwrap();
-            let n = cur.n();
-            if !can_descend(n) {
-                break;
-            }
             let restrict = self.reg.get("restrict2x", &self.params.variant, n)?;
             let m0 = restrict.call(&[&cur.m0.data])?.remove(0);
             let m1 = restrict.call(&[&cur.m1.data])?.remove(0);
@@ -423,6 +447,7 @@ impl<'a> GnSolver<'a> {
             history: Vec::new(),
             time_s: 0.0,
             converged: false,
+            levels: pyramid.len(),
         };
         for (li, p) in pyramid.iter().enumerate() {
             let is_finest = li == pyramid.len() - 1;
@@ -460,5 +485,58 @@ impl<'a> GnSolver<'a> {
         }
         total.time_s = t0.elapsed().as_secs_f64();
         Ok(total)
+    }
+}
+
+/// Grid sizes (finest first) a `levels`-deep factor-2 pyramid will
+/// actually use: descend while `can_descend(n)` holds (artifacts exist
+/// for n/2, restriction/prolongation available). Pure planning logic —
+/// `solve_multires` uses it for both precompilation and pyramid
+/// construction, and it is unit-testable without compiled artifacts.
+pub fn plan_pyramid(
+    n_fine: usize,
+    levels: usize,
+    can_descend: impl Fn(usize) -> bool,
+) -> Vec<usize> {
+    let mut sizes = vec![n_fine];
+    while sizes.len() < levels.max(1) {
+        let n = *sizes.last().expect("sizes starts non-empty");
+        if !can_descend(n) {
+            break;
+        }
+        sizes.push(n / 2);
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_descends_to_requested_depth() {
+        assert_eq!(plan_pyramid(64, 3, |_| true), vec![64, 32, 16]);
+        assert_eq!(plan_pyramid(64, 1, |_| true), vec![64]);
+        // levels = 0 is treated as 1 (the finest grid always runs).
+        assert_eq!(plan_pyramid(64, 0, |_| true), vec![64]);
+    }
+
+    #[test]
+    fn plan_stops_where_artifacts_stop() {
+        // Artifact set covers 16/32/64 only: a 5-level request from 64
+        // degrades to 3 realized levels — visible, not silent.
+        let have = |n: usize| n % 2 == 0 && n / 2 >= 16;
+        assert_eq!(plan_pyramid(64, 5, have), vec![64, 32, 16]);
+        // Odd grids cannot halve at all.
+        assert_eq!(plan_pyramid(27, 3, |n| n % 2 == 0), vec![27]);
+    }
+
+    #[test]
+    fn plan_matches_solve_multires_reporting_contract() {
+        // The realized depth is what RegResult::levels reports; the
+        // requested depth only survives in the job spec/name.
+        let planned = plan_pyramid(32, 4, |n| n == 32);
+        assert_eq!(planned.len(), 2, "one descent allowed from 32");
+        assert_eq!(planned, vec![32, 16]);
     }
 }

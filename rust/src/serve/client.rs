@@ -11,13 +11,15 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::serve::proto::{read_line_bounded, JobSpec, Request, Response, MAX_LINE_BYTES};
 use crate::serve::scheduler::{JobId, JobView, ServeStats};
+use crate::serve::store::UploadReceipt;
 use crate::util::bench::Table;
 
 /// Render job views as an aligned table (shared by the CLI `status`
 /// subcommand and the daemon-mode example).
 pub fn job_table(jobs: &[JobView]) -> Table {
-    let mut t =
-        Table::new(&["id", "job", "prio", "state", "order", "lat[s]", "solve[s]", "mism", "err"]);
+    let mut t = Table::new(&[
+        "id", "job", "prio", "state", "order", "lat[s]", "solve[s]", "mism", "lvls", "err",
+    ]);
     let fo = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
     for v in jobs {
         t.row(&[
@@ -29,6 +31,7 @@ pub fn job_table(jobs: &[JobView]) -> Table {
             fo(v.latency_s),
             fo(v.wall_s),
             v.mismatch_rel.map(|m| format!("{m:.1e}")).unwrap_or_else(|| "-".into()),
+            v.levels.map(|l| l.to_string()).unwrap_or_else(|| "-".into()),
             v.error.clone().unwrap_or_else(|| "-".into()),
         ]);
     }
@@ -65,6 +68,22 @@ impl Client {
 
     pub fn ping(&mut self) -> Result<()> {
         self.call(&Request::Ping).map(|_| ())
+    }
+
+    /// Ship one volume (n^3 f32 samples) into the daemon's
+    /// content-addressed store; returns the receipt whose `id` a
+    /// subsequent `submit` references via `JobSource::Uploaded`.
+    /// Re-uploading identical content is cheap (`dedup` flags it).
+    pub fn upload(&mut self, n: usize, data: &[f32]) -> Result<UploadReceipt> {
+        match self.call(&Request::Upload { n, data: data.to_vec() })? {
+            Response::Uploaded { id, n, dedup } => Ok(UploadReceipt {
+                id,
+                n,
+                bytes: (n * n * n * 4) as u64,
+                dedup,
+            }),
+            other => Err(Error::Serve(format!("unexpected upload response: {other:?}"))),
+        }
     }
 
     /// Submit a job; returns the daemon-assigned job id.

@@ -23,10 +23,14 @@ use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
 use crate::serve::journal::Journal;
-use crate::serve::proto::{read_line_bounded, Request, Response, MAX_LINE_BYTES};
+use crate::serve::proto::{
+    read_request_line_bounded, JobSource, Request, Response, MAX_LINE_BYTES,
+    MAX_UPLOAD_LINE_BYTES,
+};
 use crate::serve::scheduler::{
     worker_loop, Executor, FailingExecutor, JobPayload, PjrtExecutor, Scheduler,
 };
+use crate::serve::store::VolumeStore;
 
 /// Daemon configuration (CLI flags map 1:1 onto these).
 #[derive(Clone, Debug)]
@@ -38,6 +42,9 @@ pub struct DaemonConfig {
     pub queue_cap: usize,
     /// Job journal path; `None` disables persistence.
     pub journal: Option<PathBuf>,
+    /// Byte budget of the content-addressed volume store (`upload` verb);
+    /// least-recently-used volumes are evicted beyond it.
+    pub store_bytes: u64,
 }
 
 impl Default for DaemonConfig {
@@ -47,6 +54,7 @@ impl Default for DaemonConfig {
             workers: 2,
             queue_cap: 64,
             journal: None,
+            store_bytes: 1 << 30, // 1 GiB: sixteen 256^3 volumes
         }
     }
 }
@@ -68,6 +76,7 @@ pub fn pjrt_factory(artifacts_dir: PathBuf) -> ExecutorFactory {
 pub struct DaemonHandle {
     addr: SocketAddr,
     scheduler: Scheduler,
+    store: Arc<VolumeStore>,
     accept_thread: Option<JoinHandle<()>>,
     worker_threads: Vec<JoinHandle<()>>,
 }
@@ -80,6 +89,11 @@ impl DaemonHandle {
     /// Direct scheduler access for in-process embedding (tests, benches).
     pub fn scheduler(&self) -> &Scheduler {
         &self.scheduler
+    }
+
+    /// Direct volume-store access for in-process embedding.
+    pub fn store(&self) -> &VolumeStore {
+        &self.store
     }
 
     /// Trigger shutdown from the host process (equivalent to the wire verb).
@@ -121,10 +135,14 @@ impl Daemon {
     /// Bind, replay the journal, spawn workers and the accept loop.
     pub fn start(cfg: DaemonConfig, factory: ExecutorFactory) -> Result<DaemonHandle> {
         let scheduler = Scheduler::new(cfg.queue_cap, cfg.workers);
+        let store = Arc::new(VolumeStore::new(cfg.store_bytes));
 
         if let Some(path) = &cfg.journal {
             let prior = Journal::replay(path)?;
             scheduler.seed_prior_completed(Journal::completed_count(&prior));
+            // Seed the id counter past prior incarnations so this run's
+            // journal lines never collide with replayed ones on `id`.
+            scheduler.seed_next_id(Journal::max_id(&prior) + 1);
             let journal = Arc::new(Journal::open(path)?);
             scheduler.set_event_sink(Box::new(move |ev| {
                 // Journal IO failure must not take down the scheduler; the
@@ -151,6 +169,7 @@ impl Daemon {
         }
 
         let sched = scheduler.clone();
+        let accept_store = store.clone();
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if sched.is_shutting_down() {
@@ -158,13 +177,15 @@ impl Daemon {
                 }
                 let Ok(stream) = conn else { continue };
                 let sched = sched.clone();
-                std::thread::spawn(move || handle_connection(stream, sched, addr));
+                let store = accept_store.clone();
+                std::thread::spawn(move || handle_connection(stream, sched, store, addr));
             }
         });
 
         Ok(DaemonHandle {
             addr,
             scheduler,
+            store,
             accept_thread: Some(accept_thread),
             worker_threads,
         })
@@ -172,13 +193,25 @@ impl Daemon {
 }
 
 /// Serve one client connection: one NDJSON request per line, one NDJSON
-/// response per line, until EOF or a shutdown request.
-fn handle_connection(stream: TcpStream, sched: Scheduler, addr: SocketAddr) {
+/// response per line, until EOF or a shutdown request. Requests are read
+/// under a two-tier cap: `MAX_LINE_BYTES` normally, escalating to the
+/// upload-sized bound only for lines that look like `upload` requests —
+/// so a garbage flood cannot pin the large buffer per connection.
+fn handle_connection(
+    stream: TcpStream,
+    sched: Scheduler,
+    store: Arc<VolumeStore>,
+    addr: SocketAddr,
+) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
-        let line = match read_line_bounded(&mut reader, MAX_LINE_BYTES) {
+        let line = match read_request_line_bounded(
+            &mut reader,
+            MAX_LINE_BYTES,
+            MAX_UPLOAD_LINE_BYTES,
+        ) {
             Ok(Some(l)) => l,
             Ok(None) => return,
             Err(e) => {
@@ -192,7 +225,7 @@ fn handle_connection(stream: TcpStream, sched: Scheduler, addr: SocketAddr) {
         if line.trim().is_empty() {
             continue;
         }
-        let (response, shutdown) = dispatch(&line, &sched);
+        let (response, shutdown) = dispatch(&line, &sched, &store);
         if writer.write_all(response.to_line().as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
             || writer.flush().is_err()
@@ -207,18 +240,54 @@ fn handle_connection(stream: TcpStream, sched: Scheduler, addr: SocketAddr) {
     }
 }
 
-/// Decode one request line and run it against the scheduler. Returns the
-/// response plus `Some(drain)` when the daemon should shut down.
-fn dispatch(line: &str, sched: &Scheduler) -> (Response, Option<bool>) {
+/// Resolve a submit spec into a scheduler payload. Synthetic jobs pass
+/// through; uploaded-source jobs resolve their content ids against the
+/// store *now* (admission time), so later eviction cannot invalidate an
+/// admitted job, and shape mismatches are rejected before queueing.
+fn resolve_submit(
+    spec: crate::serve::proto::JobSpec,
+    store: &VolumeStore,
+) -> Result<JobPayload> {
+    match spec.source.clone() {
+        JobSource::Synthetic => Ok(JobPayload::Spec(spec)),
+        JobSource::Uploaded { m0, m1 } => {
+            let fetch = |id: &str| {
+                store.get(id).ok_or_else(|| {
+                    Error::Serve(format!(
+                        "unknown volume id '{id}' (never uploaded, or evicted — re-upload)"
+                    ))
+                })
+            };
+            let f0 = fetch(&m0)?;
+            let f1 = fetch(&m1)?;
+            if f0.n != spec.n || f1.n != spec.n {
+                return Err(Error::Serve(format!(
+                    "job n = {} does not match uploaded volumes (m0 {}^3, m1 {}^3)",
+                    spec.n, f0.n, f1.n
+                )));
+            }
+            Ok(JobPayload::Volumes { spec, m0: f0, m1: f1 })
+        }
+    }
+}
+
+/// Decode one request line and run it against the scheduler + store.
+/// Returns the response plus `Some(drain)` when the daemon should shut
+/// down.
+fn dispatch(line: &str, sched: &Scheduler, store: &VolumeStore) -> (Response, Option<bool>) {
     let req = match Request::parse(line) {
         Ok(r) => r,
         Err(e) => return (Response::Error(e.to_string()), None),
     };
     match req {
         Request::Ping => (Response::Ok, None),
+        Request::Upload { n, data } => match store.put(n, data) {
+            Ok(r) => (Response::Uploaded { id: r.id, n: r.n, dedup: r.dedup }, None),
+            Err(e) => (Response::Error(e.to_string()), None),
+        },
         Request::Submit(spec) => {
             let priority = spec.priority;
-            match sched.submit(priority, JobPayload::Spec(spec)) {
+            match resolve_submit(spec, store).and_then(|p| sched.submit(priority, p)) {
                 Ok(id) => (Response::Submitted { id }, None),
                 Err(e) => (Response::Error(e.to_string()), None),
             }
@@ -232,7 +301,13 @@ fn dispatch(line: &str, sched: &Scheduler) -> (Response, Option<bool>) {
             Ok(()) => (Response::Ok, None),
             Err(e) => (Response::Error(e.to_string()), None),
         },
-        Request::Stats => (Response::Stats(sched.stats()), None),
+        Request::Stats => {
+            // The scheduler does not own the store; overlay its counters
+            // so the wire stats show the whole data plane.
+            let mut s = sched.stats();
+            s.store = store.stats();
+            (Response::Stats(s), None)
+        }
         Request::Shutdown { drain } => (Response::Ok, Some(drain)),
     }
 }
@@ -254,7 +329,9 @@ mod tests {
     impl Executor for Stub {
         fn execute(&mut self, payload: &JobPayload) -> Result<crate::registration::RunReport> {
             let (variant, n, name) = match payload {
-                JobPayload::Spec(s) => (s.variant.clone(), s.n, s.name()),
+                JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
+                    (s.variant.clone(), s.n, s.name())
+                }
                 JobPayload::Problem { problem, params } => {
                     (params.variant.clone(), problem.n(), problem.name.clone())
                 }
@@ -266,7 +343,13 @@ mod tests {
             } else {
                 self.hits += 5;
             }
-            Ok(stub_report(&name))
+            let mut report = stub_report(&name);
+            // Reflect the multires request the way the real executor's
+            // RunReport would (realized == requested for the stub).
+            if let JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } = payload {
+                report.levels = s.multires.unwrap_or(1);
+            }
+            Ok(report)
         }
 
         fn cache_stats(&self) -> (u64, u64) {
@@ -282,12 +365,19 @@ mod tests {
     }
 
     fn test_config() -> DaemonConfig {
-        DaemonConfig { addr: "127.0.0.1:0".into(), workers: 1, queue_cap: 16, journal: None }
+        DaemonConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            queue_cap: 16,
+            ..Default::default()
+        }
     }
 
     #[test]
     fn serve_round_trip_smoke() {
-        // The CI smoke test: ping, submit, poll to done, stats, shutdown.
+        // The CI smoke test: ping, submit, poll to done, then the data
+        // plane (upload pair -> uploaded multires submit -> done), stats,
+        // shutdown.
         let handle = Daemon::start(test_config(), stub_factory()).unwrap();
         let mut client = Client::connect(&handle.addr().to_string()).unwrap();
         client.ping().unwrap();
@@ -297,9 +387,35 @@ mod tests {
         let view = client.wait_terminal(id, 5.0).unwrap();
         assert_eq!(view.state, JobState::Done);
         assert_eq!(view.priority, Priority::Urgent);
+
+        // Data plane: ship a 4^3 pair, register it coarse-to-fine.
+        let m0: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let m1: Vec<f32> = (0..64).map(|i| 64.0 - i as f32).collect();
+        let r0 = client.upload(4, &m0).unwrap();
+        let r1 = client.upload(4, &m1).unwrap();
+        assert_ne!(r0.id, r1.id);
+        assert!(!r0.dedup && !r1.dedup);
+        let up_id = client
+            .submit(&JobSpec {
+                n: 4,
+                source: crate::serve::proto::JobSource::Uploaded {
+                    m0: r0.id.clone(),
+                    m1: r1.id.clone(),
+                },
+                multires: Some(2),
+                ..Default::default()
+            })
+            .unwrap();
+        let up_view = client.wait_terminal(up_id, 5.0).unwrap();
+        assert_eq!(up_view.state, JobState::Done);
+        assert!(up_view.name.starts_with("up:"), "{}", up_view.name);
+        assert_eq!(up_view.levels, Some(2), "realized multires depth visible");
+
         let stats = client.stats().unwrap();
-        assert_eq!(stats.completed, 1);
-        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.store.volumes, 2);
+        assert_eq!(stats.store.uploads, 2);
         client.shutdown(true).unwrap();
         handle.join().unwrap();
     }
@@ -319,11 +435,15 @@ mod tests {
 
     #[test]
     fn oversized_request_line_is_rejected_not_buffered() {
+        use crate::serve::proto::read_line_bounded;
+
         let handle = Daemon::start(test_config(), stub_factory()).unwrap();
         let mut s = TcpStream::connect(handle.addr()).unwrap();
-        // Stream past the protocol cap with no newline; the daemon must
-        // answer with an error and drop us rather than buffer forever.
-        // Writes may hit a broken pipe once the daemon gives up — fine.
+        // Stream past the small request cap with no newline and nothing
+        // upload-shaped in the prefix: the daemon must cut us off at the
+        // *small* bound (a garbage flood never earns the 96 MiB upload
+        // buffer). Writes may hit a broken pipe once the daemon gives up —
+        // fine.
         let chunk = vec![b'a'; 64 * 1024];
         for _ in 0..((MAX_LINE_BYTES / chunk.len()) + 2) {
             if s.write_all(&chunk).is_err() {

@@ -124,6 +124,13 @@ impl Journal {
     pub fn completed_count(entries: &[JournalEntry]) -> u64 {
         entries.iter().filter(|e| e.event == "done").count() as u64
     }
+
+    /// Highest job id in a replayed history (0 when empty). A restarted
+    /// daemon seeds its id counter past this so audit lines from different
+    /// incarnations never collide on `id`.
+    pub fn max_id(entries: &[JournalEntry]) -> u64 {
+        entries.iter().map(|e| e.id).max().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +182,12 @@ mod tests {
         assert_eq!(entries[2].event, "cancelled");
         assert_eq!(entries[3].event, "failed");
         assert_eq!(Journal::completed_count(&entries), 1);
+        assert_eq!(Journal::max_id(&entries), 3, "id seeding looks past all events");
+    }
+
+    #[test]
+    fn max_id_of_empty_history_is_zero() {
+        assert_eq!(Journal::max_id(&[]), 0);
     }
 
     #[test]

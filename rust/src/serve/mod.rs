@@ -11,6 +11,7 @@
 //!   engine under `coordinator::BatchService`).
 //! * [`daemon`] — TCP accept loop + worker pool + journal replay.
 //! * [`proto`] — newline-delimited JSON request/response encoding.
+//! * [`store`] — content-addressed volume store (the `upload` data plane).
 //! * [`client`] — typed synchronous client for the protocol.
 //! * [`journal`] — append-only NDJSON job history for restart reporting.
 //!
@@ -21,12 +22,14 @@ pub mod daemon;
 pub mod journal;
 pub mod proto;
 pub mod scheduler;
+pub mod store;
 
 pub use client::Client;
 pub use daemon::{pjrt_factory, Daemon, DaemonConfig, DaemonHandle, ExecutorFactory};
 pub use journal::{Journal, JournalEntry};
-pub use proto::{JobSpec, Priority, Request, Response};
+pub use proto::{JobSource, JobSpec, Priority, Request, Response};
 pub use scheduler::{
     worker_loop, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView, PjrtExecutor,
     Scheduler, ServeStats,
 };
+pub use store::{StoreStats, UploadReceipt, VolumeStore};

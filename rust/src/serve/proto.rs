@@ -1,32 +1,67 @@
 //! Wire protocol for the registration daemon: newline-delimited JSON.
 //!
 //! Every request and every response is one JSON object on one line. The
-//! protocol is deliberately small — five verbs plus ping — and builds on
+//! protocol is deliberately small — six verbs plus ping — and builds on
 //! `util/json.rs` (the offline image has no serde). Responses always carry
 //! an `"ok"` boolean; errors carry `"error"`.
 //!
 //! Requests:
 //! ```text
 //! {"cmd":"ping"}
+//! {"cmd":"upload","n":16,"data":"<base64 LE f32 samples>"}
 //! {"cmd":"submit","job":{"subject":"na02","n":16,"variant":"opt-fd8-cubic",
 //!                        "priority":"emergency","max_iter":50}}
+//! {"cmd":"submit","job":{"n":32,"source":{"m0":"<id>","m1":"<id>"},
+//!                        "multires":3}}
 //! {"cmd":"status"}              all jobs
 //! {"cmd":"status","id":3}       one job
 //! {"cmd":"cancel","id":3}
 //! {"cmd":"stats"}
 //! {"cmd":"shutdown","drain":true}
 //! ```
+//!
+//! `upload` is the data plane: the volume payload is the `data/io.rs`
+//! little-endian f32 byte format, base64-wrapped to stay within the
+//! one-line NDJSON discipline, landing in the daemon's content-addressed
+//! store (`serve/store.rs`). `submit` then references content ids via
+//! `source`, and `multires` selects coarse-to-fine grid continuation.
+//!
+//! Protocol contract for encoders: an `upload` line must mention its
+//! `"cmd":"upload"` key within the first 4096 bytes (natural for every
+//! key order except payload-first; this crate's encoder emits `cmd`
+//! before `data`). The daemon reads request lines under a small cap and
+//! only escalates to the volume-sized bound when that prefix identifies
+//! an upload — a payload-first encoding is cut off at the small cap.
 
+use crate::data::io::{f32s_from_le_bytes, f32s_to_le_bytes};
 use crate::error::{Error, Result};
 use crate::precision::Precision;
 use crate::registration::RegParams;
 use crate::serve::scheduler::{JobId, JobState, JobView, ServeStats};
+use crate::serve::store::StoreStats;
+use crate::util::base64;
 use crate::util::json::Json;
 
-/// Hard cap on one protocol line, both directions. Requests are tiny;
-/// responses are bounded by the scheduler's record retention. The cap
-/// keeps one misbehaving peer from growing an unbounded buffer.
+/// Hard cap on one non-upload protocol line, both directions. Requests
+/// are tiny; responses are bounded by the scheduler's record retention.
+/// The cap keeps one misbehaving peer from growing an unbounded buffer.
 pub const MAX_LINE_BYTES: usize = 4 * 1024 * 1024;
+
+/// Hard cap on one *upload* request line on the daemon side: sized so a
+/// 256^3 volume (the paper's largest run; 64 MiB raw, ~86 MiB base64)
+/// fits on one line, still bounding what a misbehaving peer can make the
+/// daemon buffer. Only lines that look like an `upload` request escalate
+/// to this bound (see [`read_request_line_bounded`]); everything else
+/// stays under `MAX_LINE_BYTES`, so a non-upload flood cannot pin 96 MiB
+/// per connection. Larger grids would need a chunked upload extension.
+pub const MAX_UPLOAD_LINE_BYTES: usize = 96 * 1024 * 1024;
+
+/// Largest grid size a one-line `upload` can carry: a 256^3 payload fits
+/// `MAX_UPLOAD_LINE_BYTES`; anything larger would die at the line cap, so
+/// it is rejected up front with a useful error instead of a connection
+/// drop. (`MAX_GRID_N` still bounds *submit* specs — in-process stores
+/// fed by embedders are not line-limited.)
+pub const MAX_UPLOAD_GRID_N: usize = 256;
 
 /// Hard cap on the wire-submittable grid size. The paper's largest runs
 /// are 256^3; 512^3 leaves headroom. Without this bound, a typo'd
@@ -35,6 +70,10 @@ pub const MAX_LINE_BYTES: usize = 4 * 1024 * 1024;
 /// daemon, not just failing the job.
 pub const MAX_GRID_N: usize = 512;
 
+/// Hard cap on requestable grid-continuation levels: 512 -> 16 is six
+/// factor-2 descents, so deeper requests are always typos.
+pub const MAX_MULTIRES_LEVELS: usize = 6;
+
 /// Read one `\n`-terminated line of at most `cap` bytes. `Ok(None)` on
 /// clean EOF; a line exceeding the cap is an `InvalidData` IO error (the
 /// caller should answer with a protocol error and drop the connection).
@@ -42,6 +81,35 @@ pub fn read_line_bounded<R: std::io::BufRead>(
     r: &mut R,
     cap: usize,
 ) -> std::io::Result<Option<String>> {
+    // Equal tiers = a single flat cap (escalation can never trigger).
+    read_request_line_bounded(r, cap, cap)
+}
+
+/// Does a buffered request prefix look like an `upload` line? Checked
+/// only when a line outgrows the small cap, to decide whether the large
+/// (volume-sized) bound applies. Deliberately lenient — any mention of
+/// `upload` in the first 4096 bytes qualifies; a non-upload line that
+/// sneaks past still fails `Request::parse`, it just got to waste a
+/// bigger buffer first. The flip side is a protocol contract (see the
+/// module docs): an upload line must mention its verb near the start —
+/// an encoder that buries `"cmd":"upload"` megabytes deep behind the
+/// payload is cut off at the small cap.
+fn looks_like_upload(buf: &[u8]) -> bool {
+    let head = &buf[..buf.len().min(4096)];
+    head.windows(6).any(|w| w == b"upload")
+}
+
+/// Read one request line under a two-tier cap: bounded by `small_cap`
+/// unless the buffered prefix looks like an `upload` request (the only
+/// verb with a large payload), which escalates the bound to `large_cap`.
+/// A non-upload flood is cut off at the small bound; one-line volume
+/// uploads still fit.
+pub fn read_request_line_bounded<R: std::io::BufRead>(
+    r: &mut R,
+    small_cap: usize,
+    large_cap: usize,
+) -> std::io::Result<Option<String>> {
+    let mut cap = small_cap.min(large_cap);
     let mut buf: Vec<u8> = Vec::new();
     loop {
         let (done, used) = {
@@ -57,7 +125,12 @@ pub fn read_line_bounded<R: std::io::BufRead>(
             }
         };
         r.consume(used);
+        if buf.len() > cap && cap < large_cap && looks_like_upload(&buf) {
+            cap = large_cap;
+        }
         if buf.len() > cap {
+            // Not re-checked after a *successful* escalation unless one
+            // fill chunk jumped straight past large_cap too.
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 format!("protocol line exceeds {cap} bytes"),
@@ -105,19 +178,35 @@ impl Priority {
     }
 }
 
+/// Where a job's image pair comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobSource {
+    /// The daemon synthesizes a NIREP-analog pair from `subject` — the
+    /// status quo default, exactly like the CLI `register`/`batch` paths.
+    Synthetic,
+    /// Template (`m0`) and reference (`m1`) volumes previously shipped via
+    /// the `upload` verb, referenced by content id. Resolved against the
+    /// daemon's store at admission time.
+    Uploaded { m0: String, m1: String },
+}
+
 /// A wire-submittable registration job: a synthetic NIREP-analog subject
-/// at a given grid size and kernel variant, with the solver knobs that
-/// matter for scheduling experiments. (Volume upload is out of scope for
-/// the NDJSON protocol; the daemon synthesizes the pair, exactly like the
-/// CLI `register`/`batch` paths do.)
+/// *or* an uploaded volume pair, at a given grid size and kernel variant,
+/// with the solver knobs that matter for scheduling experiments.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobSpec {
     pub subject: String,
     pub n: usize,
     pub variant: String,
+    /// Image source. Wire field `"source"`: absent = synthetic (pre-data-
+    /// plane clients keep working), `{"m0":"<id>","m1":"<id>"}` = uploaded.
+    pub source: JobSource,
     /// Solver precision policy; `mixed` runs the PCG Hessian matvecs
     /// through the reduced-precision artifacts. Wire field `"precision"`.
     pub precision: Precision,
+    /// Grid-continuation levels. Wire field `"multires"`; absent = single
+    /// grid. `Some(k >= 2)` runs `solve_multires` coarse-to-fine.
+    pub multires: Option<usize>,
     pub priority: Priority,
     pub max_iter: Option<usize>,
     pub beta: Option<f64>,
@@ -131,7 +220,9 @@ impl Default for JobSpec {
             subject: "na02".into(),
             n: 16,
             variant: "opt-fd8-cubic".into(),
+            source: JobSource::Synthetic,
             precision: Precision::Full,
+            multires: None,
             priority: Priority::Batch,
             max_iter: None,
             beta: None,
@@ -143,15 +234,26 @@ impl Default for JobSpec {
 
 impl JobSpec {
     /// Display name used in job records and the journal. Mixed-precision
-    /// jobs carry a `+mixed` suffix so status tables and the journal show
-    /// the policy at a glance.
+    /// jobs carry a `+mixed` suffix and multires jobs a `+mr<levels>`
+    /// suffix so status tables and the journal show the policy at a
+    /// glance; uploaded-source jobs show truncated content ids instead of
+    /// a subject.
     pub fn name(&self) -> String {
-        match self.precision {
-            Precision::Full => format!("{}@{}^3/{}", self.subject, self.n, self.variant),
-            Precision::Mixed => {
-                format!("{}@{}^3/{}+mixed", self.subject, self.n, self.variant)
+        let subject = match &self.source {
+            JobSource::Synthetic => self.subject.clone(),
+            JobSource::Uploaded { m0, m1 } => {
+                let short = |s: &str| s.chars().take(8).collect::<String>();
+                format!("up:{}+{}", short(m0), short(m1))
             }
+        };
+        let mut name = format!("{}@{}^3/{}", subject, self.n, self.variant);
+        if self.precision == Precision::Mixed {
+            name.push_str("+mixed");
         }
+        if let Some(levels) = self.multires.filter(|&l| l > 1) {
+            name.push_str(&format!("+mr{levels}"));
+        }
+        name
     }
 
     /// Solver parameters with the spec's overrides applied.
@@ -173,6 +275,9 @@ impl JobSpec {
         if let Some(c) = self.continuation {
             p.continuation = c;
         }
+        if let Some(l) = self.multires {
+            p.multires = l;
+        }
         p
     }
 
@@ -184,6 +289,15 @@ impl JobSpec {
             ("precision", Json::str(self.precision.as_str())),
             ("priority", Json::str(self.priority.as_str())),
         ];
+        if let JobSource::Uploaded { m0, m1 } = &self.source {
+            pairs.push((
+                "source",
+                Json::object([("m0", Json::str(m0)), ("m1", Json::str(m1))]),
+            ));
+        }
+        if let Some(l) = self.multires {
+            pairs.push(("multires", Json::num(l as f64)));
+        }
         if let Some(m) = self.max_iter {
             pairs.push(("max_iter", Json::num(m as f64)));
         }
@@ -220,12 +334,47 @@ impl JobSpec {
             }
         }
         let d = JobSpec::default();
-        let n = match field(j, "n", Json::as_index, "a non-negative integer")? {
+        let n_explicit = field(j, "n", Json::as_index, "a non-negative integer")?;
+        let n = match n_explicit {
             None => d.n,
             Some(x) if (1..=MAX_GRID_N as u64).contains(&x) => x as usize,
             Some(x) => {
                 return Err(Error::Serve(format!(
                     "job field 'n' = {x} out of range (1..={MAX_GRID_N})"
+                )))
+            }
+        };
+        // Absent source = synthetic (pre-data-plane clients keep working).
+        // An uploaded source must name both volumes and pin `n` explicitly
+        // so the daemon can validate content shapes at admission time.
+        let source = match j.get("source") {
+            None => JobSource::Synthetic,
+            Some(s) => {
+                let id_of = |k: &str| -> Result<String> {
+                    s.get(k)
+                        .and_then(Json::as_str)
+                        .filter(|v| !v.is_empty())
+                        .map(str::to_string)
+                        .ok_or_else(|| {
+                            Error::Serve(format!(
+                                "job field 'source' must carry a non-empty string '{k}'"
+                            ))
+                        })
+                };
+                if n_explicit.is_none() {
+                    return Err(Error::Serve(
+                        "jobs with an uploaded source must specify 'n' explicitly".into(),
+                    ));
+                }
+                JobSource::Uploaded { m0: id_of("m0")?, m1: id_of("m1")? }
+            }
+        };
+        let multires = match field(j, "multires", Json::as_index, "a non-negative integer")? {
+            None => None,
+            Some(x) if (1..=MAX_MULTIRES_LEVELS as u64).contains(&x) => Some(x as usize),
+            Some(x) => {
+                return Err(Error::Serve(format!(
+                    "job field 'multires' = {x} out of range (1..={MAX_MULTIRES_LEVELS})"
                 )))
             }
         };
@@ -237,6 +386,8 @@ impl JobSpec {
             variant: field(j, "variant", Json::as_str, "a string")?
                 .map(str::to_string)
                 .unwrap_or(d.variant),
+            source,
+            multires,
             // Absent precision defaults to full (pre-precision clients keep
             // working); a present but unknown value is an error.
             precision: match field(j, "precision", Json::as_str, "a string")? {
@@ -261,6 +412,10 @@ impl JobSpec {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Ping,
+    /// Ship one volume into the daemon's content-addressed store. `data`
+    /// holds the n^3 samples; on the wire they travel as base64 of the
+    /// `data/io.rs` little-endian f32 byte format.
+    Upload { n: usize, data: Vec<f32> },
     Submit(JobSpec),
     /// `None` lists every job the daemon knows about.
     Status(Option<JobId>),
@@ -273,6 +428,11 @@ impl Request {
     pub fn to_line(&self) -> String {
         let j = match self {
             Request::Ping => Json::object([("cmd", Json::str("ping"))]),
+            Request::Upload { n, data } => Json::object([
+                ("cmd", Json::str("upload")),
+                ("n", Json::num(*n as f64)),
+                ("data", Json::str(base64::encode(&f32s_to_le_bytes(data)))),
+            ]),
             Request::Submit(spec) => {
                 Json::object([("cmd", Json::str("submit")), ("job", spec.to_json())])
             }
@@ -304,6 +464,44 @@ impl Request {
         };
         match cmd {
             "ping" => Ok(Request::Ping),
+            "upload" => {
+                let n = match j.get("n").and_then(Json::as_index) {
+                    Some(x) if (1..=MAX_UPLOAD_GRID_N as u64).contains(&x) => x as usize,
+                    Some(x) => {
+                        return Err(Error::Serve(format!(
+                            "upload field 'n' = {x} out of range (1..={MAX_UPLOAD_GRID_N}; \
+                             larger volumes need a chunked upload, not yet supported)"
+                        )))
+                    }
+                    None => {
+                        return Err(Error::Serve(
+                            "upload requires an integer 'n'".into(),
+                        ))
+                    }
+                };
+                let b64 = j.get("data").and_then(Json::as_str).ok_or_else(|| {
+                    Error::Serve("upload requires a base64 string 'data'".into())
+                })?;
+                let bytes = base64::decode(b64)
+                    .map_err(|e| Error::Serve(format!("upload payload: {e}")))?;
+                let expected = n * n * n * 4;
+                if bytes.len() != expected {
+                    return Err(Error::Serve(format!(
+                        "upload payload is {} bytes, expected {expected} ({n}^3 f32 samples)",
+                        bytes.len()
+                    )));
+                }
+                let data = f32s_from_le_bytes(&bytes)?;
+                // Reject non-finite voxels at the protocol boundary: a NaN
+                // smuggled into m0/m1 would poison every norm and line
+                // search of the solve and surface as a cryptic failure.
+                if let Some(i) = data.iter().position(|x| !x.is_finite()) {
+                    return Err(Error::Serve(format!(
+                        "upload payload contains a non-finite sample at index {i}"
+                    )));
+                }
+                Ok(Request::Upload { n, data })
+            }
             "submit" => {
                 let job = j
                     .get("job")
@@ -335,6 +533,9 @@ impl Request {
 pub enum Response {
     Ok,
     Submitted { id: JobId },
+    /// Receipt for an `upload`: the volume's content id (what `submit`
+    /// references in `source`) and whether it was already resident.
+    Uploaded { id: String, n: usize, dedup: bool },
     Job(JobView),
     Jobs(Vec<JobView>),
     Stats(ServeStats),
@@ -363,6 +564,10 @@ fn job_to_json(v: &JobView) -> Json {
             v.iters.map(|i| Json::num(i as f64)).unwrap_or(Json::Null),
         ),
         (
+            "levels",
+            v.levels.map(|l| Json::num(l as f64)).unwrap_or(Json::Null),
+        ),
+        (
             "converged",
             v.converged.map(Json::Bool).unwrap_or(Json::Null),
         ),
@@ -389,6 +594,7 @@ fn job_from_json(j: &Json) -> Result<JobView> {
         wall_s: j.get("wall_s").and_then(Json::as_f64),
         mismatch_rel: j.get("mismatch_rel").and_then(Json::as_f64),
         iters: j.get("iters").and_then(Json::as_usize),
+        levels: j.get("levels").and_then(Json::as_usize),
         converged: j.get("converged").and_then(Json::as_bool),
         error: j.get("error").and_then(Json::as_str).map(str::to_string),
     })
@@ -407,6 +613,16 @@ fn stats_to_json(s: &ServeStats) -> Json {
         ("workers", Json::num(s.workers as f64)),
         ("cache_compiles", Json::num(s.cache_compiles as f64)),
         ("cache_hits", Json::num(s.cache_hits as f64)),
+        (
+            "store",
+            Json::object([
+                ("volumes", Json::num(s.store.volumes as f64)),
+                ("bytes", Json::num(s.store.bytes as f64)),
+                ("uploads", Json::num(s.store.uploads as f64)),
+                ("dedup_hits", Json::num(s.store.dedup_hits as f64)),
+                ("evictions", Json::num(s.store.evictions as f64)),
+            ]),
+        ),
     ])
 }
 
@@ -416,6 +632,26 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
             .and_then(Json::as_usize)
             .map(|x| x as u64)
             .ok_or_else(|| Error::Serve(format!("stats missing '{k}'")))
+    };
+    // Absent store block = zeros (stats from a scheduler embedded without
+    // a store, e.g. BatchService, or a pre-data-plane daemon).
+    let store = match j.get("store") {
+        None => StoreStats::default(),
+        Some(s) => {
+            let gs = |k: &str| -> Result<u64> {
+                s.get(k)
+                    .and_then(Json::as_usize)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| Error::Serve(format!("store stats missing '{k}'")))
+            };
+            StoreStats {
+                volumes: gs("volumes")? as usize,
+                bytes: gs("bytes")?,
+                uploads: gs("uploads")?,
+                dedup_hits: gs("dedup_hits")?,
+                evictions: gs("evictions")?,
+            }
+        }
     };
     Ok(ServeStats {
         submitted: g("submitted")?,
@@ -429,6 +665,7 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
         workers: g("workers")? as usize,
         cache_compiles: g("cache_compiles")?,
         cache_hits: g("cache_hits")?,
+        store,
     })
 }
 
@@ -439,6 +676,17 @@ impl Response {
             Response::Submitted { id } => {
                 Json::object([("ok", Json::Bool(true)), ("id", Json::num(*id as f64))])
             }
+            Response::Uploaded { id, n, dedup } => Json::object([
+                ("ok", Json::Bool(true)),
+                (
+                    "volume",
+                    Json::object([
+                        ("id", Json::str(id)),
+                        ("n", Json::num(*n as f64)),
+                        ("dedup", Json::Bool(*dedup)),
+                    ]),
+                ),
+            ]),
             Response::Job(v) => Json::object([("ok", Json::Bool(true)), ("job", job_to_json(v))]),
             Response::Jobs(vs) => Json::object([
                 ("ok", Json::Bool(true)),
@@ -466,6 +714,14 @@ impl Response {
         }
         if let Some(s) = j.get("stats") {
             return Ok(Response::Stats(stats_from_json(s)?));
+        }
+        if let Some(v) = j.get("volume") {
+            let miss = |k: &str| Error::Serve(format!("upload receipt missing '{k}'"));
+            return Ok(Response::Uploaded {
+                id: v.get("id").and_then(Json::as_str).ok_or_else(|| miss("id"))?.to_string(),
+                n: v.get("n").and_then(Json::as_usize).ok_or_else(|| miss("n"))?,
+                dedup: v.get("dedup").and_then(Json::as_bool).ok_or_else(|| miss("dedup"))?,
+            });
         }
         if let Some(v) = j.get("job") {
             return Ok(Response::Job(job_from_json(v)?));
@@ -496,10 +752,19 @@ mod tests {
             beta: Some(1e-3),
             gtol: None,
             continuation: Some(false),
+            ..Default::default()
+        };
+        let uploaded = JobSpec {
+            n: 8,
+            source: JobSource::Uploaded { m0: "aa11".into(), m1: "bb22".into() },
+            multires: Some(3),
+            ..Default::default()
         };
         for req in [
             Request::Ping,
+            Request::Upload { n: 2, data: vec![0.0, -1.5, 3.25, 4.0, 5.0, 6.5, 7.0, 8.0] },
             Request::Submit(spec),
+            Request::Submit(uploaded),
             Request::Status(None),
             Request::Status(Some(4)),
             Request::Cancel(9),
@@ -510,6 +775,76 @@ mod tests {
             assert!(!line.contains('\n'), "one line: {line}");
             assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
         }
+    }
+
+    #[test]
+    fn upload_requests_are_validated() {
+        // Well-formed upload decodes to the exact sample vector.
+        let data = vec![1.0f32; 8];
+        let line = Request::Upload { n: 2, data: data.clone() }.to_line();
+        assert_eq!(Request::parse(&line).unwrap(), Request::Upload { n: 2, data });
+        // Shape mismatch: 27 samples under n = 2.
+        let bad = Request::Upload { n: 2, data: vec![0.0; 27] }.to_line();
+        let err = Request::parse(&bad).unwrap_err();
+        assert!(err.to_string().contains("expected 32"), "{err}");
+        // Missing / malformed fields.
+        assert!(Request::parse(r#"{"cmd":"upload"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"upload","n":2}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"upload","n":2,"data":"not base64!"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"upload","n":0,"data":""}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"upload","n":5000,"data":""}"#).is_err());
+        // Grids that cannot fit the one-line discipline are rejected with
+        // a useful error up front, not a connection drop at the line cap.
+        let err = Request::parse(r#"{"cmd":"upload","n":300,"data":""}"#).unwrap_err();
+        assert!(err.to_string().contains("chunked"), "{err}");
+        // Non-finite samples are rejected at the boundary.
+        let nan = Request::Upload { n: 2, data: vec![f32::NAN; 8] }.to_line();
+        let err = Request::parse(&nan).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn spec_source_and_multires_wire_fields() {
+        // Uploaded source + multires round-trip and shape the job name.
+        let j = Json::parse(
+            r#"{"n":32,"source":{"m0":"cafe01","m1":"beef02"},"multires":3}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&j).unwrap();
+        assert_eq!(
+            spec.source,
+            JobSource::Uploaded { m0: "cafe01".into(), m1: "beef02".into() }
+        );
+        assert_eq!(spec.multires, Some(3));
+        assert_eq!(spec.name(), "up:cafe01+beef02@32^3/opt-fd8-cubic+mr3");
+        assert_eq!(spec.reg_params().multires, 3);
+        // multires=1 is legal and means single grid (no name suffix).
+        let j1 = JobSpec::from_json(&Json::parse(r#"{"multires":1}"#).unwrap()).unwrap();
+        assert_eq!(j1.multires, Some(1));
+        assert!(!j1.name().contains("mr"), "{}", j1.name());
+        // Out-of-range or mistyped multires errors.
+        assert!(JobSpec::from_json(&Json::parse(r#"{"multires":0}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(&Json::parse(r#"{"multires":7}"#).unwrap()).is_err());
+        assert!(JobSpec::from_json(&Json::parse(r#"{"multires":"3"}"#).unwrap()).is_err());
+        // Uploaded source must pin n and name both volumes.
+        assert!(JobSpec::from_json(
+            &Json::parse(r#"{"source":{"m0":"a","m1":"b"}}"#).unwrap()
+        )
+        .is_err(), "source without explicit n");
+        assert!(JobSpec::from_json(
+            &Json::parse(r#"{"n":16,"source":{"m0":"a"}}"#).unwrap()
+        )
+        .is_err(), "missing m1");
+        assert!(JobSpec::from_json(
+            &Json::parse(r#"{"n":16,"source":{"m0":"","m1":"b"}}"#).unwrap()
+        )
+        .is_err(), "empty id");
+        // Synthetic default: absent source/multires behave exactly like a
+        // pre-data-plane client's submission.
+        let legacy = JobSpec::from_json(&Json::parse(r#"{"subject":"na02"}"#).unwrap()).unwrap();
+        assert_eq!(legacy.source, JobSource::Synthetic);
+        assert_eq!(legacy.multires, None);
+        assert_eq!(legacy.reg_params().multires, 1);
     }
 
     #[test]
@@ -594,6 +929,37 @@ mod tests {
     }
 
     #[test]
+    fn two_tier_request_reader_escalates_only_for_uploads() {
+        use std::io::BufReader;
+        // A garbage line never earns the large cap: cut at the small one.
+        let garbage = vec![b'x'; 200];
+        let mut r = BufReader::new(&garbage[..]);
+        let err = read_request_line_bounded(&mut r, 64, 4096).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("64"), "small bound applied: {err}");
+        // An upload-shaped prefix escalates to the large cap and succeeds.
+        let mut upload = br#"{"cmd":"upload","data":""#.to_vec();
+        upload.extend(vec![b'A'; 300]);
+        upload.extend(b"\",\"n\":4}\n");
+        let mut r = BufReader::new(&upload[..]);
+        let line = read_request_line_bounded(&mut r, 64, 4096).unwrap().unwrap();
+        assert_eq!(line.len(), upload.len() - 1, "whole line delivered");
+        // ... but the large cap is still a cap.
+        let mut huge = br#"{"cmd":"upload","data":""#.to_vec();
+        huge.extend(vec![b'A'; 8192]);
+        let mut r = BufReader::new(&huge[..]);
+        let err = read_request_line_bounded(&mut r, 64, 4096).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // Small lines pass untouched regardless of content.
+        let mut r = BufReader::new(&b"{\"cmd\":\"ping\"}\n"[..]);
+        assert_eq!(
+            read_request_line_bounded(&mut r, 64, 4096).unwrap().as_deref(),
+            Some("{\"cmd\":\"ping\"}")
+        );
+        assert_eq!(read_request_line_bounded(&mut r, 64, 4096).unwrap(), None);
+    }
+
+    #[test]
     fn response_roundtrip() {
         let v = JobView {
             id: 3,
@@ -605,6 +971,7 @@ mod tests {
             wall_s: Some(0.5),
             mismatch_rel: Some(3e-2),
             iters: Some(11),
+            levels: Some(3),
             converged: Some(true),
             error: None,
         };
@@ -614,11 +981,21 @@ mod tests {
                 assert_eq!(got.state, JobState::Done);
                 assert_eq!(got.dispatch_seq, Some(5));
                 assert_eq!(got.iters, Some(11));
+                assert_eq!(got.levels, Some(3), "realized multires depth travels");
             }
             other => panic!("unexpected {other:?}"),
         }
         match Response::parse(&Response::Submitted { id: 12 }.to_line()).unwrap() {
             Response::Submitted { id } => assert_eq!(id, 12),
+            other => panic!("unexpected {other:?}"),
+        }
+        let up = Response::Uploaded { id: "deadbeef".into(), n: 16, dedup: true };
+        match Response::parse(&up.to_line()).unwrap() {
+            Response::Uploaded { id, n, dedup } => {
+                assert_eq!(id, "deadbeef");
+                assert_eq!(n, 16);
+                assert!(dedup);
+            }
             other => panic!("unexpected {other:?}"),
         }
         match Response::parse(&Response::Error("queue full".into()).to_line()).unwrap() {
@@ -637,12 +1014,30 @@ mod tests {
             workers: 2,
             cache_compiles: 6,
             cache_hits: 18,
+            store: StoreStats {
+                volumes: 3,
+                bytes: 786432,
+                uploads: 5,
+                dedup_hits: 2,
+                evictions: 1,
+            },
         };
         match Response::parse(&Response::Stats(s).to_line()).unwrap() {
             Response::Stats(got) => {
                 assert_eq!(got.cache_hits, 18);
                 assert_eq!(got.prior_completed, 9);
+                assert_eq!(got.store, s.store, "store counters travel in stats");
             }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A stats object without a store block (pre-data-plane daemon or a
+        // storeless embedding) parses to zeroed store counters.
+        let legacy = r#"{"ok":true,"stats":{"submitted":1,"queued":0,"running":0,
+            "completed":1,"failed":0,"cancelled":0,"rejected":0,"prior_completed":0,
+            "workers":1,"cache_compiles":0,"cache_hits":0}}"#
+            .replace('\n', "");
+        match Response::parse(&legacy).unwrap() {
+            Response::Stats(got) => assert_eq!(got.store, StoreStats::default()),
             other => panic!("unexpected {other:?}"),
         }
     }

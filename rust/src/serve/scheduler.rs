@@ -22,11 +22,13 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::field::Field3;
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::registration::report::RunReport;
 use crate::registration::solver::GnSolver;
 use crate::runtime::OpRegistry;
 use crate::serve::proto::{JobSpec, Priority};
+use crate::serve::store::StoreStats;
 
 pub type JobId = u64;
 
@@ -67,19 +69,22 @@ impl JobState {
     }
 }
 
-/// What a worker executes. Wire submissions carry a spec (the worker
-/// synthesizes the problem against its own registry); the batch API hands
-/// over pre-built problems.
+/// What a worker executes. Synthetic wire submissions carry a spec (the
+/// worker synthesizes the problem against its own registry); uploaded-source
+/// submissions carry the spec plus the volumes the daemon resolved from the
+/// content-addressed store at admission time (so store eviction can never
+/// invalidate an admitted job); the batch API hands over pre-built problems.
 #[derive(Clone, Debug)]
 pub enum JobPayload {
     Spec(JobSpec),
+    Volumes { spec: JobSpec, m0: Arc<Field3>, m1: Arc<Field3> },
     Problem { problem: RegProblem, params: RegParams },
 }
 
 impl JobPayload {
     pub fn name(&self) -> String {
         match self {
-            JobPayload::Spec(s) => s.name(),
+            JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => s.name(),
             JobPayload::Problem { problem, .. } => problem.name.clone(),
         }
     }
@@ -102,6 +107,10 @@ pub struct JobView {
     pub wall_s: Option<f64>,
     pub mismatch_rel: Option<f64>,
     pub iters: Option<usize>,
+    /// Grid levels the solve actually ran (from `RunReport::levels`);
+    /// `None` until the job is done. A multires job that degraded to fewer
+    /// levels than its spec requested is visible here.
+    pub levels: Option<usize>,
     pub converged: Option<bool>,
     pub error: Option<String>,
 }
@@ -125,6 +134,10 @@ pub struct ServeStats {
     /// Warm-cache reuses across all workers: > 0 whenever several jobs
     /// share a grid size and variant — the whole point of the daemon.
     pub cache_hits: u64,
+    /// Volume-store counters (the serve data plane). The scheduler itself
+    /// does not own the store; the daemon overlays these when answering
+    /// the stats verb, and embedders without a store report zeros.
+    pub store: StoreStats,
 }
 
 struct JobRecord {
@@ -321,6 +334,15 @@ impl Scheduler {
         self.inner.st.lock().unwrap().counters.prior_completed = n;
     }
 
+    /// Seed the job-id counter past ids used by previous daemon
+    /// incarnations (journal replay), so audit lines from different
+    /// incarnations never collide on `id`. Never moves the counter
+    /// backwards.
+    pub fn seed_next_id(&self, next: JobId) {
+        let mut st = self.inner.st.lock().unwrap();
+        st.next_id = st.next_id.max(next);
+    }
+
     /// Admit a job, or reject it (queue full / shutting down). Emergency
     /// jobs bypass the queue bound: the clinic never gets a busy signal.
     pub fn submit(&self, priority: Priority, payload: JobPayload) -> Result<JobId> {
@@ -508,6 +530,7 @@ impl Scheduler {
             workers: self.inner.workers,
             cache_compiles: compiles,
             cache_hits: hits,
+            store: StoreStats::default(),
         }
     }
 
@@ -545,6 +568,7 @@ fn view_of(id: JobId, r: &JobRecord) -> JobView {
         wall_s: r.wall_s,
         mismatch_rel: r.report.as_ref().map(|rep| rep.mismatch_rel),
         iters: r.report.as_ref().map(|rep| rep.iters),
+        levels: r.report.as_ref().map(|rep| rep.levels),
         converged: r.report.as_ref().map(|rep| rep.converged),
         error: r.error.clone(),
     }
@@ -584,10 +608,23 @@ impl Executor for PjrtExecutor {
                 crate::data::synth::nirep_analog_pair(&self.registry, spec.n, &spec.subject)?,
                 spec.reg_params(),
             ),
+            // `RegProblem` owns its fields, so executing an uploaded job
+            // copies both volumes once. That is bounded by the worker
+            // count (not the queue) and is noise next to the solve itself;
+            // the store's sharing still wins where it matters — one
+            // resident copy per distinct volume and dedup'd uploads.
+            // Making `RegProblem` hold `Arc<Field3>` would ripple through
+            // every layer for a per-job memcpy.
+            JobPayload::Volumes { spec, m0, m1 } => (
+                RegProblem::new(spec.name(), (**m0).clone(), (**m1).clone()),
+                spec.reg_params(),
+            ),
             JobPayload::Problem { problem, params } => (problem.clone(), params.clone()),
         };
         let solver = GnSolver::new(&self.registry, params);
-        let res = solver.solve(&problem)?;
+        // `solve_auto` honors the multires level count carried in the
+        // params: coarse-to-fine grid continuation over the wire.
+        let res = solver.solve_auto(&problem)?;
         RunReport::build(&solver, &problem, &res)
     }
 
@@ -650,6 +687,7 @@ pub fn stub_report(name: &str) -> RunReport {
         grad_rel: 0.01,
         iters: 1,
         matvecs: 1,
+        levels: 1,
         time_s: 0.0,
         converged: true,
     }

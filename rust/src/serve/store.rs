@@ -1,0 +1,288 @@
+//! Content-addressed volume store: the daemon-side half of the serve data
+//! plane.
+//!
+//! The `upload` wire verb lands real volume data here; `submit` jobs with
+//! an uploaded source resolve their `(m0, m1)` content ids against it at
+//! admission time. Three properties carry the design:
+//!
+//! * **Content addressing** — a volume's id is a hash of its shape and
+//!   bytes (FNV-1a 128), so re-uploading the same scan is a dedup hit,
+//!   not a second copy. A population study registering one atlas against
+//!   N subjects stores the atlas once.
+//! * **Byte-budget LRU eviction** — the store holds at most `budget`
+//!   bytes of volume data; least-recently-used volumes are evicted first.
+//!   Jobs are immune to eviction once admitted: the scheduler payload
+//!   carries `Arc<Field3>` resolved at submit time, so eviction only
+//!   invalidates *future* submits referencing the id.
+//! * **Reject-on-shape-mismatch** — a put whose sample count is not n^3
+//!   (or whose n is outside the wire bound) is an error, mirroring the
+//!   protocol-level validation so in-process users (benches, tests,
+//!   embedding) get the same contract as the wire.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::field::Field3;
+use crate::serve::proto::MAX_GRID_N;
+
+/// FNV-1a 128-bit (offset basis / prime per the FNV spec). Not
+/// cryptographic — the store is a cache keyed by honest content, not a
+/// defense against adversarial collisions — but 128 bits make accidental
+/// collisions across a clinical workload negligible.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+fn fnv1a(mut h: u128, bytes: &[u8]) -> u128 {
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content id of a volume: hash of the grid size and the little-endian
+/// sample bytes, rendered as 32 hex chars.
+pub fn content_id(n: usize, data: &[f32]) -> String {
+    let mut h = fnv1a(FNV_OFFSET, &(n as u64).to_le_bytes());
+    for &x in data {
+        h = fnv1a(h, &x.to_le_bytes());
+    }
+    format!("{h:032x}")
+}
+
+/// What a successful put returns (and the `upload` verb echoes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UploadReceipt {
+    pub id: String,
+    pub n: usize,
+    pub bytes: u64,
+    /// True when the volume was already resident (content-addressed hit).
+    pub dedup: bool,
+}
+
+/// Aggregate store statistics (nested under `"store"` in the stats verb).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Volumes currently resident.
+    pub volumes: usize,
+    /// Bytes currently resident.
+    pub bytes: u64,
+    /// Total puts (dedup hits included).
+    pub uploads: u64,
+    /// Puts answered by an already-resident volume — observable proof the
+    /// content addressing is doing its job.
+    pub dedup_hits: u64,
+    /// Volumes evicted by the byte budget.
+    pub evictions: u64,
+}
+
+struct Entry {
+    field: Arc<Field3>,
+    bytes: u64,
+    /// Logical clock of the last put/get touch (LRU order).
+    last_used: u64,
+}
+
+struct Inner {
+    entries: BTreeMap<String, Entry>,
+    clock: u64,
+    bytes: u64,
+    uploads: u64,
+    dedup_hits: u64,
+    evictions: u64,
+}
+
+/// Thread-safe content-addressed volume store with a byte budget.
+pub struct VolumeStore {
+    budget: u64,
+    inner: Mutex<Inner>,
+}
+
+impl VolumeStore {
+    /// A store holding at most `budget_bytes` of volume data (min: one
+    /// 16^3 volume, so a misconfigured budget still admits the smallest
+    /// artifact size).
+    pub fn new(budget_bytes: u64) -> VolumeStore {
+        VolumeStore {
+            budget: budget_bytes.max(16 * 16 * 16 * 4),
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                clock: 0,
+                bytes: 0,
+                uploads: 0,
+                dedup_hits: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Admit a volume. Same content twice is a dedup hit (same id, no
+    /// second copy); a new volume may evict least-recently-used residents
+    /// to fit the budget. Errors: shape mismatch, n out of range, or a
+    /// single volume larger than the whole budget.
+    pub fn put(&self, n: usize, data: Vec<f32>) -> Result<UploadReceipt> {
+        if n == 0 || n > MAX_GRID_N {
+            return Err(Error::Serve(format!("volume n = {n} out of range (1..={MAX_GRID_N})")));
+        }
+        if data.len() != n * n * n {
+            return Err(Error::ShapeMismatch {
+                what: format!("uploaded volume ({n}^3)"),
+                expected: n * n * n,
+                got: data.len(),
+            });
+        }
+        let bytes = (data.len() * 4) as u64;
+        if bytes > self.budget {
+            return Err(Error::Serve(format!(
+                "volume of {bytes} bytes exceeds the store budget ({} bytes)",
+                self.budget
+            )));
+        }
+        let id = content_id(n, &data);
+        let mut st = self.inner.lock().unwrap();
+        let st = &mut *st; // split-borrow the guard's fields
+        st.clock += 1;
+        st.uploads += 1;
+        let clock = st.clock;
+        if let Some(e) = st.entries.get_mut(&id) {
+            // 128-bit collision between different volumes is negligible;
+            // the shape check still guards the impossible-in-practice case
+            // so a collision could never hand a job the wrong grid size.
+            if e.field.n != n {
+                return Err(Error::Serve(format!("content id collision on '{id}'")));
+            }
+            e.last_used = clock;
+            st.dedup_hits += 1;
+            return Ok(UploadReceipt { id, n, bytes, dedup: true });
+        }
+        while st.bytes + bytes > self.budget {
+            let Some(victim) = st
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let evicted = st.entries.remove(&victim).expect("victim came from the map");
+            st.bytes -= evicted.bytes;
+            st.evictions += 1;
+        }
+        st.bytes += bytes;
+        st.entries.insert(
+            id.clone(),
+            Entry { field: Arc::new(Field3 { n, data }), bytes, last_used: clock },
+        );
+        Ok(UploadReceipt { id, n, bytes, dedup: false })
+    }
+
+    /// Resolve a content id. A hit refreshes the volume's LRU position
+    /// (jobs re-referencing a volume keep it warm).
+    pub fn get(&self, id: &str) -> Option<Arc<Field3>> {
+        let mut st = self.inner.lock().unwrap();
+        st.clock += 1;
+        let clock = st.clock;
+        let e = st.entries.get_mut(id)?;
+        e.last_used = clock;
+        Some(e.field.clone())
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let st = self.inner.lock().unwrap();
+        StoreStats {
+            volumes: st.entries.len(),
+            bytes: st.bytes,
+            uploads: st.uploads,
+            dedup_hits: st.dedup_hits,
+            evictions: st.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vol(n: usize, seed: f32) -> Vec<f32> {
+        (0..n * n * n).map(|i| seed + i as f32).collect()
+    }
+
+    #[test]
+    fn content_id_is_deterministic_and_shape_sensitive() {
+        let a = content_id(4, &vol(4, 0.0));
+        assert_eq!(a, content_id(4, &vol(4, 0.0)));
+        assert_ne!(a, content_id(4, &vol(4, 1.0)), "different data, different id");
+        assert_eq!(a.len(), 32);
+        assert!(a.bytes().all(|b| b.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn dedup_hit_stores_one_copy() {
+        let store = VolumeStore::new(1 << 20);
+        let r1 = store.put(4, vol(4, 0.0)).unwrap();
+        assert!(!r1.dedup);
+        let r2 = store.put(4, vol(4, 0.0)).unwrap();
+        assert!(r2.dedup);
+        assert_eq!(r1.id, r2.id);
+        let s = store.stats();
+        assert_eq!(s.volumes, 1);
+        assert_eq!(s.uploads, 2);
+        assert_eq!(s.dedup_hits, 1);
+        assert_eq!(s.bytes, (4 * 4 * 4 * 4) as u64);
+        assert_eq!(store.get(&r1.id).unwrap().data, vol(4, 0.0));
+    }
+
+    #[test]
+    fn shape_mismatch_and_bad_n_rejected() {
+        let store = VolumeStore::new(1 << 20);
+        assert!(store.put(4, vec![0.0; 63]).is_err(), "63 != 4^3");
+        assert!(store.put(0, vec![]).is_err());
+        assert!(store.put(MAX_GRID_N + 1, vec![0.0; 8]).is_err());
+        assert_eq!(store.stats().volumes, 0);
+    }
+
+    #[test]
+    fn lru_eviction_honors_byte_budget_and_recency() {
+        // Budget fits exactly two 16^3 volumes (16384 bytes each — also
+        // the constructor's floor, so the budget is taken as-is).
+        const V: u64 = 16 * 16 * 16 * 4;
+        let store = VolumeStore::new(2 * V);
+        let a = store.put(16, vol(16, 0.0)).unwrap().id;
+        let b = store.put(16, vol(16, 1.0)).unwrap().id;
+        // Touch a so b becomes the LRU victim.
+        assert!(store.get(&a).is_some());
+        let c = store.put(16, vol(16, 2.0)).unwrap().id;
+        assert!(store.get(&b).is_none(), "LRU volume evicted");
+        assert!(store.get(&a).is_some(), "recently-used volume survives");
+        assert!(store.get(&c).is_some());
+        let s = store.stats();
+        assert_eq!(s.volumes, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.bytes, 2 * V);
+    }
+
+    #[test]
+    fn volume_larger_than_budget_is_rejected_not_thrashed() {
+        // Budget below one 16^3 volume is clamped up to exactly one, so a
+        // 32^3 put must be rejected outright.
+        let store = VolumeStore::new(1);
+        assert!(store.put(16, vol(16, 0.0)).is_ok());
+        let err = store.put(32, vol(32, 0.0)).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        assert_eq!(store.stats().volumes, 1, "resident volume untouched");
+    }
+
+    #[test]
+    fn eviction_is_invisible_to_resolved_handles() {
+        // Budget of exactly one 16^3 volume: the second put evicts the
+        // first.
+        let store = VolumeStore::new(16 * 16 * 16 * 4);
+        let a = store.put(16, vol(16, 0.0)).unwrap().id;
+        let held = store.get(&a).unwrap();
+        store.put(16, vol(16, 1.0)).unwrap(); // evicts a
+        assert!(store.get(&a).is_none());
+        // The Arc handed out at "admission" still owns the data.
+        assert_eq!(held.data, vol(16, 0.0));
+    }
+}

@@ -1,0 +1,123 @@
+//! Standard base64 (RFC 4648, with padding) — the volume payload encoding
+//! for the serve data plane's `upload` verb. The offline image has no
+//! `base64` crate; encode/decode here are the only binary-in-JSON bridge
+//! the wire protocol needs, so a table-driven implementation is the right
+//! size. Strict decode: non-alphabet bytes, bad lengths and bad padding
+//! are errors, never silently skipped — a corrupted volume upload must be
+//! rejected at the protocol boundary, not produce a garbage image.
+
+use crate::error::{Error, Result};
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Value of one alphabet byte, or 255 for bytes outside the alphabet.
+fn decode_one(b: u8) -> u8 {
+    match b {
+        b'A'..=b'Z' => b - b'A',
+        b'a'..=b'z' => b - b'a' + 26,
+        b'0'..=b'9' => b - b'0' + 52,
+        b'+' => 62,
+        b'/' => 63,
+        _ => 255,
+    }
+}
+
+/// Encode `bytes` as standard padded base64.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 4 / 3 + 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let v = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(v >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(v >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(v >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[v as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Decode standard padded base64. Errors on length not a multiple of 4,
+/// non-alphabet characters, misplaced padding, or nonzero trailing bits.
+pub fn decode(s: &str) -> Result<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Data(format!("base64 length {} is not a multiple of 4", bytes.len())));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (ci, chunk) in bytes.chunks_exact(4).enumerate() {
+        let last = ci + 1 == bytes.len() / 4;
+        // Padding is only legal in the final quantum, as '=' or '=='.
+        let pad = chunk.iter().filter(|&&b| b == b'=').count();
+        let data_len = match (last, pad, chunk[2] == b'=', chunk[3] == b'=') {
+            (_, 0, _, _) => 3,
+            (true, 1, false, true) => 2,
+            (true, 2, true, true) => 1,
+            _ => return Err(Error::Data("base64: misplaced padding".into())),
+        };
+        let mut v: u32 = 0;
+        for &b in &chunk[..data_len + 1] {
+            let d = decode_one(b);
+            if d == 255 {
+                return Err(Error::Data(format!("base64: invalid byte 0x{b:02x}")));
+            }
+            v = (v << 6) | d as u32;
+        }
+        // Left-align to the 24-bit quantum and check the dropped bits are
+        // zero (canonical encoding; rejects truncated-then-padded tails).
+        v <<= 6 * (3 - data_len);
+        if data_len < 3 && v & ((1 << (8 * (3 - data_len))) - 1) != 0 {
+            return Err(Error::Data("base64: nonzero trailing bits".into()));
+        }
+        out.push((v >> 16) as u8);
+        if data_len > 1 {
+            out.push((v >> 8) as u8);
+        }
+        if data_len > 2 {
+            out.push(v as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for len in [0usize, 1, 2, 3, 4, 255, 256, 1023] {
+            let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn strict_decode_rejects_garbage() {
+        assert!(decode("a").is_err(), "bad length");
+        assert!(decode("ab!c").is_err(), "bad byte");
+        assert!(decode("ab=c").is_err(), "interior padding");
+        assert!(decode("=abc").is_err(), "leading padding");
+        assert!(decode("Zg==Zg==").is_err(), "padding before final quantum");
+        assert!(decode("Zh==").is_err(), "nonzero trailing bits");
+        assert!(decode("Zm9=").is_err(), "nonzero trailing bits (2-byte)");
+    }
+}

@@ -3,6 +3,7 @@
 //! equivalents (see DESIGN.md section 4).
 
 pub mod args;
+pub mod base64;
 pub mod bench;
 pub mod json;
 pub mod prop;

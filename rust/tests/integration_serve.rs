@@ -14,7 +14,7 @@ use claire::error::Result;
 use claire::registration::RunReport;
 use claire::serve::{
     scheduler::stub_report, Client, Daemon, DaemonConfig, Executor, ExecutorFactory, JobPayload,
-    JobSpec, JobState, Priority,
+    JobSource, JobSpec, JobState, Priority,
 };
 use claire::Precision;
 
@@ -31,8 +31,16 @@ struct StubExec {
 
 impl Executor for StubExec {
     fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
-        let JobPayload::Spec(spec) = payload else {
-            return Ok(stub_report("problem"));
+        let spec = match payload {
+            JobPayload::Spec(s) => s,
+            JobPayload::Volumes { spec, m0, m1 } => {
+                // The daemon resolved real volume data at admission time;
+                // sanity-check the contract the executor relies on.
+                assert_eq!(m0.n, spec.n, "admission validated m0 shape");
+                assert_eq!(m1.n, spec.n, "admission validated m1 shape");
+                spec
+            }
+            JobPayload::Problem { .. } => return Ok(stub_report("problem")),
         };
         if self.warm.insert((spec.variant.clone(), spec.n, spec.precision)) {
             self.compiles += 5;
@@ -41,7 +49,11 @@ impl Executor for StubExec {
         }
         let delay_ms = spec.max_iter.unwrap_or(1) as u64;
         std::thread::sleep(std::time::Duration::from_millis(delay_ms));
-        Ok(stub_report(&spec.name()))
+        let mut report = stub_report(&spec.name());
+        // Mirror the real executor: the report carries the realized level
+        // count (equal to the request under a stub).
+        report.levels = spec.multires.unwrap_or(1);
+        Ok(report)
     }
 
     fn cache_stats(&self) -> (u64, u64) {
@@ -94,6 +106,7 @@ fn daemon_schedules_by_priority_cancels_and_reports_reuse() {
         workers: 2,
         queue_cap: 32,
         journal: Some(journal.clone()),
+        ..Default::default()
     };
     let handle = Daemon::start(cfg, stub_factory()).unwrap();
     let addr = handle.addr().to_string();
@@ -168,12 +181,19 @@ fn daemon_schedules_by_priority_cancels_and_reports_reuse() {
         workers: 1,
         queue_cap: 8,
         journal: Some(journal),
+        ..Default::default()
     };
     let handle2 = Daemon::start(cfg2, stub_factory()).unwrap();
     let mut client2 = Client::connect(&handle2.addr().to_string()).unwrap();
     let s2 = client2.stats().unwrap();
     assert_eq!(s2.prior_completed, 9, "restarted daemon must report journaled work");
     assert_eq!(s2.submitted, 0);
+    // Journal-audit id continuity: the first incarnation used ids 1..=10,
+    // so the restarted daemon's first id must continue past them — audit
+    // lines from different incarnations never collide on `id`.
+    let fresh = client2.submit(&spec("na02", Priority::Batch, 1)).unwrap();
+    assert!(fresh > 10, "id counter must be seeded past the journal (got {fresh})");
+    client2.wait_idle(10.0).unwrap();
     client2.shutdown(false).unwrap();
     handle2.join().unwrap();
 }
@@ -188,6 +208,7 @@ fn daemon_applies_backpressure_but_admits_emergencies() {
         workers: 1,
         queue_cap: 2,
         journal: None,
+        ..Default::default()
     };
     let handle = Daemon::start(cfg, stub_factory()).unwrap();
     let mut client = Client::connect(&handle.addr().to_string()).unwrap();
@@ -221,6 +242,7 @@ fn mixed_precision_job_roundtrips_over_the_wire() {
         workers: 1,
         queue_cap: 8,
         journal: None,
+        ..Default::default()
     };
     let handle = Daemon::start(cfg, stub_factory()).unwrap();
     let mut client = Client::connect(&handle.addr().to_string()).unwrap();
@@ -256,6 +278,7 @@ fn daemon_serves_concurrent_clients() {
         workers: 2,
         queue_cap: 64,
         journal: None,
+        ..Default::default()
     };
     let handle = Daemon::start(cfg, stub_factory()).unwrap();
     let addr = handle.addr().to_string();
@@ -279,6 +302,211 @@ fn daemon_serves_concurrent_clients() {
     let stats = client.wait_idle(30.0).unwrap();
     assert_eq!(stats.completed, 12);
     assert_eq!(client.jobs().unwrap().len(), 12);
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// The data-plane acceptance scenario: an upload -> submit -> status
+/// round-trip over the real NDJSON protocol registers an uploaded volume
+/// pair with `multires >= 2` end-to-end under a stub executor, with
+/// content-addressed dedup observable in store stats.
+#[test]
+fn upload_submit_status_round_trip() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    // Ship an 8^3 pair (distinct volumes) and re-upload the first one to
+    // prove content-addressed dedup.
+    let n = 8usize;
+    let m0: Vec<f32> = (0..n * n * n).map(|i| (i as f32 * 0.25).sin()).collect();
+    let m1: Vec<f32> = (0..n * n * n).map(|i| (i as f32 * 0.125).cos()).collect();
+    let r0 = client.upload(n, &m0).unwrap();
+    let r1 = client.upload(n, &m1).unwrap();
+    assert!(!r0.dedup && !r1.dedup);
+    assert_ne!(r0.id, r1.id);
+    let r0_again = client.upload(n, &m0).unwrap();
+    assert!(r0_again.dedup, "identical content must dedup");
+    assert_eq!(r0_again.id, r0.id);
+
+    // Submit the uploaded pair with a 3-level grid continuation.
+    let job = JobSpec {
+        n,
+        source: JobSource::Uploaded { m0: r0.id.clone(), m1: r1.id.clone() },
+        multires: Some(3),
+        priority: Priority::Urgent,
+        ..Default::default()
+    };
+    let id = client.submit(&job).unwrap();
+    let view = client.wait_terminal(id, 10.0).unwrap();
+    assert_eq!(view.state, JobState::Done);
+    assert!(view.name.starts_with("up:"), "uploaded jobs are named by content: {}", view.name);
+    assert!(view.name.ends_with("+mr3"), "multires visible in the name: {}", view.name);
+    assert_eq!(view.levels, Some(3), "realized level count travels in the job view");
+
+    // Store stats over the wire: 2 volumes resident, 3 uploads, 1 dedup.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.store.volumes, 2);
+    assert_eq!(stats.store.uploads, 3);
+    assert_eq!(stats.store.dedup_hits, 1);
+    assert_eq!(stats.store.evictions, 0);
+    assert_eq!(stats.store.bytes, (2 * n * n * n * 4) as u64);
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// Admission-time validation of uploaded-source submissions: unknown
+/// content ids and grid-size mismatches are rejected with useful errors on
+/// a connection that stays usable, and nothing is queued.
+#[test]
+fn uploaded_source_submissions_are_validated_at_admission() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    let r = client.upload(4, &[1.0f32; 64]).unwrap();
+
+    // Unknown id.
+    let unknown = JobSpec {
+        n: 4,
+        source: JobSource::Uploaded { m0: r.id.clone(), m1: "0000beef".into() },
+        ..Default::default()
+    };
+    let err = client.submit(&unknown).unwrap_err();
+    assert!(err.to_string().contains("unknown volume id"), "{err}");
+
+    // Grid-size mismatch between the spec and the stored volume.
+    let mismatched = JobSpec {
+        n: 8,
+        source: JobSource::Uploaded { m0: r.id.clone(), m1: r.id.clone() },
+        ..Default::default()
+    };
+    let err = client.submit(&mismatched).unwrap_err();
+    assert!(err.to_string().contains("does not match"), "{err}");
+
+    // Malformed upload payloads are wire errors, not poison.
+    let err = client.upload(4, &[1.0f32; 63]).unwrap_err();
+    assert!(err.to_string().contains("expected 256"), "{err}");
+
+    // Connection still healthy; nothing was admitted.
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.submitted, 0);
+    assert_eq!(stats.queued, 0);
+
+    client.shutdown(false).unwrap();
+    handle.join().unwrap();
+}
+
+/// A pre-data-plane client — raw NDJSON with no `source`/`multires`
+/// fields, exactly what a PR-1-era `claire submit` sends — still submits
+/// synthetic jobs unchanged against the upgraded daemon.
+#[test]
+fn pre_data_plane_clients_still_submit_synthetic_jobs() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut stream = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Verbatim legacy submit line (old field set only).
+    stream
+        .write_all(
+            b"{\"cmd\":\"submit\",\"job\":{\"subject\":\"na03\",\"n\":16,\
+              \"priority\":\"urgent\",\"max_iter\":1}}\n",
+        )
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "legacy submit accepted: {line}");
+    assert!(line.contains("\"id\":"), "{line}");
+    drop(stream);
+
+    // The job runs to completion as a plain synthetic single-grid solve.
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    client.wait_idle(10.0).unwrap();
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs.len(), 1);
+    assert_eq!(jobs[0].state, JobState::Done);
+    assert!(jobs[0].name.starts_with("na03@16^3/"), "{}", jobs[0].name);
+    assert_eq!(jobs[0].levels, Some(1), "no multires field = single grid");
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// LRU eviction is observable over the wire, and an admitted job survives
+/// eviction of its volumes (payload resolution happens at admission).
+#[test]
+fn store_eviction_over_the_wire() {
+    // Budget: exactly two 16^3 volumes (16^3 * 4 = 16384 bytes each; 16^3
+    // is also the store's budget floor, so the configured value is taken
+    // as-is).
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        store_bytes: 2 * 16 * 16 * 16 * 4,
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    let n = 16usize;
+    let vol = |seed: f32| -> Vec<f32> { (0..n * n * n).map(|i| seed + i as f32).collect() };
+    let a = client.upload(n, &vol(0.0)).unwrap();
+    let b = client.upload(n, &vol(1.0)).unwrap();
+
+    // Admit a job against (a, b), then evict both with fresh uploads.
+    let id = client
+        .submit(&JobSpec {
+            n,
+            source: JobSource::Uploaded { m0: a.id.clone(), m1: b.id.clone() },
+            multires: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+    client.upload(n, &vol(2.0)).unwrap();
+    client.upload(n, &vol(3.0)).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.store.evictions, 2, "budget forced both old volumes out");
+    assert_eq!(stats.store.volumes, 2);
+
+    // The admitted job still completes (volumes were resolved at submit).
+    let view = client.wait_terminal(id, 10.0).unwrap();
+    assert_eq!(view.state, JobState::Done);
+
+    // But a new submit referencing the evicted ids is rejected.
+    let err = client
+        .submit(&JobSpec {
+            n,
+            source: JobSource::Uploaded { m0: a.id.clone(), m1: b.id.clone() },
+            ..Default::default()
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown volume id"), "{err}");
+
     client.shutdown(true).unwrap();
     handle.join().unwrap();
 }

@@ -26,6 +26,9 @@ fi
 echo "== serve round-trip smoke (fail-fast) =="
 cargo test -q serve_round_trip_smoke
 
+echo "== serve data-plane smoke: upload -> submit -> status (stub executor) =="
+cargo test -q --test integration_serve upload_submit_status_round_trip
+
 echo "== cargo test -q (tier-1) =="
 cargo test -q
 

@@ -2,7 +2,9 @@
 //! through the serve scheduler, sweeping worker counts.
 //!
 //! Reports jobs/sec and p50/p95 submit-to-done latency (the clinical
-//! figure of merit from `coordinator::workload`) and writes a
+//! figure of merit from `coordinator::workload`), watch-event delivery
+//! latency through the v2 event bus, upload-line encode throughput
+//! (owned pre-v2 path vs the borrowed encoder), and writes a
 //! `BENCH_service.json` summary. Uses stub executors with a calibrated
 //! busy-wait service time so the bench measures *scheduling* overhead and
 //! scaling, not PJRT solve time — it runs on machines without artifacts
@@ -16,8 +18,12 @@ use std::time::{Duration, Instant};
 use claire::error::Result;
 use claire::math::stats::percentile_sorted;
 use claire::registration::RunReport;
+use claire::serve::proto::upload_line;
 use claire::serve::scheduler::stub_report;
-use claire::serve::{worker_loop, Executor, JobPayload, JobSpec, Priority, Scheduler, VolumeStore};
+use claire::serve::{
+    worker_loop, BusMsg, Executor, JobPayload, JobSpec, Priority, Request, Scheduler,
+    VolumeStore,
+};
 use claire::util::bench::Table;
 use claire::util::json::Json;
 
@@ -131,6 +137,99 @@ fn run_store_bench(volumes: usize, n: usize) -> StoreRow {
     }
 }
 
+/// Watch-event delivery latency: a subscriber timestamps every bus event
+/// while the producer drives `jobs` full lifecycles (queued -> running ->
+/// done = 3 events each) through the scheduler, recording the emit time
+/// before each transition call. Delivery latency = arrival - emit: the
+/// bus queue + thread-wakeup cost a `watch` connection sees on top of the
+/// transition itself.
+struct WatchRow {
+    events: usize,
+    p50_us: f64,
+    p95_us: f64,
+    max_us: f64,
+}
+
+fn run_watch_bench(jobs: usize) -> WatchRow {
+    let sched = Scheduler::new(jobs, 1);
+    let handle = sched.watch();
+    let total = jobs * 3;
+    let (emits, arrivals) = std::thread::scope(|scope| {
+        let sub = scope.spawn(|| {
+            let mut arr = Vec::with_capacity(total);
+            while arr.len() < total {
+                match handle.recv() {
+                    Some(BusMsg::Event(_)) => arr.push(Instant::now()),
+                    Some(BusMsg::Lagged) => panic!("bench subscriber lagged"),
+                    None => break,
+                }
+            }
+            arr
+        });
+        let mut emits = Vec::with_capacity(total);
+        for i in 0..jobs {
+            let spec = JobSpec { subject: format!("w{i}"), ..Default::default() };
+            emits.push(Instant::now());
+            sched.submit(Priority::Batch, JobPayload::Spec(spec)).unwrap();
+            emits.push(Instant::now());
+            let (id, _) = sched.next_job(0).unwrap();
+            emits.push(Instant::now());
+            sched.complete(id, Ok(stub_report("w")), 0.0);
+        }
+        (emits, sub.join().unwrap())
+    });
+    sched.unwatch(handle.id());
+    assert_eq!(arrivals.len(), total, "every transition delivered");
+    let mut lat_us: Vec<f64> = emits
+        .iter()
+        .zip(&arrivals)
+        .map(|(e, a)| a.saturating_duration_since(*e).as_secs_f64() * 1e6)
+        .collect();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    WatchRow {
+        events: total,
+        p50_us: percentile_sorted(&lat_us, 50.0),
+        p95_us: percentile_sorted(&lat_us, 95.0),
+        max_us: *lat_us.last().unwrap(),
+    }
+}
+
+/// Upload-line encode throughput: the pre-v2 owned path (clone the volume
+/// into `Request::Upload`, render through the Json tree) vs the borrowed
+/// `upload_line` encoder (one transient byte copy, base64 appended in
+/// place). The delta is the satellite's receipt for dropping the
+/// client-side `to_vec`.
+struct EncodeRow {
+    owned_mb_per_s: f64,
+    borrowed_mb_per_s: f64,
+    speedup: f64,
+}
+
+fn run_upload_encode_bench(n: usize, iters: usize) -> EncodeRow {
+    let data: Vec<f32> = (0..n * n * n).map(|i| (i as f32 * 0.1).sin()).collect();
+    let mb = (n * n * n * 4) as f64 / (1024.0 * 1024.0);
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let line = Request::Upload { n, data: data.clone() }.to_line();
+        std::hint::black_box(&line);
+    }
+    let owned_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let line = upload_line(n, &data, None);
+        std::hint::black_box(&line);
+    }
+    let borrowed_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+    EncodeRow {
+        owned_mb_per_s: iters as f64 * mb / owned_s,
+        borrowed_mb_per_s: iters as f64 * mb / borrowed_s,
+        speedup: owned_s / borrowed_s,
+    }
+}
+
 fn main() {
     let jobs = 48usize;
     let service = Duration::from_millis(4);
@@ -173,6 +272,38 @@ fn main() {
     println!(" dedup re-puts pay the same hash but skip the copy — upload");
     println!(" admission cost is hash-bound either way)");
 
+    let watch_jobs = 64usize;
+    println!("\n== watch event bus: {watch_jobs} job lifecycles, 1 subscriber ==\n");
+    run_watch_bench(watch_jobs / 4); // warmup
+    let wr = run_watch_bench(watch_jobs);
+    let mut wt = Table::new(&["events", "p50 lat[us]", "p95 lat[us]", "max[us]"]);
+    wt.row(&[
+        wr.events.to_string(),
+        format!("{:.1}", wr.p50_us),
+        format!("{:.1}", wr.p95_us),
+        format!("{:.1}", wr.max_us),
+    ]);
+    wt.print();
+    println!("\n(delivery latency = bus queue + subscriber wakeup per transition;");
+    println!(" the bounded queue means a wedged subscriber lags out instead of");
+    println!(" adding backpressure here)");
+
+    let enc_n = 64usize;
+    let enc_iters = 32usize;
+    println!("\n== upload-line encode: {enc_n}^3 volume (1 MiB), {enc_iters} iters ==\n");
+    run_upload_encode_bench(enc_n, enc_iters / 4); // warmup
+    let er = run_upload_encode_bench(enc_n, enc_iters);
+    let mut et = Table::new(&["owned MB/s", "borrowed MB/s", "speedup"]);
+    et.row(&[
+        format!("{:.0}", er.owned_mb_per_s),
+        format!("{:.0}", er.borrowed_mb_per_s),
+        format!("{:.2}x", er.speedup),
+    ]);
+    et.print();
+    println!("\n(owned = pre-v2 client path: clone volume -> Json tree -> escape");
+    println!(" pass; borrowed = upload_line straight from the slice, base64");
+    println!(" appended in place — one transient byte copy)");
+
     let summary = Json::object([
         ("bench", Json::str("service")),
         ("jobs", Json::num(jobs as f64)),
@@ -203,6 +334,24 @@ fn main() {
                 ("cold_mb_per_s", Json::num(sr.cold_mb_per_s)),
                 ("dedup_puts_per_s", Json::num(sr.dedup_puts_per_s)),
                 ("gets_per_s", Json::num(sr.gets_per_s)),
+            ]),
+        ),
+        (
+            "watch",
+            Json::object([
+                ("events", Json::num(wr.events as f64)),
+                ("p50_us", Json::num(wr.p50_us)),
+                ("p95_us", Json::num(wr.p95_us)),
+                ("max_us", Json::num(wr.max_us)),
+            ]),
+        ),
+        (
+            "upload_encode",
+            Json::object([
+                ("n", Json::num(enc_n as f64)),
+                ("owned_mb_per_s", Json::num(er.owned_mb_per_s)),
+                ("borrowed_mb_per_s", Json::num(er.borrowed_mb_per_s)),
+                ("speedup", Json::num(er.speedup)),
             ]),
         ),
     ]);

@@ -11,6 +11,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::precision::Precision;
 use crate::registration::problem::RegParams;
+use crate::request::JobRequest;
 
 /// Flat configuration map with typed accessors.
 #[derive(Clone, Debug, Default)]
@@ -74,25 +75,53 @@ impl Config {
         }
     }
 
-    /// Materialize solver parameters from this config.
+    /// Materialize a canonical job request from this config: keys present
+    /// in the file become explicit fields, absent keys stay at request
+    /// defaults. This is the config adapter onto the single
+    /// `JobRequest::validate` path.
+    pub fn job_request(&self) -> Result<JobRequest> {
+        let mut req = JobRequest::default();
+        if let Some(v) = self.get("variant") {
+            req.variant = v.to_string();
+        }
+        if let Some(s) = self.get("precision") {
+            req.precision = Precision::parse(s)?;
+        }
+        if self.get("beta").is_some() {
+            req.beta = Some(self.get_f64("beta", 0.0)?);
+        }
+        if self.get("gamma").is_some() {
+            req.gamma = Some(self.get_f64("gamma", 0.0)?);
+        }
+        if self.get("gtol").is_some() {
+            req.gtol = Some(self.get_f64("gtol", 0.0)?);
+        }
+        if self.get("max_iter").is_some() {
+            req.max_iter = Some(self.get_usize("max_iter", 0)?);
+        }
+        if self.get("max_krylov").is_some() {
+            req.max_krylov = Some(self.get_usize("max_krylov", 0)?);
+        }
+        if self.get("continuation").is_some() {
+            req.continuation = Some(self.get_bool("continuation", true)?);
+        }
+        if self.get("multires").is_some() {
+            req.multires = Some(self.get_usize("multires", 1)?);
+        }
+        if self.get("incompressible").is_some() {
+            req.incompressible = Some(self.get_bool("incompressible", false)?);
+        }
+        if self.get("verbose").is_some() {
+            req.verbose = Some(self.get_bool("verbose", false)?);
+        }
+        Ok(req)
+    }
+
+    /// Materialize solver parameters from this config — a thin adapter
+    /// over [`JobRequest::validate`], the one validation path shared with
+    /// the wire protocol and the CLI.
     pub fn reg_params(&self) -> Result<RegParams> {
-        let d = RegParams::default();
-        Ok(RegParams {
-            variant: self.get("variant").unwrap_or(&d.variant).to_string(),
-            precision: match self.get("precision") {
-                None => d.precision,
-                Some(s) => Precision::parse(s)?,
-            },
-            beta: self.get_f64("beta", d.beta)?,
-            gamma: self.get_f64("gamma", d.gamma)?,
-            gtol: self.get_f64("gtol", d.gtol)?,
-            max_iter: self.get_usize("max_iter", d.max_iter)?,
-            max_krylov: self.get_usize("max_krylov", d.max_krylov)?,
-            continuation: self.get_bool("continuation", d.continuation)?,
-            multires: self.get_usize("multires", d.multires)?,
-            incompressible: self.get_bool("incompressible", d.incompressible)?,
-            verbose: self.get_bool("verbose", d.verbose)?,
-        })
+        self.job_request()?.validate()
     }
 }
 

@@ -1,6 +1,115 @@
-//! Error types for the CLAIRE coordinator.
+//! Error types for the CLAIRE coordinator, including the wire-protocol
+//! error taxonomy.
+//!
+//! The serve wire protocol (v2) reports failures with a *stable machine
+//! code* plus a `retryable` flag so clients — scripts driving the CLI,
+//! batch drivers, fleet schedulers — can branch without parsing English.
+//! [`ErrorCode`] is that registry; [`Error::Wire`] carries it through the
+//! Rust layers, and every other `Error` variant maps onto a code via
+//! [`Error::code`] so daemon responses are always classified.
 
 use thiserror::Error;
+
+/// Stable wire-protocol error codes (protocol v2's `"code"` field).
+///
+/// The string forms are a compatibility surface: once shipped, a code's
+/// spelling never changes (clients branch on it). Add new codes instead of
+/// repurposing old ones. See DESIGN.md's error-code registry for the
+/// meaning, retryability, and CLI exit code of each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed request: unparseable line, unknown verb, mistyped or
+    /// out-of-range field. Resending the same bytes can never succeed.
+    BadRequest,
+    /// Admission control refused the job: the bounded queue is full.
+    /// Retryable — back off and resubmit.
+    QueueFull,
+    /// The daemon is shutting down and not admitting work. Retryable
+    /// against a restarted daemon.
+    ShuttingDown,
+    /// `status`/`cancel` named a job id the daemon does not know.
+    UnknownJob,
+    /// A submit referenced a volume content id that was never uploaded or
+    /// has been evicted; re-upload and resubmit.
+    UnknownVolume,
+    /// Payload geometry disagrees with its declaration (upload byte count
+    /// vs `n`, job `n` vs stored volume shape).
+    ShapeMismatch,
+    /// The request is well-formed but the target is in the wrong state
+    /// (e.g. cancelling a running or finished job).
+    InvalidState,
+    /// Transport-level failure: daemon unreachable, connection closed,
+    /// I/O timeout. Client-side classification; never sent on the wire.
+    Unavailable,
+    /// Anything the daemon could not classify (executor failures, bugs).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::UnknownVolume => "unknown_volume",
+            ErrorCode::ShapeMismatch => "shape_mismatch",
+            ErrorCode::InvalidState => "invalid_state",
+            ErrorCode::Unavailable => "unavailable",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a wire code. Unknown codes decode to `None`; clients treat
+    /// them as [`ErrorCode::Internal`] (forward compatibility: a newer
+    /// daemon may grow the registry).
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "queue_full" => ErrorCode::QueueFull,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            "unknown_job" => ErrorCode::UnknownJob,
+            "unknown_volume" => ErrorCode::UnknownVolume,
+            "shape_mismatch" => ErrorCode::ShapeMismatch,
+            "invalid_state" => ErrorCode::InvalidState,
+            "unavailable" => ErrorCode::Unavailable,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Whether retrying the same request later can succeed without the
+    /// client changing anything.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            ErrorCode::QueueFull | ErrorCode::ShuttingDown | ErrorCode::Unavailable
+        )
+    }
+
+    /// Process exit code for the CLI (sysexits.h conventions), so scripts
+    /// driving `claire submit` can branch without parsing stderr:
+    /// retryable codes exit 75 (EX_TEMPFAIL), malformed requests 64
+    /// (EX_USAGE), data-shape problems 65 (EX_DATAERR), missing
+    /// jobs/volumes 66 (EX_NOINPUT), transport failures 69
+    /// (EX_UNAVAILABLE), internal failures 70 (EX_SOFTWARE).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            ErrorCode::QueueFull | ErrorCode::ShuttingDown => 75,
+            ErrorCode::BadRequest => 64,
+            ErrorCode::ShapeMismatch | ErrorCode::InvalidState => 65,
+            ErrorCode::UnknownJob | ErrorCode::UnknownVolume => 66,
+            ErrorCode::Unavailable => 69,
+            ErrorCode::Internal => 70,
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Unified error type across runtime, solver, data and coordinator layers.
 #[derive(Error, Debug)]
@@ -34,6 +143,112 @@ pub enum Error {
 
     #[error("serve error: {0}")]
     Serve(String),
+
+    /// A classified wire-protocol failure. Displays with the legacy
+    /// `serve error: ` prefix because every pre-taxonomy daemon error on
+    /// these paths was an `Error::Serve` — the v1 wire renders
+    /// `to_string()` into the `error` field, and those bytes are a compat
+    /// surface. The code travels in the structured fields of a v2
+    /// response.
+    #[error("serve error: {msg}")]
+    Wire { code: ErrorCode, msg: String },
+}
+
+impl Error {
+    /// Build a classified wire error.
+    pub fn wire(code: ErrorCode, msg: impl Into<String>) -> Error {
+        Error::Wire { code, msg: msg.into() }
+    }
+
+    /// Classify any error for the wire: explicit codes pass through,
+    /// everything else maps onto the closest registry entry.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            Error::Wire { code, .. } => *code,
+            Error::Json { .. } => ErrorCode::BadRequest,
+            Error::ShapeMismatch { .. } => ErrorCode::ShapeMismatch,
+            Error::Io(_) => ErrorCode::Unavailable,
+            _ => ErrorCode::Internal,
+        }
+    }
+
+    /// CLI process exit code for this error. Wire errors use their code's
+    /// mapping; transport failures (I/O, client-side serve errors) exit 69
+    /// (EX_UNAVAILABLE); local usage errors exit 64 (EX_USAGE); anything
+    /// else keeps the generic failure exit 1.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Error::Wire { code, .. } => code.exit_code(),
+            Error::Io(_) | Error::Serve(_) => 69,
+            Error::Config(_) => 64,
+            _ => 1,
+        }
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip_their_string_forms() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::QueueFull,
+            ErrorCode::ShuttingDown,
+            ErrorCode::UnknownJob,
+            ErrorCode::UnknownVolume,
+            ErrorCode::ShapeMismatch,
+            ErrorCode::InvalidState,
+            ErrorCode::Unavailable,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("not_a_code"), None);
+    }
+
+    #[test]
+    fn retryable_and_exit_codes_follow_the_registry() {
+        assert!(ErrorCode::QueueFull.retryable());
+        assert!(ErrorCode::ShuttingDown.retryable());
+        assert!(ErrorCode::Unavailable.retryable());
+        assert!(!ErrorCode::BadRequest.retryable());
+        assert!(!ErrorCode::UnknownVolume.retryable());
+        // The satellite contract: scripts branch on 75 / 64 / 69.
+        assert_eq!(ErrorCode::QueueFull.exit_code(), 75);
+        assert_eq!(ErrorCode::BadRequest.exit_code(), 64);
+        assert_eq!(ErrorCode::Unavailable.exit_code(), 69);
+        assert_eq!(ErrorCode::Internal.exit_code(), 70);
+    }
+
+    #[test]
+    fn wire_errors_keep_the_legacy_serve_prefix() {
+        // Byte-compat: every pre-taxonomy error on these paths displayed
+        // as `Error::Serve` ("serve error: …"), and the v1 wire renders
+        // Display into the `error` field — so v1 clients see exactly the
+        // strings they always did; the code travels only in structured v2
+        // fields.
+        let e = Error::wire(ErrorCode::QueueFull, "queue full (2 waiting, cap 2)");
+        assert_eq!(e.to_string(), "serve error: queue full (2 waiting, cap 2)");
+        assert_eq!(e.code(), ErrorCode::QueueFull);
+        assert_eq!(e.exit_code(), 75);
+    }
+
+    #[test]
+    fn unclassified_errors_map_onto_the_registry() {
+        assert_eq!(Error::Serve("x".into()).code(), ErrorCode::Internal);
+        assert_eq!(
+            Error::Json { at: 0, msg: "bad".into() }.code(),
+            ErrorCode::BadRequest
+        );
+        assert_eq!(
+            Error::ShapeMismatch { what: "v".into(), expected: 8, got: 7 }.code(),
+            ErrorCode::ShapeMismatch
+        );
+        assert_eq!(Error::Serve("cannot reach daemon".into()).exit_code(), 69);
+        assert_eq!(Error::Config("bad flag".into()).exit_code(), 64);
+    }
+}

@@ -27,9 +27,11 @@ pub mod math;
 pub mod optim;
 pub mod precision;
 pub mod registration;
+pub mod request;
 pub mod runtime;
 pub mod serve;
 pub mod util;
 
-pub use error::{Error, Result};
+pub use error::{Error, ErrorCode, Result};
 pub use precision::Precision;
+pub use request::JobRequest;

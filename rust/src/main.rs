@@ -6,24 +6,39 @@
 //!   serve      start the persistent registration daemon (NDJSON over TCP)
 //!   upload     ship a fixed/moving volume pair into a running daemon
 //!   submit     submit job(s) to a running daemon (synthetic or uploaded)
+//!   watch      stream live job events from a running daemon (protocol v2)
 //!   status     job table + stats from a running daemon
 //!   cancel     cancel a queued job on a running daemon
 //!   shutdown   stop a running daemon (drain by default)
 //!   transport  warp the atlas with a random velocity (data utility)
 //!   info       artifact inventory and platform info
 //!   complexity Table-1 style kernel counts per operator
+//!
+//! The job-parameter surface (flags, config files, the wire protocol) is
+//! one canonical type: `claire::JobRequest` — every subcommand builds one
+//! via `JobRequest::from_args` and validates through the single
+//! `JobRequest::validate()` path.
+//!
+//! Exit codes follow sysexits.h so scripts can branch without parsing
+//! stderr: 75 = retryable daemon rejection (queue full / shutting down),
+//! 64 = malformed request or usage, 65 = data-shape problem, 66 = unknown
+//! job/volume id, 69 = daemon unreachable or transport failure, 70 =
+//! internal daemon failure, 1 = any other local error.
 
 use std::path::{Path, PathBuf};
 
 use claire::coordinator::{BatchService, Job};
 use claire::data::synth;
 use claire::error::Result;
-use claire::registration::{BaselineKind, GnSolver, RegParams, RunReport};
+use claire::registration::{BaselineKind, GnSolver, RunReport};
 use claire::runtime::OpRegistry;
 use claire::serve::client::job_table;
-use claire::serve::{pjrt_factory, Client, Daemon, DaemonConfig, JobSource, JobSpec, Priority};
+use claire::serve::{
+    pjrt_factory, Client, Daemon, DaemonConfig, EventMsg, JobSource, JobSpec, Verdict,
+};
 use claire::util::args::{flag, opt, usage, Args, OptSpec};
 use claire::util::bench::Table;
+use claire::JobRequest;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +46,7 @@ fn main() {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e}");
-            1
+            e.exit_code()
         }
     };
     std::process::exit(code);
@@ -55,6 +70,12 @@ fn common_specs() -> Vec<OptSpec> {
         opt("config", "key=value config file (overridden by flags)", ""),
         opt("multires", "grid-continuation levels (1 = single grid)", "1"),
         opt("addr", "daemon address (serve/upload/submit/status/shutdown)", "127.0.0.1:7464"),
+        opt(
+            "timeout-s",
+            "daemon-client I/O timeout in seconds (0 = block forever); watch clears it \
+             once subscribed",
+            "30",
+        ),
         opt("queue-cap", "serve: max waiting batch/urgent jobs", "64"),
         opt("journal", "serve: job journal path ('' disables)", "serve_journal.ndjson"),
         opt("store-mb", "serve: volume store byte budget (MiB)", "1024"),
@@ -72,39 +93,24 @@ fn common_specs() -> Vec<OptSpec> {
     ]
 }
 
-fn params_from(args: &Args) -> Result<RegParams> {
-    let mut params = match args.get("config") {
-        Some(path) if !path.is_empty() => {
-            claire::config::Config::load(&PathBuf::from(path))?.reg_params()?
-        }
-        _ => RegParams::default(),
-    };
-    if let Some(v) = args.get("variant") {
-        params.variant = v.to_string();
-    }
-    if let Some(v) = args.get("precision") {
-        params.precision = claire::Precision::parse(v)?;
-    }
-    params.beta = args.get_f64("beta", params.beta)?;
-    params.gamma = args.get_f64("gamma", params.gamma)?;
-    params.gtol = args.get_f64("gtol", params.gtol)?;
-    params.max_iter = args.get_usize("max-iter", params.max_iter)?;
-    if args.flag("no-continuation") {
-        params.continuation = false;
-    }
-    if args.flag("incompressible") {
-        params.incompressible = true;
-    }
-    if args.flag("verbose") {
-        params.verbose = true;
-    }
-    params.multires = args.get_usize("multires", params.multires)?;
-    Ok(params)
-}
-
 fn open_registry(args: &Args) -> Result<OpRegistry> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     OpRegistry::open(&dir)
+}
+
+/// Connect to the daemon with the `--timeout-s` bound (0 disables) and
+/// negotiate protocol v2 when the daemon offers it (silently staying on
+/// v1 against an old daemon).
+fn connect_client(args: &Args) -> Result<Client> {
+    let addr = args.get_or("addr", "127.0.0.1:7464");
+    let timeout_s = args.get_f64("timeout-s", 30.0)?;
+    let mut client = if timeout_s > 0.0 {
+        Client::connect_with_timeout(&addr, std::time::Duration::from_secs_f64(timeout_s))?
+    } else {
+        Client::connect(&addr)?
+    };
+    client.negotiate()?;
+    Ok(client)
 }
 
 fn run(argv: Vec<String>) -> Result<()> {
@@ -120,6 +126,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&args),
         "upload" => cmd_upload(&args),
         "submit" => cmd_submit(&args),
+        "watch" => cmd_watch(&args),
         "status" => cmd_status(&args),
         "cancel" => cmd_cancel(&args),
         "shutdown" => cmd_shutdown(&args),
@@ -139,16 +146,19 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn print_help() {
     println!("claire — diffeomorphic image registration (JPDC 2020 reproduction)\n");
-    println!("usage: claire <register|batch|serve|upload|submit|status|cancel|shutdown|");
-    println!("               transport|info|complexity> [options]\n");
+    println!("usage: claire <register|batch|serve|upload|submit|watch|status|cancel|");
+    println!("               shutdown|transport|info|complexity> [options]\n");
     println!("{}", usage(&common_specs()));
+    println!("exit codes (sysexits-style, for scripts): 75 retryable daemon rejection,");
+    println!("  64 malformed request/usage, 65 shape problem, 66 unknown job/volume,");
+    println!("  69 daemon unreachable/transport, 70 internal daemon failure");
 }
 
 fn cmd_register(args: &Args) -> Result<()> {
     let reg = open_registry(args)?;
-    let n = args.get_usize("n", 16)?;
-    let subject = args.get_or("subject", "na02");
-    let params = params_from(args)?;
+    let req = JobRequest::from_args(args)?;
+    let params = req.validate()?;
+    let (n, subject) = (req.n, req.subject.clone());
     println!("[claire] generating synthetic pair {subject}->na01 at {n}^3 ...");
     let prob = synth::nirep_analog_pair(&reg, n, &subject)?;
     let solver = GnSolver::new(&reg, params.clone());
@@ -227,8 +237,9 @@ fn dump_volumes(
 
 fn cmd_batch(args: &Args) -> Result<()> {
     let reg = open_registry(args)?;
-    let n = args.get_usize("n", 16)?;
-    let params = params_from(args)?;
+    let req = JobRequest::from_args(args)?;
+    let params = req.validate()?;
+    let n = req.n;
     let workers = args.get_usize("workers", 2)?;
     let mut jobs = Vec::new();
     for (i, subject) in ["na02", "na03", "na10"].iter().enumerate() {
@@ -306,7 +317,7 @@ fn cmd_upload(args: &Args) -> Result<()> {
             m0.n, m1.n
         )));
     }
-    let mut client = Client::connect(&addr)?;
+    let mut client = connect_client(args)?;
     let r0 = client.upload(m0.n, &m0.data)?;
     let r1 = client.upload(m1.n, &m1.data)?;
     let tag = |d: bool| if d { " (dedup hit)" } else { "" };
@@ -319,51 +330,122 @@ fn cmd_upload(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a JobSpec from the common CLI flags.
-fn spec_from(args: &Args) -> Result<JobSpec> {
-    let (m0, m1) = (args.get_or("m0", ""), args.get_or("m1", ""));
-    let source = match (m0.is_empty(), m1.is_empty()) {
-        (true, true) => JobSource::Synthetic,
-        (false, false) => JobSource::Uploaded { m0, m1 },
-        _ => {
-            return Err(claire::Error::Config(
-                "submit needs both --m0 and --m1 content ids (or neither)".into(),
-            ))
-        }
-    };
-    Ok(JobSpec {
-        subject: args.get_or("subject", "na02"),
-        n: args.get_usize("n", 16)?,
-        variant: args.get_or("variant", "opt-fd8-cubic"),
-        source,
-        precision: claire::Precision::parse(&args.get_or("precision", "full"))?,
-        multires: args.get("multires").map(|_| args.get_usize("multires", 1)).transpose()?,
-        priority: Priority::parse(&args.get_or("priority", "batch"))?,
-        max_iter: args.get("max-iter").map(|_| args.get_usize("max-iter", 50)).transpose()?,
-        beta: args.get("beta").map(|_| args.get_f64("beta", 5e-4)).transpose()?,
-        gtol: args.get("gtol").map(|_| args.get_f64("gtol", 5e-2)).transpose()?,
-        continuation: args.flag("no-continuation").then_some(false),
-    })
-}
-
 fn cmd_submit(args: &Args) -> Result<()> {
-    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
-    let base = spec_from(args)?;
+    // Validate client-side through the same single path the daemon uses —
+    // a malformed request exits 64 without a round trip.
+    let base = JobRequest::from_args(args)?;
+    base.validate()?;
+    let mut client = connect_client(args)?;
     let count = args.get_usize("count", 1)?;
     // Cycle through the study subjects only when the user did not pin one
     // (uploaded-source jobs always resubmit the same pair).
     let cycle =
         count > 1 && args.get("subject").is_none() && base.source == JobSource::Synthetic;
     let subjects = ["na02", "na03", "na10"];
-    for i in 0..count {
-        let spec = if cycle {
-            JobSpec { subject: subjects[i % subjects.len()].into(), ..base.clone() }
-        } else {
-            base.clone()
-        };
-        let name = spec.name();
-        let id = client.submit(&spec)?;
-        println!("submitted job {id}: {name} [{}]", spec.priority.as_str());
+    let specs: Vec<JobSpec> = (0..count)
+        .map(|i| {
+            if cycle {
+                JobSpec { subject: subjects[i % subjects.len()].into(), ..base.clone() }
+            } else {
+                base.clone()
+            }
+        })
+        .collect();
+    if client.proto() >= 2 && specs.len() > 1 {
+        // v2: one line, many jobs — per-job admission verdicts instead of
+        // one round trip per job. Chunked under the protocol's per-line
+        // job cap so a --count above it still submits everything.
+        let mut first_rejection: Option<claire::Error> = None;
+        let mut rejected = 0usize;
+        for chunk in specs.chunks(claire::serve::proto::MAX_BATCH_JOBS) {
+            let verdicts = client.submit_batch(chunk)?;
+            for (spec, verdict) in chunk.iter().zip(&verdicts) {
+                match verdict {
+                    Verdict::Admitted { id } => println!(
+                        "submitted job {id}: {} [{}]",
+                        spec.name(),
+                        spec.priority.as_str()
+                    ),
+                    Verdict::Rejected { code, msg, .. } => {
+                        rejected += 1;
+                        eprintln!("rejected {}: {msg} [{}]", spec.name(), code.as_str());
+                        if first_rejection.is_none() {
+                            first_rejection = Some(claire::Error::wire(*code, msg.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_rejection {
+            eprintln!("submit_batch: {rejected}/{} jobs rejected", specs.len());
+            return Err(e);
+        }
+    } else {
+        for spec in &specs {
+            let name = spec.name();
+            let id = client.submit(spec)?;
+            println!("submitted job {id}: {name} [{}]", spec.priority.as_str());
+        }
+    }
+    Ok(())
+}
+
+/// Stream live job events from the daemon (protocol v2 `watch`). With
+/// `--id`, exits once that job reaches a terminal state; otherwise streams
+/// until interrupted or the daemon goes away. `--timeout-s` bounds only
+/// connect + negotiation: once subscribed the I/O timeout is cleared,
+/// because a long solve legitimately produces no events for minutes.
+fn cmd_watch(args: &Args) -> Result<()> {
+    let mut client = connect_client(args)?;
+    if client.proto() < 2 {
+        return Err(claire::Error::Serve(
+            "daemon does not speak protocol v2 (watch unsupported)".into(),
+        ));
+    }
+    client.watch()?;
+    client.set_io_timeout(None)?;
+    let filter = arg_job_id(args)?;
+    match filter {
+        Some(id) => println!("[claire] watching job {id} (until terminal)"),
+        None => println!("[claire] watching job events (Ctrl-C to stop)"),
+    }
+    // Subscribe-then-check: a job that went terminal before the watch was
+    // registered emits no further events, so without this probe the
+    // command would sit on a finished job until the read timeout.
+    if let Some(id) = filter {
+        let view = client.status(id)?;
+        if view.state.is_terminal() {
+            println!("job {id} {} -> {} (already terminal)", view.name, view.state.as_str());
+            return Ok(());
+        }
+    }
+    loop {
+        match client.next_event()? {
+            EventMsg::Lagged { .. } => {
+                // Exit non-zero: the watched outcome is unknown, and a
+                // script chaining on success must not proceed. 69/retryable
+                // (client-side unavailable): re-issue watch + a status probe.
+                return Err(claire::Error::wire(
+                    claire::ErrorCode::Unavailable,
+                    "watch stream lagged behind and was dropped; re-issue watch",
+                ));
+            }
+            EventMsg::Job { id, name, state, wall_s, error, .. } => {
+                // With --id, unrelated jobs' transitions are noise.
+                if filter.is_some_and(|want| want != id) {
+                    continue;
+                }
+                let detail = match (&error, wall_s) {
+                    (Some(e), _) => format!("  ({e})"),
+                    (None, Some(w)) => format!("  ({w:.2}s)"),
+                    _ => String::new(),
+                };
+                println!("job {id} {name} -> {}{detail}", state.as_str());
+                if filter == Some(id) && state.is_terminal() {
+                    break;
+                }
+            }
+        }
     }
     Ok(())
 }
@@ -380,7 +462,7 @@ fn arg_job_id(args: &Args) -> Result<Option<u64>> {
 }
 
 fn cmd_status(args: &Args) -> Result<()> {
-    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    let mut client = connect_client(args)?;
     match arg_job_id(args)? {
         Some(id) => {
             let v = client.status(id)?;
@@ -419,7 +501,7 @@ fn cmd_status(args: &Args) -> Result<()> {
 }
 
 fn cmd_cancel(args: &Args) -> Result<()> {
-    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    let mut client = connect_client(args)?;
     let Some(id) = arg_job_id(args)? else {
         return Err(claire::Error::Config("cancel requires --id".into()));
     };
@@ -429,7 +511,7 @@ fn cmd_cancel(args: &Args) -> Result<()> {
 }
 
 fn cmd_shutdown(args: &Args) -> Result<()> {
-    let mut client = Client::connect(&args.get_or("addr", "127.0.0.1:7464"))?;
+    let mut client = connect_client(args)?;
     let drain = !args.flag("now");
     client.shutdown(drain)?;
     println!("shutdown requested ({})", if drain { "drain" } else { "immediate" });

@@ -1,10 +1,11 @@
 //! Registration problem definition and solver parameters.
 
+use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
 use crate::precision::Precision;
 
 /// Solver parameters (defaults follow the paper, section 4.1.2).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RegParams {
     /// Kernel variant tag (paper Table 6 analog; see model.py VARIANTS).
     pub variant: String,
@@ -51,6 +52,42 @@ impl Default for RegParams {
             incompressible: false,
             verbose: false,
         }
+    }
+}
+
+impl RegParams {
+    /// Numeric invariants shared by every request surface (the tail of
+    /// `JobRequest::validate`). Solver math assumes these hold; a zero or
+    /// non-finite weight would silently produce garbage iterations, so the
+    /// check rejects them up front as a structured `bad_request`.
+    pub fn check(&self) -> Result<()> {
+        let bad = |msg: String| Err(Error::wire(ErrorCode::BadRequest, msg));
+        if self.variant.is_empty() {
+            return bad("job field 'variant' must be non-empty".into());
+        }
+        if !(self.beta.is_finite() && self.beta > 0.0) {
+            return bad(format!("job field 'beta' = {} must be finite and > 0", self.beta));
+        }
+        if !(self.gamma.is_finite() && self.gamma >= 0.0) {
+            return bad(format!("job field 'gamma' = {} must be finite and >= 0", self.gamma));
+        }
+        if !(self.gtol.is_finite() && self.gtol > 0.0) {
+            return bad(format!("job field 'gtol' = {} must be finite and > 0", self.gtol));
+        }
+        if self.max_iter == 0 {
+            return bad("job field 'max_iter' must be >= 1".into());
+        }
+        if self.max_krylov == 0 {
+            return bad("job field 'max_krylov' must be >= 1".into());
+        }
+        if self.multires == 0 || self.multires > crate::request::MAX_MULTIRES_LEVELS {
+            return bad(format!(
+                "job field 'multires' = {} out of range (1..={})",
+                self.multires,
+                crate::request::MAX_MULTIRES_LEVELS
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -109,5 +146,21 @@ mod tests {
     #[should_panic(expected = "image sizes must match")]
     fn size_mismatch_rejected() {
         RegProblem::new("x", Field3::zeros(4), Field3::zeros(8));
+    }
+
+    #[test]
+    fn check_rejects_degenerate_params() {
+        assert!(RegParams::default().check().is_ok());
+        assert!(RegParams { beta: 0.0, ..Default::default() }.check().is_err());
+        assert!(RegParams { beta: f64::NAN, ..Default::default() }.check().is_err());
+        assert!(RegParams { gamma: -1.0, ..Default::default() }.check().is_err());
+        assert!(RegParams { gtol: 0.0, ..Default::default() }.check().is_err());
+        assert!(RegParams { max_iter: 0, ..Default::default() }.check().is_err());
+        assert!(RegParams { max_krylov: 0, ..Default::default() }.check().is_err());
+        assert!(RegParams { multires: 0, ..Default::default() }.check().is_err());
+        assert!(RegParams { multires: 9, ..Default::default() }.check().is_err());
+        assert!(RegParams { variant: "".into(), ..Default::default() }.check().is_err());
+        let err = RegParams { beta: 0.0, ..Default::default() }.check().unwrap_err();
+        assert_eq!(err.code(), ErrorCode::BadRequest);
     }
 }

@@ -1,0 +1,626 @@
+//! The canonical registration job request.
+//!
+//! Every surface that can describe a job — the serve wire protocol's
+//! `submit`/`submit_batch` verbs, `key = value` config files, and the CLI
+//! `register`/`submit` flag sets — builds a [`JobRequest`] and funnels it
+//! through the single [`JobRequest::validate`] path to obtain solver
+//! parameters. Before this module existed the job-configuration surface
+//! was triplicated (wire `JobSpec`, `Config::reg_params`, ad-hoc flag
+//! parsing in `main.rs`) with three divergent validation copies; now the
+//! adapters are thin:
+//!
+//! * wire  — [`JobRequest::from_json`] (type-strict decode) + `validate`
+//!   at daemon admission time,
+//! * config — `Config::job_request` + `validate`,
+//! * CLI   — [`JobRequest::from_args`] (flags over optional config file)
+//!   + `validate`.
+//!
+//! Decode is *typing only* (a present field with the wrong JSON type is an
+//! error); range and cross-field rules live in `validate`, so all three
+//! surfaces accept and reject identical inputs identically.
+
+use crate::config::Config;
+use crate::error::{Error, ErrorCode, Result};
+use crate::precision::Precision;
+use crate::registration::problem::RegParams;
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+/// Hard cap on the requestable grid size. The paper's largest runs are
+/// 256^3; 512^3 leaves headroom. Without this bound, a typo'd `"n": 5000`
+/// would allocate n^3 buffers in the worker (hundreds of GB) before the
+/// artifact lookup could reject the size — aborting the daemon, not just
+/// failing the job.
+pub const MAX_GRID_N: usize = 512;
+
+/// Hard cap on requestable grid-continuation levels: 512 -> 16 is six
+/// factor-2 descents, so deeper requests are always typos.
+pub const MAX_MULTIRES_LEVELS: usize = 6;
+
+/// Dispatch priority. Higher priorities jump the queue (they do not kill
+/// running solves): the paper's emergency clinical scan is served before
+/// queued batch research jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Research / population-study batch work (default).
+    Batch = 0,
+    /// Interactive clinical sessions.
+    Urgent = 1,
+    /// Emergency scans: always admitted, dispatched first.
+    Emergency = 2,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Urgent => "urgent",
+            Priority::Emergency => "emergency",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "batch" => Ok(Priority::Batch),
+            "urgent" => Ok(Priority::Urgent),
+            "emergency" => Ok(Priority::Emergency),
+            other => Err(Error::wire(
+                ErrorCode::BadRequest,
+                format!("unknown priority '{other}'"),
+            )),
+        }
+    }
+}
+
+/// Where a job's image pair comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobSource {
+    /// The daemon synthesizes a NIREP-analog pair from `subject` — the
+    /// status quo default, exactly like the CLI `register`/`batch` paths.
+    Synthetic,
+    /// Template (`m0`) and reference (`m1`) volumes previously shipped via
+    /// the `upload` verb, referenced by content id. Resolved against the
+    /// daemon's store at admission time.
+    Uploaded { m0: String, m1: String },
+}
+
+/// The canonical job request: a synthetic NIREP-analog subject *or* an
+/// uploaded volume pair, at a given grid size and kernel variant, plus
+/// every solver knob the three request surfaces expose. Optional fields
+/// default through [`RegParams::default`] inside [`JobRequest::validate`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRequest {
+    pub subject: String,
+    pub n: usize,
+    pub variant: String,
+    /// Image source. Wire field `"source"`: absent = synthetic (pre-data-
+    /// plane clients keep working), `{"m0":"<id>","m1":"<id>"}` = uploaded.
+    pub source: JobSource,
+    /// Solver precision policy; `mixed` runs the PCG Hessian matvecs
+    /// through the reduced-precision artifacts. Wire field `"precision"`.
+    pub precision: Precision,
+    /// Grid-continuation levels. Wire field `"multires"`; absent = single
+    /// grid. `Some(k >= 2)` runs `solve_multires` coarse-to-fine.
+    pub multires: Option<usize>,
+    pub priority: Priority,
+    pub max_iter: Option<usize>,
+    pub max_krylov: Option<usize>,
+    pub beta: Option<f64>,
+    pub gamma: Option<f64>,
+    pub gtol: Option<f64>,
+    pub continuation: Option<bool>,
+    pub incompressible: Option<bool>,
+    pub verbose: Option<bool>,
+}
+
+impl Default for JobRequest {
+    fn default() -> Self {
+        JobRequest {
+            subject: "na02".into(),
+            n: 16,
+            variant: "opt-fd8-cubic".into(),
+            source: JobSource::Synthetic,
+            precision: Precision::Full,
+            multires: None,
+            priority: Priority::Batch,
+            max_iter: None,
+            max_krylov: None,
+            beta: None,
+            gamma: None,
+            gtol: None,
+            continuation: None,
+            incompressible: None,
+            verbose: None,
+        }
+    }
+}
+
+impl JobRequest {
+    /// Display name used in job records and the journal. Mixed-precision
+    /// jobs carry a `+mixed` suffix and multires jobs a `+mr<levels>`
+    /// suffix so status tables and the journal show the policy at a
+    /// glance; uploaded-source jobs show truncated content ids instead of
+    /// a subject.
+    pub fn name(&self) -> String {
+        let subject = match &self.source {
+            JobSource::Synthetic => self.subject.clone(),
+            JobSource::Uploaded { m0, m1 } => {
+                let short = |s: &str| s.chars().take(8).collect::<String>();
+                format!("up:{}+{}", short(m0), short(m1))
+            }
+        };
+        let mut name = format!("{}@{}^3/{}", subject, self.n, self.variant);
+        if self.precision == Precision::Mixed {
+            name.push_str("+mixed");
+        }
+        if let Some(levels) = self.multires.filter(|&l| l > 1) {
+            name.push_str(&format!("+mr{levels}"));
+        }
+        name
+    }
+
+    /// THE validation path: every request surface ends here. Checks the
+    /// job-level ranges (grid size, multires depth, source ids), fills
+    /// solver defaults for absent knobs, and runs the numeric invariants
+    /// ([`RegParams::check`]). Errors are classified `bad_request`.
+    pub fn validate(&self) -> Result<RegParams> {
+        let bad = |msg: String| Err(Error::wire(ErrorCode::BadRequest, msg));
+        if self.n == 0 || self.n > MAX_GRID_N {
+            return bad(format!(
+                "job field 'n' = {} out of range (1..={MAX_GRID_N})",
+                self.n
+            ));
+        }
+        match &self.source {
+            JobSource::Synthetic => {
+                if self.subject.is_empty() {
+                    return bad("job field 'subject' must be non-empty".into());
+                }
+            }
+            JobSource::Uploaded { m0, m1 } => {
+                if m0.is_empty() || m1.is_empty() {
+                    return bad(
+                        "job field 'source' must carry non-empty 'm0' and 'm1' content ids"
+                            .into(),
+                    );
+                }
+            }
+        }
+        // Solver-knob ranges (multires depth, positive iteration caps,
+        // finite positive weights) live in `RegParams::check`, run below —
+        // one copy, shared with every direct `RegParams` consumer.
+        let d = RegParams::default();
+        let p = RegParams {
+            variant: self.variant.clone(),
+            precision: self.precision,
+            beta: self.beta.unwrap_or(d.beta),
+            gamma: self.gamma.unwrap_or(d.gamma),
+            gtol: self.gtol.unwrap_or(d.gtol),
+            max_iter: self.max_iter.unwrap_or(d.max_iter),
+            max_krylov: self.max_krylov.unwrap_or(d.max_krylov),
+            continuation: self.continuation.unwrap_or(d.continuation),
+            multires: self.multires.unwrap_or(d.multires),
+            incompressible: self.incompressible.unwrap_or(d.incompressible),
+            verbose: self.verbose.unwrap_or(d.verbose),
+        };
+        p.check()?;
+        Ok(p)
+    }
+
+    /// Wire encoding (the `"job"` object of `submit`). Optional knobs are
+    /// emitted only when set, so a default request renders byte-identical
+    /// to the pre-v2 encoding.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("subject", Json::str(&self.subject)),
+            ("n", Json::num(self.n as f64)),
+            ("variant", Json::str(&self.variant)),
+            ("precision", Json::str(self.precision.as_str())),
+            ("priority", Json::str(self.priority.as_str())),
+        ];
+        if let JobSource::Uploaded { m0, m1 } = &self.source {
+            pairs.push((
+                "source",
+                Json::object([("m0", Json::str(m0)), ("m1", Json::str(m1))]),
+            ));
+        }
+        if let Some(l) = self.multires {
+            pairs.push(("multires", Json::num(l as f64)));
+        }
+        if let Some(m) = self.max_iter {
+            pairs.push(("max_iter", Json::num(m as f64)));
+        }
+        if let Some(m) = self.max_krylov {
+            pairs.push(("max_krylov", Json::num(m as f64)));
+        }
+        if let Some(b) = self.beta {
+            pairs.push(("beta", Json::num(b)));
+        }
+        if let Some(g) = self.gamma {
+            pairs.push(("gamma", Json::num(g)));
+        }
+        if let Some(g) = self.gtol {
+            pairs.push(("gtol", Json::num(g)));
+        }
+        if let Some(c) = self.continuation {
+            pairs.push(("continuation", Json::Bool(c)));
+        }
+        if let Some(i) = self.incompressible {
+            pairs.push(("incompressible", Json::Bool(i)));
+        }
+        if let Some(v) = self.verbose {
+            pairs.push(("verbose", Json::Bool(v)));
+        }
+        Json::object(pairs)
+    }
+
+    /// Type-strict wire decode: absent fields take defaults, but a field
+    /// that is present with the wrong type is an error — a clinical daemon
+    /// must not silently run a default job because `"n": "32"` was a
+    /// string. Range checks happen in [`validate`](JobRequest::validate)
+    /// (called at daemon admission), not here.
+    pub fn from_json(j: &Json) -> Result<JobRequest> {
+        if j.as_obj().is_none() {
+            return Err(Error::wire(ErrorCode::BadRequest, "'job' must be an object"));
+        }
+        fn field<'a, T>(
+            j: &'a Json,
+            key: &str,
+            conv: impl Fn(&'a Json) -> Option<T>,
+            what: &str,
+        ) -> Result<Option<T>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => conv(v).map(Some).ok_or_else(|| {
+                    Error::wire(
+                        ErrorCode::BadRequest,
+                        format!("job field '{key}' must be {what}"),
+                    )
+                }),
+            }
+        }
+        let d = JobRequest::default();
+        let n_explicit = field(j, "n", Json::as_index, "a non-negative integer")?;
+        // Absent source = synthetic (pre-data-plane clients keep working).
+        // An uploaded source must name both volumes and pin `n` explicitly
+        // so the daemon can validate content shapes at admission time.
+        let source = match j.get("source") {
+            None => JobSource::Synthetic,
+            Some(s) => {
+                // Non-empty enforced at decode (not just validate) so the
+                // v1 error bytes for this path stay identical to the
+                // pre-v2 decoder's.
+                let id_of = |k: &str| -> Result<String> {
+                    s.get(k)
+                        .and_then(Json::as_str)
+                        .filter(|v| !v.is_empty())
+                        .map(str::to_string)
+                        .ok_or_else(|| {
+                            Error::wire(
+                                ErrorCode::BadRequest,
+                                format!("job field 'source' must carry a non-empty string '{k}'"),
+                            )
+                        })
+                };
+                if n_explicit.is_none() {
+                    return Err(Error::wire(
+                        ErrorCode::BadRequest,
+                        "jobs with an uploaded source must specify 'n' explicitly",
+                    ));
+                }
+                JobSource::Uploaded { m0: id_of("m0")?, m1: id_of("m1")? }
+            }
+        };
+        Ok(JobRequest {
+            subject: field(j, "subject", Json::as_str, "a string")?
+                .map(str::to_string)
+                .unwrap_or(d.subject),
+            n: n_explicit.map(|x| x as usize).unwrap_or(d.n),
+            variant: field(j, "variant", Json::as_str, "a string")?
+                .map(str::to_string)
+                .unwrap_or(d.variant),
+            source,
+            multires: field(j, "multires", Json::as_index, "a non-negative integer")?
+                .map(|x| x as usize),
+            // Absent precision defaults to full (pre-precision clients keep
+            // working); a present but unknown value is an error.
+            precision: match field(j, "precision", Json::as_str, "a string")? {
+                Some(s) => Precision::parse(s).map_err(|_| {
+                    Error::wire(ErrorCode::BadRequest, format!("unknown job precision '{s}'"))
+                })?,
+                None => d.precision,
+            },
+            priority: match field(j, "priority", Json::as_str, "a string")? {
+                Some(s) => Priority::parse(s)?,
+                None => d.priority,
+            },
+            max_iter: field(j, "max_iter", Json::as_index, "a non-negative integer")?
+                .map(|x| x as usize),
+            max_krylov: field(j, "max_krylov", Json::as_index, "a non-negative integer")?
+                .map(|x| x as usize),
+            beta: field(j, "beta", Json::as_f64, "a number")?,
+            gamma: field(j, "gamma", Json::as_f64, "a number")?,
+            gtol: field(j, "gtol", Json::as_f64, "a number")?,
+            continuation: field(j, "continuation", Json::as_bool, "a boolean")?,
+            incompressible: field(j, "incompressible", Json::as_bool, "a boolean")?,
+            verbose: field(j, "verbose", Json::as_bool, "a boolean")?,
+        })
+    }
+
+    /// CLI decode: an optional `--config` file forms the base, explicit
+    /// flags override it. Shared verbatim by the `register`, `batch` and
+    /// `submit` subcommands so the flag surface cannot drift from the
+    /// wire/config surfaces.
+    pub fn from_args(args: &Args) -> Result<JobRequest> {
+        let mut req = match args.get("config") {
+            Some(path) if !path.is_empty() => {
+                Config::load(std::path::Path::new(path))?.job_request()?
+            }
+            _ => JobRequest::default(),
+        };
+        if let Some(v) = args.get("subject") {
+            req.subject = v.to_string();
+        }
+        req.n = args.get_usize("n", req.n)?;
+        if let Some(v) = args.get("variant") {
+            req.variant = v.to_string();
+        }
+        if let Some(v) = args.get("precision") {
+            req.precision = Precision::parse(v)?;
+        }
+        let (m0, m1) = (args.get_or("m0", ""), args.get_or("m1", ""));
+        match (m0.is_empty(), m1.is_empty()) {
+            (true, true) => {}
+            (false, false) => {
+                // Mirror the wire decoder: an uploaded source needs an
+                // explicit grid size (a default n cannot be shape-checked
+                // against store contents).
+                if args.get("n").is_none() {
+                    return Err(Error::wire(
+                        ErrorCode::BadRequest,
+                        "jobs with an uploaded source must specify 'n' explicitly",
+                    ));
+                }
+                req.source = JobSource::Uploaded { m0, m1 };
+            }
+            _ => {
+                return Err(Error::wire(
+                    ErrorCode::BadRequest,
+                    "submit needs both --m0 and --m1 content ids (or neither)",
+                ))
+            }
+        }
+        if args.get("multires").is_some() {
+            req.multires = Some(args.get_usize("multires", 1)?);
+        }
+        if let Some(v) = args.get("priority") {
+            req.priority = Priority::parse(v)?;
+        }
+        if args.get("max-iter").is_some() {
+            req.max_iter = Some(args.get_usize("max-iter", 0)?);
+        }
+        if args.get("beta").is_some() {
+            req.beta = Some(args.get_f64("beta", 0.0)?);
+        }
+        if args.get("gamma").is_some() {
+            req.gamma = Some(args.get_f64("gamma", 0.0)?);
+        }
+        if args.get("gtol").is_some() {
+            req.gtol = Some(args.get_f64("gtol", 0.0)?);
+        }
+        if args.flag("no-continuation") {
+            req.continuation = Some(false);
+        }
+        if args.flag("incompressible") {
+            req.incompressible = Some(true);
+        }
+        if args.flag("verbose") {
+            req.verbose = Some(true);
+        }
+        Ok(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::args::{flag, opt, OptSpec};
+
+    fn cli(raw: &[&str]) -> Args {
+        let specs: Vec<OptSpec> = vec![
+            opt("subject", "", "na02"),
+            opt("n", "", "16"),
+            opt("variant", "", "opt-fd8-cubic"),
+            opt("precision", "", "full"),
+            opt("m0", "", ""),
+            opt("m1", "", ""),
+            opt("multires", "", "1"),
+            opt("priority", "", "batch"),
+            opt("max-iter", "", "50"),
+            opt("beta", "", "5e-4"),
+            opt("gamma", "", "1e-4"),
+            opt("gtol", "", "5e-2"),
+            opt("config", "", ""),
+            flag("no-continuation", ""),
+            flag("incompressible", ""),
+            flag("verbose", ""),
+        ];
+        Args::parse(raw.iter().map(|s| s.to_string()).collect::<Vec<_>>(), &specs).unwrap()
+    }
+
+    #[test]
+    fn defaults_and_validate_fill_reg_params() {
+        let req = JobRequest::default();
+        assert_eq!(req.subject, "na02");
+        assert_eq!(req.n, 16);
+        let p = req.validate().unwrap();
+        assert_eq!(p, RegParams::default());
+        let with = JobRequest { max_iter: Some(3), continuation: Some(false), ..req };
+        let p2 = with.validate().unwrap();
+        assert_eq!(p2.max_iter, 3);
+        assert!(!p2.continuation);
+        assert_eq!(p2.beta, 5e-4, "unset knobs keep paper defaults");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_jobs() {
+        let bad_n = JobRequest { n: MAX_GRID_N + 1, ..Default::default() };
+        assert!(bad_n.validate().unwrap_err().to_string().contains("out of range"));
+        assert!(JobRequest { n: 0, ..Default::default() }.validate().is_err());
+        assert!(JobRequest { multires: Some(0), ..Default::default() }.validate().is_err());
+        assert!(JobRequest { multires: Some(7), ..Default::default() }.validate().is_err());
+        assert!(JobRequest { max_iter: Some(0), ..Default::default() }.validate().is_err());
+        assert!(JobRequest { beta: Some(0.0), ..Default::default() }.validate().is_err());
+        assert!(JobRequest { beta: Some(f64::NAN), ..Default::default() }.validate().is_err());
+        assert!(JobRequest { gtol: Some(-1.0), ..Default::default() }.validate().is_err());
+        assert!(JobRequest { subject: "".into(), ..Default::default() }.validate().is_err());
+        let empty_id = JobRequest {
+            source: JobSource::Uploaded { m0: "".into(), m1: "b".into() },
+            ..Default::default()
+        };
+        assert!(empty_id.validate().is_err());
+        // Every validate failure is a structured bad_request.
+        assert_eq!(bad_n.validate().unwrap_err().code(), ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn wire_decode_is_type_strict_not_range_strict() {
+        // Types are enforced at decode...
+        assert!(JobRequest::from_json(&Json::parse(r#"{"n":"32"}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse(r#"{"max_iter":2.5}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse(r#"{"multires":"3"}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse(r#"{"precision":"half"}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse(r#"{"priority":"asap"}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse("5").unwrap()).is_err());
+        // ... ranges at validate (the single path shared by all surfaces).
+        let decoded = JobRequest::from_json(&Json::parse(r#"{"n":5000}"#).unwrap()).unwrap();
+        assert!(decoded.validate().is_err());
+        // Uploaded sources must pin n at decode (a wire-encoding rule: the
+        // default n cannot be shape-checked against store contents).
+        assert!(JobRequest::from_json(
+            &Json::parse(r#"{"source":{"m0":"a","m1":"b"}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip_including_v2_knobs() {
+        let req = JobRequest {
+            subject: "na03".into(),
+            n: 32,
+            variant: "opt-fd8-linear".into(),
+            precision: Precision::Mixed,
+            multires: Some(3),
+            priority: Priority::Emergency,
+            max_iter: Some(7),
+            max_krylov: Some(120),
+            beta: Some(1e-3),
+            gamma: Some(2e-4),
+            gtol: Some(1e-1),
+            continuation: Some(false),
+            incompressible: Some(true),
+            verbose: Some(false),
+            ..Default::default()
+        };
+        assert_eq!(JobRequest::from_json(&req.to_json()).unwrap(), req);
+        // Optional knobs stay off the wire when unset (v1 byte-compat).
+        let line = JobRequest::default().to_json().render();
+        for absent in ["max_krylov", "gamma", "incompressible", "verbose", "multires"] {
+            assert!(!line.contains(absent), "{absent} leaked into {line}");
+        }
+    }
+
+    #[test]
+    fn name_shows_policy_and_source() {
+        let req = JobRequest {
+            n: 32,
+            source: JobSource::Uploaded { m0: "cafe01".into(), m1: "beef02".into() },
+            multires: Some(3),
+            ..Default::default()
+        };
+        assert_eq!(req.name(), "up:cafe01+beef02@32^3/opt-fd8-cubic+mr3");
+        let mixed = JobRequest { precision: Precision::Mixed, ..Default::default() };
+        assert_eq!(mixed.name(), "na02@16^3/opt-fd8-cubic+mixed");
+        let mr1 = JobRequest { multires: Some(1), ..Default::default() };
+        assert!(!mr1.name().contains("mr"), "{}", mr1.name());
+    }
+
+    /// The acceptance contract: wire, config and CLI all funnel through
+    /// `validate()` — equivalent inputs produce identical `RegParams`,
+    /// invalid inputs are rejected with identical errors.
+    #[test]
+    fn three_surfaces_share_one_validation_path() {
+        let wire = JobRequest::from_json(
+            &Json::parse(
+                r#"{"subject":"na03","n":32,"variant":"opt-fd8-linear","precision":"mixed",
+                    "multires":3,"beta":0.001,"max_iter":7,"continuation":false}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let cfg = Config::parse(
+            "variant = opt-fd8-linear\nprecision = mixed\nmultires = 3\n\
+             beta = 0.001\nmax_iter = 7\ncontinuation = false\n",
+        )
+        .unwrap()
+        .job_request()
+        .unwrap();
+        let cli_req = JobRequest::from_args(&cli(&[
+            "--subject",
+            "na03",
+            "--n",
+            "32",
+            "--variant",
+            "opt-fd8-linear",
+            "--precision",
+            "mixed",
+            "--multires",
+            "3",
+            "--beta",
+            "0.001",
+            "--max-iter",
+            "7",
+            "--no-continuation",
+        ]))
+        .unwrap();
+        let pw = wire.validate().unwrap();
+        let pc = cfg.validate().unwrap();
+        let pa = cli_req.validate().unwrap();
+        assert_eq!(pw, pc, "wire and config must materialize identical params");
+        assert_eq!(pw, pa, "wire and CLI must materialize identical params");
+
+        // Identical rejection: an out-of-range multires fails with the
+        // same message on every surface, because it is the same check.
+        let e_wire = JobRequest::from_json(&Json::parse(r#"{"multires":7}"#).unwrap())
+            .unwrap()
+            .validate()
+            .unwrap_err();
+        let e_cfg = Config::parse("multires = 7\n").unwrap().reg_params().unwrap_err();
+        let e_cli = JobRequest::from_args(&cli(&["--multires", "7"]))
+            .unwrap()
+            .validate()
+            .unwrap_err();
+        assert_eq!(e_wire.to_string(), e_cfg.to_string());
+        assert_eq!(e_wire.to_string(), e_cli.to_string());
+        assert_eq!(e_wire.code(), ErrorCode::BadRequest);
+
+        // Unknown precision rejects on all three surfaces at decode.
+        assert!(JobRequest::from_json(&Json::parse(r#"{"precision":"fp8"}"#).unwrap()).is_err());
+        assert!(Config::parse("precision = fp8\n").unwrap().job_request().is_err());
+        assert!(JobRequest::from_args(&cli(&["--precision", "fp8"])).is_err());
+    }
+
+    #[test]
+    fn cli_flags_build_sources_and_reject_half_pairs() {
+        let req = JobRequest::from_args(&cli(&["--m0", "aa", "--m1", "bb", "--n", "8"])).unwrap();
+        assert_eq!(req.source, JobSource::Uploaded { m0: "aa".into(), m1: "bb".into() });
+        assert_eq!(req.n, 8);
+        let err = JobRequest::from_args(&cli(&["--m0", "aa"])).unwrap_err();
+        assert!(err.to_string().contains("both --m0 and --m1"), "{err}");
+        assert_eq!(err.code(), ErrorCode::BadRequest);
+        // Like the wire surface, an uploaded source must pin n explicitly
+        // (the default 16 cannot be shape-checked against the store).
+        let err = JobRequest::from_args(&cli(&["--m0", "aa", "--m1", "bb"])).unwrap_err();
+        assert!(err.to_string().contains("specify 'n' explicitly"), "{err}");
+    }
+}

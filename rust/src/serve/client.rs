@@ -1,18 +1,34 @@
 //! Typed client for the registration daemon's NDJSON wire protocol.
 //!
-//! One TCP connection, synchronous request/response: write one line, read
-//! one line. Used by the `submit`/`status`/`shutdown` CLI subcommands and
-//! by `examples/clinical_batch.rs` when pointed at a live daemon.
+//! One TCP connection. By default the client speaks v1 (write one line,
+//! read one line); [`Client::hello`] negotiates protocol v2, after which
+//! every request carries a client-chosen `seq` that the daemon echoes in
+//! its response (verified here — a desynchronized connection fails loudly
+//! instead of mis-pairing answers), errors surface their structured
+//! [`ErrorCode`] via [`Error::Wire`], and [`Client::watch`] subscribes the
+//! connection to server-pushed job events read with
+//! [`Client::next_event`]. Used by the CLI subcommands and by
+//! `examples/clinical_batch.rs` when pointed at a live daemon.
+//!
+//! Timeouts: [`Client::connect_with_timeout`] bounds connect plus every
+//! read/write, so a hung daemon fails the call with an I/O error instead
+//! of wedging the process forever. A client that hits a read timeout
+//! should drop the connection (a partially-read line cannot be resumed).
 
+use std::collections::VecDeque;
 use std::io::{BufReader, Write};
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::serve::proto::{read_line_bounded, JobSpec, Request, Response, MAX_LINE_BYTES};
+use crate::serve::proto::{
+    read_line_bounded, upload_line, EventMsg, JobSpec, Request, Response, Verdict,
+    MAX_LINE_BYTES, PROTO_VERSION,
+};
 use crate::serve::scheduler::{JobId, JobView, ServeStats};
 use crate::serve::store::UploadReceipt;
 use crate::util::bench::Table;
+use crate::util::json::Json;
 
 /// Render job views as an aligned table (shared by the CLI `status`
 /// subcommand and the daemon-mode example).
@@ -41,28 +57,163 @@ pub fn job_table(jobs: &[JobView]) -> Table {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Negotiated protocol level: 1 until `hello` succeeds.
+    proto: u64,
+    /// Monotonic request-correlation counter (v2 sessions).
+    seq: u64,
+    /// Seq the last request carried (what a `watch` stream echoes).
+    last_seq: Option<u64>,
+    /// Watch events that arrived interleaved with a response.
+    pending_events: VecDeque<EventMsg>,
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. "127.0.0.1:7464").
+    fn from_stream(stream: TcpStream) -> Result<Client> {
+        let read_half = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(read_half),
+            writer: stream,
+            proto: 1,
+            seq: 0,
+            last_seq: None,
+            pending_events: VecDeque::new(),
+        })
+    }
+
+    /// Connect to `addr` (e.g. "127.0.0.1:7464") with no timeouts: calls
+    /// block as long as the daemon does (in-process tests, trusted local
+    /// daemons). Interactive callers should prefer
+    /// [`connect_with_timeout`](Client::connect_with_timeout).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::Serve(format!("cannot reach daemon at {addr}: {e}")))?;
-        let read_half = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(read_half), writer: stream })
+        Self::from_stream(stream)
+    }
+
+    /// Connect with `timeout` bounding the TCP connect and every
+    /// subsequent read/write, so a hung or wedged daemon fails this
+    /// client's calls instead of blocking forever. `timeout` must be
+    /// non-zero.
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        if timeout.is_zero() {
+            return Err(Error::Config("client timeout must be non-zero".into()));
+        }
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Serve(format!("cannot resolve daemon address {addr}: {e}")))?
+            .collect();
+        let mut last: Option<std::io::Error> = None;
+        for a in &addrs {
+            match TcpStream::connect_timeout(a, timeout) {
+                Ok(stream) => {
+                    stream.set_read_timeout(Some(timeout))?;
+                    stream.set_write_timeout(Some(timeout))?;
+                    return Self::from_stream(stream);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::Serve(format!(
+            "cannot reach daemon at {addr}: {}",
+            last.map(|e| e.to_string()).unwrap_or_else(|| "address resolved to nothing".into())
+        )))
+    }
+
+    /// Negotiated protocol level (1 until [`hello`](Client::hello)).
+    pub fn proto(&self) -> u64 {
+        self.proto
+    }
+
+    /// Adjust the socket I/O timeout after connect (`None` = block
+    /// forever). The dup'd read half shares the underlying socket, so
+    /// this governs both directions. `claire watch` clears the timeout
+    /// once subscribed: an idle event stream is not a transport failure.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    fn bump_seq(&mut self) -> Option<u64> {
+        if self.proto >= 2 {
+            self.seq += 1;
+            Some(self.seq)
+        } else {
+            None
+        }
+    }
+
+    /// Write one request line, read lines until this request's response
+    /// arrives (buffering any watch events that interleave), verify the
+    /// `seq` echo, and surface protocol errors as [`Error::Wire`].
+    fn exchange(&mut self, line: &str, seq: Option<u64>) -> Result<Response> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        loop {
+            let Some(line) = read_line_bounded(&mut self.reader, MAX_LINE_BYTES)? else {
+                return Err(Error::Serve("daemon closed the connection".into()));
+            };
+            let j = Json::parse(line.trim())?;
+            if EventMsg::is_event(&j) {
+                self.pending_events.push_back(EventMsg::from_json(&j)?);
+                continue;
+            }
+            if let Some(expect) = seq {
+                let got = j.get("seq").and_then(Json::as_index);
+                // An *error* without any seq is legitimate: the daemon
+                // omits it when the line failed before the envelope could
+                // be read (e.g. the line-size cap). Surface that error
+                // rather than masking it as a desynchronized connection.
+                let seqless_error =
+                    got.is_none() && j.get("ok").and_then(Json::as_bool) == Some(false);
+                if got != Some(expect) && !seqless_error {
+                    return Err(Error::Serve(format!(
+                        "response correlation mismatch: sent seq {expect}, got {got:?}"
+                    )));
+                }
+            }
+            return match Response::from_json(&j)? {
+                Response::Error { code, msg, .. } => Err(Error::Wire { code, msg }),
+                other => Ok(other),
+            };
+        }
     }
 
     /// One request/response exchange.
     fn call(&mut self, req: &Request) -> Result<Response> {
-        self.writer.write_all(req.to_line().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
-        let Some(line) = read_line_bounded(&mut self.reader, MAX_LINE_BYTES)? else {
-            return Err(Error::Serve("daemon closed the connection".into()));
-        };
-        match Response::parse(&line)? {
-            Response::Error(msg) => Err(Error::Serve(msg)),
-            other => Ok(other),
+        let seq = self.bump_seq();
+        self.last_seq = seq;
+        self.exchange(&req.to_line_with_seq(seq), seq)
+    }
+
+    fn unexpected(what: &str, got: Response) -> Error {
+        Error::Serve(format!("unexpected {what} response: {got:?}"))
+    }
+
+    /// Negotiate protocol v2. On success the session is upgraded (every
+    /// later call carries and verifies `seq`) and the daemon's advertised
+    /// feature tags are returned.
+    pub fn hello(&mut self) -> Result<Vec<String>> {
+        match self.call(&Request::Hello { proto: PROTO_VERSION })? {
+            Response::Hello { proto, features } => {
+                if proto >= 2 {
+                    self.proto = 2;
+                }
+                Ok(features)
+            }
+            other => Err(Self::unexpected("hello", other)),
+        }
+    }
+
+    /// Try to negotiate v2, quietly staying on v1 against a pre-v2 daemon
+    /// (which answers `hello` with an unknown-command error). Returns the
+    /// protocol level the session ended up on.
+    pub fn negotiate(&mut self) -> Result<u64> {
+        match self.hello() {
+            Ok(_) => Ok(self.proto),
+            Err(Error::Wire { msg, .. }) if msg.contains("unknown command") => Ok(1),
+            Err(e) => Err(e),
         }
     }
 
@@ -73,16 +224,20 @@ impl Client {
     /// Ship one volume (n^3 f32 samples) into the daemon's
     /// content-addressed store; returns the receipt whose `id` a
     /// subsequent `submit` references via `JobSource::Uploaded`.
-    /// Re-uploading identical content is cheap (`dedup` flags it).
+    /// Re-uploading identical content is cheap (`dedup` flags it). The
+    /// request line is encoded straight from the borrowed slice — the
+    /// volume is never cloned client-side.
     pub fn upload(&mut self, n: usize, data: &[f32]) -> Result<UploadReceipt> {
-        match self.call(&Request::Upload { n, data: data.to_vec() })? {
+        let seq = self.bump_seq();
+        let line = upload_line(n, data, seq);
+        match self.exchange(&line, seq)? {
             Response::Uploaded { id, n, dedup } => Ok(UploadReceipt {
                 id,
                 n,
                 bytes: (n * n * n * 4) as u64,
                 dedup,
             }),
-            other => Err(Error::Serve(format!("unexpected upload response: {other:?}"))),
+            other => Err(Self::unexpected("upload", other)),
         }
     }
 
@@ -90,14 +245,62 @@ impl Client {
     pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
         match self.call(&Request::Submit(spec.clone()))? {
             Response::Submitted { id } => Ok(id),
-            other => Err(Error::Serve(format!("unexpected submit response: {other:?}"))),
+            other => Err(Self::unexpected("submit", other)),
         }
+    }
+
+    /// Submit many jobs on one line (v2): returns one admission verdict
+    /// per job, in order. Requires a negotiated v2 session.
+    pub fn submit_batch(&mut self, specs: &[JobSpec]) -> Result<Vec<Verdict>> {
+        if self.proto < 2 {
+            return Err(Error::Serve(
+                "submit_batch requires a v2 session (call hello first)".into(),
+            ));
+        }
+        match self.call(&Request::SubmitBatch(specs.to_vec()))? {
+            // The protocol promises one verdict per job, in order; enforce
+            // it here so no caller can silently treat a truncated reply as
+            // all-admitted.
+            Response::Batch(vs) if vs.len() == specs.len() => Ok(vs),
+            Response::Batch(vs) => Err(Error::Serve(format!(
+                "submit_batch returned {} verdicts for {} jobs",
+                vs.len(),
+                specs.len()
+            ))),
+            other => Err(Self::unexpected("submit_batch", other)),
+        }
+    }
+
+    /// Subscribe this connection to server-pushed job events (v2). Events
+    /// are read with [`next_event`](Client::next_event); each echoes the
+    /// returned subscription `seq`. Requires a negotiated v2 session.
+    pub fn watch(&mut self) -> Result<Option<u64>> {
+        if self.proto < 2 {
+            return Err(Error::Serve("watch requires a v2 session (call hello first)".into()));
+        }
+        match self.call(&Request::Watch)? {
+            Response::Ok => Ok(self.last_seq),
+            other => Err(Self::unexpected("watch", other)),
+        }
+    }
+
+    /// Next server-pushed event on this connection: events buffered while
+    /// waiting for responses first, then a blocking read (bounded by the
+    /// socket read timeout, when one was configured at connect).
+    pub fn next_event(&mut self) -> Result<EventMsg> {
+        if let Some(ev) = self.pending_events.pop_front() {
+            return Ok(ev);
+        }
+        let Some(line) = read_line_bounded(&mut self.reader, MAX_LINE_BYTES)? else {
+            return Err(Error::Serve("daemon closed the connection".into()));
+        };
+        EventMsg::parse(&line)
     }
 
     pub fn status(&mut self, id: JobId) -> Result<JobView> {
         match self.call(&Request::Status(Some(id)))? {
             Response::Job(v) => Ok(v),
-            other => Err(Error::Serve(format!("unexpected status response: {other:?}"))),
+            other => Err(Self::unexpected("status", other)),
         }
     }
 
@@ -105,7 +308,7 @@ impl Client {
     pub fn jobs(&mut self) -> Result<Vec<JobView>> {
         match self.call(&Request::Status(None))? {
             Response::Jobs(v) => Ok(v),
-            other => Err(Error::Serve(format!("unexpected status response: {other:?}"))),
+            other => Err(Self::unexpected("status", other)),
         }
     }
 
@@ -116,7 +319,7 @@ impl Client {
     pub fn stats(&mut self) -> Result<ServeStats> {
         match self.call(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
-            other => Err(Error::Serve(format!("unexpected stats response: {other:?}"))),
+            other => Err(Self::unexpected("stats", other)),
         }
     }
 

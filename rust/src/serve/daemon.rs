@@ -8,6 +8,20 @@
 //! from `proto.rs`. One thread per connection; connections are cheap and
 //! clients are few (CLI, batch drivers, monitoring).
 //!
+//! ## Protocol sessions
+//!
+//! Every connection starts in **v1** mode: strictly synchronous one-line
+//! request / one-line response, opaque error strings — byte-for-byte what
+//! the pre-v2 daemon spoke, so old clients never notice the upgrade. A
+//! `hello` request negotiates **v2**: responses then echo the request's
+//! `seq`, errors carry `code`/`retryable`, `submit_batch` admits many
+//! jobs per line, and `watch` subscribes the connection to server-pushed
+//! job events. Watch events are written by a forwarder thread that shares
+//! the connection's write half behind a mutex with the request loop, so
+//! pushes interleave safely with responses; a subscriber that stops
+//! reading is dropped with a terminal `lagged` event (bounded queues in
+//! the scheduler's bus — workers never block on a slow watcher).
+//!
 //! Lifecycle: `Daemon::start` binds, spawns workers + accept loop, and
 //! returns a handle. Shutdown arrives either over the wire
 //! (`{"cmd":"shutdown"}`) or via `DaemonHandle::shutdown`; `drain` finishes
@@ -18,17 +32,18 @@
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::error::{Error, Result};
+use crate::error::{Error, ErrorCode, Result};
 use crate::serve::journal::Journal;
 use crate::serve::proto::{
-    read_request_line_bounded, JobSource, Request, Response, MAX_LINE_BYTES,
-    MAX_UPLOAD_LINE_BYTES,
+    read_request_line_bounded, EventMsg, JobSource, Request, Response, Verdict,
+    MAX_LINE_BYTES, MAX_UPLOAD_LINE_BYTES, PROTO_V2_FEATURES, PROTO_VERSION,
 };
 use crate::serve::scheduler::{
-    worker_loop, Executor, FailingExecutor, JobPayload, PjrtExecutor, Scheduler,
+    worker_loop, BusMsg, Executor, FailingExecutor, JobPayload, PjrtExecutor, Scheduler,
+    WatchEvent, WatchHandle,
 };
 use crate::serve::store::VolumeStore;
 
@@ -192,9 +207,53 @@ impl Daemon {
     }
 }
 
+/// Write one protocol line (response or event) to a shared connection
+/// writer. Returns false when the peer is gone.
+fn write_line(writer: &Mutex<TcpStream>, line: &str) -> bool {
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes()).is_ok()
+        && w.write_all(b"\n").is_ok()
+        && w.flush().is_ok()
+}
+
+/// Forward scheduler bus messages to a watching connection until the
+/// stream ends (unsubscribed, lagged, or the peer stops accepting
+/// writes). Runs on its own thread; shares the connection's write half
+/// with the request loop behind the mutex.
+fn forward_events(
+    handle: WatchHandle,
+    writer: Arc<Mutex<TcpStream>>,
+    sched: Scheduler,
+    seq: Option<u64>,
+) {
+    while let Some(msg) = handle.recv() {
+        let line = match msg {
+            BusMsg::Event(ev) => event_to_msg(ev, seq).to_line(),
+            BusMsg::Lagged => EventMsg::Lagged { seq }.to_line(),
+        };
+        if !write_line(&writer, &line) {
+            break;
+        }
+    }
+    // Idempotent: the request loop may already have unsubscribed us.
+    sched.unwatch(handle.id());
+}
+
+fn event_to_msg(ev: WatchEvent, seq: Option<u64>) -> EventMsg {
+    EventMsg::Job {
+        seq,
+        id: ev.id,
+        name: ev.name,
+        state: ev.state,
+        wall_s: ev.wall_s,
+        error: ev.error,
+    }
+}
+
 /// Serve one client connection: one NDJSON request per line, one NDJSON
-/// response per line, until EOF or a shutdown request. Requests are read
-/// under a two-tier cap: `MAX_LINE_BYTES` normally, escalating to the
+/// response per line (v2 sessions additionally receive pushed watch
+/// events), until EOF or a shutdown request. Requests are read under a
+/// two-tier cap: `MAX_LINE_BYTES` normally, escalating to the
 /// upload-sized bound only for lines that look like `upload` requests —
 /// so a garbage flood cannot pin the large buffer per connection.
 fn handle_connection(
@@ -205,7 +264,19 @@ fn handle_connection(
 ) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
-    let mut writer = stream;
+    let writer = Arc::new(Mutex::new(stream));
+    // Session state: v1 until a `hello` negotiates v2; at most one watch
+    // subscription per connection.
+    let mut v2 = false;
+    let mut watch_sub: Option<u64> = None;
+    // Encode a response for the session's protocol level.
+    let render = |resp: &Response, v2: bool, seq: Option<u64>| -> String {
+        if v2 {
+            resp.to_line_v2(seq)
+        } else {
+            resp.to_line()
+        }
+    };
     loop {
         let line = match read_request_line_bounded(
             &mut reader,
@@ -213,30 +284,132 @@ fn handle_connection(
             MAX_UPLOAD_LINE_BYTES,
         ) {
             Ok(Some(l)) => l,
-            Ok(None) => return,
+            Ok(None) => break,
             Err(e) => {
                 // Oversized or broken line: answer once, drop the peer.
-                let resp = Response::Error(format!("bad request line: {e}"));
-                let _ = writer.write_all(resp.to_line().as_bytes());
-                let _ = writer.write_all(b"\n");
-                return;
+                let resp = Response::Error {
+                    code: ErrorCode::BadRequest,
+                    retryable: false,
+                    msg: format!("bad request line: {e}"),
+                };
+                let _ = write_line(&writer, &render(&resp, v2, None));
+                break;
             }
         };
         if line.trim().is_empty() {
             continue;
         }
-        let (response, shutdown) = dispatch(&line, &sched, &store);
-        if writer.write_all(response.to_line().as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-            || writer.flush().is_err()
-        {
-            return;
+        let (raw_seq, parsed) = Request::parse_line(&line);
+        let req = match parsed {
+            Ok(r) => r,
+            Err(e) => {
+                // Malformed lines are always classified bad_request, and
+                // never panic or drop the connection. (v1 sessions render
+                // the opaque form and ignore `seq` entirely.)
+                let resp = Response::Error {
+                    code: ErrorCode::BadRequest,
+                    retryable: false,
+                    msg: e.to_string(),
+                };
+                let seq = if v2 { raw_seq } else { None };
+                if !write_line(&writer, &render(&resp, v2, seq)) {
+                    break;
+                }
+                continue;
+            }
+        };
+        let (response, shutdown) = match req {
+            Request::Hello { proto } => {
+                // Negotiate min(client, server): a client announcing any
+                // level >= 2 gets a v2 session at the highest level this
+                // daemon speaks — a future PROTO_VERSION bump must not
+                // downgrade already-shipped v2 clients to v1.
+                if proto >= 2 {
+                    v2 = true;
+                    (
+                        Response::Hello {
+                            proto: proto.min(PROTO_VERSION),
+                            features: PROTO_V2_FEATURES.iter().map(|s| s.to_string()).collect(),
+                        },
+                        None,
+                    )
+                } else {
+                    // The client only speaks v1: the response names the
+                    // level the session will use, so honor it — including
+                    // downgrading an already-negotiated v2 session (and
+                    // releasing its watch, which v1 cannot consume).
+                    v2 = false;
+                    if let Some(id) = watch_sub.take() {
+                        sched.unwatch(id);
+                    }
+                    (Response::Hello { proto: 1, features: Vec::new() }, None)
+                }
+            }
+            // v2-only verbs keep exact v1 semantics (unknown command) on
+            // un-negotiated connections.
+            Request::Watch if !v2 => (
+                Response::from_error(&Error::wire(
+                    ErrorCode::BadRequest,
+                    "unknown command 'watch'",
+                )),
+                None,
+            ),
+            Request::SubmitBatch(_) if !v2 => (
+                Response::from_error(&Error::wire(
+                    ErrorCode::BadRequest,
+                    "unknown command 'submit_batch'",
+                )),
+                None,
+            ),
+            Request::Watch => {
+                // A dead subscription (lagged out, or its forwarder hit a
+                // write error) no longer counts: the documented recovery
+                // from a `lagged` event is to re-issue `watch`.
+                if watch_sub.is_some_and(|id| sched.is_watching(id)) {
+                    (
+                        Response::from_error(&Error::wire(
+                            ErrorCode::InvalidState,
+                            "this connection is already watching",
+                        )),
+                        None,
+                    )
+                } else {
+                    let handle = sched.watch();
+                    watch_sub = Some(handle.id());
+                    let fw_writer = writer.clone();
+                    let fw_sched = sched.clone();
+                    std::thread::spawn(move || {
+                        forward_events(handle, fw_writer, fw_sched, raw_seq)
+                    });
+                    (Response::Ok, None)
+                }
+            }
+            Request::SubmitBatch(specs) => {
+                let verdicts = specs
+                    .into_iter()
+                    .map(|spec| Verdict::from_result(admit(spec, &sched, &store)))
+                    .collect();
+                (Response::Batch(verdicts), None)
+            }
+            other => dispatch(other, &sched, &store),
+        };
+        // The gate uses the *post-dispatch* session level, so a `hello`
+        // that just upgraded the connection echoes its own `seq`; v1
+        // sessions ignore `seq` entirely (exact v1 bytes).
+        let seq = if v2 { raw_seq } else { None };
+        if !write_line(&writer, &render(&response, v2, seq)) {
+            break;
         }
         if let Some(drain) = shutdown {
             sched.shutdown(drain);
             wake_accept(addr);
-            return;
+            break;
         }
+    }
+    // EOF-driven cleanup: closing the subscription wakes the forwarder,
+    // which exits on its next recv.
+    if let Some(id) = watch_sub {
+        sched.unwatch(id);
     }
 }
 
@@ -253,53 +426,76 @@ fn resolve_submit(
         JobSource::Uploaded { m0, m1 } => {
             let fetch = |id: &str| {
                 store.get(id).ok_or_else(|| {
-                    Error::Serve(format!(
-                        "unknown volume id '{id}' (never uploaded, or evicted — re-upload)"
-                    ))
+                    Error::wire(
+                        ErrorCode::UnknownVolume,
+                        format!(
+                            "unknown volume id '{id}' (never uploaded, or evicted — re-upload)"
+                        ),
+                    )
                 })
             };
             let f0 = fetch(&m0)?;
             let f1 = fetch(&m1)?;
             if f0.n != spec.n || f1.n != spec.n {
-                return Err(Error::Serve(format!(
-                    "job n = {} does not match uploaded volumes (m0 {}^3, m1 {}^3)",
-                    spec.n, f0.n, f1.n
-                )));
+                return Err(Error::wire(
+                    ErrorCode::ShapeMismatch,
+                    format!(
+                        "job n = {} does not match uploaded volumes (m0 {}^3, m1 {}^3)",
+                        spec.n, f0.n, f1.n
+                    ),
+                ));
             }
             Ok(JobPayload::Volumes { spec, m0: f0, m1: f1 })
         }
     }
 }
 
-/// Decode one request line and run it against the scheduler + store.
-/// Returns the response plus `Some(drain)` when the daemon should shut
-/// down.
-fn dispatch(line: &str, sched: &Scheduler, store: &VolumeStore) -> (Response, Option<bool>) {
-    let req = match Request::parse(line) {
-        Ok(r) => r,
-        Err(e) => return (Response::Error(e.to_string()), None),
-    };
+/// Admit one job: validate (the single `JobRequest::validate` path),
+/// resolve its payload against the store, and submit to the scheduler.
+/// Shared by `submit` and `submit_batch`.
+fn admit(
+    spec: crate::serve::proto::JobSpec,
+    sched: &Scheduler,
+    store: &VolumeStore,
+) -> Result<crate::serve::scheduler::JobId> {
+    spec.validate()?;
+    let priority = spec.priority;
+    resolve_submit(spec, store).and_then(|p| sched.submit(priority, p))
+}
+
+/// Run one decoded request against the scheduler + store. Returns the
+/// response plus `Some(drain)` when the daemon should shut down.
+/// (`hello`/`watch`/`submit_batch` are session-level and handled by the
+/// connection loop.)
+fn dispatch(req: Request, sched: &Scheduler, store: &VolumeStore) -> (Response, Option<bool>) {
     match req {
         Request::Ping => (Response::Ok, None),
         Request::Upload { n, data } => match store.put(n, data) {
             Ok(r) => (Response::Uploaded { id: r.id, n: r.n, dedup: r.dedup }, None),
-            Err(e) => (Response::Error(e.to_string()), None),
+            Err(e) => (Response::from_error(&e), None),
         },
-        Request::Submit(spec) => {
-            let priority = spec.priority;
-            match resolve_submit(spec, store).and_then(|p| sched.submit(priority, p)) {
-                Ok(id) => (Response::Submitted { id }, None),
-                Err(e) => (Response::Error(e.to_string()), None),
-            }
-        }
+        Request::Submit(spec) => match admit(spec, sched, store) {
+            Ok(id) => (Response::Submitted { id }, None),
+            Err(e) => (Response::from_error(&e), None),
+        },
         Request::Status(None) => (Response::Jobs(sched.jobs()), None),
         Request::Status(Some(id)) => match sched.status(id) {
             Some(v) => (Response::Job(v), None),
-            None => (Response::Error(format!("no such job {id}")), None),
+            // Built directly (no `serve error: ` prefix): the pre-v2
+            // daemon formatted this one message inline rather than through
+            // `Error::Serve`, and those bytes are the v1 compat surface.
+            None => (
+                Response::Error {
+                    code: ErrorCode::UnknownJob,
+                    retryable: false,
+                    msg: format!("no such job {id}"),
+                },
+                None,
+            ),
         },
         Request::Cancel(id) => match sched.cancel(id) {
             Ok(()) => (Response::Ok, None),
-            Err(e) => (Response::Error(e.to_string()), None),
+            Err(e) => (Response::from_error(&e), None),
         },
         Request::Stats => {
             // The scheduler does not own the store; overlay its counters
@@ -309,6 +505,15 @@ fn dispatch(line: &str, sched: &Scheduler, store: &VolumeStore) -> (Response, Op
             (Response::Stats(s), None)
         }
         Request::Shutdown { drain } => (Response::Ok, Some(drain)),
+        // Session-level verbs never reach here (connection loop handles
+        // them); answering bad_request keeps this total, not a panic.
+        Request::Hello { .. } | Request::Watch | Request::SubmitBatch(_) => (
+            Response::from_error(&Error::wire(
+                ErrorCode::BadRequest,
+                "session verb outside a connection",
+            )),
+            None,
+        ),
     }
 }
 
@@ -475,6 +680,24 @@ mod tests {
         assert_eq!(view.state, JobState::Failed);
         assert!(view.error.unwrap().contains("no artifacts here"));
         client.shutdown(true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_submit_is_rejected_at_admission() {
+        // Range validation moved from wire decode into the single
+        // validate() path — the daemon must still refuse a 5000^3 job
+        // before anything is queued or allocated.
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let err = client.submit(&JobSpec { n: 5000, ..Default::default() }).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = client
+            .submit(&JobSpec { multires: Some(9), ..Default::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert_eq!(client.stats().unwrap().submitted, 0, "nothing queued");
+        client.shutdown(false).unwrap();
         handle.join().unwrap();
     }
 }

@@ -52,9 +52,14 @@ impl Journal {
         &self.path
     }
 
-    /// Append one scheduler event as a JSON line.
+    /// Append one scheduler event as a JSON line. `Started` transitions
+    /// are *not* journaled: running is transient state that is wrong by
+    /// definition after a restart, and skipping it keeps the journal
+    /// format byte-compatible with pre-watch incarnations (watch
+    /// subscribers get the running event from the live bus instead).
     pub fn append(&self, ev: &JobEvent) -> Result<()> {
         let j = match ev {
+            JobEvent::Started { .. } => return Ok(()),
             JobEvent::Submitted { id, name, priority } => Json::object([
                 ("event", Json::str("submitted")),
                 ("id", Json::num(*id as f64)),
@@ -62,7 +67,7 @@ impl Journal {
                 ("priority", Json::str(priority.as_str())),
                 ("unix_s", Json::num(now_unix())),
             ]),
-            JobEvent::Finished { id, name, state, wall_s } => Json::object([
+            JobEvent::Finished { id, name, state, wall_s, .. } => Json::object([
                 (
                     "event",
                     Json::str(if *state == JobState::Done { "done" } else { "failed" }),
@@ -163,6 +168,7 @@ mod tests {
                 name: "na02 \"quoted\"\\n".into(),
                 state: JobState::Done,
                 wall_s: 1.5,
+                error: None,
             })
             .unwrap();
         journal.append(&JobEvent::Cancelled { id: 2, name: "na03".into() }).unwrap();
@@ -172,6 +178,7 @@ mod tests {
                 name: "na10".into(),
                 state: JobState::Failed,
                 wall_s: 0.2,
+                error: None,
             })
             .unwrap();
         let entries = Journal::replay(&p).unwrap();
@@ -221,6 +228,7 @@ mod tests {
                 name: "a".into(),
                 state: JobState::Done,
                 wall_s: 0.1,
+                error: None,
             })
             .unwrap();
         }
@@ -231,6 +239,7 @@ mod tests {
                 name: "b".into(),
                 state: JobState::Done,
                 wall_s: 0.1,
+                error: None,
             })
             .unwrap();
         }

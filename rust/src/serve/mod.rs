@@ -9,8 +9,11 @@
 //! * [`scheduler`] — priority queue with bounded-queue admission control
 //!   and the pluggable [`scheduler::Executor`] execution backend (also the
 //!   engine under `coordinator::BatchService`).
-//! * [`daemon`] — TCP accept loop + worker pool + journal replay.
-//! * [`proto`] — newline-delimited JSON request/response encoding.
+//! * [`daemon`] — TCP accept loop + worker pool + journal replay, with
+//!   per-connection protocol negotiation (`hello` upgrades to v2: `seq`
+//!   correlation, `watch` push events, `submit_batch`).
+//! * [`proto`] — newline-delimited JSON request/response encoding (v1
+//!   byte-compatible; v2 adds structured errors and the event grammar).
 //! * [`store`] — content-addressed volume store (the `upload` data plane).
 //! * [`client`] — typed synchronous client for the protocol.
 //! * [`journal`] — append-only NDJSON job history for restart reporting.
@@ -27,9 +30,11 @@ pub mod store;
 pub use client::Client;
 pub use daemon::{pjrt_factory, Daemon, DaemonConfig, DaemonHandle, ExecutorFactory};
 pub use journal::{Journal, JournalEntry};
-pub use proto::{JobSource, JobSpec, Priority, Request, Response};
+pub use proto::{
+    EventMsg, JobRequest, JobSource, JobSpec, Priority, Request, Response, Verdict,
+};
 pub use scheduler::{
-    worker_loop, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView, PjrtExecutor,
-    Scheduler, ServeStats,
+    worker_loop, BusMsg, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView,
+    PjrtExecutor, Scheduler, ServeStats, WatchEvent, WatchHandle,
 };
 pub use store::{StoreStats, UploadReceipt, VolumeStore};

@@ -1,23 +1,49 @@
 //! Wire protocol for the registration daemon: newline-delimited JSON.
 //!
-//! Every request and every response is one JSON object on one line. The
-//! protocol is deliberately small — six verbs plus ping — and builds on
-//! `util/json.rs` (the offline image has no serde). Responses always carry
-//! an `"ok"` boolean; errors carry `"error"`.
+//! Every request and every response is one JSON object on one line,
+//! built on `util/json.rs` (the offline image has no serde). Responses
+//! always carry an `"ok"` boolean; errors carry `"error"`.
+//!
+//! ## Protocol versions
+//!
+//! Two protocol levels share this grammar:
+//!
+//! * **v1** — strictly synchronous request/response; errors are an opaque
+//!   string. A connection that never sends `hello` speaks exact v1
+//!   semantics, byte-for-byte what the pre-v2 daemon produced.
+//! * **v2** — negotiated by the `hello` verb. Adds client-chosen `seq`
+//!   request correlation (echoed in every response), server-pushed job
+//!   events via `watch`, one-line many-job `submit_batch` with per-job
+//!   admission verdicts, and structured errors (`code` + `retryable`
+//!   from the [`ErrorCode`] registry).
 //!
 //! Requests:
 //! ```text
 //! {"cmd":"ping"}
+//! {"cmd":"hello","proto":2}                      negotiate v2
 //! {"cmd":"upload","n":16,"data":"<base64 LE f32 samples>"}
 //! {"cmd":"submit","job":{"subject":"na02","n":16,"variant":"opt-fd8-cubic",
 //!                        "priority":"emergency","max_iter":50}}
 //! {"cmd":"submit","job":{"n":32,"source":{"m0":"<id>","m1":"<id>"},
 //!                        "multires":3}}
+//! {"cmd":"submit_batch","jobs":[{...},{...}]}    v2 only
+//! {"cmd":"watch"}                                v2 only: push job events
 //! {"cmd":"status"}              all jobs
 //! {"cmd":"status","id":3}       one job
 //! {"cmd":"cancel","id":3}
 //! {"cmd":"stats"}
 //! {"cmd":"shutdown","drain":true}
+//! ```
+//! In a v2 session any request may carry `"seq": <u64>`; the daemon echoes
+//! it in the response (and in every event of a `watch` stream), so a
+//! client may pipeline requests on one connection and correlate answers.
+//!
+//! Watch events (one per `queued → running → done|failed|cancelled`
+//! transition, pushed asynchronously on the watching connection):
+//! ```text
+//! {"event":"job","id":7,"name":"na02@16^3/opt-fd8-cubic","state":"running","seq":4}
+//! {"event":"job","id":7,"name":"...","state":"done","wall_s":1.25,"seq":4}
+//! {"event":"lagged","seq":4}        terminal: subscriber fell behind
 //! ```
 //!
 //! `upload` is the data plane: the volume payload is the `data/io.rs`
@@ -34,13 +60,28 @@
 //! an upload — a payload-first encoding is cut off at the small cap.
 
 use crate::data::io::{f32s_from_le_bytes, f32s_to_le_bytes};
-use crate::error::{Error, Result};
-use crate::precision::Precision;
-use crate::registration::RegParams;
+use crate::error::{Error, ErrorCode, Result};
 use crate::serve::scheduler::{JobId, JobState, JobView, ServeStats};
 use crate::serve::store::StoreStats;
 use crate::util::base64;
 use crate::util::json::Json;
+
+// The job-description surface is canonical in `crate::request`; the wire
+// module re-exports it so protocol users keep one import path. `JobSpec`
+// is the historical wire name for what is now the canonical request type.
+pub use crate::request::{JobRequest, JobSource, Priority, MAX_GRID_N, MAX_MULTIRES_LEVELS};
+pub type JobSpec = JobRequest;
+
+/// Protocol level this daemon speaks when negotiated (`hello`).
+pub const PROTO_VERSION: u64 = 2;
+
+/// Feature tags advertised by `hello` — stable strings, clients gate on
+/// membership rather than the proto number where possible.
+pub const PROTO_V2_FEATURES: [&str; 4] = ["seq", "watch", "submit_batch", "structured_errors"];
+
+/// Hard cap on the job count of one `submit_batch` line (the 4 MiB line
+/// cap bounds it physically; this bounds it semantically).
+pub const MAX_BATCH_JOBS: usize = 1024;
 
 /// Hard cap on one non-upload protocol line, both directions. Requests
 /// are tiny; responses are bounded by the scheduler's record retention.
@@ -62,17 +103,6 @@ pub const MAX_UPLOAD_LINE_BYTES: usize = 96 * 1024 * 1024;
 /// drop. (`MAX_GRID_N` still bounds *submit* specs — in-process stores
 /// fed by embedders are not line-limited.)
 pub const MAX_UPLOAD_GRID_N: usize = 256;
-
-/// Hard cap on the wire-submittable grid size. The paper's largest runs
-/// are 256^3; 512^3 leaves headroom. Without this bound, a typo'd
-/// `"n": 5000` would allocate n^3 buffers in the worker (hundreds of GB)
-/// before the artifact lookup could reject the size — aborting the
-/// daemon, not just failing the job.
-pub const MAX_GRID_N: usize = 512;
-
-/// Hard cap on requestable grid-continuation levels: 512 -> 16 is six
-/// factor-2 descents, so deeper requests are always typos.
-pub const MAX_MULTIRES_LEVELS: usize = 6;
 
 /// Read one `\n`-terminated line of at most `cap` bytes. `Ok(None)` on
 /// clean EOF; a line exceeding the cap is an `InvalidData` IO error (the
@@ -146,288 +176,59 @@ pub fn read_request_line_bounded<R: std::io::BufRead>(
     }
 }
 
-/// Dispatch priority. Higher priorities jump the queue (they do not kill
-/// running solves): the paper's emergency clinical scan is served before
-/// queued batch research jobs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-pub enum Priority {
-    /// Research / population-study batch work (default).
-    Batch = 0,
-    /// Interactive clinical sessions.
-    Urgent = 1,
-    /// Emergency scans: always admitted, dispatched first.
-    Emergency = 2,
-}
-
-impl Priority {
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            Priority::Batch => "batch",
-            Priority::Urgent => "urgent",
-            Priority::Emergency => "emergency",
-        }
-    }
-
-    pub fn parse(s: &str) -> Result<Priority> {
-        match s {
-            "batch" => Ok(Priority::Batch),
-            "urgent" => Ok(Priority::Urgent),
-            "emergency" => Ok(Priority::Emergency),
-            other => Err(Error::Serve(format!("unknown priority '{other}'"))),
-        }
-    }
-}
-
-/// Where a job's image pair comes from.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub enum JobSource {
-    /// The daemon synthesizes a NIREP-analog pair from `subject` — the
-    /// status quo default, exactly like the CLI `register`/`batch` paths.
-    Synthetic,
-    /// Template (`m0`) and reference (`m1`) volumes previously shipped via
-    /// the `upload` verb, referenced by content id. Resolved against the
-    /// daemon's store at admission time.
-    Uploaded { m0: String, m1: String },
-}
-
-/// A wire-submittable registration job: a synthetic NIREP-analog subject
-/// *or* an uploaded volume pair, at a given grid size and kernel variant,
-/// with the solver knobs that matter for scheduling experiments.
-#[derive(Clone, Debug, PartialEq)]
-pub struct JobSpec {
-    pub subject: String,
-    pub n: usize,
-    pub variant: String,
-    /// Image source. Wire field `"source"`: absent = synthetic (pre-data-
-    /// plane clients keep working), `{"m0":"<id>","m1":"<id>"}` = uploaded.
-    pub source: JobSource,
-    /// Solver precision policy; `mixed` runs the PCG Hessian matvecs
-    /// through the reduced-precision artifacts. Wire field `"precision"`.
-    pub precision: Precision,
-    /// Grid-continuation levels. Wire field `"multires"`; absent = single
-    /// grid. `Some(k >= 2)` runs `solve_multires` coarse-to-fine.
-    pub multires: Option<usize>,
-    pub priority: Priority,
-    pub max_iter: Option<usize>,
-    pub beta: Option<f64>,
-    pub gtol: Option<f64>,
-    pub continuation: Option<bool>,
-}
-
-impl Default for JobSpec {
-    fn default() -> Self {
-        JobSpec {
-            subject: "na02".into(),
-            n: 16,
-            variant: "opt-fd8-cubic".into(),
-            source: JobSource::Synthetic,
-            precision: Precision::Full,
-            multires: None,
-            priority: Priority::Batch,
-            max_iter: None,
-            beta: None,
-            gtol: None,
-            continuation: None,
-        }
-    }
-}
-
-impl JobSpec {
-    /// Display name used in job records and the journal. Mixed-precision
-    /// jobs carry a `+mixed` suffix and multires jobs a `+mr<levels>`
-    /// suffix so status tables and the journal show the policy at a
-    /// glance; uploaded-source jobs show truncated content ids instead of
-    /// a subject.
-    pub fn name(&self) -> String {
-        let subject = match &self.source {
-            JobSource::Synthetic => self.subject.clone(),
-            JobSource::Uploaded { m0, m1 } => {
-                let short = |s: &str| s.chars().take(8).collect::<String>();
-                format!("up:{}+{}", short(m0), short(m1))
-            }
-        };
-        let mut name = format!("{}@{}^3/{}", subject, self.n, self.variant);
-        if self.precision == Precision::Mixed {
-            name.push_str("+mixed");
-        }
-        if let Some(levels) = self.multires.filter(|&l| l > 1) {
-            name.push_str(&format!("+mr{levels}"));
-        }
-        name
-    }
-
-    /// Solver parameters with the spec's overrides applied.
-    pub fn reg_params(&self) -> RegParams {
-        let mut p = RegParams {
-            variant: self.variant.clone(),
-            precision: self.precision,
-            ..Default::default()
-        };
-        if let Some(m) = self.max_iter {
-            p.max_iter = m;
-        }
-        if let Some(b) = self.beta {
-            p.beta = b;
-        }
-        if let Some(g) = self.gtol {
-            p.gtol = g;
-        }
-        if let Some(c) = self.continuation {
-            p.continuation = c;
-        }
-        if let Some(l) = self.multires {
-            p.multires = l;
-        }
-        p
-    }
-
-    pub fn to_json(&self) -> Json {
-        let mut pairs = vec![
-            ("subject", Json::str(&self.subject)),
-            ("n", Json::num(self.n as f64)),
-            ("variant", Json::str(&self.variant)),
-            ("precision", Json::str(self.precision.as_str())),
-            ("priority", Json::str(self.priority.as_str())),
-        ];
-        if let JobSource::Uploaded { m0, m1 } = &self.source {
-            pairs.push((
-                "source",
-                Json::object([("m0", Json::str(m0)), ("m1", Json::str(m1))]),
-            ));
-        }
-        if let Some(l) = self.multires {
-            pairs.push(("multires", Json::num(l as f64)));
-        }
-        if let Some(m) = self.max_iter {
-            pairs.push(("max_iter", Json::num(m as f64)));
-        }
-        if let Some(b) = self.beta {
-            pairs.push(("beta", Json::num(b)));
-        }
-        if let Some(g) = self.gtol {
-            pairs.push(("gtol", Json::num(g)));
-        }
-        if let Some(c) = self.continuation {
-            pairs.push(("continuation", Json::Bool(c)));
-        }
-        Json::object(pairs)
-    }
-
-    /// Strict decode: absent fields take defaults, but a field that is
-    /// present with the wrong type is an error — a clinical daemon must
-    /// not silently run a default job because `"n": "32"` was a string.
-    pub fn from_json(j: &Json) -> Result<JobSpec> {
-        if j.as_obj().is_none() {
-            return Err(Error::Serve("'job' must be an object".into()));
-        }
-        fn field<'a, T>(
-            j: &'a Json,
-            key: &str,
-            conv: impl Fn(&'a Json) -> Option<T>,
-            what: &str,
-        ) -> Result<Option<T>> {
-            match j.get(key) {
-                None => Ok(None),
-                Some(v) => conv(v)
-                    .map(Some)
-                    .ok_or_else(|| Error::Serve(format!("job field '{key}' must be {what}"))),
-            }
-        }
-        let d = JobSpec::default();
-        let n_explicit = field(j, "n", Json::as_index, "a non-negative integer")?;
-        let n = match n_explicit {
-            None => d.n,
-            Some(x) if (1..=MAX_GRID_N as u64).contains(&x) => x as usize,
-            Some(x) => {
-                return Err(Error::Serve(format!(
-                    "job field 'n' = {x} out of range (1..={MAX_GRID_N})"
-                )))
-            }
-        };
-        // Absent source = synthetic (pre-data-plane clients keep working).
-        // An uploaded source must name both volumes and pin `n` explicitly
-        // so the daemon can validate content shapes at admission time.
-        let source = match j.get("source") {
-            None => JobSource::Synthetic,
-            Some(s) => {
-                let id_of = |k: &str| -> Result<String> {
-                    s.get(k)
-                        .and_then(Json::as_str)
-                        .filter(|v| !v.is_empty())
-                        .map(str::to_string)
-                        .ok_or_else(|| {
-                            Error::Serve(format!(
-                                "job field 'source' must carry a non-empty string '{k}'"
-                            ))
-                        })
-                };
-                if n_explicit.is_none() {
-                    return Err(Error::Serve(
-                        "jobs with an uploaded source must specify 'n' explicitly".into(),
-                    ));
-                }
-                JobSource::Uploaded { m0: id_of("m0")?, m1: id_of("m1")? }
-            }
-        };
-        let multires = match field(j, "multires", Json::as_index, "a non-negative integer")? {
-            None => None,
-            Some(x) if (1..=MAX_MULTIRES_LEVELS as u64).contains(&x) => Some(x as usize),
-            Some(x) => {
-                return Err(Error::Serve(format!(
-                    "job field 'multires' = {x} out of range (1..={MAX_MULTIRES_LEVELS})"
-                )))
-            }
-        };
-        Ok(JobSpec {
-            subject: field(j, "subject", Json::as_str, "a string")?
-                .map(str::to_string)
-                .unwrap_or(d.subject),
-            n,
-            variant: field(j, "variant", Json::as_str, "a string")?
-                .map(str::to_string)
-                .unwrap_or(d.variant),
-            source,
-            multires,
-            // Absent precision defaults to full (pre-precision clients keep
-            // working); a present but unknown value is an error.
-            precision: match field(j, "precision", Json::as_str, "a string")? {
-                Some(s) => Precision::parse(s)
-                    .map_err(|_| Error::Serve(format!("unknown job precision '{s}'")))?,
-                None => d.precision,
-            },
-            priority: match field(j, "priority", Json::as_str, "a string")? {
-                Some(s) => Priority::parse(s)?,
-                None => d.priority,
-            },
-            max_iter: field(j, "max_iter", Json::as_index, "a non-negative integer")?
-                .map(|x| x as usize),
-            beta: field(j, "beta", Json::as_f64, "a number")?,
-            gtol: field(j, "gtol", Json::as_f64, "a number")?,
-            continuation: field(j, "continuation", Json::as_bool, "a boolean")?,
-        })
-    }
-}
-
 /// One decoded client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Ping,
+    /// Negotiate protocol v2 (see module docs). `proto` is the highest
+    /// level the client speaks; the daemon answers with the level the
+    /// session will use.
+    Hello { proto: u64 },
     /// Ship one volume into the daemon's content-addressed store. `data`
     /// holds the n^3 samples; on the wire they travel as base64 of the
     /// `data/io.rs` little-endian f32 byte format.
     Upload { n: usize, data: Vec<f32> },
-    Submit(JobSpec),
+    Submit(JobRequest),
+    /// v2: many jobs on one line, answered with per-job admission
+    /// verdicts — a 500-job clinical batch costs one round trip.
+    SubmitBatch(Vec<JobRequest>),
     /// `None` lists every job the daemon knows about.
     Status(Option<JobId>),
     Cancel(JobId),
+    /// v2: subscribe this connection to server-pushed job events.
+    Watch,
     Stats,
     Shutdown { drain: bool },
 }
 
+/// Encode `n`/`data` as an upload request line *without* an owned copy of
+/// the sample vector: the little-endian byte image is the only transient
+/// allocation besides the line itself (base64 is appended in place).
+/// Byte-identical to `Request::Upload { .. }.to_line()` — pinned by test.
+pub fn upload_line(n: usize, data: &[f32], seq: Option<u64>) -> String {
+    let bytes = f32s_to_le_bytes(data);
+    let mut line = String::with_capacity(bytes.len() * 4 / 3 + 64);
+    line.push_str("{\"cmd\":\"upload\",\"data\":\"");
+    base64::encode_into(&bytes, &mut line);
+    drop(bytes);
+    line.push_str("\",\"n\":");
+    line.push_str(&n.to_string());
+    if let Some(s) = seq {
+        line.push_str(",\"seq\":");
+        line.push_str(&s.to_string());
+    }
+    line.push('}');
+    line
+}
+
 impl Request {
-    pub fn to_line(&self) -> String {
-        let j = match self {
+    fn to_json(&self) -> Json {
+        match self {
             Request::Ping => Json::object([("cmd", Json::str("ping"))]),
+            Request::Hello { proto } => Json::object([
+                ("cmd", Json::str("hello")),
+                ("proto", Json::num(*proto as f64)),
+            ]),
             Request::Upload { n, data } => Json::object([
                 ("cmd", Json::str("upload")),
                 ("n", Json::num(*n as f64)),
@@ -436,6 +237,10 @@ impl Request {
             Request::Submit(spec) => {
                 Json::object([("cmd", Json::str("submit")), ("job", spec.to_json())])
             }
+            Request::SubmitBatch(specs) => Json::object([
+                ("cmd", Json::str("submit_batch")),
+                ("jobs", Json::Arr(specs.iter().map(JobRequest::to_json).collect())),
+            ]),
             Request::Status(None) => Json::object([("cmd", Json::str("status"))]),
             Request::Status(Some(id)) => {
                 Json::object([("cmd", Json::str("status")), ("id", Json::num(*id as f64))])
@@ -443,50 +248,92 @@ impl Request {
             Request::Cancel(id) => {
                 Json::object([("cmd", Json::str("cancel")), ("id", Json::num(*id as f64))])
             }
+            Request::Watch => Json::object([("cmd", Json::str("watch"))]),
             Request::Stats => Json::object([("cmd", Json::str("stats"))]),
             Request::Shutdown { drain } => {
                 Json::object([("cmd", Json::str("shutdown")), ("drain", Json::Bool(*drain))])
             }
-        };
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Encode with an optional v2 correlation `seq`.
+    pub fn to_line_with_seq(&self, seq: Option<u64>) -> String {
+        let mut j = self.to_json();
+        if let (Some(s), Json::Obj(m)) = (seq, &mut j) {
+            m.insert("seq".into(), Json::num(s as f64));
+        }
         j.render()
     }
 
+    /// Decode one request line plus its v2 correlation envelope. A line
+    /// that is not JSON yields `(None, Err(..))`; a JSON line with a bad
+    /// request body still surfaces its `seq` so the error response can be
+    /// correlated. A `seq` that is not a non-negative integer is ignored.
+    pub fn parse_line(line: &str) -> (Option<u64>, Result<Request>) {
+        match Json::parse(line.trim()) {
+            Err(e) => (None, Err(e)),
+            Ok(j) => {
+                let seq = j.get("seq").and_then(Json::as_index);
+                (seq, Request::from_json(&j))
+            }
+        }
+    }
+
     pub fn parse(line: &str) -> Result<Request> {
-        let j = Json::parse(line.trim())?;
+        Request::from_json(&Json::parse(line.trim())?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let bad = |msg: String| Error::wire(ErrorCode::BadRequest, msg);
         let cmd = j
             .get("cmd")
             .and_then(Json::as_str)
-            .ok_or_else(|| Error::Serve("request missing 'cmd'".into()))?;
+            .ok_or_else(|| bad("request missing 'cmd'".into()))?;
         let id_of = |j: &Json| -> Result<JobId> {
             j.get("id")
                 .and_then(Json::as_index)
-                .ok_or_else(|| Error::Serve(format!("'{cmd}' requires an integer 'id'")))
+                .ok_or_else(|| bad(format!("'{cmd}' requires an integer 'id'")))
         };
         match cmd {
             "ping" => Ok(Request::Ping),
+            "hello" => {
+                let proto = match j.get("proto") {
+                    None => PROTO_VERSION,
+                    Some(v) => match v.as_index() {
+                        Some(p) if p >= 1 => p,
+                        _ => {
+                            return Err(bad(
+                                "hello field 'proto' must be an integer >= 1".into(),
+                            ))
+                        }
+                    },
+                };
+                Ok(Request::Hello { proto })
+            }
             "upload" => {
                 let n = match j.get("n").and_then(Json::as_index) {
                     Some(x) if (1..=MAX_UPLOAD_GRID_N as u64).contains(&x) => x as usize,
                     Some(x) => {
-                        return Err(Error::Serve(format!(
+                        return Err(bad(format!(
                             "upload field 'n' = {x} out of range (1..={MAX_UPLOAD_GRID_N}; \
                              larger volumes need a chunked upload, not yet supported)"
                         )))
                     }
-                    None => {
-                        return Err(Error::Serve(
-                            "upload requires an integer 'n'".into(),
-                        ))
-                    }
+                    None => return Err(bad("upload requires an integer 'n'".into())),
                 };
-                let b64 = j.get("data").and_then(Json::as_str).ok_or_else(|| {
-                    Error::Serve("upload requires a base64 string 'data'".into())
-                })?;
-                let bytes = base64::decode(b64)
-                    .map_err(|e| Error::Serve(format!("upload payload: {e}")))?;
+                let b64 = j
+                    .get("data")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("upload requires a base64 string 'data'".into()))?;
+                let bytes =
+                    base64::decode(b64).map_err(|e| bad(format!("upload payload: {e}")))?;
                 let expected = n * n * n * 4;
                 if bytes.len() != expected {
-                    return Err(Error::Serve(format!(
+                    return Err(bad(format!(
                         "upload payload is {} bytes, expected {expected} ({n}^3 f32 samples)",
                         bytes.len()
                     )));
@@ -496,7 +343,7 @@ impl Request {
                 // smuggled into m0/m1 would poison every norm and line
                 // search of the solve and surface as a cryptic failure.
                 if let Some(i) = data.iter().position(|x| !x.is_finite()) {
-                    return Err(Error::Serve(format!(
+                    return Err(bad(format!(
                         "upload payload contains a non-finite sample at index {i}"
                     )));
                 }
@@ -505,25 +352,99 @@ impl Request {
             "submit" => {
                 let job = j
                     .get("job")
-                    .ok_or_else(|| Error::Serve("submit requires a 'job' object".into()))?;
-                Ok(Request::Submit(JobSpec::from_json(job)?))
+                    .ok_or_else(|| bad("submit requires a 'job' object".into()))?;
+                Ok(Request::Submit(JobRequest::from_json(job)?))
+            }
+            "submit_batch" => {
+                let jobs = j
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad("submit_batch requires a 'jobs' array".into()))?;
+                if jobs.is_empty() || jobs.len() > MAX_BATCH_JOBS {
+                    return Err(bad(format!(
+                        "submit_batch carries {} jobs, expected 1..={MAX_BATCH_JOBS}",
+                        jobs.len()
+                    )));
+                }
+                let specs = jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, job)| {
+                        JobRequest::from_json(job).map_err(|e| {
+                            Error::wire(ErrorCode::BadRequest, format!("jobs[{i}]: {e}"))
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Request::SubmitBatch(specs))
             }
             // A present-but-malformed id must error, not degrade to "all".
             "status" => match j.get("id") {
                 None => Ok(Request::Status(None)),
-                Some(_) => Ok(Request::Status(Some(id_of(&j)?))),
+                Some(_) => Ok(Request::Status(Some(id_of(j)?))),
             },
-            "cancel" => Ok(Request::Cancel(id_of(&j)?)),
+            "cancel" => Ok(Request::Cancel(id_of(j)?)),
+            "watch" => Ok(Request::Watch),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown {
                 drain: match j.get("drain") {
                     None => true,
                     Some(v) => v.as_bool().ok_or_else(|| {
-                        Error::Serve("shutdown field 'drain' must be a boolean".into())
+                        bad("shutdown field 'drain' must be a boolean".into())
                     })?,
                 },
             }),
-            other => Err(Error::Serve(format!("unknown command '{other}'"))),
+            other => Err(bad(format!("unknown command '{other}'"))),
+        }
+    }
+}
+
+/// Per-job admission verdict of a `submit_batch` line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    Admitted { id: JobId },
+    Rejected { code: ErrorCode, retryable: bool, msg: String },
+}
+
+impl Verdict {
+    /// Build from an admission attempt's outcome.
+    pub fn from_result(r: Result<JobId>) -> Verdict {
+        match r {
+            Ok(id) => Verdict::Admitted { id },
+            Err(e) => {
+                let code = e.code();
+                Verdict::Rejected { code, retryable: code.retryable(), msg: e.to_string() }
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Verdict::Admitted { id } => {
+                Json::object([("ok", Json::Bool(true)), ("id", Json::num(*id as f64))])
+            }
+            Verdict::Rejected { code, retryable, msg } => Json::object([
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(msg)),
+                ("code", Json::str(code.as_str())),
+                ("retryable", Json::Bool(*retryable)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Verdict> {
+        let ok = j
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| Error::Serve("batch verdict missing 'ok'".into()))?;
+        if ok {
+            let id = j
+                .get("id")
+                .and_then(Json::as_index)
+                .ok_or_else(|| Error::Serve("admitted verdict missing 'id'".into()))?;
+            Ok(Verdict::Admitted { id })
+        } else {
+            let (code, retryable, msg) = wire_error_fields(j);
+            Ok(Verdict::Rejected { code, retryable, msg })
         }
     }
 }
@@ -532,14 +453,47 @@ impl Request {
 #[derive(Clone, Debug)]
 pub enum Response {
     Ok,
+    /// Answer to `hello`: the protocol level this session will use and the
+    /// feature tags the daemon supports.
+    Hello { proto: u64, features: Vec<String> },
     Submitted { id: JobId },
+    /// Answer to `submit_batch`: one admission verdict per job, in
+    /// submission order.
+    Batch(Vec<Verdict>),
     /// Receipt for an `upload`: the volume's content id (what `submit`
     /// references in `source`) and whether it was already resident.
     Uploaded { id: String, n: usize, dedup: bool },
     Job(JobView),
     Jobs(Vec<JobView>),
     Stats(ServeStats),
-    Error(String),
+    /// A failed request. In a v1 session only `msg` travels; a v2 session
+    /// additionally carries the stable `code` and its `retryable` flag.
+    Error { code: ErrorCode, retryable: bool, msg: String },
+}
+
+impl Response {
+    /// Build the error response for any internal error, classified via
+    /// [`Error::code`].
+    pub fn from_error(e: &Error) -> Response {
+        let code = e.code();
+        Response::Error { code, retryable: code.retryable(), msg: e.to_string() }
+    }
+}
+
+/// Decode (`code`, `retryable`, `msg`) from an `"ok":false` object.
+/// Absent code = a v1 daemon: classify `internal`, not retryable, unless
+/// the wire explicitly says otherwise. Unknown codes (newer daemon)
+/// degrade to `internal` but keep the wire's `retryable` flag.
+fn wire_error_fields(j: &Json) -> (ErrorCode, bool, String) {
+    let msg = j.get("error").and_then(Json::as_str).unwrap_or("unspecified").to_string();
+    let code = j
+        .get("code")
+        .and_then(Json::as_str)
+        .and_then(ErrorCode::parse)
+        .unwrap_or(ErrorCode::Internal);
+    let retryable =
+        j.get("retryable").and_then(Json::as_bool).unwrap_or_else(|| code.retryable());
+    (code, retryable, msg)
 }
 
 fn opt_num(x: Option<f64>) -> Json {
@@ -670,12 +624,27 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
 }
 
 impl Response {
-    pub fn to_line(&self) -> String {
-        let j = match self {
+    /// v1 JSON form. For errors this is `{"error": msg, "ok": false}` —
+    /// byte-identical to the pre-v2 daemon, which is the compat guarantee
+    /// for connections that never negotiated.
+    fn to_json(&self) -> Json {
+        match self {
             Response::Ok => Json::object([("ok", Json::Bool(true))]),
+            Response::Hello { proto, features } => Json::object([
+                ("ok", Json::Bool(true)),
+                ("proto", Json::num(*proto as f64)),
+                (
+                    "features",
+                    Json::Arr(features.iter().map(|f| Json::str(f.as_str())).collect()),
+                ),
+            ]),
             Response::Submitted { id } => {
                 Json::object([("ok", Json::Bool(true)), ("id", Json::num(*id as f64))])
             }
+            Response::Batch(verdicts) => Json::object([
+                ("ok", Json::Bool(true)),
+                ("results", Json::Arr(verdicts.iter().map(Verdict::to_json).collect())),
+            ]),
             Response::Uploaded { id, n, dedup } => Json::object([
                 ("ok", Json::Bool(true)),
                 (
@@ -695,22 +664,60 @@ impl Response {
             Response::Stats(s) => {
                 Json::object([("ok", Json::Bool(true)), ("stats", stats_to_json(s))])
             }
-            Response::Error(msg) => {
+            Response::Error { msg, .. } => {
                 Json::object([("ok", Json::Bool(false)), ("error", Json::str(msg))])
             }
-        };
+        }
+    }
+
+    /// v1 encoding (exact legacy bytes — no `code`, `retryable` or `seq`).
+    pub fn to_line(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// v2 encoding: the v1 object plus the structured error fields
+    /// (`code`, `retryable`) and the echoed request `seq`.
+    pub fn to_line_v2(&self, seq: Option<u64>) -> String {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Response::Error { code, retryable, .. } = self {
+                m.insert("code".into(), Json::str(code.as_str()));
+                m.insert("retryable".into(), Json::Bool(*retryable));
+            }
+            if let Some(s) = seq {
+                m.insert("seq".into(), Json::num(s as f64));
+            }
+        }
         j.render()
     }
 
     pub fn parse(line: &str) -> Result<Response> {
-        let j = Json::parse(line.trim())?;
+        Response::from_json(&Json::parse(line.trim())?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
         let ok = j
             .get("ok")
             .and_then(Json::as_bool)
             .ok_or_else(|| Error::Serve("response missing 'ok'".into()))?;
         if !ok {
-            let msg = j.get("error").and_then(Json::as_str).unwrap_or("unspecified");
-            return Ok(Response::Error(msg.to_string()));
+            let (code, retryable, msg) = wire_error_fields(j);
+            return Ok(Response::Error { code, retryable, msg });
+        }
+        if let Some(p) = j.get("proto").and_then(Json::as_index) {
+            let features = j
+                .get("features")
+                .and_then(Json::as_arr)
+                .map(|xs| {
+                    xs.iter().filter_map(Json::as_str).map(str::to_string).collect()
+                })
+                .unwrap_or_default();
+            return Ok(Response::Hello { proto: p, features });
+        }
+        if let Some(rs) = j.get("results").and_then(Json::as_arr) {
+            return Ok(Response::Batch(
+                rs.iter().map(Verdict::from_json).collect::<Result<_>>()?,
+            ));
         }
         if let Some(s) = j.get("stats") {
             return Ok(Response::Stats(stats_from_json(s)?));
@@ -736,9 +743,101 @@ impl Response {
     }
 }
 
+/// One server-pushed watch event as it travels on the wire. Every event
+/// echoes the `seq` the subscribing `watch` request carried (if any), so
+/// a client multiplexing several streams can tell them apart.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventMsg {
+    /// A job state transition (`queued`, `running`, then one of
+    /// `done`/`failed`/`cancelled`; terminal transitions carry `wall_s`
+    /// and — for failures — `error`).
+    Job {
+        seq: Option<u64>,
+        id: JobId,
+        name: String,
+        state: JobState,
+        wall_s: Option<f64>,
+        error: Option<String>,
+    },
+    /// Terminal marker: the subscriber fell behind the bounded event
+    /// queue and was dropped; no further events will arrive. Re-issue
+    /// `watch` (ideally on a drained connection) to resubscribe.
+    Lagged { seq: Option<u64> },
+}
+
+impl EventMsg {
+    /// Whether a decoded protocol line is an event (vs a response): events
+    /// carry `"event"`, responses carry `"ok"`.
+    pub fn is_event(j: &Json) -> bool {
+        j.get("event").is_some()
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        match self {
+            EventMsg::Job { seq, id, name, state, wall_s, error } => {
+                pairs.push(("event", Json::str("job")));
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("name", Json::str(name)));
+                pairs.push(("state", Json::str(state.as_str())));
+                if let Some(w) = wall_s {
+                    pairs.push(("wall_s", Json::num(*w)));
+                }
+                if let Some(e) = error {
+                    pairs.push(("error", Json::str(e)));
+                }
+                if let Some(s) = seq {
+                    pairs.push(("seq", Json::num(*s as f64)));
+                }
+            }
+            EventMsg::Lagged { seq } => {
+                pairs.push(("event", Json::str("lagged")));
+                if let Some(s) = seq {
+                    pairs.push(("seq", Json::num(*s as f64)));
+                }
+            }
+        }
+        Json::object(pairs).render()
+    }
+
+    pub fn from_json(j: &Json) -> Result<EventMsg> {
+        let kind = j
+            .get("event")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Serve("event missing 'event'".into()))?;
+        let seq = j.get("seq").and_then(Json::as_index);
+        match kind {
+            "lagged" => Ok(EventMsg::Lagged { seq }),
+            "job" => {
+                let miss = |k: &str| Error::Serve(format!("job event missing '{k}'"));
+                Ok(EventMsg::Job {
+                    seq,
+                    id: j.get("id").and_then(Json::as_index).ok_or_else(|| miss("id"))?,
+                    name: j
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| miss("name"))?
+                        .to_string(),
+                    state: JobState::parse(
+                        j.get("state").and_then(Json::as_str).ok_or_else(|| miss("state"))?,
+                    )?,
+                    wall_s: j.get("wall_s").and_then(Json::as_f64),
+                    error: j.get("error").and_then(Json::as_str).map(str::to_string),
+                })
+            }
+            other => Err(Error::Serve(format!("unknown event kind '{other}'"))),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<EventMsg> {
+        EventMsg::from_json(&Json::parse(line.trim())?)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::Precision;
 
     #[test]
     fn request_roundtrip_all_verbs() {
@@ -762,19 +861,68 @@ mod tests {
         };
         for req in [
             Request::Ping,
+            Request::Hello { proto: 2 },
             Request::Upload { n: 2, data: vec![0.0, -1.5, 3.25, 4.0, 5.0, 6.5, 7.0, 8.0] },
-            Request::Submit(spec),
-            Request::Submit(uploaded),
+            Request::Submit(spec.clone()),
+            Request::Submit(uploaded.clone()),
+            Request::SubmitBatch(vec![spec, uploaded]),
             Request::Status(None),
             Request::Status(Some(4)),
             Request::Cancel(9),
+            Request::Watch,
             Request::Stats,
             Request::Shutdown { drain: false },
         ] {
             let line = req.to_line();
             assert!(!line.contains('\n'), "one line: {line}");
             assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+            // The seq envelope decorates any verb and round-trips.
+            let (seq, parsed) = Request::parse_line(&req.to_line_with_seq(Some(41)));
+            assert_eq!(seq, Some(41));
+            assert_eq!(parsed.unwrap(), req);
         }
+    }
+
+    #[test]
+    fn seq_envelope_is_tolerant() {
+        // No seq -> None; junk seq -> ignored; seq on a broken body still
+        // surfaces so the error response can be correlated.
+        assert_eq!(Request::parse_line(r#"{"cmd":"ping"}"#).0, None);
+        assert_eq!(Request::parse_line(r#"{"cmd":"ping","seq":"x"}"#).0, None);
+        assert_eq!(Request::parse_line(r#"{"cmd":"ping","seq":-3}"#).0, None);
+        let (seq, parsed) = Request::parse_line(r#"{"cmd":"warp","seq":9}"#);
+        assert_eq!(seq, Some(9));
+        assert!(parsed.is_err());
+        let (seq, parsed) = Request::parse_line("not json at all");
+        assert_eq!(seq, None);
+        assert!(parsed.is_err());
+    }
+
+    #[test]
+    fn hello_parses_and_bounds_proto() {
+        assert_eq!(
+            Request::parse(r#"{"cmd":"hello"}"#).unwrap(),
+            Request::Hello { proto: PROTO_VERSION }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"hello","proto":3}"#).unwrap(),
+            Request::Hello { proto: 3 }
+        );
+        assert!(Request::parse(r#"{"cmd":"hello","proto":0}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"hello","proto":"two"}"#).is_err());
+    }
+
+    #[test]
+    fn submit_batch_parse_is_bounded_and_indexed() {
+        assert!(Request::parse(r#"{"cmd":"submit_batch"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit_batch","jobs":[]}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"submit_batch","jobs":5}"#).is_err());
+        // A malformed element fails the whole line, naming the index —
+        // encode errors are the client's bug; admission verdicts are only
+        // for well-formed jobs.
+        let err = Request::parse(r#"{"cmd":"submit_batch","jobs":[{},{"n":"x"}]}"#).unwrap_err();
+        assert!(err.to_string().contains("jobs[1]"), "{err}");
+        assert_eq!(err.code(), ErrorCode::BadRequest);
     }
 
     #[test]
@@ -801,87 +949,20 @@ mod tests {
         let nan = Request::Upload { n: 2, data: vec![f32::NAN; 8] }.to_line();
         let err = Request::parse(&nan).unwrap_err();
         assert!(err.to_string().contains("non-finite"), "{err}");
+        // Every upload decode failure is a structured bad_request.
+        let err = Request::parse(r#"{"cmd":"upload","n":2}"#).unwrap_err();
+        assert_eq!(err.code(), ErrorCode::BadRequest);
     }
 
     #[test]
-    fn spec_source_and_multires_wire_fields() {
-        // Uploaded source + multires round-trip and shape the job name.
-        let j = Json::parse(
-            r#"{"n":32,"source":{"m0":"cafe01","m1":"beef02"},"multires":3}"#,
-        )
-        .unwrap();
-        let spec = JobSpec::from_json(&j).unwrap();
-        assert_eq!(
-            spec.source,
-            JobSource::Uploaded { m0: "cafe01".into(), m1: "beef02".into() }
-        );
-        assert_eq!(spec.multires, Some(3));
-        assert_eq!(spec.name(), "up:cafe01+beef02@32^3/opt-fd8-cubic+mr3");
-        assert_eq!(spec.reg_params().multires, 3);
-        // multires=1 is legal and means single grid (no name suffix).
-        let j1 = JobSpec::from_json(&Json::parse(r#"{"multires":1}"#).unwrap()).unwrap();
-        assert_eq!(j1.multires, Some(1));
-        assert!(!j1.name().contains("mr"), "{}", j1.name());
-        // Out-of-range or mistyped multires errors.
-        assert!(JobSpec::from_json(&Json::parse(r#"{"multires":0}"#).unwrap()).is_err());
-        assert!(JobSpec::from_json(&Json::parse(r#"{"multires":7}"#).unwrap()).is_err());
-        assert!(JobSpec::from_json(&Json::parse(r#"{"multires":"3"}"#).unwrap()).is_err());
-        // Uploaded source must pin n and name both volumes.
-        assert!(JobSpec::from_json(
-            &Json::parse(r#"{"source":{"m0":"a","m1":"b"}}"#).unwrap()
-        )
-        .is_err(), "source without explicit n");
-        assert!(JobSpec::from_json(
-            &Json::parse(r#"{"n":16,"source":{"m0":"a"}}"#).unwrap()
-        )
-        .is_err(), "missing m1");
-        assert!(JobSpec::from_json(
-            &Json::parse(r#"{"n":16,"source":{"m0":"","m1":"b"}}"#).unwrap()
-        )
-        .is_err(), "empty id");
-        // Synthetic default: absent source/multires behave exactly like a
-        // pre-data-plane client's submission.
-        let legacy = JobSpec::from_json(&Json::parse(r#"{"subject":"na02"}"#).unwrap()).unwrap();
-        assert_eq!(legacy.source, JobSource::Synthetic);
-        assert_eq!(legacy.multires, None);
-        assert_eq!(legacy.reg_params().multires, 1);
-    }
-
-    #[test]
-    fn spec_defaults_and_params() {
-        let spec = JobSpec::from_json(&Json::parse(r#"{"subject":"na10"}"#).unwrap()).unwrap();
-        assert_eq!(spec.subject, "na10");
-        assert_eq!(spec.n, 16);
-        assert_eq!(spec.priority, Priority::Batch);
-        // Absent precision defaults to full (pre-precision clients).
-        assert_eq!(spec.precision, Precision::Full);
-        let p = spec.reg_params();
-        assert_eq!(p.variant, "opt-fd8-cubic");
-        assert_eq!(p.precision, Precision::Full);
-        assert_eq!(p.max_iter, RegParams::default().max_iter);
-
-        let spec2 = JobSpec { max_iter: Some(3), continuation: Some(false), ..spec };
-        let p2 = spec2.reg_params();
-        assert_eq!(p2.max_iter, 3);
-        assert!(!p2.continuation);
-    }
-
-    #[test]
-    fn spec_precision_wire_field() {
-        let spec = JobSpec::from_json(
-            &Json::parse(r#"{"subject":"na02","precision":"mixed"}"#).unwrap(),
-        )
-        .unwrap();
-        assert_eq!(spec.precision, Precision::Mixed);
-        assert_eq!(spec.reg_params().precision, Precision::Mixed);
-        assert_eq!(spec.name(), "na02@16^3/opt-fd8-cubic+mixed");
-        // Round-trips through the submit line.
-        let line = Request::Submit(spec.clone()).to_line();
-        assert!(line.contains(r#""precision":"mixed""#), "{line}");
-        assert_eq!(Request::parse(&line).unwrap(), Request::Submit(spec));
-        // Unknown or mistyped precision errors instead of running full.
-        assert!(JobSpec::from_json(&Json::parse(r#"{"precision":"half"}"#).unwrap()).is_err());
-        assert!(JobSpec::from_json(&Json::parse(r#"{"precision":16}"#).unwrap()).is_err());
+    fn borrowed_upload_encoder_is_byte_identical() {
+        let data: Vec<f32> = (0..27).map(|i| (i as f32 * 0.37).sin()).collect();
+        let owned = Request::Upload { n: 3, data: data.clone() }.to_line();
+        assert_eq!(upload_line(3, &data, None), owned);
+        // With a seq the line parses back to the same request + envelope.
+        let (seq, parsed) = Request::parse_line(&upload_line(3, &data, Some(12)));
+        assert_eq!(seq, Some(12));
+        assert_eq!(parsed.unwrap(), Request::Upload { n: 3, data });
     }
 
     #[test]
@@ -905,9 +986,13 @@ mod tests {
         assert!(Request::parse(r#"{"cmd":"submit","job":{"continuation":"yes"}}"#).is_err());
         // Mistyped drain must not silently become a drain=true shutdown.
         assert!(Request::parse(r#"{"cmd":"shutdown","drain":"false"}"#).is_err());
-        // Grid size is bounded: n^3 allocations must be rejected up front.
-        assert!(Request::parse(r#"{"cmd":"submit","job":{"n":5000}}"#).is_err());
-        assert!(Request::parse(r#"{"cmd":"submit","job":{"n":0}}"#).is_err());
+        // Decode failures carry the bad_request code (structured errors).
+        assert_eq!(Request::parse("{}").unwrap_err().code(), ErrorCode::BadRequest);
+        // Out-of-range (but well-typed) grid sizes now decode and are
+        // rejected by the single validate() path at daemon admission.
+        let over = Request::parse(r#"{"cmd":"submit","job":{"n":5000}}"#).unwrap();
+        let Request::Submit(spec) = over else { panic!("submit expected") };
+        assert!(spec.validate().is_err());
     }
 
     #[test]
@@ -998,10 +1083,6 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
-        match Response::parse(&Response::Error("queue full".into()).to_line()).unwrap() {
-            Response::Error(m) => assert_eq!(m, "queue full"),
-            other => panic!("unexpected {other:?}"),
-        }
         let s = ServeStats {
             submitted: 8,
             queued: 1,
@@ -1040,5 +1121,134 @@ mod tests {
             Response::Stats(got) => assert_eq!(got.store, StoreStats::default()),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn error_responses_are_v1_opaque_v2_structured() {
+        let resp = Response::Error {
+            code: ErrorCode::QueueFull,
+            retryable: true,
+            msg: "queue full (2 waiting, cap 2)".into(),
+        };
+        // v1 bytes carry only the message (pre-v2 compatibility).
+        assert_eq!(
+            resp.to_line(),
+            r#"{"error":"queue full (2 waiting, cap 2)","ok":false}"#
+        );
+        // v2 bytes add code/retryable/seq.
+        let v2 = resp.to_line_v2(Some(7));
+        assert!(v2.contains(r#""code":"queue_full""#), "{v2}");
+        assert!(v2.contains(r#""retryable":true"#), "{v2}");
+        assert!(v2.contains(r#""seq":7"#), "{v2}");
+        match Response::parse(&v2).unwrap() {
+            Response::Error { code, retryable, msg } => {
+                assert_eq!(code, ErrorCode::QueueFull);
+                assert!(retryable);
+                assert_eq!(msg, "queue full (2 waiting, cap 2)");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A v1 error line (no code) classifies internal / not retryable.
+        match Response::parse(r#"{"error":"queue full","ok":false}"#).unwrap() {
+            Response::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::Internal);
+                assert!(!retryable);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Unknown codes (newer daemon) degrade but keep the wire flag.
+        match Response::parse(
+            r#"{"code":"quota_exceeded","error":"x","ok":false,"retryable":true}"#,
+        )
+        .unwrap()
+        {
+            Response::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::Internal);
+                assert!(retryable, "wire retryable flag wins for unknown codes");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_and_batch_responses_roundtrip() {
+        let hello = Response::Hello {
+            proto: 2,
+            features: PROTO_V2_FEATURES.iter().map(|s| s.to_string()).collect(),
+        };
+        match Response::parse(&hello.to_line_v2(Some(1))).unwrap() {
+            Response::Hello { proto, features } => {
+                assert_eq!(proto, 2);
+                assert!(features.contains(&"watch".to_string()));
+                assert!(features.contains(&"submit_batch".to_string()));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let batch = Response::Batch(vec![
+            Verdict::Admitted { id: 4 },
+            Verdict::Rejected {
+                code: ErrorCode::QueueFull,
+                retryable: true,
+                msg: "queue full".into(),
+            },
+        ]);
+        match Response::parse(&batch.to_line_v2(Some(2))).unwrap() {
+            Response::Batch(vs) => {
+                assert_eq!(vs.len(), 2);
+                assert_eq!(vs[0], Verdict::Admitted { id: 4 });
+                assert_eq!(
+                    vs[1],
+                    Verdict::Rejected {
+                        code: ErrorCode::QueueFull,
+                        retryable: true,
+                        msg: "queue full".into()
+                    }
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn seq_echo_rides_every_v2_response() {
+        for (resp, key) in [
+            (Response::Ok, r#""seq":9"#),
+            (Response::Submitted { id: 3 }, r#""seq":9"#),
+        ] {
+            let line = resp.to_line_v2(Some(9));
+            assert!(line.contains(key), "{line}");
+            // And the v1 encoding never carries it.
+            assert!(!resp.to_line().contains("seq"), "{}", resp.to_line());
+        }
+    }
+
+    #[test]
+    fn event_messages_roundtrip() {
+        let running = EventMsg::Job {
+            seq: Some(4),
+            id: 7,
+            name: "na02@16^3/opt-fd8-cubic".into(),
+            state: JobState::Running,
+            wall_s: None,
+            error: None,
+        };
+        assert_eq!(EventMsg::parse(&running.to_line()).unwrap(), running);
+        let failed = EventMsg::Job {
+            seq: None,
+            id: 8,
+            name: "x".into(),
+            state: JobState::Failed,
+            wall_s: Some(0.25),
+            error: Some("boom".into()),
+        };
+        assert_eq!(EventMsg::parse(&failed.to_line()).unwrap(), failed);
+        let lag = EventMsg::Lagged { seq: Some(4) };
+        assert_eq!(EventMsg::parse(&lag.to_line()).unwrap(), lag);
+        // Events and responses are distinguishable by key.
+        let j = Json::parse(&running.to_line()).unwrap();
+        assert!(EventMsg::is_event(&j));
+        let r = Json::parse(&Response::Ok.to_line()).unwrap();
+        assert!(!EventMsg::is_event(&r));
+        assert!(EventMsg::parse(r#"{"event":"meteor"}"#).is_err());
     }
 }

@@ -21,7 +21,7 @@ use std::path::Path;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::error::{Error, Result};
+use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::registration::report::RunReport;
@@ -242,27 +242,155 @@ struct Inner {
     workers: usize,
 }
 
-/// Lifecycle event, surfaced to an optional sink (the daemon journals
-/// these so a restarted process can report prior completed work).
+/// Lifecycle event, surfaced to the optional sink (the daemon journals
+/// these so a restarted process can report prior completed work) and
+/// broadcast to `watch` subscribers via the event bus.
 #[derive(Clone, Debug)]
 pub enum JobEvent {
     Submitted { id: JobId, name: String, priority: Priority },
-    Finished { id: JobId, name: String, state: JobState, wall_s: f64 },
+    /// A worker picked the job up (`queued → running`). Broadcast to
+    /// watch subscribers; the journal skips it (transient state).
+    Started { id: JobId, name: String },
+    Finished { id: JobId, name: String, state: JobState, wall_s: f64, error: Option<String> },
     Cancelled { id: JobId, name: String },
 }
 
 type EventSink = Box<dyn Fn(&JobEvent) + Send + Sync>;
+
+// -- Watch event bus --------------------------------------------------------
+
+/// Default bound on one watch subscriber's pending-event queue. Generous
+/// for a reader that keeps up (events are tiny), small enough that a
+/// wedged TCP peer costs bounded memory before being dropped as lagged.
+pub const WATCH_QUEUE_CAP: usize = 256;
+
+/// One job state transition as observed by a `watch` subscriber.
+#[derive(Clone, Debug)]
+pub struct WatchEvent {
+    pub id: JobId,
+    pub name: String,
+    pub state: JobState,
+    /// Worker-side solve seconds; present on `done`/`failed` only.
+    pub wall_s: Option<f64>,
+    /// Failure message; present on `failed` only.
+    pub error: Option<String>,
+}
+
+/// What a subscriber receives from [`WatchHandle::recv`].
+#[derive(Clone, Debug)]
+pub enum BusMsg {
+    Event(WatchEvent),
+    /// Terminal: the subscriber fell behind its bounded queue and was
+    /// dropped by the publisher. No further messages will arrive.
+    Lagged,
+}
+
+struct SubState {
+    q: VecDeque<BusMsg>,
+    lagged: bool,
+    closed: bool,
+}
+
+/// Bounded per-subscriber queue. Publishers never block on it: a full
+/// queue flips the subscriber to lagged (appending the terminal marker)
+/// and the publisher forgets it — a slow `watch` connection can never
+/// stall a worker recording a job transition.
+struct SubQueue {
+    cap: usize,
+    st: Mutex<SubState>,
+    cv: Condvar,
+}
+
+impl SubQueue {
+    fn new(cap: usize) -> SubQueue {
+        SubQueue {
+            cap: cap.max(1),
+            st: Mutex::new(SubState { q: VecDeque::new(), lagged: false, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue for this subscriber. Returns `false` when the subscriber
+    /// is finished (closed, or just now flipped to lagged) and should be
+    /// dropped from the publisher's list.
+    fn push(&self, msg: BusMsg) -> bool {
+        let mut st = self.st.lock().unwrap();
+        if st.closed || st.lagged {
+            return false;
+        }
+        if st.q.len() >= self.cap {
+            // One slot past the cap holds the terminal marker, so the
+            // subscriber learns *why* its stream ended.
+            st.lagged = true;
+            st.q.push_back(BusMsg::Lagged);
+            self.cv.notify_all();
+            return false;
+        }
+        st.q.push_back(msg);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Blocking receive; `None` means no further messages will arrive
+    /// (unsubscribed, or lagged and fully drained).
+    fn recv(&self) -> Option<BusMsg> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if let Some(m) = st.q.pop_front() {
+                return Some(m);
+            }
+            if st.closed || st.lagged {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Subscription handle returned by [`Scheduler::watch`]. Receive with
+/// [`recv`](WatchHandle::recv); release with [`Scheduler::unwatch`].
+pub struct WatchHandle {
+    id: u64,
+    q: Arc<SubQueue>,
+}
+
+impl WatchHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Blocking receive; `None` means the stream ended (unsubscribed or
+    /// lagged-and-drained).
+    pub fn recv(&self) -> Option<BusMsg> {
+        self.q.recv()
+    }
+}
+
+#[derive(Default)]
+struct SubRegistry {
+    next_id: u64,
+    subs: Vec<(u64, Arc<SubQueue>)>,
+}
 
 /// Cloneable handle to the shared scheduler.
 #[derive(Clone)]
 pub struct Scheduler {
     inner: Arc<Inner>,
     /// Events are *sequenced* under the state lock (pushed here) but
-    /// *delivered* to the sink outside it, so journal disk stalls never
-    /// block submit/status/worker traffic. The sink lock doubles as the
-    /// single-flusher guard: whoever holds it drains the queue FIFO.
+    /// *delivered* to the sink and bus outside it, so journal disk stalls
+    /// never block submit/status/worker traffic. The sink lock doubles as
+    /// the single-flusher guard: whoever holds it drains the queue FIFO,
+    /// so the journal and every watch subscriber observe one sequence.
     events: Arc<Mutex<VecDeque<JobEvent>>>,
     sink: Arc<Mutex<Option<EventSink>>>,
+    /// Watch subscribers (the v2 `watch` verb and in-process observers).
+    subs: Arc<Mutex<SubRegistry>>,
 }
 
 impl Scheduler {
@@ -295,6 +423,41 @@ impl Scheduler {
             }),
             events: Arc::new(Mutex::new(VecDeque::new())),
             sink: Arc::new(Mutex::new(None)),
+            subs: Arc::new(Mutex::new(SubRegistry::default())),
+        }
+    }
+
+    /// Subscribe to job state transitions with the default queue bound.
+    pub fn watch(&self) -> WatchHandle {
+        self.watch_with_cap(WATCH_QUEUE_CAP)
+    }
+
+    /// Subscribe with an explicit per-subscriber queue bound (tests use
+    /// tiny caps to exercise the lagged path).
+    pub fn watch_with_cap(&self, cap: usize) -> WatchHandle {
+        let mut reg = self.subs.lock().unwrap();
+        reg.next_id += 1;
+        let id = reg.next_id;
+        let q = Arc::new(SubQueue::new(cap));
+        reg.subs.push((id, q.clone()));
+        WatchHandle { id, q }
+    }
+
+    /// Whether a subscription is still registered with the publisher.
+    /// Lagged subscribers are dropped at publish time, so this goes false
+    /// as soon as a watcher falls behind — the daemon uses it to let a
+    /// connection re-issue `watch` after a `lagged` stream ended.
+    pub fn is_watching(&self, sub_id: u64) -> bool {
+        self.subs.lock().unwrap().subs.iter().any(|(id, _)| *id == sub_id)
+    }
+
+    /// Drop a subscription: pending messages are discarded and the
+    /// subscriber's `recv` returns `None`. Idempotent.
+    pub fn unwatch(&self, sub_id: u64) {
+        let mut reg = self.subs.lock().unwrap();
+        if let Some(pos) = reg.subs.iter().position(|(id, _)| *id == sub_id) {
+            let (_, q) = reg.subs.swap_remove(pos);
+            q.close();
         }
     }
 
@@ -312,21 +475,64 @@ impl Scheduler {
         self.events.lock().unwrap().push_back(ev);
     }
 
-    /// Deliver queued events to the sink, FIFO. Called after the state
-    /// lock is released. The sink lock serializes flushers, so a thread
-    /// blocked here never holds up scheduler state — and a contended
-    /// flusher's events are drained by whoever currently holds the sink.
+    /// Deliver queued events to the sink and the watch bus, FIFO. Called
+    /// after the state lock is released. The sink lock serializes
+    /// flushers, so a thread blocked here never holds up scheduler state —
+    /// and a contended flusher's events are drained by whoever currently
+    /// holds the sink. Bus pushes never block (bounded queues, lagged
+    /// drop), so the journal write is the only potentially slow step.
     fn flush_events(&self) {
         let sink = self.sink.lock().unwrap();
-        let Some(f) = sink.as_ref() else {
-            self.events.lock().unwrap().clear();
-            return;
-        };
         loop {
             let ev = self.events.lock().unwrap().pop_front();
             let Some(ev) = ev else { break };
-            f(&ev);
+            if let Some(f) = sink.as_ref() {
+                f(&ev);
+            }
+            self.publish(&ev);
         }
+    }
+
+    /// Broadcast one lifecycle event to every watch subscriber, dropping
+    /// subscribers that are gone or just flipped to lagged.
+    fn publish(&self, ev: &JobEvent) {
+        let mut reg = self.subs.lock().unwrap();
+        // No subscribers (the common batch-driver case): skip building the
+        // transition — this runs on the submit/dispatch/complete hot path.
+        if reg.subs.is_empty() {
+            return;
+        }
+        let transition = match ev {
+            JobEvent::Submitted { id, name, .. } => WatchEvent {
+                id: *id,
+                name: name.clone(),
+                state: JobState::Queued,
+                wall_s: None,
+                error: None,
+            },
+            JobEvent::Started { id, name } => WatchEvent {
+                id: *id,
+                name: name.clone(),
+                state: JobState::Running,
+                wall_s: None,
+                error: None,
+            },
+            JobEvent::Finished { id, name, state, wall_s, error } => WatchEvent {
+                id: *id,
+                name: name.clone(),
+                state: *state,
+                wall_s: Some(*wall_s),
+                error: error.clone(),
+            },
+            JobEvent::Cancelled { id, name } => WatchEvent {
+                id: *id,
+                name: name.clone(),
+                state: JobState::Cancelled,
+                wall_s: None,
+                error: None,
+            },
+        };
+        reg.subs.retain(|(_, q)| q.push(BusMsg::Event(transition.clone())));
     }
 
     /// Seed the completed-work counter from a replayed journal.
@@ -351,15 +557,21 @@ impl Scheduler {
         {
             let mut st = self.inner.st.lock().unwrap();
             if st.shutdown != ShutdownMode::Open {
-                return Err(Error::Serve("daemon is shutting down".into()));
+                return Err(Error::wire(
+                    ErrorCode::ShuttingDown,
+                    "daemon is shutting down",
+                ));
             }
             if priority < Priority::Emergency && st.waiting_normal >= self.inner.queue_cap {
                 st.counters.rejected += 1;
-                return Err(Error::Serve(format!(
-                    "queue full ({} waiting, cap {})",
-                    st.waiting_normal,
-                    self.inner.queue_cap
-                )));
+                return Err(Error::wire(
+                    ErrorCode::QueueFull,
+                    format!(
+                        "queue full ({} waiting, cap {})",
+                        st.waiting_normal,
+                        self.inner.queue_cap
+                    ),
+                ));
             }
             id = st.next_id;
             st.next_id += 1;
@@ -399,33 +611,48 @@ impl Scheduler {
     /// Blocking highest-priority pop. Returns `None` when the scheduler is
     /// draining and the queue is empty, or shutting down now.
     pub fn next_job(&self, _worker: usize) -> Option<(JobId, JobPayload)> {
-        let mut st = self.inner.st.lock().unwrap();
-        loop {
-            if st.shutdown == ShutdownMode::Now {
-                return None;
-            }
-            // Pop, skipping stale entries: jobs cancelled while queued, and
-            // cancelled jobs whose record retention already evicted.
-            while let Some(entry) = st.queue.pop() {
-                let dispatch = st.next_dispatch;
-                let Some(rec) = st.jobs.get_mut(&entry.id) else { continue };
-                if rec.state != JobState::Queued {
-                    continue;
+        let dispatched = {
+            let mut st = self.inner.st.lock().unwrap();
+            loop {
+                if st.shutdown == ShutdownMode::Now {
+                    break None;
                 }
-                rec.state = JobState::Running;
-                rec.dispatch_seq = Some(dispatch);
-                let payload =
-                    rec.payload.take().expect("queued job still holds its payload");
-                st.note_dequeued(entry.priority);
-                st.next_dispatch += 1;
-                st.running += 1;
-                return Some((entry.id, payload));
+                // Pop, skipping stale entries: jobs cancelled while queued,
+                // and cancelled jobs whose record retention already evicted.
+                let mut found = None;
+                while let Some(entry) = st.queue.pop() {
+                    let dispatch = st.next_dispatch;
+                    let Some(rec) = st.jobs.get_mut(&entry.id) else { continue };
+                    if rec.state != JobState::Queued {
+                        continue;
+                    }
+                    rec.state = JobState::Running;
+                    rec.dispatch_seq = Some(dispatch);
+                    let payload =
+                        rec.payload.take().expect("queued job still holds its payload");
+                    let name = rec.name.clone();
+                    st.note_dequeued(entry.priority);
+                    st.next_dispatch += 1;
+                    st.running += 1;
+                    // Sequence the running transition under the state lock
+                    // (delivered to watchers after it is released, below).
+                    self.emit_locked(JobEvent::Started { id: entry.id, name });
+                    found = Some((entry.id, payload));
+                    break;
+                }
+                if found.is_some() {
+                    break found;
+                }
+                if st.shutdown == ShutdownMode::Drain {
+                    break None;
+                }
+                st = self.inner.cv.wait(st).unwrap();
             }
-            if st.shutdown == ShutdownMode::Drain {
-                return None;
-            }
-            st = self.inner.cv.wait(st).unwrap();
+        };
+        if dispatched.is_some() {
+            self.flush_events();
         }
+        dispatched
     }
 
     /// Record a finished job. `wall_s` is the worker-side solve time.
@@ -446,7 +673,13 @@ impl Scheduler {
             }
         }
         let state = rec.state;
-        let ev = JobEvent::Finished { id, name: rec.name.clone(), state, wall_s };
+        let ev = JobEvent::Finished {
+            id,
+            name: rec.name.clone(),
+            state,
+            wall_s,
+            error: rec.error.clone(),
+        };
         st.running = st.running.saturating_sub(1);
         match state {
             JobState::Done => st.counters.completed += 1,
@@ -463,7 +696,7 @@ impl Scheduler {
     pub fn cancel(&self, id: JobId) -> Result<()> {
         let mut st = self.inner.st.lock().unwrap();
         let Some(rec) = st.jobs.get_mut(&id) else {
-            return Err(Error::Serve(format!("no such job {id}")));
+            return Err(Error::wire(ErrorCode::UnknownJob, format!("no such job {id}")));
         };
         match rec.state {
             JobState::Queued => {
@@ -481,10 +714,10 @@ impl Scheduler {
                 self.flush_events();
                 Ok(())
             }
-            other => Err(Error::Serve(format!(
-                "job {id} is {} and cannot be cancelled",
-                other.as_str()
-            ))),
+            other => Err(Error::wire(
+                ErrorCode::InvalidState,
+                format!("job {id} is {} and cannot be cancelled", other.as_str()),
+            )),
         }
     }
 
@@ -606,7 +839,7 @@ impl Executor for PjrtExecutor {
         let (problem, params) = match payload {
             JobPayload::Spec(spec) => (
                 crate::data::synth::nirep_analog_pair(&self.registry, spec.n, &spec.subject)?,
-                spec.reg_params(),
+                spec.validate()?,
             ),
             // `RegProblem` owns its fields, so executing an uploaded job
             // copies both volumes once. That is bounded by the worker
@@ -617,7 +850,7 @@ impl Executor for PjrtExecutor {
             // every layer for a per-job memcpy.
             JobPayload::Volumes { spec, m0, m1 } => (
                 RegProblem::new(spec.name(), (**m0).clone(), (**m1).clone()),
-                spec.reg_params(),
+                spec.validate()?,
             ),
             JobPayload::Problem { problem, params } => (problem.clone(), params.clone()),
         };
@@ -938,6 +1171,7 @@ mod tests {
         sched.set_event_sink(Box::new(move |ev| {
             let tag = match ev {
                 JobEvent::Submitted { .. } => "submitted",
+                JobEvent::Started { .. } => "started",
                 JobEvent::Finished { state, .. } => state.as_str(),
                 JobEvent::Cancelled { .. } => "cancelled",
             };
@@ -952,7 +1186,94 @@ mod tests {
         sched.complete(id, Ok(stub_report("a")), 0.0);
         assert_eq!(
             *events.lock().unwrap(),
-            vec!["submitted", "submitted", "cancelled", "done"]
+            vec!["submitted", "submitted", "cancelled", "started", "done"]
         );
+    }
+
+    /// Drain one subscriber's currently-visible messages into state tags.
+    fn drain_states(h: &WatchHandle, expect: usize) -> Vec<String> {
+        let mut out = Vec::new();
+        for _ in 0..expect {
+            match h.recv() {
+                Some(BusMsg::Event(ev)) => out.push(ev.state.as_str().to_string()),
+                Some(BusMsg::Lagged) => out.push("lagged".into()),
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn watch_subscribers_see_full_lifecycle_in_order() {
+        let sched = Scheduler::new(8, 1);
+        let h = sched.watch();
+        let a = sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        let b = sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
+        sched.cancel(b).unwrap();
+        let (id, _) = sched.next_job(0).unwrap();
+        assert_eq!(id, a);
+        sched.complete(id, Err(Error::Serve("boom".into())), 0.5);
+        let states = drain_states(&h, 5);
+        assert_eq!(states, vec!["queued", "queued", "cancelled", "running", "failed"]);
+        // Terminal events carry timing + failure detail.
+        let h2 = sched.watch();
+        let c = sched.submit(Priority::Batch, spec("c", Priority::Batch)).unwrap();
+        let (got, _) = sched.next_job(0).unwrap();
+        assert_eq!(got, c);
+        sched.complete(c, Ok(stub_report("c")), 0.25);
+        let mut last = None;
+        for _ in 0..3 {
+            if let Some(BusMsg::Event(ev)) = h2.recv() {
+                last = Some(ev);
+            }
+        }
+        let last = last.unwrap();
+        assert_eq!(last.state, JobState::Done);
+        assert_eq!(last.wall_s, Some(0.25));
+        assert_eq!(last.error, None);
+        sched.unwatch(h.id());
+        sched.unwatch(h2.id());
+        assert!(h.recv().is_none(), "unwatched handle sees end of stream");
+    }
+
+    #[test]
+    fn slow_subscriber_is_dropped_with_terminal_lagged_marker() {
+        let sched = Scheduler::new(64, 1);
+        let slow = sched.watch_with_cap(2);
+        let fast = sched.watch();
+        // 4 submissions = 4 queued events; the slow queue holds 2 + the
+        // lagged marker, the fast one sees all 4.
+        for i in 0..4 {
+            sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap();
+        }
+        let states = drain_states(&slow, 4);
+        assert_eq!(states, vec!["queued", "queued", "lagged"]);
+        assert!(slow.recv().is_none(), "lagged stream is terminal");
+        // The publisher already forgot the lagged subscriber (so a
+        // connection can re-subscribe); the healthy one is still live.
+        assert!(!sched.is_watching(slow.id()));
+        assert!(sched.is_watching(fast.id()));
+        assert_eq!(drain_states(&fast, 4), vec!["queued"; 4]);
+        // The lagged subscriber no longer costs the publisher anything:
+        // further events are delivered to survivors only.
+        sched.submit(Priority::Batch, spec("late", Priority::Batch)).unwrap();
+        assert_eq!(drain_states(&fast, 1), vec!["queued"]);
+        sched.unwatch(fast.id());
+    }
+
+    #[test]
+    fn watch_never_blocks_submitters() {
+        // A subscriber that never drains must not wedge submit/complete:
+        // the queue flips lagged and the workload proceeds.
+        let sched = Scheduler::new(64, 1);
+        let _stuck = sched.watch_with_cap(1);
+        for i in 0..16 {
+            let id =
+                sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap();
+            let (got, _) = sched.next_job(0).unwrap();
+            assert_eq!(got, id);
+            sched.complete(id, Ok(stub_report("x")), 0.0);
+        }
+        assert_eq!(sched.stats().completed, 16);
     }
 }

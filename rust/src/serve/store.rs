@@ -22,7 +22,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use crate::error::{Error, Result};
+use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
 use crate::serve::proto::MAX_GRID_N;
 
@@ -123,7 +123,10 @@ impl VolumeStore {
     /// single volume larger than the whole budget.
     pub fn put(&self, n: usize, data: Vec<f32>) -> Result<UploadReceipt> {
         if n == 0 || n > MAX_GRID_N {
-            return Err(Error::Serve(format!("volume n = {n} out of range (1..={MAX_GRID_N})")));
+            return Err(Error::wire(
+                ErrorCode::BadRequest,
+                format!("volume n = {n} out of range (1..={MAX_GRID_N})"),
+            ));
         }
         if data.len() != n * n * n {
             return Err(Error::ShapeMismatch {
@@ -134,10 +137,13 @@ impl VolumeStore {
         }
         let bytes = (data.len() * 4) as u64;
         if bytes > self.budget {
-            return Err(Error::Serve(format!(
-                "volume of {bytes} bytes exceeds the store budget ({} bytes)",
-                self.budget
-            )));
+            return Err(Error::wire(
+                ErrorCode::BadRequest,
+                format!(
+                    "volume of {bytes} bytes exceeds the store budget ({} bytes)",
+                    self.budget
+                ),
+            ));
         }
         let id = content_id(n, &data);
         let mut st = self.inner.lock().unwrap();

@@ -25,6 +25,16 @@ fn decode_one(b: u8) -> u8 {
 /// Encode `bytes` as standard padded base64.
 pub fn encode(bytes: &[u8]) -> String {
     let mut out = String::with_capacity(bytes.len() * 4 / 3 + 4);
+    encode_into(bytes, &mut out);
+    out
+}
+
+/// Encode `bytes` as standard padded base64, appending to `out`. Lets the
+/// serve data plane render a volume payload straight into a protocol line
+/// without holding a second base64 `String` alongside it (the upload hot
+/// path peaks at one transient copy of the payload).
+pub fn encode_into(bytes: &[u8], out: &mut String) {
+    out.reserve(bytes.len() * 4 / 3 + 4);
     for chunk in bytes.chunks(3) {
         let b0 = chunk[0] as u32;
         let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
@@ -35,7 +45,6 @@ pub fn encode(bytes: &[u8]) -> String {
         out.push(if chunk.len() > 1 { ALPHABET[(v >> 6) as usize & 63] as char } else { '=' });
         out.push(if chunk.len() > 2 { ALPHABET[v as usize & 63] as char } else { '=' });
     }
-    out
 }
 
 /// Decode standard padded base64. Errors on length not a multiple of 4,
@@ -108,6 +117,13 @@ mod tests {
             let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
             assert_eq!(decode(&encode(&data)).unwrap(), data, "len {len}");
         }
+    }
+
+    #[test]
+    fn encode_into_appends() {
+        let mut out = String::from("prefix:");
+        encode_into(b"foobar", &mut out);
+        assert_eq!(out, "prefix:Zm9vYmFy");
     }
 
     #[test]

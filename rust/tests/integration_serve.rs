@@ -13,10 +13,10 @@ use std::sync::Arc;
 use claire::error::Result;
 use claire::registration::RunReport;
 use claire::serve::{
-    scheduler::stub_report, Client, Daemon, DaemonConfig, Executor, ExecutorFactory, JobPayload,
-    JobSource, JobSpec, JobState, Priority,
+    scheduler::stub_report, Client, Daemon, DaemonConfig, EventMsg, Executor, ExecutorFactory,
+    JobPayload, JobSource, JobSpec, JobState, Priority, Verdict,
 };
-use claire::Precision;
+use claire::{ErrorCode, Precision};
 
 /// Stub worker: sleeps `max_iter` milliseconds per job (so tests control
 /// service time through the spec) and emulates the shared-warm operator
@@ -509,4 +509,364 @@ fn store_eviction_over_the_wire() {
 
     client.shutdown(true).unwrap();
     handle.join().unwrap();
+}
+
+// -- Protocol v2 ------------------------------------------------------------
+
+/// Write one raw line, read one raw line (trailing newline stripped).
+fn raw_call(
+    stream: &mut std::net::TcpStream,
+    reader: &mut std::io::BufReader<std::net::TcpStream>,
+    line: &str,
+) -> String {
+    use std::io::{BufRead, Write};
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    resp.trim_end_matches('\n').to_string()
+}
+
+fn raw_conn(
+    addr: std::net::SocketAddr,
+) -> (std::net::TcpStream, std::io::BufReader<std::net::TcpStream>) {
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+/// The v1 compatibility guarantee, pinned byte-for-byte: a connection that
+/// never sends `hello` gets exactly the responses the pre-v2 daemon
+/// produced — same keys, same error strings, no `code`/`retryable`/`seq`
+/// fields, and v2-only verbs answered as unknown commands.
+#[test]
+fn v1_raw_lines_are_byte_compatible() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let (mut s, mut r) = raw_conn(handle.addr());
+
+    assert_eq!(raw_call(&mut s, &mut r, r#"{"cmd":"ping"}"#), r#"{"ok":true}"#);
+    // A v1 line that happens to carry a seq field: ignored, never echoed.
+    assert_eq!(raw_call(&mut s, &mut r, r#"{"cmd":"ping","seq":9}"#), r#"{"ok":true}"#);
+    // First submitted job gets id 1 (fresh daemon, no journal).
+    assert_eq!(
+        raw_call(
+            &mut s,
+            &mut r,
+            r#"{"cmd":"submit","job":{"subject":"na03","n":16,"priority":"urgent","max_iter":1}}"#,
+        ),
+        r#"{"id":1,"ok":true}"#
+    );
+    // Error strings are byte-identical opaque messages in v1.
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"status","id":999}"#),
+        r#"{"error":"no such job 999","ok":false}"#
+    );
+    // `cancel` historically routed through Error::Serve, so its message
+    // carries the legacy prefix (unlike `status`, formatted inline).
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"cancel","id":999}"#),
+        r#"{"error":"serve error: no such job 999","ok":false}"#
+    );
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"warp"}"#),
+        r#"{"error":"serve error: unknown command 'warp'","ok":false}"#
+    );
+    // v2-only verbs on an un-negotiated connection keep v1 semantics.
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"watch"}"#),
+        r#"{"error":"serve error: unknown command 'watch'","ok":false}"#
+    );
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"submit_batch","jobs":[{}]}"#),
+        r#"{"error":"serve error: unknown command 'submit_batch'","ok":false}"#
+    );
+    // Range rejection happens at admission now, with the same message the
+    // v1 decoder produced.
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"submit","job":{"n":5000}}"#),
+        r#"{"error":"serve error: job field 'n' = 5000 out of range (1..=512)","ok":false}"#
+    );
+    // Unparseable lines answer an opaque error and keep the connection.
+    let resp = raw_call(&mut s, &mut r, "not json");
+    assert!(resp.starts_with(r#"{"error":"JSON parse error"#), "{resp}");
+    assert!(resp.ends_with(r#","ok":false}"#), "{resp}");
+    assert_eq!(raw_call(&mut s, &mut r, r#"{"cmd":"ping"}"#), r#"{"ok":true}"#);
+    drop(s);
+
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    client.wait_idle(10.0).unwrap();
+    client.shutdown(false).unwrap();
+    handle.join().unwrap();
+}
+
+/// `hello` negotiation: the response advertises proto + features, and the
+/// session switches to seq echo + structured errors (pinned bytes).
+#[test]
+fn hello_negotiates_v2_sessions() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 1,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let (mut s, mut r) = raw_conn(handle.addr());
+
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"hello","proto":2,"seq":1}"#),
+        r#"{"features":["seq","watch","submit_batch","structured_errors"],"ok":true,"proto":2,"seq":1}"#
+    );
+    assert_eq!(raw_call(&mut s, &mut r, r#"{"cmd":"ping","seq":7}"#), r#"{"ok":true,"seq":7}"#);
+    // Structured bad_request with the seq echoed even though the body was
+    // rejected.
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"submit","job":{"n":5000},"seq":8}"#),
+        concat!(
+            r#"{"code":"bad_request","error":"serve error: job field 'n' = 5000 out of range (1..=512)","#,
+            r#""ok":false,"retryable":false,"seq":8}"#
+        )
+    );
+    // Unparseable lines are structured bad_request too (no seq: unknown).
+    let resp = raw_call(&mut s, &mut r, "@@@@");
+    assert!(resp.contains(r#""code":"bad_request""#), "{resp}");
+    assert!(resp.contains(r#""retryable":false"#), "{resp}");
+
+    // queue_full is retryable. Occupy the worker, fill the 1-slot queue.
+    let mut helper = Client::connect(&handle.addr().to_string()).unwrap();
+    let blocker =
+        raw_call(&mut s, &mut r, r#"{"cmd":"submit","job":{"max_iter":400},"seq":9}"#);
+    assert!(blocker.contains(r#""ok":true"#), "{blocker}");
+    wait_running(&mut helper, 1);
+    let queued = raw_call(&mut s, &mut r, r#"{"cmd":"submit","job":{"max_iter":1},"seq":10}"#);
+    assert!(queued.contains(r#""ok":true"#), "{queued}");
+    let full = raw_call(&mut s, &mut r, r#"{"cmd":"submit","job":{"max_iter":1},"seq":11}"#);
+    assert!(full.contains(r#""code":"queue_full""#), "{full}");
+    assert!(full.contains(r#""retryable":true"#), "{full}");
+    assert!(full.contains(r#""seq":11"#), "{full}");
+    drop(s);
+
+    helper.wait_idle(30.0).unwrap();
+    helper.shutdown(false).unwrap();
+    handle.join().unwrap();
+}
+
+/// A client that only speaks v1 sends `hello` with proto 1: the daemon
+/// acknowledges and the session stays v1 (no seq echo).
+#[test]
+fn hello_proto1_stays_v1() {
+    let handle = Daemon::start(
+        DaemonConfig { addr: "127.0.0.1:0".into(), workers: 1, ..Default::default() },
+        stub_factory(),
+    )
+    .unwrap();
+    let (mut s, mut r) = raw_conn(handle.addr());
+    assert_eq!(
+        raw_call(&mut s, &mut r, r#"{"cmd":"hello","proto":1}"#),
+        r#"{"features":[],"ok":true,"proto":1}"#
+    );
+    assert_eq!(raw_call(&mut s, &mut r, r#"{"cmd":"ping","seq":3}"#), r#"{"ok":true}"#);
+    drop(s);
+    handle.shutdown(false);
+    handle.join().unwrap();
+}
+
+/// The watch acceptance scenario (and the CI watch smoke): a v2 session
+/// subscribes, another connection submits, and the full
+/// queued -> running -> done lifecycle streams back with the watch seq on
+/// every event.
+#[test]
+fn watch_streams_job_lifecycle() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut watcher = Client::connect(&addr).unwrap();
+    let features = watcher.hello().unwrap();
+    assert!(features.contains(&"watch".to_string()), "{features:?}");
+    let wseq = watcher.watch().unwrap();
+    assert!(wseq.is_some(), "v2 session correlates the subscription");
+
+    let mut submitter = Client::connect(&addr).unwrap();
+    submitter.hello().unwrap();
+    let id = submitter.submit(&spec("na02", Priority::Urgent, 30)).unwrap();
+
+    let mut events = Vec::new();
+    while events.len() < 3 {
+        match watcher.next_event().unwrap() {
+            EventMsg::Job { id: eid, name, state, seq, wall_s, error } if eid == id => {
+                assert_eq!(seq, wseq, "every event echoes the watch seq");
+                assert!(name.starts_with("na02@16^3/"), "{name}");
+                events.push((state, wall_s, error));
+            }
+            EventMsg::Job { .. } => {}
+            EventMsg::Lagged { .. } => panic!("watcher should not lag"),
+        }
+    }
+    let states: Vec<&str> = events.iter().map(|(s, _, _)| s.as_str()).collect();
+    assert_eq!(states, vec!["queued", "running", "done"]);
+    assert!(events[2].1.is_some(), "terminal event carries wall_s");
+    assert!(events[2].2.is_none(), "successful job has no error");
+
+    // The watching connection still answers requests (multiplexed writes).
+    watcher.ping().unwrap();
+
+    submitter.shutdown(true).unwrap();
+    drop(watcher);
+    handle.join().unwrap();
+}
+
+/// `submit_batch`: one line, many jobs, per-job admission verdicts — and
+/// rejected jobs do not poison admitted ones.
+#[test]
+fn submit_batch_returns_per_job_verdicts() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 2,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    client.hello().unwrap();
+
+    // Occupy the worker so the batch is a pure queueing decision.
+    let blocker = client.submit(&spec("na02", Priority::Batch, 400)).unwrap();
+    wait_running(&mut client, 1);
+
+    let jobs = vec![
+        spec("na02", Priority::Batch, 1),
+        spec("na03", Priority::Batch, 1),
+        spec("na10", Priority::Batch, 1),          // queue full by now
+        JobSpec { n: 5000, ..JobSpec::default() }, // invalid: bad_request
+        spec("na10", Priority::Emergency, 1),      // bypasses the bound
+    ];
+    let verdicts = client.submit_batch(&jobs).unwrap();
+    assert_eq!(verdicts.len(), 5);
+    let mut admitted_ids = Vec::new();
+    for (i, v) in verdicts.iter().enumerate() {
+        match (i, v) {
+            (0 | 1 | 4, Verdict::Admitted { id }) => admitted_ids.push(*id),
+            (2, Verdict::Rejected { code, retryable, .. }) => {
+                assert_eq!(*code, ErrorCode::QueueFull);
+                assert!(*retryable);
+            }
+            (3, Verdict::Rejected { code, retryable, .. }) => {
+                assert_eq!(*code, ErrorCode::BadRequest);
+                assert!(!*retryable);
+            }
+            other => panic!("unexpected verdict {other:?}"),
+        }
+    }
+    assert_eq!(admitted_ids.len(), 3);
+    assert!(admitted_ids.windows(2).all(|w| w[0] < w[1]), "ids in order: {admitted_ids:?}");
+    assert!(admitted_ids.iter().all(|&id| id > blocker));
+
+    let stats = client.wait_idle(30.0).unwrap();
+    assert_eq!(stats.completed, 4, "blocker + three admitted batch jobs");
+    assert_eq!(stats.rejected, 1, "only the queue_full rejection counts");
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// Structured codes cover every daemon error path in a v2 session, and
+/// the typed client surfaces them as `Error::Wire` with the right CLI
+/// exit codes.
+#[test]
+fn v2_errors_carry_stable_codes() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    client.hello().unwrap();
+
+    // unknown_job (status + cancel).
+    let err = client.status(999).unwrap_err();
+    assert_eq!(err.code(), ErrorCode::UnknownJob);
+    assert_eq!(err.exit_code(), 66);
+    assert_eq!(client.cancel(999).unwrap_err().code(), ErrorCode::UnknownJob);
+
+    // unknown_volume.
+    let err = client
+        .submit(&JobSpec {
+            n: 4,
+            source: JobSource::Uploaded { m0: "00beef".into(), m1: "00dead".into() },
+            ..Default::default()
+        })
+        .unwrap_err();
+    assert_eq!(err.code(), ErrorCode::UnknownVolume);
+
+    // shape_mismatch: stored shape disagrees with the job's n.
+    let receipt = client.upload(4, &[1.0f32; 64]).unwrap();
+    let err = client
+        .submit(&JobSpec {
+            n: 8,
+            source: JobSource::Uploaded { m0: receipt.id.clone(), m1: receipt.id.clone() },
+            ..Default::default()
+        })
+        .unwrap_err();
+    assert_eq!(err.code(), ErrorCode::ShapeMismatch);
+    assert_eq!(err.exit_code(), 65);
+
+    // invalid_state: cancelling a finished job.
+    let id = client.submit(&spec("na02", Priority::Batch, 1)).unwrap();
+    client.wait_terminal(id, 10.0).unwrap();
+    let err = client.cancel(id).unwrap_err();
+    assert_eq!(err.code(), ErrorCode::InvalidState);
+
+    // bad_request from a malformed upload payload.
+    let err = client.upload(4, &[1.0f32; 63]).unwrap_err();
+    assert_eq!(err.code(), ErrorCode::BadRequest);
+    assert_eq!(err.exit_code(), 64);
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// `connect_with_timeout` bounds the whole exchange: a daemon that
+/// accepts but never answers fails the call with an I/O error (CLI exit
+/// 69) instead of wedging forever.
+#[test]
+fn client_timeout_fails_instead_of_wedging() {
+    use std::time::{Duration, Instant};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Accept and hold the connection open without ever responding.
+    let holder = std::thread::spawn(move || {
+        let conn = listener.accept();
+        std::thread::sleep(Duration::from_millis(600));
+        drop(conn);
+    });
+    let mut client = Client::connect_with_timeout(&addr, Duration::from_millis(120)).unwrap();
+    let t0 = Instant::now();
+    let err = client.ping().unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "timed out promptly, not wedged: {:?}",
+        t0.elapsed()
+    );
+    assert!(matches!(err, claire::Error::Io(_)), "transport failure: {err}");
+    assert_eq!(err.exit_code(), 69, "scripts see EX_UNAVAILABLE");
+    holder.join().unwrap();
 }

@@ -1,0 +1,327 @@
+//! Property-based wire-protocol tests (via the in-tree `util/prop.rs`
+//! mini-framework): randomized `Request`/`Response`/`JobRequest` JSON
+//! encode→parse round-trips, v1-subset lines decoded by the v2 parser,
+//! and a fuzz pass of invalid lines against a *live* daemon — every one
+//! must come back as a structured `bad_request` on a connection that
+//! stays usable; none may panic the daemon or drop the peer.
+
+use std::sync::Arc;
+
+use claire::error::Result;
+use claire::registration::RunReport;
+use claire::serve::{
+    scheduler::stub_report, Daemon, DaemonConfig, Executor, ExecutorFactory, JobPayload,
+    JobRequest, JobSource, Priority, Request, Response,
+};
+use claire::util::json::Json;
+use claire::util::prop::{self, Config};
+use claire::util::rng::Rng;
+use claire::{ErrorCode, Precision};
+
+fn gen_job_request(r: &mut Rng) -> JobRequest {
+    let mut req = JobRequest {
+        subject: format!("na{:02}", r.below(30)),
+        n: 1 + r.below(512) as usize,
+        ..Default::default()
+    };
+    if r.below(2) == 1 {
+        req.variant = "opt-fd8-linear".into();
+    }
+    if r.below(2) == 1 {
+        req.precision = Precision::Mixed;
+    }
+    if r.below(3) == 0 {
+        req.source = JobSource::Uploaded {
+            m0: format!("{:016x}", r.next_u64()),
+            m1: format!("{:016x}", r.next_u64()),
+        };
+    }
+    if r.below(2) == 1 {
+        req.multires = Some(1 + r.below(6) as usize);
+    }
+    req.priority = match r.below(3) {
+        0 => Priority::Batch,
+        1 => Priority::Urgent,
+        _ => Priority::Emergency,
+    };
+    if r.below(2) == 1 {
+        req.max_iter = Some(1 + r.below(200) as usize);
+    }
+    if r.below(3) == 0 {
+        req.max_krylov = Some(1 + r.below(500) as usize);
+    }
+    if r.below(2) == 1 {
+        req.beta = Some((1 + r.below(100_000)) as f64 * 1e-8);
+    }
+    if r.below(3) == 0 {
+        req.gamma = Some(r.below(1000) as f64 * 1e-6);
+    }
+    if r.below(2) == 1 {
+        req.gtol = Some((1 + r.below(1000)) as f64 * 1e-4);
+    }
+    if r.below(2) == 1 {
+        req.continuation = Some(r.below(2) == 1);
+    }
+    if r.below(3) == 0 {
+        req.incompressible = Some(r.below(2) == 1);
+    }
+    if r.below(3) == 0 {
+        req.verbose = Some(r.below(2) == 1);
+    }
+    req
+}
+
+#[test]
+fn prop_job_request_json_roundtrip() {
+    prop::check_msg(
+        Config { cases: 200, seed: 0x11 },
+        gen_job_request,
+        |req| {
+            let decoded = JobRequest::from_json(&req.to_json())
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if &decoded != req {
+                return Err(format!("mismatch: {decoded:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_request_lines_roundtrip_with_seq() {
+    prop::check_msg(
+        Config { cases: 200, seed: 0x12 },
+        |r| {
+            let req = match r.below(8) {
+                0 => Request::Ping,
+                1 => Request::Hello { proto: 1 + r.below(4) },
+                2 => Request::Submit(gen_job_request(r)),
+                3 => Request::SubmitBatch(
+                    (0..1 + r.below(4)).map(|_| gen_job_request(r)).collect(),
+                ),
+                4 => Request::Status(if r.below(2) == 1 { Some(r.below(1000)) } else { None }),
+                5 => Request::Cancel(r.below(1000)),
+                6 => Request::Watch,
+                _ => Request::Shutdown { drain: r.below(2) == 1 },
+            };
+            let seq = if r.below(2) == 1 { Some(r.below(1 << 40)) } else { None };
+            (req, seq)
+        },
+        |(req, seq)| {
+            let line = req.to_line_with_seq(*seq);
+            if line.contains('\n') {
+                return Err("line discipline broken".into());
+            }
+            let (got_seq, parsed) = Request::parse_line(&line);
+            if got_seq != *seq {
+                return Err(format!("seq mismatch: {got_seq:?} vs {seq:?}"));
+            }
+            let parsed = parsed.map_err(|e| format!("parse failed: {e} ({line})"))?;
+            if &parsed != req {
+                return Err(format!("request mismatch: {parsed:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A v1-era client encodes only the original field subset; the v2 parser
+/// must decode those lines with identical defaults.
+#[test]
+fn prop_v1_subset_job_lines_decode_with_defaults() {
+    prop::check_msg(
+        Config { cases: 100, seed: 0x13 },
+        |r| {
+            let mut fields = Vec::new();
+            if r.below(2) == 1 {
+                fields.push(("subject", Json::str(format!("na{:02}", r.below(30)))));
+            }
+            if r.below(2) == 1 {
+                fields.push(("n", Json::num((1 + r.below(256)) as f64)));
+            }
+            if r.below(2) == 1 {
+                fields.push(("priority", Json::str("urgent")));
+            }
+            if r.below(2) == 1 {
+                fields.push(("max_iter", Json::num((1 + r.below(50)) as f64)));
+            }
+            Json::object(fields).render()
+        },
+        |line| {
+            let req = JobRequest::from_json(&Json::parse(line).unwrap())
+                .map_err(|e| format!("v1 subset rejected: {e} ({line})"))?;
+            // Absent v2 knobs take the same defaults a v1 JobSpec had.
+            if req.multires.is_some() || req.max_krylov.is_some() || req.gamma.is_some() {
+                return Err("phantom v2 fields decoded".into());
+            }
+            if req.precision != Precision::Full || req.source != JobSource::Synthetic {
+                return Err("v1 defaults drifted".into());
+            }
+            req.validate().map_err(|e| format!("v1 subset fails validate: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_response_error_roundtrip_v1_and_v2() {
+    let codes = [
+        ErrorCode::BadRequest,
+        ErrorCode::QueueFull,
+        ErrorCode::ShuttingDown,
+        ErrorCode::UnknownJob,
+        ErrorCode::UnknownVolume,
+        ErrorCode::ShapeMismatch,
+        ErrorCode::InvalidState,
+        ErrorCode::Internal,
+    ];
+    prop::check_msg(
+        Config { cases: 100, seed: 0x14 },
+        |r| {
+            let code = codes[r.below(codes.len() as u64) as usize];
+            let msg = format!("failure {:x} \"quoted\" \\slash", r.next_u64());
+            let seq = if r.below(2) == 1 { Some(r.below(1 << 30)) } else { None };
+            (code, msg, seq)
+        },
+        |(code, msg, seq)| {
+            let resp =
+                Response::Error { code: *code, retryable: code.retryable(), msg: msg.clone() };
+            // v2 line carries the code and echoes seq.
+            match Response::parse(&resp.to_line_v2(*seq)) {
+                Ok(Response::Error { code: c, retryable, msg: m }) => {
+                    if c != *code || retryable != code.retryable() || &m != msg {
+                        return Err(format!("v2 roundtrip drifted: {c:?} {retryable} {m}"));
+                    }
+                }
+                other => return Err(format!("v2 parse: {other:?}")),
+            }
+            // v1 line hides the code but keeps the exact message.
+            match Response::parse(&resp.to_line()) {
+                Ok(Response::Error { code: c, msg: m, .. }) if m == *msg => {
+                    if c != ErrorCode::Internal {
+                        return Err(format!("v1 line leaked a code: {c:?}"));
+                    }
+                }
+                other => return Err(format!("v1 parse: {other:?}")),
+            }
+            Ok(())
+        },
+    );
+}
+
+// -- Fuzz against a live daemon ---------------------------------------------
+
+struct InstantStub;
+
+impl Executor for InstantStub {
+    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+        Ok(stub_report(&payload.name()))
+    }
+}
+
+fn stub_factory() -> ExecutorFactory {
+    Arc::new(|_w| Ok(Box::new(InstantStub) as Box<dyn Executor>))
+}
+
+/// Generate one invalid-but-bounded request line. Three families: raw
+/// garbage (prefixed so it can never parse as JSON), structurally valid
+/// JSON with wrong types, and valid requests with a corrupted body.
+fn gen_invalid_line(r: &mut Rng) -> String {
+    match r.below(3) {
+        0 => {
+            let len = 1 + r.below(200) as usize;
+            let mut s = String::from("@");
+            for _ in 0..len {
+                // Printable ASCII minus newline; '@' prefix keeps it
+                // un-JSON regardless of what follows.
+                s.push((0x20 + r.below(0x5e) as u8) as char);
+            }
+            s
+        }
+        1 => {
+            let bodies = [
+                r#"{"cmd":5}"#,
+                r#"{"cmd":"submit","job":5}"#,
+                r#"{"cmd":"submit","job":{"n":"x"}}"#,
+                r#"{"cmd":"submit_batch","jobs":{}}"#,
+                r#"{"cmd":"cancel","id":1.5}"#,
+                r#"{"cmd":"status","id":[]}"#,
+                r#"{"cmd":"shutdown","drain":"maybe"}"#,
+                r#"{"cmd":"upload","n":2,"data":"!!"}"#,
+                r#"{"cmd":"hello","proto":0}"#,
+                r#"{"nothing":"here"}"#,
+                r#"[1,2,3]"#,
+            ];
+            bodies[r.below(bodies.len() as u64) as usize].to_string()
+        }
+        _ => {
+            // Truncate a valid submit line mid-body.
+            let line = Request::Submit(gen_job_request(r)).to_line();
+            let cut = 1 + r.below((line.len() - 1) as u64) as usize;
+            line[..cut].to_string()
+        }
+    }
+}
+
+/// Every fuzzed invalid line must yield a structured `bad_request` (v2
+/// session) and leave the connection serving — never a panic, hang, or
+/// disconnect. `[1,2,3]` style non-object JSON included.
+#[test]
+fn fuzzed_invalid_lines_yield_bad_request_not_connection_drops() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 4,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut stream = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut call = |line: &str| -> String {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(!resp.is_empty(), "connection dropped after: {line}");
+        resp.trim_end_matches('\n').to_string()
+    };
+    // Upgrade to v2 so errors are structured.
+    assert!(call(r#"{"cmd":"hello","proto":2}"#).contains(r#""proto":2"#));
+
+    let mut r = Rng::new(0xF00D);
+    for case in 0..120 {
+        let line = gen_invalid_line(&mut r);
+        let resp = call(&line);
+        let parsed = Response::parse(&resp)
+            .unwrap_or_else(|e| panic!("case {case}: unparseable response {resp}: {e}"));
+        match parsed {
+            Response::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::BadRequest, "case {case}: {line} -> {resp}");
+                assert!(!retryable, "bad requests are never retryable: {resp}");
+            }
+            other => panic!("case {case}: fuzz line accepted: {line} -> {other:?}"),
+        }
+        // The connection still serves after every piece of garbage.
+        if case % 20 == 0 {
+            assert!(call(r#"{"cmd":"ping"}"#).contains(r#""ok":true"#));
+        }
+    }
+    // And well-formed traffic still flows end to end.
+    let resp = call(r#"{"cmd":"submit","job":{"max_iter":1},"seq":1}"#);
+    assert!(resp.contains(r#""ok":true"#), "{resp}");
+    assert!(resp.contains(r#""seq":1"#), "{resp}");
+    // submit_batch verdicts survive fuzz too.
+    let resp = call(r#"{"cmd":"submit_batch","jobs":[{"max_iter":1},{"n":5000}],"seq":2}"#);
+    assert!(resp.contains(r#""results":"#), "{resp}");
+    assert!(resp.contains(r#""code":"bad_request""#), "{resp}");
+    drop(stream);
+
+    let mut client = claire::serve::Client::connect(&handle.addr().to_string()).unwrap();
+    client.wait_idle(10.0).unwrap();
+    client.shutdown(false).unwrap();
+    handle.join().unwrap();
+}

@@ -29,6 +29,12 @@ cargo test -q serve_round_trip_smoke
 echo "== serve data-plane smoke: upload -> submit -> status (stub executor) =="
 cargo test -q --test integration_serve upload_submit_status_round_trip
 
+echo "== protocol v1-compat smoke: raw pre-hello lines round-trip byte-identically =="
+cargo test -q --test integration_serve v1_raw_lines_are_byte_compatible
+
+echo "== protocol v2 watch smoke: queued,running,done event stream for one job =="
+cargo test -q --test integration_serve watch_streams_job_lifecycle
+
 echo "== cargo test -q (tier-1) =="
 cargo test -q
 

@@ -87,7 +87,11 @@ struct PcgExec {
 }
 
 impl Executor for PcgExec {
-    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
         let JobPayload::Spec(spec) = payload else {
             return Ok(stub_report("problem"));
         };

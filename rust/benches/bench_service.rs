@@ -34,7 +34,11 @@ struct SpinExec {
 }
 
 impl Executor for SpinExec {
-    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
         let t0 = Instant::now();
         while t0.elapsed() < self.service {
             std::hint::spin_loop();

@@ -87,6 +87,9 @@ impl Config {
         if let Some(s) = self.get("precision") {
             req.precision = Precision::parse(s)?;
         }
+        if let Some(s) = self.get("algorithm") {
+            req.algorithm = crate::registration::algorithm::AlgorithmKind::parse(s)?;
+        }
         if self.get("beta").is_some() {
             req.beta = Some(self.get_f64("beta", 0.0)?);
         }
@@ -169,6 +172,16 @@ mod tests {
         assert_eq!(c.reg_params().unwrap().precision, Precision::Mixed);
         let bad = Config::parse("precision = fp8\n").unwrap();
         assert!(bad.reg_params().is_err());
+    }
+
+    #[test]
+    fn algorithm_key_parses_and_rejects_unknown() {
+        use crate::registration::algorithm::AlgorithmKind;
+        let c = Config::parse("algorithm = gd\n").unwrap();
+        assert_eq!(c.reg_params().unwrap().algorithm, AlgorithmKind::GradientDescent);
+        let d = Config::parse("beta = 5e-4\n").unwrap();
+        assert_eq!(d.reg_params().unwrap().algorithm, AlgorithmKind::GaussNewton);
+        assert!(Config::parse("algorithm = newton\n").unwrap().reg_params().is_err());
     }
 
     #[test]

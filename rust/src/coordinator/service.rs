@@ -26,9 +26,11 @@ use crate::serve::scheduler::{
 use std::path::PathBuf;
 
 /// One queued registration job. The job shape matches the serve daemon's:
-/// `params` carries the full solver policy — precision *and* the
-/// `multires` level count — so a batch entry runs exactly what the wire's
-/// `submit` would (`GnSolver::solve_auto` dispatches in both paths).
+/// `params` carries the full solver policy — the algorithm, precision
+/// *and* the `multires` level count — so a batch entry runs exactly what
+/// the wire's `submit` would (the same `Session` entry point dispatches
+/// in both paths, and batch jobs inherit cooperative cancellation for
+/// free through the shared worker loop).
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: usize,

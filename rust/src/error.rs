@@ -132,6 +132,13 @@ pub enum Error {
     #[error("solver error: {0}")]
     Solver(String),
 
+    /// A solve interrupted cooperatively at an iteration boundary
+    /// (`SolveCx` cancellation). Carries the iterations completed before
+    /// the interrupt so callers (the serve scheduler, batch drivers) can
+    /// report partial work instead of discarding it.
+    #[error("solve cancelled after {} iterations", history.len())]
+    Cancelled { history: Vec<crate::registration::solver::IterRecord> },
+
     #[error("config error: {0}")]
     Config(String),
 

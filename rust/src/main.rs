@@ -8,7 +8,8 @@
 //!   submit     submit job(s) to a running daemon (synthetic or uploaded)
 //!   watch      stream live job events from a running daemon (protocol v2)
 //!   status     job table + stats from a running daemon
-//!   cancel     cancel a queued job on a running daemon
+//!   cancel     cancel a queued or running job (running solves stop at
+//!              the next solver iteration boundary)
 //!   shutdown   stop a running daemon (drain by default)
 //!   transport  warp the atlas with a random velocity (data utility)
 //!   info       artifact inventory and platform info
@@ -30,7 +31,7 @@ use std::path::{Path, PathBuf};
 use claire::coordinator::{BatchService, Job};
 use claire::data::synth;
 use claire::error::Result;
-use claire::registration::{BaselineKind, GnSolver, RunReport};
+use claire::registration::{GaussNewtonKrylov, RunReport, Session};
 use claire::runtime::OpRegistry;
 use claire::serve::client::job_table;
 use claire::serve::{
@@ -64,8 +65,9 @@ fn common_specs() -> Vec<OptSpec> {
         opt("gtol", "relative gradient tolerance", "5e-2"),
         opt("max-iter", "max Gauss-Newton iterations", "50"),
         opt("workers", "batch worker threads", "2"),
-        opt("optimizer", "gn | gd | lbfgs", "gn"),
-        opt("max-fo-iter", "iteration cap for gd/lbfgs", "100"),
+        opt("algorithm", "solve algorithm: gn | gd | lbfgs", "gn"),
+        opt("optimizer", "legacy alias for --algorithm", "gn"),
+        opt("max-fo-iter", "iteration cap for gd/lbfgs (when --max-iter unset)", "100"),
         opt("dump-volumes", "directory to write before/after volumes", ""),
         opt("config", "key=value config file (overridden by flags)", ""),
         opt("multires", "grid-continuation levels (1 = single grid)", "1"),
@@ -156,57 +158,48 @@ fn print_help() {
 
 fn cmd_register(args: &Args) -> Result<()> {
     let reg = open_registry(args)?;
+    // `--optimizer`, the legacy spelling of `--algorithm`, is honored by
+    // the shared `JobRequest::from_args` path (so submit/batch accept it
+    // identically).
     let req = JobRequest::from_args(args)?;
+    // First-order budgets resolve in the shared path: explicit
+    // --max-iter/--max-fo-iter/config win, otherwise validate() applies
+    // FIRST_ORDER_DEFAULT_MAX_ITER — identically on every surface.
     let params = req.validate()?;
     let (n, subject) = (req.n, req.subject.clone());
     println!("[claire] generating synthetic pair {subject}->na01 at {n}^3 ...");
     let prob = synth::nirep_analog_pair(&reg, n, &subject)?;
-    let solver = GnSolver::new(&reg, params.clone());
-    let tc = solver.precompile(n)?;
-    println!("[claire] operators compiled in {tc:.1}s (one-time per process)");
+    let solver = GaussNewtonKrylov::new(&reg, params.clone());
+    // Multires-aware warm-up: every planned coarse level compiles here,
+    // not inside the timed solve (per-level breakdown printed).
+    let plan = solver.precompile_plan(n)?;
+    let total: f64 = plan.iter().map(|l| l.seconds).sum();
+    let detail = plan
+        .iter()
+        .map(|l| format!("{}^3 {:.1}s", l.n, l.seconds))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!("[claire] operators compiled in {total:.1}s ({detail}; one-time per process)");
 
-    match args.get_or("optimizer", "gn").as_str() {
-        "gn" => {
-            // `params.multires` (from --multires / config) picks grid
-            // continuation; the report's `lvls` column shows the realized
-            // depth.
-            let res = solver.solve_auto(&prob)?;
-            let report = RunReport::build(&solver, &prob, &res)?;
-            let mut t = Table::new(&RunReport::headers());
-            t.row(&report.row());
-            t.print();
-            if !res.converged {
-                println!("(not converged to gtol within iteration budget)");
-            }
-            dump_volumes(args, &reg, &solver, &prob, &res)?;
-        }
-        "gd" | "lbfgs" => {
-            let kind = if args.get_or("optimizer", "gn") == "gd" {
-                BaselineKind::GradientDescent
-            } else {
-                BaselineKind::Lbfgs
-            };
-            let max_iter = args.get_usize("max-fo-iter", 100)?;
-            let res = claire::registration::run_baseline(&reg, &prob, &params, kind, max_iter)?;
-            println!(
-                "{}: iters={} evals={} mismatch={:.2e} J={:.4e} time={:.2}s",
-                kind.label(),
-                res.iters,
-                res.evals,
-                res.mismatch_rel,
-                res.j,
-                res.time_s
-            );
-        }
-        other => return Err(claire::Error::Config(format!("unknown optimizer '{other}'"))),
+    // One entry point for every algorithm: GN-Krylov (with multires /
+    // continuation from the params) and the first-order baselines all run
+    // through the Session and report the same way.
+    let res = Session::new(&reg).params(params).solve(&prob)?;
+    let report = RunReport::build(&solver, &prob, &res)?;
+    let mut t = Table::new(&RunReport::headers());
+    t.row(&report.row());
+    t.print();
+    if !res.converged {
+        println!("(not converged to gtol within iteration budget)");
     }
+    dump_volumes(args, &reg, &solver, &prob, &res)?;
     Ok(())
 }
 
 fn dump_volumes(
     args: &Args,
     _reg: &OpRegistry,
-    solver: &GnSolver,
+    solver: &GaussNewtonKrylov,
     prob: &claire::registration::RegProblem,
     res: &claire::registration::RegResult,
 ) -> Result<()> {
@@ -429,6 +422,17 @@ fn cmd_watch(args: &Args) -> Result<()> {
                     claire::ErrorCode::Unavailable,
                     "watch stream lagged behind and was dropped; re-issue watch",
                 ));
+            }
+            EventMsg::Progress { id, name, iter, level, j, grad_rel, alpha, .. } => {
+                // Live per-iteration line for running jobs (the tentpole's
+                // acceptance surface: iter, J, ‖g‖rel, α).
+                if filter.is_some_and(|want| want != id) {
+                    continue;
+                }
+                println!(
+                    "job {id} {name} it={iter} lvl={level} J={j:.4e} |g|rel={grad_rel:.2e} \
+                     alpha={alpha:.2}"
+                );
             }
             EventMsg::Job { id, name, state, wall_s, error, .. } => {
                 // With --id, unrelated jobs' transitions are noise.

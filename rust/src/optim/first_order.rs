@@ -27,7 +27,31 @@ pub struct FoTrace {
     pub evals: usize,
     pub j_history: Vec<f64>,
     pub grad_norm: f64,
+    /// The observer asked the driver to stop (cooperative cancellation);
+    /// the trace holds the work completed up to that boundary.
+    pub cancelled: bool,
 }
+
+/// One accepted first-order step, delivered to the observer of the
+/// `*_observed` drivers. The registration layer folds these into the
+/// shared `IterRecord` history (there is no private trace format any
+/// more); `grad_rel` is `‖g‖ / ‖g0‖`, the same convergence metric the
+/// Gauss-Newton solver records.
+#[derive(Clone, Copy, Debug)]
+pub struct FoIter {
+    /// Accepted-step index (0-based).
+    pub iter: usize,
+    /// Objective value at the step's starting point.
+    pub j: f64,
+    pub grad_norm: f64,
+    pub grad_rel: f64,
+    /// Accepted Armijo step length.
+    pub alpha: f64,
+}
+
+/// Per-iteration observer: return `false` to stop the driver at this
+/// boundary (the trace comes back with `cancelled = true`).
+pub type FoObserver<'a> = &'a mut dyn FnMut(&FoIter) -> bool;
 
 /// Options for the first-order drivers.
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +74,17 @@ pub fn gradient_descent(
     oracle: &mut dyn Oracle,
     v: &mut Vec<f32>,
     opts: FoOptions,
+) -> Result<FoTrace> {
+    gradient_descent_observed(oracle, v, opts, &mut |_| true)
+}
+
+/// `gradient_descent` with a per-step observer (cancellation point at
+/// every iteration boundary).
+pub fn gradient_descent_observed(
+    oracle: &mut dyn Oracle,
+    v: &mut Vec<f32>,
+    opts: FoOptions,
+    observe: FoObserver<'_>,
 ) -> Result<FoTrace> {
     let mut trace = FoTrace::default();
     let mut g0norm: Option<f64> = None;
@@ -75,12 +110,34 @@ pub fn gradient_descent(
         trace.evals += ls.evals;
         ops::axpy(-(ls.alpha as f32), &g, v);
         trace.iters += 1;
+        let fo = FoIter {
+            iter: trace.iters - 1,
+            j,
+            grad_norm: gn,
+            grad_rel: gn / g0.max(1e-300),
+            alpha: ls.alpha,
+        };
+        if !observe(&fo) {
+            trace.cancelled = true;
+            break;
+        }
     }
     Ok(trace)
 }
 
 /// L-BFGS two-loop recursion (deformetrica analog).
 pub fn lbfgs(oracle: &mut dyn Oracle, v: &mut Vec<f32>, opts: FoOptions) -> Result<FoTrace> {
+    lbfgs_observed(oracle, v, opts, &mut |_| true)
+}
+
+/// `lbfgs` with a per-step observer (cancellation point at every
+/// iteration boundary).
+pub fn lbfgs_observed(
+    oracle: &mut dyn Oracle,
+    v: &mut Vec<f32>,
+    opts: FoOptions,
+    observe: FoObserver<'_>,
+) -> Result<FoTrace> {
     let mut trace = FoTrace::default();
     let nn = v.len();
     let mut s_hist: Vec<Vec<f32>> = Vec::new();
@@ -159,10 +216,24 @@ pub fn lbfgs(oracle: &mut dyn Oracle, v: &mut Vec<f32>, opts: FoOptions) -> Resu
             s_hist.push(s);
             y_hist.push(y);
         }
+        // Observe with the step's *starting* values (`j`/`gn` are still
+        // pre-update here) — the same contract gradient_descent_observed
+        // keeps, so one observer sees comparable streams per algorithm.
+        let fo = FoIter {
+            iter: trace.iters,
+            j,
+            grad_norm: gn,
+            grad_rel: gn / g0norm,
+            alpha: ls.alpha,
+        };
         j = j_new;
         g = g_new;
         trace.j_history.push(j);
         trace.iters += 1;
+        if !observe(&fo) {
+            trace.cancelled = true;
+            break;
+        }
     }
     Ok(trace)
 }
@@ -242,6 +313,51 @@ mod tests {
         let mut v2 = vec![0f32; 5];
         let t_lb = lbfgs(&mut quad(), &mut v2, opts).unwrap();
         assert!(t_lb.iters < t_gd.iters, "lbfgs {} vs gd {}", t_lb.iters, t_gd.iters);
+    }
+
+    #[test]
+    fn observer_sees_steps_and_cancels_at_boundaries() {
+        // Observer receives one event per accepted step with a sane
+        // grad_rel sequence...
+        let mut q = quad();
+        let mut v = vec![0f32; 5];
+        let mut seen: Vec<FoIter> = Vec::new();
+        let tr = gradient_descent_observed(
+            &mut q,
+            &mut v,
+            FoOptions { max_iter: 50, gtol_rel: 1e-5, history: 0 },
+            &mut |it| {
+                seen.push(*it);
+                true
+            },
+        )
+        .unwrap();
+        assert!(!tr.cancelled);
+        assert_eq!(seen.len(), tr.iters);
+        assert_eq!(seen[0].iter, 0);
+        assert!((seen[0].grad_rel - 1.0).abs() < 1e-12, "first step is at g0");
+        assert!(seen.last().unwrap().grad_rel < 1.0);
+        // ... and returning false stops the driver at that boundary with
+        // the partial trace flagged cancelled.
+        let opts = FoOptions { max_iter: 50, gtol_rel: 1e-9, history: 4 };
+        let mut calls = 0usize;
+        let mut stop_at_3 = |_: &FoIter| {
+            calls += 1;
+            calls < 3
+        };
+        let mut v = vec![0f32; 5];
+        let tr = gradient_descent_observed(&mut quad(), &mut v, opts, &mut stop_at_3).unwrap();
+        assert!(tr.cancelled);
+        assert_eq!(tr.iters, 3, "gd stopped at the third boundary");
+        let mut calls = 0usize;
+        let mut v = vec![0f32; 5];
+        let tr = lbfgs_observed(&mut quad(), &mut v, opts, &mut |_| {
+            calls += 1;
+            calls < 3
+        })
+        .unwrap();
+        assert!(tr.cancelled);
+        assert_eq!(tr.iters, 3, "lbfgs stopped at the third boundary");
     }
 
     #[test]

@@ -7,6 +7,9 @@ pub mod line_search;
 pub mod pcg;
 
 pub use continuation::{default_schedule, Level};
-pub use first_order::{gradient_descent, lbfgs, FoOptions, FoTrace, Oracle};
+pub use first_order::{
+    gradient_descent, gradient_descent_observed, lbfgs, lbfgs_observed, FoIter, FoObserver,
+    FoOptions, FoTrace, Oracle,
+};
 pub use line_search::{armijo, ArmijoOptions, LineSearchResult};
 pub use pcg::{PcgOptions, PcgResult, PcgStop};

@@ -1,0 +1,362 @@
+//! The unified solve API: one `Algorithm` trait over every optimizer, a
+//! `Session` builder as the single entry point, and the `SolveCx`
+//! observer/cancellation context threaded through all of them.
+//!
+//! The paper's Gauss-Newton-Krylov solver is one algorithm among several
+//! it benchmarks against (Tables 6-8); the follow-up CLAIRE service work
+//! treats the solver as a pluggable component inside a larger system.
+//! This module is that framing in code:
+//!
+//! * [`Algorithm`] — `solve(&self, cx, prob) -> SolveOutcome`, implemented
+//!   by `GaussNewtonKrylov` and the first-order baselines
+//!   (`FirstOrderBaseline`: gradient descent / L-BFGS), all producing the
+//!   same `IterRecord` history and `SolveOutcome`.
+//! * [`Session`] — builder binding a registry to solver policy
+//!   (`Session::new(&reg).multires(3).precision(Precision::Mixed)
+//!   .warm_start(v0).solve(&prob)`), selectable by name end-to-end via
+//!   [`AlgorithmKind`] (`claire submit --algorithm gd` reaches it over
+//!   the wire).
+//! * [`SolveCx`] — a per-solve context carrying an optional
+//!   [`SolveObserver`] (typed per-iteration events) and a cooperative
+//!   cancellation flag the solver checks at every Newton/first-order
+//!   iteration boundary, returning `Error::Cancelled` with the partial
+//!   history when tripped. The serve scheduler uses it to interrupt
+//!   *running* jobs and to stream live `progress` events.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, ErrorCode, Result};
+use crate::field::VecField3;
+use crate::precision::Precision;
+use crate::registration::baseline::{BaselineKind, FirstOrderBaseline};
+use crate::registration::problem::{RegParams, RegProblem};
+use crate::registration::solver::{GaussNewtonKrylov, IterRecord, RegResult};
+use crate::runtime::OpRegistry;
+
+/// Result of one solve, whatever the algorithm: the Gauss-Newton result
+/// type is the shared outcome (baselines fill the Krylov-specific counters
+/// with zeros and record their steps in the same `IterRecord` history).
+pub type SolveOutcome = RegResult;
+
+/// A registration optimizer: turns a problem into a `SolveOutcome` under
+/// an observer/cancellation context. One trait drives GN-Krylov, the
+/// first-order baselines, and anything a future PR plugs in.
+pub trait Algorithm {
+    /// Stable name (what `AlgorithmKind` and the wire `algorithm` field
+    /// spell).
+    fn name(&self) -> &'static str;
+
+    /// Run the solve. Implementations must call `cx.notify` once per
+    /// accepted iteration and honor `cx.cancelled()` at every iteration
+    /// boundary by returning `Error::Cancelled` with the partial history.
+    fn solve(&self, cx: &SolveCx, prob: &RegProblem) -> Result<SolveOutcome>;
+}
+
+/// Selectable-by-name algorithm registry, carried in `RegParams` and the
+/// canonical `JobRequest` so every surface (CLI, config, wire) picks the
+/// optimizer the same way.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AlgorithmKind {
+    /// The paper's Gauss-Newton-Krylov solver (Algorithm 2.1).
+    #[default]
+    GaussNewton,
+    /// Gradient descent with Armijo backtracking (PyCA-analog baseline).
+    GradientDescent,
+    /// L-BFGS (deformetrica-analog baseline).
+    Lbfgs,
+}
+
+impl AlgorithmKind {
+    /// Every selectable algorithm, in help-text order.
+    pub const ALL: [AlgorithmKind; 3] =
+        [AlgorithmKind::GaussNewton, AlgorithmKind::GradientDescent, AlgorithmKind::Lbfgs];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlgorithmKind::GaussNewton => "gn",
+            AlgorithmKind::GradientDescent => "gd",
+            AlgorithmKind::Lbfgs => "lbfgs",
+        }
+    }
+
+    /// Parse a wire/CLI/config spelling. Unknown names are a structured
+    /// `bad_request` so all three request surfaces reject identically.
+    pub fn parse(s: &str) -> Result<AlgorithmKind> {
+        match s {
+            "gn" => Ok(AlgorithmKind::GaussNewton),
+            "gd" => Ok(AlgorithmKind::GradientDescent),
+            "lbfgs" => Ok(AlgorithmKind::Lbfgs),
+            other => Err(Error::wire(
+                ErrorCode::BadRequest,
+                format!("unknown algorithm '{other}' (expected gn | gd | lbfgs)"),
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for AlgorithmKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One accepted iteration, as delivered to a [`SolveObserver`].
+#[derive(Debug)]
+pub struct IterEvent<'a> {
+    /// Grid level of a multires solve (0 = coarsest); 0 for single-grid.
+    pub level: usize,
+    /// Iteration index within the current level's solve (0-based).
+    pub iter: usize,
+    /// The full iteration record (beta, J, ‖g‖rel, CG iterations, step
+    /// length, per-phase precision).
+    pub record: &'a IterRecord,
+}
+
+/// Receives typed per-iteration events from a running solve. Implemented
+/// by the serve scheduler (live `progress` job events, `JobView`
+/// counters) and by anything else that wants to watch a solve without
+/// owning its loop. Called synchronously from the solver thread — keep it
+/// cheap and never call back into the solver.
+pub trait SolveObserver: Send + Sync {
+    fn on_iteration(&self, ev: &IterEvent<'_>);
+}
+
+/// Observer/cancellation context for one solve. Cheap to clone; the
+/// default context observes nothing and can never be cancelled, so
+/// plain `solve()` calls cost one branch per iteration.
+#[derive(Clone, Default)]
+pub struct SolveCx {
+    cancel: Option<Arc<AtomicBool>>,
+    observer: Option<Arc<dyn SolveObserver>>,
+    level: usize,
+}
+
+impl SolveCx {
+    pub fn new() -> SolveCx {
+        SolveCx::default()
+    }
+
+    /// Attach a cooperative cancellation flag. Setting it to `true` makes
+    /// the solve return `Error::Cancelled` (with the partial history) at
+    /// the next iteration boundary.
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> SolveCx {
+        self.cancel = Some(flag);
+        self
+    }
+
+    /// Attach a per-iteration observer.
+    pub fn with_observer(mut self, obs: Arc<dyn SolveObserver>) -> SolveCx {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// Derived context tagged with a multires grid level: same flag and
+    /// observer, events carry `level`.
+    pub fn at_level(&self, level: usize) -> SolveCx {
+        SolveCx { cancel: self.cancel.clone(), observer: self.observer.clone(), level }
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+
+    /// Deliver one accepted iteration to the observer (no-op without one).
+    pub fn notify(&self, iter: usize, record: &IterRecord) {
+        if let Some(obs) = &self.observer {
+            obs.on_iteration(&IterEvent { level: self.level, iter, record });
+        }
+    }
+}
+
+/// Builder for one solve: registry + solver policy + algorithm selection
+/// + observer/cancellation wiring. The single entry point every driver
+/// (CLI `register`, batch service, serve executor) funnels through.
+///
+/// ```ignore
+/// let outcome = Session::new(&registry)
+///     .multires(3)
+///     .precision(Precision::Mixed)
+///     .warm_start(v0)
+///     .solve(&prob)?;
+/// ```
+pub struct Session<'a> {
+    reg: &'a OpRegistry,
+    params: RegParams,
+    /// Arc-shared so repeated solves (and the algorithm construction per
+    /// solve) never deep-copy the velocity; the solver clones it once,
+    /// when a solve consumes it as its iterate buffer.
+    warm_start: Option<Arc<VecField3>>,
+    observer: Option<Arc<dyn SolveObserver>>,
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(reg: &'a OpRegistry) -> Session<'a> {
+        Session {
+            reg,
+            params: RegParams::default(),
+            warm_start: None,
+            observer: None,
+            cancel: None,
+        }
+    }
+
+    /// Replace the whole parameter set (keeps any builder-set fields that
+    /// come after this call).
+    pub fn params(mut self, params: RegParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Select the optimizer (`RegParams::algorithm`).
+    pub fn algorithm(mut self, kind: AlgorithmKind) -> Self {
+        self.params.algorithm = kind;
+        self
+    }
+
+    /// Grid-continuation levels (1 = single grid).
+    pub fn multires(mut self, levels: usize) -> Self {
+        self.params.multires = levels;
+        self
+    }
+
+    /// Solver precision policy.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.params.precision = p;
+        self
+    }
+
+    /// Warm-start velocity (single-grid GN solves; multires plans its own
+    /// coarse-to-fine warm starts).
+    pub fn warm_start(mut self, v0: VecField3) -> Self {
+        self.warm_start = Some(Arc::new(v0));
+        self
+    }
+
+    /// Attach a per-iteration observer to the session's context.
+    pub fn observer(mut self, obs: Arc<dyn SolveObserver>) -> Self {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// Attach a cooperative cancellation flag to the session's context.
+    pub fn cancel_flag(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(flag);
+        self
+    }
+
+    /// The context this session's `solve()` will run under.
+    pub fn cx(&self) -> SolveCx {
+        SolveCx { cancel: self.cancel.clone(), observer: self.observer.clone(), level: 0 }
+    }
+
+    /// Materialize the selected algorithm. The trait object is what makes
+    /// "one entry point, N optimizers" hold: callers never branch on kind.
+    fn algorithm_impl(&self) -> Box<dyn Algorithm + '_> {
+        match self.params.algorithm {
+            AlgorithmKind::GaussNewton => Box::new(GaussNewtonKrylov::with_warm_start(
+                self.reg,
+                self.params.clone(),
+                self.warm_start.clone(),
+            )),
+            AlgorithmKind::GradientDescent => Box::new(FirstOrderBaseline::new(
+                self.reg,
+                self.params.clone(),
+                BaselineKind::GradientDescent,
+            )),
+            AlgorithmKind::Lbfgs => Box::new(FirstOrderBaseline::new(
+                self.reg,
+                self.params.clone(),
+                BaselineKind::Lbfgs,
+            )),
+        }
+    }
+
+    /// Run the solve under the session-built context.
+    pub fn solve(&self, prob: &RegProblem) -> Result<SolveOutcome> {
+        self.solve_cx(prob, &self.cx())
+    }
+
+    /// Run the solve under an externally-owned context (the serve worker
+    /// passes the scheduler's cancellation/progress context here).
+    pub fn solve_cx(&self, prob: &RegProblem, cx: &SolveCx) -> Result<SolveOutcome> {
+        // The builder can compose combinations the request surfaces would
+        // refuse (e.g. a baseline with a multires pyramid); enforce the
+        // shared invariants here too, so the documented "rejected up
+        // front, never silently degraded" contract holds at the entry
+        // point itself — not just behind `JobRequest::validate`.
+        self.params.check()?;
+        self.algorithm_impl().solve(cx, prob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_names_and_rejects_unknown() {
+        for kind in AlgorithmKind::ALL {
+            assert_eq!(AlgorithmKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        for bad in ["newton", "GN", "", "adam"] {
+            let err = AlgorithmKind::parse(bad).unwrap_err();
+            assert_eq!(err.code(), ErrorCode::BadRequest, "{bad}");
+            assert!(err.to_string().contains("unknown algorithm"), "{err}");
+        }
+        assert_eq!(AlgorithmKind::default(), AlgorithmKind::GaussNewton);
+    }
+
+    #[test]
+    fn default_cx_is_inert() {
+        let cx = SolveCx::new();
+        assert!(!cx.cancelled());
+        // notify without an observer is a no-op (exercised for coverage).
+        let rec = crate::registration::solver::IterRecord {
+            level_beta: 1e-3,
+            j: 1.0,
+            mismatch_rel: 0.5,
+            grad_rel: 0.1,
+            cg_iters: 0,
+            alpha: 1.0,
+            grad_precision: Precision::Full,
+            matvec_precision: Precision::Full,
+        };
+        cx.notify(0, &rec);
+    }
+
+    #[test]
+    fn cx_flag_and_observer_are_live() {
+        use std::sync::Mutex;
+        struct Tape(Mutex<Vec<(usize, usize, f64)>>);
+        impl SolveObserver for Tape {
+            fn on_iteration(&self, ev: &IterEvent<'_>) {
+                self.0.lock().unwrap().push((ev.level, ev.iter, ev.record.j));
+            }
+        }
+        let flag = Arc::new(AtomicBool::new(false));
+        let tape = Arc::new(Tape(Mutex::new(Vec::new())));
+        let cx = SolveCx::new().with_cancel(flag.clone()).with_observer(tape.clone());
+        assert!(!cx.cancelled());
+        flag.store(true, Ordering::SeqCst);
+        assert!(cx.cancelled());
+        let rec = crate::registration::solver::IterRecord {
+            level_beta: 1e-3,
+            j: 2.5,
+            mismatch_rel: 0.5,
+            grad_rel: 0.1,
+            cg_iters: 3,
+            alpha: 0.5,
+            grad_precision: Precision::Full,
+            matvec_precision: Precision::Full,
+        };
+        cx.notify(0, &rec);
+        // Level tags survive derivation; flag is shared, not copied.
+        let lvl = cx.at_level(2);
+        assert!(lvl.cancelled());
+        lvl.notify(1, &rec);
+        assert_eq!(*tape.0.lock().unwrap(), vec![(0, 0, 2.5), (2, 1, 2.5)]);
+    }
+}

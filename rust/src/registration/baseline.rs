@@ -1,15 +1,23 @@
-//! Baseline first-order registration drivers (paper Table 8).
+//! First-order baseline registration algorithms (paper Table 8).
 //!
 //! `PyCA` uses plain gradient descent and `deformetrica` L-BFGS; both are
 //! recreated here over the *same* objective/gradient artifacts as the
 //! Gauss-Newton solver, so the comparison isolates the optimizer exactly.
+//! Since the unified solve API they implement the shared
+//! [`Algorithm`] trait and record their steps in the same
+//! `IterRecord`/`SolveOutcome` history as GN-Krylov — select them through
+//! `Session::new(&reg).algorithm(AlgorithmKind::GradientDescent)` or the
+//! `algorithm` job field (`claire submit --algorithm gd`).
 
 use std::time::Instant;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::field::{ops, VecField3};
-use crate::optim::first_order::{self, FoOptions, Oracle};
+use crate::optim::first_order::{self, FoIter, FoOptions, Oracle};
+use crate::precision::Precision;
+use crate::registration::algorithm::{Algorithm, SolveCx, SolveOutcome};
 use crate::registration::problem::{RegParams, RegProblem};
+use crate::registration::solver::{IterRecord, RegResult};
 use crate::runtime::OpRegistry;
 
 /// Which baseline optimizer to run.
@@ -30,7 +38,9 @@ impl BaselineKind {
     }
 }
 
-/// Result of a baseline run (Table 8 row material).
+/// Result of a baseline run (Table 8 row material). Retained for the
+/// deprecated [`run_baseline`] shim; new code reads the shared
+/// `SolveOutcome` instead.
 #[derive(Clone, Debug)]
 pub struct BaselineResult {
     pub v: VecField3,
@@ -51,7 +61,7 @@ struct ArtifactOracle<'a> {
     pub msq_last: f64,
 }
 
-impl<'a> Oracle for ArtifactOracle<'a> {
+impl Oracle for ArtifactOracle<'_> {
     fn value_grad(&mut self, v: &[f32]) -> Result<(f64, Vec<f32>)> {
         let outs = self.setup.call(&[v, self.m0, self.m1, &self.bg])?;
         let scalars = &outs[5];
@@ -65,8 +75,117 @@ impl<'a> Oracle for ArtifactOracle<'a> {
     }
 }
 
+/// A first-order baseline behind the unified [`Algorithm`] trait: same
+/// entry point, same observer/cancellation context, same
+/// `IterRecord`/`SolveOutcome` history as the Gauss-Newton solver.
+/// Always runs single-grid — `RegParams::check` rejects a baseline +
+/// `multires > 1` combination up front, so a request can never silently
+/// lose its pyramid.
+pub struct FirstOrderBaseline<'a> {
+    pub reg: &'a OpRegistry,
+    pub params: RegParams,
+    pub kind: BaselineKind,
+}
+
+impl<'a> FirstOrderBaseline<'a> {
+    pub fn new(reg: &'a OpRegistry, params: RegParams, kind: BaselineKind) -> Self {
+        FirstOrderBaseline { reg, params, kind }
+    }
+}
+
+impl Algorithm for FirstOrderBaseline<'_> {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            BaselineKind::GradientDescent => "gd",
+            BaselineKind::Lbfgs => "lbfgs",
+        }
+    }
+
+    fn solve(&self, cx: &SolveCx, prob: &RegProblem) -> Result<SolveOutcome> {
+        let t0 = Instant::now();
+        let n = prob.n();
+        let p = &self.params;
+        let mut oracle = ArtifactOracle {
+            setup: self.reg.get("newton_setup", &p.variant, n)?,
+            obj: self.reg.get("objective", &p.variant, n)?,
+            m0: &prob.m0.data,
+            m1: &prob.m1.data,
+            bg: [p.beta as f32, p.gamma as f32],
+            msq_last: f64::NAN,
+        };
+        let mut v = vec![0f32; 3 * n * n * n];
+        // PyCA and deformetrica terminate on their iteration budget, not
+        // on a gradient tolerance (paper section 4.2.2: "The two other
+        // methods ... terminate when they reach the set upper bound for
+        // the iterations"); the near-zero gtol mirrors that, so the
+        // Table-8 iteration sweep stays meaningful. `max_iter` is the
+        // shared budget knob — the wire's `max_iter` drives it directly.
+        let opts = FoOptions { max_iter: p.max_iter, gtol_rel: 1e-9, history: 8 };
+        let beta = p.beta;
+        let mut history: Vec<IterRecord> = Vec::new();
+        let trace = {
+            // Fold each accepted step into the shared history, mirror it
+            // to the observer, and honor cancellation at the boundary —
+            // the exact contract the GN solver implements.
+            let mut observe = |it: &FoIter| {
+                let rec = IterRecord {
+                    level_beta: beta,
+                    // First-order steps never evaluate the mismatch term
+                    // separately; the final value lands in the outcome.
+                    mismatch_rel: f64::NAN,
+                    j: it.j,
+                    grad_rel: it.grad_rel,
+                    cg_iters: 0,
+                    alpha: it.alpha,
+                    grad_precision: Precision::Full,
+                    matvec_precision: Precision::Full,
+                };
+                cx.notify(it.iter, &rec);
+                history.push(rec);
+                !cx.cancelled()
+            };
+            match self.kind {
+                BaselineKind::GradientDescent => {
+                    first_order::gradient_descent_observed(&mut oracle, &mut v, opts, &mut observe)?
+                }
+                BaselineKind::Lbfgs => {
+                    first_order::lbfgs_observed(&mut oracle, &mut v, opts, &mut observe)?
+                }
+            }
+        };
+        if trace.cancelled {
+            return Err(Error::Cancelled { history });
+        }
+        // Final metrics from one more oracle evaluation at the solution.
+        let (j, _) = oracle.value_grad(&v)?;
+        let msq0 = ops::sumsq_diff(&prob.m0.data, &prob.m1.data).max(1e-300);
+        let h3 = prob.m0.h().powi(3);
+        let mismatch_rel = (oracle.msq_last / (h3 * msq0)).sqrt();
+        let grad_rel = history.last().map(|r| r.grad_rel).unwrap_or(f64::NAN);
+        Ok(RegResult {
+            v: VecField3::from_vec(n, v)?,
+            iters: trace.iters,
+            matvecs: 0,
+            obj_evals: trace.evals + 1,
+            j,
+            mismatch_rel,
+            grad_rel,
+            history,
+            time_s: t0.elapsed().as_secs_f64(),
+            // Budget-terminated methods rarely reach the GN tolerance;
+            // when they do, say so with the shared metric.
+            converged: grad_rel <= p.gtol,
+            levels: 1,
+        })
+    }
+}
+
 /// Run a baseline registration with the paper's default parameters but the
 /// chosen first-order optimizer.
+#[deprecated(
+    note = "use registration::Session with AlgorithmKind::GradientDescent / Lbfgs; \
+            the outcome's history replaces BaselineResult"
+)]
 pub fn run_baseline(
     reg: &OpRegistry,
     prob: &RegProblem,
@@ -74,37 +193,14 @@ pub fn run_baseline(
     kind: BaselineKind,
     max_iter: usize,
 ) -> Result<BaselineResult> {
-    let t0 = Instant::now();
-    let n = prob.n();
-    let mut oracle = ArtifactOracle {
-        setup: reg.get("newton_setup", &params.variant, n)?,
-        obj: reg.get("objective", &params.variant, n)?,
-        m0: &prob.m0.data,
-        m1: &prob.m1.data,
-        bg: [params.beta as f32, params.gamma as f32],
-        msq_last: f64::NAN,
-    };
-    let mut v = vec![0f32; 3 * n * n * n];
-    // PyCA and deformetrica terminate on their iteration budget, not on a
-    // gradient tolerance (paper section 4.2.2: "The two other methods ...
-    // terminate when they reach the set upper bound for the iterations");
-    // mirror that so the Table-8 iteration sweep is meaningful.
-    let opts = FoOptions { max_iter, gtol_rel: 1e-9, history: 8 };
-    let trace = match kind {
-        BaselineKind::GradientDescent => first_order::gradient_descent(&mut oracle, &mut v, opts)?,
-        BaselineKind::Lbfgs => first_order::lbfgs(&mut oracle, &mut v, opts)?,
-    };
-    // Final mismatch from one more oracle evaluation at the solution.
-    let (j, _) = oracle.value_grad(&v)?;
-    let msq0 = ops::sumsq_diff(&prob.m0.data, &prob.m1.data).max(1e-300);
-    let h3 = prob.m0.h().powi(3);
-    let mismatch_rel = (oracle.msq_last / (h3 * msq0)).sqrt();
+    let params = RegParams { max_iter, ..params.clone() };
+    let res = FirstOrderBaseline::new(reg, params, kind).solve(&SolveCx::new(), prob)?;
     Ok(BaselineResult {
-        v: VecField3::from_vec(n, v)?,
-        iters: trace.iters,
-        evals: trace.evals,
-        mismatch_rel,
-        j,
-        time_s: t0.elapsed().as_secs_f64(),
+        v: res.v,
+        iters: res.iters,
+        evals: res.obj_evals,
+        mismatch_rel: res.mismatch_rel,
+        j: res.j,
+        time_s: res.time_s,
     })
 }

@@ -1,6 +1,8 @@
-//! Registration layer: problem definition, the Gauss-Newton-Krylov solver
-//! over the AOT artifacts, baselines, metrics, and performance models.
+//! Registration layer: problem definition, the unified `Algorithm` /
+//! `Session` solve API over the AOT artifacts (Gauss-Newton-Krylov plus
+//! the first-order baselines), metrics, and performance models.
 
+pub mod algorithm;
 pub mod baseline;
 pub mod intensity;
 pub mod metrics;
@@ -8,7 +10,14 @@ pub mod problem;
 pub mod report;
 pub mod solver;
 
-pub use baseline::{run_baseline, BaselineKind, BaselineResult};
+pub use algorithm::{
+    Algorithm, AlgorithmKind, IterEvent, Session, SolveCx, SolveObserver, SolveOutcome,
+};
+pub use baseline::{BaselineKind, BaselineResult, FirstOrderBaseline};
+#[allow(deprecated)]
+pub use baseline::run_baseline;
 pub use problem::{RegParams, RegProblem};
 pub use report::RunReport;
-pub use solver::{plan_pyramid, GnSolver, IterRecord, RegResult};
+#[allow(deprecated)]
+pub use solver::GnSolver;
+pub use solver::{plan_pyramid, CompileLevel, GaussNewtonKrylov, IterRecord, RegResult};

@@ -3,10 +3,15 @@
 use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
 use crate::precision::Precision;
+use crate::registration::algorithm::AlgorithmKind;
 
 /// Solver parameters (defaults follow the paper, section 4.1.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RegParams {
+    /// Which optimizer runs the solve: the paper's Gauss-Newton-Krylov
+    /// (default) or a first-order baseline. Selectable by name on every
+    /// request surface (`algorithm` job field, `--algorithm`).
+    pub algorithm: AlgorithmKind,
     /// Kernel variant tag (paper Table 6 analog; see model.py VARIANTS).
     pub variant: String,
     /// Precision policy: `Mixed` runs the PCG Hessian matvec through the
@@ -27,7 +32,7 @@ pub struct RegParams {
     pub continuation: bool,
     /// Grid-continuation levels (CLAIRE's coarse-to-fine scheme): 1 runs a
     /// single grid; k > 1 restricts the images down a factor-2 pyramid and
-    /// warm-starts each finer level (`GnSolver::solve_auto` dispatches).
+    /// warm-starts each finer level (`solve_auto` dispatches).
     pub multires: usize,
     /// Project iterates onto divergence-free fields (Leray projection):
     /// the incompressible-flow extension of the CLAIRE formulation. The
@@ -40,6 +45,7 @@ pub struct RegParams {
 impl Default for RegParams {
     fn default() -> Self {
         RegParams {
+            algorithm: AlgorithmKind::GaussNewton,
             variant: "opt-fd8-cubic".into(),
             precision: Precision::Full,
             beta: 5e-4,
@@ -87,6 +93,17 @@ impl RegParams {
                 crate::request::MAX_MULTIRES_LEVELS
             ));
         }
+        // Grid continuation is a Gauss-Newton feature: the first-order
+        // baselines run single-grid, and silently dropping a requested
+        // pyramid (while the job name advertises `+mr<k>`) would violate
+        // the degraded-runs-must-be-visible contract — reject up front.
+        if self.algorithm != AlgorithmKind::GaussNewton && self.multires > 1 {
+            return bad(format!(
+                "job field 'multires' = {} requires algorithm 'gn' \
+                 (first-order baselines run single-grid)",
+                self.multires
+            ));
+        }
         Ok(())
     }
 }
@@ -131,6 +148,7 @@ mod tests {
     #[test]
     fn defaults_match_paper() {
         let p = RegParams::default();
+        assert_eq!(p.algorithm, AlgorithmKind::GaussNewton, "GN-Krylov unless asked");
         assert_eq!(p.precision, Precision::Full);
         assert_eq!(p.beta, 5e-4);
         assert_eq!(p.gamma, 1e-4);
@@ -159,6 +177,22 @@ mod tests {
         assert!(RegParams { max_krylov: 0, ..Default::default() }.check().is_err());
         assert!(RegParams { multires: 0, ..Default::default() }.check().is_err());
         assert!(RegParams { multires: 9, ..Default::default() }.check().is_err());
+        // Multires is GN-only: a baseline + pyramid combination must be
+        // rejected, not silently degraded to single-grid.
+        let gd_mr = RegParams {
+            algorithm: AlgorithmKind::GradientDescent,
+            multires: 3,
+            ..Default::default()
+        };
+        let err = gd_mr.check().unwrap_err();
+        assert!(err.to_string().contains("requires algorithm 'gn'"), "{err}");
+        assert!(RegParams {
+            algorithm: AlgorithmKind::Lbfgs,
+            multires: 1,
+            ..Default::default()
+        }
+        .check()
+        .is_ok(), "single-grid baselines stay legal");
         assert!(RegParams { variant: "".into(), ..Default::default() }.check().is_err());
         let err = RegParams { beta: 0.0, ..Default::default() }.check().unwrap_err();
         assert_eq!(err.code(), ErrorCode::BadRequest);

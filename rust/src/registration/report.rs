@@ -5,7 +5,7 @@ use crate::math::stats::Summary;
 use crate::precision::Precision;
 use crate::registration::metrics::{dice_union, nondiffeo_fraction, warp_labels};
 use crate::registration::problem::RegProblem;
-use crate::registration::solver::{GnSolver, RegResult};
+use crate::registration::solver::{GaussNewtonKrylov, RegResult};
 
 /// Everything the paper reports per registration run (Table 7 columns).
 #[derive(Clone, Debug)]
@@ -35,8 +35,14 @@ pub struct RunReport {
 
 impl RunReport {
     /// Assemble the report from a solve result: runs defmap/detf artifacts
-    /// and warps labels for DICE if present.
-    pub fn build(solver: &GnSolver, prob: &RegProblem, res: &RegResult) -> Result<RunReport> {
+    /// and warps labels for DICE if present. The solver argument supplies
+    /// the registry + variant for the post-solve operators; the outcome
+    /// may come from any `Algorithm` (baselines produce velocities too).
+    pub fn build(
+        solver: &GaussNewtonKrylov,
+        prob: &RegProblem,
+        res: &RegResult,
+    ) -> Result<RunReport> {
         let n = prob.n();
         let detf_field = solver.detf(&res.v)?;
         let detf = Summary::of(&detf_field);

@@ -25,6 +25,7 @@ use crate::optim::line_search::{armijo, ArmijoOptions};
 use crate::optim::pcg::{self, PcgOptions, PcgStop};
 use crate::optim::{continuation, Level};
 use crate::precision::Precision;
+use crate::registration::algorithm::{Algorithm, AlgorithmKind, SolveCx};
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::runtime::{Operator, OpRegistry};
 
@@ -70,32 +71,118 @@ pub struct RegResult {
     pub levels: usize,
 }
 
-/// Gauss-Newton-Krylov solver bound to an operator registry.
-pub struct GnSolver<'a> {
-    pub reg: &'a OpRegistry,
-    pub params: RegParams,
+/// Compile wall time spent warming one grid level's operators (the
+/// breakdown `precompile_plan` returns: satellite receipt for multires
+/// serve jobs never paying coarse-grid compiles inside a timed solve).
+#[derive(Clone, Copy, Debug)]
+pub struct CompileLevel {
+    /// Grid size of the level.
+    pub n: usize,
+    /// Wall seconds spent compiling (0 when every operator was warm).
+    pub seconds: f64,
 }
 
-impl<'a> GnSolver<'a> {
+/// The Gauss-Newton-Krylov solver bound to an operator registry (paper
+/// Algorithm 2.1). Implements [`Algorithm`]; drive it through
+/// [`Session`](crate::registration::algorithm::Session) unless you need
+/// the lower-level `solve_*` entry points directly.
+pub struct GaussNewtonKrylov<'a> {
+    pub reg: &'a OpRegistry,
+    pub params: RegParams,
+    /// Session-configured warm start for single-grid solves (`multires`
+    /// plans its own coarse-to-fine warm starts). Shared, not owned: a
+    /// 256^3 velocity is ~192 MiB, so the one deep copy happens only when
+    /// a solve actually consumes it as its iterate buffer.
+    warm_start: Option<std::sync::Arc<VecField3>>,
+}
+
+/// Deprecated spelling of [`GaussNewtonKrylov`], kept one release so
+/// existing tests and benches compile unchanged.
+#[deprecated(note = "use registration::GaussNewtonKrylov (or the Session builder)")]
+pub type GnSolver<'a> = GaussNewtonKrylov<'a>;
+
+impl<'a> GaussNewtonKrylov<'a> {
     pub fn new(reg: &'a OpRegistry, params: RegParams) -> Self {
-        GnSolver { reg, params }
+        GaussNewtonKrylov { reg, params, warm_start: None }
     }
 
-    /// Compile (or fetch cached) the operators this solve needs. Returns
-    /// the wall time spent compiling. XLA compilation is a one-time,
-    /// per-process cost (the analog of CLAIRE's CUDA build step, which the
-    /// paper's runtimes also exclude); `solve` reports pure solver time.
-    pub fn precompile(&self, n: usize) -> Result<f64> {
+    /// Construct with a warm-start velocity (what `Session::warm_start`
+    /// hands down). The warm start applies to the single-grid path;
+    /// multires solves ignore it.
+    pub fn with_warm_start(
+        reg: &'a OpRegistry,
+        params: RegParams,
+        warm_start: Option<std::sync::Arc<VecField3>>,
+    ) -> Self {
+        GaussNewtonKrylov { reg, params, warm_start }
+    }
+
+    /// Warm one grid level's operators: the four GN solver ops plus the
+    /// reduced-precision matvec when the policy asks for it (absence is
+    /// tolerated — `hess_operator` falls back visibly at solve time).
+    /// First-order baselines only ever evaluate the gradient/objective
+    /// pair, so their warm-up skips the Newton-specific compiles.
+    fn warm_level(&self, n: usize) -> Result<f64> {
         let t0 = Instant::now();
-        for op in ["newton_setup", "hess_matvec", "objective", "precond"] {
+        let gn = self.params.algorithm == AlgorithmKind::GaussNewton;
+        let warm_ops: &[&str] = if gn {
+            &["newton_setup", "hess_matvec", "objective", "precond"]
+        } else {
+            &["newton_setup", "objective"]
+        };
+        for op in warm_ops {
             self.reg.get(op, &self.params.variant, n)?;
         }
-        // Warm the reduced-precision matvec too when the policy asks for
-        // it (ignore absence: `hess_operator` falls back at solve time).
-        if self.params.precision == Precision::Mixed {
+        if gn && self.params.precision == Precision::Mixed {
             let _ = self.reg.get_p("hess_matvec", &self.params.variant, n, Precision::Mixed);
         }
         Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Grid sizes (finest first) the configured `multires` depth will
+    /// actually realize from a fine grid of `n`, per the artifact set.
+    fn plan_sizes(&self, n_fine: usize, levels: usize) -> Vec<usize> {
+        let can_descend = |n: usize| -> bool {
+            n % 2 == 0
+                && self.reg.manifest.find("newton_setup", &self.params.variant, n / 2).is_ok()
+                && self.reg.manifest.find("restrict2x", &self.params.variant, n).is_ok()
+                && self.reg.manifest.find("upsample2x", &self.params.variant, n / 2).is_ok()
+        };
+        plan_pyramid(n_fine, levels, can_descend)
+    }
+
+    /// Compile (or fetch cached) every operator this solver's configured
+    /// solve at `n` needs — including the planned coarse-level operators
+    /// and the restriction/prolongation pair when `params.multires > 1`,
+    /// so the first multires serve job never pays coarse-grid compiles
+    /// inside its timed solve. Returns the total wall time spent
+    /// compiling; `precompile_plan` has the per-level breakdown. XLA
+    /// compilation is a one-time, per-process cost (the analog of
+    /// CLAIRE's CUDA build step, which the paper's runtimes also
+    /// exclude); `solve` reports pure solver time.
+    pub fn precompile(&self, n: usize) -> Result<f64> {
+        Ok(self.precompile_plan(n)?.iter().map(|l| l.seconds).sum())
+    }
+
+    /// `precompile` with the per-level compile-time breakdown: one entry
+    /// per planned grid level, finest first (a single entry when
+    /// `params.multires == 1` or no coarser artifacts exist).
+    pub fn precompile_plan(&self, n: usize) -> Result<Vec<CompileLevel>> {
+        let sizes = self.plan_sizes(n, self.params.multires.max(1));
+        let mut out = Vec::with_capacity(sizes.len());
+        for (li, &ln) in sizes.iter().enumerate() {
+            let t0 = Instant::now();
+            self.warm_level(ln)?;
+            if li + 1 < sizes.len() {
+                // The inter-level transfer operators belong to this
+                // level's budget: restriction runs at `ln`, prolongation
+                // back up from `ln / 2`.
+                self.reg.get("restrict2x", &self.params.variant, ln)?;
+                self.reg.get("upsample2x", &self.params.variant, ln / 2)?;
+            }
+            out.push(CompileLevel { n: ln, seconds: t0.elapsed().as_secs_f64() });
+        }
+        Ok(out)
     }
 
     /// Resolve the Hessian matvec operator for the configured precision.
@@ -133,6 +220,19 @@ impl<'a> GnSolver<'a> {
     /// Run the solve from an optional warm-start velocity (grid
     /// continuation hands the prolonged coarse solution in here).
     pub fn solve_from(&self, prob: &RegProblem, v0: Option<VecField3>) -> Result<RegResult> {
+        self.solve_from_cx(prob, v0, &SolveCx::new())
+    }
+
+    /// `solve_from` under an observer/cancellation context: `cx.notify`
+    /// fires once per accepted Newton iteration, and a tripped
+    /// cancellation flag returns `Error::Cancelled` with the partial
+    /// history at the next iteration boundary.
+    pub fn solve_from_cx(
+        &self,
+        prob: &RegProblem,
+        v0: Option<VecField3>,
+        cx: &SolveCx,
+    ) -> Result<RegResult> {
         let n = prob.n();
         let p = &self.params;
         // Paper §3 precision split: setup (gradient), objective and
@@ -202,6 +302,13 @@ impl<'a> GnSolver<'a> {
             let mut g0_level: Option<f64> = None;
 
             for _it in 0..level.max_iter {
+                // Cooperative cancellation: one check per Newton iteration
+                // boundary (also covers continuation-level boundaries). The
+                // partial history travels with the error so the scheduler
+                // can report how far the solve got.
+                if cx.cancelled() {
+                    return Err(Error::Cancelled { history });
+                }
                 // -- Newton setup: gradient + caches -----------------------
                 // The reference-gradient call above already evaluated this
                 // exact (v, beta) point when level 0 runs at the target
@@ -329,6 +436,7 @@ impl<'a> GnSolver<'a> {
                     grad_precision,
                     matvec_precision: pcg_res.matvec_precision,
                 });
+                cx.notify(history.len() - 1, history.last().expect("just pushed"));
                 // Stagnation guard: stop the level when J no longer moves
                 // at f32-resolvable scale.
                 if history.len() >= 2 {
@@ -365,10 +473,19 @@ impl<'a> GnSolver<'a> {
     /// executor, the batch service and the CLI all funnel through here so
     /// a job's `multires` field selects grid continuation uniformly.
     pub fn solve_auto(&self, prob: &RegProblem) -> Result<RegResult> {
+        self.solve_auto_cx(prob, &SolveCx::new())
+    }
+
+    /// `solve_auto` under an observer/cancellation context (what
+    /// `Algorithm::solve` runs).
+    pub fn solve_auto_cx(&self, prob: &RegProblem, cx: &SolveCx) -> Result<RegResult> {
         if self.params.multires > 1 {
-            self.solve_multires(prob, self.params.multires)
+            self.solve_multires_cx(prob, self.params.multires, cx)
         } else {
-            self.solve(prob)
+            // The only deep copy of a configured warm start: the solve
+            // consumes it as its mutable iterate buffer.
+            let v0 = self.warm_start.as_ref().map(|v| (**v).clone());
+            self.solve_from_cx(prob, v0, cx)
         }
     }
 
@@ -398,22 +515,28 @@ impl<'a> GnSolver<'a> {
     /// The coarse levels run with loose tolerances (they only produce warm
     /// starts); the finest level uses the configured convergence criteria.
     pub fn solve_multires(&self, prob: &RegProblem, levels: usize) -> Result<RegResult> {
+        self.solve_multires_cx(prob, levels, &SolveCx::new())
+    }
+
+    /// `solve_multires` under an observer/cancellation context: iteration
+    /// events carry the grid-level index, and a cancellation mid-pyramid
+    /// returns the history accumulated across every level solved so far.
+    pub fn solve_multires_cx(
+        &self,
+        prob: &RegProblem,
+        levels: usize,
+        cx: &SolveCx,
+    ) -> Result<RegResult> {
         let n_fine = prob.n();
         assert!(levels >= 1);
         // A coarser level is only usable if solver artifacts exist for it;
         // the realized pyramid may therefore be shallower than requested —
         // the degradation is reported in `RegResult::levels`.
-        let can_descend = |n: usize| -> bool {
-            n % 2 == 0
-                && self.reg.manifest.find("newton_setup", &self.params.variant, n / 2).is_ok()
-                && self.reg.manifest.find("restrict2x", &self.params.variant, n).is_ok()
-                && self.reg.manifest.find("upsample2x", &self.params.variant, n / 2).is_ok()
-        };
-        let sizes = plan_pyramid(n_fine, levels, can_descend);
+        let sizes = self.plan_sizes(n_fine, levels);
         // Compile every level's operators up front so the reported solve
         // time is pure solver time (same convention as `solve`).
         for (li, &n) in sizes.iter().enumerate() {
-            self.precompile(n)?;
+            self.warm_level(n)?;
             if li + 1 < sizes.len() {
                 self.reg.get("restrict2x", &self.params.variant, n)?;
                 self.reg.get("upsample2x", &self.params.variant, n / 2)?;
@@ -464,8 +587,18 @@ impl<'a> GnSolver<'a> {
                 // start's progress).
                 params.continuation = false;
             }
-            let level_solver = GnSolver::new(self.reg, params);
-            let mut res = level_solver.solve_from(p, v.take())?;
+            let level_solver = GaussNewtonKrylov::new(self.reg, params);
+            let mut res = match level_solver.solve_from_cx(p, v.take(), &cx.at_level(li)) {
+                Ok(res) => res,
+                Err(Error::Cancelled { history }) => {
+                    // Surface everything solved so far, not just the
+                    // interrupted level's partial history.
+                    let mut full = total.history;
+                    full.extend(history);
+                    return Err(Error::Cancelled { history: full });
+                }
+                Err(e) => return Err(e),
+            };
             total.iters += res.iters;
             total.matvecs += res.matvecs;
             total.obj_evals += res.obj_evals;
@@ -485,6 +618,16 @@ impl<'a> GnSolver<'a> {
         }
         total.time_s = t0.elapsed().as_secs_f64();
         Ok(total)
+    }
+}
+
+impl Algorithm for GaussNewtonKrylov<'_> {
+    fn name(&self) -> &'static str {
+        "gn"
+    }
+
+    fn solve(&self, cx: &SolveCx, prob: &RegProblem) -> Result<RegResult> {
+        self.solve_auto_cx(prob, cx)
     }
 }
 

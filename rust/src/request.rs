@@ -22,6 +22,7 @@
 use crate::config::Config;
 use crate::error::{Error, ErrorCode, Result};
 use crate::precision::Precision;
+use crate::registration::algorithm::AlgorithmKind;
 use crate::registration::problem::RegParams;
 use crate::util::args::Args;
 use crate::util::json::Json;
@@ -36,6 +37,14 @@ pub const MAX_GRID_N: usize = 512;
 /// Hard cap on requestable grid-continuation levels: 512 -> 16 is six
 /// factor-2 descents, so deeper requests are always typos.
 pub const MAX_MULTIRES_LEVELS: usize = 6;
+
+/// Default iteration budget for first-order (`gd`/`lbfgs`) jobs when the
+/// request leaves `max_iter` unset. The paper's baselines terminate on an
+/// iteration budget rather than a gradient tolerance (section 4.2.2), and
+/// need visibly more steps than Gauss-Newton's 50 — this default lives in
+/// the single `validate` path so every surface (wire, config, CLI, batch)
+/// runs the same budget.
+pub const FIRST_ORDER_DEFAULT_MAX_ITER: usize = 100;
 
 /// Dispatch priority. Higher priorities jump the queue (they do not kill
 /// running solves): the paper's emergency clinical scan is served before
@@ -99,6 +108,11 @@ pub struct JobRequest {
     /// Solver precision policy; `mixed` runs the PCG Hessian matvecs
     /// through the reduced-precision artifacts. Wire field `"precision"`.
     pub precision: Precision,
+    /// Which optimizer runs the job. Wire field `"algorithm"`: absent =
+    /// `gn` (the paper's Gauss-Newton-Krylov; pre-algorithm clients keep
+    /// working), `gd`/`lbfgs` select the first-order baselines through
+    /// the same `Session` entry point.
+    pub algorithm: AlgorithmKind,
     /// Grid-continuation levels. Wire field `"multires"`; absent = single
     /// grid. `Some(k >= 2)` runs `solve_multires` coarse-to-fine.
     pub multires: Option<usize>,
@@ -121,6 +135,7 @@ impl Default for JobRequest {
             variant: "opt-fd8-cubic".into(),
             source: JobSource::Synthetic,
             precision: Precision::Full,
+            algorithm: AlgorithmKind::GaussNewton,
             multires: None,
             priority: Priority::Batch,
             max_iter: None,
@@ -136,11 +151,11 @@ impl Default for JobRequest {
 }
 
 impl JobRequest {
-    /// Display name used in job records and the journal. Mixed-precision
-    /// jobs carry a `+mixed` suffix and multires jobs a `+mr<levels>`
-    /// suffix so status tables and the journal show the policy at a
-    /// glance; uploaded-source jobs show truncated content ids instead of
-    /// a subject.
+    /// Display name used in job records and the journal. Non-default
+    /// algorithms carry a `+gd`/`+lbfgs` suffix, mixed-precision jobs
+    /// `+mixed` and multires jobs `+mr<levels>`, so status tables and the
+    /// journal show the policy at a glance; uploaded-source jobs show
+    /// truncated content ids instead of a subject.
     pub fn name(&self) -> String {
         let subject = match &self.source {
             JobSource::Synthetic => self.subject.clone(),
@@ -150,6 +165,10 @@ impl JobRequest {
             }
         };
         let mut name = format!("{}@{}^3/{}", subject, self.n, self.variant);
+        if self.algorithm != AlgorithmKind::GaussNewton {
+            name.push('+');
+            name.push_str(self.algorithm.as_str());
+        }
         if self.precision == Precision::Mixed {
             name.push_str("+mixed");
         }
@@ -191,12 +210,16 @@ impl JobRequest {
         // one copy, shared with every direct `RegParams` consumer.
         let d = RegParams::default();
         let p = RegParams {
+            algorithm: self.algorithm,
             variant: self.variant.clone(),
             precision: self.precision,
             beta: self.beta.unwrap_or(d.beta),
             gamma: self.gamma.unwrap_or(d.gamma),
             gtol: self.gtol.unwrap_or(d.gtol),
-            max_iter: self.max_iter.unwrap_or(d.max_iter),
+            max_iter: self.max_iter.unwrap_or(match self.algorithm {
+                AlgorithmKind::GaussNewton => d.max_iter,
+                _ => FIRST_ORDER_DEFAULT_MAX_ITER,
+            }),
             max_krylov: self.max_krylov.unwrap_or(d.max_krylov),
             continuation: self.continuation.unwrap_or(d.continuation),
             multires: self.multires.unwrap_or(d.multires),
@@ -218,6 +241,9 @@ impl JobRequest {
             ("precision", Json::str(self.precision.as_str())),
             ("priority", Json::str(self.priority.as_str())),
         ];
+        if self.algorithm != AlgorithmKind::GaussNewton {
+            pairs.push(("algorithm", Json::str(self.algorithm.as_str())));
+        }
         if let JobSource::Uploaded { m0, m1 } = &self.source {
             pairs.push((
                 "source",
@@ -330,6 +356,13 @@ impl JobRequest {
                 })?,
                 None => d.precision,
             },
+            // Absent algorithm defaults to GN-Krylov (pre-algorithm
+            // clients keep working); unknown names are an error shared
+            // verbatim with the config and CLI surfaces.
+            algorithm: match field(j, "algorithm", Json::as_str, "a string")? {
+                Some(s) => AlgorithmKind::parse(s)?,
+                None => d.algorithm,
+            },
             priority: match field(j, "priority", Json::as_str, "a string")? {
                 Some(s) => Priority::parse(s)?,
                 None => d.priority,
@@ -368,6 +401,14 @@ impl JobRequest {
         if let Some(v) = args.get("precision") {
             req.precision = Precision::parse(v)?;
         }
+        // `--optimizer` is the legacy spelling of `--algorithm`; both are
+        // ordinary flags (they override a config-file `algorithm =` key,
+        // like every other flag here), with the new spelling winning when
+        // both are given. Handled in this shared path so every subcommand
+        // that advertises the alias honors it identically.
+        if let Some(v) = args.get("algorithm").or_else(|| args.get("optimizer")) {
+            req.algorithm = AlgorithmKind::parse(v)?;
+        }
         let (m0, m1) = (args.get_or("m0", ""), args.get_or("m1", ""));
         match (m0.is_empty(), m1.is_empty()) {
             (true, true) => {}
@@ -398,6 +439,16 @@ impl JobRequest {
         }
         if args.get("max-iter").is_some() {
             req.max_iter = Some(args.get_usize("max-iter", 0)?);
+        }
+        // Legacy first-order budget flag: `--max-fo-iter N` acts as
+        // `--max-iter N` for gd/lbfgs requests when no explicit
+        // `--max-iter` was given (absent both, `validate` applies the
+        // shared FIRST_ORDER_DEFAULT_MAX_ITER on every surface).
+        if req.max_iter.is_none()
+            && req.algorithm != AlgorithmKind::GaussNewton
+            && args.get("max-fo-iter").is_some()
+        {
+            req.max_iter = Some(args.get_usize("max-fo-iter", 0)?);
         }
         if args.get("beta").is_some() {
             req.beta = Some(args.get_f64("beta", 0.0)?);
@@ -432,11 +483,14 @@ mod tests {
             opt("n", "", "16"),
             opt("variant", "", "opt-fd8-cubic"),
             opt("precision", "", "full"),
+            opt("algorithm", "", "gn"),
+            opt("optimizer", "", "gn"),
             opt("m0", "", ""),
             opt("m1", "", ""),
             opt("multires", "", "1"),
             opt("priority", "", "batch"),
             opt("max-iter", "", "50"),
+            opt("max-fo-iter", "", "100"),
             opt("beta", "", "5e-4"),
             opt("gamma", "", "1e-4"),
             opt("gtol", "", "5e-2"),
@@ -469,6 +523,13 @@ mod tests {
         assert!(JobRequest { n: 0, ..Default::default() }.validate().is_err());
         assert!(JobRequest { multires: Some(0), ..Default::default() }.validate().is_err());
         assert!(JobRequest { multires: Some(7), ..Default::default() }.validate().is_err());
+        // Multires pyramids are GN-only (baselines run single-grid).
+        let gd_mr = JobRequest {
+            algorithm: AlgorithmKind::GradientDescent,
+            multires: Some(3),
+            ..Default::default()
+        };
+        assert!(gd_mr.validate().unwrap_err().to_string().contains("requires algorithm 'gn'"));
         assert!(JobRequest { max_iter: Some(0), ..Default::default() }.validate().is_err());
         assert!(JobRequest { beta: Some(0.0), ..Default::default() }.validate().is_err());
         assert!(JobRequest { beta: Some(f64::NAN), ..Default::default() }.validate().is_err());
@@ -490,6 +551,8 @@ mod tests {
         assert!(JobRequest::from_json(&Json::parse(r#"{"max_iter":2.5}"#).unwrap()).is_err());
         assert!(JobRequest::from_json(&Json::parse(r#"{"multires":"3"}"#).unwrap()).is_err());
         assert!(JobRequest::from_json(&Json::parse(r#"{"precision":"half"}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse(r#"{"algorithm":"newton"}"#).unwrap()).is_err());
+        assert!(JobRequest::from_json(&Json::parse(r#"{"algorithm":5}"#).unwrap()).is_err());
         assert!(JobRequest::from_json(&Json::parse(r#"{"priority":"asap"}"#).unwrap()).is_err());
         assert!(JobRequest::from_json(&Json::parse("5").unwrap()).is_err());
         // ... ranges at validate (the single path shared by all surfaces).
@@ -523,9 +586,14 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(JobRequest::from_json(&req.to_json()).unwrap(), req);
-        // Optional knobs stay off the wire when unset (v1 byte-compat).
+        let fo = JobRequest { algorithm: AlgorithmKind::Lbfgs, ..Default::default() };
+        assert_eq!(JobRequest::from_json(&fo.to_json()).unwrap(), fo);
+        // Optional knobs stay off the wire when unset (v1 byte-compat) —
+        // including the default algorithm.
         let line = JobRequest::default().to_json().render();
-        for absent in ["max_krylov", "gamma", "incompressible", "verbose", "multires"] {
+        for absent in
+            ["max_krylov", "gamma", "incompressible", "verbose", "multires", "algorithm"]
+        {
             assert!(!line.contains(absent), "{absent} leaked into {line}");
         }
     }
@@ -543,6 +611,40 @@ mod tests {
         assert_eq!(mixed.name(), "na02@16^3/opt-fd8-cubic+mixed");
         let mr1 = JobRequest { multires: Some(1), ..Default::default() };
         assert!(!mr1.name().contains("mr"), "{}", mr1.name());
+        let gd = JobRequest { algorithm: AlgorithmKind::GradientDescent, ..Default::default() };
+        assert_eq!(gd.name(), "na02@16^3/opt-fd8-cubic+gd");
+    }
+
+    #[test]
+    fn first_order_budget_is_uniform_across_surfaces() {
+        // Absent max_iter: GN keeps the paper's 50, first-order requests
+        // get the shared 100-iteration budget — from validate(), so wire,
+        // config, CLI and batch all agree.
+        assert_eq!(JobRequest::default().validate().unwrap().max_iter, 50);
+        let gd = JobRequest { algorithm: AlgorithmKind::GradientDescent, ..Default::default() };
+        assert_eq!(gd.validate().unwrap().max_iter, FIRST_ORDER_DEFAULT_MAX_ITER);
+        // An explicit budget always wins.
+        let gd7 = JobRequest { max_iter: Some(7), ..gd };
+        assert_eq!(gd7.validate().unwrap().max_iter, 7);
+        // The legacy CLI flag feeds the same field (first-order only).
+        let fo = JobRequest::from_args(&cli(&["--algorithm", "gd", "--max-fo-iter", "9"]))
+            .unwrap();
+        assert_eq!(fo.max_iter, Some(9));
+        let gn = JobRequest::from_args(&cli(&["--max-fo-iter", "9"])).unwrap();
+        assert_eq!(gn.max_iter, None, "GN requests ignore the fo flag");
+    }
+
+    #[test]
+    fn optimizer_is_a_true_alias_for_algorithm() {
+        // The legacy flag selects the algorithm through the shared path...
+        let req = JobRequest::from_args(&cli(&["--optimizer", "gd"])).unwrap();
+        assert_eq!(req.algorithm, AlgorithmKind::GradientDescent);
+        // ... the new spelling wins when both are given...
+        let both =
+            JobRequest::from_args(&cli(&["--optimizer", "gd", "--algorithm", "lbfgs"])).unwrap();
+        assert_eq!(both.algorithm, AlgorithmKind::Lbfgs);
+        // ... and unknown names reject through the same parse.
+        assert!(JobRequest::from_args(&cli(&["--optimizer", "newton"])).is_err());
     }
 
     /// The acceptance contract: wire, config and CLI all funnel through
@@ -608,6 +710,22 @@ mod tests {
         assert!(JobRequest::from_json(&Json::parse(r#"{"precision":"fp8"}"#).unwrap()).is_err());
         assert!(Config::parse("precision = fp8\n").unwrap().job_request().is_err());
         assert!(JobRequest::from_args(&cli(&["--precision", "fp8"])).is_err());
+
+        // The algorithm field follows the same contract: one accepted
+        // spelling set, identical errors on every surface.
+        let w = JobRequest::from_json(&Json::parse(r#"{"algorithm":"lbfgs"}"#).unwrap()).unwrap();
+        let c = Config::parse("algorithm = lbfgs\n").unwrap().job_request().unwrap();
+        let a = JobRequest::from_args(&cli(&["--algorithm", "lbfgs"])).unwrap();
+        assert_eq!(w.validate().unwrap().algorithm, AlgorithmKind::Lbfgs);
+        assert_eq!(w, c);
+        assert_eq!(w, a);
+        let ew = JobRequest::from_json(&Json::parse(r#"{"algorithm":"newton"}"#).unwrap())
+            .unwrap_err();
+        let ec = Config::parse("algorithm = newton\n").unwrap().job_request().unwrap_err();
+        let ea = JobRequest::from_args(&cli(&["--algorithm", "newton"])).unwrap_err();
+        assert_eq!(ew.to_string(), ec.to_string());
+        assert_eq!(ew.to_string(), ea.to_string());
+        assert_eq!(ew.code(), ErrorCode::BadRequest);
     }
 
     #[test]

@@ -34,15 +34,24 @@ use crate::util::json::Json;
 /// subcommand and the daemon-mode example).
 pub fn job_table(jobs: &[JobView]) -> Table {
     let mut t = Table::new(&[
-        "id", "job", "prio", "state", "order", "lat[s]", "solve[s]", "mism", "lvls", "err",
+        "id", "job", "prio", "state", "it", "|g|rel", "order", "lat[s]", "solve[s]", "mism",
+        "lvls", "err",
     ]);
     let fo = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
     for v in jobs {
+        // Live progress while running (fed by the solve observer); the
+        // final report's iteration count once the job is done.
+        let iters = v.iters_done.or(v.iters);
         t.row(&[
             v.id.to_string(),
             v.name.clone(),
             v.priority.as_str().into(),
             v.state.as_str().into(),
+            iters.map(|i| i.to_string()).unwrap_or_else(|| "-".into()),
+            v.grad_rel
+                .filter(|g| g.is_finite())
+                .map(|g| format!("{g:.1e}"))
+                .unwrap_or_else(|| "-".into()),
             v.dispatch_seq.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
             fo(v.latency_s),
             fo(v.wall_s),

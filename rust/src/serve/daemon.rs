@@ -240,6 +240,21 @@ fn forward_events(
 }
 
 fn event_to_msg(ev: WatchEvent, seq: Option<u64>) -> EventMsg {
+    // Progress beats travel as their own event kind; lifecycle
+    // transitions keep the original `job` grammar.
+    if let Some(p) = ev.progress {
+        return EventMsg::Progress {
+            seq,
+            id: ev.id,
+            name: ev.name,
+            iter: p.iters_done,
+            level: p.level,
+            beta: p.beta,
+            j: p.j,
+            grad_rel: p.grad_rel,
+            alpha: p.alpha,
+        };
+    }
     EventMsg::Job {
         seq,
         id: ev.id,
@@ -532,7 +547,11 @@ mod tests {
     }
 
     impl Executor for Stub {
-        fn execute(&mut self, payload: &JobPayload) -> Result<crate::registration::RunReport> {
+        fn execute(
+            &mut self,
+            payload: &JobPayload,
+            _cx: &crate::registration::SolveCx,
+        ) -> Result<crate::registration::RunReport> {
             let (variant, n, name) = match payload {
                 JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
                     (s.variant.clone(), s.n, s.name())

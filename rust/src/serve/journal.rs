@@ -53,13 +53,17 @@ impl Journal {
     }
 
     /// Append one scheduler event as a JSON line. `Started` transitions
-    /// are *not* journaled: running is transient state that is wrong by
-    /// definition after a restart, and skipping it keeps the journal
-    /// format byte-compatible with pre-watch incarnations (watch
-    /// subscribers get the running event from the live bus instead).
+    /// and per-iteration `Progress` beats are *not* journaled: running is
+    /// transient state that is wrong by definition after a restart,
+    /// per-iteration lines would swamp an audit trail, and skipping both
+    /// keeps the journal format byte-compatible with pre-watch
+    /// incarnations (watch subscribers get them from the live bus
+    /// instead). A `Finished` in the cancelled state — a *running* job
+    /// interrupted at an iteration boundary — journals as `cancelled`,
+    /// same spelling as a queued-job cancellation.
     pub fn append(&self, ev: &JobEvent) -> Result<()> {
         let j = match ev {
-            JobEvent::Started { .. } => return Ok(()),
+            JobEvent::Started { .. } | JobEvent::Progress { .. } => return Ok(()),
             JobEvent::Submitted { id, name, priority } => Json::object([
                 ("event", Json::str("submitted")),
                 ("id", Json::num(*id as f64)),
@@ -70,7 +74,11 @@ impl Journal {
             JobEvent::Finished { id, name, state, wall_s, .. } => Json::object([
                 (
                     "event",
-                    Json::str(if *state == JobState::Done { "done" } else { "failed" }),
+                    Json::str(match state {
+                        JobState::Done => "done",
+                        JobState::Cancelled => "cancelled",
+                        _ => "failed",
+                    }),
                 ),
                 ("id", Json::num(*id as f64)),
                 ("name", Json::str(name)),
@@ -190,6 +198,39 @@ mod tests {
         assert_eq!(entries[3].event, "failed");
         assert_eq!(Journal::completed_count(&entries), 1);
         assert_eq!(Journal::max_id(&entries), 3, "id seeding looks past all events");
+    }
+
+    #[test]
+    fn running_cancel_journals_as_cancelled_and_progress_is_skipped() {
+        let p = tmp("cancel_running.ndjson");
+        let journal = Journal::open(&p).unwrap();
+        journal
+            .append(&JobEvent::Progress {
+                id: 4,
+                name: "x".into(),
+                progress: crate::serve::scheduler::Progress {
+                    iters_done: 1,
+                    level: 0,
+                    beta: 5e-4,
+                    j: 1.0,
+                    grad_rel: 0.5,
+                    alpha: 1.0,
+                },
+            })
+            .unwrap();
+        journal
+            .append(&JobEvent::Finished {
+                id: 4,
+                name: "x".into(),
+                state: JobState::Cancelled,
+                wall_s: 0.3,
+                error: None,
+            })
+            .unwrap();
+        let entries = Journal::replay(&p).unwrap();
+        assert_eq!(entries.len(), 1, "progress beats never hit the audit trail");
+        assert_eq!(entries[0].event, "cancelled");
+        assert_eq!(Journal::completed_count(&entries), 0);
     }
 
     #[test]

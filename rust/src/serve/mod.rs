@@ -35,6 +35,6 @@ pub use proto::{
 };
 pub use scheduler::{
     worker_loop, BusMsg, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView,
-    PjrtExecutor, Scheduler, ServeStats, WatchEvent, WatchHandle,
+    PjrtExecutor, Progress, Scheduler, ServeStats, WatchEvent, WatchHandle,
 };
 pub use store::{StoreStats, UploadReceipt, VolumeStore};

@@ -39,9 +39,13 @@
 //! client may pipeline requests on one connection and correlate answers.
 //!
 //! Watch events (one per `queued → running → done|failed|cancelled`
-//! transition, pushed asynchronously on the watching connection):
+//! transition — cancelling a *running* job interrupts it at the next
+//! solver iteration boundary — plus one `progress` event per accepted
+//! solver iteration, pushed asynchronously on the watching connection):
 //! ```text
 //! {"event":"job","id":7,"name":"na02@16^3/opt-fd8-cubic","state":"running","seq":4}
+//! {"event":"progress","id":7,"name":"...","iter":3,"level":0,"beta":0.0005,
+//!  "j":0.012,"grad_rel":0.31,"alpha":1.0,"seq":4}
 //! {"event":"job","id":7,"name":"...","state":"done","wall_s":1.25,"seq":4}
 //! {"event":"lagged","seq":4}        terminal: subscriber fell behind
 //! ```
@@ -507,6 +511,11 @@ fn job_to_json(v: &JobView) -> Json {
         ("priority", Json::str(v.priority.as_str())),
         ("state", Json::str(v.state.as_str())),
         (
+            "iters_done",
+            v.iters_done.map(|i| Json::num(i as f64)).unwrap_or(Json::Null),
+        ),
+        ("grad_rel", opt_num(v.grad_rel)),
+        (
             "dispatch_seq",
             v.dispatch_seq.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
         ),
@@ -543,6 +552,8 @@ fn job_from_json(j: &Json) -> Result<JobView> {
         state: JobState::parse(
             j.get("state").and_then(Json::as_str).ok_or_else(|| miss("state"))?,
         )?,
+        iters_done: j.get("iters_done").and_then(Json::as_usize),
+        grad_rel: j.get("grad_rel").and_then(Json::as_f64),
         dispatch_seq: j.get("dispatch_seq").and_then(Json::as_usize).map(|x| x as u64),
         latency_s: j.get("latency_s").and_then(Json::as_f64),
         wall_s: j.get("wall_s").and_then(Json::as_f64),
@@ -759,6 +770,20 @@ pub enum EventMsg {
         wall_s: Option<f64>,
         error: Option<String>,
     },
+    /// One accepted solver iteration of a running job (`claire watch`
+    /// renders these live): iteration count, grid level, continuation
+    /// beta, objective J, relative gradient norm and step length.
+    Progress {
+        seq: Option<u64>,
+        id: JobId,
+        name: String,
+        iter: usize,
+        level: usize,
+        beta: f64,
+        j: f64,
+        grad_rel: f64,
+        alpha: f64,
+    },
     /// Terminal marker: the subscriber fell behind the bounded event
     /// queue and was dropped; no further events will arrive. Re-issue
     /// `watch` (ideally on a drained connection) to resubscribe.
@@ -790,6 +815,20 @@ impl EventMsg {
                     pairs.push(("seq", Json::num(*s as f64)));
                 }
             }
+            EventMsg::Progress { seq, id, name, iter, level, beta, j, grad_rel, alpha } => {
+                pairs.push(("event", Json::str("progress")));
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("name", Json::str(name)));
+                pairs.push(("iter", Json::num(*iter as f64)));
+                pairs.push(("level", Json::num(*level as f64)));
+                pairs.push(("beta", Json::num(*beta)));
+                pairs.push(("j", Json::num(*j)));
+                pairs.push(("grad_rel", Json::num(*grad_rel)));
+                pairs.push(("alpha", Json::num(*alpha)));
+                if let Some(s) = seq {
+                    pairs.push(("seq", Json::num(*s as f64)));
+                }
+            }
             EventMsg::Lagged { seq } => {
                 pairs.push(("event", Json::str("lagged")));
                 if let Some(s) = seq {
@@ -808,6 +847,29 @@ impl EventMsg {
         let seq = j.get("seq").and_then(Json::as_index);
         match kind {
             "lagged" => Ok(EventMsg::Lagged { seq }),
+            "progress" => {
+                let miss = |k: &str| Error::Serve(format!("progress event missing '{k}'"));
+                let num =
+                    |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| miss(k));
+                Ok(EventMsg::Progress {
+                    seq,
+                    id: j.get("id").and_then(Json::as_index).ok_or_else(|| miss("id"))?,
+                    name: j
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| miss("name"))?
+                        .to_string(),
+                    iter: j.get("iter").and_then(Json::as_usize).ok_or_else(|| miss("iter"))?,
+                    level: j
+                        .get("level")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| miss("level"))?,
+                    beta: num("beta")?,
+                    j: num("j")?,
+                    grad_rel: num("grad_rel")?,
+                    alpha: num("alpha")?,
+                })
+            }
             "job" => {
                 let miss = |k: &str| Error::Serve(format!("job event missing '{k}'"));
                 Ok(EventMsg::Job {
@@ -1051,6 +1113,8 @@ mod tests {
             name: "na02@16^3/opt-fd8-cubic".into(),
             priority: Priority::Urgent,
             state: JobState::Done,
+            iters_done: Some(11),
+            grad_rel: Some(4.2e-2),
             dispatch_seq: Some(5),
             latency_s: Some(1.25),
             wall_s: Some(0.5),
@@ -1066,6 +1130,8 @@ mod tests {
                 assert_eq!(got.state, JobState::Done);
                 assert_eq!(got.dispatch_seq, Some(5));
                 assert_eq!(got.iters, Some(11));
+                assert_eq!(got.iters_done, Some(11), "live progress travels");
+                assert_eq!(got.grad_rel, Some(4.2e-2));
                 assert_eq!(got.levels, Some(3), "realized multires depth travels");
             }
             other => panic!("unexpected {other:?}"),
@@ -1244,6 +1310,19 @@ mod tests {
         assert_eq!(EventMsg::parse(&failed.to_line()).unwrap(), failed);
         let lag = EventMsg::Lagged { seq: Some(4) };
         assert_eq!(EventMsg::parse(&lag.to_line()).unwrap(), lag);
+        let progress = EventMsg::Progress {
+            seq: Some(4),
+            id: 7,
+            name: "na02@16^3/opt-fd8-cubic".into(),
+            iter: 3,
+            level: 1,
+            beta: 5e-4,
+            j: 0.0125,
+            grad_rel: 0.31,
+            alpha: 1.0,
+        };
+        assert_eq!(EventMsg::parse(&progress.to_line()).unwrap(), progress);
+        assert!(EventMsg::parse(r#"{"event":"progress","id":7}"#).is_err());
         // Events and responses are distinguishable by key.
         let j = Json::parse(&running.to_line()).unwrap();
         assert!(EventMsg::is_event(&j));

@@ -18,14 +18,16 @@
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
+use crate::registration::algorithm::{IterEvent, Session, SolveCx, SolveObserver};
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::registration::report::RunReport;
-use crate::registration::solver::GnSolver;
+use crate::registration::solver::{GaussNewtonKrylov, IterRecord};
 use crate::runtime::OpRegistry;
 use crate::serve::proto::{JobSpec, Priority};
 use crate::serve::store::StoreStats;
@@ -90,6 +92,25 @@ impl JobPayload {
     }
 }
 
+/// Live per-iteration progress of a job's solve, fed by the scheduler's
+/// `SolveObserver`: what the poll-only control plane (`JobView`, `claire
+/// status`) and the v2 `progress` watch event show for running jobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Progress {
+    /// Accepted iterations so far, across all grid levels.
+    pub iters_done: usize,
+    /// Grid level of the latest iteration (0 = coarsest; 0 on single-grid).
+    pub level: usize,
+    /// Regularization weight of the latest iteration's continuation level.
+    pub beta: f64,
+    /// Objective value at the latest iteration.
+    pub j: f64,
+    /// Latest relative gradient norm ‖g‖/‖g0‖.
+    pub grad_rel: f64,
+    /// Latest accepted line-search step length.
+    pub alpha: f64,
+}
+
 /// Wire-friendly snapshot of one job (flat scalars only; the full
 /// `RunReport` stays daemon-side, see `Scheduler::full_report`).
 #[derive(Clone, Debug)]
@@ -98,6 +119,11 @@ pub struct JobView {
     pub name: String,
     pub priority: Priority,
     pub state: JobState,
+    /// Iterations completed so far (live for running jobs; for a
+    /// cancelled job, the partial-history length at the interrupt).
+    pub iters_done: Option<usize>,
+    /// Latest relative gradient norm reported by the solve observer.
+    pub grad_rel: Option<f64>,
     /// Monotonic dispatch counter: lower = started earlier. `None` until
     /// a worker picks the job up (or forever, if cancelled while queued).
     pub dispatch_seq: Option<u64>,
@@ -151,6 +177,13 @@ struct JobRecord {
     wall_s: Option<f64>,
     error: Option<String>,
     report: Option<RunReport>,
+    /// Cooperative cancellation flag, shared with the worker's `SolveCx`:
+    /// `cancel` on a running job sets it, and the solver observes it at
+    /// the next iteration boundary.
+    cancel: Arc<AtomicBool>,
+    /// Latest observer-reported progress (survives into terminal states
+    /// so a cancelled job's partial work stays visible).
+    progress: Option<Progress>,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -251,7 +284,14 @@ pub enum JobEvent {
     /// A worker picked the job up (`queued → running`). Broadcast to
     /// watch subscribers; the journal skips it (transient state).
     Started { id: JobId, name: String },
+    /// One accepted solver iteration of a running job. Broadcast to watch
+    /// subscribers (the v2 `progress` event); the journal skips it —
+    /// per-iteration lines would swamp an audit trail.
+    Progress { id: JobId, name: String, progress: Progress },
+    /// Terminal transition of a dispatched job: `done`, `failed`, or —
+    /// when a running solve observed its cancellation flag — `cancelled`.
     Finished { id: JobId, name: String, state: JobState, wall_s: f64, error: Option<String> },
+    /// A *queued* job was cancelled before any worker picked it up.
     Cancelled { id: JobId, name: String },
 }
 
@@ -264,16 +304,20 @@ type EventSink = Box<dyn Fn(&JobEvent) + Send + Sync>;
 /// wedged TCP peer costs bounded memory before being dropped as lagged.
 pub const WATCH_QUEUE_CAP: usize = 256;
 
-/// One job state transition as observed by a `watch` subscriber.
+/// One job state transition — or per-iteration progress beat — as
+/// observed by a `watch` subscriber.
 #[derive(Clone, Debug)]
 pub struct WatchEvent {
     pub id: JobId,
     pub name: String,
     pub state: JobState,
-    /// Worker-side solve seconds; present on `done`/`failed` only.
+    /// Worker-side solve seconds; present on terminal transitions only.
     pub wall_s: Option<f64>,
     /// Failure message; present on `failed` only.
     pub error: Option<String>,
+    /// Per-iteration beat of a running solve (`state` stays `running`);
+    /// `None` on lifecycle transitions.
+    pub progress: Option<Progress>,
 }
 
 /// What a subscriber receives from [`WatchHandle::recv`].
@@ -509,6 +553,7 @@ impl Scheduler {
                 state: JobState::Queued,
                 wall_s: None,
                 error: None,
+                progress: None,
             },
             JobEvent::Started { id, name } => WatchEvent {
                 id: *id,
@@ -516,6 +561,15 @@ impl Scheduler {
                 state: JobState::Running,
                 wall_s: None,
                 error: None,
+                progress: None,
+            },
+            JobEvent::Progress { id, name, progress } => WatchEvent {
+                id: *id,
+                name: name.clone(),
+                state: JobState::Running,
+                wall_s: None,
+                error: None,
+                progress: Some(*progress),
             },
             JobEvent::Finished { id, name, state, wall_s, error } => WatchEvent {
                 id: *id,
@@ -523,6 +577,7 @@ impl Scheduler {
                 state: *state,
                 wall_s: Some(*wall_s),
                 error: error.clone(),
+                progress: None,
             },
             JobEvent::Cancelled { id, name } => WatchEvent {
                 id: *id,
@@ -530,6 +585,7 @@ impl Scheduler {
                 state: JobState::Cancelled,
                 wall_s: None,
                 error: None,
+                progress: None,
             },
         };
         reg.subs.retain(|(_, q)| q.push(BusMsg::Event(transition.clone())));
@@ -590,6 +646,8 @@ impl Scheduler {
                     wall_s: None,
                     error: None,
                     report: None,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    progress: None,
                 },
             );
             st.queue.push(QEntry { priority, seq, id });
@@ -655,7 +713,10 @@ impl Scheduler {
         dispatched
     }
 
-    /// Record a finished job. `wall_s` is the worker-side solve time.
+    /// Record a finished job. `wall_s` is the worker-side solve time. A
+    /// solve that observed its cancellation flag (`Error::Cancelled`)
+    /// lands in `Cancelled` — the `running → cancelled` transition — with
+    /// its partial-history length preserved in the progress view.
     pub fn complete(&self, id: JobId, result: Result<RunReport>, wall_s: f64) {
         let mut st = self.inner.st.lock().unwrap();
         let Some(rec) = st.jobs.get_mut(&id) else { return };
@@ -666,6 +727,27 @@ impl Scheduler {
             Ok(report) => {
                 rec.state = JobState::Done;
                 rec.report = Some(report);
+            }
+            Err(Error::Cancelled { history }) => {
+                rec.state = JobState::Cancelled;
+                // Keep the partial work visible even when the executor
+                // never routed an observer (the history is authoritative;
+                // observer-fed progress can only match it).
+                let p = rec.progress.get_or_insert(Progress {
+                    iters_done: 0,
+                    level: 0,
+                    beta: f64::NAN,
+                    j: f64::NAN,
+                    grad_rel: f64::NAN,
+                    alpha: f64::NAN,
+                });
+                p.iters_done = p.iters_done.max(history.len());
+                if let Some(last) = history.last() {
+                    p.beta = last.level_beta;
+                    p.j = last.j;
+                    p.grad_rel = last.grad_rel;
+                    p.alpha = last.alpha;
+                }
             }
             Err(e) => {
                 rec.state = JobState::Failed;
@@ -683,6 +765,7 @@ impl Scheduler {
         st.running = st.running.saturating_sub(1);
         match state {
             JobState::Done => st.counters.completed += 1,
+            JobState::Cancelled => st.counters.cancelled += 1,
             _ => st.counters.failed += 1,
         }
         st.note_terminal(id, self.inner.retention);
@@ -691,8 +774,13 @@ impl Scheduler {
         self.flush_events();
     }
 
-    /// Cancel a queued job. Running jobs are not preempted mid-solve
-    /// (PJRT executions are not interruptible); terminal jobs are final.
+    /// Cancel a job. Queued jobs cancel immediately (never dispatched);
+    /// *running* jobs are interrupted cooperatively — the shared flag in
+    /// the worker's `SolveCx` trips at the solver's next iteration
+    /// boundary, and the job completes as `running → cancelled` with its
+    /// partial history. Terminal jobs are final. A running job whose
+    /// solve finishes before the next boundary still completes `done` —
+    /// the flag is a request, not preemption.
     pub fn cancel(&self, id: JobId) -> Result<()> {
         let mut st = self.inner.st.lock().unwrap();
         let Some(rec) = st.jobs.get_mut(&id) else {
@@ -714,11 +802,55 @@ impl Scheduler {
                 self.flush_events();
                 Ok(())
             }
+            JobState::Running => {
+                // The transition is recorded (journaled, streamed) when
+                // the worker actually observes the flag and completes the
+                // job — not here, where the solve is still running.
+                rec.cancel.store(true, AtomicOrdering::SeqCst);
+                Ok(())
+            }
             other => Err(Error::wire(
                 ErrorCode::InvalidState,
                 format!("job {id} is {} and cannot be cancelled", other.as_str()),
             )),
         }
+    }
+
+    /// Build the observer/cancellation context a worker threads into
+    /// `Executor::execute` for job `id`: the record's shared cancel flag
+    /// plus a progress sink feeding `JobView` and the `progress` events.
+    pub fn solve_cx(&self, id: JobId) -> SolveCx {
+        let flag = {
+            let st = self.inner.st.lock().unwrap();
+            st.jobs.get(&id).map(|r| r.cancel.clone())
+        };
+        let mut cx = SolveCx::new()
+            .with_observer(Arc::new(ProgressSink { sched: self.clone(), id }));
+        if let Some(flag) = flag {
+            cx = cx.with_cancel(flag);
+        }
+        cx
+    }
+
+    /// Record one solver iteration of a running job and broadcast the
+    /// `progress` event. Called from the worker thread via `ProgressSink`.
+    fn note_progress(&self, id: JobId, ev: &IterEvent<'_>) {
+        let mut st = self.inner.st.lock().unwrap();
+        let Some(rec) = st.jobs.get_mut(&id) else { return };
+        let iters_done = rec.progress.map_or(0, |p| p.iters_done) + 1;
+        let progress = Progress {
+            iters_done,
+            level: ev.level,
+            beta: ev.record.level_beta,
+            j: ev.record.j,
+            grad_rel: ev.record.grad_rel,
+            alpha: ev.record.alpha,
+        };
+        rec.progress = Some(progress);
+        let name = rec.name.clone();
+        self.emit_locked(JobEvent::Progress { id, name, progress });
+        drop(st);
+        self.flush_events();
     }
 
     pub fn status(&self, id: JobId) -> Option<JobView> {
@@ -790,12 +922,27 @@ impl Scheduler {
     }
 }
 
+/// The scheduler's `SolveObserver`: forwards each iteration of job `id`
+/// into the shared state + event bus.
+struct ProgressSink {
+    sched: Scheduler,
+    id: JobId,
+}
+
+impl SolveObserver for ProgressSink {
+    fn on_iteration(&self, ev: &IterEvent<'_>) {
+        self.sched.note_progress(self.id, ev);
+    }
+}
+
 fn view_of(id: JobId, r: &JobRecord) -> JobView {
     JobView {
         id,
         name: r.name.clone(),
         priority: r.priority,
         state: r.state,
+        iters_done: r.progress.map(|p| p.iters_done),
+        grad_rel: r.progress.map(|p| p.grad_rel),
         dispatch_seq: r.dispatch_seq,
         latency_s: r.latency_s,
         wall_s: r.wall_s,
@@ -813,7 +960,12 @@ fn view_of(id: JobId, r: &JobRecord) -> JobView {
 /// they need (the real one owns a PJRT client + operator cache; tests use
 /// stubs so scheduler/daemon behavior is checkable without artifacts).
 pub trait Executor {
-    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport>;
+    /// Run one job under the scheduler's observer/cancellation context.
+    /// Implementations should thread `cx` into the solve
+    /// (`Session::solve_cx`) so a running job can be cancelled at
+    /// iteration boundaries and report live progress; a stub that ignores
+    /// it simply runs uninterruptible, progress-silent jobs.
+    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport>;
 
     /// Cumulative (compiles, warm hits) of this worker's operator cache.
     fn cache_stats(&self) -> (u64, u64) {
@@ -835,7 +987,7 @@ impl PjrtExecutor {
 }
 
 impl Executor for PjrtExecutor {
-    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport> {
         let (problem, params) = match payload {
             JobPayload::Spec(spec) => (
                 crate::data::synth::nirep_analog_pair(&self.registry, spec.n, &spec.subject)?,
@@ -854,10 +1006,12 @@ impl Executor for PjrtExecutor {
             ),
             JobPayload::Problem { problem, params } => (problem.clone(), params.clone()),
         };
-        let solver = GnSolver::new(&self.registry, params);
-        // `solve_auto` honors the multires level count carried in the
-        // params: coarse-to-fine grid continuation over the wire.
-        let res = solver.solve_auto(&problem)?;
+        // The unified entry point: `params.algorithm` selects the
+        // optimizer (GN-Krylov or a first-order baseline), `multires`
+        // picks grid continuation, and the scheduler's context makes the
+        // solve observable and cancellable at iteration boundaries.
+        let res = Session::new(&self.registry).params(params.clone()).solve_cx(&problem, cx)?;
+        let solver = GaussNewtonKrylov::new(&self.registry, params);
         RunReport::build(&solver, &problem, &res)
     }
 
@@ -874,7 +1028,7 @@ pub struct FailingExecutor {
 }
 
 impl Executor for FailingExecutor {
-    fn execute(&mut self, _payload: &JobPayload) -> Result<RunReport> {
+    fn execute(&mut self, _payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
         Err(Error::Serve(self.msg.clone()))
     }
 }
@@ -887,9 +1041,10 @@ impl Executor for FailingExecutor {
 /// silently shrink the pool.
 pub fn worker_loop<E: Executor + ?Sized>(sched: &Scheduler, worker: usize, exec: &mut E) {
     while let Some((id, payload)) = sched.next_job(worker) {
+        let cx = sched.solve_cx(id);
         let t0 = Instant::now();
         let result =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.execute(&payload)))
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.execute(&payload, &cx)))
                 .unwrap_or_else(|p| {
                     let msg = p
                         .downcast_ref::<&str>()
@@ -901,6 +1056,22 @@ pub fn worker_loop<E: Executor + ?Sized>(sched: &Scheduler, worker: usize, exec:
         let (compiles, hits) = exec.cache_stats();
         sched.report_cache(worker, compiles, hits);
         sched.complete(id, result, t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Synthetic `IterRecord` for stub executors exercising the progress /
+/// cooperative-cancellation paths without compiled artifacts. Finite,
+/// monotone-ish values so wire encodings stay well-formed.
+pub fn stub_iter(i: usize) -> IterRecord {
+    IterRecord {
+        level_beta: 5e-4,
+        j: 1.0 / (i + 1) as f64,
+        mismatch_rel: 0.5,
+        grad_rel: 1.0 / (i + 1) as f64,
+        cg_iters: 2,
+        alpha: 1.0,
+        grad_precision: crate::precision::Precision::Full,
+        matvec_precision: crate::precision::Precision::Full,
     }
 }
 
@@ -935,7 +1106,7 @@ mod tests {
     }
 
     impl Executor for Recording {
-        fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+        fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
             let name = payload.name();
             self.ran.push(name.clone());
             if name.contains("poison") {
@@ -1077,6 +1248,129 @@ mod tests {
         assert!(sched.next_job(0).is_none(), "stale entry skipped cleanly");
     }
 
+    /// Cooperative executor: iterates up to the job's own `max_iter`
+    /// budget, notifying the context each step and honoring cancellation
+    /// at the boundary — the stub analog of what `Session::solve_cx` does
+    /// inside `PjrtExecutor`.
+    struct Cooperative {
+        step_ms: u64,
+    }
+
+    impl Executor for Cooperative {
+        fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport> {
+            let iters = match payload {
+                JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
+                    s.max_iter.unwrap_or(1)
+                }
+                JobPayload::Problem { params, .. } => params.max_iter,
+            };
+            let mut history = Vec::new();
+            for i in 0..iters {
+                if cx.cancelled() {
+                    return Err(Error::Cancelled { history });
+                }
+                let rec = stub_iter(i);
+                cx.notify(i, &rec);
+                history.push(rec);
+                std::thread::sleep(std::time::Duration::from_millis(self.step_ms));
+            }
+            Ok(stub_report(&payload.name()))
+        }
+    }
+
+    #[test]
+    fn cancel_running_job_interrupts_at_iteration_boundary() {
+        let sched = Scheduler::new(8, 1);
+        let watch = sched.watch();
+        let long = JobPayload::Spec(JobSpec {
+            subject: "longjob".into(),
+            max_iter: Some(10_000), // ~20 s unless the cancel interrupts it
+            ..Default::default()
+        });
+        let short = JobPayload::Spec(JobSpec {
+            subject: "next".into(),
+            max_iter: Some(3),
+            ..Default::default()
+        });
+        let a = sched.submit(Priority::Batch, long).unwrap();
+        let b = sched.submit(Priority::Batch, short).unwrap();
+        sched.shutdown(true);
+        let worker = {
+            let sched = sched.clone();
+            std::thread::spawn(move || {
+                let mut exec = Cooperative { step_ms: 2 };
+                worker_loop(&sched, 0, &mut exec);
+            })
+        };
+        // Wait until the first job is running and has made progress.
+        let t0 = Instant::now();
+        loop {
+            let v = sched.status(a).unwrap();
+            if v.state == JobState::Running && v.iters_done.unwrap_or(0) >= 2 {
+                break;
+            }
+            assert!(t0.elapsed().as_secs() < 10, "job never progressed: {v:?}");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // Cancel the *running* job: accepted, and the solve stops at the
+        // next iteration boundary with its partial history preserved.
+        sched.cancel(a).unwrap();
+        worker.join().unwrap();
+        let v = sched.status(a).unwrap();
+        assert_eq!(v.state, JobState::Cancelled, "running → cancelled");
+        assert!(v.iters_done.unwrap() >= 2, "partial history visible: {v:?}");
+        assert!(v.grad_rel.is_some(), "latest grad_rel visible");
+        assert!(v.wall_s.is_some(), "terminal timing recorded");
+        assert!(v.error.is_none(), "cancellation is not a failure");
+        // The worker went straight on to the next job; both cancelled jobs
+        // count once in stats.
+        assert_eq!(sched.status(b).unwrap().state, JobState::Done);
+        let s = sched.stats();
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 0);
+        // The watch stream saw progress beats while running, then the
+        // terminal cancelled transition (never a `failed`).
+        let mut saw_progress = 0usize;
+        let mut terminal = None;
+        while let Some(BusMsg::Event(ev)) = watch.recv() {
+            if ev.id != a {
+                continue;
+            }
+            if ev.progress.is_some() {
+                saw_progress += 1;
+                assert_eq!(ev.state, JobState::Running);
+            }
+            if ev.state == JobState::Cancelled {
+                terminal = Some(ev);
+                break;
+            }
+            assert_ne!(ev.state, JobState::Failed);
+        }
+        assert!(saw_progress >= 2, "progress events streamed");
+        let terminal = terminal.expect("cancelled transition streamed");
+        assert!(terminal.wall_s.is_some());
+        sched.unwatch(watch.id());
+    }
+
+    #[test]
+    fn cancel_flag_losing_the_race_keeps_done() {
+        // Cancel lands while running but the executor finishes without
+        // reaching another boundary: the job completes `done` — the flag
+        // is a request, not preemption — and nothing double-counts.
+        let sched = Scheduler::new(4, 1);
+        let a = sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        let (id, payload) = sched.next_job(0).unwrap();
+        assert_eq!(id, a);
+        sched.cancel(a).unwrap(); // running: accepted as a request
+        // Executor never checks the flag again and completes normally.
+        sched.complete(id, Ok(stub_report(&payload.name())), 0.0);
+        assert_eq!(sched.status(a).unwrap().state, JobState::Done);
+        let s = sched.stats();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.cancelled, 0);
+    }
+
     #[test]
     fn cancel_queued_only() {
         let sched = Scheduler::new(64, 1);
@@ -1134,7 +1428,7 @@ mod tests {
     fn panicking_executor_fails_job_and_worker_survives() {
         struct Panicky;
         impl Executor for Panicky {
-            fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+            fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
                 if payload.name().contains("boom") {
                     panic!("solver exploded");
                 }
@@ -1172,6 +1466,7 @@ mod tests {
             let tag = match ev {
                 JobEvent::Submitted { .. } => "submitted",
                 JobEvent::Started { .. } => "started",
+                JobEvent::Progress { .. } => "progress",
                 JobEvent::Finished { state, .. } => state.as_str(),
                 JobEvent::Cancelled { .. } => "cancelled",
             };

@@ -30,7 +30,11 @@ struct StubExec {
 }
 
 impl Executor for StubExec {
-    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
         let spec = match payload {
             JobPayload::Spec(s) => s,
             JobPayload::Volumes { spec, m0, m1 } => {
@@ -714,6 +718,9 @@ fn watch_streams_job_lifecycle() {
                 events.push((state, wall_s, error));
             }
             EventMsg::Job { .. } => {}
+            // Stub executors don't notify the solve context, so no
+            // progress beats are expected here.
+            EventMsg::Progress { .. } => {}
             EventMsg::Lagged { .. } => panic!("watcher should not lag"),
         }
     }
@@ -869,4 +876,189 @@ fn client_timeout_fails_instead_of_wedging() {
     assert!(matches!(err, claire::Error::Io(_)), "transport failure: {err}");
     assert_eq!(err.exit_code(), 69, "scripts see EX_UNAVAILABLE");
     holder.join().unwrap();
+}
+
+// -- Cooperative cancellation of running jobs -------------------------------
+
+/// Cooperative stub executor: "iterates" until cancelled, notifying the
+/// scheduler's `SolveCx` each step — the stub analog of what
+/// `Session::solve_cx` does inside the real `PjrtExecutor`.
+fn cooperative_factory(step_ms: u64) -> ExecutorFactory {
+    use claire::serve::scheduler::stub_iter;
+    struct Coop {
+        step_ms: u64,
+    }
+    impl Executor for Coop {
+        fn execute(
+            &mut self,
+            payload: &JobPayload,
+            cx: &claire::registration::SolveCx,
+        ) -> Result<RunReport> {
+            let iters = match payload {
+                JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
+                    s.max_iter.unwrap_or(1)
+                }
+                JobPayload::Problem { params, .. } => params.max_iter,
+            };
+            let mut history = Vec::new();
+            for i in 0..iters {
+                if cx.cancelled() {
+                    return Err(claire::Error::Cancelled { history });
+                }
+                let rec = stub_iter(i);
+                cx.notify(i, &rec);
+                history.push(rec);
+                std::thread::sleep(std::time::Duration::from_millis(self.step_ms));
+            }
+            Ok(stub_report(&payload.name()))
+        }
+    }
+    let factory: ExecutorFactory = Arc::new(move |_w| {
+        Ok(Box::new(Coop { step_ms }) as Box<dyn Executor>)
+    });
+    factory
+}
+
+/// The cancellation acceptance scenario (and the CI cancel smoke): cancel
+/// a *running* multi-iteration job over the wire and observe the
+/// `running → cancelled` transition everywhere it must show — the journal
+/// line, the watch stream, the partial history in the status view — while
+/// the worker immediately picks up the next job.
+#[test]
+fn cancel_running_job_over_the_wire() {
+    let journal = tmp_journal("cancel_running.ndjson");
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: Some(journal.clone()),
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, cooperative_factory(3)).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut watcher = Client::connect(&addr).unwrap();
+    watcher.hello().unwrap();
+    watcher.watch().unwrap();
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.hello().unwrap();
+    // 10_000 "iterations" at 3 ms each: runs ~30 s unless interrupted.
+    let long = client.submit(&spec("na02", Priority::Batch, 10_000)).unwrap();
+    let next = client.submit(&spec("na03", Priority::Batch, 1)).unwrap();
+
+    // Wait until the job is running and visibly progressing in the
+    // poll-only control plane (the satellite surface: iters_done +
+    // grad_rel in the status view with no watch needed).
+    let t0 = std::time::Instant::now();
+    let running = loop {
+        let v = client.status(long).unwrap();
+        if v.state == JobState::Running && v.iters_done.unwrap_or(0) >= 2 {
+            break v;
+        }
+        assert!(t0.elapsed().as_secs() < 15, "job never progressed: {v:?}");
+        std::thread::sleep(std::time::Duration::from_millis(3));
+    };
+    assert!(running.grad_rel.is_some(), "live grad_rel for a running job");
+
+    // Cancel the RUNNING job: accepted (no invalid_state), interrupts at
+    // the next iteration boundary.
+    client.cancel(long).unwrap();
+    let t_cancel = std::time::Instant::now();
+    let view = client.wait_terminal(long, 10.0).unwrap();
+    assert!(
+        t_cancel.elapsed().as_secs_f64() < 5.0,
+        "cancel must land within an iteration boundary, not after the full solve"
+    );
+    assert_eq!(view.state, JobState::Cancelled, "running → cancelled");
+    assert!(view.iters_done.unwrap() >= 2, "partial history survives: {view:?}");
+    assert!(view.error.is_none(), "cancellation is not a failure");
+    assert!(view.wall_s.is_some());
+
+    // The worker immediately picked up the next job.
+    let v2 = client.wait_terminal(next, 10.0).unwrap();
+    assert_eq!(v2.state, JobState::Done);
+
+    // Watch stream: progress beats while running, then the terminal
+    // cancelled transition (never failed).
+    let mut progress_beats = 0usize;
+    let mut states = Vec::new();
+    loop {
+        match watcher.next_event().unwrap() {
+            EventMsg::Progress { id, .. } if id == long => progress_beats += 1,
+            EventMsg::Job { id, state, .. } if id == long => {
+                assert_ne!(state, JobState::Failed);
+                states.push(state.as_str().to_string());
+                if state == JobState::Cancelled {
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    assert!(progress_beats >= 2, "progress events streamed live");
+    assert_eq!(states, vec!["queued", "running", "cancelled"]);
+
+    // Stats count the cooperative cancel once, as cancelled (not failed).
+    let stats = client.wait_idle(10.0).unwrap();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.completed, 1);
+
+    client.shutdown(true).unwrap();
+    drop(watcher);
+    handle.join().unwrap();
+
+    // The journal holds a `cancelled` audit line for the running job (and
+    // no per-iteration noise).
+    let entries = claire::serve::Journal::replay(&journal).unwrap();
+    let cancelled: Vec<_> = entries.iter().filter(|e| e.event == "cancelled").collect();
+    assert_eq!(cancelled.len(), 1);
+    assert_eq!(cancelled[0].id, long);
+    assert_eq!(
+        entries.len(),
+        4,
+        "submitted x2 + cancelled + done, nothing else: {entries:?}"
+    );
+}
+
+/// An `algorithm: gd` job travels the wire, shows its `+gd` name suffix
+/// in the status view, and an unknown algorithm is rejected at the same
+/// admission path every surface shares.
+#[test]
+fn algorithm_field_selects_and_rejects_over_the_wire() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: None,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    client.hello().unwrap();
+
+    let gd = JobSpec {
+        algorithm: claire::registration::AlgorithmKind::GradientDescent,
+        ..spec("na02", Priority::Batch, 1)
+    };
+    let id = client.submit(&gd).unwrap();
+    let view = client.wait_terminal(id, 10.0).unwrap();
+    assert_eq!(view.state, JobState::Done);
+    assert!(view.name.contains("+gd"), "algorithm visible in the job name: {}", view.name);
+
+    // Unknown algorithm: structured bad_request at decode, nothing queued.
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(handle.addr()).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    raw.write_all(b"{\"cmd\":\"submit\",\"job\":{\"algorithm\":\"newton\"}}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown algorithm 'newton'"), "{line}");
+    assert!(line.contains("\"ok\":false"), "{line}");
+    drop(raw);
+    assert_eq!(client.stats().unwrap().submitted, 1);
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
 }

@@ -30,6 +30,11 @@ fn gen_job_request(r: &mut Rng) -> JobRequest {
     if r.below(2) == 1 {
         req.precision = Precision::Mixed;
     }
+    req.algorithm = match r.below(4) {
+        0 => claire::registration::AlgorithmKind::GradientDescent,
+        1 => claire::registration::AlgorithmKind::Lbfgs,
+        _ => claire::registration::AlgorithmKind::GaussNewton,
+    };
     if r.below(3) == 0 {
         req.source = JobSource::Uploaded {
             m0: format!("{:016x}", r.next_u64()),
@@ -209,12 +214,88 @@ fn prop_response_error_roundtrip_v1_and_v2() {
     );
 }
 
+/// The satellite contract for the `algorithm` field: random tokens (valid
+/// spellings, near-misses, junk) must round-trip or be rejected
+/// *identically* across the wire decoder, the config-file adapter and the
+/// CLI flag surface — one accept set, one error string, one code.
+#[test]
+fn prop_algorithm_roundtrips_identically_across_wire_config_cli() {
+    use claire::config::Config as FileConfig;
+    use claire::util::args::{opt, Args, OptSpec};
+
+    fn cli_args(token: &str) -> claire::error::Result<Args> {
+        let specs: Vec<OptSpec> = vec![opt("algorithm", "", "gn")];
+        Args::parse(vec!["--algorithm".to_string(), token.to_string()], &specs)
+    }
+
+    prop::check_msg(
+        Config { cases: 150, seed: 0x15 },
+        |r| match r.below(4) {
+            // Valid spellings and deliberate near-misses...
+            0 => ["gn", "gd", "lbfgs"][r.below(3) as usize].to_string(),
+            1 => ["GN", "newton", "l-bfgs", "sgd", "adam", "gauss"][r.below(6) as usize]
+                .to_string(),
+            // ... and random short lowercase tokens.
+            _ => {
+                let len = 1 + r.below(6) as usize;
+                (0..len).map(|_| (b'a' + r.below(26) as u8) as char).collect()
+            }
+        },
+        |token| {
+            let wire = JobRequest::from_json(
+                &Json::parse(&format!(r#"{{"algorithm":{}}}"#, Json::str(token.as_str()).render()))
+                    .unwrap(),
+            );
+            let cfg = FileConfig::parse(&format!("algorithm = {token}\n"))
+                .map_err(|e| format!("config line rejected outright: {e}"))?
+                .job_request();
+            let args =
+                cli_args(token).map_err(|e| format!("flag parse rejected outright: {e}"))?;
+            let cli = JobRequest::from_args(&args);
+            match (&wire, &cfg) {
+                (Ok(w), Ok(c)) => {
+                    let a = cli.map_err(|e| format!("cli rejected accepted token: {e}"))?;
+                    if w != c || w != &a {
+                        return Err(format!("accepted differently: {w:?} vs {c:?} vs {a:?}"));
+                    }
+                    // And the one validate() path materializes the same
+                    // params downstream.
+                    let pw = w.validate().map_err(|e| e.to_string())?;
+                    if pw.algorithm.as_str() != token.as_str() {
+                        return Err(format!("algorithm drifted: {} vs {token}", pw.algorithm));
+                    }
+                    Ok(())
+                }
+                (Err(ew), Err(ec)) => {
+                    let Err(ea) = cli else {
+                        return Err(format!("cli accepted rejected token '{token}'"));
+                    };
+                    if ew.to_string() != ec.to_string() || ew.to_string() != ea.to_string() {
+                        return Err(format!(
+                            "rejection drifted: '{ew}' vs '{ec}' vs '{ea}'"
+                        ));
+                    }
+                    if ew.code() != ErrorCode::BadRequest {
+                        return Err(format!("rejection must be bad_request, got {:?}", ew.code()));
+                    }
+                    Ok(())
+                }
+                (w, c) => Err(format!("surfaces disagree on '{token}': {w:?} vs {c:?}")),
+            }
+        },
+    );
+}
+
 // -- Fuzz against a live daemon ---------------------------------------------
 
 struct InstantStub;
 
 impl Executor for InstantStub {
-    fn execute(&mut self, payload: &JobPayload) -> Result<RunReport> {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
         Ok(stub_report(&payload.name()))
     }
 }

@@ -35,6 +35,12 @@ cargo test -q --test integration_serve v1_raw_lines_are_byte_compatible
 echo "== protocol v2 watch smoke: queued,running,done event stream for one job =="
 cargo test -q --test integration_serve watch_streams_job_lifecycle
 
+echo "== cancel-running-job smoke: running -> cancelled at an iteration boundary (stub daemon) =="
+cargo test -q --test integration_serve cancel_running_job_over_the_wire
+
+echo "== cargo doc --no-deps (public API docs, warnings as errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== cargo test -q (tier-1) =="
 cargo test -q
 

@@ -1,0 +1,212 @@
+//! Fleet-router overhead bench: the same wire operations measured
+//! directly against a daemon and through the router tier in front of it.
+//!
+//! Reports p50/p95 submit round-trip latency direct vs routed (the
+//! routing tax: one extra hop, placement lookup, routing-table insert),
+//! and submit-to-terminal-event watch latency direct vs routed (the
+//! federation tax: backend watcher -> id translation -> fan -> forwarder
+//! thread). Stub executors as in `bench_service` — this measures the
+//! tier, not solves. Writes a `BENCH_router.json` summary.
+//!
+//! Run: `cargo bench --bench bench_router`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use claire::error::Result;
+use claire::math::stats::percentile_sorted;
+use claire::registration::RunReport;
+use claire::serve::scheduler::stub_report;
+use claire::serve::{
+    Client, Daemon, DaemonConfig, DaemonHandle, EventMsg, Executor, ExecutorFactory,
+    JobPayload, JobSpec, Router, RouterConfig, RouterHandle,
+};
+use claire::util::bench::Table;
+use claire::util::json::Json;
+
+struct StubExec;
+
+impl Executor for StubExec {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
+        let ms = match payload {
+            JobPayload::Spec(s) => s.max_iter.unwrap_or(1) as u64,
+            _ => 1,
+        };
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(stub_report(&payload.name()))
+    }
+}
+
+fn stub_factory() -> ExecutorFactory {
+    Arc::new(|_w| Ok(Box::new(StubExec) as Box<dyn Executor>))
+}
+
+fn start_daemon(node_id: &str) -> DaemonHandle {
+    Daemon::start(
+        DaemonConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            queue_cap: 512,
+            journal: None,
+            node_id: Some(node_id.into()),
+            ..Default::default()
+        },
+        stub_factory(),
+    )
+    .unwrap()
+}
+
+fn connect(addr: &str) -> Client {
+    let mut c = Client::connect_with_timeout(addr, Duration::from_secs(10)).unwrap();
+    c.set_io_timeout(Some(Duration::from_secs(30))).unwrap();
+    c.negotiate().unwrap();
+    c
+}
+
+fn spec(i: usize) -> JobSpec {
+    JobSpec { subject: format!("bench{i}"), max_iter: Some(1), ..Default::default() }
+}
+
+/// p50/p95 of one submit round trip (request line out, response line in).
+fn submit_latency(client: &mut Client, iters: usize) -> (f64, f64) {
+    let mut lat_us = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        client.submit(&spec(i)).unwrap();
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile_sorted(&lat_us, 50.0), percentile_sorted(&lat_us, 95.0))
+}
+
+/// p50/p95 of submit-return -> terminal-event-arrival on a watch stream
+/// (one job in flight at a time, so queue wait is just the ~1 ms stub
+/// service; the rest is event-plane delivery).
+fn watch_latency(client: &mut Client, watcher: &mut Client, iters: usize) -> (f64, f64) {
+    let mut lat_ms = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let id = client.submit(&spec(i)).unwrap();
+        let t0 = Instant::now();
+        loop {
+            match watcher.next_event().unwrap() {
+                EventMsg::Job { id: got, state, .. } if got == id && state.is_terminal() => break,
+                _ => {}
+            }
+        }
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (percentile_sorted(&lat_ms, 50.0), percentile_sorted(&lat_ms, 95.0))
+}
+
+fn drain(client: &mut Client) {
+    let t0 = Instant::now();
+    loop {
+        let s = client.stats().unwrap();
+        if s.queued == 0 && s.running == 0 {
+            return;
+        }
+        assert!(t0.elapsed().as_secs() < 120, "fleet never drained");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn main() {
+    let submits = 64usize;
+    let watches = 16usize;
+
+    let a = start_daemon("bench-a");
+    let b = start_daemon("bench-b");
+    let router: RouterHandle = Router::start(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![a.addr().to_string(), b.addr().to_string()],
+        probe_interval: Duration::from_millis(200),
+        ..RouterConfig::default()
+    })
+    .unwrap();
+
+    // Let the router's backend watchers subscribe before measuring the
+    // event plane.
+    std::thread::sleep(Duration::from_millis(300));
+
+    let mut direct = connect(&a.addr().to_string());
+    let mut routed = connect(&router.addr().to_string());
+
+    println!("== fleet router overhead: 2 backends, stub 1 ms jobs ==\n");
+
+    // Warmup both paths (connect caches, allocator, first-probe effects).
+    submit_latency(&mut direct, 8);
+    submit_latency(&mut routed, 8);
+    drain(&mut direct);
+    drain(&mut routed);
+
+    let (d50, d95) = submit_latency(&mut direct, submits);
+    drain(&mut direct);
+    let (r50, r95) = submit_latency(&mut routed, submits);
+    drain(&mut routed);
+
+    let mut t = Table::new(&["path", "p50 [us]", "p95 [us]"]);
+    t.row(&["submit direct".into(), format!("{d50:.0}"), format!("{d95:.0}")]);
+    t.row(&["submit routed".into(), format!("{r50:.0}"), format!("{r95:.0}")]);
+    t.print();
+    println!(
+        "\n(routing overhead p50: {:.0} us = extra hop + placement + routing-table insert)\n",
+        r50 - d50
+    );
+
+    let mut direct_watch = connect(&a.addr().to_string());
+    direct_watch.watch().unwrap();
+    let mut routed_watch = connect(&router.addr().to_string());
+    routed_watch.watch().unwrap();
+
+    let (wd50, wd95) = watch_latency(&mut direct, &mut direct_watch, watches);
+    let (wr50, wr95) = watch_latency(&mut routed, &mut routed_watch, watches);
+
+    let mut wt = Table::new(&["path", "p50 [ms]", "p95 [ms]"]);
+    wt.row(&["watch direct".into(), format!("{wd50:.2}"), format!("{wd95:.2}")]);
+    wt.row(&["watch routed".into(), format!("{wr50:.2}"), format!("{wr95:.2}")]);
+    wt.print();
+    println!("\n(both include the ~1 ms stub solve; the delta is the fan-in tax:");
+    println!(" backend watcher -> global-id translation -> fan -> forwarder)");
+
+    let summary = Json::object([
+        ("bench", Json::str("router")),
+        ("backends", Json::num(2.0)),
+        ("submits", Json::num(submits as f64)),
+        (
+            "submit_us",
+            Json::object([
+                ("direct_p50", Json::num(d50)),
+                ("direct_p95", Json::num(d95)),
+                ("routed_p50", Json::num(r50)),
+                ("routed_p95", Json::num(r95)),
+                ("overhead_p50", Json::num(r50 - d50)),
+            ]),
+        ),
+        (
+            "watch_ms",
+            Json::object([
+                ("direct_p50", Json::num(wd50)),
+                ("direct_p95", Json::num(wd95)),
+                ("routed_p50", Json::num(wr50)),
+                ("routed_p95", Json::num(wr95)),
+                ("overhead_p50", Json::num(wr50 - wd50)),
+            ]),
+        ),
+    ]);
+    let out = "BENCH_router.json";
+    match std::fs::write(out, summary.render() + "\n") {
+        Ok(()) => println!("\nsummary written to {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+
+    // Drain the fleet through the router (also stops the router tier).
+    routed.shutdown(true).unwrap();
+    router.join().unwrap();
+    a.join().unwrap();
+    b.join().unwrap();
+}

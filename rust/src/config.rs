@@ -66,6 +66,15 @@ impl Config {
         }
     }
 
+    /// Comma-separated list value, e.g. `backends = host:7464,host:7465`.
+    /// Empty items (trailing commas, doubled separators) are dropped;
+    /// `None` when the key is absent.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+        })
+    }
+
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -182,6 +191,16 @@ mod tests {
         let d = Config::parse("beta = 5e-4\n").unwrap();
         assert_eq!(d.reg_params().unwrap().algorithm, AlgorithmKind::GaussNewton);
         assert!(Config::parse("algorithm = newton\n").unwrap().reg_params().is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Config::parse("backends = 127.0.0.1:7464, 127.0.0.1:7465,\n").unwrap();
+        assert_eq!(
+            c.get_list("backends").unwrap(),
+            vec!["127.0.0.1:7464".to_string(), "127.0.0.1:7465".to_string()]
+        );
+        assert!(c.get_list("missing").is_none());
     }
 
     #[test]

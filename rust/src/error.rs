@@ -39,7 +39,9 @@ pub enum ErrorCode {
     /// (e.g. cancelling a running or finished job).
     InvalidState,
     /// Transport-level failure: daemon unreachable, connection closed,
-    /// I/O timeout. Client-side classification; never sent on the wire.
+    /// I/O timeout. Mostly client-side classification, but the fleet
+    /// router *does* send it on the wire when every candidate backend for
+    /// a request is unreachable — still retryable, same exit code.
     Unavailable,
     /// Anything the daemon could not classify (executor failures, bugs).
     Internal,

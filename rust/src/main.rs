@@ -4,6 +4,9 @@
 //!   register   run one registration (synthetic NIREP-analog pair)
 //!   batch      run the clinical-style batch service over many jobs
 //!   serve      start the persistent registration daemon (NDJSON over TCP)
+//!   route      start the fleet router in front of N serve daemons
+//!              (consistent-hash volume placement, affinity job routing,
+//!              federated stats/status/watch)
 //!   upload     ship a fixed/moving volume pair into a running daemon
 //!   submit     submit job(s) to a running daemon (synthetic or uploaded)
 //!   watch      stream live job events from a running daemon (protocol v2)
@@ -35,7 +38,8 @@ use claire::registration::{GaussNewtonKrylov, RunReport, Session};
 use claire::runtime::OpRegistry;
 use claire::serve::client::job_table;
 use claire::serve::{
-    pjrt_factory, Client, Daemon, DaemonConfig, EventMsg, JobSource, JobSpec, Verdict,
+    pjrt_factory, Client, Daemon, DaemonConfig, EventMsg, JobSource, JobSpec, RetryPolicy,
+    Router, RouterConfig, Verdict,
 };
 use claire::util::args::{flag, opt, usage, Args, OptSpec};
 use claire::util::bench::Table;
@@ -78,9 +82,19 @@ fn common_specs() -> Vec<OptSpec> {
              once subscribed",
             "30",
         ),
+        opt("backend", "client: send via this address instead of --addr (router alias)", ""),
         opt("queue-cap", "serve: max waiting batch/urgent jobs", "64"),
         opt("journal", "serve: job journal path ('' disables)", "serve_journal.ndjson"),
         opt("store-mb", "serve: volume store byte budget (MiB)", "1024"),
+        opt("node-id", "serve/route: stable node identity reported to fleet probes", ""),
+        opt("backends", "route: comma-separated backend daemon addresses", ""),
+        opt("replication", "route: holders per uploaded volume (0 = all nodes)", "1"),
+        opt("probe-ms", "route: backend health-probe period (milliseconds)", "500"),
+        opt(
+            "route-journal",
+            "route: routing-table journal path ('' disables)",
+            "route_journal.ndjson",
+        ),
         opt("fixed", "upload: fixed/reference volume (data/io .f32+.json path)", ""),
         opt("moving", "upload: moving/template volume (data/io .f32+.json path)", ""),
         opt("m0", "submit: content id of the uploaded moving/template volume", ""),
@@ -104,7 +118,12 @@ fn open_registry(args: &Args) -> Result<OpRegistry> {
 /// negotiate protocol v2 when the daemon offers it (silently staying on
 /// v1 against an old daemon).
 fn connect_client(args: &Args) -> Result<Client> {
-    let addr = args.get_or("addr", "127.0.0.1:7464");
+    // --backend (when set) wins over --addr: "this subcommand, via that
+    // router/daemon" without disturbing a script's default --addr.
+    let addr = match args.get("backend").filter(|s| !s.is_empty()) {
+        Some(b) => b.to_string(),
+        None => args.get_or("addr", "127.0.0.1:7464"),
+    };
     let timeout_s = args.get_f64("timeout-s", 30.0)?;
     let mut client = if timeout_s > 0.0 {
         Client::connect_with_timeout(&addr, std::time::Duration::from_secs_f64(timeout_s))?
@@ -126,6 +145,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "register" => cmd_register(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "upload" => cmd_upload(&args),
         "submit" => cmd_submit(&args),
         "watch" => cmd_watch(&args),
@@ -148,7 +168,7 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn print_help() {
     println!("claire — diffeomorphic image registration (JPDC 2020 reproduction)\n");
-    println!("usage: claire <register|batch|serve|upload|submit|watch|status|cancel|");
+    println!("usage: claire <register|batch|serve|route|upload|submit|watch|status|cancel|");
     println!("               shutdown|transport|info|complexity> [options]\n");
     println!("{}", usage(&common_specs()));
     println!("exit codes (sysexits-style, for scripts): 75 retryable daemon rejection,");
@@ -268,12 +288,14 @@ fn cmd_batch(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let journal = args.get_or("journal", "serve_journal.ndjson");
+    let node_id = args.get_or("node-id", "");
     let cfg = DaemonConfig {
         addr: args.get_or("addr", "127.0.0.1:7464"),
         workers: args.get_usize("workers", 2)?,
         queue_cap: args.get_usize("queue-cap", 64)?,
         journal: (!journal.is_empty()).then(|| PathBuf::from(journal)),
         store_bytes: args.get_usize("store-mb", 1024)? as u64 * 1024 * 1024,
+        node_id: (!node_id.is_empty()).then_some(node_id),
     };
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let handle = Daemon::start(cfg.clone(), pjrt_factory(artifacts))?;
@@ -289,6 +311,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("[claire] journal reports {prior} jobs completed by previous runs");
     }
     println!("[claire] stop with: claire shutdown --addr {}", handle.addr());
+    handle.join()
+}
+
+/// Start the fleet router in front of N serve daemons. Clients point any
+/// existing subcommand at it (`--addr` or `--backend`) and get placement,
+/// affinity routing, failover and federated stats/status/watch.
+fn cmd_route(args: &Args) -> Result<()> {
+    // Backends come from --backends, falling back to a config file's
+    // `backends = host:port,host:port` key.
+    let mut backends: Vec<String> = args
+        .get_or("backends", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if backends.is_empty() {
+        let cfg_path = args.get_or("config", "");
+        if !cfg_path.is_empty() {
+            if let Some(list) = claire::config::Config::load(Path::new(&cfg_path))?
+                .get_list("backends")
+            {
+                backends = list;
+            }
+        }
+    }
+    if backends.is_empty() {
+        return Err(claire::Error::Config(
+            "route requires --backends host:port[,host:port...] (or a config file with a \
+             'backends' key)"
+            .into(),
+        ));
+    }
+    let journal = args.get_or("route-journal", "route_journal.ndjson");
+    let node_id = args.get_or("node-id", "");
+    let timeout_s = args.get_f64("timeout-s", 30.0)?;
+    let cfg = RouterConfig {
+        addr: args.get_or("addr", "127.0.0.1:7470"),
+        backends,
+        replication: args.get_usize("replication", 1)?,
+        probe_interval: std::time::Duration::from_millis(
+            args.get_usize("probe-ms", 500)?.max(10) as u64,
+        ),
+        timeout: std::time::Duration::from_secs_f64(timeout_s.max(0.1)),
+        journal: (!journal.is_empty()).then(|| PathBuf::from(journal)),
+        node_id: (!node_id.is_empty()).then_some(node_id),
+        retry: RetryPolicy::default(),
+    };
+    let n_backends = cfg.backends.len();
+    let replication = cfg.replication;
+    let handle = Router::start(cfg)?;
+    println!(
+        "[claire] router {} listening on {} ({} backends, replication {})",
+        handle.node_id(),
+        handle.addr(),
+        n_backends,
+        if replication == 0 { "all".to_string() } else { replication.to_string() }
+    );
+    println!("[claire] stop with: claire shutdown --addr {} (drains the fleet)", handle.addr());
     handle.join()
 }
 
@@ -311,8 +392,11 @@ fn cmd_upload(args: &Args) -> Result<()> {
         )));
     }
     let mut client = connect_client(args)?;
-    let r0 = client.upload(m0.n, &m0.data)?;
-    let r1 = client.upload(m1.n, &m1.data)?;
+    // Jittered retry on retryable daemon rejections (shutting_down races,
+    // router-side unavailability) — transport failures still fail fast.
+    let policy = RetryPolicy::default();
+    let r0 = client.upload_with_retry(m0.n, &m0.data, &policy)?;
+    let r1 = client.upload_with_retry(m1.n, &m1.data, &policy)?;
     let tag = |d: bool| if d { " (dedup hit)" } else { "" };
     println!("uploaded moving  (m0): {} [{}^3]{}", r0.id, r0.n, tag(r0.dedup));
     println!("uploaded fixed   (m1): {} [{}^3]{}", r1.id, r1.n, tag(r1.dedup));
@@ -374,9 +458,12 @@ fn cmd_submit(args: &Args) -> Result<()> {
             return Err(e);
         }
     } else {
+        // Queue-full rejections on the single-submit path back off and
+        // retry (full jitter) before surfacing exit code 75.
+        let policy = RetryPolicy::default();
         for spec in &specs {
             let name = spec.name();
-            let id = client.submit(spec)?;
+            let id = client.submit_with_retry(spec, &policy)?;
             println!("submitted job {id}: {name} [{}]", spec.priority.as_str());
         }
     }
@@ -499,6 +586,23 @@ fn cmd_status(args: &Args) -> Result<()> {
                 s.store.dedup_hits,
                 s.store.evictions
             );
+            // Per-node breakdown arrives only from a router (fleet-merged
+            // stats); single daemons report an empty list.
+            if !s.nodes.is_empty() {
+                let mut t = Table::new(&["node", "addr", "up", "queued", "running", "done", "routed"]);
+                for nstat in &s.nodes {
+                    t.row(&[
+                        if nstat.node.is_empty() { "?".into() } else { nstat.node.clone() },
+                        nstat.addr.clone(),
+                        if nstat.up { "yes".into() } else { "NO".into() },
+                        nstat.queued.to_string(),
+                        nstat.running.to_string(),
+                        nstat.completed.to_string(),
+                        nstat.routed.to_string(),
+                    ]);
+                }
+                t.print();
+            }
         }
     }
     Ok(())

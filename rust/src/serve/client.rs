@@ -29,6 +29,62 @@ use crate::serve::scheduler::{JobId, JobView, ServeStats};
 use crate::serve::store::UploadReceipt;
 use crate::util::bench::Table;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Jittered-exponential-backoff retry policy for wire-retryable daemon
+/// rejections (`queue_full`, `shutting_down`). Attempt `k` sleeps a
+/// uniform draw from `[0, min(max_ms, base_ms * 2^k))` — "full jitter",
+/// so a burst of clients rejected together does not reconverge on the
+/// daemon in lockstep.
+///
+/// Only [`Error::Wire`] codes whose [`ErrorCode::retryable`] is true are
+/// retried: the daemon answered cleanly and the connection is intact.
+/// Transport failures are *not* retried here even though scripts treat
+/// them as retryable — after a half-read line the connection state is
+/// unknown, so the recovery is a reconnect (what the fleet router's
+/// backend pool does), not a resend.
+///
+/// [`ErrorCode::retryable`]: crate::ErrorCode::retryable
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (1 = no retry).
+    pub attempts: u32,
+    /// Backoff scale for the first retry, milliseconds.
+    pub base_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub max_ms: u64,
+    /// Jitter seed; mixed with the request seq so concurrent clients
+    /// sharing a default policy still draw distinct delays.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 4, base_ms: 50, max_ms: 2_000, seed: 0xC1A1_2E }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based), with full jitter.
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let cap = self
+            .base_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.max_ms.max(1));
+        Duration::from_millis(rng.below(cap.max(1)))
+    }
+}
+
+/// A daemon's answer to the v2 enriched `ping` (the `probe` feature):
+/// stable node identity plus a load snapshot — what the fleet router's
+/// health prober reads every interval.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProbeInfo {
+    pub node: String,
+    pub proto: u64,
+    pub queued: usize,
+    pub running: usize,
+}
 
 /// Render job views as an aligned table (shared by the CLI `status`
 /// subcommand and the daemon-mode example).
@@ -228,6 +284,64 @@ impl Client {
 
     pub fn ping(&mut self) -> Result<()> {
         self.call(&Request::Ping).map(|_| ())
+    }
+
+    /// Enriched ping (v2 `probe` feature): node identity plus queue
+    /// depth/running count. Fails against a daemon that answers the
+    /// pre-probe plain `{"ok":true}` — callers that only need liveness
+    /// should use [`ping`](Client::ping).
+    pub fn probe(&mut self) -> Result<ProbeInfo> {
+        match self.call(&Request::Ping)? {
+            Response::Pong { node, proto, queued, running } => {
+                Ok(ProbeInfo { node, proto, queued, running })
+            }
+            Response::Ok => {
+                Err(Error::Serve("daemon did not report node identity (pre-probe build?)".into()))
+            }
+            other => Err(Self::unexpected("ping", other)),
+        }
+    }
+
+    /// Run `f` against this client, retrying on wire-retryable rejections
+    /// (`queue_full`, `shutting_down`) per `policy` with full-jitter
+    /// exponential backoff. Any other error — transport failures included
+    /// — is returned immediately (see [`RetryPolicy`] for why).
+    pub fn call_with_retry<T>(
+        &mut self,
+        policy: &RetryPolicy,
+        mut f: impl FnMut(&mut Client) -> Result<T>,
+    ) -> Result<T> {
+        // Mix the session's request counter into the jitter seed so two
+        // clients built from the same default policy de-correlate.
+        let mut rng = Rng::new(policy.seed ^ self.seq.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let attempts = policy.attempts.max(1);
+        let mut attempt = 1;
+        loop {
+            match f(self) {
+                Err(Error::Wire { code, msg }) if code.retryable() && attempt < attempts => {
+                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    attempt += 1;
+                    let _ = msg;
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// [`submit`](Client::submit) under a retry policy: a `queue_full`
+    /// rejection backs off and resubmits instead of surfacing.
+    pub fn submit_with_retry(&mut self, spec: &JobSpec, policy: &RetryPolicy) -> Result<JobId> {
+        self.call_with_retry(policy, |c| c.submit(spec))
+    }
+
+    /// [`upload`](Client::upload) under a retry policy.
+    pub fn upload_with_retry(
+        &mut self,
+        n: usize,
+        data: &[f32],
+        policy: &RetryPolicy,
+    ) -> Result<UploadReceipt> {
+        self.call_with_retry(policy, |c| c.upload(n, data))
     }
 
     /// Ship one volume (n^3 f32 samples) into the daemon's

@@ -60,6 +60,11 @@ pub struct DaemonConfig {
     /// Byte budget of the content-addressed volume store (`upload` verb);
     /// least-recently-used volumes are evicted beyond it.
     pub store_bytes: u64,
+    /// Stable node identity reported by the v2 enriched `ping` (health
+    /// probes, per-node stats in a fleet). `None` generates one at start —
+    /// fine standalone, but fleet deployments should pin it so the router
+    /// recognizes a node across restarts.
+    pub node_id: Option<String>,
 }
 
 impl Default for DaemonConfig {
@@ -70,8 +75,29 @@ impl Default for DaemonConfig {
             queue_cap: 64,
             journal: None,
             store_bytes: 1 << 30, // 1 GiB: sixteen 256^3 volumes
+            node_id: None,
         }
     }
+}
+
+/// FNV-1a-64 over the bound address, pid, and start time: unique enough
+/// to tell two unnamed daemons apart, short enough to read in `status`.
+fn generated_node_id(addr: &SocketAddr) -> String {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr
+        .to_string()
+        .bytes()
+        .chain(std::process::id().to_ne_bytes())
+        .chain(t.to_ne_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("node-{h:016x}")
 }
 
 /// Per-worker executor constructor. Called once on each worker thread; a
@@ -90,6 +116,7 @@ pub fn pjrt_factory(artifacts_dir: PathBuf) -> ExecutorFactory {
 /// Handle to a started daemon: address, scheduler access, and join.
 pub struct DaemonHandle {
     addr: SocketAddr,
+    node_id: Arc<str>,
     scheduler: Scheduler,
     store: Arc<VolumeStore>,
     accept_thread: Option<JoinHandle<()>>,
@@ -99,6 +126,12 @@ pub struct DaemonHandle {
 impl DaemonHandle {
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The identity this daemon reports in v2 `ping` probes (configured,
+    /// or generated at start).
+    pub fn node_id(&self) -> &str {
+        &self.node_id
     }
 
     /// Direct scheduler access for in-process embedding (tests, benches).
@@ -133,7 +166,7 @@ impl DaemonHandle {
 /// Connect once to the listener so a blocked `accept` re-checks shutdown.
 /// Wildcard binds (0.0.0.0 / ::) are not connectable on every platform,
 /// so target loopback with the bound port in that case.
-fn wake_accept(addr: SocketAddr) {
+pub(crate) fn wake_accept(addr: SocketAddr) {
     let mut target = addr;
     if target.ip().is_unspecified() {
         target.set_ip(match target {
@@ -168,6 +201,8 @@ impl Daemon {
 
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
+        let node_id: Arc<str> =
+            cfg.node_id.clone().unwrap_or_else(|| generated_node_id(&addr)).into();
 
         let mut worker_threads = Vec::with_capacity(cfg.workers.max(1));
         for w in 0..cfg.workers.max(1) {
@@ -185,6 +220,7 @@ impl Daemon {
 
         let sched = scheduler.clone();
         let accept_store = store.clone();
+        let accept_node = node_id.clone();
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if sched.is_shutting_down() {
@@ -193,12 +229,14 @@ impl Daemon {
                 let Ok(stream) = conn else { continue };
                 let sched = sched.clone();
                 let store = accept_store.clone();
-                std::thread::spawn(move || handle_connection(stream, sched, store, addr));
+                let node = accept_node.clone();
+                std::thread::spawn(move || handle_connection(stream, sched, store, addr, node));
             }
         });
 
         Ok(DaemonHandle {
             addr,
+            node_id,
             scheduler,
             store,
             accept_thread: Some(accept_thread),
@@ -209,7 +247,7 @@ impl Daemon {
 
 /// Write one protocol line (response or event) to a shared connection
 /// writer. Returns false when the peer is gone.
-fn write_line(writer: &Mutex<TcpStream>, line: &str) -> bool {
+pub(crate) fn write_line(writer: &Mutex<TcpStream>, line: &str) -> bool {
     let mut w = writer.lock().unwrap();
     w.write_all(line.as_bytes()).is_ok()
         && w.write_all(b"\n").is_ok()
@@ -276,6 +314,7 @@ fn handle_connection(
     sched: Scheduler,
     store: Arc<VolumeStore>,
     addr: SocketAddr,
+    node_id: Arc<str>,
 ) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
@@ -405,6 +444,21 @@ fn handle_connection(
                     .map(|spec| Verdict::from_result(admit(spec, &sched, &store)))
                     .collect();
                 (Response::Batch(verdicts), None)
+            }
+            // v2 ping is a health probe: identity + load, cheap enough to
+            // hit every probe interval. v1 ping keeps its exact
+            // `{"ok":true}` bytes via the dispatch fallthrough below.
+            Request::Ping if v2 => {
+                let s = sched.stats();
+                (
+                    Response::Pong {
+                        node: node_id.to_string(),
+                        proto: PROTO_VERSION,
+                        queued: s.queued,
+                        running: s.running,
+                    },
+                    None,
+                )
             }
             other => dispatch(other, &sched, &store),
         };

@@ -17,6 +17,9 @@
 //! * [`store`] — content-addressed volume store (the `upload` data plane).
 //! * [`client`] — typed synchronous client for the protocol.
 //! * [`journal`] — append-only NDJSON job history for restart reporting.
+//! * [`router`] — fleet tier: consistent-hash volume placement, affinity
+//!   job routing and a federated control plane over N daemons, speaking
+//!   the same wire protocol to clients.
 //!
 //! See DESIGN.md for the wire-protocol reference.
 
@@ -24,17 +27,19 @@ pub mod client;
 pub mod daemon;
 pub mod journal;
 pub mod proto;
+pub mod router;
 pub mod scheduler;
 pub mod store;
 
-pub use client::Client;
+pub use client::{Client, ProbeInfo, RetryPolicy};
 pub use daemon::{pjrt_factory, Daemon, DaemonConfig, DaemonHandle, ExecutorFactory};
 pub use journal::{Journal, JournalEntry};
 pub use proto::{
     EventMsg, JobRequest, JobSource, JobSpec, Priority, Request, Response, Verdict,
 };
+pub use router::{Ring, Router, RouterConfig, RouterHandle};
 pub use scheduler::{
     worker_loop, BusMsg, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView,
-    PjrtExecutor, Progress, Scheduler, ServeStats, WatchEvent, WatchHandle,
+    NodeStats, PjrtExecutor, Progress, Scheduler, ServeStats, WatchEvent, WatchHandle,
 };
 pub use store::{StoreStats, UploadReceipt, VolumeStore};

@@ -14,8 +14,10 @@
 //! * **v2** — negotiated by the `hello` verb. Adds client-chosen `seq`
 //!   request correlation (echoed in every response), server-pushed job
 //!   events via `watch`, one-line many-job `submit_batch` with per-job
-//!   admission verdicts, and structured errors (`code` + `retryable`
-//!   from the [`ErrorCode`] registry).
+//!   admission verdicts, structured errors (`code` + `retryable`
+//!   from the [`ErrorCode`] registry), and an enriched `ping` that
+//!   answers with node identity + queue load (the `probe` feature — the
+//!   health probe the fleet router polls).
 //!
 //! Requests:
 //! ```text
@@ -65,7 +67,7 @@
 
 use crate::data::io::{f32s_from_le_bytes, f32s_to_le_bytes};
 use crate::error::{Error, ErrorCode, Result};
-use crate::serve::scheduler::{JobId, JobState, JobView, ServeStats};
+use crate::serve::scheduler::{JobId, JobState, JobView, NodeStats, ServeStats};
 use crate::serve::store::StoreStats;
 use crate::util::base64;
 use crate::util::json::Json;
@@ -80,8 +82,11 @@ pub type JobSpec = JobRequest;
 pub const PROTO_VERSION: u64 = 2;
 
 /// Feature tags advertised by `hello` — stable strings, clients gate on
-/// membership rather than the proto number where possible.
-pub const PROTO_V2_FEATURES: [&str; 4] = ["seq", "watch", "submit_batch", "structured_errors"];
+/// membership rather than the proto number where possible. `probe` marks
+/// a daemon whose v2 `ping` answers with node identity + load (the cheap
+/// health probe the fleet router polls).
+pub const PROTO_V2_FEATURES: [&str; 5] =
+    ["seq", "watch", "submit_batch", "structured_errors", "probe"];
 
 /// Hard cap on the job count of one `submit_batch` line (the 4 MiB line
 /// cap bounds it physically; this bounds it semantically).
@@ -460,6 +465,12 @@ pub enum Response {
     /// Answer to `hello`: the protocol level this session will use and the
     /// feature tags the daemon supports.
     Hello { proto: u64, features: Vec<String> },
+    /// Answer to `ping` in a v2 session (the `probe` feature): stable node
+    /// identity plus a load snapshot cheap enough to poll every second.
+    /// v1 sessions keep the bare `{"ok":true}` bytes, and pre-probe v2
+    /// clients decode this as a plain `Ok` (the extra data nests under an
+    /// object key they never look at).
+    Pong { node: String, proto: u64, queued: usize, running: usize },
     Submitted { id: JobId },
     /// Answer to `submit_batch`: one admission verdict per job, in
     /// submission order.
@@ -565,8 +576,34 @@ fn job_from_json(j: &Json) -> Result<JobView> {
     })
 }
 
-fn stats_to_json(s: &ServeStats) -> Json {
+fn node_stats_to_json(n: &NodeStats) -> Json {
     Json::object([
+        ("node", Json::str(&n.node)),
+        ("addr", Json::str(&n.addr)),
+        ("up", Json::Bool(n.up)),
+        ("queued", Json::num(n.queued as f64)),
+        ("running", Json::num(n.running as f64)),
+        ("completed", Json::num(n.completed as f64)),
+        ("routed", Json::num(n.routed as f64)),
+    ])
+}
+
+fn node_stats_from_json(j: &Json) -> Result<NodeStats> {
+    let miss = |k: &str| Error::Serve(format!("node stats missing '{k}'"));
+    Ok(NodeStats {
+        node: j.get("node").and_then(Json::as_str).ok_or_else(|| miss("node"))?.to_string(),
+        addr: j.get("addr").and_then(Json::as_str).ok_or_else(|| miss("addr"))?.to_string(),
+        up: j.get("up").and_then(Json::as_bool).ok_or_else(|| miss("up"))?,
+        queued: j.get("queued").and_then(Json::as_usize).ok_or_else(|| miss("queued"))?,
+        running: j.get("running").and_then(Json::as_usize).ok_or_else(|| miss("running"))?,
+        completed: j.get("completed").and_then(Json::as_usize).ok_or_else(|| miss("completed"))?
+            as u64,
+        routed: j.get("routed").and_then(Json::as_usize).ok_or_else(|| miss("routed"))? as u64,
+    })
+}
+
+fn stats_to_json(s: &ServeStats) -> Json {
+    let mut j = Json::object([
         ("submitted", Json::num(s.submitted as f64)),
         ("queued", Json::num(s.queued as f64)),
         ("running", Json::num(s.running as f64)),
@@ -588,7 +625,15 @@ fn stats_to_json(s: &ServeStats) -> Json {
                 ("evictions", Json::num(s.store.evictions as f64)),
             ]),
         ),
-    ])
+    ]);
+    // Per-node breakdown only when one exists (router-merged stats): a
+    // single daemon's stats stay byte-identical to the pre-router wire.
+    if !s.nodes.is_empty() {
+        if let Json::Obj(m) = &mut j {
+            m.insert("nodes".into(), Json::Arr(s.nodes.iter().map(node_stats_to_json).collect()));
+        }
+    }
+    j
 }
 
 fn stats_from_json(j: &Json) -> Result<ServeStats> {
@@ -618,6 +663,11 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
             }
         }
     };
+    // Absent nodes block = no per-node breakdown (any single daemon).
+    let nodes = match j.get("nodes").and_then(Json::as_arr) {
+        None => Vec::new(),
+        Some(ns) => ns.iter().map(node_stats_from_json).collect::<Result<_>>()?,
+    };
     Ok(ServeStats {
         submitted: g("submitted")?,
         queued: g("queued")? as usize,
@@ -631,6 +681,7 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
         cache_compiles: g("cache_compiles")?,
         cache_hits: g("cache_hits")?,
         store,
+        nodes,
     })
 }
 
@@ -647,6 +698,18 @@ impl Response {
                 (
                     "features",
                     Json::Arr(features.iter().map(|f| Json::str(f.as_str())).collect()),
+                ),
+            ]),
+            Response::Pong { node, proto, queued, running } => Json::object([
+                ("ok", Json::Bool(true)),
+                (
+                    "node",
+                    Json::object([
+                        ("id", Json::str(node)),
+                        ("proto", Json::num(*proto as f64)),
+                        ("queued", Json::num(*queued as f64)),
+                        ("running", Json::num(*running as f64)),
+                    ]),
                 ),
             ]),
             Response::Submitted { id } => {
@@ -724,6 +787,25 @@ impl Response {
                 })
                 .unwrap_or_default();
             return Ok(Response::Hello { proto: p, features });
+        }
+        if let Some(node) = j.get("node") {
+            let miss = |k: &str| Error::Serve(format!("probe response missing '{k}'"));
+            return Ok(Response::Pong {
+                node: node
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| miss("id"))?
+                    .to_string(),
+                proto: node.get("proto").and_then(Json::as_index).ok_or_else(|| miss("proto"))?,
+                queued: node
+                    .get("queued")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| miss("queued"))?,
+                running: node
+                    .get("running")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| miss("running"))?,
+            });
         }
         if let Some(rs) = j.get("results").and_then(Json::as_arr) {
             return Ok(Response::Batch(
@@ -1168,13 +1250,47 @@ mod tests {
                 dedup_hits: 2,
                 evictions: 1,
             },
+            nodes: Vec::new(),
         };
-        match Response::parse(&Response::Stats(s).to_line()).unwrap() {
+        // No per-node breakdown: the wire bytes must not mention "nodes"
+        // at all (single-daemon stats stay pre-router byte-identical).
+        let line = Response::Stats(s.clone()).to_line();
+        assert!(!line.contains("nodes"), "{line}");
+        match Response::parse(&line).unwrap() {
             Response::Stats(got) => {
                 assert_eq!(got.cache_hits, 18);
                 assert_eq!(got.prior_completed, 9);
                 assert_eq!(got.store, s.store, "store counters travel in stats");
+                assert!(got.nodes.is_empty());
             }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Router-merged stats carry the per-node breakdown.
+        let merged = ServeStats {
+            nodes: vec![
+                NodeStats {
+                    node: "n-a".into(),
+                    addr: "127.0.0.1:7464".into(),
+                    up: true,
+                    queued: 1,
+                    running: 2,
+                    completed: 7,
+                    routed: 9,
+                },
+                NodeStats {
+                    node: String::new(),
+                    addr: "127.0.0.1:7465".into(),
+                    up: false,
+                    queued: 0,
+                    running: 0,
+                    completed: 0,
+                    routed: 3,
+                },
+            ],
+            ..s
+        };
+        match Response::parse(&Response::Stats(merged.clone()).to_line()).unwrap() {
+            Response::Stats(got) => assert_eq!(got.nodes, merged.nodes),
             other => panic!("unexpected {other:?}"),
         }
         // A stats object without a store block (pre-data-plane daemon or a
@@ -1273,6 +1389,28 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn pong_probe_roundtrips_and_degrades_to_ok() {
+        let pong =
+            Response::Pong { node: "node-a1".into(), proto: 2, queued: 3, running: 1 };
+        let line = pong.to_line_v2(Some(4));
+        match Response::parse(&line).unwrap() {
+            Response::Pong { node, proto, queued, running } => {
+                assert_eq!(node, "node-a1");
+                assert_eq!(proto, 2);
+                assert_eq!(queued, 3);
+                assert_eq!(running, 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The probe payload nests under "node": no top-level "proto" (would
+        // read as a hello) and no top-level "id" (would read as submitted).
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("proto").is_none() && j.get("id").is_none(), "{line}");
+        // A v1 ping response stays the bare ok object.
+        assert_eq!(Response::Ok.to_line(), r#"{"ok":true}"#);
     }
 
     #[test]

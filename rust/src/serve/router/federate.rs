@@ -1,0 +1,364 @@
+//! Federated watch plane: fan every backend's event stream into one
+//! ordered stream per router subscriber.
+//!
+//! One watcher thread per backend keeps a dedicated `watch` connection
+//! open, translates backend-local job ids into router-global ids via the
+//! routing table, and publishes into the [`EventFan`]. The fan is the
+//! router-side analogue of the scheduler's event bus: bounded per-
+//! subscriber queues, a terminal `lagged` marker for slow consumers, and
+//! publication under one registry lock so every subscriber observes the
+//! same total event order (events from different backends have no
+//! inherent order; the fan's arrival order is the order clients see).
+//!
+//! Jobs the router did not place carry local ids that mean nothing in
+//! the global id space; their events are dropped rather than forwarded
+//! with ambiguous ids. The one subtlety is a *race on routed jobs*: a
+//! backend pushes the `queued` event during the submit round trip, so
+//! the watcher can observe it before `record_route` commits the mapping.
+//! `translate` therefore grants a missing id a short grace period of
+//! lookup retries before concluding the job is foreign.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::Error;
+use crate::serve::client::Client;
+use crate::serve::proto::EventMsg;
+use crate::serve::router::Fleet;
+
+/// Bounded per-subscriber queue depth, matching the scheduler bus cap.
+pub(crate) const FAN_QUEUE_CAP: usize = 256;
+
+/// What a fan subscriber receives.
+pub(crate) enum FanMsg {
+    Event(EventMsg),
+    /// Terminal: this subscriber fell behind (or a backend's own stream
+    /// lagged, losing events upstream for everyone). The subscription is
+    /// closed after delivery, mirroring the scheduler bus contract.
+    Lagged,
+}
+
+struct SubQ {
+    items: VecDeque<EventMsg>,
+    lagged: bool,
+    closed: bool,
+}
+
+struct SubShared {
+    q: Mutex<SubQ>,
+    cv: Condvar,
+}
+
+/// One subscription handle; dropping it without `unsubscribe` leaks the
+/// registry entry until the fan is closed, so the connection handler
+/// always unsubscribes on exit.
+pub(crate) struct FanSub {
+    id: u64,
+    shared: Arc<SubShared>,
+}
+
+impl FanSub {
+    pub(crate) fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Blocking receive: the next message, or `None` once the
+    /// subscription is closed (unsubscribed, fan shut down, or after a
+    /// terminal `Lagged` was delivered).
+    pub(crate) fn recv(&self) -> Option<FanMsg> {
+        let mut q = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(ev) = q.items.pop_front() {
+                return Some(FanMsg::Event(ev));
+            }
+            if q.lagged {
+                q.lagged = false;
+                q.closed = true;
+                return Some(FanMsg::Lagged);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.shared.cv.wait(q).unwrap();
+        }
+    }
+}
+
+struct FanInner {
+    next: u64,
+    subs: Vec<(u64, Arc<SubShared>)>,
+}
+
+/// The fan-in bus: publish once, deliver to every live subscriber.
+pub(crate) struct EventFan {
+    inner: Mutex<FanInner>,
+    cap: usize,
+}
+
+impl EventFan {
+    pub(crate) fn new(cap: usize) -> EventFan {
+        EventFan { inner: Mutex::new(FanInner { next: 1, subs: Vec::new() }), cap: cap.max(1) }
+    }
+
+    pub(crate) fn subscribe(&self) -> FanSub {
+        let shared = Arc::new(SubShared {
+            q: Mutex::new(SubQ { items: VecDeque::new(), lagged: false, closed: false }),
+            cv: Condvar::new(),
+        });
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next;
+        inner.next += 1;
+        inner.subs.push((id, shared.clone()));
+        FanSub { id, shared }
+    }
+
+    pub(crate) fn is_subscribed(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().subs.iter().any(|(i, _)| *i == id)
+    }
+
+    pub(crate) fn unsubscribe(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.subs.iter().position(|(i, _)| *i == id) {
+            let (_, shared) = inner.subs.remove(pos);
+            shared.q.lock().unwrap().closed = true;
+            shared.cv.notify_all();
+        }
+    }
+
+    /// Publish one (already id-translated) event to every subscriber.
+    /// Runs under the registry lock so concurrent backend watchers
+    /// interleave at event granularity — all subscribers see one total
+    /// order. A subscriber at its bounded depth has its queue cleared
+    /// and is marked lagged (terminal), never blocking the publishers.
+    pub(crate) fn publish(&self, ev: &EventMsg) {
+        let inner = self.inner.lock().unwrap();
+        for (_, shared) in &inner.subs {
+            let mut q = shared.q.lock().unwrap();
+            if q.lagged || q.closed {
+                continue;
+            }
+            if q.items.len() >= self.cap {
+                q.items.clear();
+                q.lagged = true;
+            } else {
+                q.items.push_back(ev.clone());
+            }
+            shared.cv.notify_all();
+        }
+    }
+
+    /// A backend's own stream lagged: events were lost upstream, so every
+    /// subscriber is lagged by definition — no queue depth can hide it.
+    pub(crate) fn lag_all(&self) {
+        let inner = self.inner.lock().unwrap();
+        for (_, shared) in &inner.subs {
+            let mut q = shared.q.lock().unwrap();
+            if q.closed {
+                continue;
+            }
+            q.items.clear();
+            q.lagged = true;
+            shared.cv.notify_all();
+        }
+    }
+
+    /// Close every subscription (router shutdown): receivers drain what
+    /// is queued and then see end-of-stream.
+    pub(crate) fn close_all(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for (_, shared) in inner.subs.drain(..) {
+            shared.q.lock().unwrap().closed = true;
+            shared.cv.notify_all();
+        }
+    }
+}
+
+/// Replace an event's correlation seq (events are forwarded to each
+/// subscriber with the seq *their* watch request carried).
+pub(crate) fn with_seq(mut ev: EventMsg, seq: Option<u64>) -> EventMsg {
+    match &mut ev {
+        EventMsg::Job { seq: s, .. }
+        | EventMsg::Progress { seq: s, .. }
+        | EventMsg::Lagged { seq: s } => *s = seq,
+    }
+    ev
+}
+
+/// Spawn one watcher thread per backend slot.
+pub(crate) fn spawn_watchers(fleet: &Arc<Fleet>) -> Vec<JoinHandle<()>> {
+    (0..fleet.pool.len())
+        .map(|slot| {
+            let fleet = fleet.clone();
+            std::thread::spawn(move || watcher_loop(&fleet, slot))
+        })
+        .collect()
+}
+
+fn watcher_loop(fleet: &Fleet, slot: usize) {
+    let mut failures: u32 = 0;
+    while !fleet.is_shutting_down() {
+        match watch_once(fleet, slot) {
+            Ok(()) => failures = 0,
+            Err(_) => failures = failures.saturating_add(1),
+        }
+        if fleet.is_shutting_down() {
+            break;
+        }
+        // Linear backoff on consecutive failures so an unreachable (or
+        // v1-only) backend costs a connect attempt every few seconds,
+        // not a tight reconnect spin.
+        let ms = 200u64.saturating_mul(failures.max(1) as u64).min(5_000);
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+/// One watch session against a backend: connect, negotiate, subscribe,
+/// then translate-and-publish events until the stream breaks or the
+/// router shuts down. Short read timeouts keep the loop responsive to
+/// the shutdown flag; on an idle local stream they fire at line
+/// boundaries and are swallowed.
+fn watch_once(fleet: &Fleet, slot: usize) -> crate::error::Result<()> {
+    let addr = fleet.pool.addr(slot).to_string();
+    let mut c = Client::connect_with_timeout(&addr, Duration::from_secs(3))?;
+    if c.negotiate()? < 2 {
+        return Err(Error::Serve(format!(
+            "backend {addr} speaks protocol v1 only; watch federation needs v2"
+        )));
+    }
+    c.watch()?;
+    c.set_io_timeout(Some(Duration::from_millis(500)))?;
+    loop {
+        if fleet.is_shutting_down() {
+            return Ok(());
+        }
+        match c.next_event() {
+            Ok(EventMsg::Lagged { .. }) => {
+                // The backend dropped this watcher: events were lost
+                // upstream, so lag every fan subscriber, then reconnect
+                // and resubscribe from live state.
+                fleet.fan.lag_all();
+                return Ok(());
+            }
+            Ok(ev) => {
+                if let Some(gev) = translate(fleet, slot, ev) {
+                    fleet.fan.publish(&gev);
+                }
+            }
+            Err(Error::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Map a backend-local event into the router's global id space; `None`
+/// drops it (foreign job, or the backend emitted a bare `lagged` which
+/// `watch_once` already intercepts). A missing mapping gets a brief
+/// grace period of retries to cover the submit/record race before the
+/// event is declared foreign.
+fn translate(fleet: &Fleet, slot: usize, ev: EventMsg) -> Option<EventMsg> {
+    let local = match &ev {
+        EventMsg::Job { id, .. } => *id,
+        EventMsg::Progress { id, .. } => *id,
+        EventMsg::Lagged { .. } => return None,
+    };
+    let mut global = fleet.lookup_global(slot, local);
+    for _ in 0..10 {
+        if global.is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        global = fleet.lookup_global(slot, local);
+    }
+    let global = global?;
+    Some(match ev {
+        EventMsg::Job { seq: _, id: _, name, state, wall_s, error } => {
+            EventMsg::Job { seq: None, id: global, name, state, wall_s, error }
+        }
+        EventMsg::Progress { seq: _, id: _, name, iter, level, beta, j, grad_rel, alpha } => {
+            EventMsg::Progress { seq: None, id: global, name, iter, level, beta, j, grad_rel, alpha }
+        }
+        EventMsg::Lagged { .. } => unreachable!("intercepted above"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::JobState;
+
+    fn ev(id: u64) -> EventMsg {
+        EventMsg::Job {
+            seq: None,
+            id,
+            name: format!("job-{id}"),
+            state: JobState::Queued,
+            wall_s: None,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn fan_delivers_in_publish_order() {
+        let fan = EventFan::new(16);
+        let sub = fan.subscribe();
+        for i in 1..=3 {
+            fan.publish(&ev(i));
+        }
+        for i in 1..=3 {
+            match sub.recv() {
+                Some(FanMsg::Event(EventMsg::Job { id, .. })) => assert_eq!(id, i),
+                _ => panic!("expected job event {i}"),
+            }
+        }
+        fan.unsubscribe(sub.id());
+        assert!(sub.recv().is_none());
+    }
+
+    #[test]
+    fn slow_subscriber_lags_out_terminally() {
+        let fan = EventFan::new(2);
+        let sub = fan.subscribe();
+        for i in 0..5 {
+            fan.publish(&ev(i));
+        }
+        // Queue overflowed: pending items were dropped, one terminal
+        // lagged marker is delivered, then end-of-stream.
+        assert!(matches!(sub.recv(), Some(FanMsg::Lagged)));
+        assert!(sub.recv().is_none());
+        // The registry entry survives until unsubscribed.
+        assert!(fan.is_subscribed(sub.id()));
+        fan.unsubscribe(sub.id());
+        assert!(!fan.is_subscribed(sub.id()));
+    }
+
+    #[test]
+    fn lag_all_and_close_all() {
+        let fan = EventFan::new(16);
+        let a = fan.subscribe();
+        let b = fan.subscribe();
+        fan.publish(&ev(1));
+        fan.lag_all();
+        assert!(matches!(a.recv(), Some(FanMsg::Lagged)));
+        assert!(matches!(b.recv(), Some(FanMsg::Lagged)));
+        let c = fan.subscribe();
+        fan.close_all();
+        assert!(c.recv().is_none());
+    }
+
+    #[test]
+    fn with_seq_rewrites_every_variant() {
+        let j = with_seq(ev(7), Some(42));
+        assert!(matches!(j, EventMsg::Job { seq: Some(42), .. }));
+        let l = with_seq(EventMsg::Lagged { seq: None }, Some(1));
+        assert!(matches!(l, EventMsg::Lagged { seq: Some(1) }));
+    }
+}

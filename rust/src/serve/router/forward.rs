@@ -1,0 +1,236 @@
+//! Per-verb forwarding: placement-aware upload, affinity-aware submit
+//! with backpressure failover, global-id translation for job verbs, and
+//! fan-out-and-merge for the federated control plane.
+
+use crate::error::{Error, ErrorCode, Result};
+use crate::request::{JobRequest, JobSource};
+use crate::serve::proto::{Response, PROTO_VERSION};
+use crate::serve::router::Fleet;
+use crate::serve::scheduler::{JobId, JobView, NodeStats, ServeStats};
+use crate::serve::store::content_id;
+use crate::util::rng::Rng;
+
+/// Place an uploaded volume on its ring-chosen holders and forward the
+/// payload to each. The router computes the content id itself (same FNV
+/// hash the store uses), so placement never depends on a backend round
+/// trip. Partial placement succeeds — the volume index records exactly
+/// the holders that acknowledged, and a later submit only considers
+/// those — but total failure surfaces the last backend error.
+pub(crate) fn handle_upload(fleet: &Fleet, n: usize, data: Vec<f32>) -> Result<Response> {
+    let id = content_id(n, &data);
+    let want = fleet.ring.place(&id, fleet.cfg.replication, |s| fleet.pool.is_up(s));
+    if want.is_empty() {
+        return Err(Error::wire(
+            ErrorCode::Unavailable,
+            "no live backend to place the volume on",
+        ));
+    }
+    let mut placed = Vec::new();
+    let mut all_dedup = true;
+    let mut last_err = None;
+    for &slot in &want {
+        match fleet.pool.with_client(slot, |c| c.upload_with_retry(n, &data, &fleet.cfg.retry)) {
+            Ok(receipt) => {
+                debug_assert_eq!(receipt.id, id, "store content hash must match placement key");
+                all_dedup &= receipt.dedup;
+                placed.push(slot);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    if placed.is_empty() {
+        return Err(last_err.expect("at least one holder was attempted"));
+    }
+    fleet.record_volume(&id, n, &placed);
+    // Dedup only when *every* holder already had the volume — a partial
+    // re-replication still moved bytes.
+    Ok(Response::Uploaded { id, n, dedup: all_dedup })
+}
+
+/// Candidate slots for a job, best first. Deterministic failures
+/// (volumes never routed through this router, pairs that share no
+/// holder) are errors; an empty list means "nothing alive right now" and
+/// is worth retrying.
+fn candidates(fleet: &Fleet, spec: &JobRequest) -> Result<Vec<usize>> {
+    match &spec.source {
+        JobSource::Uploaded { m0, m1 } => {
+            let both: Vec<usize> = {
+                let st = fleet.st.lock().unwrap();
+                let miss = |id: &str| {
+                    Error::wire(
+                        ErrorCode::UnknownVolume,
+                        format!("unknown volume id '{id}' (not uploaded through this router)"),
+                    )
+                };
+                let h0 = st.volumes.get(m0).ok_or_else(|| miss(m0))?;
+                let h1 = st.volumes.get(m1).ok_or_else(|| miss(m1))?;
+                h0.holders.intersection(&h1.holders).copied().collect()
+            };
+            if both.is_empty() {
+                return Err(Error::wire(
+                    ErrorCode::UnknownVolume,
+                    format!(
+                        "volumes {m0} and {m1} share no backend; re-upload the pair \
+                         (or raise replication so pairs co-locate)"
+                    ),
+                ));
+            }
+            // Rank shared holders by ring preference on the *pair* key:
+            // repeat submissions of the same pair land on the same node,
+            // which keeps its operator caches warm.
+            let pref = fleet.ring.place(&format!("{m0}:{m1}"), 0, |s| fleet.pool.is_up(s));
+            Ok(pref.into_iter().filter(|s| both.contains(s)).collect())
+        }
+        JobSource::Synthetic => {
+            // No data affinity: least queue pressure first (probe cache),
+            // slot index as the deterministic tiebreak.
+            let mut alive = fleet.pool.alive();
+            alive.sort_by_key(|&s| (fleet.pool.load(s), s));
+            Ok(alive)
+        }
+    }
+}
+
+/// Route one job: walk the candidates best-first, failing over on
+/// backpressure (`queue_full`, `shutting_down`) and transport loss
+/// (`unavailable` from the pool), with jittered backoff between rounds
+/// when every candidate refused retryably. Non-retryable rejections
+/// (bad request, shape mismatch, unknown volume on the backend) abort
+/// immediately — no other node would answer differently. Returns the
+/// router-global job id.
+pub(crate) fn handle_submit(fleet: &Fleet, spec: &JobRequest) -> Result<JobId> {
+    // Validate up front: reject malformed jobs without burning a backend
+    // round trip (and without consulting placement state).
+    spec.validate()?;
+    let policy = fleet.cfg.retry;
+    let mut rng = Rng::new(policy.seed ^ fleet.seed_mix());
+    let attempts = policy.attempts.max(1);
+    let mut last_err: Option<Error> = None;
+    for attempt in 1..=attempts {
+        // Re-rank every round: health marks and load move under us.
+        for slot in candidates(fleet, spec)? {
+            match fleet.pool.with_client(slot, |c| c.submit(spec)) {
+                Ok(local) => return Ok(fleet.record_route(slot, local)),
+                Err(Error::Wire { code, msg }) if code.retryable() => {
+                    last_err = Some(Error::Wire { code, msg });
+                }
+                Err(e @ Error::Wire { .. }) => return Err(e),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if attempt < attempts {
+            std::thread::sleep(policy.backoff(attempt, &mut rng));
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        Error::wire(ErrorCode::Unavailable, "no live backend holds this job's volumes")
+    }))
+}
+
+pub(crate) fn handle_status_one(fleet: &Fleet, global: JobId) -> Result<JobView> {
+    let (slot, local) = fleet.route(global)?;
+    let mut view = fleet.pool.with_client(slot, |c| c.status(local))?;
+    view.id = global;
+    Ok(view)
+}
+
+pub(crate) fn handle_cancel(fleet: &Fleet, global: JobId) -> Result<()> {
+    let (slot, local) = fleet.route(global)?;
+    fleet.pool.with_client(slot, |c| c.cancel(local))
+}
+
+/// Merged job listing: fan out to live backends and translate. Jobs
+/// submitted directly to a backend have no global id and are invisible
+/// here — the router only speaks for work it placed.
+pub(crate) fn handle_jobs(fleet: &Fleet) -> Result<Vec<JobView>> {
+    let mut out = Vec::new();
+    for slot in fleet.pool.alive() {
+        let Ok(views) = fleet.pool.with_client(slot, |c| c.jobs()) else {
+            continue; // marked down by the pool; the rest still answer
+        };
+        let st = fleet.st.lock().unwrap();
+        for mut v in views {
+            if let Some(&global) = st.reverse.get(&(slot, v.id)) {
+                v.id = global;
+                out.push(v);
+            }
+        }
+    }
+    out.sort_by_key(|v| v.id);
+    Ok(out)
+}
+
+/// Fleet-wide stats: every counter summed across reachable backends,
+/// plus the per-node breakdown (`nodes`) that single daemons leave
+/// empty. A node that cannot be reached still gets a row — `up: false`,
+/// zero load, its routed count preserved — so operators see the full
+/// configured fleet, not just the survivors.
+pub(crate) fn handle_stats(fleet: &Fleet) -> ServeStats {
+    let mut total = ServeStats::default();
+    let mut nodes = Vec::with_capacity(fleet.pool.len());
+    for slot in 0..fleet.pool.len() {
+        let addr = fleet.pool.addr(slot).to_string();
+        let node = fleet.pool.last_probe(slot).map(|p| p.node).unwrap_or_default();
+        let routed = fleet.st.lock().unwrap().routed[slot];
+        let polled = if fleet.pool.is_up(slot) {
+            fleet.pool.with_client(slot, |c| c.stats()).ok()
+        } else {
+            None
+        };
+        match polled {
+            Some(s) => {
+                total.submitted += s.submitted;
+                total.queued += s.queued;
+                total.running += s.running;
+                total.completed += s.completed;
+                total.failed += s.failed;
+                total.cancelled += s.cancelled;
+                total.rejected += s.rejected;
+                total.prior_completed += s.prior_completed;
+                total.workers += s.workers;
+                total.cache_compiles += s.cache_compiles;
+                total.cache_hits += s.cache_hits;
+                total.store.volumes += s.store.volumes;
+                total.store.bytes += s.store.bytes;
+                total.store.uploads += s.store.uploads;
+                total.store.dedup_hits += s.store.dedup_hits;
+                total.store.evictions += s.store.evictions;
+                nodes.push(NodeStats {
+                    node,
+                    addr,
+                    up: true,
+                    queued: s.queued,
+                    running: s.running,
+                    completed: s.completed,
+                    routed,
+                });
+            }
+            None => nodes.push(NodeStats {
+                node,
+                addr,
+                up: false,
+                queued: 0,
+                running: 0,
+                completed: 0,
+                routed,
+            }),
+        }
+    }
+    total.nodes = nodes;
+    total
+}
+
+/// The router's own ping answer: its identity plus aggregate fleet load
+/// from the probe cache — no backend round trips on the ping path.
+pub(crate) fn handle_probe(fleet: &Fleet) -> Response {
+    let (queued, running) = fleet.pool.fleet_load();
+    Response::Pong { node: fleet.node_id.clone(), proto: PROTO_VERSION, queued, running }
+}
+
+/// Fan the shutdown out to every backend, best effort — one verb drains
+/// the whole fleet. The caller stops the router tier itself afterwards.
+pub(crate) fn handle_shutdown(fleet: &Fleet, drain: bool) {
+    for slot in 0..fleet.pool.len() {
+        let _ = fleet.pool.with_client(slot, |c| c.shutdown(drain));
+    }
+}

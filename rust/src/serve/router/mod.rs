@@ -1,0 +1,629 @@
+//! Fleet router: a daemon tier in front of N registration daemons.
+//!
+//! The router listens on the same NDJSON wire protocol the daemons speak
+//! (v1 and v2), so an unmodified [`Client`](crate::serve::Client) — and
+//! therefore every existing CLI subcommand — can point at a router
+//! instead of a single daemon and transparently work against a fleet:
+//!
+//! - **Volume placement** (`upload`): the router hashes the payload to
+//!   its content id and places it on [`RouterConfig::replication`] ring
+//!   successors ([`placement::Ring`], consistent hashing with virtual
+//!   nodes); `replication: 0` replicates fleet-wide (atlas volumes).
+//! - **Affinity routing** (`submit`): uploaded-pair jobs go to a node
+//!   that already holds *both* volumes — ranked by ring preference on
+//!   the pair key so repeat pairs reuse warm operator caches — and fail
+//!   over on backpressure (`queue_full`) or node loss with jittered
+//!   backoff ([`RetryPolicy`]). Synthetic jobs go to the least-loaded
+//!   live node (load from the health-probe cache).
+//! - **Global job ids**: the router answers `submit` with its own id
+//!   space and keeps a `global -> (backend, local)` routing table,
+//!   journaled as NDJSON for restart (`status`/`cancel`/`watch` keep
+//!   working across a router restart; in-flight `routed` counters are
+//!   not journaled and restart at zero).
+//! - **Federated control plane**: `stats` fans out and merges (with a
+//!   per-node breakdown in `ServeStats::nodes`), `status` merges live
+//!   backends, `watch` multiplexes every backend's event stream into
+//!   one ordered, id-translated stream ([`federate::EventFan`]), and
+//!   `shutdown` drains the whole fleet with one verb.
+//! - **Health**: a prober thread sweeps the backends every
+//!   [`RouterConfig::probe_interval`] via the enriched v2 ping; failed
+//!   exchanges mark a node down (placement and routing skip it), the
+//!   next successful probe marks it back up.
+//!
+//! What the router is *not*: it holds no volume bytes (placement is
+//! forwarding, not caching), does not migrate data when a node dies
+//! (re-upload re-places), and does not dedupe jobs — a transport failure
+//! after a backend admitted a job can surface as an error to the client
+//! even though the job runs (the double-submit caveat; see DESIGN.md).
+
+mod federate;
+mod forward;
+pub mod placement;
+mod pool;
+
+pub use placement::Ring;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, ErrorCode, Result};
+use crate::serve::client::RetryPolicy;
+use crate::serve::daemon::{wake_accept, write_line};
+use crate::serve::proto::{
+    read_request_line_bounded, EventMsg, Request, Response, Verdict, MAX_LINE_BYTES,
+    MAX_UPLOAD_LINE_BYTES, PROTO_V2_FEATURES, PROTO_VERSION,
+};
+use crate::serve::scheduler::JobId;
+use crate::util::json::Json;
+
+use federate::{with_seq, EventFan, FanMsg, FanSub, FAN_QUEUE_CAP};
+use placement::DEFAULT_VNODES;
+use pool::Pool;
+
+/// Router configuration; [`Default`] gives a loopback router with no
+/// backends (which [`Router::start`] rejects — a fleet needs nodes).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Bind address of the router's own listener.
+    pub addr: String,
+    /// Backend daemon addresses. Slot order defines ring node indices,
+    /// so keep it stable across restarts or journaled routes to a
+    /// renamed backend are dropped on replay.
+    pub backends: Vec<String>,
+    /// Distinct holders per uploaded volume: `1` = single placement,
+    /// `k` = the key's first k ring successors, `0` = every node.
+    pub replication: usize,
+    /// Health-probe sweep period.
+    pub probe_interval: Duration,
+    /// Per-backend I/O timeout (connect and each read/write).
+    pub timeout: Duration,
+    /// Routing-table journal path (`None` disables persistence).
+    pub journal: Option<PathBuf>,
+    /// Identity this router reports to v2 ping probes; generated from
+    /// the bind address when absent.
+    pub node_id: Option<String>,
+    /// Backoff policy for submit failover and upload forwarding.
+    pub retry: RetryPolicy,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            addr: "127.0.0.1:7470".into(),
+            backends: Vec::new(),
+            replication: 1,
+            probe_interval: Duration::from_millis(500),
+            timeout: Duration::from_secs(5),
+            journal: None,
+            node_id: None,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct RouteEntry {
+    slot: usize,
+    local: JobId,
+}
+
+struct VolumeEntry {
+    n: usize,
+    holders: BTreeSet<usize>,
+}
+
+/// Mutable routing state, all under one lock (every touch is a map
+/// operation; contention is bounded by fleet request rate, not solves).
+struct RouterState {
+    next_global: JobId,
+    routes: BTreeMap<JobId, RouteEntry>,
+    reverse: BTreeMap<(usize, JobId), JobId>,
+    volumes: BTreeMap<String, VolumeEntry>,
+    /// Jobs routed per slot since this router started (not journaled).
+    routed: Vec<u64>,
+}
+
+/// Append-only NDJSON journal of routing decisions. Replay is
+/// torn-line-tolerant (a crash mid-write loses at most the final line)
+/// and skips entries naming backends absent from the current config.
+struct RouterJournal {
+    file: Mutex<std::fs::File>,
+}
+
+impl RouterJournal {
+    fn open(path: &Path) -> Result<RouterJournal> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(RouterJournal { file: Mutex::new(file) })
+    }
+
+    fn append(&self, j: Json) {
+        let mut f = self.file.lock().unwrap();
+        let _ = writeln!(f, "{}", j.render());
+        let _ = f.flush();
+    }
+
+    fn route_line(global: JobId, backend: &str, local: JobId) -> Json {
+        Json::object([
+            ("kind", Json::str("route")),
+            ("global", Json::num(global as f64)),
+            ("backend", Json::str(backend)),
+            ("local", Json::num(local as f64)),
+        ])
+    }
+
+    fn volume_line(id: &str, n: usize, backend: &str) -> Json {
+        Json::object([
+            ("kind", Json::str("volume")),
+            ("id", Json::str(id)),
+            ("n", Json::num(n as f64)),
+            ("backend", Json::str(backend)),
+        ])
+    }
+}
+
+/// Rebuild routing state from a journal. Entries for backends no longer
+/// in the config are skipped, but their global ids stay reserved so a
+/// restarted router never re-issues an id a client may still hold.
+fn replay_journal(path: &Path, backends: &[String], st: &mut RouterState) {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return; // missing file = fresh state
+    };
+    let slot_of = |addr: &str| backends.iter().position(|a| a == addr);
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line.trim()) else {
+            continue; // torn tail line from a crash mid-append
+        };
+        match j.get("kind").and_then(Json::as_str) {
+            Some("route") => {
+                let (Some(global), Some(addr), Some(local)) = (
+                    j.get("global").and_then(Json::as_index),
+                    j.get("backend").and_then(Json::as_str),
+                    j.get("local").and_then(Json::as_index),
+                ) else {
+                    continue;
+                };
+                st.next_global = st.next_global.max(global + 1);
+                if let Some(slot) = slot_of(addr) {
+                    st.routes.insert(global, RouteEntry { slot, local });
+                    st.reverse.insert((slot, local), global);
+                }
+            }
+            Some("volume") => {
+                let (Some(id), Some(n), Some(addr)) = (
+                    j.get("id").and_then(Json::as_str),
+                    j.get("n").and_then(Json::as_usize),
+                    j.get("backend").and_then(Json::as_str),
+                ) else {
+                    continue;
+                };
+                if let Some(slot) = slot_of(addr) {
+                    st.volumes
+                        .entry(id.to_string())
+                        .or_insert_with(|| VolumeEntry { n, holders: BTreeSet::new() })
+                        .holders
+                        .insert(slot);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Shared router state: everything the connection handlers, prober and
+/// backend watchers need.
+pub(crate) struct Fleet {
+    pub(crate) cfg: RouterConfig,
+    pub(crate) pool: Pool,
+    pub(crate) ring: Ring,
+    pub(crate) st: Mutex<RouterState>,
+    journal: Option<RouterJournal>,
+    pub(crate) fan: EventFan,
+    shutdown: AtomicBool,
+    pub(crate) node_id: String,
+    addr: SocketAddr,
+}
+
+impl Fleet {
+    pub(crate) fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn lookup_global(&self, slot: usize, local: JobId) -> Option<JobId> {
+        self.st.lock().unwrap().reverse.get(&(slot, local)).copied()
+    }
+
+    /// Resolve a global id to its backend route.
+    pub(crate) fn route(&self, global: JobId) -> Result<(usize, JobId)> {
+        self.st
+            .lock()
+            .unwrap()
+            .routes
+            .get(&global)
+            .map(|r| (r.slot, r.local))
+            .ok_or_else(|| Error::wire(ErrorCode::UnknownJob, format!("no such job {global}")))
+    }
+
+    /// Commit a placed job to the routing table and journal; returns the
+    /// newly assigned global id.
+    pub(crate) fn record_route(&self, slot: usize, local: JobId) -> JobId {
+        let mut st = self.st.lock().unwrap();
+        let global = st.next_global;
+        st.next_global += 1;
+        st.routes.insert(global, RouteEntry { slot, local });
+        st.reverse.insert((slot, local), global);
+        st.routed[slot] += 1;
+        if let Some(j) = &self.journal {
+            j.append(RouterJournal::route_line(global, self.pool.addr(slot), local));
+        }
+        global
+    }
+
+    /// Record (and journal) which backends acknowledged a volume.
+    pub(crate) fn record_volume(&self, id: &str, n: usize, slots: &[usize]) {
+        let mut st = self.st.lock().unwrap();
+        let entry = st
+            .volumes
+            .entry(id.to_string())
+            .or_insert_with(|| VolumeEntry { n, holders: BTreeSet::new() });
+        for &slot in slots {
+            if entry.holders.insert(slot) {
+                if let Some(j) = &self.journal {
+                    j.append(RouterJournal::volume_line(id, n, self.pool.addr(slot)));
+                }
+            }
+        }
+    }
+
+    /// Decorrelate submit backoff jitter across concurrent submits.
+    pub(crate) fn seed_mix(&self) -> u64 {
+        self.st.lock().unwrap().next_global
+    }
+
+    /// Stop the router tier: flip the flag, wake the accept loop, end
+    /// every watch stream. Does not touch the backends.
+    fn initiate_shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            self.fan.close_all();
+            wake_accept(self.addr);
+        }
+    }
+}
+
+fn generated_router_id(addr: &SocketAddr) -> String {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let label = format!("{addr}/{}/{t}", std::process::id());
+    format!("router-{:016x}", placement::fnv64(label.as_bytes()))
+}
+
+pub struct Router;
+
+impl Router {
+    /// Bind the router, replay its journal, and spawn the health prober,
+    /// one watch-federation thread per backend, and the accept loop.
+    pub fn start(cfg: RouterConfig) -> Result<RouterHandle> {
+        if cfg.backends.is_empty() {
+            return Err(Error::Config("router needs at least one backend address".into()));
+        }
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let mut st = RouterState {
+            next_global: 1,
+            routes: BTreeMap::new(),
+            reverse: BTreeMap::new(),
+            volumes: BTreeMap::new(),
+            routed: vec![0; cfg.backends.len()],
+        };
+        let journal = match &cfg.journal {
+            Some(path) => {
+                replay_journal(path, &cfg.backends, &mut st);
+                Some(RouterJournal::open(path)?)
+            }
+            None => None,
+        };
+        let node_id = cfg.node_id.clone().unwrap_or_else(|| generated_router_id(&addr));
+        let fleet = Arc::new(Fleet {
+            pool: Pool::new(&cfg.backends, cfg.timeout),
+            ring: Ring::new(cfg.backends.len(), DEFAULT_VNODES),
+            st: Mutex::new(st),
+            journal,
+            fan: EventFan::new(FAN_QUEUE_CAP),
+            shutdown: AtomicBool::new(false),
+            node_id,
+            addr,
+            cfg,
+        });
+        let mut threads = Vec::new();
+        {
+            // Health prober: sweep every backend each interval. The first
+            // sweep runs immediately so load-aware routing has data fast.
+            let fleet = fleet.clone();
+            threads.push(std::thread::spawn(move || {
+                while !fleet.is_shutting_down() {
+                    for slot in 0..fleet.pool.len() {
+                        fleet.pool.probe_once(slot);
+                    }
+                    std::thread::sleep(fleet.cfg.probe_interval);
+                }
+            }));
+        }
+        threads.extend(federate::spawn_watchers(&fleet));
+        {
+            let accept_fleet = fleet.clone();
+            threads.push(std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_fleet.is_shutting_down() {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let conn_fleet = accept_fleet.clone();
+                    std::thread::spawn(move || handle_router_connection(stream, conn_fleet));
+                }
+            }));
+        }
+        Ok(RouterHandle { fleet, threads })
+    }
+}
+
+/// Handle on a running router.
+pub struct RouterHandle {
+    fleet: Arc<Fleet>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    /// The actually bound listener address (resolves `:0` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.fleet.addr
+    }
+
+    pub fn node_id(&self) -> &str {
+        &self.fleet.node_id
+    }
+
+    /// Stop the router from the host process. `drain_backends` also fans
+    /// a drain shutdown out to the whole fleet (the wire verb's
+    /// semantics); `false` stops only the router tier, leaving backends
+    /// running — what a rolling router upgrade wants.
+    pub fn shutdown(&self, drain_backends: bool) {
+        if drain_backends {
+            forward::handle_shutdown(&self.fleet, true);
+        }
+        self.fleet.initiate_shutdown();
+    }
+
+    /// Wait for every router thread to exit (probe, watchers, accept).
+    pub fn join(mut self) -> Result<()> {
+        for t in self.threads.drain(..) {
+            t.join().map_err(|_| Error::Serve("router thread panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Forward fan messages to one watching connection until its stream ends
+/// (lagged out, unsubscribed, router shutdown, or the peer stopped
+/// accepting writes). Mirrors the daemon's `forward_events`.
+fn forward_fan(sub: FanSub, writer: Arc<Mutex<TcpStream>>, fleet: Arc<Fleet>, seq: Option<u64>) {
+    while let Some(msg) = sub.recv() {
+        let line = match msg {
+            FanMsg::Event(ev) => with_seq(ev, seq).to_line(),
+            FanMsg::Lagged => EventMsg::Lagged { seq }.to_line(),
+        };
+        if !write_line(&writer, &line) {
+            break;
+        }
+    }
+    fleet.fan.unsubscribe(sub.id());
+}
+
+/// One client connection to the router. Mirrors the daemon's request
+/// loop byte-for-byte on the session plumbing (negotiation, seq echo,
+/// line caps, bad-request handling) and swaps the local scheduler/store
+/// dispatch for fleet forwarding.
+fn handle_router_connection(stream: TcpStream, fleet: Arc<Fleet>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let writer = Arc::new(Mutex::new(stream));
+    let mut v2 = false;
+    let mut watch_sub: Option<u64> = None;
+    let render = |resp: &Response, v2: bool, seq: Option<u64>| -> String {
+        if v2 {
+            resp.to_line_v2(seq)
+        } else {
+            resp.to_line()
+        }
+    };
+    loop {
+        let line = match read_request_line_bounded(
+            &mut reader,
+            MAX_LINE_BYTES,
+            MAX_UPLOAD_LINE_BYTES,
+        ) {
+            Ok(Some(l)) => l,
+            Ok(None) => break,
+            Err(e) => {
+                let resp = Response::Error {
+                    code: ErrorCode::BadRequest,
+                    retryable: false,
+                    msg: format!("bad request line: {e}"),
+                };
+                let _ = write_line(&writer, &render(&resp, v2, None));
+                break;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (raw_seq, parsed) = Request::parse_line(&line);
+        let req = match parsed {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = Response::Error {
+                    code: ErrorCode::BadRequest,
+                    retryable: false,
+                    msg: e.to_string(),
+                };
+                let seq = if v2 { raw_seq } else { None };
+                if !write_line(&writer, &render(&resp, v2, seq)) {
+                    break;
+                }
+                continue;
+            }
+        };
+        let (response, shutdown) = match req {
+            Request::Hello { proto } => {
+                if proto >= 2 {
+                    v2 = true;
+                    (
+                        Response::Hello {
+                            proto: proto.min(PROTO_VERSION),
+                            features: PROTO_V2_FEATURES.iter().map(|s| s.to_string()).collect(),
+                        },
+                        None,
+                    )
+                } else {
+                    v2 = false;
+                    if let Some(id) = watch_sub.take() {
+                        fleet.fan.unsubscribe(id);
+                    }
+                    (Response::Hello { proto: 1, features: Vec::new() }, None)
+                }
+            }
+            Request::Watch if !v2 => (
+                Response::from_error(&Error::wire(
+                    ErrorCode::BadRequest,
+                    "unknown command 'watch'",
+                )),
+                None,
+            ),
+            Request::SubmitBatch(_) if !v2 => (
+                Response::from_error(&Error::wire(
+                    ErrorCode::BadRequest,
+                    "unknown command 'submit_batch'",
+                )),
+                None,
+            ),
+            Request::Watch => {
+                if watch_sub.is_some_and(|id| fleet.fan.is_subscribed(id)) {
+                    (
+                        Response::from_error(&Error::wire(
+                            ErrorCode::InvalidState,
+                            "this connection is already watching",
+                        )),
+                        None,
+                    )
+                } else {
+                    let sub = fleet.fan.subscribe();
+                    watch_sub = Some(sub.id());
+                    let fw_writer = writer.clone();
+                    let fw_fleet = fleet.clone();
+                    std::thread::spawn(move || forward_fan(sub, fw_writer, fw_fleet, raw_seq));
+                    (Response::Ok, None)
+                }
+            }
+            Request::Ping if v2 => (forward::handle_probe(&fleet), None),
+            Request::Ping => (Response::Ok, None),
+            Request::Upload { n, data } => match forward::handle_upload(&fleet, n, data) {
+                Ok(resp) => (resp, None),
+                Err(e) => (Response::from_error(&e), None),
+            },
+            Request::Submit(spec) => match forward::handle_submit(&fleet, &spec) {
+                Ok(id) => (Response::Submitted { id }, None),
+                Err(e) => (Response::from_error(&e), None),
+            },
+            Request::SubmitBatch(specs) => {
+                let verdicts = specs
+                    .iter()
+                    .map(|spec| Verdict::from_result(forward::handle_submit(&fleet, spec)))
+                    .collect();
+                (Response::Batch(verdicts), None)
+            }
+            Request::Status(None) => match forward::handle_jobs(&fleet) {
+                Ok(views) => (Response::Jobs(views), None),
+                Err(e) => (Response::from_error(&e), None),
+            },
+            Request::Status(Some(id)) => match forward::handle_status_one(&fleet, id) {
+                Ok(view) => (Response::Job(view), None),
+                Err(e) => (Response::from_error(&e), None),
+            },
+            Request::Cancel(id) => match forward::handle_cancel(&fleet, id) {
+                Ok(()) => (Response::Ok, None),
+                Err(e) => (Response::from_error(&e), None),
+            },
+            Request::Stats => (Response::Stats(forward::handle_stats(&fleet)), None),
+            Request::Shutdown { drain } => (Response::Ok, Some(drain)),
+        };
+        let seq = if v2 { raw_seq } else { None };
+        if !write_line(&writer, &render(&response, v2, seq)) {
+            break;
+        }
+        if let Some(drain) = shutdown {
+            // Acknowledge first (done above), then drain the fleet and
+            // stop the router tier — one verb, whole-fleet semantics.
+            forward::handle_shutdown(&fleet, drain);
+            fleet.initiate_shutdown();
+            break;
+        }
+    }
+    if let Some(id) = watch_sub {
+        fleet.fan.unsubscribe(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_replay_restores_routes_and_volumes() {
+        let dir = std::env::temp_dir().join(format!("claire-router-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("route_journal.ndjson");
+        let backends = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        {
+            let j = RouterJournal::open(&path).unwrap();
+            j.append(RouterJournal::route_line(1, "127.0.0.1:2", 7));
+            j.append(RouterJournal::route_line(2, "127.0.0.1:9", 3)); // gone from config
+            j.append(RouterJournal::volume_line("abc", 16, "127.0.0.1:1"));
+        }
+        // Torn tail line from a crash mid-append must not break replay.
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"kind\":\"rou").unwrap();
+        }
+        let mut st = RouterState {
+            next_global: 1,
+            routes: BTreeMap::new(),
+            reverse: BTreeMap::new(),
+            volumes: BTreeMap::new(),
+            routed: vec![0; 2],
+        };
+        replay_journal(&path, &backends, &mut st);
+        // Global ids continue past everything journaled, including the
+        // dropped route for the removed backend.
+        assert_eq!(st.next_global, 3);
+        assert_eq!(st.routes.len(), 1);
+        assert_eq!(st.routes[&1].slot, 1);
+        assert_eq!(st.routes[&1].local, 7);
+        assert_eq!(st.reverse[&(1, 7)], 1);
+        assert_eq!(st.volumes["abc"].n, 16);
+        assert!(st.volumes["abc"].holders.contains(&0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn start_rejects_empty_fleet() {
+        let cfg = RouterConfig { addr: "127.0.0.1:0".into(), ..RouterConfig::default() };
+        assert!(Router::start(cfg).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Consistent-hash placement of content ids onto fleet nodes.
+//!
+//! Classic ring with virtual nodes: each backend owns [`DEFAULT_VNODES`]
+//! points on a 64-bit hash circle, and a key is placed on the first
+//! distinct nodes found walking clockwise from the key's own hash. Two
+//! properties make this the right structure for volume placement:
+//!
+//! - **Stability**: the owner of a key depends only on the hash circle,
+//!   so every router instance (and every restart) computes the same
+//!   placement from the same backend list — no coordination needed.
+//! - **Minimal disruption**: growing the fleet from N to N+1 nodes only
+//!   moves the keys whose nearest point changed, ≈ 1/(N+1) of them,
+//!   instead of reshuffling everything the way `hash % N` would.
+//!
+//! Liveness is layered on top rather than baked into the ring: `place`
+//! takes an `alive` predicate and simply skips dead nodes while walking,
+//! so a downed backend's keys spill to its ring successors and snap back
+//! to the original owners the moment the node is marked up again.
+
+/// Virtual nodes per backend. 64 points keeps the max/min load ratio of
+/// a uniform key population within a small constant factor even for tiny
+/// fleets, at negligible memory cost (16 bytes per point).
+pub const DEFAULT_VNODES: usize = 64;
+
+/// FNV-1a over a byte string (offline build: no external hashers). The
+/// same function the content store uses for volume ids, truncated to 64
+/// bits — ring placement needs dispersion, not collision resistance.
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The hash circle: `(point, node)` pairs sorted by point.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    points: Vec<(u64, usize)>,
+    nodes: usize,
+}
+
+impl Ring {
+    /// Build a ring over node indices `0..nodes` with `vnodes` points
+    /// each. Point hashes depend only on `(node, vnode)` labels, so a
+    /// node keeps its points for life — the minimal-disruption property
+    /// follows directly.
+    pub fn new(nodes: usize, vnodes: usize) -> Ring {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(nodes * vnodes);
+        for node in 0..nodes {
+            for v in 0..vnodes {
+                points.push((fnv64(format!("vnode/{node}/{v}").as_bytes()), node));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, nodes }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Nodes that should hold `key`, in ring preference order.
+    ///
+    /// `replicas` is the number of distinct nodes wanted; `0` means all
+    /// of them (atlas / fixed volumes replicated fleet-wide). Nodes
+    /// failing the `alive` predicate are skipped, so placement routes
+    /// around downed backends without perturbing the ring itself. The
+    /// result can be shorter than requested (or empty) when too few
+    /// nodes are alive.
+    pub fn place(&self, key: &str, replicas: usize, alive: impl Fn(usize) -> bool) -> Vec<usize> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let want = if replicas == 0 { self.nodes } else { replicas.min(self.nodes) };
+        let h = fnv64(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h) % self.points.len();
+        let mut out = Vec::with_capacity(want);
+        for i in 0..self.points.len() {
+            let (_, node) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&node) && alive(node) {
+                out.push(node);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = Ring::new(5, DEFAULT_VNODES);
+        let b = Ring::new(5, DEFAULT_VNODES);
+        for key in ["vol-1", "vol-2", "another/key"] {
+            assert_eq!(a.place(key, 2, |_| true), b.place(key, 2, |_| true));
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_capped() {
+        let r = Ring::new(3, DEFAULT_VNODES);
+        let p = r.place("some-volume", 2, |_| true);
+        assert_eq!(p.len(), 2);
+        assert_ne!(p[0], p[1]);
+        // Asking for more replicas than nodes caps at the fleet size.
+        assert_eq!(r.place("some-volume", 10, |_| true).len(), 3);
+    }
+
+    #[test]
+    fn zero_replicas_means_all_nodes() {
+        let r = Ring::new(4, DEFAULT_VNODES);
+        let mut p = r.place("atlas", 0, |_| true);
+        p.sort_unstable();
+        assert_eq!(p, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn dead_nodes_are_skipped_and_restored() {
+        let r = Ring::new(3, DEFAULT_VNODES);
+        let home = r.place("k", 1, |_| true)[0];
+        let failover = r.place("k", 1, |n| n != home)[0];
+        assert_ne!(failover, home);
+        // Mark-up restores the original owner (placement is memoryless).
+        assert_eq!(r.place("k", 1, |_| true)[0], home);
+    }
+
+    #[test]
+    fn empty_ring_places_nothing() {
+        let r = Ring::new(0, DEFAULT_VNODES);
+        assert!(r.place("k", 1, |_| true).is_empty());
+    }
+}

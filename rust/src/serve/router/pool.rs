@@ -1,0 +1,183 @@
+//! Backend connection pool with health tracking.
+//!
+//! One slot per configured backend, each holding a lazily established,
+//! cached v2 [`Client`] connection plus an up/down mark and the latest
+//! health-probe snapshot. All forwarding goes through [`Pool::with_client`],
+//! which centralises the error taxonomy the router lives by:
+//!
+//! - a **wire rejection** (`Error::Wire`) means the daemon answered — the
+//!   connection is intact and the error passes through untouched (and the
+//!   node is confirmed alive);
+//! - **anything else** (I/O failure, protocol garbage, EOF) means the
+//!   connection state is unknown — tear it down, reconnect once and retry,
+//!   and if that also fails mark the backend down and surface a retryable
+//!   [`ErrorCode::Unavailable`] so callers can fail over.
+//!
+//! The per-slot connection mutex serialises requests to one backend; the
+//! fan-out paths (stats, shutdown) iterate slots sequentially, which is
+//! fine at fleet sizes this tier targets (single digits of nodes).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, ErrorCode, Result};
+use crate::serve::client::{Client, ProbeInfo};
+
+struct Slot {
+    addr: String,
+    conn: Mutex<Option<Client>>,
+    /// Optimistic until proven otherwise: a fresh pool treats every
+    /// backend as up so first requests route normally; the first failed
+    /// exchange or probe corrects the mark.
+    up: AtomicBool,
+    probe: Mutex<Option<ProbeInfo>>,
+}
+
+pub(crate) struct Pool {
+    slots: Vec<Slot>,
+    timeout: Duration,
+}
+
+impl Pool {
+    pub(crate) fn new(addrs: &[String], timeout: Duration) -> Pool {
+        Pool {
+            slots: addrs
+                .iter()
+                .map(|a| Slot {
+                    addr: a.clone(),
+                    conn: Mutex::new(None),
+                    up: AtomicBool::new(true),
+                    probe: Mutex::new(None),
+                })
+                .collect(),
+            timeout,
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub(crate) fn addr(&self, slot: usize) -> &str {
+        &self.slots[slot].addr
+    }
+
+    pub(crate) fn is_up(&self, slot: usize) -> bool {
+        self.slots[slot].up.load(Ordering::SeqCst)
+    }
+
+    /// Slots currently marked up, in index order.
+    pub(crate) fn alive(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&s| self.is_up(s)).collect()
+    }
+
+    /// Latest health-probe snapshot for a slot, if any probe succeeded.
+    pub(crate) fn last_probe(&self, slot: usize) -> Option<ProbeInfo> {
+        self.slots[slot].probe.lock().unwrap().clone()
+    }
+
+    /// Cached queue pressure for load-aware routing: queued + running
+    /// from the last probe, zero when the node has never answered one.
+    pub(crate) fn load(&self, slot: usize) -> usize {
+        self.slots[slot]
+            .probe
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.queued + p.running)
+            .unwrap_or(0)
+    }
+
+    /// Aggregate (queued, running) across up slots, from the probe cache
+    /// — the router's own ping answer, with no fan-out on the ping path.
+    pub(crate) fn fleet_load(&self) -> (usize, usize) {
+        let mut queued = 0;
+        let mut running = 0;
+        for (i, s) in self.slots.iter().enumerate() {
+            if !self.is_up(i) {
+                continue;
+            }
+            if let Some(p) = s.probe.lock().unwrap().as_ref() {
+                queued += p.queued;
+                running += p.running;
+            }
+        }
+        (queued, running)
+    }
+
+    fn connect(&self, addr: &str) -> Result<Client> {
+        let mut c = Client::connect_with_timeout(addr, self.timeout)?;
+        c.set_io_timeout(Some(self.timeout))?;
+        c.negotiate()?;
+        Ok(c)
+    }
+
+    /// Run `f` on the slot's cached connection, establishing one as
+    /// needed. Transport failures tear the connection down, reconnect
+    /// once and retry `f`; a second failure marks the backend down and
+    /// reports `unavailable` (retryable — callers fail over to another
+    /// candidate). Wire rejections pass through and confirm liveness.
+    ///
+    /// Note `f` may run twice; every verb forwarded through here is a
+    /// single request/response exchange, so the only duplication hazard
+    /// is a resend after a lost response — see the double-submit caveat
+    /// in DESIGN.md.
+    pub(crate) fn with_client<T>(
+        &self,
+        slot: usize,
+        mut f: impl FnMut(&mut Client) -> Result<T>,
+    ) -> Result<T> {
+        let s = &self.slots[slot];
+        let mut guard = s.conn.lock().unwrap();
+        let mut last: Option<Error> = None;
+        for _attempt in 0..2 {
+            if guard.is_none() {
+                match self.connect(&s.addr) {
+                    Ok(c) => *guard = Some(c),
+                    Err(e) => {
+                        last = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match f(guard.as_mut().unwrap()) {
+                Ok(v) => {
+                    s.up.store(true, Ordering::SeqCst);
+                    return Ok(v);
+                }
+                Err(e @ Error::Wire { .. }) => {
+                    s.up.store(true, Ordering::SeqCst);
+                    return Err(e);
+                }
+                Err(e) => {
+                    *guard = None;
+                    last = Some(e);
+                }
+            }
+        }
+        s.up.store(false, Ordering::SeqCst);
+        let detail = last.map(|e| e.to_string()).unwrap_or_else(|| "unreachable".into());
+        Err(Error::wire(
+            ErrorCode::Unavailable,
+            format!("backend {}: {detail}", s.addr),
+        ))
+    }
+
+    /// One health probe: refresh the slot's load snapshot via the v2
+    /// enriched ping. Success marks the node up (stale snapshots are
+    /// overwritten); transport failure marks it down via `with_client`.
+    /// A pre-probe daemon that answers the ping with a bare ok counts as
+    /// alive with no load snapshot. Returns the resulting up mark.
+    pub(crate) fn probe_once(&self, slot: usize) -> bool {
+        let r = self.with_client(slot, |c| match c.probe() {
+            Ok(p) => Ok(Some(p)),
+            Err(Error::Serve(msg)) if msg.contains("node identity") => Ok(None),
+            Err(e) => Err(e),
+        });
+        if let Ok(snapshot) = r {
+            *self.slots[slot].probe.lock().unwrap() = snapshot;
+        }
+        self.is_up(slot)
+    }
+}

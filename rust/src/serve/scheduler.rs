@@ -141,8 +141,29 @@ pub struct JobView {
     pub error: Option<String>,
 }
 
+/// One backend's slice of a router-merged [`ServeStats`]: identity,
+/// health, live load, and how many jobs the router sent its way. A plain
+/// daemon never populates these; the fleet router's federated `stats`
+/// verb merges one entry per configured backend.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NodeStats {
+    /// Stable node id learned from the backend's `ping` probe (empty
+    /// until the first successful probe).
+    pub node: String,
+    pub addr: String,
+    /// Health as of the router's last probe/forward.
+    pub up: bool,
+    pub queued: usize,
+    pub running: usize,
+    pub completed: u64,
+    /// Jobs this router routed to the node (its affinity receipt —
+    /// distinct from `completed`, which also counts jobs submitted to the
+    /// backend directly).
+    pub routed: u64,
+}
+
 /// Aggregate daemon statistics (the `stats` wire verb).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ServeStats {
     pub submitted: u64,
     pub queued: usize,
@@ -164,6 +185,10 @@ pub struct ServeStats {
     /// does not own the store; the daemon overlays these when answering
     /// the stats verb, and embedders without a store report zeros.
     pub store: StoreStats,
+    /// Per-backend breakdown of a fleet (router-merged stats only; a
+    /// single daemon always reports an empty list, keeping its wire
+    /// encoding byte-identical to the pre-router protocol).
+    pub nodes: Vec<NodeStats>,
 }
 
 struct JobRecord {
@@ -896,6 +921,7 @@ impl Scheduler {
             cache_compiles: compiles,
             cache_hits: hits,
             store: StoreStats::default(),
+            nodes: Vec::new(),
         }
     }
 

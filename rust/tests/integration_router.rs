@@ -1,0 +1,237 @@
+//! Fleet-router integration tests: 2 stub daemons behind a router, all
+//! over the real wire protocol on loopback.
+//!
+//! The acceptance contract under test: an *unmodified* v2 `Client`
+//! pointed at the router can upload a volume pair, submit jobs that
+//! land on a backend holding both volumes (affinity), stream the watch
+//! fan-in to a terminal state under router-global job ids, cancel by
+//! global id, and survive a backend dying mid-stream (failover).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use claire::error::Result;
+use claire::registration::RunReport;
+use claire::serve::{
+    scheduler::stub_report, Client, Daemon, DaemonConfig, DaemonHandle, EventMsg, Executor,
+    ExecutorFactory, JobPayload, JobSource, JobSpec, JobState, Router, RouterConfig,
+    RouterHandle,
+};
+use claire::ErrorCode;
+
+/// Stub worker: sleeps `max_iter` milliseconds per job, so specs control
+/// service time (same trick as the daemon integration tests).
+struct StubExec;
+
+impl Executor for StubExec {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
+        let spec = match payload {
+            JobPayload::Spec(s) => s,
+            JobPayload::Volumes { spec, .. } => spec,
+            JobPayload::Problem { .. } => return Ok(stub_report("problem")),
+        };
+        std::thread::sleep(Duration::from_millis(spec.max_iter.unwrap_or(1) as u64));
+        Ok(stub_report(&spec.name()))
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+fn stub_factory() -> ExecutorFactory {
+    Arc::new(|_w| Ok(Box::new(StubExec) as Box<dyn Executor>))
+}
+
+fn start_daemon(node_id: &str) -> DaemonHandle {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 32,
+        journal: None,
+        node_id: Some(node_id.into()),
+        ..Default::default()
+    };
+    Daemon::start(cfg, stub_factory()).unwrap()
+}
+
+fn start_router(backends: Vec<String>, replication: usize) -> RouterHandle {
+    Router::start(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends,
+        replication,
+        probe_interval: Duration::from_millis(50),
+        timeout: Duration::from_secs(5),
+        journal: None,
+        node_id: Some("router-under-test".into()),
+        ..RouterConfig::default()
+    })
+    .unwrap()
+}
+
+fn connect(addr: &str) -> Client {
+    let mut c = Client::connect_with_timeout(addr, Duration::from_secs(10)).unwrap();
+    c.set_io_timeout(Some(Duration::from_secs(10))).unwrap();
+    assert_eq!(c.negotiate().unwrap(), 2, "router must offer protocol v2");
+    c
+}
+
+fn volume(n: usize, phase: f32) -> Vec<f32> {
+    (0..n * n * n).map(|i| (i as f32 * 0.013 + phase).sin()).collect()
+}
+
+fn pair_spec(m0: &str, m1: &str, delay_ms: usize) -> JobSpec {
+    JobSpec {
+        subject: "fleet".into(),
+        n: 16,
+        source: JobSource::Uploaded { m0: m0.into(), m1: m1.into() },
+        max_iter: Some(delay_ms),
+        ..Default::default()
+    }
+}
+
+/// Wait (bounded) for the watch stream to report `id` terminal; returns
+/// the terminal state.
+fn wait_terminal_event(client: &mut Client, id: u64) -> JobState {
+    let t0 = std::time::Instant::now();
+    loop {
+        assert!(t0.elapsed().as_secs() < 30, "no terminal event for job {id}");
+        match client.next_event().unwrap() {
+            EventMsg::Job { id: got, state, .. } if got == id && state.is_terminal() => {
+                return state;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The ci smoke: upload a pair through the router (replicated to both
+/// backends), submit twice, assert both jobs landed on the *same*
+/// backend (affinity via the pair key), watch the fan-in to terminal
+/// under global ids, cancel a queued job by global id, and drain the
+/// whole fleet with one shutdown verb.
+#[test]
+fn router_upload_submit_watch_affinity() {
+    let a = start_daemon("alpha");
+    let b = start_daemon("beta");
+    let router = start_router(vec![a.addr().to_string(), b.addr().to_string()], 2);
+    let addr = router.addr().to_string();
+
+    let mut client = connect(&addr);
+    // Enriched ping against the router reports *its* identity.
+    let probe = client.probe().unwrap();
+    assert_eq!(probe.node, "router-under-test");
+
+    // Upload the pair through the router. replication=2 on a 2-node
+    // fleet puts both volumes everywhere, so the pair shares a holder.
+    let m0 = client.upload(16, &volume(16, 0.0)).unwrap();
+    let m1 = client.upload(16, &volume(16, 1.0)).unwrap();
+    assert_ne!(m0.id, m1.id);
+    // Re-uploading is a dedup hit on every holder.
+    assert!(client.upload(16, &volume(16, 0.0)).unwrap().dedup);
+
+    // A separate watcher connection (events + requests multiplex on one
+    // connection too, but a dedicated one keeps the test readable).
+    let mut watcher = connect(&addr);
+    watcher.watch().unwrap();
+
+    // Two identical-pair jobs: both must route to the same backend.
+    let j1 = client.submit(&pair_spec(&m0.id, &m1.id, 200)).unwrap();
+    let j2 = client.submit(&pair_spec(&m0.id, &m1.id, 200)).unwrap();
+    assert_ne!(j1, j2, "router-global ids are distinct");
+
+    assert_eq!(wait_terminal_event(&mut watcher, j1), JobState::Done);
+    assert_eq!(wait_terminal_event(&mut watcher, j2), JobState::Done);
+
+    // Affinity is visible in the merged stats: one node ran both routed
+    // jobs, the other none — and both rows carry real node identities.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.nodes.len(), 2);
+    let mut routed: Vec<u64> = stats.nodes.iter().map(|n| n.routed).collect();
+    routed.sort_unstable();
+    assert_eq!(routed, vec![0, 2], "both pair jobs pinned to one backend");
+    let ids: Vec<&str> = stats.nodes.iter().map(|n| n.node.as_str()).collect();
+    assert!(ids.contains(&"alpha") && ids.contains(&"beta"), "probe identities: {ids:?}");
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.workers, 2, "fleet-summed worker count");
+
+    // Cancel by global id: occupy the single worker of the affine
+    // backend, queue another pair job behind it, cancel the queued one.
+    let blocker = client.submit(&pair_spec(&m0.id, &m1.id, 800)).unwrap();
+    let victim = client.submit(&pair_spec(&m0.id, &m1.id, 800)).unwrap();
+    client.cancel(victim).unwrap();
+    let view = client.status(victim).unwrap();
+    assert_eq!(view.id, victim, "status answers in global ids");
+    assert_eq!(view.state, JobState::Cancelled);
+    assert_eq!(wait_terminal_event(&mut watcher, blocker), JobState::Done);
+
+    // The merged job table speaks global ids exclusively.
+    let jobs = client.jobs().unwrap();
+    let listed: Vec<u64> = jobs.iter().map(|v| v.id).collect();
+    for id in [j1, j2, blocker, victim] {
+        assert!(listed.contains(&id), "job {id} missing from merged table {listed:?}");
+    }
+
+    // One shutdown verb drains the whole fleet.
+    client.shutdown(true).unwrap();
+    router.join().unwrap();
+    a.join().unwrap();
+    b.join().unwrap();
+}
+
+/// Failover: kill the backend that owns a pair mid-stream. The next
+/// submit of the same pair re-routes to the survivor (the volumes are
+/// replicated), the watch fan-in keeps streaming events for the new job,
+/// and the dead node shows up as down in the merged stats.
+#[test]
+fn router_failover_reroutes_and_watch_keeps_streaming() {
+    let a = start_daemon("alpha");
+    let b = start_daemon("beta");
+    let router = start_router(vec![a.addr().to_string(), b.addr().to_string()], 0);
+    let addr = router.addr().to_string();
+    let mut daemons = vec![a, b];
+
+    let mut client = connect(&addr);
+    let m0 = client.upload(16, &volume(16, 2.0)).unwrap();
+    let m1 = client.upload(16, &volume(16, 3.0)).unwrap();
+
+    let mut watcher = connect(&addr);
+    watcher.watch().unwrap();
+
+    // First job pins the pair's affine backend.
+    let j1 = client.submit(&pair_spec(&m0.id, &m1.id, 100)).unwrap();
+    assert_eq!(wait_terminal_event(&mut watcher, j1), JobState::Done);
+    let stats = client.stats().unwrap();
+    let affine = stats.nodes.iter().position(|n| n.routed == 1).unwrap();
+
+    // Kill the affine backend out from under the fleet. Its listener is
+    // gone once join returns — no half-dead window.
+    let dead = daemons.remove(affine);
+    dead.shutdown(false);
+    dead.join().unwrap();
+
+    // Same pair again: the submit fails over to the survivor (first
+    // attempt marks the dead node down, candidate walk continues), and
+    // the fan-in still delivers its events to the old subscription.
+    let j2 = client.submit(&pair_spec(&m0.id, &m1.id, 100)).unwrap();
+    assert_ne!(j1, j2);
+    assert_eq!(wait_terminal_event(&mut watcher, j2), JobState::Done);
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.nodes.len(), 2, "dead nodes stay visible in the breakdown");
+    assert!(!stats.nodes[affine].up, "killed backend reported down");
+    assert_eq!(stats.nodes[1 - affine].routed, 1, "failover routed to the survivor");
+
+    // Status for a job routed to the dead backend is a retryable
+    // unavailable, not a hang or an unknown-job lie.
+    let err = client.status(j1).unwrap_err();
+    assert_eq!(err.code(), ErrorCode::Unavailable);
+
+    router.shutdown(true);
+    router.join().unwrap();
+    daemons.pop().unwrap().join().unwrap();
+}

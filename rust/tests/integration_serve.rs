@@ -473,6 +473,7 @@ fn store_eviction_over_the_wire() {
         queue_cap: 8,
         journal: None,
         store_bytes: 2 * 16 * 16 * 16 * 4,
+        ..Default::default()
     };
     let handle = Daemon::start(cfg, stub_factory()).unwrap();
     let mut client = Client::connect(&handle.addr().to_string()).unwrap();
@@ -627,9 +628,15 @@ fn hello_negotiates_v2_sessions() {
 
     assert_eq!(
         raw_call(&mut s, &mut r, r#"{"cmd":"hello","proto":2,"seq":1}"#),
-        r#"{"features":["seq","watch","submit_batch","structured_errors"],"ok":true,"proto":2,"seq":1}"#
+        r#"{"features":["seq","watch","submit_batch","structured_errors","probe"],"ok":true,"proto":2,"seq":1}"#
     );
-    assert_eq!(raw_call(&mut s, &mut r, r#"{"cmd":"ping","seq":7}"#), r#"{"ok":true,"seq":7}"#);
+    // v2 ping is the enriched health probe: node identity + load snapshot,
+    // nested under "node" so pre-probe clients decode it as a plain Ok.
+    let pong = raw_call(&mut s, &mut r, r#"{"cmd":"ping","seq":7}"#);
+    assert!(pong.contains(r#""node":{"#), "{pong}");
+    assert!(pong.contains(r#""proto":2"#), "{pong}");
+    assert!(pong.contains(r#""queued":0"#), "{pong}");
+    assert!(pong.contains(r#""seq":7"#), "{pong}");
     // Structured bad_request with the seq echoed even though the body was
     // rejected.
     assert_eq!(

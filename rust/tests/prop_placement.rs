@@ -1,0 +1,126 @@
+//! Property tests for the fleet router's consistent-hash placement ring.
+//!
+//! The three properties the router tier stakes its correctness on:
+//!
+//! 1. **Stability** — placement is a pure function of (fleet size, key):
+//!    any two routers (or restarts) agree on where a volume lives.
+//! 2. **Balance** — over a uniform key population, no node owns wildly
+//!    more than its share (max/min primary-owner load ratio bounded).
+//! 3. **Minimal disruption** — growing the fleet from N to N+1 nodes
+//!    moves roughly 1/(N+1) of the keys, nowhere near the ~N/(N+1) a
+//!    modulo hash would reshuffle.
+
+use claire::serve::router::placement::{Ring, DEFAULT_VNODES};
+use claire::util::prop::{check_msg, Config};
+use claire::util::rng::Rng;
+
+fn random_key(r: &mut Rng) -> String {
+    // Content-id-shaped keys: 32 hex chars.
+    (0..32).map(|_| char::from_digit(r.below(16) as u32, 16).unwrap()).collect()
+}
+
+#[test]
+fn placement_is_stable_across_ring_instances() {
+    check_msg(
+        Config { cases: 64, ..Config::default() },
+        |r| (2 + r.below(7) as usize, random_key(r), 1 + r.below(3) as usize),
+        |(nodes, key, replicas)| {
+            let a = Ring::new(*nodes, DEFAULT_VNODES).place(key, *replicas, |_| true);
+            let b = Ring::new(*nodes, DEFAULT_VNODES).place(key, *replicas, |_| true);
+            if a != b {
+                return Err(format!("same fleet, same key, different placement: {a:?} vs {b:?}"));
+            }
+            if a.len() != (*replicas).min(*nodes) {
+                return Err(format!("wanted {replicas} distinct holders, got {a:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn load_is_balanced_over_uniform_keys() {
+    // Primary-owner histogram over many random keys: with 64 vnodes the
+    // max/min ratio stays within a small constant factor. The bound is
+    // deliberately loose (4x) — we are guarding against pathological
+    // skew (one node owning ~everything), not chasing perfect balance.
+    check_msg(
+        Config { cases: 8, ..Config::default() },
+        |r| (2 + r.below(5) as usize, r.below(u64::MAX)),
+        |(nodes, seed)| {
+            let ring = Ring::new(*nodes, DEFAULT_VNODES);
+            let mut counts = vec![0usize; *nodes];
+            let mut r = Rng::new(*seed);
+            let keys = 2000;
+            for _ in 0..keys {
+                counts[ring.place(&random_key(&mut r), 1, |_| true)[0]] += 1;
+            }
+            let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            if *min == 0 || *max / *min >= 4 {
+                return Err(format!("unbalanced primary ownership: {counts:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn adding_a_node_moves_about_one_in_n_plus_one_keys() {
+    check_msg(
+        Config { cases: 8, ..Config::default() },
+        |r| (2 + r.below(5) as usize, r.below(u64::MAX)),
+        |(nodes, seed)| {
+            let before = Ring::new(*nodes, DEFAULT_VNODES);
+            let after = Ring::new(*nodes + 1, DEFAULT_VNODES);
+            let mut r = Rng::new(*seed);
+            let keys = 2000;
+            let mut moved = 0usize;
+            for _ in 0..keys {
+                let key = random_key(&mut r);
+                if before.place(&key, 1, |_| true) != after.place(&key, 1, |_| true) {
+                    moved += 1;
+                }
+            }
+            // Expect ≈ keys/(nodes+1) moves; accept up to 2.5x that (vnode
+            // granularity wobbles) and reject a modulo-style reshuffle,
+            // which would move ≈ keys * nodes/(nodes+1).
+            let expected = keys / (*nodes + 1);
+            if moved > expected * 5 / 2 {
+                return Err(format!(
+                    "{moved}/{keys} keys moved going {nodes}->{} nodes (expected ~{expected})",
+                    *nodes + 1
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn failover_spills_only_the_dead_nodes_keys() {
+    // Killing one node must not move any key whose owner is still alive,
+    // and the dead node's keys must land on live nodes.
+    check_msg(
+        Config { cases: 16, ..Config::default() },
+        |r| (3 + r.below(4) as usize, r.below(u64::MAX)),
+        |(nodes, seed)| {
+            let ring = Ring::new(*nodes, DEFAULT_VNODES);
+            let dead = (*seed % *nodes as u64) as usize;
+            let mut r = Rng::new(*seed);
+            for _ in 0..500 {
+                let key = random_key(&mut r);
+                let home = ring.place(&key, 1, |_| true)[0];
+                let now = ring.place(&key, 1, |n| n != dead)[0];
+                if home != dead && now != home {
+                    return Err(format!(
+                        "key {key} moved {home}->{now} though only node {dead} died"
+                    ));
+                }
+                if home == dead && now == dead {
+                    return Err(format!("key {key} still placed on dead node {dead}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -38,6 +38,9 @@ cargo test -q --test integration_serve watch_streams_job_lifecycle
 echo "== cancel-running-job smoke: running -> cancelled at an iteration boundary (stub daemon) =="
 cargo test -q --test integration_serve cancel_running_job_over_the_wire
 
+echo "== fleet router smoke: upload/submit/watch/cancel through a 2-backend router (affinity + global ids) =="
+cargo test -q --test integration_router router_upload_submit_watch_affinity
+
 echo "== cargo doc --no-deps (public API docs, warnings as errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -17,9 +17,16 @@ append ``__mixed`` to the key, carry ``"precision": "mixed"`` and declare
 per-tensor ``dtype`` entries (``f16`` cache inputs) — the Rust runtime
 marshals literals by these dtypes.
 
+Batched artifacts append ``__b{B}`` (after any ``__mixed``) and carry
+``"batch": B``: the solver ops are ``jax.vmap``-ed over a leading subject
+dimension (``bg`` stays shared), so one warm executable evaluates
+objective/newton_setup/hess_matvec/precond for B subjects per dispatch.
+Unbatched entries omit the field (= batch 1, back-compat).
+
 Usage:
     python -m compile.aot --out-dir ../artifacts --sizes 16,32,64
     python -m compile.aot --out-dir ../artifacts --precisions full,mixed
+    python -m compile.aot --out-dir ../artifacts --batches 4,8
 """
 
 from __future__ import annotations
@@ -176,6 +183,78 @@ def mixed_op_defs(p: model.Problem) -> list:
     ]
 
 
+def batched_op_defs(p: model.Problem, B: int, shared: bool) -> list:
+    """Batched solver artifacts for one (variant, n, precision) triple.
+
+    The per-iteration solver ops are ``jax.vmap``-ed over a leading subject
+    axis: every subject tensor gains a ``(B, ...)`` dim while ``bg`` (the
+    beta/gamma scalars) stays shared — the scheduler only coalesces jobs
+    whose regularization parameters agree, so one broadcast pair serves the
+    whole batch. ``transport``/``defmap``/``detf`` stay unbatched (they run
+    on the report path, not the hot loop). With ``precision == "mixed"``
+    only the reduced hess_matvec is lowered, mirroring ``mixed_op_defs``.
+    ``shared`` gates the variant-independent ``precond`` (emitted once per
+    size, attached to the default variant, like the kernel-level set).
+    """
+    n, nt = p.n, p.nt
+    m = n * n * n
+    bv3 = spec(B, 3, n, n, n)
+    bs3 = spec(B, n, n, n)
+    bq3 = spec(B, 3, m)
+    bg = spec(2)
+    if p.precision == "mixed":
+        btraj16 = spec(B, nt + 1, n, n, n, dtype=jnp.float16)
+        bs16 = spec(B, n, n, n, dtype=jnp.float16)
+        return [
+            OpDef(
+                "hess_matvec",
+                jax.vmap(model.build_hess_matvec(p), in_axes=(0, 0, 0, 0, 0, None)),
+                [
+                    ("vt", bv3),
+                    ("m_traj", btraj16),
+                    ("yb", bq3),
+                    ("yf", bq3),
+                    ("divv", bs16),
+                    ("bg", bg),
+                ],
+            ),
+        ]
+    btraj = spec(B, nt + 1, n, n, n)
+    ops = [
+        OpDef(
+            "objective",
+            jax.vmap(model.build_objective(p), in_axes=(0, 0, 0, None)),
+            [("v", bv3), ("m0", bs3), ("m1", bs3), ("bg", bg)],
+        ),
+        OpDef(
+            "newton_setup",
+            jax.vmap(model.build_newton_setup(p), in_axes=(0, 0, 0, None)),
+            [("v", bv3), ("m0", bs3), ("m1", bs3), ("bg", bg)],
+        ),
+        OpDef(
+            "hess_matvec",
+            jax.vmap(model.build_hess_matvec(p), in_axes=(0, 0, 0, 0, 0, None)),
+            [
+                ("vt", bv3),
+                ("m_traj", btraj),
+                ("yb", bq3),
+                ("yf", bq3),
+                ("divv", bs3),
+                ("bg", bg),
+            ],
+        ),
+    ]
+    if shared:
+        ops.append(
+            OpDef(
+                "precond",
+                jax.vmap(model.build_precond(p), in_axes=(0, None)),
+                [("r", bv3), ("bg", bg)],
+            )
+        )
+    return ops
+
+
 def lower_one(opdef: OpDef, out_path: pathlib.Path) -> dict:
     """Lower one op, write HLO text, return its manifest entry."""
     t0 = time.time()
@@ -212,6 +291,12 @@ def main() -> None:
         default=",".join(model.PRECISIONS),
         help="comma list of full,mixed; mixed lowers the reduced hess_matvec",
     )
+    ap.add_argument(
+        "--batches",
+        default="4,8",
+        help="comma list of batch sizes B to lower the solver ops at "
+        "(__b{B} keys; empty disables batched artifacts)",
+    )
     ap.add_argument("--nt", type=int, default=model.DEFAULT_NT)
     ap.add_argument("--ops", default="", help="only lower ops whose name is listed")
     ap.add_argument("--force", action="store_true", help="re-lower even if file exists")
@@ -224,6 +309,9 @@ def main() -> None:
     precisions = [p for p in args.precisions.split(",") if p]
     for prec in precisions:
         assert prec in model.PRECISIONS, f"unknown precision {prec!r}"
+    batches = [int(b) for b in args.batches.split(",") if b]
+    for b in batches:
+        assert b >= 2, f"batch size {b} makes no sense (unbatched entries are batch 1)"
     only = set(args.ops.split(",")) if args.ops else None
 
     manifest_path = out_dir / "manifest.json"
@@ -251,23 +339,33 @@ def main() -> None:
                     defs = mixed_op_defs(p)
                     suffix = "__mixed"
                 print(f"[aot] n={n} variant={variant} precision={prec}")
-                for opdef in defs:
-                    if only and opdef.name not in only:
-                        continue
-                    key = f"{opdef.name}__{variant}__n{n}{suffix}"
-                    fname = out_dir / f"{key}.hlo.txt"
-                    if fname.exists() and not args.force and key in manifest["artifacts"]:
-                        continue
-                    entry = lower_one(opdef, fname)
-                    entry.update(
-                        {"op": opdef.name, "variant": variant, "n": n, "nt": args.nt}
-                    )
-                    if prec != "full":
-                        entry["precision"] = prec
-                    manifest["artifacts"][key] = entry
-                    manifest_path.write_text(
-                        json.dumps(manifest, indent=1, sort_keys=True)
-                    )
+                # Batch 1 = the historical unbatched set; B >= 2 lowers the
+                # vmap-ed solver ops under __b{B} keys.
+                for B in [1] + batches:
+                    if B == 1:
+                        bdefs, bsuffix = defs, ""
+                    else:
+                        bdefs = batched_op_defs(p, B, shared=variant == "opt-fd8-cubic")
+                        bsuffix = f"__b{B}"
+                    for opdef in bdefs:
+                        if only and opdef.name not in only:
+                            continue
+                        key = f"{opdef.name}__{variant}__n{n}{suffix}{bsuffix}"
+                        fname = out_dir / f"{key}.hlo.txt"
+                        if fname.exists() and not args.force and key in manifest["artifacts"]:
+                            continue
+                        entry = lower_one(opdef, fname)
+                        entry.update(
+                            {"op": opdef.name, "variant": variant, "n": n, "nt": args.nt}
+                        )
+                        if prec != "full":
+                            entry["precision"] = prec
+                        if B > 1:
+                            entry["batch"] = B
+                        manifest["artifacts"][key] = entry
+                        manifest_path.write_text(
+                            json.dumps(manifest, indent=1, sort_keys=True)
+                        )
 
     print(f"[aot] manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
 

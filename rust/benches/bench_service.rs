@@ -2,16 +2,18 @@
 //! through the serve scheduler, sweeping worker counts.
 //!
 //! Reports jobs/sec and p50/p95 submit-to-done latency (the clinical
-//! figure of merit from `coordinator::workload`), watch-event delivery
-//! latency through the v2 event bus, upload-line encode throughput
-//! (owned pre-v2 path vs the borrowed encoder), and writes a
-//! `BENCH_service.json` summary. Uses stub executors with a calibrated
-//! busy-wait service time so the bench measures *scheduling* overhead and
-//! scaling, not PJRT solve time — it runs on machines without artifacts
-//! (pass a real artifacts dir via CLAIRE_ARTIFACTS + `claire batch` for
-//! end-to-end solve throughput).
+//! figure of merit from `coordinator::workload`), batched-vs-sequential
+//! dispatch throughput under scheduler job coalescing (B in {1, 4, 8}),
+//! watch-event delivery latency through the v2 event bus, upload-line
+//! encode throughput (owned pre-v2 path vs the borrowed encoder), and
+//! writes a `BENCH_service.json` summary. Uses stub executors with a
+//! calibrated busy-wait service time so the bench measures *scheduling*
+//! overhead and scaling, not PJRT solve time — it runs on machines
+//! without artifacts (pass a real artifacts dir via CLAIRE_ARTIFACTS +
+//! `claire batch` for end-to-end solve throughput).
 //!
-//! Run: `cargo bench --bench bench_service`.
+//! Run: `cargo bench --bench bench_service`. Set `CLAIRE_BENCH_SMOKE=1`
+//! to shrink every sweep to a seconds-scale CI smoke run.
 
 use std::time::{Duration, Instant};
 
@@ -27,6 +29,13 @@ use claire::serve::{
 use claire::util::bench::Table;
 use claire::util::json::Json;
 
+fn spin(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
 /// Busy-wait executor: emulates a fixed per-job solve cost without
 /// sleeping (sleep granularity would swamp sub-ms scheduling overhead).
 struct SpinExec {
@@ -39,11 +48,36 @@ impl Executor for SpinExec {
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
     ) -> Result<RunReport> {
-        let t0 = Instant::now();
-        while t0.elapsed() < self.service {
-            std::hint::spin_loop();
-        }
+        spin(self.service);
         Ok(stub_report(&payload.name()))
+    }
+}
+
+/// Busy-wait executor with the real batched-solve cost shape: every
+/// dispatch pays a fixed `base` (operator marshalling, executable launch),
+/// plus `per_subject` per member. Batching amortizes `base` across the
+/// batch — exactly what one warm `__b{B}` executable does for B subjects.
+struct BatchSpinExec {
+    base: Duration,
+    per_subject: Duration,
+}
+
+impl Executor for BatchSpinExec {
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<RunReport> {
+        spin(self.base + self.per_subject);
+        Ok(stub_report(&payload.name()))
+    }
+
+    fn execute_batch(
+        &mut self,
+        jobs: &[(JobPayload, claire::registration::SolveCx)],
+    ) -> Vec<Result<RunReport>> {
+        spin(self.base + self.per_subject * jobs.len() as u32);
+        jobs.iter().map(|(p, _)| Ok(stub_report(&p.name()))).collect()
     }
 }
 
@@ -86,6 +120,54 @@ fn run_once(jobs: usize, workers: usize, service: Duration) -> Row {
         jobs_per_s: jobs as f64 / wall_s.max(1e-12),
         p50_s: percentile_sorted(&lat, 50.0),
         p95_s: percentile_sorted(&lat, 95.0),
+    }
+}
+
+/// One coalesced-dispatch sweep point: `jobs` compatible batch-priority
+/// jobs drained through a single worker with coalescing capped at
+/// `max_b`. `max_b = 1` disables coalescing — the sequential baseline the
+/// speedup column compares against. The queue is fully loaded before the
+/// worker starts (drain mode skips the dwell), so fills are deterministic.
+struct BatchRow {
+    max_b: usize,
+    wall_s: f64,
+    jobs_per_s: f64,
+    batches: u64,
+    coalesced: u64,
+    mean_fill: f64,
+}
+
+fn run_batched_once(jobs: usize, max_b: usize, base: Duration, per: Duration) -> BatchRow {
+    let sched = Scheduler::new(jobs, 1);
+    sched.set_coalesce(max_b, 0);
+    for i in 0..jobs {
+        let spec = JobSpec {
+            subject: ["na02", "na03", "na10"][i % 3].into(),
+            n: 64,
+            priority: Priority::Batch,
+            ..Default::default()
+        };
+        sched.submit(Priority::Batch, JobPayload::Spec(spec)).unwrap();
+    }
+    sched.shutdown(true); // drain
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let sched = sched.clone();
+        scope.spawn(move || {
+            let mut exec = BatchSpinExec { base, per_subject: per };
+            worker_loop(&sched, 0, &mut exec);
+        });
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let s = sched.stats();
+    assert_eq!(s.completed as usize, jobs, "every job completes under coalescing");
+    BatchRow {
+        max_b,
+        wall_s,
+        jobs_per_s: jobs as f64 / wall_s.max(1e-12),
+        batches: s.batches,
+        coalesced: s.coalesced,
+        mean_fill: if s.batches > 0 { s.coalesced as f64 / s.batches as f64 } else { 1.0 },
     }
 }
 
@@ -235,8 +317,15 @@ fn run_upload_encode_bench(n: usize, iters: usize) -> EncodeRow {
 }
 
 fn main() {
-    let jobs = 48usize;
-    let service = Duration::from_millis(4);
+    // Smoke mode (CLAIRE_BENCH_SMOKE=1): every sweep shrinks to a
+    // seconds-scale run so CI can exercise the full bench path — including
+    // the BENCH_service.json artifact — without bench-grade runtimes.
+    let smoke = std::env::var("CLAIRE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if smoke {
+        println!("[smoke mode: CLAIRE_BENCH_SMOKE=1 — reduced sweep sizes]\n");
+    }
+    let jobs = if smoke { 8usize } else { 48usize };
+    let service = Duration::from_millis(if smoke { 1 } else { 4 });
     println!("== serve scheduler: {jobs} synthetic 64^3 jobs, {service:?} service time ==\n");
 
     let mut table = Table::new(&["workers", "wall[s]", "jobs/s", "p50 lat[s]", "p95 lat[s]"]);
@@ -258,7 +347,40 @@ fn main() {
     println!("\n(expected: jobs/s scales ~linearly in workers until core count;");
     println!(" p95 latency drops as queue wait shrinks — cf. workload.rs M/D/c model)");
 
-    let store_vols = 32usize;
+    let batch_jobs = if smoke { 8usize } else { 32usize };
+    let batch_base = Duration::from_millis(if smoke { 1 } else { 2 });
+    let batch_per = Duration::from_millis(if smoke { 1 } else { 2 });
+    println!(
+        "\n== coalesced dispatch: {batch_jobs} compatible jobs, 1 worker, \
+         cost = {batch_base:?} + B x {batch_per:?} ==\n"
+    );
+    let mut bt = Table::new(&[
+        "max B", "wall[s]", "jobs/s", "batches", "coalesced", "mean fill", "speedup",
+    ]);
+    let mut batch_rows: Vec<BatchRow> = Vec::new();
+    for max_b in [1usize, 4, 8] {
+        run_batched_once(batch_jobs / 4, max_b, batch_base, batch_per); // warmup
+        let row = run_batched_once(batch_jobs, max_b, batch_base, batch_per);
+        batch_rows.push(row);
+    }
+    let seq_jps = batch_rows[0].jobs_per_s;
+    for r in &batch_rows {
+        bt.row(&[
+            r.max_b.to_string(),
+            format!("{:.3}", r.wall_s),
+            format!("{:.1}", r.jobs_per_s),
+            r.batches.to_string(),
+            r.coalesced.to_string(),
+            format!("{:.1}", r.mean_fill),
+            format!("{:.2}x", r.jobs_per_s / seq_jps.max(1e-12)),
+        ]);
+    }
+    bt.print();
+    println!("\n(max B = 1 is the sequential baseline; coalescing amortizes the");
+    println!(" per-dispatch base cost across the batch, the way one warm __bB");
+    println!(" executable evaluates B subjects per operator call)");
+
+    let store_vols = if smoke { 8usize } else { 32usize };
     let store_n = 64usize;
     println!("\n== volume store: {store_vols} x {store_n}^3 volumes (1 MiB each) ==\n");
     // Warmup pass absorbs allocator effects, as above.
@@ -276,7 +398,7 @@ fn main() {
     println!(" dedup re-puts pay the same hash but skip the copy — upload");
     println!(" admission cost is hash-bound either way)");
 
-    let watch_jobs = 64usize;
+    let watch_jobs = if smoke { 8usize } else { 64usize };
     println!("\n== watch event bus: {watch_jobs} job lifecycles, 1 subscriber ==\n");
     run_watch_bench(watch_jobs / 4); // warmup
     let wr = run_watch_bench(watch_jobs);
@@ -292,8 +414,8 @@ fn main() {
     println!(" the bounded queue means a wedged subscriber lags out instead of");
     println!(" adding backpressure here)");
 
-    let enc_n = 64usize;
-    let enc_iters = 32usize;
+    let enc_n = if smoke { 32usize } else { 64usize };
+    let enc_iters = if smoke { 8usize } else { 32usize };
     println!("\n== upload-line encode: {enc_n}^3 volume (1 MiB), {enc_iters} iters ==\n");
     run_upload_encode_bench(enc_n, enc_iters / 4); // warmup
     let er = run_upload_encode_bench(enc_n, enc_iters);
@@ -328,6 +450,36 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "batched",
+            Json::object([
+                ("jobs", Json::num(batch_jobs as f64)),
+                ("base_ms", Json::num(batch_base.as_secs_f64() * 1e3)),
+                ("per_subject_ms", Json::num(batch_per.as_secs_f64() * 1e3)),
+                (
+                    "sweeps",
+                    Json::Arr(
+                        batch_rows
+                            .iter()
+                            .map(|r| {
+                                Json::object([
+                                    ("max_b", Json::num(r.max_b as f64)),
+                                    ("wall_s", Json::num(r.wall_s)),
+                                    ("jobs_per_s", Json::num(r.jobs_per_s)),
+                                    ("batches", Json::num(r.batches as f64)),
+                                    ("coalesced", Json::num(r.coalesced as f64)),
+                                    ("mean_fill", Json::num(r.mean_fill)),
+                                    (
+                                        "speedup_vs_sequential",
+                                        Json::num(r.jobs_per_s / seq_jps.max(1e-12)),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         ),
         (
             "store",

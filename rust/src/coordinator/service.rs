@@ -76,9 +76,21 @@ impl BatchReport {
     }
 
     /// Registrations per second over the batch (the clinical-throughput
-    /// number the paper's motivation is about).
+    /// number the paper's motivation is about). Guarded: a zero-duration
+    /// batch (empty, or a clock that did not advance) reports 0.0, never
+    /// `inf`/`NaN` — these numbers land in BENCH JSON and division by a
+    /// degenerate wall clock must not poison downstream parsing.
     pub fn throughput(&self) -> f64 {
-        self.succeeded() as f64 / self.wall_s.max(1e-12)
+        self.rps()
+    }
+
+    /// Successful registrations per second; 0.0 when `wall_s` is zero,
+    /// negative, or non-finite.
+    pub fn rps(&self) -> f64 {
+        if self.wall_s <= 0.0 || !self.wall_s.is_finite() {
+            return 0.0;
+        }
+        self.succeeded() as f64 / self.wall_s
     }
 
     /// Sum of per-job solve times (serial-equivalent work).
@@ -231,6 +243,25 @@ mod tests {
         assert_eq!(rep.failed(), 1);
         assert!((rep.throughput() - 1.5).abs() < 1e-12);
         assert!((rep.serial_time() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_wall_clock_reports_zero_rate_not_inf() {
+        let mut rep = BatchReport {
+            outcomes: vec![outcome(0, JobStatus::Done)],
+            wall_s: 0.0,
+            workers: 1,
+        };
+        assert_eq!(rep.rps(), 0.0);
+        assert_eq!(rep.throughput(), 0.0);
+        rep.wall_s = -1.0;
+        assert_eq!(rep.rps(), 0.0);
+        rep.wall_s = f64::NAN;
+        assert_eq!(rep.rps(), 0.0);
+        rep.wall_s = f64::INFINITY;
+        assert_eq!(rep.rps(), 0.0);
+        rep.wall_s = 0.5;
+        assert!((rep.rps() - 2.0).abs() < 1e-12, "sane clocks still divide");
     }
 
     /// Problems that need no artifacts (the worker will fail them, which is

@@ -84,6 +84,9 @@ fn common_specs() -> Vec<OptSpec> {
         ),
         opt("backend", "client: send via this address instead of --addr (router alias)", ""),
         opt("queue-cap", "serve: max waiting batch/urgent jobs", "64"),
+        opt("coalesce-b", "serve: max jobs coalesced into one batched solve (1 disables)", "8"),
+        opt("coalesce-ms", "serve: dwell for compatible peers before dispatch (ms)", "2"),
+        opt("dedup", "submit: exactly-once token (resubmits return the original id)", ""),
         opt("journal", "serve: job journal path ('' disables)", "serve_journal.ndjson"),
         opt("store-mb", "serve: volume store byte budget (MiB)", "1024"),
         opt("node-id", "serve/route: stable node identity reported to fleet probes", ""),
@@ -296,6 +299,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         journal: (!journal.is_empty()).then(|| PathBuf::from(journal)),
         store_bytes: args.get_usize("store-mb", 1024)? as u64 * 1024 * 1024,
         node_id: (!node_id.is_empty()).then_some(node_id),
+        coalesce_b: args.get_usize("coalesce-b", 8)?.max(1),
+        coalesce_ms: args.get_usize("coalesce-ms", 2)? as u64,
     };
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let handle = Daemon::start(cfg.clone(), pjrt_factory(artifacts))?;
@@ -586,6 +591,19 @@ fn cmd_status(args: &Args) -> Result<()> {
                 s.store.dedup_hits,
                 s.store.evictions
             );
+            // Batch-occupancy counters appear once coalescing has fired;
+            // a daemon that never batched keeps the pre-batching output.
+            if s.batches > 0 || s.coalesced > 0 {
+                let fill = if s.batches > 0 {
+                    s.coalesced as f64 / s.batches as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "batching: {} jobs coalesced into {} batches (mean fill {:.1})",
+                    s.coalesced, s.batches, fill
+                );
+            }
             // Per-node breakdown arrives only from a router (fleet-merged
             // stats); single daemons report an empty list.
             if !s.nodes.is_empty() {

@@ -279,6 +279,50 @@ impl<'a> Session<'a> {
         self.solve_cx(prob, &self.cx())
     }
 
+    /// Solve B problems as one batch, one result per subject. When the
+    /// configuration admits the batched Gauss-Newton path (single-grid GN,
+    /// no incompressible projection, no warm start, all subjects on one
+    /// grid, and `__b{B}` artifacts lowered for it), the subjects share a
+    /// single Newton loop over one warm batched executable with
+    /// per-subject convergence masking; otherwise each subject solves
+    /// sequentially with identical semantics. Per-subject `cxs` carry
+    /// independent observers and cancellation flags either way — a
+    /// cancelled subject's slot returns `Error::Cancelled` with its own
+    /// partial history while the rest of the batch keeps solving. A
+    /// whole-call `Err` means shared machinery failed and no subject has a
+    /// result.
+    pub fn solve_batch_cx(
+        &self,
+        probs: &[&RegProblem],
+        cxs: &[SolveCx],
+    ) -> Result<Vec<Result<SolveOutcome>>> {
+        assert_eq!(probs.len(), cxs.len(), "one SolveCx per subject");
+        if probs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.params.check()?;
+        let p = &self.params;
+        let n = probs[0].n();
+        let batched = probs.len() >= 2
+            && p.algorithm == AlgorithmKind::GaussNewton
+            && p.multires == 1
+            && !p.incompressible
+            && self.warm_start.is_none()
+            && probs.iter().all(|pr| pr.n() == n);
+        if batched {
+            if let Some(ext) = crate::registration::batch::plan_batch_extent(
+                &self.reg.manifest,
+                &p.variant,
+                n,
+                probs.len(),
+            ) {
+                let gn = GaussNewtonKrylov::new(self.reg, p.clone());
+                return gn.solve_batch_from_cx(probs, cxs, ext);
+            }
+        }
+        Ok(probs.iter().zip(cxs).map(|(prob, cx)| self.solve_cx(prob, cx)).collect())
+    }
+
     /// Run the solve under an externally-owned context (the serve worker
     /// passes the scheduler's cancellation/progress context here).
     pub fn solve_cx(&self, prob: &RegProblem, cx: &SolveCx) -> Result<SolveOutcome> {

@@ -1,0 +1,651 @@
+//! Batched multi-subject Gauss-Newton solves on one warm executable.
+//!
+//! The paper frames clinical deployment as embarrassingly parallel
+//! registrations; this module amortizes compile, dispatch, and transfer
+//! cost across B subjects by driving the `__b{B}` artifacts (one HLO,
+//! leading batch dim) through a single shared Newton loop:
+//!
+//! * **One dispatch per phase**: newton_setup / Hessian matvec / precond /
+//!   objective each execute once per batch iteration; per-subject tensors
+//!   are stacked into one literal (`operator::stacked_literal_for`).
+//! * **Per-subject convergence masking**: a subject that converges (or
+//!   stagnates, fails, or is cancelled) freezes its velocity slot and is
+//!   fed through subsequent dispatches as dead weight instead of stalling
+//!   the batch; its `IterRecord` history and observer events stop exactly
+//!   where a sequential solve would have stopped.
+//! * **Per-subject lifecycle**: the result is one `Result<RegResult>` per
+//!   subject — a cancelled slot returns `Error::Cancelled` with its own
+//!   partial history, everyone else keeps solving.
+//!
+//! The batched path covers the coalescing case the scheduler produces:
+//! single-grid Gauss-Newton, identical `RegParams`, identical n. Anything
+//! else (multires pyramids, first-order baselines, incompressible
+//! projection, warm starts, or an artifact set without `__b{B}` entries)
+//! falls back to per-subject sequential solves with identical semantics.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::field::{ops, VecField3};
+use crate::optim::line_search::ArmijoOptions;
+use crate::optim::pcg::PcgStop;
+use crate::optim::{continuation, Level};
+use crate::precision::Precision;
+use crate::registration::algorithm::SolveCx;
+use crate::registration::problem::RegProblem;
+use crate::registration::solver::{GaussNewtonKrylov, IterRecord, RegResult};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Operator;
+
+/// Smallest lowered batch extent that fits `b` subjects for the GN solver
+/// op set at grid size `n`, or `None` when the artifact set has no usable
+/// batched lowering (the caller then solves sequentially). The extent is
+/// planned on `newton_setup` and validated against `objective`, `precond`
+/// and `hess_matvec` — all four run on the batched hot loop. The Hessian
+/// matvec is checked at full precision: the mixed lowering is preferred at
+/// solve time but its absence only degrades precision, never batching.
+pub fn plan_batch_extent(manifest: &Manifest, variant: &str, n: usize, b: usize) -> Option<usize> {
+    manifest
+        .batches_for("newton_setup", n, Precision::Full)
+        .into_iter()
+        .find(|&ext| {
+            ext >= b
+                && ["objective", "precond", "hess_matvec"]
+                    .iter()
+                    .all(|op| manifest.find_b(op, variant, n, Precision::Full, ext).is_ok())
+        })
+}
+
+/// Copy `data` into slot `idx` of a stacked buffer of `slot_len`-sized
+/// subject slots.
+fn stack_into(buf: &mut [f32], slot_len: usize, idx: usize, data: &[f32]) {
+    buf[idx * slot_len..(idx + 1) * slot_len].copy_from_slice(data);
+}
+
+fn slot<'a>(buf: &'a [f32], slot_len: usize, idx: usize) -> &'a [f32] {
+    &buf[idx * slot_len..(idx + 1) * slot_len]
+}
+
+/// Per-subject solve state inside one batched loop.
+struct Slot {
+    v: Vec<f32>,
+    history: Vec<IterRecord>,
+    iters: usize,
+    matvecs: usize,
+    obj_evals: usize,
+    /// (J, mismatch_rel, grad_rel at target beta) of the latest setup.
+    final_state: (f64, f64, f64),
+    converged: bool,
+    msq0: f64,
+    g0_target: f64,
+    g0_level: Option<f64>,
+    /// Terminal per-subject outcome (cancelled / solver failure): the
+    /// velocity slot is frozen and the subject is masked out of every
+    /// later phase.
+    terminal: Option<Error>,
+    /// Finished the *current* continuation level (converged or stagnated);
+    /// reset when the next level starts.
+    level_done: bool,
+}
+
+impl Slot {
+    fn active(&self) -> bool {
+        self.terminal.is_none() && !self.level_done
+    }
+}
+
+/// State of one subject's PCG solve inside the shared Krylov loop.
+struct PcgSlot {
+    x: Vec<f32>,
+    r: Vec<f32>,
+    z: Vec<f32>,
+    p: Vec<f32>,
+    rz: f64,
+    rr: f64,
+    r0: f64,
+    rtol: f64,
+    iters: usize,
+    stop: PcgStop,
+    done: bool,
+}
+
+/// State of one subject's Armijo backtracking inside the shared trial loop.
+struct LsSlot {
+    alpha: f64,
+    j0: f64,
+    gdx: f64,
+    trials: usize,
+    accepted: Option<f64>,
+    stagnated: bool,
+}
+
+impl GaussNewtonKrylov<'_> {
+    /// Resolve the *batched* Hessian matvec at extent `ext`, preferring the
+    /// mixed lowering under the mixed policy with the same visible
+    /// full-precision fallback as the unbatched `hess_operator`.
+    fn hess_operator_b(&self, n: usize, ext: usize) -> Result<std::sync::Arc<Operator>> {
+        if self.params.precision == Precision::Mixed {
+            match self.reg.get_b("hess_matvec", &self.params.variant, n, Precision::Mixed, ext) {
+                Ok(op) => return Ok(op),
+                Err(Error::ArtifactNotFound { .. }) => {
+                    if self.params.verbose {
+                        println!(
+                            "[gn] no mixed hess_matvec artifact at n={n} b={ext}; \
+                             using full precision"
+                        );
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.reg.get_b("hess_matvec", &self.params.variant, n, Precision::Full, ext)
+    }
+
+    /// Solve B single-grid GN problems in one shared Newton loop over the
+    /// extent-`ext` batched artifacts (`ext >= probs.len()`; unused slots
+    /// are padded with subject 0 and never read). Returns one result per
+    /// subject; a whole-batch `Err` means the shared machinery itself
+    /// failed (artifact call error) and every member job should fail.
+    pub fn solve_batch_from_cx(
+        &self,
+        probs: &[&RegProblem],
+        cxs: &[SolveCx],
+        ext: usize,
+    ) -> Result<Vec<Result<RegResult>>> {
+        let b = probs.len();
+        assert!(b >= 1 && b <= ext, "batch {b} exceeds artifact extent {ext}");
+        assert_eq!(b, cxs.len(), "one SolveCx per subject");
+        let n = probs[0].n();
+        assert!(probs.iter().all(|p| p.n() == n), "coalesced subjects must share n");
+        let p = &self.params;
+        let m3 = 3 * n * n * n;
+        let m1s = n * n * n;
+
+        let setup = self.reg.get_b("newton_setup", &p.variant, n, Precision::Full, ext)?;
+        let hess = self.hess_operator_b(n, ext)?;
+        let obj = self.reg.get_b("objective", &p.variant, n, Precision::Full, ext)?;
+        let prec = self.reg.get_b("precond", &p.variant, n, Precision::Full, ext)?;
+        let matvec_precision = hess.art.precision;
+        let grad_precision = setup.art.precision;
+        let t0 = Instant::now();
+
+        // Stacked image buffers (built once; padding slots carry subject 0
+        // so the executable always sees well-formed data).
+        let mut m0s = vec![0f32; ext * m1s];
+        let mut m1sb = vec![0f32; ext * m1s];
+        for i in 0..ext {
+            let pr = probs[i.min(b - 1)];
+            stack_into(&mut m0s, m1s, i, &pr.m0.data);
+            stack_into(&mut m1sb, m1s, i, &pr.m1.data);
+        }
+
+        let levels: Vec<Level> = if p.continuation {
+            continuation::default_schedule(p.beta)
+        } else {
+            vec![Level { beta: p.beta, gtol_rel: p.gtol, max_iter: p.max_iter }]
+        };
+
+        let mut slots: Vec<Slot> = probs
+            .iter()
+            .map(|pr| Slot {
+                v: vec![0f32; m3],
+                history: Vec::new(),
+                iters: 0,
+                matvecs: 0,
+                obj_evals: 0,
+                final_state: (f64::NAN, f64::NAN, f64::NAN),
+                converged: false,
+                msq0: ops::sumsq_diff(&pr.m0.data, &pr.m1.data).max(1e-300),
+                g0_target: 1.0,
+                g0_level: None,
+                terminal: None,
+                level_done: false,
+            })
+            .collect();
+
+        // Shared scratch: stacked velocity/trial/krylov buffers.
+        let mut vstk = vec![0f32; ext * m3];
+        let mut trial = vec![0f32; ext * m3];
+        let zeros_b3 = vec![0f32; ext * m3];
+        let stack_v = |buf: &mut [f32], slots: &[Slot]| {
+            for (i, s) in slots.iter().enumerate() {
+                stack_into(buf, m3, i, &s.v);
+            }
+        };
+
+        // Cached literals: images never change, so the setup/objective
+        // calls only re-marshal the stacked velocity (and bg per level).
+        let bg0 = [p.beta as f32, p.gamma as f32];
+        let setup_lits = setup.literals(&[&zeros_b3, &m0s, &m1sb, &bg0])?;
+        let obj_lits = obj.literals(&[&zeros_b3, &m0s, &m1sb, &bg0])?;
+
+        // Reference gradient ||g0|| at v = 0 with the *target* beta, one
+        // batched call for all subjects; reused as iteration 0's setup when
+        // level 0 already runs at the target beta (same saving as the
+        // sequential solver).
+        stack_v(&mut vstk, &slots);
+        let mut setup0 = {
+            let outs = setup.call_mixed(&setup_lits, &[(0, &vstk)])?;
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.g0_target = ops::norm2(slot(&outs[0], m3, i)).max(1e-300);
+            }
+            let reusable = levels.first().is_some_and(|l| l.beta == p.beta);
+            reusable.then_some(outs)
+        };
+
+        let ls_opts = ArmijoOptions::default();
+        for (li, level) in levels.iter().enumerate() {
+            let is_final = li == levels.len() - 1;
+            let bg = [level.beta as f32, p.gamma as f32];
+            for s in slots.iter_mut() {
+                if s.terminal.is_none() {
+                    s.level_done = false;
+                    s.g0_level = None;
+                }
+            }
+
+            for it in 0..level.max_iter {
+                // Cooperative cancellation, one check per shared iteration
+                // boundary: a cancelled subject becomes a terminal slot
+                // (its own partial history), the batch keeps going. A
+                // subject that already finished the final level completed
+                // its solve — cancellation no longer applies to it, exactly
+                // as a sequential solve would have returned by now.
+                for (i, s) in slots.iter_mut().enumerate() {
+                    if s.terminal.is_none()
+                        && !(is_final && s.level_done)
+                        && cxs[i].cancelled()
+                    {
+                        s.terminal =
+                            Some(Error::Cancelled { history: std::mem::take(&mut s.history) });
+                    }
+                }
+                if !slots.iter().any(Slot::active) {
+                    break;
+                }
+
+                // -- Batched Newton setup: gradients + caches --------------
+                stack_v(&mut vstk, &slots);
+                let outs = match setup0.take() {
+                    Some(outs) if li == 0 && it == 0 => outs,
+                    _ => setup.call_mixed(&setup_lits, &[(0, &vstk), (3, &bg)])?,
+                };
+                if outs.len() != 6 {
+                    return Err(Error::Solver("newton_setup arity".into()));
+                }
+                let g_all = &outs[0];
+                let scal_all = &outs[5];
+                let scal_slot = scal_all.len() / ext;
+
+                let mut grels = vec![0f64; b];
+                let mut searching: Vec<usize> = Vec::with_capacity(b);
+                for (i, s) in slots.iter_mut().enumerate() {
+                    if !s.active() {
+                        continue;
+                    }
+                    let sc = slot(scal_all, scal_slot, i);
+                    let j = sc[0] as f64;
+                    let msq = sc[1] as f64;
+                    let mism = (msq / (probs[i].m0.h().powi(3) * s.msq0)).sqrt();
+                    let gnorm = ops::norm2(slot(g_all, m3, i));
+                    let g0 = *s.g0_level.get_or_insert(gnorm);
+                    let grel_target = gnorm / s.g0_target;
+                    let grel = if is_final { grel_target } else { gnorm / g0.max(1e-300) };
+                    s.final_state = (j, mism, grel_target);
+                    if p.verbose {
+                        println!(
+                            "[gn:b{ext}] s={i} beta={:.1e} it={it} J={j:.6e} \
+                             mism={mism:.4} |g|rel={grel:.3e}",
+                            level.beta
+                        );
+                    }
+                    if grel <= level.gtol_rel {
+                        if is_final {
+                            s.converged = true;
+                        }
+                        s.level_done = true;
+                        continue;
+                    }
+                    grels[i] = grel;
+                    searching.push(i);
+                }
+                if searching.is_empty() {
+                    break;
+                }
+
+                // -- Shared PCG on B Gauss-Newton systems ------------------
+                // Cache literals once per Newton iteration (the batched
+                // setup outputs are already stacked); every Krylov
+                // iteration is then one batched matvec + one batched
+                // preconditioner dispatch for all still-searching subjects.
+                let hess_lits =
+                    hess.literals(&[&zeros_b3, &outs[1], &outs[2], &outs[3], &outs[4], &bg])?;
+                let prec_lits = prec.literals(&[&zeros_b3, &bg])?;
+
+                let mut pcg: Vec<Option<PcgSlot>> = (0..b).map(|_| None).collect();
+                let mut rstk = vec![0f32; ext * m3];
+                for &i in &searching {
+                    let bvec: Vec<f32> = slot(g_all, m3, i).iter().map(|x| -x).collect();
+                    stack_into(&mut rstk, m3, i, &bvec);
+                    pcg[i] = Some(PcgSlot {
+                        x: vec![0f32; m3],
+                        r: bvec,
+                        z: Vec::new(),
+                        p: Vec::new(),
+                        rz: 0.0,
+                        rr: 0.0,
+                        r0: 0.0,
+                        rtol: grels[i].sqrt().min(0.5), // superlinear forcing
+                        iters: 0,
+                        stop: PcgStop::MaxIter,
+                        done: false,
+                    });
+                }
+                {
+                    let zouts = prec.call_mixed(&prec_lits, &[(0, &rstk)])?;
+                    for &i in &searching {
+                        let ps = pcg[i].as_mut().expect("searching slot");
+                        ps.r0 = ops::norm2(&ps.r).max(1e-300);
+                        ps.rr = ps.r0 * ps.r0;
+                        ps.z = slot(&zouts[0], m3, i).to_vec();
+                        ps.p = ps.z.clone();
+                        ps.rz = ops::dot(&ps.r, &ps.z);
+                    }
+                }
+                let mut pstk = vec![0f32; ext * m3];
+                for _k in 0..p.max_krylov {
+                    let live: Vec<usize> = searching
+                        .iter()
+                        .copied()
+                        .filter(|&i| pcg[i].as_ref().is_some_and(|ps| !ps.done))
+                        .collect();
+                    if live.is_empty() {
+                        break;
+                    }
+                    pstk.fill(0.0);
+                    for &i in &live {
+                        stack_into(&mut pstk, m3, i, &pcg[i].as_ref().unwrap().p);
+                    }
+                    let hp_all = hess.call_mixed(&hess_lits, &[(0, &pstk)])?;
+                    for &i in &live {
+                        let ps = pcg[i].as_mut().unwrap();
+                        slots[i].matvecs += 1;
+                        let hp = slot(&hp_all[0], m3, i);
+                        let php = ops::dot(&ps.p, hp);
+                        if php <= 0.0 {
+                            if ps.iters == 0 {
+                                ps.x.copy_from_slice(&ps.z);
+                            }
+                            ps.stop = PcgStop::NegativeCurvature;
+                            ps.done = true;
+                            continue;
+                        }
+                        let alpha = (ps.rz / php) as f32;
+                        ops::axpy(alpha, &ps.p, &mut ps.x);
+                        ps.rr = ops::axpy_dot_self(-alpha, hp, &mut ps.r);
+                        ps.iters += 1;
+                        if ps.rr.sqrt() <= ps.rtol * ps.r0 {
+                            ps.stop = PcgStop::Converged;
+                            ps.done = true;
+                        }
+                    }
+                    let live: Vec<usize> = live
+                        .into_iter()
+                        .filter(|&i| !pcg[i].as_ref().unwrap().done)
+                        .collect();
+                    if live.is_empty() {
+                        break;
+                    }
+                    rstk.fill(0.0);
+                    for &i in &live {
+                        stack_into(&mut rstk, m3, i, &pcg[i].as_ref().unwrap().r);
+                    }
+                    let zouts = prec.call_mixed(&prec_lits, &[(0, &rstk)])?;
+                    for &i in &live {
+                        let ps = pcg[i].as_mut().unwrap();
+                        ps.z = slot(&zouts[0], m3, i).to_vec();
+                        let rz_new = ops::dot(&ps.r, &ps.z);
+                        let beta = (rz_new / ps.rz) as f32;
+                        ps.rz = rz_new;
+                        ops::xpay(&ps.z, beta, &mut ps.p);
+                    }
+                }
+                if p.verbose {
+                    for &i in &searching {
+                        let ps = pcg[i].as_ref().unwrap();
+                        if ps.stop == PcgStop::NegativeCurvature {
+                            println!(
+                                "[gn:b{ext}] s={i} negative curvature after {} CG iters",
+                                ps.iters
+                            );
+                        }
+                    }
+                }
+
+                // -- Per-subject descent check -----------------------------
+                let mut dvs: Vec<Option<Vec<f32>>> = (0..b).map(|_| None).collect();
+                let mut ls: Vec<Option<LsSlot>> = (0..b).map(|_| None).collect();
+                for &i in &searching {
+                    let ps = pcg[i].as_mut().expect("searching slot");
+                    let dv = std::mem::take(&mut ps.x);
+                    let h3 = probs[i].m0.h().powi(3);
+                    let gdx = h3 * ops::dot(slot(g_all, m3, i), &dv);
+                    if gdx >= 0.0 {
+                        // A non-descent direction fails this subject only;
+                        // the rest of the batch keeps solving.
+                        slots[i].terminal = Some(Error::Solver(format!(
+                            "PCG returned a non-descent direction (<g,dv>={gdx:.3e})"
+                        )));
+                        continue;
+                    }
+                    ls[i] = Some(LsSlot {
+                        alpha: 1.0,
+                        j0: slots[i].final_state.0,
+                        gdx,
+                        trials: 0,
+                        accepted: None,
+                        stagnated: false,
+                    });
+                    dvs[i] = Some(dv);
+                }
+
+                // -- Shared Armijo backtracking ----------------------------
+                // Pure backtracking from alpha = 1 (GN's max_alpha = 1.0
+                // disables forward expansion), one batched objective call
+                // per trial round for every subject still searching.
+                loop {
+                    let round: Vec<usize> = searching
+                        .iter()
+                        .copied()
+                        .filter(|&i| {
+                            ls[i].as_ref().is_some_and(|l| l.accepted.is_none() && !l.stagnated)
+                        })
+                        .collect();
+                    if round.is_empty() {
+                        break;
+                    }
+                    stack_v(&mut trial, &slots);
+                    for &i in &round {
+                        let a = ls[i].as_ref().unwrap().alpha as f32;
+                        let dv = dvs[i].as_ref().unwrap();
+                        let dst = &mut trial[i * m3..(i + 1) * m3];
+                        for (t, (&vv, &dd)) in slots[i].v.iter().zip(dv).enumerate() {
+                            dst[t] = vv + a * dd;
+                        }
+                    }
+                    let outs = obj.call_mixed(&obj_lits, &[(0, &trial), (3, &bg)])?;
+                    let obj_slot = outs[0].len() / ext;
+                    for &i in &round {
+                        let l = ls[i].as_mut().unwrap();
+                        slots[i].obj_evals += 1;
+                        l.trials += 1;
+                        let j = slot(&outs[0], obj_slot, i)[0] as f64;
+                        if j.is_finite() && j <= l.j0 + ls_opts.c1 * l.alpha * l.gdx {
+                            l.accepted = Some(l.alpha);
+                        } else if l.trials >= ls_opts.max_trials {
+                            l.stagnated = true;
+                        } else {
+                            l.alpha *= ls_opts.shrink;
+                        }
+                    }
+                }
+
+                // -- Accept steps, record history, run stagnation guards ---
+                for &i in &searching {
+                    let Some(l) = ls[i].take() else { continue };
+                    let s = &mut slots[i];
+                    if l.stagnated {
+                        // No decrease at f32 resolution: end the level for
+                        // this subject (CLAIRE terminates the same way).
+                        if p.verbose {
+                            println!("[gn:b{ext}] s={i} line search stagnated; ending level");
+                        }
+                        if is_final {
+                            s.converged = grels[i] <= 2.0 * level.gtol_rel;
+                        }
+                        s.level_done = true;
+                        continue;
+                    }
+                    let alpha = l.accepted.expect("accepted or stagnated");
+                    let dv = dvs[i].take().expect("searching slot");
+                    ops::axpy(alpha as f32, &dv, &mut s.v);
+                    s.iters += 1;
+                    let (j, mism, _) = s.final_state;
+                    s.history.push(IterRecord {
+                        level_beta: level.beta,
+                        j,
+                        mismatch_rel: mism,
+                        grad_rel: grels[i],
+                        cg_iters: pcg[i].as_ref().map_or(0, |ps| ps.iters),
+                        alpha,
+                        grad_precision,
+                        matvec_precision,
+                    });
+                    cxs[i].notify(s.history.len() - 1, s.history.last().expect("just pushed"));
+                    if s.history.len() >= 2 {
+                        let prev = &s.history[s.history.len() - 2];
+                        if prev.level_beta == level.beta
+                            && (prev.j - j).abs() <= 1e-6 * j.abs().max(1e-12)
+                        {
+                            if is_final {
+                                s.converged = grels[i] <= 2.0 * level.gtol_rel;
+                            }
+                            s.level_done = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        let time_s = t0.elapsed().as_secs_f64();
+        let mut results = Vec::with_capacity(b);
+        for s in slots {
+            match s.terminal {
+                Some(e) => results.push(Err(e)),
+                None => {
+                    let (j, mismatch_rel, grad_rel) = s.final_state;
+                    results.push(Ok(RegResult {
+                        v: VecField3::from_vec(n, s.v)?,
+                        iters: s.iters,
+                        matvecs: s.matvecs,
+                        obj_evals: s.obj_evals,
+                        j,
+                        mismatch_rel,
+                        grad_rel,
+                        history: s.history,
+                        time_s,
+                        converged: s.converged,
+                        levels: 1,
+                    }));
+                }
+            }
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_manifest(entries: &[(&str, usize)]) -> Manifest {
+        // Build a manifest with the listed (op, batch) artifacts at n=16.
+        let mut arts = Vec::new();
+        for (op, bsz) in entries {
+            let key = if *bsz == 1 {
+                format!("{op}__opt-fd8-cubic__n16")
+            } else {
+                format!("{op}__opt-fd8-cubic__n16__b{bsz}")
+            };
+            let batch = if *bsz == 1 {
+                String::new()
+            } else {
+                format!("\"batch\": {bsz},")
+            };
+            arts.push(format!(
+                r#""{key}": {{
+                    "file": "{key}.hlo.txt",
+                    "op": "{op}", "variant": "opt-fd8-cubic", "n": 16, {batch}
+                    "inputs": [{{"name": "x", "shape": [3,16,16,16]}}],
+                    "outputs": [{{"shape": [3,16,16,16]}}]
+                }}"#
+            ));
+        }
+        let body = format!(r#"{{"nt": 4, "artifacts": {{{}}}}}"#, arts.join(","));
+        let dir = std::env::temp_dir()
+            .join(format!("claire_batchplan_{}_{}", entries.len(), std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn plan_picks_smallest_fitting_extent() {
+        let m = synthetic_manifest(&[
+            ("newton_setup", 1),
+            ("newton_setup", 4),
+            ("newton_setup", 8),
+            ("objective", 4),
+            ("objective", 8),
+            ("precond", 4),
+            ("precond", 8),
+            ("hess_matvec", 4),
+            ("hess_matvec", 8),
+        ]);
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 16, 2), Some(4));
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 16, 4), Some(4));
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 16, 5), Some(8));
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 16, 8), Some(8));
+        // More subjects than any lowered extent: no batched path.
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 16, 9), None);
+        // Wrong grid size: no batched path.
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 32, 2), None);
+    }
+
+    #[test]
+    fn plan_requires_the_full_op_set_at_one_extent() {
+        // b4 exists for newton_setup only; b8 has the full set. A 2-subject
+        // group must skip b4 (incomplete) and land on b8.
+        let m = synthetic_manifest(&[
+            ("newton_setup", 4),
+            ("newton_setup", 8),
+            ("objective", 8),
+            ("precond", 8),
+            ("hess_matvec", 8),
+        ]);
+        assert_eq!(plan_batch_extent(&m, "opt-fd8-cubic", 16, 2), Some(8));
+        // No batched artifacts at all: sequential fallback.
+        let m2 = synthetic_manifest(&[("newton_setup", 1)]);
+        assert_eq!(plan_batch_extent(&m2, "opt-fd8-cubic", 16, 2), None);
+    }
+
+    #[test]
+    fn stacking_helpers_roundtrip_slots() {
+        let mut buf = vec![0f32; 6];
+        stack_into(&mut buf, 2, 1, &[5.0, 6.0]);
+        stack_into(&mut buf, 2, 0, &[1.0, 2.0]);
+        assert_eq!(slot(&buf, 2, 0), &[1.0, 2.0]);
+        assert_eq!(slot(&buf, 2, 1), &[5.0, 6.0]);
+        assert_eq!(slot(&buf, 2, 2), &[0.0, 0.0]);
+    }
+}

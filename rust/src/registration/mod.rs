@@ -4,6 +4,7 @@
 
 pub mod algorithm;
 pub mod baseline;
+pub mod batch;
 pub mod intensity;
 pub mod metrics;
 pub mod problem;
@@ -14,6 +15,7 @@ pub use algorithm::{
     Algorithm, AlgorithmKind, IterEvent, Session, SolveCx, SolveObserver, SolveOutcome,
 };
 pub use baseline::{BaselineKind, BaselineResult, FirstOrderBaseline};
+pub use batch::plan_batch_extent;
 #[allow(deprecated)]
 pub use baseline::run_baseline;
 pub use problem::{RegParams, RegProblem};

@@ -46,6 +46,11 @@ pub const MAX_MULTIRES_LEVELS: usize = 6;
 /// runs the same budget.
 pub const FIRST_ORDER_DEFAULT_MAX_ITER: usize = 100;
 
+/// Cap on client-chosen dedup token length. Tokens are journaled verbatim
+/// and held in the daemon's admission map; the cap keeps a buggy client
+/// from growing both without bound.
+pub const MAX_DEDUP_LEN: usize = 128;
+
 /// Dispatch priority. Higher priorities jump the queue (they do not kill
 /// running solves): the paper's emergency clinical scan is served before
 /// queued batch research jobs.
@@ -125,6 +130,13 @@ pub struct JobRequest {
     pub continuation: Option<bool>,
     pub incompressible: Option<bool>,
     pub verbose: Option<bool>,
+    /// Exactly-once submission token. Wire field `"dedup"`: when set, the
+    /// daemon remembers `token -> job id` at admission, and a resubmission
+    /// carrying the same token returns the original id instead of creating
+    /// a duplicate job — so a client that lost the response to a transport
+    /// failure can retry safely. `submit_with_retry` fills one in
+    /// automatically when the caller left it unset.
+    pub dedup: Option<String>,
 }
 
 impl Default for JobRequest {
@@ -146,6 +158,7 @@ impl Default for JobRequest {
             continuation: None,
             incompressible: None,
             verbose: None,
+            dedup: None,
         }
     }
 }
@@ -205,6 +218,14 @@ impl JobRequest {
                 }
             }
         }
+        if let Some(tok) = &self.dedup {
+            if tok.is_empty() || tok.len() > MAX_DEDUP_LEN {
+                return bad(format!(
+                    "job field 'dedup' must be 1..={MAX_DEDUP_LEN} bytes, got {}",
+                    tok.len()
+                ));
+            }
+        }
         // Solver-knob ranges (multires depth, positive iteration caps,
         // finite positive weights) live in `RegParams::check`, run below —
         // one copy, shared with every direct `RegParams` consumer.
@@ -228,6 +249,45 @@ impl JobRequest {
         };
         p.check()?;
         Ok(p)
+    }
+
+    /// Batch-coalescing compatibility key: two requests with equal keys
+    /// evaluate through the same AOT executables under identical solver
+    /// policy, so the scheduler may fuse them into one batched solve. This
+    /// is deliberately the executable-selecting subset of the request —
+    /// grid size, kernel variant, precision policy, algorithm, and grid
+    /// continuation — and must stay in agreement with what
+    /// [`validate`](JobRequest::validate) feeds into `RegParams` (pinned by
+    /// the coalesce-key property test): requests coalesce iff they
+    /// materialize equal solver-relevant `RegParams`. Subject, source,
+    /// priority, dedup and verbose never split a batch; every explicitly
+    /// overridden solver knob joins the key with its value, so a job never
+    /// silently runs under a neighbor's tolerances.
+    pub fn coalesce_key(&self) -> String {
+        let mut key = format!(
+            "n{}/{}/{}/{}/mr{}",
+            self.n,
+            self.variant,
+            self.precision.as_str(),
+            self.algorithm.as_str(),
+            self.multires.unwrap_or(1)
+        );
+        // Explicit solver-knob overrides join the key verbatim: jobs only
+        // coalesce when they would solve under byte-identical RegParams.
+        for (tag, v) in [
+            ("mi", self.max_iter.map(|x| x.to_string())),
+            ("mk", self.max_krylov.map(|x| x.to_string())),
+            ("b", self.beta.map(|x| format!("{x:e}"))),
+            ("g", self.gamma.map(|x| format!("{x:e}"))),
+            ("t", self.gtol.map(|x| format!("{x:e}"))),
+            ("c", self.continuation.map(|x| x.to_string())),
+            ("ic", self.incompressible.map(|x| x.to_string())),
+        ] {
+            if let Some(v) = v {
+                key.push_str(&format!("/{tag}={v}"));
+            }
+        }
+        key
     }
 
     /// Wire encoding (the `"job"` object of `submit`). Optional knobs are
@@ -276,6 +336,9 @@ impl JobRequest {
         }
         if let Some(v) = self.verbose {
             pairs.push(("verbose", Json::Bool(v)));
+        }
+        if let Some(t) = &self.dedup {
+            pairs.push(("dedup", Json::str(t)));
         }
         Json::object(pairs)
     }
@@ -377,6 +440,7 @@ impl JobRequest {
             continuation: field(j, "continuation", Json::as_bool, "a boolean")?,
             incompressible: field(j, "incompressible", Json::as_bool, "a boolean")?,
             verbose: field(j, "verbose", Json::as_bool, "a boolean")?,
+            dedup: field(j, "dedup", Json::as_str, "a string")?.map(str::to_string),
         })
     }
 
@@ -468,6 +532,11 @@ impl JobRequest {
         if args.flag("verbose") {
             req.verbose = Some(true);
         }
+        if let Some(v) = args.get("dedup") {
+            if !v.is_empty() {
+                req.dedup = Some(v.to_string());
+            }
+        }
         Ok(req)
     }
 }
@@ -495,6 +564,7 @@ mod tests {
             opt("gamma", "", "1e-4"),
             opt("gtol", "", "5e-2"),
             opt("config", "", ""),
+            opt("dedup", "", ""),
             flag("no-continuation", ""),
             flag("incompressible", ""),
             flag("verbose", ""),
@@ -592,10 +662,56 @@ mod tests {
         // including the default algorithm.
         let line = JobRequest::default().to_json().render();
         for absent in
-            ["max_krylov", "gamma", "incompressible", "verbose", "multires", "algorithm"]
+            ["max_krylov", "gamma", "incompressible", "verbose", "multires", "algorithm", "dedup"]
         {
             assert!(!line.contains(absent), "{absent} leaked into {line}");
         }
+    }
+
+    #[test]
+    fn dedup_token_roundtrips_and_validates() {
+        let req = JobRequest { dedup: Some("client-42/attempt".into()), ..Default::default() };
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.dedup.as_deref(), Some("client-42/attempt"));
+        assert!(back.validate().is_ok());
+        // The CLI surface feeds the same field.
+        let cli_req = JobRequest::from_args(&cli(&["--dedup", "tok-1"])).unwrap();
+        assert_eq!(cli_req.dedup.as_deref(), Some("tok-1"));
+        // Typing enforced at decode, length at validate.
+        assert!(JobRequest::from_json(&Json::parse(r#"{"dedup":5}"#).unwrap()).is_err());
+        let long = JobRequest { dedup: Some("x".repeat(MAX_DEDUP_LEN + 1)), ..Default::default() };
+        assert!(long.validate().is_err());
+        let empty = JobRequest { dedup: Some(String::new()), ..Default::default() };
+        assert!(empty.validate().is_err());
+    }
+
+    #[test]
+    fn coalesce_key_tracks_executable_selecting_fields() {
+        let a = JobRequest { subject: "na02".into(), ..Default::default() };
+        let b = JobRequest {
+            subject: "na07".into(),
+            priority: Priority::Urgent,
+            dedup: Some("tok".into()),
+            ..Default::default()
+        };
+        // Subject, priority and dedup never split a batch...
+        assert_eq!(a.coalesce_key(), b.coalesce_key());
+        // ... but every executable- or policy-selecting field does.
+        for other in [
+            JobRequest { n: 32, ..Default::default() },
+            JobRequest { variant: "opt-fd8-linear".into(), ..Default::default() },
+            JobRequest { precision: Precision::Mixed, ..Default::default() },
+            JobRequest { algorithm: AlgorithmKind::GradientDescent, ..Default::default() },
+            JobRequest { multires: Some(3), ..Default::default() },
+            JobRequest { max_iter: Some(7), ..Default::default() },
+            JobRequest { beta: Some(1e-3), ..Default::default() },
+            JobRequest { continuation: Some(false), ..Default::default() },
+        ] {
+            assert_ne!(a.coalesce_key(), other.coalesce_key(), "{other:?}");
+        }
+        // multires absent and multires=1 select the same single-grid solve.
+        let mr1 = JobRequest { multires: Some(1), ..Default::default() };
+        assert_eq!(a.coalesce_key(), mr1.coalesce_key());
     }
 
     #[test]

@@ -75,6 +75,9 @@ pub struct Artifact {
     pub nt: usize,
     /// Precision the artifact was lowered at (missing field = full).
     pub precision: Precision,
+    /// Leading subject-batch extent (missing field = 1, i.e. the
+    /// historical unbatched lowering).
+    pub batch: usize,
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
 }
@@ -86,6 +89,23 @@ pub fn artifact_key(op: &str, variant: &str, n: usize, precision: Precision) -> 
     match precision {
         Precision::Full => format!("{op}__{variant}__n{n}"),
         Precision::Mixed => format!("{op}__{variant}__n{n}__mixed"),
+    }
+}
+
+/// Manifest key for (op, variant, n, precision, batch). Batch 1 is the
+/// unbatched key above; B >= 2 appends `__b{B}` after any `__mixed`.
+pub fn artifact_key_b(
+    op: &str,
+    variant: &str,
+    n: usize,
+    precision: Precision,
+    batch: usize,
+) -> String {
+    let base = artifact_key(op, variant, n, precision);
+    if batch <= 1 {
+        base
+    } else {
+        format!("{base}__b{batch}")
     }
 }
 
@@ -175,6 +195,7 @@ impl Manifest {
                     .ok_or_else(|| Error::Manifest(format!("{key}: missing n")))?,
                 nt: entry.get("nt").and_then(Json::as_usize).unwrap_or(nt),
                 precision,
+                batch: entry.get("batch").and_then(Json::as_usize).unwrap_or(1),
                 inputs: sigs_of(
                     entry.get("inputs").ok_or_else(|| Error::Manifest("missing inputs".into()))?,
                     true,
@@ -212,14 +233,59 @@ impl Manifest {
         if let Some(a) = self.artifacts.get(&key) {
             return Ok(a);
         }
+        // Fallback is batch-scoped too: a batched artifact must never
+        // satisfy an unbatched lookup (its shapes carry a leading B dim).
         self.artifacts
             .values()
-            .find(|a| a.op == op && a.n == n && a.precision == precision)
+            .find(|a| a.op == op && a.n == n && a.precision == precision && a.batch == 1)
             .ok_or_else(|| Error::ArtifactNotFound {
                 op: op.into(),
                 variant: format!("{variant}/{precision}"),
                 n,
             })
+    }
+
+    /// Find the artifact for (op, variant, n, precision, batch). Batch 1
+    /// delegates to `find_p`; B >= 2 resolves `__b{B}` keys with the same
+    /// any-variant fallback, scoped to the exact batch extent.
+    pub fn find_b(
+        &self,
+        op: &str,
+        variant: &str,
+        n: usize,
+        precision: Precision,
+        batch: usize,
+    ) -> Result<&Artifact> {
+        if batch <= 1 {
+            return self.find_p(op, variant, n, precision);
+        }
+        let key = artifact_key_b(op, variant, n, precision, batch);
+        if let Some(a) = self.artifacts.get(&key) {
+            return Ok(a);
+        }
+        self.artifacts
+            .values()
+            .find(|a| a.op == op && a.n == n && a.precision == precision && a.batch == batch)
+            .ok_or_else(|| Error::ArtifactNotFound {
+                op: op.into(),
+                variant: format!("{variant}/{precision}/b{batch}"),
+                n,
+            })
+    }
+
+    /// Batch extents (ascending, excluding 1) available for
+    /// (op, variant-or-fallback, n, precision). The batched solve path
+    /// picks the smallest extent that fits a coalesced group.
+    pub fn batches_for(&self, op: &str, n: usize, precision: Precision) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.op == op && a.n == n && a.precision == precision && a.batch > 1)
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
     }
 
     /// Whether an artifact exists for (op, variant, n, precision).
@@ -358,6 +424,64 @@ mod tests {
         // The off-key fallback path stays precision-scoped too.
         let fb = m2.find_p("hess_matvec", "ref-fft-cubic", 16, Precision::Mixed).unwrap();
         assert_eq!(fb.precision, Precision::Mixed);
+    }
+
+    #[test]
+    fn batched_artifacts_resolve_and_stay_scoped() {
+        // One unbatched and one __b4 entry for the same (op, n, precision):
+        // the fallback path must keep them apart in both directions.
+        let body = r#"{
+          "nt": 4,
+          "artifacts": {
+            "hess_matvec__opt-fd8-cubic__n16": {
+              "file": "hess_matvec__opt-fd8-cubic__n16.hlo.txt",
+              "op": "hess_matvec", "variant": "opt-fd8-cubic", "n": 16,
+              "inputs": [{"name": "vt", "shape": [3,16,16,16]}],
+              "outputs": [{"shape": [3,16,16,16]}]
+            },
+            "hess_matvec__opt-fd8-cubic__n16__b4": {
+              "file": "hess_matvec__opt-fd8-cubic__n16__b4.hlo.txt",
+              "op": "hess_matvec", "variant": "opt-fd8-cubic", "n": 16,
+              "batch": 4,
+              "inputs": [{"name": "vt", "shape": [4,3,16,16,16]}],
+              "outputs": [{"shape": [4,3,16,16,16]}]
+            },
+            "hess_matvec__opt-fd8-cubic__n16__b8": {
+              "file": "hess_matvec__opt-fd8-cubic__n16__b8.hlo.txt",
+              "op": "hess_matvec", "variant": "opt-fd8-cubic", "n": 16,
+              "batch": 8,
+              "inputs": [{"name": "vt", "shape": [8,3,16,16,16]}],
+              "outputs": [{"shape": [8,3,16,16,16]}]
+            }
+          }
+        }"#;
+        let m = load_synthetic("batched", body).unwrap();
+        // Missing batch field = 1.
+        assert_eq!(m.find("hess_matvec", "opt-fd8-cubic", 16).unwrap().batch, 1);
+        // Exact-key and off-variant-fallback lookups are batch-scoped.
+        let b4 = m.find_b("hess_matvec", "opt-fd8-cubic", 16, Precision::Full, 4).unwrap();
+        assert_eq!(b4.batch, 4);
+        assert_eq!(b4.inputs[0].shape, vec![4, 3, 16, 16, 16]);
+        let fb = m.find_b("hess_matvec", "ref-fft-cubic", 16, Precision::Full, 8).unwrap();
+        assert_eq!(fb.batch, 8);
+        // An unbatched fallback never lands on a batched artifact even if
+        // only batched entries would match the (op, n, precision) triple.
+        let unb = m.find_p("hess_matvec", "ref-fft-cubic", 16, Precision::Full).unwrap();
+        assert_eq!(unb.batch, 1);
+        // Unavailable extents error instead of degrading.
+        assert!(m.find_b("hess_matvec", "opt-fd8-cubic", 16, Precision::Full, 2).is_err());
+        assert!(m.find_b("hess_matvec", "opt-fd8-cubic", 16, Precision::Mixed, 4).is_err());
+        assert_eq!(m.batches_for("hess_matvec", 16, Precision::Full), vec![4, 8]);
+        assert!(m.batches_for("hess_matvec", 16, Precision::Mixed).is_empty());
+        // Key formatting: __b{B} appends after any __mixed.
+        assert_eq!(
+            artifact_key_b("hess_matvec", "v", 16, Precision::Mixed, 4),
+            "hess_matvec__v__n16__mixed__b4"
+        );
+        assert_eq!(
+            artifact_key_b("hess_matvec", "v", 16, Precision::Full, 1),
+            artifact_key("hess_matvec", "v", 16, Precision::Full)
+        );
     }
 
     #[test]

@@ -96,6 +96,35 @@ pub fn literal_for(sig: &TensorSig, data: &[f32]) -> Result<Literal> {
     })
 }
 
+/// Build a literal for a batched signature from B per-subject slices,
+/// concatenated along the leading batch dim. Every part must be the same
+/// length and together they must fill the signature exactly; each part is
+/// one subject's slot, so the batched solve path marshals B host buffers
+/// into one device literal without the caller pre-stacking.
+pub fn stacked_literal_for(sig: &TensorSig, parts: &[&[f32]]) -> Result<Literal> {
+    let expected = sig.elements();
+    if parts.is_empty() || expected % parts.len() != 0 {
+        return Err(Error::ShapeMismatch {
+            what: format!("stacked literal '{}' parts", sig.name),
+            expected: sig.shape.first().copied().unwrap_or(0),
+            got: parts.len(),
+        });
+    }
+    let slot = expected / parts.len();
+    let mut data = Vec::with_capacity(expected);
+    for part in parts {
+        if part.len() != slot {
+            return Err(Error::ShapeMismatch {
+                what: format!("stacked literal '{}' slot", sig.name),
+                expected: slot,
+                got: part.len(),
+            });
+        }
+        data.extend_from_slice(part);
+    }
+    literal_for(sig, &data)
+}
+
 impl Operator {
     /// Load + compile an artifact on the given client.
     pub fn compile(client: &PjRtClient, art: &Artifact) -> Result<Operator> {
@@ -223,6 +252,23 @@ mod tests {
             let err = literal_for(&sig(d), &data).unwrap_err();
             assert!(matches!(err, Error::ShapeMismatch { expected: 6, got: 5, .. }), "{d:?}");
         }
+    }
+
+    #[test]
+    fn stacked_literal_concatenates_subject_slots() {
+        // A (B=3, 2) batched signature built from 3 per-subject slices.
+        let bsig = TensorSig { name: "v".into(), shape: vec![3, 2], dtype: DType::F32 };
+        let (a, b, c) = ([1.0f32, 2.0], [3.0f32, 4.0], [5.0f32, 6.0]);
+        assert!(stacked_literal_for(&bsig, &[&a, &b, &c]).is_ok());
+        // Wrong part count and ragged parts are rejected.
+        assert!(stacked_literal_for(&bsig, &[&a, &b]).is_err());
+        assert!(stacked_literal_for(&bsig, &[]).is_err());
+        let short = [1.0f32];
+        assert!(stacked_literal_for(&bsig, &[&a, &b, &short]).is_err());
+        // Reduced dtypes convert at the boundary like literal_for.
+        let hsig = TensorSig { name: "m".into(), shape: vec![2, 3], dtype: DType::F16 };
+        let s0 = [0.5f32, 1.5, -2.0];
+        assert!(stacked_literal_for(&hsig, &[&s0, &s0]).is_ok());
     }
 
     #[test]

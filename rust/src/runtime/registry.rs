@@ -77,6 +77,31 @@ impl OpRegistry {
         Ok(compiled)
     }
 
+    /// Get (compiling on first use) the batched operator for
+    /// (op, variant, n, precision, batch). Batch 1 is `get_p`; B >= 2
+    /// resolves `__b{B}` artifacts. Every batch extent caches under its
+    /// own artifact key, so a daemon serving mixed batch sizes keeps each
+    /// executable warm independently.
+    pub fn get_b(
+        &self,
+        op: &str,
+        variant: &str,
+        n: usize,
+        precision: Precision,
+        batch: usize,
+    ) -> Result<Arc<Operator>> {
+        let art = self.manifest.find_b(op, variant, n, precision, batch)?.clone();
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(o) = cache.get(&art.key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(o.clone());
+        }
+        let compiled = Arc::new(Operator::compile(&self.client, &art)?);
+        cache.insert(art.key.clone(), compiled.clone());
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        Ok(compiled)
+    }
+
     /// Number of compiled operators currently cached.
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()

@@ -330,8 +330,31 @@ impl Client {
 
     /// [`submit`](Client::submit) under a retry policy: a `queue_full`
     /// rejection backs off and resubmits instead of surfacing.
+    ///
+    /// When the caller did not pick a `dedup` token, one is generated here
+    /// and held fixed across every attempt, so a resubmit that races a
+    /// response lost in transit returns the originally admitted job id
+    /// instead of enqueueing the work twice.
     pub fn submit_with_retry(&mut self, spec: &JobSpec, policy: &RetryPolicy) -> Result<JobId> {
-        self.call_with_retry(policy, |c| c.submit(spec))
+        let spec = if spec.dedup.is_none() {
+            let mut s = spec.clone();
+            s.dedup = Some(self.generated_dedup_token());
+            std::borrow::Cow::Owned(s)
+        } else {
+            std::borrow::Cow::Borrowed(spec)
+        };
+        self.call_with_retry(policy, |c| c.submit(&spec))
+    }
+
+    /// A token unique enough for exactly-once admission: wall-clock nanos
+    /// mixed with this session's request counter (two clients started the
+    /// same nanosecond still differ once either has spoken).
+    fn generated_dedup_token(&self) -> String {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        format!("auto-{:016x}-{}", nanos ^ self.seq.wrapping_mul(0x9E37_79B9_7F4A_7C15), self.seq)
     }
 
     /// [`upload`](Client::upload) under a retry policy.

@@ -65,6 +65,15 @@ pub struct DaemonConfig {
     /// fine standalone, but fleet deployments should pin it so the router
     /// recognizes a node across restarts.
     pub node_id: Option<String>,
+    /// Maximum subjects coalesced into one batched dispatch; 1 (the
+    /// library default) disables coalescing entirely — every job runs
+    /// alone, the pre-batching behavior. The `claire serve` CLI opts in
+    /// with 8 unless `--coalesce-b` says otherwise.
+    pub coalesce_b: usize,
+    /// How long a worker dwells after popping a batch-priority job,
+    /// waiting for compatible peers to coalesce with, before dispatching
+    /// whatever it has. Any urgent arrival interrupts the dwell.
+    pub coalesce_ms: u64,
 }
 
 impl Default for DaemonConfig {
@@ -76,6 +85,8 @@ impl Default for DaemonConfig {
             journal: None,
             store_bytes: 1 << 30, // 1 GiB: sixteen 256^3 volumes
             node_id: None,
+            coalesce_b: 1,
+            coalesce_ms: 2,
         }
     }
 }
@@ -183,6 +194,7 @@ impl Daemon {
     /// Bind, replay the journal, spawn workers and the accept loop.
     pub fn start(cfg: DaemonConfig, factory: ExecutorFactory) -> Result<DaemonHandle> {
         let scheduler = Scheduler::new(cfg.queue_cap, cfg.workers);
+        scheduler.set_coalesce(cfg.coalesce_b, cfg.coalesce_ms);
         let store = Arc::new(VolumeStore::new(cfg.store_bytes));
 
         if let Some(path) = &cfg.journal {
@@ -191,6 +203,16 @@ impl Daemon {
             // Seed the id counter past prior incarnations so this run's
             // journal lines never collide with replayed ones on `id`.
             scheduler.seed_next_id(Journal::max_id(&prior) + 1);
+            // Reseed exactly-once admission from prior incarnations: a
+            // client retrying a submit across a daemon restart still gets
+            // the original id back instead of a duplicate solve.
+            for e in &prior {
+                if e.event == "submitted" {
+                    if let Some(tok) = &e.dedup {
+                        scheduler.seed_dedup(tok, e.id);
+                    }
+                }
+            }
             let journal = Arc::new(Journal::open(path)?);
             scheduler.set_event_sink(Box::new(move |ev| {
                 // Journal IO failure must not take down the scheduler; the
@@ -529,7 +551,8 @@ fn admit(
 ) -> Result<crate::serve::scheduler::JobId> {
     spec.validate()?;
     let priority = spec.priority;
-    resolve_submit(spec, store).and_then(|p| sched.submit(priority, p))
+    let dedup = spec.dedup.clone();
+    resolve_submit(spec, store).and_then(|p| sched.submit_dedup(priority, p, dedup))
 }
 
 /// Run one decoded request against the scheduler + store. Returns the

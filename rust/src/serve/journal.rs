@@ -24,6 +24,10 @@ pub struct JournalEntry {
     pub id: u64,
     pub name: String,
     pub unix_s: f64,
+    /// Exactly-once token of a `submitted` line, when the client supplied
+    /// one. Replay reseeds the scheduler's admission map from these so a
+    /// retry across a daemon restart still deduplicates.
+    pub dedup: Option<String>,
 }
 
 /// Append-only NDJSON journal.
@@ -64,13 +68,21 @@ impl Journal {
     pub fn append(&self, ev: &JobEvent) -> Result<()> {
         let j = match ev {
             JobEvent::Started { .. } | JobEvent::Progress { .. } => return Ok(()),
-            JobEvent::Submitted { id, name, priority } => Json::object([
-                ("event", Json::str("submitted")),
-                ("id", Json::num(*id as f64)),
-                ("name", Json::str(name)),
-                ("priority", Json::str(priority.as_str())),
-                ("unix_s", Json::num(now_unix())),
-            ]),
+            JobEvent::Submitted { id, name, priority, dedup } => {
+                let mut pairs = vec![
+                    ("event", Json::str("submitted")),
+                    ("id", Json::num(*id as f64)),
+                    ("name", Json::str(name)),
+                    ("priority", Json::str(priority.as_str())),
+                ];
+                // Emitted only when present, keeping token-less lines
+                // byte-identical to pre-dedup incarnations.
+                if let Some(tok) = dedup {
+                    pairs.push(("dedup", Json::str(tok)));
+                }
+                pairs.push(("unix_s", Json::num(now_unix())));
+                Json::object(pairs)
+            }
             JobEvent::Finished { id, name, state, wall_s, .. } => Json::object([
                 (
                     "event",
@@ -127,6 +139,7 @@ impl Journal {
                 id: id as u64,
                 name: name.to_string(),
                 unix_s: j.get("unix_s").and_then(Json::as_f64).unwrap_or(0.0),
+                dedup: j.get("dedup").and_then(Json::as_str).map(str::to_string),
             });
         }
         Ok(out)
@@ -168,6 +181,7 @@ mod tests {
                 id: 1,
                 name: "na02 \"quoted\"\\n".into(),
                 priority: Priority::Emergency,
+                dedup: None,
             })
             .unwrap();
         journal
@@ -198,6 +212,35 @@ mod tests {
         assert_eq!(entries[3].event, "failed");
         assert_eq!(Journal::completed_count(&entries), 1);
         assert_eq!(Journal::max_id(&entries), 3, "id seeding looks past all events");
+        assert_eq!(entries[0].dedup, None, "token-less lines replay without a token");
+    }
+
+    #[test]
+    fn dedup_tokens_roundtrip_through_the_journal() {
+        let p = tmp("dedup.ndjson");
+        let journal = Journal::open(&p).unwrap();
+        journal
+            .append(&JobEvent::Submitted {
+                id: 9,
+                name: "na02".into(),
+                priority: Priority::Batch,
+                dedup: Some("client-1/try".into()),
+            })
+            .unwrap();
+        journal
+            .append(&JobEvent::Submitted {
+                id: 10,
+                name: "na03".into(),
+                priority: Priority::Batch,
+                dedup: None,
+            })
+            .unwrap();
+        let entries = Journal::replay(&p).unwrap();
+        assert_eq!(entries[0].dedup.as_deref(), Some("client-1/try"));
+        assert_eq!(entries[1].dedup, None);
+        // Token-less lines stay byte-identical to pre-dedup incarnations.
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(!text.lines().nth(1).unwrap().contains("dedup"));
     }
 
     #[test]

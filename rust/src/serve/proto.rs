@@ -633,6 +633,15 @@ fn stats_to_json(s: &ServeStats) -> Json {
             m.insert("nodes".into(), Json::Arr(s.nodes.iter().map(node_stats_to_json).collect()));
         }
     }
+    // Batch-occupancy counters only when coalescing ever fired, keeping a
+    // never-coalescing daemon's stats byte-identical to the pre-batching
+    // wire.
+    if s.batches > 0 || s.coalesced > 0 {
+        if let Json::Obj(m) = &mut j {
+            m.insert("batches".into(), Json::num(s.batches as f64));
+            m.insert("coalesced".into(), Json::num(s.coalesced as f64));
+        }
+    }
     j
 }
 
@@ -682,6 +691,10 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
         cache_hits: g("cache_hits")?,
         store,
         nodes,
+        // Absent batch counters = a daemon that never coalesced (or
+        // predates coalescing) — zeros, not an error.
+        batches: j.get("batches").and_then(Json::as_usize).unwrap_or(0) as u64,
+        coalesced: j.get("coalesced").and_then(Json::as_usize).unwrap_or(0) as u64,
     })
 }
 
@@ -1251,11 +1264,25 @@ mod tests {
                 evictions: 1,
             },
             nodes: Vec::new(),
+            batches: 0,
+            coalesced: 0,
         };
         // No per-node breakdown: the wire bytes must not mention "nodes"
-        // at all (single-daemon stats stay pre-router byte-identical).
+        // at all (single-daemon stats stay pre-router byte-identical);
+        // likewise a never-coalescing daemon's bytes never mention the
+        // batch-occupancy counters.
         let line = Response::Stats(s.clone()).to_line();
         assert!(!line.contains("nodes"), "{line}");
+        assert!(!line.contains("batches") && !line.contains("coalesced"), "{line}");
+        // Non-zero batch counters roundtrip.
+        let busy = ServeStats { batches: 3, coalesced: 11, ..s.clone() };
+        match Response::parse(&Response::Stats(busy.clone()).to_line()).unwrap() {
+            Response::Stats(got) => {
+                assert_eq!(got.batches, 3);
+                assert_eq!(got.coalesced, 11);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
         match Response::parse(&line).unwrap() {
             Response::Stats(got) => {
                 assert_eq!(got.cache_hits, 18);

@@ -195,6 +195,8 @@ pub(crate) fn handle_stats(fleet: &Fleet) -> ServeStats {
                 total.store.uploads += s.store.uploads;
                 total.store.dedup_hits += s.store.dedup_hits;
                 total.store.evictions += s.store.evictions;
+                total.batches += s.batches;
+                total.coalesced += s.coalesced;
                 nodes.push(NodeStats {
                     node,
                     addr,

@@ -1,26 +1,42 @@
-//! Job scheduler: priority queue, admission control, lifecycle tracking.
+//! Job scheduler: priority queue, admission control, lifecycle tracking,
+//! and batch coalescing.
 //!
 //! This is the daemon's execution backend and — since the serve refactor —
 //! also the engine under `coordinator::BatchService`. Workers block on
-//! `next_job`; jobs are dispatched highest-priority-first (FIFO within a
+//! `next_batch`; jobs are dispatched highest-priority-first (FIFO within a
 //! priority band), so an emergency clinical scan submitted after a pile of
 //! batch research jobs is served next without killing running solves. A
 //! bounded queue provides backpressure: batch/urgent submissions are
 //! rejected once `queue_cap` jobs are waiting, emergency submissions are
 //! always admitted.
 //!
+//! Coalescing: when enabled (`set_coalesce`), a worker that dequeues a
+//! `Priority::Batch` job also claims up to `max_b - 1` queued batch jobs
+//! with the same [`JobRequest::coalesce_key`] — same grid size, variant,
+//! precision, algorithm and solver knobs — dwelling up to a bounded window
+//! for more arrivals, and hands the whole set to `Executor::execute_batch`
+//! so compatible subjects solve through one warm batched executable.
+//! Every member keeps its own lifecycle: per-job `started`/`done`/
+//! `failed`/`cancelled` events, progress streams, and cancel flags (a
+//! cancelled member is masked out of the batch, not the whole batch
+//! killed). Urgent/emergency jobs never coalesce.
+//!
+//! Exactly-once submission: `submit_dedup` checks a client-supplied token
+//! against a bounded admission map, so a resubmit after a lost response
+//! returns the original job id instead of double-running the solve.
+//!
 //! The `Executor` trait decouples scheduling from PJRT so the scheduler's
 //! invariants (and the daemon's wire protocol) are testable without
 //! compiled artifacts; `PjrtExecutor` is the production implementation with
 //! the per-worker shared-warm operator cache keyed by
-//! `(op, variant, n, precision)`.
+//! `(op, variant, n, precision)` (and `(.., batch)` for batched solves).
 
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
@@ -88,6 +104,18 @@ impl JobPayload {
         match self {
             JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => s.name(),
             JobPayload::Problem { problem, .. } => problem.name.clone(),
+        }
+    }
+
+    /// Batch-coalescing compatibility key, when this payload can coalesce
+    /// at all. Spec/volume payloads delegate to
+    /// [`JobRequest::coalesce_key`](crate::request::JobRequest::coalesce_key);
+    /// pre-built `Problem` payloads never coalesce (their params arrived
+    /// outside the request surface, so key agreement cannot be checked).
+    pub fn coalesce_key(&self) -> Option<String> {
+        match self {
+            JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => Some(s.coalesce_key()),
+            JobPayload::Problem { .. } => None,
         }
     }
 }
@@ -189,6 +217,13 @@ pub struct ServeStats {
     /// single daemon always reports an empty list, keeping its wire
     /// encoding byte-identical to the pre-router protocol).
     pub nodes: Vec<NodeStats>,
+    /// Coalesced dispatches (batches of B >= 2 handed to one executor
+    /// call). Zero when coalescing is disabled or never fired, keeping the
+    /// wire encoding byte-identical to the pre-batching protocol.
+    pub batches: u64,
+    /// Member jobs across all coalesced dispatches; mean batch fill is
+    /// `coalesced / batches`.
+    pub coalesced: u64,
 }
 
 struct JobRecord {
@@ -248,6 +283,9 @@ struct Counters {
     cancelled: u64,
     rejected: u64,
     prior_completed: u64,
+    /// Coalesced dispatches (B >= 2) and their total member count.
+    batches: u64,
+    coalesced: u64,
 }
 
 struct State {
@@ -269,6 +307,10 @@ struct State {
     /// Per-worker cumulative (compiles, hits) from each worker's operator
     /// cache; summed in `stats`.
     worker_cache: BTreeMap<usize, (u64, u64)>,
+    /// Exactly-once admission map: client dedup token -> admitted job id.
+    /// Bounded by `dedup_order` (insertion order, capped at `retention`).
+    dedup: BTreeMap<String, JobId>,
+    dedup_order: VecDeque<String>,
 }
 
 impl State {
@@ -298,6 +340,12 @@ struct Inner {
     /// Max terminal job records kept for status queries.
     retention: usize,
     workers: usize,
+    /// Coalescing config: max batch extent (< 2 disables) and how long a
+    /// worker dwells for more compatible arrivals before dispatching a
+    /// partial batch. Atomics so the daemon can configure after workers
+    /// exist and tests can flip it without a builder.
+    coalesce_b: AtomicUsize,
+    coalesce_ms: AtomicU64,
 }
 
 /// Lifecycle event, surfaced to the optional sink (the daemon journals
@@ -305,7 +353,9 @@ struct Inner {
 /// broadcast to `watch` subscribers via the event bus.
 #[derive(Clone, Debug)]
 pub enum JobEvent {
-    Submitted { id: JobId, name: String, priority: Priority },
+    /// Admission. `dedup` carries the client's exactly-once token when one
+    /// was supplied, so the journal can reseed the admission map on replay.
+    Submitted { id: JobId, name: String, priority: Priority, dedup: Option<String> },
     /// A worker picked the job up (`queued → running`). Broadcast to
     /// watch subscribers; the journal skips it (transient state).
     Started { id: JobId, name: String },
@@ -484,11 +534,15 @@ impl Scheduler {
                     shutdown: ShutdownMode::Open,
                     counters: Counters::default(),
                     worker_cache: BTreeMap::new(),
+                    dedup: BTreeMap::new(),
+                    dedup_order: VecDeque::new(),
                 }),
                 cv: Condvar::new(),
                 queue_cap: queue_cap.max(1),
                 retention: (queue_cap.max(1) * 4).max(1024),
                 workers: workers.max(1),
+                coalesce_b: AtomicUsize::new(1),
+                coalesce_ms: AtomicU64::new(0),
             }),
             events: Arc::new(Mutex::new(VecDeque::new())),
             sink: Arc::new(Mutex::new(None)),
@@ -633,6 +687,21 @@ impl Scheduler {
     /// Admit a job, or reject it (queue full / shutting down). Emergency
     /// jobs bypass the queue bound: the clinic never gets a busy signal.
     pub fn submit(&self, priority: Priority, payload: JobPayload) -> Result<JobId> {
+        self.submit_dedup(priority, payload, None)
+    }
+
+    /// `submit` with an optional exactly-once token. A token already in
+    /// the admission map short-circuits to the original job id — no new
+    /// job, no new events — so a client resubmitting after a transport
+    /// failure cannot double-run a solve. The token is checked before the
+    /// queue bound: a retry of an admitted job must succeed even when the
+    /// queue has since filled.
+    pub fn submit_dedup(
+        &self,
+        priority: Priority,
+        payload: JobPayload,
+        dedup: Option<String>,
+    ) -> Result<JobId> {
         let name = payload.name();
         let id;
         {
@@ -642,6 +711,11 @@ impl Scheduler {
                     ErrorCode::ShuttingDown,
                     "daemon is shutting down",
                 ));
+            }
+            if let Some(tok) = &dedup {
+                if let Some(&prior) = st.dedup.get(tok) {
+                    return Ok(prior);
+                }
             }
             if priority < Priority::Emergency && st.waiting_normal >= self.inner.queue_cap {
                 st.counters.rejected += 1;
@@ -681,14 +755,36 @@ impl Scheduler {
                 st.waiting_normal += 1;
             }
             st.counters.submitted += 1;
+            if let Some(tok) = &dedup {
+                note_dedup(&mut st, tok, id, self.inner.retention);
+            }
             // Sequence under the state lock: the journal must see
             // Submitted before any worker can sequence this job's
             // Finished.
-            self.emit_locked(JobEvent::Submitted { id, name, priority });
+            self.emit_locked(JobEvent::Submitted { id, name, priority, dedup });
         }
         self.inner.cv.notify_one();
         self.flush_events();
         Ok(id)
+    }
+
+    /// Reseed the exactly-once admission map from a replayed journal, so a
+    /// client retrying across a daemon restart still gets its original id
+    /// back instead of a duplicate job. Never overwrites a live entry.
+    pub fn seed_dedup(&self, token: &str, id: JobId) {
+        let mut st = self.inner.st.lock().unwrap();
+        if !st.dedup.contains_key(token) {
+            note_dedup(&mut st, token, id, self.inner.retention);
+        }
+    }
+
+    /// Configure batch coalescing: `max_b < 2` disables it (every dispatch
+    /// is a singleton, exactly the pre-batching behavior); `window_ms`
+    /// bounds how long a worker holding a partial batch dwells for more
+    /// compatible arrivals. Takes effect on the next dispatch.
+    pub fn set_coalesce(&self, max_b: usize, window_ms: u64) {
+        self.inner.coalesce_b.store(max_b.max(1), AtomicOrdering::SeqCst);
+        self.inner.coalesce_ms.store(window_ms, AtomicOrdering::SeqCst);
     }
 
     /// Blocking highest-priority pop. Returns `None` when the scheduler is
@@ -736,6 +832,88 @@ impl Scheduler {
             self.flush_events();
         }
         dispatched
+    }
+
+    /// Blocking dispatch of one *batch*: the highest-priority job plus —
+    /// when coalescing is enabled and the leader is a `Priority::Batch`
+    /// job with a coalesce key — up to `max_b - 1` queued batch jobs with
+    /// the same key, claimed now or within the dwell window. Every member
+    /// is transitioned `queued -> running` individually (own `started`
+    /// event, own dispatch_seq), so downstream lifecycle handling is
+    /// per-job exactly as if each had been dispatched alone. Returns
+    /// `None` like [`next_job`](Scheduler::next_job) on shutdown.
+    ///
+    /// Urgent/emergency leaders never coalesce and never dwell; a
+    /// draining scheduler claims compatible queued work but skips the
+    /// dwell (nothing new is coming).
+    pub fn next_batch(&self, worker: usize) -> Option<Vec<(JobId, JobPayload)>> {
+        let (lead_id, lead_payload) = self.next_job(worker)?;
+        let max_b = self.inner.coalesce_b.load(AtomicOrdering::SeqCst);
+        let window_ms = self.inner.coalesce_ms.load(AtomicOrdering::SeqCst);
+        let lead_batch = {
+            let st = self.inner.st.lock().unwrap();
+            st.jobs.get(&lead_id).map(|r| r.priority) == Some(Priority::Batch)
+        };
+        let key = match lead_payload.coalesce_key() {
+            Some(k) if max_b >= 2 && lead_batch => k,
+            _ => return Some(vec![(lead_id, lead_payload)]),
+        };
+        let mut members = vec![(lead_id, lead_payload)];
+        let deadline = Instant::now() + Duration::from_millis(window_ms);
+        let mut st = self.inner.st.lock().unwrap();
+        loop {
+            // Claim every queued batch job matching the leader's key,
+            // setting aside (and re-pushing) everything else. The leader
+            // was the highest-priority job when popped, so anything set
+            // aside here is either stale or arrived during the dwell.
+            let mut aside = Vec::new();
+            while members.len() < max_b {
+                let Some(entry) = st.queue.pop() else { break };
+                let Some(rec) = st.jobs.get_mut(&entry.id) else { continue };
+                if rec.state != JobState::Queued {
+                    continue;
+                }
+                let matches = entry.priority == Priority::Batch
+                    && rec.payload.as_ref().and_then(|p| p.coalesce_key()).as_deref()
+                        == Some(key.as_str());
+                if !matches {
+                    aside.push(entry);
+                    continue;
+                }
+                rec.state = JobState::Running;
+                rec.dispatch_seq = Some(st.next_dispatch);
+                let payload = rec.payload.take().expect("queued job still holds its payload");
+                let name = rec.name.clone();
+                st.note_dequeued(entry.priority);
+                st.next_dispatch += 1;
+                st.running += 1;
+                self.emit_locked(JobEvent::Started { id: entry.id, name });
+                members.push((entry.id, payload));
+            }
+            let interrupt = !aside.is_empty();
+            for e in aside {
+                st.queue.push(e);
+            }
+            if members.len() >= max_b || st.shutdown != ShutdownMode::Open || interrupt {
+                // Full, draining, or other-priority work arrived — a
+                // dwelling batch must never delay an urgent scan, so any
+                // set-aside traffic dispatches what we have.
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        if members.len() >= 2 {
+            st.counters.batches += 1;
+            st.counters.coalesced += members.len() as u64;
+        }
+        drop(st);
+        self.flush_events();
+        Some(members)
     }
 
     /// Record a finished job. `wall_s` is the worker-side solve time. A
@@ -922,6 +1100,8 @@ impl Scheduler {
             cache_hits: hits,
             store: StoreStats::default(),
             nodes: Vec::new(),
+            batches: st.counters.batches,
+            coalesced: st.counters.coalesced,
         }
     }
 
@@ -961,6 +1141,18 @@ impl SolveObserver for ProgressSink {
     }
 }
 
+/// Insert one token into the bounded admission map (oldest-first eviction
+/// at the scheduler's retention bound, mirroring terminal-record eviction).
+fn note_dedup(st: &mut State, token: &str, id: JobId, retention: usize) {
+    st.dedup.insert(token.to_string(), id);
+    st.dedup_order.push_back(token.to_string());
+    while st.dedup_order.len() > retention {
+        if let Some(old) = st.dedup_order.pop_front() {
+            st.dedup.remove(&old);
+        }
+    }
+}
+
 fn view_of(id: JobId, r: &JobRecord) -> JobView {
     JobView {
         id,
@@ -993,6 +1185,16 @@ pub trait Executor {
     /// it simply runs uninterruptible, progress-silent jobs.
     fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport>;
 
+    /// Run a coalesced batch, returning one result per member in order.
+    /// The default runs members sequentially through `execute`, so stub
+    /// executors (and executors with no batched artifacts) keep exact
+    /// per-job semantics under a coalescing scheduler; `PjrtExecutor`
+    /// overrides this to solve compatible members through one warm batched
+    /// executable with per-subject convergence masking.
+    fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<RunReport>> {
+        jobs.iter().map(|(payload, cx)| self.execute(payload, cx)).collect()
+    }
+
     /// Cumulative (compiles, warm hits) of this worker's operator cache.
     fn cache_stats(&self) -> (u64, u64) {
         (0, 0)
@@ -1010,11 +1212,11 @@ impl PjrtExecutor {
     pub fn open(artifacts_dir: &Path) -> Result<PjrtExecutor> {
         Ok(PjrtExecutor { registry: OpRegistry::open(artifacts_dir)? })
     }
-}
 
-impl Executor for PjrtExecutor {
-    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport> {
-        let (problem, params) = match payload {
+    /// Materialize a payload into the problem + validated params a solve
+    /// needs (shared by the single and batched execute paths).
+    fn resolve(&self, payload: &JobPayload) -> Result<(RegProblem, RegParams)> {
+        Ok(match payload {
             JobPayload::Spec(spec) => (
                 crate::data::synth::nirep_analog_pair(&self.registry, spec.n, &spec.subject)?,
                 spec.validate()?,
@@ -1031,7 +1233,13 @@ impl Executor for PjrtExecutor {
                 spec.validate()?,
             ),
             JobPayload::Problem { problem, params } => (problem.clone(), params.clone()),
-        };
+        })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport> {
+        let (problem, params) = self.resolve(payload)?;
         // The unified entry point: `params.algorithm` selects the
         // optimizer (GN-Krylov or a first-order baseline), `multires`
         // picks grid continuation, and the scheduler's context makes the
@@ -1039,6 +1247,55 @@ impl Executor for PjrtExecutor {
         let res = Session::new(&self.registry).params(params.clone()).solve_cx(&problem, cx)?;
         let solver = GaussNewtonKrylov::new(&self.registry, params);
         RunReport::build(&solver, &problem, &res)
+    }
+
+    /// Coalesced members solve through `Session::solve_batch_cx`: one warm
+    /// batched executable evaluates all subjects per iteration with
+    /// per-subject convergence masking, falling back to sequential solves
+    /// inside the session when no batched artifact fits. A member that
+    /// fails to materialize (bad spec, unknown subject) fails alone; the
+    /// rest still batch.
+    fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<RunReport>> {
+        if jobs.len() < 2 {
+            return jobs.iter().map(|(payload, cx)| self.execute(payload, cx)).collect();
+        }
+        let mut out: Vec<Option<Result<RunReport>>> = (0..jobs.len()).map(|_| None).collect();
+        let mut probs = Vec::new();
+        let mut cxs = Vec::new();
+        let mut idxs = Vec::new();
+        let mut params: Option<RegParams> = None;
+        for (i, (payload, cx)) in jobs.iter().enumerate() {
+            match self.resolve(payload) {
+                Ok((prob, p)) => {
+                    // Members share a coalesce key, so their validated
+                    // params agree on everything the solver reads.
+                    params.get_or_insert(p);
+                    probs.push(prob);
+                    cxs.push(cx.clone());
+                    idxs.push(i);
+                }
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        if let Some(params) = params {
+            let prob_refs: Vec<&RegProblem> = probs.iter().collect();
+            let solver = GaussNewtonKrylov::new(&self.registry, params.clone());
+            match Session::new(&self.registry).params(params).solve_batch_cx(&prob_refs, &cxs) {
+                Ok(results) => {
+                    for ((&i, prob), res) in idxs.iter().zip(probs.iter()).zip(results) {
+                        out[i] = Some(res.and_then(|r| RunReport::build(&solver, prob, &r)));
+                    }
+                }
+                Err(e) => {
+                    // Shared machinery failed before any subject solved.
+                    let msg = e.to_string();
+                    for &i in &idxs {
+                        out[i] = Some(Err(Error::Serve(msg.clone())));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("every batch member has a result")).collect()
     }
 
     fn cache_stats(&self) -> (u64, u64) {
@@ -1061,27 +1318,50 @@ impl Executor for FailingExecutor {
 
 /// Run jobs until the scheduler says stop. This is the whole worker.
 ///
-/// Executor panics are contained: the job is marked `Failed` and the
-/// worker keeps serving — otherwise one buggy solve would strand its job
-/// in `Running` forever (never completed, `idle()` never true) and
-/// silently shrink the pool.
+/// Dispatch is batch-at-a-time (`next_batch`; a singleton batch when
+/// coalescing is off or nothing matched), but completion stays per-job:
+/// every member gets its own `complete` with its own result, so job
+/// lifecycles are indistinguishable from sequential dispatch. `wall_s` is
+/// the shared batch wall time — what each subject actually waited on the
+/// worker.
+///
+/// Executor panics are contained: every job in the dispatched batch is
+/// marked `Failed` and the worker keeps serving — otherwise one buggy
+/// solve would strand jobs in `Running` forever (never completed,
+/// `idle()` never true) and silently shrink the pool.
 pub fn worker_loop<E: Executor + ?Sized>(sched: &Scheduler, worker: usize, exec: &mut E) {
-    while let Some((id, payload)) = sched.next_job(worker) {
-        let cx = sched.solve_cx(id);
+    while let Some(batch) = sched.next_batch(worker) {
+        let ids: Vec<JobId> = batch.iter().map(|(id, _)| *id).collect();
+        let jobs: Vec<(JobPayload, SolveCx)> =
+            batch.into_iter().map(|(id, payload)| (payload, sched.solve_cx(id))).collect();
         let t0 = Instant::now();
-        let result =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.execute(&payload, &cx)))
-                .unwrap_or_else(|p| {
-                    let msg = p
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| p.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "unknown panic payload".into());
-                    Err(Error::Serve(format!("job panicked in executor: {msg}")))
-                });
+        let results =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.execute_batch(&jobs)));
+        let wall = t0.elapsed().as_secs_f64();
         let (compiles, hits) = exec.cache_stats();
         sched.report_cache(worker, compiles, hits);
-        sched.complete(id, result, t0.elapsed().as_secs_f64());
+        match results {
+            Ok(results) => {
+                debug_assert_eq!(results.len(), ids.len());
+                for (id, result) in ids.iter().zip(results) {
+                    sched.complete(*id, result, wall);
+                }
+            }
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic payload".into());
+                for id in &ids {
+                    sched.complete(
+                        *id,
+                        Err(Error::Serve(format!("job panicked in executor: {msg}"))),
+                        wall,
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -1473,6 +1753,158 @@ mod tests {
         // The same worker went on to serve the next job.
         assert_eq!(sched.status(good).unwrap().state, JobState::Done);
         assert!(sched.idle());
+    }
+
+    /// Records the size of every dispatched batch; members run through
+    /// the default sequential `execute` path.
+    struct BatchRecording {
+        sizes: Arc<std::sync::Mutex<Vec<usize>>>,
+    }
+
+    impl Executor for BatchRecording {
+        fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
+            Ok(stub_report(&payload.name()))
+        }
+
+        fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<RunReport>> {
+            self.sizes.lock().unwrap().push(jobs.len());
+            jobs.iter().map(|(p, cx)| self.execute(p, cx)).collect()
+        }
+    }
+
+    #[test]
+    fn compatible_batch_jobs_coalesce_into_one_dispatch() {
+        let sched = Scheduler::new(64, 1);
+        sched.set_coalesce(8, 0);
+        for i in 0..4 {
+            sched.submit(Priority::Batch, spec(&format!("s{i}"), Priority::Batch)).unwrap();
+        }
+        // A different grid size selects a different executable: never fused.
+        let odd = JobPayload::Spec(JobSpec { subject: "odd".into(), n: 32, ..Default::default() });
+        sched.submit(Priority::Batch, odd).unwrap();
+        sched.shutdown(true);
+        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut exec = BatchRecording { sizes: sizes.clone() };
+        worker_loop(&sched, 0, &mut exec);
+        assert_eq!(*sizes.lock().unwrap(), vec![4, 1]);
+        let s = sched.stats();
+        assert_eq!(s.completed, 5, "every member completes individually");
+        assert_eq!(s.batches, 1, "one coalesced dispatch");
+        assert_eq!(s.coalesced, 4, "four member jobs");
+        // Each member carries its own dispatch bookkeeping.
+        let mut seqs: Vec<u64> = sched.jobs().iter().filter_map(|v| v.dispatch_seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn urgent_jobs_and_disabled_coalescing_dispatch_singletons() {
+        let sched = Scheduler::new(64, 1);
+        sched.set_coalesce(8, 0);
+        for i in 0..3 {
+            sched.submit(Priority::Urgent, spec(&format!("u{i}"), Priority::Urgent)).unwrap();
+        }
+        sched.shutdown(true);
+        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut exec = BatchRecording { sizes: sizes.clone() };
+        worker_loop(&sched, 0, &mut exec);
+        assert_eq!(*sizes.lock().unwrap(), vec![1, 1, 1], "urgent never coalesces");
+        assert_eq!(sched.stats().batches, 0);
+        // With coalescing off (the default), batch jobs also go one at a time.
+        let sched = Scheduler::new(64, 1);
+        for i in 0..3 {
+            sched.submit(Priority::Batch, spec(&format!("b{i}"), Priority::Batch)).unwrap();
+        }
+        sched.shutdown(true);
+        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut exec = BatchRecording { sizes: sizes.clone() };
+        worker_loop(&sched, 0, &mut exec);
+        assert_eq!(*sizes.lock().unwrap(), vec![1, 1, 1]);
+        assert_eq!(sched.stats().coalesced, 0);
+    }
+
+    #[test]
+    fn dwell_window_catches_late_compatible_arrivals() {
+        let sched = Scheduler::new(64, 1);
+        sched.set_coalesce(2, 2_000);
+        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let worker = {
+            let sched = sched.clone();
+            let sizes = sizes.clone();
+            std::thread::spawn(move || {
+                let mut exec = BatchRecording { sizes };
+                worker_loop(&sched, 0, &mut exec);
+            })
+        };
+        let a = sched.submit(Priority::Batch, spec("a", Priority::Batch)).unwrap();
+        // Wait until the worker holds `a` as a dwelling batch leader...
+        let t0 = Instant::now();
+        while sched.status(a).unwrap().state != JobState::Running {
+            assert!(t0.elapsed().as_secs() < 10, "leader never dispatched");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // ... then a compatible arrival joins it instead of waiting behind it.
+        let b = sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
+        let t0 = Instant::now();
+        while !sched.idle() {
+            assert!(t0.elapsed().as_secs() < 10, "batch never completed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        sched.shutdown(true);
+        worker.join().unwrap();
+        assert_eq!(*sizes.lock().unwrap(), vec![2], "late arrival coalesced into the dwell");
+        assert_eq!(sched.status(b).unwrap().state, JobState::Done);
+        let s = sched.stats();
+        assert_eq!((s.batches, s.coalesced), (1, 2));
+    }
+
+    #[test]
+    fn dedup_resubmission_returns_original_id() {
+        let sched = Scheduler::new(64, 1);
+        let a = sched
+            .submit_dedup(Priority::Batch, spec("a", Priority::Batch), Some("tok-1".into()))
+            .unwrap();
+        let again = sched
+            .submit_dedup(Priority::Batch, spec("a", Priority::Batch), Some("tok-1".into()))
+            .unwrap();
+        assert_eq!(a, again, "resubmit with the same token is the same job");
+        assert_eq!(sched.stats().submitted, 1, "no duplicate admission");
+        assert_eq!(sched.stats().queued, 1);
+        let b = sched
+            .submit_dedup(Priority::Batch, spec("b", Priority::Batch), Some("tok-2".into()))
+            .unwrap();
+        assert_ne!(a, b, "distinct tokens admit distinct jobs");
+        // The token survives the job reaching a terminal state...
+        let (id, _) = sched.next_job(0).unwrap();
+        sched.complete(id, Ok(stub_report("a")), 0.0);
+        assert_eq!(
+            sched
+                .submit_dedup(Priority::Batch, spec("a", Priority::Batch), Some("tok-1".into()))
+                .unwrap(),
+            a,
+            "retry after completion still returns the original id"
+        );
+        // ... and beats the queue bound: a retry of admitted work must not
+        // get a busy signal.
+        let tight = Scheduler::new(1, 1);
+        let x = tight
+            .submit_dedup(Priority::Batch, spec("x", Priority::Batch), Some("t".into()))
+            .unwrap();
+        assert!(tight.submit(Priority::Batch, spec("y", Priority::Batch)).is_err());
+        assert_eq!(
+            tight
+                .submit_dedup(Priority::Batch, spec("x", Priority::Batch), Some("t".into()))
+                .unwrap(),
+            x
+        );
+        // Journal-replayed tokens reseed the map across restarts.
+        tight.seed_dedup("replayed", 7);
+        assert_eq!(
+            tight
+                .submit_dedup(Priority::Batch, spec("z", Priority::Batch), Some("replayed".into()))
+                .unwrap(),
+            7
+        );
     }
 
     #[test]

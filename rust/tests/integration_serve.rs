@@ -1029,6 +1029,165 @@ fn cancel_running_job_over_the_wire() {
     );
 }
 
+// -- Batched dispatch (job coalescing) --------------------------------------
+
+/// The batching acceptance scenario (and the CI coalesce smoke): four
+/// compatible batch jobs submitted inside the dwell window coalesce into
+/// ONE dispatch on a one-worker daemon — observable as four
+/// simultaneously-running jobs and in the wire-level coalesce counters —
+/// while every job keeps its own lifecycle: four distinct
+/// queued -> running -> terminal watch streams, one of them cancelled
+/// mid-batch without disturbing its peers.
+#[test]
+fn coalesced_batch_keeps_per_job_lifecycles_over_the_wire() {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 16,
+        journal: None,
+        coalesce_b: 8,
+        // Long dwell: all four submissions land well inside it, so the
+        // fill is deterministic even on a slow machine.
+        coalesce_ms: 1_500,
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, cooperative_factory(2)).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut watcher = Client::connect(&addr).unwrap();
+    watcher.hello().unwrap();
+    watcher.watch().unwrap();
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.hello().unwrap();
+
+    // Same (n, variant, precision, algorithm, multires, knobs) => same
+    // coalesce key. Subjects differ on purpose: subject identity selects
+    // data, not the executable, and must never split a batch.
+    let subjects = ["na02", "na03", "na10", "na02"];
+    let ids: Vec<u64> = subjects
+        .iter()
+        .map(|s| client.submit(&spec(s, Priority::Batch, 300)).unwrap())
+        .collect();
+
+    // One worker, four running jobs: only a coalesced dispatch can do
+    // that. (The leader went running when popped; the other three were
+    // claimed during the dwell.)
+    wait_running(&mut client, 4);
+
+    // Cancel the last member mid-batch: its slot is masked out at its
+    // next iteration boundary while the other three run to completion.
+    client.cancel(ids[3]).unwrap();
+
+    for &id in &ids[..3] {
+        assert_eq!(client.wait_terminal(id, 30.0).unwrap().state, JobState::Done, "job {id}");
+    }
+    let cancelled = client.wait_terminal(ids[3], 30.0).unwrap();
+    assert_eq!(cancelled.state, JobState::Cancelled, "mid-batch cancel lands as cancelled");
+    assert!(cancelled.error.is_none(), "cancellation is not a failure");
+
+    // Every member was individually dispatched: four distinct seqs.
+    let seqs: BTreeSet<u64> =
+        ids.iter().map(|&id| client.status(id).unwrap().dispatch_seq.unwrap()).collect();
+    assert_eq!(seqs.len(), 4);
+
+    // The coalesce counters travel the wire: one batched dispatch
+    // holding all four jobs.
+    let stats = client.wait_idle(10.0).unwrap();
+    assert_eq!(stats.batches, 1, "{stats:?}");
+    assert_eq!(stats.coalesced, 4, "{stats:?}");
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.failed, 0);
+
+    // Four distinct lifecycle streams on the watch connection, each with
+    // its own full transition history.
+    let mut streams: std::collections::BTreeMap<u64, Vec<String>> =
+        ids.iter().map(|&id| (id, Vec::new())).collect();
+    let mut terminal = 0usize;
+    while terminal < 4 {
+        match watcher.next_event().unwrap() {
+            EventMsg::Job { id, state, .. } if streams.contains_key(&id) => {
+                let done =
+                    matches!(state, JobState::Done | JobState::Cancelled | JobState::Failed);
+                streams.get_mut(&id).unwrap().push(state.as_str().to_string());
+                if done {
+                    terminal += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    for &id in &ids[..3] {
+        assert_eq!(streams[&id], vec!["queued", "running", "done"], "job {id}");
+    }
+    assert_eq!(streams[&ids[3]], vec!["queued", "running", "cancelled"]);
+
+    client.shutdown(true).unwrap();
+    drop(watcher);
+    handle.join().unwrap();
+}
+
+/// Exactly-once admission over the wire: resubmitting with the same
+/// `dedup` token returns the original job id without creating a second
+/// job — including across a daemon restart, where tokens are reseeded
+/// from the journal's `submitted` audit lines.
+#[test]
+fn dedup_resubmission_is_exactly_once_across_restart() {
+    let journal = tmp_journal("dedup.ndjson");
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: Some(journal.clone()),
+        ..Default::default()
+    };
+    let handle = Daemon::start(cfg, stub_factory()).unwrap();
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    client.hello().unwrap();
+
+    let job = JobSpec {
+        dedup: Some("ct-na02-scan7".into()),
+        ..spec("na02", Priority::Batch, 1)
+    };
+    let id = client.submit(&job).unwrap();
+    // A retry after a lost response: same token, same id, no second job.
+    assert_eq!(client.submit(&job).unwrap(), id);
+    let stats = client.wait_idle(10.0).unwrap();
+    assert_eq!(stats.submitted, 1, "duplicate admission must not create a job");
+    assert_eq!(stats.completed, 1);
+
+    // A different token is a different job.
+    let other = JobSpec {
+        dedup: Some("ct-na03-scan7".into()),
+        ..spec("na03", Priority::Batch, 1)
+    };
+    let id2 = client.submit(&other).unwrap();
+    assert_ne!(id2, id);
+    client.wait_idle(10.0).unwrap();
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+
+    // Restart on the same journal: the admission map is reseeded, so the
+    // same retry still answers the original id instead of re-running the
+    // solve.
+    let cfg2 = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        journal: Some(journal),
+        ..Default::default()
+    };
+    let handle2 = Daemon::start(cfg2, stub_factory()).unwrap();
+    let mut client2 = Client::connect(&handle2.addr().to_string()).unwrap();
+    client2.hello().unwrap();
+    assert_eq!(client2.submit(&job).unwrap(), id, "token reseeded from the journal");
+    assert_eq!(client2.stats().unwrap().submitted, 0, "the retry admitted nothing new");
+    client2.shutdown(false).unwrap();
+    handle2.join().unwrap();
+}
+
 /// An `algorithm: gd` job travels the wire, shows its `+gd` name suffix
 /// in the status view, and an unknown algorithm is rejected at the same
 /// admission path every surface shares.

@@ -73,6 +73,9 @@ fn gen_job_request(r: &mut Rng) -> JobRequest {
     if r.below(3) == 0 {
         req.verbose = Some(r.below(2) == 1);
     }
+    if r.below(4) == 0 {
+        req.dedup = Some(format!("tok-{:08x}", r.next_u64() as u32));
+    }
     req
 }
 
@@ -158,6 +161,9 @@ fn prop_v1_subset_job_lines_decode_with_defaults() {
             // Absent v2 knobs take the same defaults a v1 JobSpec had.
             if req.multires.is_some() || req.max_krylov.is_some() || req.gamma.is_some() {
                 return Err("phantom v2 fields decoded".into());
+            }
+            if req.dedup.is_some() {
+                return Err("phantom dedup token decoded from a v1 line".into());
             }
             if req.precision != Precision::Full || req.source != JobSource::Synthetic {
                 return Err("v1 defaults drifted".into());
@@ -282,6 +288,264 @@ fn prop_algorithm_roundtrips_identically_across_wire_config_cli() {
                 }
                 (w, c) => Err(format!("surfaces disagree on '{token}': {w:?} vs {c:?}")),
             }
+        },
+    );
+}
+
+/// The coalescing contract, two halves:
+///
+/// 1. **Soundness** (the one that matters for correctness): two requests
+///    with equal `coalesce_key` must materialize identical
+///    solver-relevant `RegParams` through the one `validate()` path —
+///    coalescing them onto one batched executable changes nothing about
+///    either solve. (`verbose` is masked: it drives progress printing,
+///    not the solve.)
+/// 2. **Surface agreement**: the same solver policy expressed over the
+///    wire, in a config file, and as CLI flags produces the same key —
+///    so jobs submitted through different front doors still coalesce.
+///    Subject, priority, dedup and verbose never split a batch.
+#[test]
+fn prop_coalesce_key_agrees_with_validated_params_across_surfaces() {
+    use claire::config::Config as FileConfig;
+    use claire::registration::RegParams;
+    use claire::util::args::{flag, opt, Args, OptSpec};
+
+    fn solver_view(p: &RegParams) -> RegParams {
+        RegParams { verbose: false, ..p.clone() }
+    }
+
+    fn cli_args(raw: Vec<String>) -> Args {
+        let specs: Vec<OptSpec> = vec![
+            opt("variant", "", "opt-fd8-cubic"),
+            opt("precision", "", "full"),
+            opt("algorithm", "", "gn"),
+            opt("beta", "", "5e-4"),
+            opt("gamma", "", "1e-4"),
+            opt("gtol", "", "5e-2"),
+            opt("max-iter", "", "50"),
+            opt("multires", "", "1"),
+            flag("no-continuation", ""),
+            flag("incompressible", ""),
+        ];
+        Args::parse(raw, &specs).unwrap()
+    }
+
+    /// Solver knobs expressible on every surface (the CLI has no
+    /// `--max-krylov` and can only switch continuation *off*).
+    #[derive(Debug)]
+    struct Knobs {
+        variant: Option<&'static str>,
+        precision: Option<&'static str>,
+        algorithm: Option<&'static str>,
+        beta: Option<String>,
+        gamma: Option<String>,
+        gtol: Option<String>,
+        max_iter: Option<usize>,
+        multires: Option<usize>,
+        no_continuation: bool,
+        incompressible: bool,
+    }
+
+    fn gen_knobs(r: &mut Rng) -> Knobs {
+        Knobs {
+            variant: (r.below(2) == 1).then_some("opt-fd8-linear"),
+            precision: (r.below(2) == 1).then_some("mixed"),
+            algorithm: match r.below(4) {
+                0 => Some("gd"),
+                1 => Some("lbfgs"),
+                2 => Some("gn"),
+                _ => None,
+            },
+            // Decimal strings shared verbatim across surfaces: every
+            // parser sees the same text, so every f64 comes out identical.
+            beta: (r.below(2) == 1).then(|| format!("{}e-8", 1 + r.below(100_000))),
+            gamma: (r.below(2) == 1).then(|| format!("{}e-6", 1 + r.below(999))),
+            gtol: (r.below(2) == 1).then(|| format!("{}e-4", 1 + r.below(1000))),
+            max_iter: (r.below(2) == 1).then(|| 1 + r.below(200) as usize),
+            multires: (r.below(2) == 1).then(|| 1 + r.below(3) as usize),
+            no_continuation: r.below(2) == 1,
+            incompressible: r.below(2) == 1,
+        }
+    }
+
+    fn from_all_surfaces(k: &Knobs) -> (JobRequest, JobRequest, JobRequest) {
+        // Wire JSON line.
+        let mut json = Vec::new();
+        if let Some(v) = k.variant {
+            json.push(format!(r#""variant":"{v}""#));
+        }
+        if let Some(v) = k.precision {
+            json.push(format!(r#""precision":"{v}""#));
+        }
+        if let Some(v) = k.algorithm {
+            json.push(format!(r#""algorithm":"{v}""#));
+        }
+        if let Some(v) = &k.beta {
+            json.push(format!(r#""beta":{v}"#));
+        }
+        if let Some(v) = &k.gamma {
+            json.push(format!(r#""gamma":{v}"#));
+        }
+        if let Some(v) = &k.gtol {
+            json.push(format!(r#""gtol":{v}"#));
+        }
+        if let Some(v) = k.max_iter {
+            json.push(format!(r#""max_iter":{v}"#));
+        }
+        if let Some(v) = k.multires {
+            json.push(format!(r#""multires":{v}"#));
+        }
+        if k.no_continuation {
+            json.push(r#""continuation":false"#.into());
+        }
+        if k.incompressible {
+            json.push(r#""incompressible":true"#.into());
+        }
+        let wire =
+            JobRequest::from_json(&Json::parse(&format!("{{{}}}", json.join(","))).unwrap())
+                .unwrap();
+
+        // Config file.
+        let mut text = String::new();
+        if let Some(v) = k.variant {
+            text.push_str(&format!("variant = {v}\n"));
+        }
+        if let Some(v) = k.precision {
+            text.push_str(&format!("precision = {v}\n"));
+        }
+        if let Some(v) = k.algorithm {
+            text.push_str(&format!("algorithm = {v}\n"));
+        }
+        if let Some(v) = &k.beta {
+            text.push_str(&format!("beta = {v}\n"));
+        }
+        if let Some(v) = &k.gamma {
+            text.push_str(&format!("gamma = {v}\n"));
+        }
+        if let Some(v) = &k.gtol {
+            text.push_str(&format!("gtol = {v}\n"));
+        }
+        if let Some(v) = k.max_iter {
+            text.push_str(&format!("max_iter = {v}\n"));
+        }
+        if let Some(v) = k.multires {
+            text.push_str(&format!("multires = {v}\n"));
+        }
+        if k.no_continuation {
+            text.push_str("continuation = false\n");
+        }
+        if k.incompressible {
+            text.push_str("incompressible = true\n");
+        }
+        let config = FileConfig::parse(&text).unwrap().job_request().unwrap();
+
+        // CLI flags.
+        let mut raw: Vec<String> = Vec::new();
+        let mut push_opt = |name: &str, v: String| {
+            raw.push(format!("--{name}"));
+            raw.push(v);
+        };
+        if let Some(v) = k.variant {
+            push_opt("variant", v.into());
+        }
+        if let Some(v) = k.precision {
+            push_opt("precision", v.into());
+        }
+        if let Some(v) = k.algorithm {
+            push_opt("algorithm", v.into());
+        }
+        if let Some(v) = &k.beta {
+            push_opt("beta", v.clone());
+        }
+        if let Some(v) = &k.gamma {
+            push_opt("gamma", v.clone());
+        }
+        if let Some(v) = &k.gtol {
+            push_opt("gtol", v.clone());
+        }
+        if let Some(v) = k.max_iter {
+            push_opt("max-iter", v.to_string());
+        }
+        if let Some(v) = k.multires {
+            push_opt("multires", v.to_string());
+        }
+        if k.no_continuation {
+            raw.push("--no-continuation".into());
+        }
+        if k.incompressible {
+            raw.push("--incompressible".into());
+        }
+        let cli = JobRequest::from_args(&cli_args(raw)).unwrap();
+        (wire, config, cli)
+    }
+
+    prop::check_msg(
+        Config { cases: 200, seed: 0x17 },
+        |r| (gen_knobs(r), gen_knobs(r)),
+        |(ka, kb)| {
+            let (wa, ca, fa) = from_all_surfaces(ka);
+            let (wb, _, _) = from_all_surfaces(kb);
+
+            // Surface agreement: one policy, three front doors, one key.
+            if wa.coalesce_key() != ca.coalesce_key() || wa.coalesce_key() != fa.coalesce_key()
+            {
+                return Err(format!(
+                    "surfaces disagree on the key for {ka:?}: wire '{}', config '{}', cli '{}'",
+                    wa.coalesce_key(),
+                    ca.coalesce_key(),
+                    fa.coalesce_key()
+                ));
+            }
+            // Execution-irrelevant fields never split a batch.
+            let decorated = JobRequest {
+                subject: "zz99".into(),
+                priority: Priority::Emergency,
+                dedup: Some("tok".into()),
+                verbose: Some(true),
+                ..wa.clone()
+            };
+            if decorated.coalesce_key() != wa.coalesce_key() {
+                return Err("subject/priority/dedup/verbose split the coalesce key".into());
+            }
+
+            // Rejected combinations (e.g. a first-order baseline asking
+            // for a multires pyramid) never reach the scheduler — but all
+            // three surfaces must reject them identically.
+            let pw = match (wa.validate(), ca.validate(), fa.validate()) {
+                (Ok(w), Ok(c), Ok(f)) => {
+                    if solver_view(&w) != solver_view(&c) || solver_view(&w) != solver_view(&f)
+                    {
+                        return Err(format!(
+                            "surfaces materialize different params for {ka:?}"
+                        ));
+                    }
+                    w
+                }
+                (Err(ew), Err(ec), Err(ef)) => {
+                    if ew.to_string() != ec.to_string() || ew.to_string() != ef.to_string() {
+                        return Err(format!(
+                            "rejection drifted across surfaces: '{ew}' vs '{ec}' vs '{ef}'"
+                        ));
+                    }
+                    return Ok(());
+                }
+                _ => return Err(format!("surfaces disagree on rejecting {ka:?}")),
+            };
+
+            // Soundness across independent draws: equal keys => identical
+            // solver-relevant params (the batch-safety invariant).
+            let Ok(pb) = wb.validate() else {
+                return Ok(()); // b never admitted, so never coalesced
+            };
+            if wa.coalesce_key() == wb.coalesce_key()
+                && (wa.n != wb.n || solver_view(&pw) != solver_view(&pb))
+            {
+                return Err(format!(
+                    "key '{}' coalesces incompatible solves: {ka:?} vs {kb:?}",
+                    wa.coalesce_key()
+                ));
+            }
+            Ok(())
         },
     );
 }

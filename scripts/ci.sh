@@ -41,6 +41,15 @@ cargo test -q --test integration_serve cancel_running_job_over_the_wire
 echo "== fleet router smoke: upload/submit/watch/cancel through a 2-backend router (affinity + global ids) =="
 cargo test -q --test integration_router router_upload_submit_watch_affinity
 
+echo "== coalesced-batch smoke: 4 compatible jobs -> 1 batched dispatch, per-job lifecycles + mid-batch cancel (live daemon) =="
+cargo test -q --test integration_serve coalesced_batch_keeps_per_job_lifecycles_over_the_wire
+
+echo "== exactly-once smoke: dedup token resubmission across a daemon restart =="
+cargo test -q --test integration_serve dedup_resubmission_is_exactly_once_across_restart
+
+echo "== service bench smoke: batched-vs-sequential throughput -> BENCH_service.json =="
+CLAIRE_BENCH_SMOKE=1 cargo bench --bench bench_service
+
 echo "== cargo doc --no-deps (public API docs, warnings as errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

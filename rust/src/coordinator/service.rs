@@ -12,7 +12,6 @@
 //! that needs no lifecycle tracking.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::Result;
@@ -22,6 +21,7 @@ use crate::serve::proto::Priority;
 use crate::serve::scheduler::{
     worker_loop, FailingExecutor, JobPayload, JobState as ServeState, PjrtExecutor, Scheduler,
 };
+use crate::util::sync::{thread, Arc, Mutex};
 
 use std::path::PathBuf;
 
@@ -114,7 +114,7 @@ where
     let queue: Arc<Mutex<VecDeque<(usize, T)>>> =
         Arc::new(Mutex::new(items.into_iter().enumerate().collect()));
     let results: Arc<Mutex<Vec<(usize, R)>>> = Arc::new(Mutex::new(Vec::with_capacity(total)));
-    std::thread::scope(|scope| {
+    thread::scope(|scope| {
         for w in 0..workers.max(1) {
             let queue = queue.clone();
             let results = results.clone();
@@ -177,7 +177,7 @@ impl BatchService {
         }
         // Drain mode before workers start: they exit once the queue is dry.
         sched.shutdown(true);
-        std::thread::scope(|scope| {
+        thread::scope(|scope| {
             for w in 0..self.workers {
                 let sched = sched.clone();
                 let dir = self.artifacts_dir.clone();
@@ -221,7 +221,7 @@ mod tests {
     use crate::data::synth;
     use crate::runtime::OpRegistry;
     use crate::util::prop::{self, Config};
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
 
     fn outcome(id: usize, status: JobStatus) -> JobOutcome {
         JobOutcome { id, dataset: format!("d{id}"), status, report: None, error: None, wall_s: 0.1 }
@@ -317,12 +317,14 @@ mod tests {
                     workers,
                     |_| (),
                     |_, i| {
-                        counter.fetch_add(1, Ordering::SeqCst);
+                        // Relaxed per the counter policy in util/sync.rs;
+                        // the scope join supplies the happens-before edge.
+                        counter.fetch_add(1, Ordering::Relaxed);
                         i * 2
                     },
                 );
-                if counter.load(Ordering::SeqCst) != items {
-                    return Err(format!("executed {} of {items}", counter.load(Ordering::SeqCst)));
+                if counter.load(Ordering::Relaxed) != items {
+                    return Err(format!("executed {} of {items}", counter.load(Ordering::Relaxed)));
                 }
                 if out != (0..items).map(|i| i * 2).collect::<Vec<_>>() {
                     return Err("results out of order".into());

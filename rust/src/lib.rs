@@ -18,6 +18,12 @@
 //!   protocol) for the paper's "clinical workflow" setting. Python never
 //!   runs at request time.
 
+// The tree is unsafe-free (enforced since the concurrency-correctness
+// pass; `cargo xtask lint` / scripts/lint_invariants.py verify the sync
+// discipline on top). With local UB impossible, the sanitizer CI stages
+// (TSan, Miri) guard dependencies and logic races rather than memory bugs.
+#![forbid(unsafe_code)]
+
 pub mod config;
 pub mod coordinator;
 pub mod data;

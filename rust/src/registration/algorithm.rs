@@ -23,8 +23,6 @@
 //!   history when tripped. The serve scheduler uses it to interrupt
 //!   *running* jobs and to stream live `progress` events.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::field::VecField3;
@@ -33,6 +31,8 @@ use crate::registration::baseline::{BaselineKind, FirstOrderBaseline};
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::registration::solver::{GaussNewtonKrylov, IterRecord, RegResult};
 use crate::runtime::OpRegistry;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
 
 /// Result of one solve, whatever the algorithm: the Gauss-Newton result
 /// type is the shared outcome (baselines fill the Krylov-specific counters
@@ -158,8 +158,13 @@ impl SolveCx {
     }
 
     /// Whether cancellation has been requested.
+    ///
+    /// Acquire pairs with the canceller's Release store (the signal-flag
+    /// policy in util/sync.rs): whatever the canceller wrote before
+    /// requesting the stop is visible to the solver thread that observes
+    /// the flag here, at an iteration boundary.
     pub fn cancelled(&self) -> bool {
-        self.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+        self.cancel.as_ref().is_some_and(|f| f.load(Ordering::Acquire))
     }
 
     /// Deliver one accepted iteration to the observer (no-op without one).
@@ -373,7 +378,7 @@ mod tests {
 
     #[test]
     fn cx_flag_and_observer_are_live() {
-        use std::sync::Mutex;
+        use crate::util::sync::Mutex;
         struct Tape(Mutex<Vec<(usize, usize, f64)>>);
         impl SolveObserver for Tape {
             fn on_iteration(&self, ev: &IterEvent<'_>) {
@@ -384,7 +389,7 @@ mod tests {
         let tape = Arc::new(Tape(Mutex::new(Vec::new())));
         let cx = SolveCx::new().with_cancel(flag.clone()).with_observer(tape.clone());
         assert!(!cx.cancelled());
-        flag.store(true, Ordering::SeqCst);
+        flag.store(true, Ordering::Release);
         assert!(cx.cancelled());
         let rec = crate::registration::solver::IterRecord {
             level_beta: 1e-3,

@@ -37,14 +37,23 @@ pub struct Operator {
     stats: std::cell::Cell<OpStats>,
 }
 
-fn f32_bytes(xs: &[f32]) -> &[u8] {
-    // f32 -> u8 reinterpretation; alignment 4 -> 1 is always valid and the
-    // length is exact. Used to build XLA literals without copies.
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    // Native-endian f32 -> u8 marshalling. The crate is #![forbid(unsafe_code)],
+    // so this copies instead of reinterpreting; literal creation copies into
+    // device layout anyway, so the extra pass is one memcpy-speed sweep.
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_ne_bytes());
+    }
+    out
 }
 
-fn u16_bytes(xs: &[u16]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 2) }
+fn u16_bytes(xs: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for x in xs {
+        out.extend_from_slice(&x.to_ne_bytes());
+    }
+    out
 }
 
 /// Build an f32 literal of the given shape from a host slice.
@@ -57,7 +66,7 @@ pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
             got: data.len(),
         });
     }
-    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, f32_bytes(data))?)
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &f32_bytes(data))?)
 }
 
 /// Build a literal from an f32 host slice at the signature's declared
@@ -75,14 +84,14 @@ pub fn literal_for(sig: &TensorSig, data: &[f32]) -> Result<Literal> {
         DType::F32 => Literal::create_from_shape_and_untyped_data(
             ElementType::F32,
             &sig.shape,
-            f32_bytes(data),
+            &f32_bytes(data),
         )?,
         DType::F16 => {
             let bits = half::f16_bits_of(data);
             Literal::create_from_shape_and_untyped_data(
                 ElementType::F16,
                 &sig.shape,
-                u16_bytes(&bits),
+                &u16_bytes(&bits),
             )?
         }
         DType::Bf16 => {
@@ -90,7 +99,7 @@ pub fn literal_for(sig: &TensorSig, data: &[f32]) -> Result<Literal> {
             Literal::create_from_shape_and_untyped_data(
                 ElementType::Bf16,
                 &sig.shape,
-                u16_bytes(&bits),
+                &u16_bytes(&bits),
             )?
         }
     })

@@ -11,8 +11,6 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 use xla::PjRtClient;
 
@@ -20,12 +18,16 @@ use crate::error::Result;
 use crate::precision::Precision;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::operator::Operator;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 
 /// Lazily compiled operator cache keyed by (op, variant, n, precision).
 pub struct OpRegistry {
     pub client: PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<BTreeMap<String, Arc<Operator>>>,
+    /// Monotonic statistics, Relaxed per the counter policy in
+    /// util/sync.rs — read only for reporting, never for synchronization.
     hits: AtomicU64,
     compiles: AtomicU64,
 }

@@ -30,6 +30,7 @@ use crate::serve::store::UploadReceipt;
 use crate::util::bench::Table;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::sync::thread;
 
 /// Jittered-exponential-backoff retry policy for wire-retryable daemon
 /// rejections (`queue_full`, `shutting_down`). Attempt `k` sleeps a
@@ -319,7 +320,7 @@ impl Client {
         loop {
             match f(self) {
                 Err(Error::Wire { code, msg }) if code.retryable() && attempt < attempts => {
-                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    thread::sleep(policy.backoff(attempt, &mut rng));
                     attempt += 1;
                     let _ = msg;
                 }
@@ -488,7 +489,7 @@ impl Client {
                     view.state.as_str()
                 )));
             }
-            std::thread::sleep(Duration::from_millis(20));
+            thread::sleep(Duration::from_millis(20));
         }
     }
 
@@ -507,7 +508,7 @@ impl Client {
                     s.queued, s.running
                 )));
             }
-            std::thread::sleep(Duration::from_millis(20));
+            thread::sleep(Duration::from_millis(20));
         }
     }
 }

@@ -32,8 +32,6 @@
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::serve::journal::Journal;
@@ -46,6 +44,8 @@ use crate::serve::scheduler::{
     WatchEvent, WatchHandle,
 };
 use crate::serve::store::VolumeStore;
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::{Arc, Mutex};
 
 /// Daemon configuration (CLI flags map 1:1 onto these).
 #[derive(Clone, Debug)]
@@ -230,7 +230,7 @@ impl Daemon {
         for w in 0..cfg.workers.max(1) {
             let sched = scheduler.clone();
             let factory = factory.clone();
-            worker_threads.push(std::thread::spawn(move || match factory(w) {
+            worker_threads.push(thread::spawn(move || match factory(w) {
                 Ok(mut exec) => worker_loop(&sched, w, exec.as_mut()),
                 Err(e) => {
                     let mut failing =
@@ -243,7 +243,7 @@ impl Daemon {
         let sched = scheduler.clone();
         let accept_store = store.clone();
         let accept_node = node_id.clone();
-        let accept_thread = std::thread::spawn(move || {
+        let accept_thread = thread::spawn(move || {
             for conn in listener.incoming() {
                 if sched.is_shutting_down() {
                     break;
@@ -252,7 +252,7 @@ impl Daemon {
                 let sched = sched.clone();
                 let store = accept_store.clone();
                 let node = accept_node.clone();
-                std::thread::spawn(move || handle_connection(stream, sched, store, addr, node));
+                thread::spawn(move || handle_connection(stream, sched, store, addr, node));
             }
         });
 
@@ -454,7 +454,7 @@ fn handle_connection(
                     watch_sub = Some(handle.id());
                     let fw_writer = writer.clone();
                     let fw_sched = sched.clone();
-                    std::thread::spawn(move || {
+                    thread::spawn(move || {
                         forward_events(handle, fw_writer, fw_sched, raw_seq)
                     });
                     (Response::Ok, None)

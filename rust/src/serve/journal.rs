@@ -9,12 +9,12 @@
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::error::Result;
 use crate::serve::scheduler::{JobEvent, JobState};
 use crate::util::json::Json;
+use crate::util::sync::Mutex;
 
 /// One replayed journal entry.
 #[derive(Clone, Debug, PartialEq)]

@@ -19,14 +19,14 @@
 //! lookup retries before concluding the job is foreign.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::Error;
 use crate::serve::client::Client;
 use crate::serve::proto::EventMsg;
 use crate::serve::router::Fleet;
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::{Arc, Condvar, Mutex};
 
 /// Bounded per-subscriber queue depth, matching the scheduler bus cap.
 pub(crate) const FAN_QUEUE_CAP: usize = 256;
@@ -191,7 +191,7 @@ pub(crate) fn spawn_watchers(fleet: &Arc<Fleet>) -> Vec<JoinHandle<()>> {
     (0..fleet.pool.len())
         .map(|slot| {
             let fleet = fleet.clone();
-            std::thread::spawn(move || watcher_loop(&fleet, slot))
+            thread::spawn(move || watcher_loop(&fleet, slot))
         })
         .collect()
 }
@@ -210,7 +210,7 @@ fn watcher_loop(fleet: &Fleet, slot: usize) {
         // v1-only) backend costs a connect attempt every few seconds,
         // not a tight reconnect spin.
         let ms = 200u64.saturating_mul(failures.max(1) as u64).min(5_000);
-        std::thread::sleep(Duration::from_millis(ms));
+        thread::sleep(Duration::from_millis(ms));
     }
 }
 
@@ -275,7 +275,7 @@ fn translate(fleet: &Fleet, slot: usize, ev: EventMsg) -> Option<EventMsg> {
         if global.is_some() {
             break;
         }
-        std::thread::sleep(Duration::from_millis(5));
+        thread::sleep(Duration::from_millis(5));
         global = fleet.lookup_global(slot, local);
     }
     let global = global?;

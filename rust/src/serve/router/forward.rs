@@ -9,6 +9,7 @@ use crate::serve::router::Fleet;
 use crate::serve::scheduler::{JobId, JobView, NodeStats, ServeStats};
 use crate::serve::store::content_id;
 use crate::util::rng::Rng;
+use crate::util::sync::thread;
 
 /// Place an uploaded volume on its ring-chosen holders and forward the
 /// payload to each. The router computes the content id itself (same FNV
@@ -119,7 +120,7 @@ pub(crate) fn handle_submit(fleet: &Fleet, spec: &JobRequest) -> Result<JobId> {
             }
         }
         if attempt < attempts {
-            std::thread::sleep(policy.backoff(attempt, &mut rng));
+            thread::sleep(policy.backoff(attempt, &mut rng));
         }
     }
     Err(last_err.unwrap_or_else(|| {

@@ -47,9 +47,6 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::{Error, ErrorCode, Result};
@@ -61,6 +58,9 @@ use crate::serve::proto::{
 };
 use crate::serve::scheduler::JobId;
 use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::{Arc, Mutex};
 
 use federate::{with_seq, EventFan, FanMsg, FanSub, FAN_QUEUE_CAP};
 use placement::DEFAULT_VNODES;
@@ -231,7 +231,9 @@ pub(crate) struct Fleet {
 
 impl Fleet {
     pub(crate) fn is_shutting_down(&self) -> bool {
-        self.shutdown.load(Ordering::SeqCst)
+        // Signal-flag policy (util/sync.rs): Acquire pairs with the
+        // AcqRel swap in initiate_shutdown.
+        self.shutdown.load(Ordering::Acquire)
     }
 
     pub(crate) fn lookup_global(&self, slot: usize, local: JobId) -> Option<JobId> {
@@ -288,7 +290,7 @@ impl Fleet {
     /// Stop the router tier: flip the flag, wake the accept loop, end
     /// every watch stream. Does not touch the backends.
     fn initiate_shutdown(&self) {
-        if !self.shutdown.swap(true, Ordering::SeqCst) {
+        if !self.shutdown.swap(true, Ordering::AcqRel) {
             self.fan.close_all();
             wake_accept(self.addr);
         }
@@ -346,26 +348,26 @@ impl Router {
             // Health prober: sweep every backend each interval. The first
             // sweep runs immediately so load-aware routing has data fast.
             let fleet = fleet.clone();
-            threads.push(std::thread::spawn(move || {
+            threads.push(thread::spawn(move || {
                 while !fleet.is_shutting_down() {
                     for slot in 0..fleet.pool.len() {
                         fleet.pool.probe_once(slot);
                     }
-                    std::thread::sleep(fleet.cfg.probe_interval);
+                    thread::sleep(fleet.cfg.probe_interval);
                 }
             }));
         }
         threads.extend(federate::spawn_watchers(&fleet));
         {
             let accept_fleet = fleet.clone();
-            threads.push(std::thread::spawn(move || {
+            threads.push(thread::spawn(move || {
                 for conn in listener.incoming() {
                     if accept_fleet.is_shutting_down() {
                         break;
                     }
                     let Ok(stream) = conn else { continue };
                     let conn_fleet = accept_fleet.clone();
-                    std::thread::spawn(move || handle_router_connection(stream, conn_fleet));
+                    thread::spawn(move || handle_router_connection(stream, conn_fleet));
                 }
             }));
         }
@@ -526,7 +528,7 @@ fn handle_router_connection(stream: TcpStream, fleet: Arc<Fleet>) {
                     watch_sub = Some(sub.id());
                     let fw_writer = writer.clone();
                     let fw_fleet = fleet.clone();
-                    std::thread::spawn(move || forward_fan(sub, fw_writer, fw_fleet, raw_seq));
+                    thread::spawn(move || forward_fan(sub, fw_writer, fw_fleet, raw_seq));
                     (Response::Ok, None)
                 }
             }

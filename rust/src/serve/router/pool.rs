@@ -17,12 +17,12 @@
 //! fan-out paths (stats, shutdown) iterate slots sequentially, which is
 //! fine at fleet sizes this tier targets (single digits of nodes).
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::serve::client::{Client, ProbeInfo};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Mutex;
 
 struct Slot {
     addr: String,
@@ -64,7 +64,10 @@ impl Pool {
     }
 
     pub(crate) fn is_up(&self, slot: usize) -> bool {
-        self.slots[slot].up.load(Ordering::SeqCst)
+        // Acquire/Release on the up flag per the signal-flag policy in
+        // util/sync.rs. Routing reads it as a placement hint only; the
+        // authoritative failure handling is with_client's error taxonomy.
+        self.slots[slot].up.load(Ordering::Acquire)
     }
 
     /// Slots currently marked up, in index order.
@@ -143,11 +146,11 @@ impl Pool {
             }
             match f(guard.as_mut().unwrap()) {
                 Ok(v) => {
-                    s.up.store(true, Ordering::SeqCst);
+                    s.up.store(true, Ordering::Release);
                     return Ok(v);
                 }
                 Err(e @ Error::Wire { .. }) => {
-                    s.up.store(true, Ordering::SeqCst);
+                    s.up.store(true, Ordering::Release);
                     return Err(e);
                 }
                 Err(e) => {
@@ -156,7 +159,7 @@ impl Pool {
                 }
             }
         }
-        s.up.store(false, Ordering::SeqCst);
+        s.up.store(false, Ordering::Release);
         let detail = last.map(|e| e.to_string()).unwrap_or_else(|| "unreachable".into());
         Err(Error::wire(
             ErrorCode::Unavailable,

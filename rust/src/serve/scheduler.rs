@@ -34,8 +34,6 @@
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, ErrorCode, Result};
@@ -47,6 +45,8 @@ use crate::registration::solver::{GaussNewtonKrylov, IterRecord};
 use crate::runtime::OpRegistry;
 use crate::serve::proto::{JobSpec, Priority};
 use crate::serve::store::StoreStats;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
+use crate::util::sync::{Arc, Condvar, Mutex};
 
 pub type JobId = u64;
 
@@ -783,8 +783,12 @@ impl Scheduler {
     /// bounds how long a worker holding a partial batch dwells for more
     /// compatible arrivals. Takes effect on the next dispatch.
     pub fn set_coalesce(&self, max_b: usize, window_ms: u64) {
-        self.inner.coalesce_b.store(max_b.max(1), AtomicOrdering::SeqCst);
-        self.inner.coalesce_ms.store(window_ms, AtomicOrdering::SeqCst);
+        // Relaxed per the config-cell policy (util/sync.rs): these are
+        // self-contained values read independently at dispatch time — no
+        // other memory is published through them, and a dispatch racing a
+        // reconfigure may use either the old or new bound, both valid.
+        self.inner.coalesce_b.store(max_b.max(1), AtomicOrdering::Relaxed);
+        self.inner.coalesce_ms.store(window_ms, AtomicOrdering::Relaxed);
     }
 
     /// Blocking highest-priority pop. Returns `None` when the scheduler is
@@ -848,8 +852,8 @@ impl Scheduler {
     /// dwell (nothing new is coming).
     pub fn next_batch(&self, worker: usize) -> Option<Vec<(JobId, JobPayload)>> {
         let (lead_id, lead_payload) = self.next_job(worker)?;
-        let max_b = self.inner.coalesce_b.load(AtomicOrdering::SeqCst);
-        let window_ms = self.inner.coalesce_ms.load(AtomicOrdering::SeqCst);
+        let max_b = self.inner.coalesce_b.load(AtomicOrdering::Relaxed);
+        let window_ms = self.inner.coalesce_ms.load(AtomicOrdering::Relaxed);
         let lead_batch = {
             let st = self.inner.st.lock().unwrap();
             st.jobs.get(&lead_id).map(|r| r.priority) == Some(Priority::Batch)
@@ -861,6 +865,7 @@ impl Scheduler {
         let mut members = vec![(lead_id, lead_payload)];
         let deadline = Instant::now() + Duration::from_millis(window_ms);
         let mut st = self.inner.st.lock().unwrap();
+        let mut repushed;
         loop {
             // Claim every queued batch job matching the leader's key,
             // setting aside (and re-pushing) everything else. The leader
@@ -891,6 +896,7 @@ impl Scheduler {
                 members.push((entry.id, payload));
             }
             let interrupt = !aside.is_empty();
+            repushed = interrupt;
             for e in aside {
                 st.queue.push(e);
             }
@@ -912,6 +918,15 @@ impl Scheduler {
             st.counters.coalesced += members.len() as u64;
         }
         drop(st);
+        // Missed-notify fix (found by the loom dwell-interrupt model): the
+        // submit that woke this dweller spent its `notify_one` on us, and
+        // we re-pushed its job instead of running it. Without a re-notify
+        // an idle worker sleeps on the condvar while work sits queued
+        // until the *next* submit or shutdown. `notify_all` because
+        // several set-aside entries may need several workers.
+        if repushed {
+            self.inner.cv.notify_all();
+        }
         self.flush_events();
         Some(members)
     }
@@ -1009,7 +1024,13 @@ impl Scheduler {
                 // The transition is recorded (journaled, streamed) when
                 // the worker actually observes the flag and completes the
                 // job — not here, where the solve is still running.
-                rec.cancel.store(true, AtomicOrdering::SeqCst);
+                //
+                // Release pairs with the Acquire load in
+                // `SolveCx::cancelled` (the signal-flag policy in
+                // util/sync.rs): everything the canceller wrote before
+                // requesting the stop is visible to the solver thread
+                // that observes the flag at its next iteration boundary.
+                rec.cancel.store(true, AtomicOrdering::Release);
                 Ok(())
             }
             other => Err(Error::wire(
@@ -1406,6 +1427,7 @@ pub fn stub_report(name: &str) -> RunReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::sync::thread;
 
     struct Recording {
         ran: Vec<String>,
@@ -1578,7 +1600,7 @@ mod tests {
                 let rec = stub_iter(i);
                 cx.notify(i, &rec);
                 history.push(rec);
-                std::thread::sleep(std::time::Duration::from_millis(self.step_ms));
+                thread::sleep(std::time::Duration::from_millis(self.step_ms));
             }
             Ok(stub_report(&payload.name()))
         }
@@ -1603,7 +1625,7 @@ mod tests {
         sched.shutdown(true);
         let worker = {
             let sched = sched.clone();
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 let mut exec = Cooperative { step_ms: 2 };
                 worker_loop(&sched, 0, &mut exec);
             })
@@ -1616,7 +1638,7 @@ mod tests {
                 break;
             }
             assert!(t0.elapsed().as_secs() < 10, "job never progressed: {v:?}");
-            std::thread::sleep(std::time::Duration::from_millis(2));
+            thread::sleep(std::time::Duration::from_millis(2));
         }
         // Cancel the *running* job: accepted, and the solve stops at the
         // next iteration boundary with its partial history preserved.
@@ -1705,7 +1727,7 @@ mod tests {
         }
         let poisoned = sched.submit(Priority::Batch, spec("poison", Priority::Batch)).unwrap();
         sched.shutdown(true);
-        std::thread::scope(|s| {
+        thread::scope(|s| {
             for w in 0..2 {
                 let sched = sched.clone();
                 s.spawn(move || {
@@ -1758,7 +1780,7 @@ mod tests {
     /// Records the size of every dispatched batch; members run through
     /// the default sequential `execute` path.
     struct BatchRecording {
-        sizes: Arc<std::sync::Mutex<Vec<usize>>>,
+        sizes: Arc<Mutex<Vec<usize>>>,
     }
 
     impl Executor for BatchRecording {
@@ -1783,7 +1805,7 @@ mod tests {
         let odd = JobPayload::Spec(JobSpec { subject: "odd".into(), n: 32, ..Default::default() });
         sched.submit(Priority::Batch, odd).unwrap();
         sched.shutdown(true);
-        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sizes = Arc::new(Mutex::new(Vec::new()));
         let mut exec = BatchRecording { sizes: sizes.clone() };
         worker_loop(&sched, 0, &mut exec);
         assert_eq!(*sizes.lock().unwrap(), vec![4, 1]);
@@ -1805,7 +1827,7 @@ mod tests {
             sched.submit(Priority::Urgent, spec(&format!("u{i}"), Priority::Urgent)).unwrap();
         }
         sched.shutdown(true);
-        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sizes = Arc::new(Mutex::new(Vec::new()));
         let mut exec = BatchRecording { sizes: sizes.clone() };
         worker_loop(&sched, 0, &mut exec);
         assert_eq!(*sizes.lock().unwrap(), vec![1, 1, 1], "urgent never coalesces");
@@ -1816,7 +1838,7 @@ mod tests {
             sched.submit(Priority::Batch, spec(&format!("b{i}"), Priority::Batch)).unwrap();
         }
         sched.shutdown(true);
-        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sizes = Arc::new(Mutex::new(Vec::new()));
         let mut exec = BatchRecording { sizes: sizes.clone() };
         worker_loop(&sched, 0, &mut exec);
         assert_eq!(*sizes.lock().unwrap(), vec![1, 1, 1]);
@@ -1827,11 +1849,11 @@ mod tests {
     fn dwell_window_catches_late_compatible_arrivals() {
         let sched = Scheduler::new(64, 1);
         sched.set_coalesce(2, 2_000);
-        let sizes = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sizes = Arc::new(Mutex::new(Vec::new()));
         let worker = {
             let sched = sched.clone();
             let sizes = sizes.clone();
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 let mut exec = BatchRecording { sizes };
                 worker_loop(&sched, 0, &mut exec);
             })
@@ -1841,14 +1863,14 @@ mod tests {
         let t0 = Instant::now();
         while sched.status(a).unwrap().state != JobState::Running {
             assert!(t0.elapsed().as_secs() < 10, "leader never dispatched");
-            std::thread::sleep(Duration::from_millis(1));
+            thread::sleep(Duration::from_millis(1));
         }
         // ... then a compatible arrival joins it instead of waiting behind it.
         let b = sched.submit(Priority::Batch, spec("b", Priority::Batch)).unwrap();
         let t0 = Instant::now();
         while !sched.idle() {
             assert!(t0.elapsed().as_secs() < 10, "batch never completed");
-            std::thread::sleep(Duration::from_millis(1));
+            thread::sleep(Duration::from_millis(1));
         }
         sched.shutdown(true);
         worker.join().unwrap();
@@ -1916,8 +1938,7 @@ mod tests {
 
     #[test]
     fn event_sink_sees_lifecycle() {
-        use std::sync::Mutex as StdMutex;
-        let events: Arc<StdMutex<Vec<String>>> = Arc::new(StdMutex::new(Vec::new()));
+        let events: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
         let sched = Scheduler::new(8, 1);
         let ev2 = events.clone();
         sched.set_event_sink(Box::new(move |ev| {

@@ -20,11 +20,11 @@
 //!   embedding) get the same contract as the wire.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::field::Field3;
 use crate::serve::proto::MAX_GRID_N;
+use crate::util::sync::{Arc, Mutex};
 
 /// FNV-1a 128-bit (offset basis / prime per the FNV spec). Not
 /// cryptographic — the store is a cache keyed by honest content, not a

@@ -1,0 +1,64 @@
+//! Sync-primitive shim: the single import point for every concurrent
+//! module in the crate.
+//!
+//! Normal builds re-export `std::sync` + `std::thread` unchanged, so this
+//! module is zero-cost. Under `RUSTFLAGS="--cfg loom"` the same names
+//! resolve to [loom](https://docs.rs/loom)'s model-checked replacements,
+//! which lets `tests/loom_serve.rs` exhaustively interleave the scheduler,
+//! event bus, dedup admission, and shutdown paths without any per-test
+//! code swap. The custom invariant lint (`cargo xtask lint`, mirrored by
+//! `scripts/lint_invariants.py`) enforces that no module outside this file
+//! imports `std::sync::{Mutex, Condvar, RwLock}`, `std::sync::atomic`, or
+//! `std::thread` directly — see DESIGN.md "Concurrency model & analysis".
+//!
+//! Deliberate deviations from a pure re-export:
+//!
+//! - `Arc` is always `std::sync::Arc`, even under loom. The tree relies on
+//!   unsized coercions (`Arc<str>`, `Arc<dyn SolveObserver>`) and
+//!   `From<String>` impls that loom's tracking `Arc` does not provide, and
+//!   loom establishes causality through `Mutex`/`Condvar`/atomics — which
+//!   *are* swapped — so models lose nothing.
+//! - Under loom, `thread::scope` remains `std::thread::scope` (loom has no
+//!   scoped threads). The scoped paths (`coordinator/service.rs`) are not
+//!   exercised by loom models; they only need to compile.
+//! - Under loom, `thread::sleep` is modelled as `loom::thread::yield_now()`:
+//!   sleeps are scheduling hints, never correctness, per the lint's
+//!   lock-order rules.
+
+/// Memory-ordering policy (enforced by convention, documented in
+/// DESIGN.md "Concurrency model & analysis"):
+///
+/// - **Signal flags** (cancel flags, router shutdown, pool up/down):
+///   `store(Release)` by the signaller, `load(Acquire)` by the observer,
+///   `swap(AcqRel)` when the signaller also needs the previous value.
+/// - **Config cells** (`coalesce_b`, `coalesce_ms`): `Relaxed` — they are
+///   self-contained values; no other memory is published through them.
+/// - **Counters** (`OpRegistry::hits`/`compiles`): `Relaxed` — monotonic
+///   statistics, read only for reporting.
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+/// See the module docs: `Arc` stays `std::sync::Arc` under loom too.
+pub use std::sync::Arc;
+
+#[cfg(loom)]
+pub mod thread {
+    pub use loom::thread::*;
+    // Explicit items shadow the glob: these fill loom's API gaps.
+    pub use std::thread::{scope, Scope, ScopedJoinHandle};
+
+    /// Sleeps are scheduling hints in this crate, never correctness:
+    /// under the model checker a sleep is just a preemption point.
+    pub fn sleep(_dur: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+}

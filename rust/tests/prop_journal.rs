@@ -1,0 +1,207 @@
+//! Journal crash-safety properties (via the in-tree `util/prop.rs`
+//! mini-framework): replay of a journal with a torn, truncated, or
+//! interleaved tail — the on-disk states a daemon killed mid-write can
+//! leave behind — never panics and never loses a fully-written line
+//! other than (at most) the one the tear landed on; `max_id` is
+//! monotone over appends; `completed_count` matches the surviving
+//! prefix.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::PathBuf;
+
+use claire::serve::scheduler::{JobEvent, JobState};
+use claire::serve::{Journal, JournalEntry, Priority};
+use claire::util::prop::{self, Config};
+use claire::util::rng::Rng;
+
+fn tmp(case: u64) -> PathBuf {
+    let dir = std::env::temp_dir().join("claire_prop_journal");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("case_{}_{case}.ndjson", std::process::id()))
+}
+
+/// A journaled event plus the entry replay should reconstruct from it.
+fn gen_event(r: &mut Rng, id: u64) -> (JobEvent, JournalEntry) {
+    let name = format!("na{:02}-{id}", r.below(30));
+    match r.below(4) {
+        0 => {
+            let dedup = if r.below(2) == 0 { Some(format!("tok{}", r.below(1000))) } else { None };
+            let ev = JobEvent::Submitted {
+                id,
+                name: name.clone(),
+                priority: Priority::Normal,
+                dedup: dedup.clone(),
+            };
+            let want = JournalEntry { event: "submitted".into(), id, name, unix_s: 0.0, dedup };
+            (ev, want)
+        }
+        1 => {
+            let ev = JobEvent::Cancelled { id, name: name.clone() };
+            let want = JournalEntry { event: "cancelled".into(), id, name, unix_s: 0.0, dedup: None };
+            (ev, want)
+        }
+        k => {
+            let state = if k == 2 { JobState::Done } else { JobState::Failed };
+            let ev = JobEvent::Finished {
+                id,
+                name: name.clone(),
+                state,
+                wall_s: r.uniform_in(0.0, 10.0),
+                error: None,
+            };
+            let event = if state == JobState::Done { "done" } else { "failed" };
+            let want = JournalEntry { event: event.into(), id, name, unix_s: 0.0, dedup: None };
+            (ev, want)
+        }
+    }
+}
+
+/// Random non-line-shaped tail damage: a torn JSON prefix, raw bytes
+/// including invalid UTF-8, an interleaved half-line, or empty lines.
+/// None of these can form a complete valid journal line.
+fn garbage(r: &mut Rng) -> Vec<u8> {
+    match r.below(4) {
+        0 => {
+            // Torn write: a valid-looking line cut mid-object (and
+            // possibly mid-UTF-8: the name holds a multi-byte char).
+            let line = format!(r#"{{"event":"done","id":{},"name":"μtorn"#, r.below(100));
+            let cut = 1 + r.below(line.len() as u64 - 1) as usize;
+            line.as_bytes()[..cut].to_vec()
+        }
+        1 => {
+            // Raw bytes, deliberately invalid UTF-8.
+            let mut b = vec![0xC3, 0x28, 0xFF, 0xFE];
+            for _ in 0..r.below(16) {
+                b.push((r.next_u64() & 0xFF) as u8);
+            }
+            b
+        }
+        2 => {
+            // Interleaved writers: two half-lines sharing one line.
+            let a = r#"{"event":"submitted","id":7,"#;
+            let b = r#""name":"x"}{"event":"done""#;
+            format!("{a}{b}").into_bytes()
+        }
+        _ => b"\n\n   \n".to_vec(),
+    }
+}
+
+fn entry_key(e: &JournalEntry) -> (String, u64, String, Option<String>) {
+    (e.event.clone(), e.id, e.name.clone(), e.dedup.clone())
+}
+
+#[test]
+fn replay_survives_torn_tails_and_max_id_is_monotone() {
+    let mut case_no = 0u64;
+    prop::check_msg(
+        Config { cases: 96, ..Config::default() },
+        |r| {
+            case_no += 1;
+            let k = 1 + r.below(6);
+            let events: Vec<_> = (0..k)
+                .map(|i| {
+                    let id = 1 + i * (1 + r.below(3));
+                    gen_event(r, id)
+                })
+                .collect();
+            // 0 = truncate the tail, 1..=2 = append garbage, 3 = both.
+            let damage = r.below(4);
+            (case_no, events, damage, r.split())
+        },
+        |(case_no, events, damage, rng)| {
+            let path = tmp(*case_no);
+            let mut r = rng.clone();
+            let journal = Journal::open(&path).map_err(|e| e.to_string())?;
+
+            // max_id is monotone while valid lines are appended.
+            let mut prev_max = 0u64;
+            for (ev, _) in events {
+                journal.append(ev).map_err(|e| e.to_string())?;
+                let entries = Journal::replay(&path).map_err(|e| e.to_string())?;
+                let max = Journal::max_id(&entries);
+                if max < prev_max {
+                    return Err(format!("max_id shrank: {prev_max} -> {max}"));
+                }
+                prev_max = max;
+            }
+
+            // Damage the tail the way a crash can: truncate into the last
+            // line, then (or instead) append garbage that never forms a
+            // complete valid line.
+            let valid_len = std::fs::metadata(&path).map_err(|e| e.to_string())?.len();
+            if *damage == 0 || *damage == 3 {
+                let cut = 1 + r.below(valid_len.min(40));
+                OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|f| f.set_len(valid_len - cut))
+                    .map_err(|e| e.to_string())?;
+            }
+            if *damage != 0 {
+                let mut f =
+                    OpenOptions::new().append(true).open(&path).map_err(|e| e.to_string())?;
+                for _ in 0..1 + r.below(3) {
+                    f.write_all(&garbage(&mut r)).map_err(|e| e.to_string())?;
+                }
+            }
+
+            // Replay never errors (and, being a plain function under
+            // `prop`, a panic fails the whole test run).
+            let entries = Journal::replay(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+
+            // The survivors are an in-order prefix of what was written —
+            // damage may cost valid lines from the tear point on, plus
+            // whatever a truncation chopped, but never reorders, invents,
+            // or drops an earlier intact line.
+            if entries.len() > events.len() {
+                return Err(format!("replayed {} > appended {}", entries.len(), events.len()));
+            }
+            let min_intact = if *damage == 0 || *damage == 3 {
+                // A <= 40-byte truncation cannot reach past the final
+                // line (every journal line is longer than 40 bytes), so
+                // at most that one line is lost.
+                events.len().saturating_sub(1)
+            } else {
+                events.len()
+            };
+            if entries.len() < min_intact {
+                return Err(format!("replayed {} < {min_intact} intact lines", entries.len()));
+            }
+            for (got, (_, want)) in entries.iter().zip(events) {
+                if entry_key(got) != entry_key(want) {
+                    return Err(format!("entry mismatch: got {got:?}, want {want:?}"));
+                }
+            }
+            if Journal::completed_count(&entries)
+                != entries.iter().filter(|e| e.event == "done").count() as u64
+            {
+                return Err("completed_count disagrees with replayed entries".into());
+            }
+            if Journal::max_id(&entries) > prev_max {
+                return Err("max_id exceeds anything ever appended".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A journal that is *pure* garbage — no valid line at all — replays to
+/// an empty history with `max_id` 0 rather than failing startup.
+#[test]
+fn replay_of_pure_garbage_is_empty() {
+    let mut r = Rng::new(0xBAD_F00D);
+    let path = tmp(u64::MAX);
+    let mut f = OpenOptions::new().create(true).append(true).open(&path).unwrap();
+    for _ in 0..8 {
+        f.write_all(&garbage(&mut r)).unwrap();
+        f.write_all(b"\n").unwrap();
+    }
+    drop(f);
+    let entries = Journal::replay(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(entries.is_empty(), "garbage parsed as entries: {entries:?}");
+    assert_eq!(Journal::max_id(&entries), 0);
+    assert_eq!(Journal::completed_count(&entries), 0);
+}

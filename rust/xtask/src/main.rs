@@ -1,0 +1,540 @@
+//! `cargo xtask lint` — the repo's invariant lint (canonical CI entry).
+//!
+//! Table-driven source analysis of `rust/src` + `DESIGN.md`. The rule list
+//! is defined ONCE conceptually and implemented twice: here (when a Rust
+//! toolchain is present) and in `scripts/lint_invariants.py` (dependency-
+//! free mirror for toolchain-less containers). Rule IDs, semantics, and
+//! the needle tables below must stay in lockstep with the Python mirror.
+//!
+//!   R1 shim-imports   no direct `std::sync::{Mutex,Condvar,RwLock,atomic}`
+//!                     or `std::thread` outside `util/sync.rs` (`Arc` is
+//!                     allowed — the shim re-exports std's Arc under loom).
+//!   R2 lock-order     serve/scheduler.rs: Inner.st(1) < sink(2) < subs(3)
+//!                     < events(4); nested `.lock()` scopes must not invert.
+//!   R3 store-journal  the volume-store lock is never held across a
+//!                     journal write.
+//!   R4 error-codes    error.rs::ErrorCode in sync with DESIGN.md's
+//!                     "Structured errors" registry (backtick presence for
+//!                     every code; retryable + exit match for table rows).
+//!   R5 emit-guards    emit-only-when-present back-compat fields stay
+//!                     behind a conditional (`if` opener before `fn`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const SHIM_EXEMPT: &[&str] = &["util/sync.rs"];
+
+/// (needle, human name, rank) — lower ranks must be taken first.
+const LOCK_RANKS: &[(&str, &str, u32)] = &[
+    ("inner.st.lock(", "Inner.st", 1),
+    (".sink.lock(", "sink", 2),
+    (".subs.lock(", "subs", 3),
+    (".events.lock(", "events", 4),
+];
+
+const LOCK_ORDER_FILE: &str = "serve/scheduler.rs";
+const STORE_JOURNAL_FILE: &str = "serve/store.rs";
+const STORE_JOURNAL_TOKENS: &[&str] = &["journal", ".append("];
+const DESIGN_SECTION: &str = "### Structured errors";
+
+const EMIT_GUARDS: &[(&str, &str)] = &[
+    ("serve/journal.rs", "push((\"dedup\""),
+    ("request.rs", "push((\"dedup\""),
+    ("serve/proto.rs", "insert(\"nodes\""),
+    ("serve/proto.rs", "insert(\"batches\""),
+    ("serve/proto.rs", "insert(\"coalesced\""),
+];
+
+struct Lint {
+    repo: PathBuf,
+    src: PathBuf,
+    violations: Vec<String>,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("lint");
+    if cmd != "lint" {
+        eprintln!("usage: cargo xtask lint");
+        std::process::exit(2);
+    }
+    // xtask lives at <repo>/rust/xtask; walk up to the repo root.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let rust_dir = manifest.parent().expect("xtask has a parent").to_path_buf();
+    let repo = rust_dir.parent().expect("rust/ has a parent").to_path_buf();
+    let mut lint = Lint {
+        src: rust_dir.join("src"),
+        repo,
+        violations: Vec::new(),
+    };
+    lint.rule_shim_imports();
+    lint.rule_lock_order();
+    lint.rule_store_journal();
+    lint.rule_error_codes();
+    lint.rule_emit_guards();
+    if lint.violations.is_empty() {
+        println!(
+            "xtask lint: OK (shim-imports, lock-order, store-journal, \
+             error-codes, emit-guards)"
+        );
+    } else {
+        for v in &lint.violations {
+            println!("{v}");
+        }
+        println!("xtask lint: {} violation(s)", lint.violations.len());
+        std::process::exit(1);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Good enough for this tree: no `//` inside string literals on the
+    // lines these rules look at.
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn brace_delta(line: &str) -> i64 {
+    let opens = line.matches('{').count() as i64;
+    let closes = line.matches('}').count() as i64;
+    opens - closes
+}
+
+/// `let [mut] NAME = ... .lock().unwrap();` — the guard itself is bound
+/// (statement ends right at `.unwrap();`), so it lives to end of block.
+fn guard_binding(line: &str) -> Option<String> {
+    let t = line.trim();
+    if !t.starts_with("let ") || !t.ends_with(".lock().unwrap();") {
+        return None;
+    }
+    let rest = t[4..].trim_start().strip_prefix("mut ").unwrap_or(&t[4..]);
+    let name: String = rest
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn drop_call(line: &str) -> Option<String> {
+    let i = line.find("drop(")?;
+    let name: String = line[i + 5..]
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// A lock guard currently in scope.
+struct Held {
+    name: &'static str,
+    rank: Option<u32>,
+    var: String,
+    depth: i64,
+}
+
+impl Lint {
+    fn flag(&mut self, path: &Path, lineno: usize, rule: &str, msg: &str) {
+        let rel = path
+            .strip_prefix(&self.repo)
+            .unwrap_or(path)
+            .display()
+            .to_string();
+        self.violations.push(format!("{rel}:{lineno}: [{rule}] {msg}"));
+    }
+
+    fn rs_files(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.src.clone()];
+        while let Some(dir) = stack.pop() {
+            let Ok(entries) = fs::read_dir(&dir) else { continue };
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().is_some_and(|e| e == "rs") {
+                    out.push(p);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    // R1 -------------------------------------------------------------------
+
+    fn rule_shim_imports(&mut self) {
+        for path in self.rs_files() {
+            let rel = path
+                .strip_prefix(&self.src)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            if SHIM_EXEMPT.contains(&rel.as_str()) {
+                continue;
+            }
+            let Ok(text) = fs::read_to_string(&path) else { continue };
+            for (i, raw) in text.lines().enumerate() {
+                let code = strip_comment(raw);
+                if let Some(why) = shim_forbidden(code) {
+                    self.flag(
+                        &path,
+                        i + 1,
+                        "shim-imports",
+                        &format!(
+                            "direct std sync/thread use ({why}); import via \
+                             crate::util::sync instead"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // R2 / R3 --------------------------------------------------------------
+
+    fn scan_lock_scopes<F, G>(&mut self, path: &Path, mut on_acquire: F, mut on_line: G)
+    where
+        F: FnMut(&mut Lint, usize, &str, &[Held]),
+        G: FnMut(&mut Lint, usize, &str, &[Held]),
+    {
+        let Ok(text) = fs::read_to_string(path) else { return };
+        let mut held: Vec<Held> = Vec::new();
+        let mut depth: i64 = 0;
+        for (i, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw);
+            if let Some(var) = drop_call(line) {
+                held.retain(|h| h.var != var);
+            }
+            on_line(self, i + 1, line, &held);
+            if line.contains(".lock(") {
+                on_acquire(self, i + 1, line, &held);
+                if let Some(var) = guard_binding(line) {
+                    let ranked = LOCK_RANKS
+                        .iter()
+                        .find(|(needle, _, _)| line.contains(needle));
+                    held.push(match ranked {
+                        Some(&(_, name, rank)) => Held { name, rank: Some(rank), var, depth },
+                        None => Held { name: "unranked", rank: None, var, depth },
+                    });
+                }
+            }
+            depth += brace_delta(line);
+            // A guard bound at depth d lives while depth >= d.
+            held.retain(|h| depth >= h.depth);
+        }
+    }
+
+    fn rule_lock_order(&mut self) {
+        let path = self.src.join(LOCK_ORDER_FILE);
+        self.scan_lock_scopes(
+            &path.clone(),
+            |lint, lineno, line, held| {
+                let Some(&(_, name, rank)) =
+                    LOCK_RANKS.iter().find(|(n, _, _)| line.contains(n))
+                else {
+                    return;
+                };
+                for h in held {
+                    if h.rank.is_some_and(|hr| hr > rank) {
+                        let msg = format!(
+                            "acquires {name} (rank {rank}) while holding {} \
+                             (rank {}); declared order is Inner.st < sink < \
+                             subs < events",
+                            h.name,
+                            h.rank.unwrap()
+                        );
+                        lint.flag(&path, lineno, "lock-order", &msg);
+                    }
+                }
+            },
+            |_, _, _, _| {},
+        );
+    }
+
+    fn rule_store_journal(&mut self) {
+        let path = self.src.join(STORE_JOURNAL_FILE);
+        self.scan_lock_scopes(
+            &path.clone(),
+            |_, _, _, _| {},
+            |lint, lineno, line, held| {
+                let lower = line.to_lowercase();
+                if !held.is_empty() && STORE_JOURNAL_TOKENS.iter().any(|t| lower.contains(t)) {
+                    lint.flag(
+                        &path,
+                        lineno,
+                        "store-journal",
+                        "journal write while the store lock is held",
+                    );
+                }
+            },
+        );
+    }
+
+    // R4 -------------------------------------------------------------------
+
+    fn rule_error_codes(&mut self) {
+        let err_path = self.src.join("error.rs");
+        let design_path = self.repo.join("DESIGN.md");
+        let Ok(err) = fs::read_to_string(&err_path) else {
+            self.flag(&err_path, 1, "error-codes", "cannot read error.rs");
+            return;
+        };
+        let Ok(design) = fs::read_to_string(&design_path) else {
+            self.flag(&design_path, 1, "error-codes", "cannot read DESIGN.md");
+            return;
+        };
+        let codes = parse_as_str(&err);
+        if codes.is_empty() {
+            self.flag(&err_path, 1, "error-codes", "could not parse ErrorCode::as_str");
+            return;
+        }
+        let retryable = fn_body(&err, "fn retryable").map(collect_variants).unwrap_or_default();
+        let exits = fn_body(&err, "fn exit_code").map(parse_exit_arms).unwrap_or_default();
+
+        let Some(start) = design.find(DESIGN_SECTION) else {
+            self.flag(&design_path, 1, "error-codes", "section '### Structured errors' not found");
+            return;
+        };
+        let tail = &design[start..];
+        let end = tail[1..].find("\n### ").map(|i| i + 1).unwrap_or(tail.len());
+        let section = &tail[..end];
+        let sec_line = design[..start].lines().count() + 1;
+
+        for (wire, retry, exit_code) in parse_table_rows(section) {
+            let Some(var) = codes.iter().find(|(_, w)| *w == wire).map(|(v, _)| v.clone())
+            else {
+                let msg = format!("table lists `{wire}` but error.rs has no such code");
+                self.flag(&design_path, sec_line, "error-codes", &msg);
+                continue;
+            };
+            let code_retry = if retryable.contains(&var) { "yes" } else { "no" };
+            if code_retry != retry {
+                let msg = format!(
+                    "`{wire}`: table says retryable={retry}, error.rs says {code_retry}"
+                );
+                self.flag(&design_path, sec_line, "error-codes", &msg);
+            }
+            if exits.get(&var).copied() != Some(exit_code) {
+                let msg = format!(
+                    "`{wire}`: table says exit {exit_code}, error.rs says {:?}",
+                    exits.get(&var)
+                );
+                self.flag(&design_path, sec_line, "error-codes", &msg);
+            }
+        }
+        for (var, wire) in &codes {
+            if !section.contains(&format!("`{wire}`")) {
+                let msg = format!(
+                    "ErrorCode::{var} (`{wire}`) is not documented in DESIGN.md's \
+                     '### Structured errors' section"
+                );
+                self.flag(&err_path, 1, "error-codes", &msg);
+            }
+        }
+    }
+
+    // R5 -------------------------------------------------------------------
+
+    fn rule_emit_guards(&mut self) {
+        for &(rel, needle) in EMIT_GUARDS {
+            let path = self.src.join(rel);
+            let Ok(text) = fs::read_to_string(&path) else {
+                self.flag(&path, 1, "emit-guards", "cannot read file");
+                continue;
+            };
+            let lines: Vec<&str> = text.lines().collect();
+            let mut found = false;
+            for i in 0..lines.len() {
+                if !strip_comment(lines[i]).contains(needle) {
+                    continue;
+                }
+                found = true;
+                let mut bal: i64 = 0;
+                let mut guarded = false;
+                for j in (0..i).rev() {
+                    let code = strip_comment(lines[j]);
+                    bal += brace_delta(code);
+                    if bal > 0 {
+                        // An enclosing opener.
+                        if has_word(code, "if") {
+                            guarded = true;
+                            break;
+                        }
+                        if has_word(code, "fn") {
+                            break;
+                        }
+                        bal = 0; // consumed this level; keep climbing
+                    }
+                }
+                if !guarded {
+                    let msg = format!(
+                        "{needle:?} emitted unconditionally — this field is \
+                         emit-only-when-present for wire/journal back-compat"
+                    );
+                    self.flag(&path, i + 1, "emit-guards", &msg);
+                }
+            }
+            if !found {
+                let msg = format!("expected emission site {needle:?} not found (rule table stale?)");
+                self.flag(&path, 1, "emit-guards", &msg);
+            }
+        }
+    }
+}
+
+/// Which forbidden-pattern did this line hit, if any (mirror of the Python
+/// SHIM_FORBIDDEN list)?
+fn shim_forbidden(code: &str) -> Option<&'static str> {
+    if code.contains("use std::sync::atomic") {
+        return Some("use std::sync::atomic");
+    }
+    if let Some(i) = code.find("use std::sync::") {
+        let rest = code[i..].split(';').next().unwrap_or("");
+        for t in ["Mutex", "Condvar", "RwLock", "Barrier", "Once"] {
+            if has_word(rest, t) {
+                return Some("use std::sync::{Mutex|Condvar|RwLock|Barrier|Once}");
+            }
+        }
+    }
+    if code.contains("use std::thread") {
+        return Some("use std::thread");
+    }
+    for t in ["std::sync::Mutex", "std::sync::Condvar", "std::sync::RwLock"] {
+        if code.contains(t) {
+            return Some("inline std::sync::{Mutex|Condvar|RwLock}");
+        }
+    }
+    if code.contains("std::sync::atomic::") {
+        return Some("inline std::sync::atomic::");
+    }
+    if code.contains("std::thread::") {
+        return Some("inline std::thread::");
+    }
+    None
+}
+
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(i) = code[from..].find(word) {
+        let start = from + i;
+        let end = start + word.len();
+        let left_ok = start == 0 || !(bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_');
+        let right_ok =
+            end >= bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if left_ok && right_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// `ErrorCode::Variant => "wire",` pairs from as_str (and parse, harmlessly —
+/// identical pairs reversed are deduped by the Vec contains check).
+fn parse_as_str(err: &str) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    let mut rest = err;
+    while let Some(i) = rest.find("ErrorCode::") {
+        rest = &rest[i + 11..];
+        let var: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        let after = &rest[var.len()..];
+        let Some(arrow) = after.find("=>") else { continue };
+        let tail = after[arrow + 2..].trim_start();
+        if let Some(stripped) = tail.strip_prefix('"') {
+            let wire: String = stripped.chars().take_while(|c| *c != '"').collect();
+            if !var.is_empty()
+                && !wire.is_empty()
+                && !out.iter().any(|(v, _)| *v == var)
+            {
+                out.push((var, wire));
+            }
+        }
+    }
+    out
+}
+
+/// Body of `fn name ... { ... }` up to the `\n    }` that closes a method at
+/// impl-block indentation (same heuristic as the Python mirror).
+fn fn_body<'a>(text: &'a str, name: &str) -> Option<&'a str> {
+    let start = text.find(name)?;
+    let open = text[start..].find('{')? + start;
+    let close = text[open..].find("\n    }")? + open;
+    Some(&text[open..close])
+}
+
+fn collect_variants(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    while let Some(i) = rest.find("ErrorCode::") {
+        rest = &rest[i + 11..];
+        let var: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !var.is_empty() && !out.contains(&var) {
+            out.push(var);
+        }
+    }
+    out
+}
+
+/// `ErrorCode::A | ErrorCode::B => 75,` arms → {A: 75, B: 75}.
+fn parse_exit_arms(body: &str) -> std::collections::HashMap<String, u32> {
+    let mut out = std::collections::HashMap::new();
+    for line in body.lines() {
+        let Some(arrow) = line.find("=>") else { continue };
+        let num: String = line[arrow + 2..]
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        let Ok(exit) = num.parse::<u32>() else { continue };
+        for var in collect_variants(&line[..arrow]) {
+            out.insert(var, exit);
+        }
+    }
+    out
+}
+
+/// `| \`code\` | meaning | yes/no | exit |` rows.
+fn parse_table_rows(section: &str) -> Vec<(String, &'static str, u32)> {
+    let mut out = Vec::new();
+    for line in section.lines() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = t.split('|').map(str::trim).collect();
+        // ["", "`code`", meaning, yes/no, exit, ""]
+        if cells.len() < 6 {
+            continue;
+        }
+        let code = cells[1];
+        if !(code.starts_with('`') && code.ends_with('`') && code.len() > 2) {
+            continue;
+        }
+        let retry = match cells[3] {
+            "yes" => "yes",
+            "no" => "no",
+            _ => continue,
+        };
+        let Ok(exit) = cells[4].parse::<u32>() else { continue };
+        out.push((code[1..code.len() - 1].to_string(), retry, exit));
+    }
+    out
+}

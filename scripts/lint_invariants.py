@@ -1,0 +1,300 @@
+#!/usr/bin/env python3
+"""Invariant lint for the claire crate — dependency-free mirror of
+`cargo xtask lint` (rust/xtask/src/main.rs).
+
+Both implementations are generated from ONE rule list (kept in lockstep by
+hand; the rule IDs and semantics below must match xtask's RULES table):
+
+  R1 shim-imports   No direct `std::sync::{Mutex,Condvar,RwLock,atomic}` or
+                    `std::thread` import/use anywhere in rust/src outside
+                    util/sync.rs. `std::sync::Arc` is allowed (the shim
+                    re-exports std's Arc under loom too — see its docs).
+  R2 lock-order     serve/scheduler.rs declared order: Inner.st(1) before
+                    sink(2) before subs(3) before events(4). Taking an
+                    earlier-ranked lock while a later-ranked guard is in
+                    scope (intraprocedural, nested `.lock()` scopes) is an
+                    inversion.
+  R3 store-journal  The volume-store lock is never held across a journal
+                    write (`.append(` / `journal` inside a lock scope in
+                    serve/store.rs).
+  R4 error-codes    error.rs::ErrorCode stays in sync with DESIGN.md's
+                    "Structured errors" registry: every code appears
+                    backticked in the section; every table row's code
+                    exists with matching `retryable` and CLI exit code.
+                    (`unavailable` lives in the section's prose, not the
+                    table — presence is still required.)
+  R5 emit-guards    Back-compat emit-only-when-present fields (journal
+                    `dedup`, request `dedup`, stats `nodes`/`batches`/
+                    `coalesced`) must stay behind a conditional: their
+                    emission line must have an enclosing `if` opener
+                    before the enclosing `fn`.
+
+Exit 0 with no output (beyond the summary) when clean; exit 1 listing
+violations otherwise. Runs on bare python3 — no Rust toolchain, no pip.
+"""
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "rust", "src")
+DESIGN = os.path.join(REPO, "DESIGN.md")
+
+# -- The rule list (mirror of xtask's RULES) --------------------------------
+
+SHIM_EXEMPT = ("util/sync.rs",)
+SHIM_FORBIDDEN = [
+    re.compile(r"use\s+std::sync::atomic"),
+    re.compile(r"use\s+std::sync::[^;]*\b(Mutex|Condvar|RwLock|Barrier|Once)\b"),
+    re.compile(r"use\s+std::thread\b"),
+    re.compile(r"std::sync::(Mutex|Condvar|RwLock)\b"),
+    re.compile(r"std::sync::atomic::"),
+    re.compile(r"std::thread::"),
+]
+
+LOCK_ORDER_FILE = "serve/scheduler.rs"
+# (needle, human name, rank) — lower ranks must be taken first.
+LOCK_RANKS = [
+    ("inner.st.lock(", "Inner.st", 1),
+    (".sink.lock(", "sink", 2),
+    (".subs.lock(", "subs", 3),
+    (".events.lock(", "events", 4),
+]
+
+STORE_JOURNAL_FILE = "serve/store.rs"
+STORE_JOURNAL_TOKENS = ("journal", ".append(")
+
+DESIGN_SECTION = "### Structured errors"
+
+EMIT_GUARDS = [
+    ("serve/journal.rs", 'push(("dedup"'),
+    ("request.rs", 'push(("dedup"'),
+    ("serve/proto.rs", 'insert("nodes"'),
+    ("serve/proto.rs", 'insert("batches"'),
+    ("serve/proto.rs", 'insert("coalesced"'),
+]
+
+violations = []
+
+
+def flag(path, lineno, rule, msg):
+    rel = os.path.relpath(path, REPO)
+    violations.append(f"{rel}:{lineno}: [{rule}] {msg}")
+
+
+def strip_comment(line):
+    # Good enough for this tree: no `//` inside string literals on the
+    # lines these rules look at.
+    i = line.find("//")
+    return line if i < 0 else line[:i]
+
+
+def rs_files():
+    out = []
+    for root, _dirs, files in os.walk(SRC):
+        for f in sorted(files):
+            if f.endswith(".rs"):
+                out.append(os.path.join(root, f))
+    return sorted(out)
+
+
+# -- R1: shim imports -------------------------------------------------------
+
+def rule_shim_imports():
+    for path in rs_files():
+        rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+        if rel in SHIM_EXEMPT:
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                code = strip_comment(line)
+                for pat in SHIM_FORBIDDEN:
+                    if pat.search(code):
+                        flag(path, lineno, "shim-imports",
+                             f"direct std sync/thread use ({pat.pattern!r}); "
+                             "import via crate::util::sync instead")
+                        break
+
+
+# -- R2/R3 shared scope machinery ------------------------------------------
+
+GUARD_BIND = re.compile(r"\blet\s+(?:mut\s+)?(\w+)(?:\s*:\s*[^=]+)?\s*=\s*[^;]*\.lock\(\)\s*\.unwrap\(\)\s*;\s*$")
+DROP_CALL = re.compile(r"\bdrop\(\s*(\w+)\s*\)")
+
+
+def scan_lock_scopes(path, on_acquire, on_line=None):
+    """Walk a file tracking brace depth and bound lock guards.
+
+    `on_acquire(lineno, line, held)` is called for every line containing a
+    `.lock(` call, with `held` = list of (needle, name, rank, var, depth)
+    currently in scope. Guards bound with `let` (statement ending right at
+    `.unwrap();` — i.e. the guard itself is bound, not a derived value)
+    are held until their block closes or an explicit `drop(var)`.
+    `on_line(lineno, line, held)` is called for every line.
+    """
+    held = []
+    depth = 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, raw in enumerate(fh, 1):
+            line = strip_comment(raw)
+            # Guards whose block closed on a previous line are gone.
+            m = DROP_CALL.search(line)
+            if m:
+                held = [h for h in held if h[3] != m.group(1)]
+            if on_line:
+                on_line(lineno, line, held)
+            if ".lock(" in line:
+                on_acquire(lineno, line, held)
+                bind = GUARD_BIND.search(line)
+                if bind:
+                    for needle, name, rank in LOCK_RANKS:
+                        if needle in line:
+                            held.append((needle, name, rank, bind.group(1), depth))
+                            break
+                    else:
+                        held.append((None, "unranked", None, bind.group(1), depth))
+            depth += line.count("{") - line.count("}")
+            # A guard bound at depth d lives while depth >= d.
+            held = [h for h in held if depth >= h[4]]
+
+
+def rule_lock_order():
+    path = os.path.join(SRC, LOCK_ORDER_FILE)
+
+    def on_acquire(lineno, line, held):
+        for needle, name, rank in LOCK_RANKS:
+            if needle in line:
+                for _n, hname, hrank, _v, _d in held:
+                    if hrank is not None and hrank > rank:
+                        flag(path, lineno, "lock-order",
+                             f"acquires {name} (rank {rank}) while holding "
+                             f"{hname} (rank {hrank}); declared order is "
+                             "Inner.st < sink < subs < events")
+                break
+
+    scan_lock_scopes(path, on_acquire)
+
+
+def rule_store_journal():
+    path = os.path.join(SRC, STORE_JOURNAL_FILE)
+
+    def on_line(lineno, line, held):
+        if held and any(tok in line.lower() for tok in STORE_JOURNAL_TOKENS):
+            flag(path, lineno, "store-journal",
+                 "journal write while the store lock is held")
+
+    scan_lock_scopes(path, lambda *_: None, on_line=on_line)
+
+
+# -- R4: ErrorCode <-> DESIGN.md -------------------------------------------
+
+def parse_error_rs():
+    path = os.path.join(SRC, "error.rs")
+    text = open(path, encoding="utf-8").read()
+    codes = dict(re.findall(r'ErrorCode::(\w+)\s*=>\s*"(\w+)"', text))
+    if not codes:
+        flag(path, 1, "error-codes", "could not parse ErrorCode::as_str")
+        return None
+    m = re.search(r"fn retryable[^{]*\{(.*?)\n    \}", text, re.S)
+    retryable = set(re.findall(r"ErrorCode::(\w+)", m.group(1))) if m else set()
+    m = re.search(r"fn exit_code[^{]*\{(.*?)\n    \}", text, re.S)
+    exits = {}
+    if m:
+        for arms, num in re.findall(r"((?:ErrorCode::\w+\s*\|?\s*)+)=>\s*(\d+)", m.group(1)):
+            for variant in re.findall(r"ErrorCode::(\w+)", arms):
+                exits[variant] = int(num)
+    return path, codes, retryable, exits
+
+
+def rule_error_codes():
+    parsed = parse_error_rs()
+    if parsed is None:
+        return
+    path, codes, retryable, exits = parsed
+    design = open(DESIGN, encoding="utf-8").read()
+    start = design.find(DESIGN_SECTION)
+    if start < 0:
+        flag(DESIGN, 1, "error-codes", f"section {DESIGN_SECTION!r} not found")
+        return
+    end = design.find("\n### ", start + 1)
+    section = design[start:end if end > 0 else len(design)]
+    sec_line = design[:start].count("\n") + 1
+
+    rows = re.findall(r"^\|\s*`(\w+)`\s*\|[^|]*\|\s*(yes|no)\s*\|\s*(\d+)\s*\|",
+                      section, re.M)
+    by_wire = {wire: var for var, wire in codes.items()}
+    for wire, retry, exit_code in rows:
+        var = by_wire.get(wire)
+        if var is None:
+            flag(DESIGN, sec_line, "error-codes",
+                 f"table lists `{wire}` but error.rs has no such code")
+            continue
+        code_retry = "yes" if var in retryable else "no"
+        if code_retry != retry:
+            flag(DESIGN, sec_line, "error-codes",
+                 f"`{wire}`: table says retryable={retry}, error.rs says {code_retry}")
+        if exits.get(var) != int(exit_code):
+            flag(DESIGN, sec_line, "error-codes",
+                 f"`{wire}`: table says exit {exit_code}, error.rs says {exits.get(var)}")
+    for var, wire in codes.items():
+        if f"`{wire}`" not in section:
+            flag(path, 1, "error-codes",
+                 f"ErrorCode::{var} (`{wire}`) is not documented in DESIGN.md's "
+                 f"{DESIGN_SECTION!r} section")
+
+
+# -- R5: emit-only-when-present guards --------------------------------------
+
+FN_DEF = re.compile(r"\bfn\b")
+IF_KW = re.compile(r"\bif\b")
+
+
+def rule_emit_guards():
+    for rel, needle in EMIT_GUARDS:
+        path = os.path.join(SRC, rel)
+        lines = open(path, encoding="utf-8").read().splitlines()
+        found = False
+        for i, raw in enumerate(lines):
+            if needle not in strip_comment(raw):
+                continue
+            found = True
+            bal = 0
+            guarded = False
+            for j in range(i - 1, -1, -1):
+                code = strip_comment(lines[j])
+                bal += code.count("{") - code.count("}")
+                if bal > 0:  # an enclosing opener
+                    if IF_KW.search(code):
+                        guarded = True
+                        break
+                    if FN_DEF.search(code):
+                        break
+                    bal = 0  # consumed this level; keep climbing
+            if not guarded:
+                flag(path, i + 1, "emit-guards",
+                     f"{needle!r} emitted unconditionally — this field is "
+                     "emit-only-when-present for wire/journal back-compat")
+        if not found:
+            flag(path, 1, "emit-guards",
+                 f"expected emission site {needle!r} not found (rule table stale?)")
+
+
+def main():
+    rule_shim_imports()
+    rule_lock_order()
+    rule_store_journal()
+    rule_error_codes()
+    rule_emit_guards()
+    if violations:
+        for v in violations:
+            print(v)
+        print(f"lint_invariants: {len(violations)} violation(s)")
+        return 1
+    print("lint_invariants: OK (shim-imports, lock-order, store-journal, "
+          "error-codes, emit-guards)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

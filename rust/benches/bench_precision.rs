@@ -16,7 +16,6 @@ use std::time::Instant;
 use claire::error::Result;
 use claire::math::half;
 use claire::optim::pcg::{self, PcgOptions};
-use claire::registration::RunReport;
 use claire::serve::scheduler::stub_report;
 use claire::serve::{worker_loop, Executor, JobPayload, JobSpec, Priority, Scheduler};
 use claire::util::bench::Table;
@@ -91,9 +90,9 @@ impl Executor for PcgExec {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
+    ) -> Result<claire::serve::ExecOutcome> {
         let JobPayload::Spec(spec) = payload else {
-            return Ok(stub_report("problem"));
+            return Ok(stub_report("problem").into());
         };
         let dim = self.dim;
         let d: Vec<f32> = (0..dim).map(|i| 1.0 + i as f32 / dim as f32).collect();
@@ -118,7 +117,7 @@ impl Executor for PcgExec {
             |r| Ok(r.to_vec()),
         )?;
         assert_eq!(res.matvec_precision, spec.precision);
-        Ok(stub_report(&spec.name()))
+        Ok(stub_report(&spec.name()).into())
     }
 }
 

@@ -15,7 +15,6 @@ use std::time::{Duration, Instant};
 
 use claire::error::Result;
 use claire::math::stats::percentile_sorted;
-use claire::registration::RunReport;
 use claire::serve::scheduler::stub_report;
 use claire::serve::{
     Client, Daemon, DaemonConfig, DaemonHandle, EventMsg, Executor, ExecutorFactory,
@@ -31,13 +30,13 @@ impl Executor for StubExec {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
+    ) -> Result<claire::serve::ExecOutcome> {
         let ms = match payload {
             JobPayload::Spec(s) => s.max_iter.unwrap_or(1) as u64,
             _ => 1,
         };
         std::thread::sleep(Duration::from_millis(ms));
-        Ok(stub_report(&payload.name()))
+        Ok(stub_report(&payload.name()).into())
     }
 }
 

@@ -19,7 +19,6 @@ use std::time::{Duration, Instant};
 
 use claire::error::Result;
 use claire::math::stats::percentile_sorted;
-use claire::registration::RunReport;
 use claire::serve::proto::upload_line;
 use claire::serve::scheduler::stub_report;
 use claire::serve::{
@@ -47,9 +46,9 @@ impl Executor for SpinExec {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
+    ) -> Result<claire::serve::ExecOutcome> {
         spin(self.service);
-        Ok(stub_report(&payload.name()))
+        Ok(stub_report(&payload.name()).into())
     }
 }
 
@@ -67,17 +66,17 @@ impl Executor for BatchSpinExec {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
+    ) -> Result<claire::serve::ExecOutcome> {
         spin(self.base + self.per_subject);
-        Ok(stub_report(&payload.name()))
+        Ok(stub_report(&payload.name()).into())
     }
 
     fn execute_batch(
         &mut self,
         jobs: &[(JobPayload, claire::registration::SolveCx)],
-    ) -> Vec<Result<RunReport>> {
+    ) -> Vec<Result<claire::serve::ExecOutcome>> {
         spin(self.base + self.per_subject * jobs.len() as u32);
-        jobs.iter().map(|(p, _)| Ok(stub_report(&p.name()))).collect()
+        jobs.iter().map(|(p, _)| Ok(stub_report(&p.name()).into())).collect()
     }
 }
 
@@ -260,7 +259,7 @@ fn run_watch_bench(jobs: usize) -> WatchRow {
             emits.push(Instant::now());
             let (id, _) = sched.next_job(0).unwrap();
             emits.push(Instant::now());
-            sched.complete(id, Ok(stub_report("w")), 0.0);
+            sched.complete(id, Ok(stub_report("w").into()), 0.0);
         }
         (emits, sub.join().unwrap())
     });

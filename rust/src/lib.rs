@@ -36,6 +36,7 @@ pub mod registration;
 pub mod request;
 pub mod runtime;
 pub mod serve;
+pub mod template;
 pub mod util;
 
 pub use error::{Error, ErrorCode, Result};

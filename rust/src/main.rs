@@ -9,6 +9,10 @@
 //!              federated stats/status/watch)
 //!   upload     ship a fixed/moving volume pair into a running daemon
 //!   submit     submit job(s) to a running daemon (synthetic or uploaded)
+//!   template   group-wise atlas building: iteratively register N subjects
+//!              to a running template estimate and average server-side
+//!              (wire `reduce` verb), with a journaled, restartable round
+//!              loop and warm-started rounds
 //!   watch      stream live job events from a running daemon (protocol v2)
 //!   status     job table + stats from a running daemon
 //!   cancel     cancel a queued or running job (running solves stop at
@@ -105,6 +109,21 @@ fn common_specs() -> Vec<OptSpec> {
         opt("priority", "submit: batch | urgent | emergency", "batch"),
         opt("count", "submit: number of jobs (subjects cycle)", "1"),
         opt("id", "status/cancel: job id", ""),
+        opt(
+            "subjects",
+            "template: comma-separated subject volumes (data/io paths or uploaded \
+             content ids)",
+            "",
+        ),
+        opt("rounds", "template: total round budget", "5"),
+        opt("tol", "template: convergence tolerance on the template's relative change", "1e-3"),
+        opt("step-scale", "template: scale on the mean velocity before exponentiation", "1"),
+        opt(
+            "state",
+            "template: round-state journal for kill/restart resume ('' disables)",
+            "template_state.ndjson",
+        ),
+        flag("quiet-events", "template: suppress the live per-job event stream"),
         flag("now", "shutdown: stop without draining queued jobs"),
         flag("no-continuation", "disable beta continuation"),
         flag("incompressible", "project onto divergence-free fields (Leray)"),
@@ -151,6 +170,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "route" => cmd_route(&args),
         "upload" => cmd_upload(&args),
         "submit" => cmd_submit(&args),
+        "template" => cmd_template(&args),
         "watch" => cmd_watch(&args),
         "status" => cmd_status(&args),
         "cancel" => cmd_cancel(&args),
@@ -171,8 +191,8 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn print_help() {
     println!("claire — diffeomorphic image registration (JPDC 2020 reproduction)\n");
-    println!("usage: claire <register|batch|serve|route|upload|submit|watch|status|cancel|");
-    println!("               shutdown|transport|info|complexity> [options]\n");
+    println!("usage: claire <register|batch|serve|route|upload|submit|template|watch|status|");
+    println!("               cancel|shutdown|transport|info|complexity> [options]\n");
     println!("{}", usage(&common_specs()));
     println!("exit codes (sysexits-style, for scripts): 75 retryable daemon rejection,");
     println!("  64 malformed request/usage, 65 shape problem, 66 unknown job/volume,");
@@ -471,6 +491,124 @@ fn cmd_submit(args: &Args) -> Result<()> {
             let id = client.submit_with_retry(spec, &policy)?;
             println!("submitted job {id}: {name} [{}]", spec.priority.as_str());
         }
+    }
+    Ok(())
+}
+
+/// Group-wise template building (`template/` subsystem): upload the
+/// subjects when given as paths, then drive the journaled round loop —
+/// batch-submit one registration per subject against the current
+/// template, reduce the retained outputs server-side into the next
+/// template (wire `reduce` verb), warm-starting round 2+ from the
+/// previous round's velocities. `--state` makes the loop restartable: a
+/// killed driver re-run with the same flags resumes at the last
+/// completed round.
+fn cmd_template(args: &Args) -> Result<()> {
+    let raw = args.get_or("subjects", "");
+    let entries: Vec<String> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let state = {
+        let s = args.get_or("state", "template_state.ndjson");
+        (!s.is_empty()).then(|| PathBuf::from(s))
+    };
+    let mut client = connect_client(args)?;
+    if client.proto() < 2 {
+        return Err(claire::Error::Serve(
+            "template building requires a protocol-v2 daemon (reduce/submit_batch)".into(),
+        ));
+    }
+    let policy = RetryPolicy::default();
+    // Entries that name readable files are uploaded; anything else is
+    // taken as an already-uploaded content id.
+    let mut subjects = Vec::with_capacity(entries.len());
+    for e in &entries {
+        if Path::new(e).exists() {
+            let f = claire::data::io::read_field(Path::new(e))?;
+            let r = client.upload_with_retry(f.n, &f.data, &policy)?;
+            println!("uploaded subject {e} -> {} [{}^3]", r.id, r.n);
+            subjects.push(r.id);
+        } else {
+            subjects.push(e.clone());
+        }
+    }
+    let mut base = JobRequest::from_args(args)?;
+    // The driver owns source/warm_start/dedup per subject and round.
+    base.source = JobSource::Synthetic;
+    base.dedup = None;
+    let cfg = claire::template::TemplateConfig {
+        rounds: args.get_usize("rounds", 5)?,
+        tol: args.get_f64("tol", 1e-3)?,
+        scale: args.get_f64("step-scale", 1.0)?,
+        state,
+        policy,
+        spec: base,
+        wait_timeout_s: 600.0,
+    };
+    // Live progress: a second watch connection streams per-job events
+    // alongside the driver's per-round lines.
+    if !args.flag("quiet-events") {
+        if let Ok(mut w) = connect_client(args) {
+            if w.proto() >= 2 && w.watch().is_ok() && w.set_io_timeout(None).is_ok() {
+                claire::util::sync::thread::spawn(move || loop {
+                    match w.next_event() {
+                        Ok(EventMsg::Job { id, name, state, .. }) => {
+                            println!("  job {id} {name} -> {}", state.as_str());
+                        }
+                        Ok(EventMsg::Progress { id, iter, grad_rel, .. }) => {
+                            println!("  job {id} it={iter} |g|rel={grad_rel:.2e}");
+                        }
+                        Ok(EventMsg::Lagged { .. }) | Err(_) => break,
+                    }
+                });
+            }
+        }
+    }
+    let mut driver = claire::template::TemplateDriver::new(client, subjects, cfg)?;
+    let prior = driver.state().rounds.len();
+    if prior > 0 {
+        println!(
+            "resuming run {} at round {} (template {})",
+            driver.state().run_id,
+            prior + 1,
+            driver.template()
+        );
+    } else {
+        println!(
+            "bootstrap template {} ({} subjects, run {})",
+            driver.template(),
+            driver.state().subjects.len(),
+            driver.state().run_id
+        );
+    }
+    let outcomes = driver.run(|o| {
+        let delta =
+            o.delta_rel.map(|d| format!("{d:.3e}")).unwrap_or_else(|| "-".into());
+        let iters: Vec<String> = o
+            .iters
+            .iter()
+            .map(|i| i.map(|v| v.to_string()).unwrap_or_else(|| "-".into()))
+            .collect();
+        println!(
+            "round {}: template {} delta_rel={delta} field={} iters=[{}]",
+            o.round,
+            o.template,
+            o.field.as_str(),
+            iters.join(",")
+        );
+    })?;
+    match outcomes.last() {
+        Some(last) if last.converged => {
+            println!("converged after {} round(s): template {}", last.round, last.template);
+        }
+        _ => println!(
+            "round budget exhausted ({}): template {}",
+            driver.state().rounds.len(),
+            driver.template()
+        ),
     }
     Ok(())
 }

@@ -1,0 +1,297 @@
+//! Group-wise (atlas/template) reduction math: the pure-Rust kernels
+//! behind the serve `reduce` verb and the `claire template` driver.
+//!
+//! Template building iterates "register N subjects to the current mean,
+//! average, repeat". The averaging step runs daemon-side (volumes never
+//! round-trip through the client), in one of two modes:
+//!
+//! * **Log-domain velocity mean** — the solver's stationary velocity `v`
+//!   *is* the log-space coordinate of the diffeomorphism `exp(v)`, so the
+//!   log-Euclidean mean of N transforms is the plain arithmetic mean of
+//!   their velocities ([`log_mean`]). The updated template is the old one
+//!   warped through `exp(s * v_mean)` ([`exponential`] + [`warp_scalar`]),
+//!   with the driver picking the scale (typically negative: move the
+//!   template *toward* the population).
+//! * **Warped-image mean fallback** — when no velocities were retained
+//!   (pre-retention executors, stub tests), the template is the voxelwise
+//!   mean of the subjects warped into template space ([`mean_scalar`]).
+//!
+//! Everything here is deliberately artifact-free (no PJRT, no HLO): the
+//! reduction must run on any daemon — including stub/test deployments —
+//! and its cost (one trilinear pass per squaring) is negligible next to a
+//! registration solve. Accumulation is f64 throughout: a 256^3 mean over
+//! dozens of subjects loses digits in f32.
+
+use crate::error::{Error, ErrorCode, Result};
+use crate::field::{Field3, VecField3};
+
+fn bad(msg: String) -> Error {
+    Error::wire(ErrorCode::BadRequest, msg)
+}
+
+/// Voxelwise arithmetic mean of scalar volumes (the warped-image template
+/// update). All inputs must share one grid size; f64 accumulation.
+pub fn mean_scalar(fields: &[&Field3]) -> Result<Field3> {
+    let first = fields.first().ok_or_else(|| bad("mean of zero volumes".into()))?;
+    let n = first.n;
+    if let Some(f) = fields.iter().find(|f| f.n != n) {
+        return Err(bad(format!("mean over mixed grids ({n}^3 vs {}^3)", f.n)));
+    }
+    let m = n * n * n;
+    let mut acc = vec![0.0f64; m];
+    for f in fields {
+        for (a, &x) in acc.iter_mut().zip(&f.data) {
+            *a += x as f64;
+        }
+    }
+    let inv = 1.0 / fields.len() as f64;
+    Ok(Field3 { n, data: acc.into_iter().map(|a| (a * inv) as f32).collect() })
+}
+
+/// Log-Euclidean mean of stationary velocity fields: the arithmetic mean
+/// of the velocities (they are the log-space coordinates). All inputs
+/// must share one grid size; f64 accumulation.
+pub fn log_mean(fields: &[&VecField3]) -> Result<VecField3> {
+    let first = fields.first().ok_or_else(|| bad("mean of zero velocity fields".into()))?;
+    let n = first.n;
+    if let Some(f) = fields.iter().find(|f| f.n != n) {
+        return Err(bad(format!("mean over mixed grids ({n}^3 vs {}^3)", f.n)));
+    }
+    let m = 3 * n * n * n;
+    let mut acc = vec![0.0f64; m];
+    for f in fields {
+        for (a, &x) in acc.iter_mut().zip(&f.data) {
+            *a += x as f64;
+        }
+    }
+    let inv = 1.0 / fields.len() as f64;
+    Ok(VecField3 { n, data: acc.into_iter().map(|a| (a * inv) as f32).collect() })
+}
+
+/// Scale a velocity field by `s` (log-domain: `s * v` is the log of
+/// `exp(v)^s`, so `s = -1` inverts the mean transform).
+pub fn scale(v: &VecField3, s: f64) -> VecField3 {
+    VecField3 { n: v.n, data: v.data.iter().map(|&x| (x as f64 * s) as f32).collect() }
+}
+
+/// Periodic trilinear sample of one n^3 component at grid coordinates
+/// `(gi, gj, gk)` (index space, row-major `[x1, x2, x3]`).
+fn sample_periodic(data: &[f32], n: usize, gi: f64, gj: f64, gk: f64) -> f32 {
+    let ni = n as i64;
+    let wrap = |i: i64| (((i % ni) + ni) % ni) as usize;
+    let (i0, j0, k0) = (gi.floor(), gj.floor(), gk.floor());
+    let (fi, fj, fk) = (gi - i0, gj - j0, gk - k0);
+    let (i0, j0, k0) = (i0 as i64, j0 as i64, k0 as i64);
+    let mut acc = 0.0f64;
+    for di in 0..2i64 {
+        let wi = if di == 0 { 1.0 - fi } else { fi };
+        for dj in 0..2i64 {
+            let wj = if dj == 0 { 1.0 - fj } else { fj };
+            for dk in 0..2i64 {
+                let wk = if dk == 0 { 1.0 - fk } else { fk };
+                let idx = (wrap(i0 + di) * n + wrap(j0 + dj)) * n + wrap(k0 + dk);
+                acc += (wi * wj * wk) * data[idx] as f64;
+            }
+        }
+    }
+    acc as f32
+}
+
+/// Warp a scalar volume through a displacement field (physical units on
+/// the `[0, 2pi)^3` periodic domain): `out(x) = f(x + u(x))`, trilinear.
+pub fn warp_scalar(f: &Field3, u: &VecField3) -> Result<Field3> {
+    let n = f.n;
+    if u.n != n {
+        return Err(bad(format!("warp grid mismatch ({n}^3 image, {}^3 field)", u.n)));
+    }
+    let inv_h = n as f64 / (2.0 * std::f64::consts::PI);
+    let (ux, uy, uz) = (u.comp(0), u.comp(1), u.comp(2));
+    let mut out = vec![0.0f32; n * n * n];
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                let idx = (i * n + j) * n + k;
+                out[idx] = sample_periodic(
+                    &f.data,
+                    n,
+                    i as f64 + ux[idx] as f64 * inv_h,
+                    j as f64 + uy[idx] as f64 * inv_h,
+                    k as f64 + uz[idx] as f64 * inv_h,
+                );
+            }
+        }
+    }
+    Ok(Field3 { n, data: out })
+}
+
+/// Compose two displacement fields: `out(x) = a(x + b(x)) + b(x)` — one
+/// scaling-and-squaring step when `a == b`.
+fn compose_disp(a: &VecField3, b: &VecField3) -> VecField3 {
+    let n = a.n;
+    let inv_h = n as f64 / (2.0 * std::f64::consts::PI);
+    let (bx, by, bz) = (b.comp(0), b.comp(1), b.comp(2));
+    let mut out = vec![0.0f32; 3 * n * n * n];
+    let m = n * n * n;
+    for c in 0..3 {
+        let ac = a.comp(c);
+        let oc = &mut out[c * m..(c + 1) * m];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let idx = (i * n + j) * n + k;
+                    oc[idx] = sample_periodic(
+                        ac,
+                        n,
+                        i as f64 + bx[idx] as f64 * inv_h,
+                        j as f64 + by[idx] as f64 * inv_h,
+                        k as f64 + bz[idx] as f64 * inv_h,
+                    ) + b.comp(c)[idx];
+                }
+            }
+        }
+    }
+    VecField3 { n, data: out }
+}
+
+/// Exponentiate a stationary velocity field by scaling and squaring with
+/// an explicit squaring count: `u0 = v / 2^k`, then `u <- u o (id+u) + u`
+/// k times, yielding the displacement of `exp(v)`. The exact-cases
+/// contract (pinned by tests): `exp(0)` is the zero displacement, and a
+/// constant velocity exponentiates to the identical constant translation.
+pub fn exp_velocity_with(v: &VecField3, squarings: usize) -> VecField3 {
+    let s = 1.0 / (1u64 << squarings.min(60)) as f64;
+    let mut u = scale(v, s);
+    for _ in 0..squarings {
+        u = compose_disp(&u, &u);
+    }
+    u
+}
+
+/// [`exp_velocity_with`] under an automatically chosen squaring count:
+/// enough that the initial scaled step is below half a voxel (the usual
+/// accuracy/diffeomorphy criterion), capped at 12 squarings.
+pub fn exponential(v: &VecField3) -> VecField3 {
+    let h = v.h();
+    let mut k = 0usize;
+    let mut step = v.max_abs() as f64;
+    while step > 0.5 * h && k < 12 {
+        step *= 0.5;
+        k += 1;
+    }
+    exp_velocity_with(v, k)
+}
+
+/// Relative L2 change between two same-shape scalar volumes:
+/// `||a - b|| / max(||b||, eps)` — the template-convergence criterion the
+/// driver stops on. f64 accumulation.
+pub fn rel_change(a: &Field3, b: &Field3) -> Result<f64> {
+    if a.n != b.n {
+        return Err(bad(format!("rel_change grid mismatch ({}^3 vs {}^3)", a.n, b.n)));
+    }
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.data.iter().zip(&b.data) {
+        let d = x as f64 - y as f64;
+        num += d * d;
+        den += (y as f64) * (y as f64);
+    }
+    Ok(num.sqrt() / den.sqrt().max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(n: usize, f: impl Fn(usize, usize, usize) -> f32) -> Field3 {
+        let mut out = Field3::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    out.set(i, j, k, f(i, j, k));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn means_validate_inputs() {
+        assert!(mean_scalar(&[]).is_err());
+        assert!(log_mean(&[]).is_err());
+        let a = Field3::zeros(4);
+        let b = Field3::zeros(8);
+        assert!(mean_scalar(&[&a, &b]).is_err(), "mixed grids rejected");
+        let va = VecField3::zeros(4);
+        let vb = VecField3::zeros(8);
+        assert!(log_mean(&[&va, &vb]).is_err());
+    }
+
+    #[test]
+    fn scalar_mean_is_voxelwise() {
+        let a = img(4, |i, _, _| i as f32);
+        let b = img(4, |i, _, _| 2.0 + i as f32);
+        let m = mean_scalar(&[&a, &b]).unwrap();
+        assert_eq!(m.at(2, 1, 3), 3.0);
+        assert_eq!(m.at(0, 0, 0), 1.0);
+    }
+
+    #[test]
+    fn exp_of_zero_is_identity() {
+        let z = VecField3::zeros(8);
+        let u = exponential(&z);
+        assert!(u.data.iter().all(|&x| x == 0.0));
+        // Warping through the identity leaves the image untouched.
+        let f = img(8, |i, j, k| (i * 64 + j * 8 + k) as f32);
+        assert_eq!(warp_scalar(&f, &u).unwrap().data, f.data);
+    }
+
+    #[test]
+    fn constant_velocity_exponentiates_to_exact_translation() {
+        // A constant velocity c has exp(c) = translation by c: each
+        // squaring doubles the constant displacement exactly (sampling a
+        // constant field is exact for any interpolation weights).
+        let n = 8;
+        let h = 2.0 * std::f64::consts::PI / n as f64;
+        let mut v = VecField3::zeros(n);
+        // Shift by exactly 2 voxels along x1 so trilinear lands on-grid.
+        for x in v.comp_mut(0) {
+            *x = (2.0 * h) as f32;
+        }
+        let u = exp_velocity_with(&v, 6);
+        for c in 0..3 {
+            for (got, want) in u.comp(c).iter().zip(v.comp(c)) {
+                assert!((got - want).abs() < 1e-4, "exp(const) = const: {got} vs {want}");
+            }
+        }
+        // And the warp is an exact circular shift: out(i) = f(i + 2).
+        let f = img(n, |i, j, k| (i * 100 + j * 10 + k) as f32);
+        let w = warp_scalar(&f, &u).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    let want = f.at((i + 2) % n, j, k);
+                    assert!((w.at(i, j, k) - want).abs() < 1e-2, "shift at ({i},{j},{k})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rel_change_is_zero_on_equal_and_scales() {
+        let a = img(4, |i, j, k| (i + j + k) as f32);
+        assert_eq!(rel_change(&a, &a).unwrap(), 0.0);
+        let b = img(4, |i, j, k| 2.0 * (i + j + k) as f32);
+        let r = rel_change(&b, &a).unwrap();
+        assert!((r - 1.0).abs() < 1e-9, "||2a - a||/||a|| = 1, got {r}");
+        assert!(rel_change(&a, &Field3::zeros(8)).is_err());
+    }
+
+    #[test]
+    fn scale_matches_log_domain_semantics() {
+        let mut v = VecField3::zeros(4);
+        v.data[0] = 2.0;
+        let s = scale(&v, -0.5);
+        assert_eq!(s.data[0], -1.0);
+        assert_eq!(s.n, 4);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod algorithm;
 pub mod baseline;
 pub mod batch;
+pub mod groupwise;
 pub mod intensity;
 pub mod metrics;
 pub mod problem;
@@ -16,6 +17,7 @@ pub use algorithm::{
 };
 pub use baseline::{BaselineKind, BaselineResult, FirstOrderBaseline};
 pub use batch::plan_batch_extent;
+pub use groupwise::{exp_velocity_with, exponential, log_mean, mean_scalar, rel_change, warp_scalar};
 #[allow(deprecated)]
 pub use baseline::run_baseline;
 pub use problem::{RegParams, RegProblem};

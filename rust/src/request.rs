@@ -137,6 +137,13 @@ pub struct JobRequest {
     /// failure can retry safely. `submit_with_retry` fills one in
     /// automatically when the caller left it unset.
     pub dedup: Option<String>,
+    /// Initial-velocity content id. Wire field `"warm_start"`: when set,
+    /// the daemon resolves it against the store at admission time (a
+    /// vector volume previously retained from a solve or uploaded by the
+    /// client) and seeds the solver with it instead of `v = 0`. The
+    /// template driver threads round `r`'s per-subject velocities into
+    /// round `r+1` this way, so later rounds converge in fewer iterations.
+    pub warm_start: Option<String>,
 }
 
 impl Default for JobRequest {
@@ -159,6 +166,7 @@ impl Default for JobRequest {
             incompressible: None,
             verbose: None,
             dedup: None,
+            warm_start: None,
         }
     }
 }
@@ -226,6 +234,16 @@ impl JobRequest {
                 ));
             }
         }
+        // Content ids share the dedup-token length budget: both are
+        // client-chosen strings journaled verbatim.
+        if let Some(id) = &self.warm_start {
+            if id.is_empty() || id.len() > MAX_DEDUP_LEN {
+                return bad(format!(
+                    "job field 'warm_start' must be 1..={MAX_DEDUP_LEN} bytes, got {}",
+                    id.len()
+                ));
+            }
+        }
         // Solver-knob ranges (multires depth, positive iteration caps,
         // finite positive weights) live in `RegParams::check`, run below —
         // one copy, shared with every direct `RegParams` consumer.
@@ -287,6 +305,14 @@ impl JobRequest {
                 key.push_str(&format!("/{tag}={v}"));
             }
         }
+        // A warm start is policy too: seeded jobs may only fuse with jobs
+        // seeded from the *same* velocity (the batched artifact takes no
+        // per-job initial velocity, so mixing seeds would silently drop
+        // them — and the executor additionally falls back to per-job
+        // solves for any warm batch).
+        if let Some(ws) = &self.warm_start {
+            key.push_str(&format!("/ws={ws}"));
+        }
         key
     }
 
@@ -339,6 +365,9 @@ impl JobRequest {
         }
         if let Some(t) = &self.dedup {
             pairs.push(("dedup", Json::str(t)));
+        }
+        if let Some(w) = &self.warm_start {
+            pairs.push(("warm_start", Json::str(w)));
         }
         Json::object(pairs)
     }
@@ -441,6 +470,7 @@ impl JobRequest {
             incompressible: field(j, "incompressible", Json::as_bool, "a boolean")?,
             verbose: field(j, "verbose", Json::as_bool, "a boolean")?,
             dedup: field(j, "dedup", Json::as_str, "a string")?.map(str::to_string),
+            warm_start: field(j, "warm_start", Json::as_str, "a string")?.map(str::to_string),
         })
     }
 
@@ -537,6 +567,11 @@ impl JobRequest {
                 req.dedup = Some(v.to_string());
             }
         }
+        if let Some(v) = args.get("warm-start") {
+            if !v.is_empty() {
+                req.warm_start = Some(v.to_string());
+            }
+        }
         Ok(req)
     }
 }
@@ -565,6 +600,7 @@ mod tests {
             opt("gtol", "", "5e-2"),
             opt("config", "", ""),
             opt("dedup", "", ""),
+            opt("warm-start", "", ""),
             flag("no-continuation", ""),
             flag("incompressible", ""),
             flag("verbose", ""),
@@ -661,9 +697,16 @@ mod tests {
         // Optional knobs stay off the wire when unset (v1 byte-compat) —
         // including the default algorithm.
         let line = JobRequest::default().to_json().render();
-        for absent in
-            ["max_krylov", "gamma", "incompressible", "verbose", "multires", "algorithm", "dedup"]
-        {
+        for absent in [
+            "max_krylov",
+            "gamma",
+            "incompressible",
+            "verbose",
+            "multires",
+            "algorithm",
+            "dedup",
+            "warm_start",
+        ] {
             assert!(!line.contains(absent), "{absent} leaked into {line}");
         }
     }
@@ -683,6 +726,31 @@ mod tests {
         assert!(long.validate().is_err());
         let empty = JobRequest { dedup: Some(String::new()), ..Default::default() };
         assert!(empty.validate().is_err());
+    }
+
+    #[test]
+    fn warm_start_roundtrips_and_validates() {
+        let req = JobRequest { warm_start: Some("deadbeef01".into()), ..Default::default() };
+        let back = JobRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.warm_start.as_deref(), Some("deadbeef01"));
+        assert!(back.validate().is_ok());
+        // The CLI surface feeds the same field.
+        let cli_req = JobRequest::from_args(&cli(&["--warm-start", "deadbeef01"])).unwrap();
+        assert_eq!(cli_req.warm_start.as_deref(), Some("deadbeef01"));
+        // Typing enforced at decode, length at validate (shared budget
+        // with dedup tokens).
+        assert!(JobRequest::from_json(&Json::parse(r#"{"warm_start":7}"#).unwrap()).is_err());
+        let long =
+            JobRequest { warm_start: Some("x".repeat(MAX_DEDUP_LEN + 1)), ..Default::default() };
+        assert!(long.validate().is_err());
+        let empty = JobRequest { warm_start: Some(String::new()), ..Default::default() };
+        assert!(empty.validate().is_err());
+        // Warm-started jobs never fuse with cold ones, and only fuse with
+        // each other under the same seed velocity.
+        let cold = JobRequest::default();
+        assert_ne!(cold.coalesce_key(), req.coalesce_key());
+        let other = JobRequest { warm_start: Some("feedface02".into()), ..Default::default() };
+        assert_ne!(req.coalesce_key(), other.coalesce_key());
     }
 
     #[test]

@@ -22,8 +22,8 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::serve::proto::{
-    read_line_bounded, upload_line, EventMsg, JobSpec, Request, Response, Verdict,
-    MAX_LINE_BYTES, PROTO_VERSION,
+    read_line_bounded, upload_line, EventMsg, JobSpec, ReduceRequest, Request, Response,
+    Verdict, MAX_LINE_BYTES, PROTO_VERSION,
 };
 use crate::serve::scheduler::{JobId, JobView, ServeStats};
 use crate::serve::store::UploadReceipt;
@@ -85,6 +85,23 @@ pub struct ProbeInfo {
     pub proto: u64,
     pub queued: usize,
     pub running: usize,
+}
+
+/// Receipt for a server-side `reduce`: the result volume is in the
+/// daemon's content-addressed store under `id` — it never traveled over
+/// this connection. `kind` is `"scalar"` or `"velocity"`; `delta_rel` is
+/// the relative L2 change against the request's `ref` volume (the
+/// template driver's convergence signal), present only when one was
+/// named.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReduceReceipt {
+    pub id: String,
+    pub n: usize,
+    pub kind: String,
+    pub count: usize,
+    pub bytes: u64,
+    pub dedup: bool,
+    pub delta_rel: Option<f64>,
 }
 
 /// Render job views as an aligned table (shared by the CLI `status`
@@ -415,6 +432,65 @@ impl Client {
                 specs.len()
             ))),
             other => Err(Self::unexpected("submit_batch", other)),
+        }
+    }
+
+    /// [`submit_batch`](Client::submit_batch) under a retry policy: jobs
+    /// whose admission verdict is a *retryable* rejection (`queue_full`,
+    /// `shutting_down`) are resubmitted after full-jitter backoff; the
+    /// returned verdicts stay in original job order. Jobs without a
+    /// caller-chosen `dedup` token get one generated here and **held
+    /// fixed across every attempt**, so a retry that races a
+    /// half-admitted batch (or a response lost in transit) returns the
+    /// originally admitted ids instead of double-enqueueing the work.
+    pub fn submit_batch_with_retry(
+        &mut self,
+        specs: &[JobSpec],
+        policy: &RetryPolicy,
+    ) -> Result<Vec<Verdict>> {
+        let mut specs: Vec<JobSpec> = specs.to_vec();
+        for (i, s) in specs.iter_mut().enumerate() {
+            if s.dedup.is_none() {
+                s.dedup = Some(format!("{}-{i}", self.generated_dedup_token()));
+            }
+        }
+        let mut rng = Rng::new(policy.seed ^ self.seq.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut verdicts = self.submit_batch(&specs)?;
+        for attempt in 1..policy.attempts.max(1) {
+            let pending: Vec<usize> = verdicts
+                .iter()
+                .enumerate()
+                .filter_map(|(i, v)| {
+                    matches!(v, Verdict::Rejected { retryable: true, .. }).then_some(i)
+                })
+                .collect();
+            if pending.is_empty() {
+                break;
+            }
+            thread::sleep(policy.backoff(attempt, &mut rng));
+            let retry: Vec<JobSpec> = pending.iter().map(|&i| specs[i].clone()).collect();
+            for (slot, v) in pending.into_iter().zip(self.submit_batch(&retry)?) {
+                verdicts[slot] = v;
+            }
+        }
+        Ok(verdicts)
+    }
+
+    /// Server-side reduction (v2 `reduce` feature): average retained job
+    /// outputs or stored volumes on the daemon and land the result in
+    /// its content-addressed store — the volumes never round-trip
+    /// through this client. Requires a negotiated v2 session.
+    pub fn reduce(&mut self, req: &ReduceRequest) -> Result<ReduceReceipt> {
+        if self.proto < 2 {
+            return Err(Error::Serve(
+                "reduce requires a v2 session (call hello first)".into(),
+            ));
+        }
+        match self.call(&Request::Reduce(req.clone()))? {
+            Response::Reduced { id, n, kind, count, bytes, dedup, delta_rel } => {
+                Ok(ReduceReceipt { id, n, kind, count, bytes, dedup, delta_rel })
+            }
+            other => Err(Self::unexpected("reduce", other)),
         }
     }
 

@@ -29,23 +29,34 @@
 //! appended to an NDJSON sidecar and replayed on restart so the daemon
 //! reports work done by previous incarnations.
 
+use std::collections::HashMap;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 
 use crate::error::{Error, ErrorCode, Result};
+use crate::field::{Field3, VecField3};
+use crate::registration::groupwise;
 use crate::serve::journal::Journal;
 use crate::serve::proto::{
-    read_request_line_bounded, EventMsg, JobSource, Request, Response, Verdict,
-    MAX_LINE_BYTES, MAX_UPLOAD_LINE_BYTES, PROTO_V2_FEATURES, PROTO_VERSION,
+    read_request_line_bounded, EventMsg, JobSource, ReduceField, ReduceRequest, Request,
+    Response, Verdict, MAX_LINE_BYTES, MAX_UPLOAD_LINE_BYTES, PROTO_V2_FEATURES,
+    PROTO_VERSION,
 };
 use crate::serve::scheduler::{
-    worker_loop, BusMsg, Executor, FailingExecutor, JobPayload, PjrtExecutor, Scheduler,
-    WatchEvent, WatchHandle,
+    worker_loop, BusMsg, Executor, FailingExecutor, JobEvent, JobId, JobPayload, JobState,
+    PjrtExecutor, Scheduler, WatchEvent, WatchHandle,
 };
-use crate::serve::store::VolumeStore;
+use crate::serve::store::{UploadReceipt, VolumeStore};
 use crate::util::sync::thread::{self, JoinHandle};
 use crate::util::sync::{Arc, Mutex};
+
+/// Store pins held on behalf of admitted jobs: job id -> content ids
+/// pinned at admission, released by the event sink when the job reaches a
+/// terminal state. Keeps an admitted job's volumes (and warm-start
+/// velocity) resident under store pressure for exactly the job's
+/// queued+running life.
+type JobPins = Arc<Mutex<HashMap<JobId, Vec<String>>>>;
 
 /// Daemon configuration (CLI flags map 1:1 onto these).
 #[derive(Clone, Debug)]
@@ -196,8 +207,9 @@ impl Daemon {
         let scheduler = Scheduler::new(cfg.queue_cap, cfg.workers);
         scheduler.set_coalesce(cfg.coalesce_b, cfg.coalesce_ms);
         let store = Arc::new(VolumeStore::new(cfg.store_bytes));
+        let pins: JobPins = Arc::new(Mutex::new(HashMap::new()));
 
-        if let Some(path) = &cfg.journal {
+        let journal = if let Some(path) = &cfg.journal {
             let prior = Journal::replay(path)?;
             scheduler.seed_prior_completed(Journal::completed_count(&prior));
             // Seed the id counter past prior incarnations so this run's
@@ -213,11 +225,30 @@ impl Daemon {
                     }
                 }
             }
-            let journal = Arc::new(Journal::open(path)?);
+            Some(Arc::new(Journal::open(path)?))
+        } else {
+            None
+        };
+        // One composite sink: journal (when configured) + admission-pin
+        // release on terminal transitions. Always installed — pins must
+        // drain even on journal-less daemons.
+        {
+            let pins = pins.clone();
+            let store = store.clone();
             scheduler.set_event_sink(Box::new(move |ev| {
-                // Journal IO failure must not take down the scheduler; the
-                // journal is an audit trail, not the source of truth.
-                let _ = journal.append(ev);
+                if let Some(j) = &journal {
+                    // Journal IO failure must not take down the scheduler;
+                    // the journal is an audit trail, not the source of
+                    // truth.
+                    let _ = j.append(ev);
+                }
+                if let JobEvent::Finished { id, .. } | JobEvent::Cancelled { id, .. } = ev {
+                    if let Some(held) = pins.lock().unwrap().remove(id) {
+                        for vid in held {
+                            store.unpin(&vid);
+                        }
+                    }
+                }
             }));
         }
 
@@ -230,8 +261,14 @@ impl Daemon {
         for w in 0..cfg.workers.max(1) {
             let sched = scheduler.clone();
             let factory = factory.clone();
+            let worker_store = store.clone();
             worker_threads.push(thread::spawn(move || match factory(w) {
-                Ok(mut exec) => worker_loop(&sched, w, exec.as_mut()),
+                Ok(mut exec) => {
+                    // Give the executor the data plane so solve outputs
+                    // (velocity, warped image) are retained for `reduce`.
+                    exec.attach_store(worker_store);
+                    worker_loop(&sched, w, exec.as_mut())
+                }
                 Err(e) => {
                     let mut failing =
                         FailingExecutor { msg: format!("worker {w} init failed: {e}") };
@@ -243,6 +280,7 @@ impl Daemon {
         let sched = scheduler.clone();
         let accept_store = store.clone();
         let accept_node = node_id.clone();
+        let accept_pins = pins.clone();
         let accept_thread = thread::spawn(move || {
             for conn in listener.incoming() {
                 if sched.is_shutting_down() {
@@ -252,7 +290,8 @@ impl Daemon {
                 let sched = sched.clone();
                 let store = accept_store.clone();
                 let node = accept_node.clone();
-                thread::spawn(move || handle_connection(stream, sched, store, addr, node));
+                let pins = accept_pins.clone();
+                thread::spawn(move || handle_connection(stream, sched, store, pins, addr, node));
             }
         });
 
@@ -335,6 +374,7 @@ fn handle_connection(
     stream: TcpStream,
     sched: Scheduler,
     store: Arc<VolumeStore>,
+    pins: JobPins,
     addr: SocketAddr,
     node_id: Arc<str>,
 ) {
@@ -437,6 +477,13 @@ fn handle_connection(
                 )),
                 None,
             ),
+            Request::Reduce(_) if !v2 => (
+                Response::from_error(&Error::wire(
+                    ErrorCode::BadRequest,
+                    "unknown command 'reduce'",
+                )),
+                None,
+            ),
             Request::Watch => {
                 // A dead subscription (lagged out, or its forwarder hit a
                 // write error) no longer counts: the documented recovery
@@ -463,7 +510,7 @@ fn handle_connection(
             Request::SubmitBatch(specs) => {
                 let verdicts = specs
                     .into_iter()
-                    .map(|spec| Verdict::from_result(admit(spec, &sched, &store)))
+                    .map(|spec| Verdict::from_result(admit(spec, &sched, &store, &pins)))
                     .collect();
                 (Response::Batch(verdicts), None)
             }
@@ -482,7 +529,7 @@ fn handle_connection(
                     None,
                 )
             }
-            other => dispatch(other, &sched, &store),
+            other => dispatch(other, &sched, &store, &pins),
         };
         // The gate uses the *post-dispatch* session level, so a `hello`
         // that just upgraded the connection echoes its own `seq`; v1
@@ -508,12 +555,25 @@ fn handle_connection(
 /// through; uploaded-source jobs resolve their content ids against the
 /// store *now* (admission time), so later eviction cannot invalidate an
 /// admitted job, and shape mismatches are rejected before queueing.
+///
+/// Every resolved id is pinned against LRU eviction before returning;
+/// the second tuple element lists those held pins so `admit` can hand
+/// them to the terminal-event sink (or release them if submission
+/// fails).
 fn resolve_submit(
     spec: crate::serve::proto::JobSpec,
     store: &VolumeStore,
-) -> Result<JobPayload> {
+) -> Result<(JobPayload, Vec<String>)> {
     match spec.source.clone() {
-        JobSource::Synthetic => Ok(JobPayload::Spec(spec)),
+        JobSource::Synthetic => {
+            if spec.warm_start.is_some() {
+                return Err(Error::wire(
+                    ErrorCode::BadRequest,
+                    "warm_start requires an uploaded-source job",
+                ));
+            }
+            Ok((JobPayload::Spec(spec), Vec::new()))
+        }
         JobSource::Uploaded { m0, m1 } => {
             let fetch = |id: &str| {
                 store.get(id).ok_or_else(|| {
@@ -536,38 +596,118 @@ fn resolve_submit(
                     ),
                 ));
             }
-            Ok(JobPayload::Volumes { spec, m0: f0, m1: f1 })
+            let warm_start = match &spec.warm_start {
+                None => None,
+                Some(ws) => {
+                    let v = store.get_vec(ws).ok_or_else(|| {
+                        Error::wire(
+                            ErrorCode::UnknownVolume,
+                            format!(
+                                "unknown velocity id '{ws}' (never uploaded, or evicted — re-upload)"
+                            ),
+                        )
+                    })?;
+                    if v.n != spec.n {
+                        return Err(Error::wire(
+                            ErrorCode::ShapeMismatch,
+                            format!(
+                                "job n = {} does not match warm_start velocity ({}^3)",
+                                spec.n, v.n
+                            ),
+                        ));
+                    }
+                    Some(v)
+                }
+            };
+            let mut held = vec![m0, m1];
+            if let Some(ws) = &spec.warm_start {
+                held.push(ws.clone());
+            }
+            for id in &held {
+                store.pin(id);
+            }
+            Ok((JobPayload::Volumes { spec, m0: f0, m1: f1, warm_start }, held))
         }
     }
 }
 
 /// Admit one job: validate (the single `JobRequest::validate` path),
-/// resolve its payload against the store, and submit to the scheduler.
-/// Shared by `submit` and `submit_batch`.
+/// resolve its payload against the store (pinning every resolved id),
+/// and submit to the scheduler. Shared by `submit` and `submit_batch`.
+///
+/// Pin lifecycle: the held ids are registered under the job id so the
+/// terminal-event sink releases them when the job finishes or is
+/// cancelled. Two races are closed here: a dedup hit returns an id
+/// whose pins are already registered (the fresh pins are released
+/// immediately), and a job can reach a terminal state before its entry
+/// lands in the map (checked after registration, released inline).
 fn admit(
     spec: crate::serve::proto::JobSpec,
     sched: &Scheduler,
     store: &VolumeStore,
+    pins: &JobPins,
 ) -> Result<crate::serve::scheduler::JobId> {
     spec.validate()?;
     let priority = spec.priority;
     let dedup = spec.dedup.clone();
-    resolve_submit(spec, store).and_then(|p| sched.submit_dedup(priority, p, dedup))
+    let (payload, held) = resolve_submit(spec, store)?;
+    match sched.submit_dedup(priority, payload, dedup) {
+        Ok(id) => {
+            let stale = {
+                let mut map = pins.lock().unwrap();
+                if map.contains_key(&id) {
+                    // Dedup hit: the original admission's pins stand.
+                    Some(held)
+                } else {
+                    map.insert(id, held);
+                    None
+                }
+            };
+            if let Some(fresh) = stale {
+                for vid in fresh {
+                    store.unpin(&vid);
+                }
+            } else if sched.status(id).is_some_and(|v| v.state.is_terminal()) {
+                // Fast-finish race: the sink fired before our insert.
+                if let Some(held) = pins.lock().unwrap().remove(&id) {
+                    for vid in held {
+                        store.unpin(&vid);
+                    }
+                }
+            }
+            Ok(id)
+        }
+        Err(e) => {
+            for vid in held {
+                store.unpin(&vid);
+            }
+            Err(e)
+        }
+    }
 }
 
 /// Run one decoded request against the scheduler + store. Returns the
 /// response plus `Some(drain)` when the daemon should shut down.
 /// (`hello`/`watch`/`submit_batch` are session-level and handled by the
 /// connection loop.)
-fn dispatch(req: Request, sched: &Scheduler, store: &VolumeStore) -> (Response, Option<bool>) {
+fn dispatch(
+    req: Request,
+    sched: &Scheduler,
+    store: &VolumeStore,
+    pins: &JobPins,
+) -> (Response, Option<bool>) {
     match req {
         Request::Ping => (Response::Ok, None),
         Request::Upload { n, data } => match store.put(n, data) {
             Ok(r) => (Response::Uploaded { id: r.id, n: r.n, dedup: r.dedup }, None),
             Err(e) => (Response::from_error(&e), None),
         },
-        Request::Submit(spec) => match admit(spec, sched, store) {
+        Request::Submit(spec) => match admit(spec, sched, store, pins) {
             Ok(id) => (Response::Submitted { id }, None),
+            Err(e) => (Response::from_error(&e), None),
+        },
+        Request::Reduce(r) => match handle_reduce(r, sched, store) {
+            Ok(resp) => (resp, None),
             Err(e) => (Response::from_error(&e), None),
         },
         Request::Status(None) => (Response::Jobs(sched.jobs()), None),
@@ -609,6 +749,160 @@ fn dispatch(req: Request, sched: &Scheduler, store: &VolumeStore) -> (Response, 
     }
 }
 
+/// Collect the retained output ids named by a jobs-mode reduce. Every
+/// job must exist, be done, and have retained the requested field (an
+/// executor without store retention leaves both fields empty — that is
+/// an invalid_state, not a missing volume).
+fn job_output_ids(
+    jobs: &[crate::serve::scheduler::JobId],
+    field: ReduceField,
+    sched: &Scheduler,
+) -> Result<Vec<String>> {
+    let mut out = Vec::with_capacity(jobs.len());
+    for &id in jobs {
+        let view = sched
+            .status(id)
+            .ok_or_else(|| Error::wire(ErrorCode::UnknownJob, format!("no such job {id}")))?;
+        if view.state != JobState::Done {
+            return Err(Error::wire(
+                ErrorCode::InvalidState,
+                format!("job {id} is {} — reduce requires done jobs", view.state.as_str()),
+            ));
+        }
+        let vid = match field {
+            ReduceField::Velocity => view.velocity,
+            ReduceField::Warped => view.warped,
+        };
+        out.push(vid.ok_or_else(|| {
+            Error::wire(
+                ErrorCode::InvalidState,
+                format!("job {id} retained no {} output", field.as_str()),
+            )
+        })?);
+    }
+    Ok(out)
+}
+
+/// Execute a `reduce` verb: average the named inputs server-side, land
+/// the result in the content-addressed store, and answer with its
+/// receipt — volumes never round-trip through the client.
+///
+/// Modes (`jobs` and `ids` are mutually exclusive, enforced at parse):
+/// - `ids` — plain mean of stored scalar volumes (round-0 template
+///   bootstrap). `scale`/`apply` are meaningless here and rejected.
+/// - `jobs` + field `velocity` — log-domain mean of the retained
+///   velocities, optionally scaled, then either stored as a velocity or
+///   (with `apply`) exponentiated and used to warp the named template,
+///   storing the warped scalar.
+/// - `jobs` + field `warped` — plain mean of the retained warped
+///   images. `scale`/`apply` rejected as in `ids` mode.
+///
+/// `ref` only makes sense against a scalar result (rel_change is
+/// scalar-only); `pin` pins the result, `unpin` releases the previous
+/// round's template after success.
+fn handle_reduce(r: ReduceRequest, sched: &Scheduler, store: &VolumeStore) -> Result<Response> {
+    if r.jobs.is_empty() == r.ids.is_empty() {
+        return Err(Error::wire(
+            ErrorCode::BadRequest,
+            "reduce requires exactly one of 'jobs' or 'ids'",
+        ));
+    }
+    let fetch_scalar = |id: &str, what: &str| {
+        store.get(id).ok_or_else(|| {
+            Error::wire(
+                ErrorCode::UnknownVolume,
+                format!("unknown {what} id '{id}' (never uploaded, or evicted — re-upload)"),
+            )
+        })
+    };
+    let velocity_mode = r.ids.is_empty() && r.field == ReduceField::Velocity;
+    if !velocity_mode && (r.scale.is_some() || r.apply.is_some()) {
+        return Err(Error::wire(
+            ErrorCode::BadRequest,
+            "'scale'/'apply' only apply to a velocity reduce",
+        ));
+    }
+    if r.ref_id.is_some() && velocity_mode && r.apply.is_none() {
+        return Err(Error::wire(
+            ErrorCode::BadRequest,
+            "'ref' requires a scalar result (use 'apply', field 'warped', or 'ids')",
+        ));
+    }
+    let count = r.jobs.len().max(r.ids.len());
+    // Compute the result volume: a scalar mean, or a velocity mean that
+    // is either stored directly or applied to a template.
+    let (receipt, kind): (UploadReceipt, &str) = if velocity_mode {
+        let vids = job_output_ids(&r.jobs, ReduceField::Velocity, sched)?;
+        let vols: Vec<_> = vids
+            .iter()
+            .map(|id| {
+                store.get_vec(id).ok_or_else(|| {
+                    Error::wire(
+                        ErrorCode::UnknownVolume,
+                        format!("retained velocity '{id}' was evicted — re-run the job"),
+                    )
+                })
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&VecField3> = vols.iter().map(|a| a.as_ref()).collect();
+        let mut mean = groupwise::log_mean(&refs)?;
+        if let Some(s) = r.scale {
+            mean = groupwise::scale(&mean, s);
+        }
+        match &r.apply {
+            None => (store.put_vec(mean.n, mean.data)?, "velocity"),
+            Some(tid) => {
+                let template = fetch_scalar(tid, "template")?;
+                let phi = groupwise::exponential(&mean);
+                let warped = groupwise::warp_scalar(&template, &phi)?;
+                (store.put(warped.n, warped.data)?, "scalar")
+            }
+        }
+    } else {
+        let ids = if r.ids.is_empty() {
+            job_output_ids(&r.jobs, ReduceField::Warped, sched)?
+        } else {
+            r.ids.clone()
+        };
+        let vols: Vec<_> = ids
+            .iter()
+            .map(|id| fetch_scalar(id, "volume"))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&Field3> = vols.iter().map(|a| a.as_ref()).collect();
+        let mean = groupwise::mean_scalar(&refs)?;
+        (store.put(mean.n, mean.data)?, "scalar")
+    };
+    let delta_rel = match &r.ref_id {
+        None => None,
+        Some(rid) => {
+            debug_assert_eq!(kind, "scalar", "ref gated above");
+            let reference = fetch_scalar(rid, "ref")?;
+            let result = store.get(&receipt.id).ok_or_else(|| {
+                Error::wire(
+                    ErrorCode::InvalidState,
+                    format!("reduce result '{}' evicted before delta", receipt.id),
+                )
+            })?;
+            Some(groupwise::rel_change(&result, &reference)?)
+        }
+    };
+    if r.pin {
+        store.pin(&receipt.id);
+    }
+    if let Some(u) = &r.unpin {
+        store.unpin(u);
+    }
+    Ok(Response::Reduced {
+        id: receipt.id,
+        n: receipt.n,
+        kind: kind.to_string(),
+        count,
+        bytes: receipt.bytes,
+        dedup: receipt.dedup,
+        delta_rel,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -617,10 +911,15 @@ mod tests {
     use crate::serve::scheduler::{stub_report, JobState};
 
     /// Instant stub executor with a per-(variant, n) warm cache emulation.
+    /// When a store is attached it retains deterministic outputs for
+    /// uploaded-source jobs — a constant velocity keyed by the job name
+    /// and the midpoint image — so jobs-mode `reduce` is exercisable
+    /// without PJRT.
     struct Stub {
         seen: std::collections::BTreeSet<(String, usize)>,
         compiles: u64,
         hits: u64,
+        store: Option<Arc<VolumeStore>>,
     }
 
     impl Executor for Stub {
@@ -628,7 +927,7 @@ mod tests {
             &mut self,
             payload: &JobPayload,
             _cx: &crate::registration::SolveCx,
-        ) -> Result<crate::registration::RunReport> {
+        ) -> Result<crate::serve::scheduler::ExecOutcome> {
             let (variant, n, name) = match payload {
                 JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
                     (s.variant.clone(), s.n, s.name())
@@ -650,7 +949,23 @@ mod tests {
             if let JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } = payload {
                 report.levels = s.multires.unwrap_or(1);
             }
-            Ok(report)
+            let mut outcome: crate::serve::scheduler::ExecOutcome = report.into();
+            if let (Some(store), JobPayload::Volumes { spec, m0, m1, .. }) =
+                (&self.store, payload)
+            {
+                let seed =
+                    (name.bytes().map(u64::from).sum::<u64>() % 7) as f32 * 0.01;
+                let vdata = vec![seed; 3 * spec.n * spec.n * spec.n];
+                let wdata: Vec<f32> =
+                    m0.data.iter().zip(&m1.data).map(|(a, b)| 0.5 * (a + b)).collect();
+                outcome.velocity = store.put_vec(spec.n, vdata).ok().map(|r| r.id);
+                outcome.warped = store.put(spec.n, wdata).ok().map(|r| r.id);
+            }
+            Ok(outcome)
+        }
+
+        fn attach_store(&mut self, store: Arc<VolumeStore>) {
+            self.store = Some(store);
         }
 
         fn cache_stats(&self) -> (u64, u64) {
@@ -660,8 +975,12 @@ mod tests {
 
     fn stub_factory() -> ExecutorFactory {
         Arc::new(|_w| {
-            Ok(Box::new(Stub { seen: Default::default(), compiles: 0, hits: 0 })
-                as Box<dyn Executor>)
+            Ok(Box::new(Stub {
+                seen: Default::default(),
+                compiles: 0,
+                hits: 0,
+                store: None,
+            }) as Box<dyn Executor>)
         })
     }
 
@@ -715,8 +1034,10 @@ mod tests {
         let stats = client.stats().unwrap();
         assert_eq!(stats.completed, 2);
         assert_eq!(stats.submitted, 2);
-        assert_eq!(stats.store.volumes, 2);
-        assert_eq!(stats.store.uploads, 2);
+        // 2 wire uploads + the uploaded job's retained velocity + warped
+        // outputs (the stub retains like the real executor).
+        assert_eq!(stats.store.volumes, 4);
+        assert_eq!(stats.store.uploads, 4);
         client.shutdown(true).unwrap();
         handle.join().unwrap();
     }
@@ -776,6 +1097,152 @@ mod tests {
         assert_eq!(view.state, JobState::Failed);
         assert!(view.error.unwrap().contains("no artifacts here"));
         client.shutdown(true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn reduce_ids_bootstrap_pins_and_deltas() {
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+        c.hello().unwrap();
+        let a: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..64).map(|i| i as f32 * 3.0).collect();
+        let ra = c.upload(4, &a).unwrap();
+        let rb = c.upload(4, &b).unwrap();
+        // Round-0 bootstrap: the template is the plain mean, pinned.
+        let t0 = c
+            .reduce(&ReduceRequest {
+                ids: vec![ra.id.clone(), rb.id.clone()],
+                pin: true,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!((t0.kind.as_str(), t0.count, t0.n), ("scalar", 2, 4));
+        assert!(t0.delta_rel.is_none());
+        assert_eq!(c.stats().unwrap().store.pinned, 1);
+        // The mean of the same inputs is content-identical: a dedup
+        // receipt and zero relative change against the previous template.
+        let t1 = c
+            .reduce(&ReduceRequest {
+                ids: vec![ra.id.clone(), rb.id.clone()],
+                ref_id: Some(t0.id.clone()),
+                pin: true,
+                unpin: Some(t0.id.clone()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(t1.id, t0.id);
+        assert!(t1.dedup);
+        assert_eq!(t1.delta_rel, Some(0.0));
+        // pin (+1) then unpin (-1) on the same entry: still pinned once.
+        assert_eq!(c.stats().unwrap().store.pinned, 1);
+        // scale/apply are velocity-mode knobs; ids mode rejects them.
+        let err = c
+            .reduce(&ReduceRequest {
+                ids: vec![ra.id.clone()],
+                scale: Some(0.5),
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), ErrorCode::BadRequest);
+        c.shutdown(false).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn reduce_jobs_averages_retained_outputs() {
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+        c.hello().unwrap();
+        let a: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).sin()).collect();
+        let b: Vec<f32> = (0..64).map(|i| (i as f32 * 0.1).cos()).collect();
+        let ra = c.upload(4, &a).unwrap();
+        let rb = c.upload(4, &b).unwrap();
+        let spec = |m0: &str, m1: &str| JobSpec {
+            n: 4,
+            source: JobSource::Uploaded { m0: m0.into(), m1: m1.into() },
+            ..Default::default()
+        };
+        let j1 = c.submit(&spec(&ra.id, &rb.id)).unwrap();
+        let j2 = c.submit(&spec(&rb.id, &ra.id)).unwrap();
+        let done1 = c.wait_terminal(j1, 5.0).unwrap();
+        let done2 = c.wait_terminal(j2, 5.0).unwrap();
+        assert!(done1.velocity.is_some() && done1.warped.is_some(), "stub retains outputs");
+        assert!(done2.velocity.is_some());
+
+        // Log-domain mean of the retained velocities, stored as one.
+        let vel =
+            c.reduce(&ReduceRequest { jobs: vec![j1, j2], ..Default::default() }).unwrap();
+        assert_eq!((vel.kind.as_str(), vel.count, vel.n), ("velocity", 2, 4));
+        // Apply mode: exp(scale * mean) warps the template server-side,
+        // and `ref` reports the drift against the previous template.
+        let warped_t = c
+            .reduce(&ReduceRequest {
+                jobs: vec![j1, j2],
+                scale: Some(0.5),
+                apply: Some(ra.id.clone()),
+                ref_id: Some(ra.id.clone()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(warped_t.kind, "scalar");
+        assert!(warped_t.delta_rel.is_some());
+        // Warped-image fallback: plain mean of the retained warps.
+        let wm = c
+            .reduce(&ReduceRequest {
+                jobs: vec![j1, j2],
+                field: ReduceField::Warped,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(wm.kind, "scalar");
+        // Error surface: unknown job; `ref` against a raw-velocity result.
+        let err =
+            c.reduce(&ReduceRequest { jobs: vec![999], ..Default::default() }).unwrap_err();
+        assert_eq!(err.code(), ErrorCode::UnknownJob);
+        let err = c
+            .reduce(&ReduceRequest {
+                jobs: vec![j1],
+                ref_id: Some(ra.id.clone()),
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), ErrorCode::BadRequest);
+        c.shutdown(true).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn warm_start_resolves_and_validates_at_admission() {
+        let handle = Daemon::start(test_config(), stub_factory()).unwrap();
+        let mut c = Client::connect(&handle.addr().to_string()).unwrap();
+        c.hello().unwrap();
+        let ra = c.upload(4, &(0..64).map(|i| i as f32).collect::<Vec<f32>>()).unwrap();
+        let rb = c.upload(4, &vec![1.0f32; 64]).unwrap();
+        let base = JobSpec {
+            n: 4,
+            source: JobSource::Uploaded { m0: ra.id.clone(), m1: rb.id.clone() },
+            ..Default::default()
+        };
+        // Synthetic jobs have no uploaded pair to seed.
+        let err = c
+            .submit(&JobSpec { warm_start: Some("x".into()), ..Default::default() })
+            .unwrap_err();
+        assert_eq!(err.code(), ErrorCode::BadRequest);
+        // The velocity id must resolve in the store at admission.
+        let err = c
+            .submit(&JobSpec { warm_start: Some("missing".into()), ..base.clone() })
+            .unwrap_err();
+        assert_eq!(err.code(), ErrorCode::UnknownVolume);
+        // A done job's retained velocity is a valid warm start for the
+        // next round; once terminal, every admission pin is released.
+        let j1 = c.submit(&base).unwrap();
+        let vel = c.wait_terminal(j1, 5.0).unwrap().velocity.unwrap();
+        let j2 = c.submit(&JobSpec { warm_start: Some(vel), ..base.clone() }).unwrap();
+        assert_eq!(c.wait_terminal(j2, 5.0).unwrap().state, JobState::Done);
+        c.wait_idle(5.0).unwrap();
+        assert_eq!(c.stats().unwrap().store.pinned, 0, "terminal jobs hold no pins");
+        c.shutdown(false).unwrap();
         handle.join().unwrap();
     }
 

@@ -31,15 +31,16 @@ pub mod router;
 pub mod scheduler;
 pub mod store;
 
-pub use client::{Client, ProbeInfo, RetryPolicy};
+pub use client::{Client, ProbeInfo, ReduceReceipt, RetryPolicy};
 pub use daemon::{pjrt_factory, Daemon, DaemonConfig, DaemonHandle, ExecutorFactory};
 pub use journal::{Journal, JournalEntry};
 pub use proto::{
-    EventMsg, JobRequest, JobSource, JobSpec, Priority, Request, Response, Verdict,
+    EventMsg, JobRequest, JobSource, JobSpec, Priority, ReduceField, ReduceRequest, Request,
+    Response, Verdict,
 };
 pub use router::{Ring, Router, RouterConfig, RouterHandle};
 pub use scheduler::{
-    worker_loop, BusMsg, Executor, FailingExecutor, JobId, JobPayload, JobState, JobView,
-    NodeStats, PjrtExecutor, Progress, Scheduler, ServeStats, WatchEvent, WatchHandle,
+    worker_loop, BusMsg, ExecOutcome, Executor, FailingExecutor, JobId, JobPayload, JobState,
+    JobView, NodeStats, PjrtExecutor, Progress, Scheduler, ServeStats, WatchEvent, WatchHandle,
 };
-pub use store::{StoreStats, UploadReceipt, VolumeStore};
+pub use store::{content_id, content_id_vec, StoreStats, UploadReceipt, VolumeStore};

@@ -30,6 +30,9 @@
 //!                        "multires":3}}
 //! {"cmd":"submit_batch","jobs":[{...},{...}]}    v2 only
 //! {"cmd":"watch"}                                v2 only: push job events
+//! {"cmd":"reduce","jobs":[3,4,5],"scale":-0.5,   v2 only: server-side mean
+//!  "apply":"<id>","ref":"<id>","pin":true}       of retained job outputs
+//! {"cmd":"reduce","ids":["<id>","<id>"]}         v2 only: mean of volumes
 //! {"cmd":"status"}              all jobs
 //! {"cmd":"status","id":3}       one job
 //! {"cmd":"cancel","id":3}
@@ -84,9 +87,10 @@ pub const PROTO_VERSION: u64 = 2;
 /// Feature tags advertised by `hello` — stable strings, clients gate on
 /// membership rather than the proto number where possible. `probe` marks
 /// a daemon whose v2 `ping` answers with node identity + load (the cheap
-/// health probe the fleet router polls).
-pub const PROTO_V2_FEATURES: [&str; 5] =
-    ["seq", "watch", "submit_batch", "structured_errors", "probe"];
+/// health probe the fleet router polls); `reduce` marks one that averages
+/// retained job outputs / stored volumes server-side (template building).
+pub const PROTO_V2_FEATURES: [&str; 6] =
+    ["seq", "watch", "submit_batch", "structured_errors", "probe", "reduce"];
 
 /// Hard cap on the job count of one `submit_batch` line (the 4 MiB line
 /// cap bounds it physically; this bounds it semantically).
@@ -185,6 +189,83 @@ pub fn read_request_line_bounded<R: std::io::BufRead>(
     }
 }
 
+/// Which retained job output a `reduce` averages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceField {
+    /// The stationary velocity fields (log-domain mean — the default).
+    Velocity,
+    /// The warped subject images (fallback when no velocities were
+    /// retained, e.g. stub executors).
+    Warped,
+}
+
+impl ReduceField {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReduceField::Velocity => "velocity",
+            ReduceField::Warped => "warped",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ReduceField> {
+        match s {
+            "velocity" => Ok(ReduceField::Velocity),
+            "warped" => Ok(ReduceField::Warped),
+            other => Err(Error::wire(
+                ErrorCode::BadRequest,
+                format!("unknown reduce field '{other}'"),
+            )),
+        }
+    }
+}
+
+/// A `reduce` request: average job-output fields (or stored volumes)
+/// server-side, land the result in the content-addressed store, and
+/// answer with its content id — volumes never round-trip through the
+/// client. Exactly one of `jobs` / `ids` must be non-empty.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReduceRequest {
+    /// Done jobs whose retained `field` outputs to average.
+    pub jobs: Vec<JobId>,
+    /// Stored scalar volumes to average directly — the round-0 bootstrap
+    /// (the initial template is the plain mean of the subjects).
+    pub ids: Vec<String>,
+    /// Which retained output to reduce (`jobs` mode). Wire field
+    /// `"field"`; absent = velocity.
+    pub field: ReduceField,
+    /// Scale applied to the mean velocity before exponentiation (velocity
+    /// mode with `apply`). Wire field `"scale"`; absent = 1.
+    pub scale: Option<f64>,
+    /// Content id of a template volume to warp through
+    /// `exp(scale * mean)` server-side (velocity mode): the response then
+    /// names the *warped template*, not the raw mean velocity.
+    pub apply: Option<String>,
+    /// Content id of the previous template: the response carries
+    /// `delta_rel`, the relative L2 change against it — the driver's
+    /// convergence signal without downloading either volume.
+    pub ref_id: Option<String>,
+    /// Pin the reduced result against LRU eviction (the driver unpins the
+    /// previous round's template via `unpin`).
+    pub pin: bool,
+    /// Content id to unpin after the reduce succeeds.
+    pub unpin: Option<String>,
+}
+
+impl Default for ReduceRequest {
+    fn default() -> Self {
+        ReduceRequest {
+            jobs: Vec::new(),
+            ids: Vec::new(),
+            field: ReduceField::Velocity,
+            scale: None,
+            apply: None,
+            ref_id: None,
+            pin: false,
+            unpin: None,
+        }
+    }
+}
+
 /// One decoded client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -206,6 +287,9 @@ pub enum Request {
     Cancel(JobId),
     /// v2: subscribe this connection to server-pushed job events.
     Watch,
+    /// v2: average retained job outputs or stored volumes server-side
+    /// (the template-building reduction; see [`ReduceRequest`]).
+    Reduce(ReduceRequest),
     Stats,
     Shutdown { drain: bool },
 }
@@ -258,6 +342,39 @@ impl Request {
                 Json::object([("cmd", Json::str("cancel")), ("id", Json::num(*id as f64))])
             }
             Request::Watch => Json::object([("cmd", Json::str("watch"))]),
+            Request::Reduce(r) => {
+                // Optional knobs ride only when set, like every other v2
+                // field on this wire.
+                let mut pairs = vec![("cmd", Json::str("reduce"))];
+                if !r.jobs.is_empty() {
+                    pairs.push((
+                        "jobs",
+                        Json::Arr(r.jobs.iter().map(|&i| Json::num(i as f64)).collect()),
+                    ));
+                }
+                if !r.ids.is_empty() {
+                    pairs.push(("ids", Json::Arr(r.ids.iter().map(|s| Json::str(s)).collect())));
+                }
+                if r.field != ReduceField::Velocity {
+                    pairs.push(("field", Json::str(r.field.as_str())));
+                }
+                if let Some(s) = r.scale {
+                    pairs.push(("scale", Json::num(s)));
+                }
+                if let Some(a) = &r.apply {
+                    pairs.push(("apply", Json::str(a)));
+                }
+                if let Some(rf) = &r.ref_id {
+                    pairs.push(("ref", Json::str(rf)));
+                }
+                if r.pin {
+                    pairs.push(("pin", Json::Bool(true)));
+                }
+                if let Some(u) = &r.unpin {
+                    pairs.push(("unpin", Json::str(u)));
+                }
+                Json::object(pairs)
+            }
             Request::Stats => Json::object([("cmd", Json::str("stats"))]),
             Request::Shutdown { drain } => {
                 Json::object([("cmd", Json::str("shutdown")), ("drain", Json::Bool(*drain))])
@@ -393,6 +510,88 @@ impl Request {
             },
             "cancel" => Ok(Request::Cancel(id_of(j)?)),
             "watch" => Ok(Request::Watch),
+            "reduce" => {
+                let jobs: Vec<JobId> = match j.get("jobs") {
+                    None => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| bad("reduce field 'jobs' must be an array".into()))?
+                        .iter()
+                        .map(|x| {
+                            x.as_index().ok_or_else(|| {
+                                bad("reduce field 'jobs' must hold integer job ids".into())
+                            })
+                        })
+                        .collect::<Result<_>>()?,
+                };
+                let ids: Vec<String> = match j.get("ids") {
+                    None => Vec::new(),
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| bad("reduce field 'ids' must be an array".into()))?
+                        .iter()
+                        .map(|x| {
+                            x.as_str().map(str::to_string).ok_or_else(|| {
+                                bad("reduce field 'ids' must hold content-id strings".into())
+                            })
+                        })
+                        .collect::<Result<_>>()?,
+                };
+                if jobs.is_empty() == ids.is_empty() {
+                    return Err(bad(
+                        "reduce requires exactly one of 'jobs' (job ids) or 'ids' \
+                         (content ids), non-empty"
+                            .into(),
+                    ));
+                }
+                if jobs.len() > MAX_BATCH_JOBS || ids.len() > MAX_BATCH_JOBS {
+                    return Err(bad(format!(
+                        "reduce carries {} inputs, expected 1..={MAX_BATCH_JOBS}",
+                        jobs.len().max(ids.len())
+                    )));
+                }
+                let field = match j.get("field") {
+                    None => ReduceField::Velocity,
+                    Some(v) => ReduceField::parse(v.as_str().ok_or_else(|| {
+                        bad("reduce field 'field' must be a string".into())
+                    })?)?,
+                };
+                let str_opt = |k: &str| -> Result<Option<String>> {
+                    match j.get(k) {
+                        None => Ok(None),
+                        Some(v) => v.as_str().map(|s| Some(s.to_string())).ok_or_else(|| {
+                            bad(format!("reduce field '{k}' must be a string"))
+                        }),
+                    }
+                };
+                let scale = match j.get("scale") {
+                    None => None,
+                    Some(v) => Some(v.as_f64().ok_or_else(|| {
+                        bad("reduce field 'scale' must be a number".into())
+                    })?),
+                };
+                if let Some(s) = scale {
+                    if !s.is_finite() {
+                        return Err(bad("reduce field 'scale' must be finite".into()));
+                    }
+                }
+                let pin = match j.get("pin") {
+                    None => false,
+                    Some(v) => v.as_bool().ok_or_else(|| {
+                        bad("reduce field 'pin' must be a boolean".into())
+                    })?,
+                };
+                Ok(Request::Reduce(ReduceRequest {
+                    jobs,
+                    ids,
+                    field,
+                    scale,
+                    apply: str_opt("apply")?,
+                    ref_id: str_opt("ref")?,
+                    pin,
+                    unpin: str_opt("unpin")?,
+                }))
+            }
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown {
                 drain: match j.get("drain") {
@@ -478,6 +677,20 @@ pub enum Response {
     /// Receipt for an `upload`: the volume's content id (what `submit`
     /// references in `source`) and whether it was already resident.
     Uploaded { id: String, n: usize, dedup: bool },
+    /// Receipt for a `reduce`: the content id of the result volume now in
+    /// the store, its grid size, kind (`"scalar"` or `"velocity"`), how
+    /// many inputs were averaged, the result's byte size, whether it was
+    /// already resident, and — when the request named a `ref` — the
+    /// relative L2 change against it (the driver's convergence signal).
+    Reduced {
+        id: String,
+        n: usize,
+        kind: String,
+        count: usize,
+        bytes: u64,
+        dedup: bool,
+        delta_rel: Option<f64>,
+    },
     Job(JobView),
     Jobs(Vec<JobView>),
     Stats(ServeStats),
@@ -516,7 +729,7 @@ fn opt_num(x: Option<f64>) -> Json {
 }
 
 fn job_to_json(v: &JobView) -> Json {
-    Json::object([
+    let mut j = Json::object([
         ("id", Json::num(v.id as f64)),
         ("name", Json::str(&v.name)),
         ("priority", Json::str(v.priority.as_str())),
@@ -549,7 +762,18 @@ fn job_to_json(v: &JobView) -> Json {
             "error",
             v.error.as_deref().map(Json::str).unwrap_or(Json::Null),
         ),
-    ])
+    ]);
+    // Retained output content ids ride only when present: a daemon that
+    // retains nothing keeps its pre-template job bytes unchanged.
+    if let Json::Obj(m) = &mut j {
+        if let Some(vel) = &v.velocity {
+            m.insert("velocity".into(), Json::str(vel));
+        }
+        if let Some(w) = &v.warped {
+            m.insert("warped".into(), Json::str(w));
+        }
+    }
+    j
 }
 
 fn job_from_json(j: &Json) -> Result<JobView> {
@@ -573,6 +797,8 @@ fn job_from_json(j: &Json) -> Result<JobView> {
         levels: j.get("levels").and_then(Json::as_usize),
         converged: j.get("converged").and_then(Json::as_bool),
         error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        velocity: j.get("velocity").and_then(Json::as_str).map(str::to_string),
+        warped: j.get("warped").and_then(Json::as_str).map(str::to_string),
     })
 }
 
@@ -603,6 +829,20 @@ fn node_stats_from_json(j: &Json) -> Result<NodeStats> {
 }
 
 fn stats_to_json(s: &ServeStats) -> Json {
+    let mut store = Json::object([
+        ("volumes", Json::num(s.store.volumes as f64)),
+        ("bytes", Json::num(s.store.bytes as f64)),
+        ("uploads", Json::num(s.store.uploads as f64)),
+        ("dedup_hits", Json::num(s.store.dedup_hits as f64)),
+        ("evictions", Json::num(s.store.evictions as f64)),
+    ]);
+    // The pin count rides only when a pin is held, keeping an idle
+    // daemon's store bytes identical to the pre-template wire.
+    if s.store.pinned > 0 {
+        if let Json::Obj(m) = &mut store {
+            m.insert("pinned".into(), Json::num(s.store.pinned as f64));
+        }
+    }
     let mut j = Json::object([
         ("submitted", Json::num(s.submitted as f64)),
         ("queued", Json::num(s.queued as f64)),
@@ -615,16 +855,7 @@ fn stats_to_json(s: &ServeStats) -> Json {
         ("workers", Json::num(s.workers as f64)),
         ("cache_compiles", Json::num(s.cache_compiles as f64)),
         ("cache_hits", Json::num(s.cache_hits as f64)),
-        (
-            "store",
-            Json::object([
-                ("volumes", Json::num(s.store.volumes as f64)),
-                ("bytes", Json::num(s.store.bytes as f64)),
-                ("uploads", Json::num(s.store.uploads as f64)),
-                ("dedup_hits", Json::num(s.store.dedup_hits as f64)),
-                ("evictions", Json::num(s.store.evictions as f64)),
-            ]),
-        ),
+        ("store", store),
     ]);
     // Per-node breakdown only when one exists (router-merged stats): a
     // single daemon's stats stay byte-identical to the pre-router wire.
@@ -669,6 +900,9 @@ fn stats_from_json(j: &Json) -> Result<ServeStats> {
                 uploads: gs("uploads")?,
                 dedup_hits: gs("dedup_hits")?,
                 evictions: gs("evictions")?,
+                // Absent pin count = a daemon holding no pins (or one
+                // predating pinning) — zero, not an error.
+                pinned: s.get("pinned").and_then(Json::as_usize).unwrap_or(0),
             }
         }
     };
@@ -743,6 +977,21 @@ impl Response {
                     ]),
                 ),
             ]),
+            Response::Reduced { id, n, kind, count, bytes, dedup, delta_rel } => {
+                let mut r = Json::object([
+                    ("id", Json::str(id)),
+                    ("n", Json::num(*n as f64)),
+                    ("kind", Json::str(kind)),
+                    ("count", Json::num(*count as f64)),
+                    ("bytes", Json::num(*bytes as f64)),
+                    ("dedup", Json::Bool(*dedup)),
+                ]);
+                // delta_rel rides only when the request named a ref.
+                if let (Some(d), Json::Obj(m)) = (delta_rel, &mut r) {
+                    m.insert("delta_rel".into(), Json::num(*d));
+                }
+                Json::object([("ok", Json::Bool(true)), ("reduced", r)])
+            }
             Response::Job(v) => Json::object([("ok", Json::Bool(true)), ("job", job_to_json(v))]),
             Response::Jobs(vs) => Json::object([
                 ("ok", Json::Bool(true)),
@@ -834,6 +1083,23 @@ impl Response {
                 id: v.get("id").and_then(Json::as_str).ok_or_else(|| miss("id"))?.to_string(),
                 n: v.get("n").and_then(Json::as_usize).ok_or_else(|| miss("n"))?,
                 dedup: v.get("dedup").and_then(Json::as_bool).ok_or_else(|| miss("dedup"))?,
+            });
+        }
+        if let Some(r) = j.get("reduced") {
+            let miss = |k: &str| Error::Serve(format!("reduce receipt missing '{k}'"));
+            return Ok(Response::Reduced {
+                id: r.get("id").and_then(Json::as_str).ok_or_else(|| miss("id"))?.to_string(),
+                n: r.get("n").and_then(Json::as_usize).ok_or_else(|| miss("n"))?,
+                kind: r
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| miss("kind"))?
+                    .to_string(),
+                count: r.get("count").and_then(Json::as_usize).ok_or_else(|| miss("count"))?,
+                bytes: r.get("bytes").and_then(Json::as_usize).ok_or_else(|| miss("bytes"))?
+                    as u64,
+                dedup: r.get("dedup").and_then(Json::as_bool).ok_or_else(|| miss("dedup"))?,
+                delta_rel: r.get("delta_rel").and_then(Json::as_f64),
             });
         }
         if let Some(v) = j.get("job") {
@@ -1027,6 +1293,22 @@ mod tests {
             Request::Status(Some(4)),
             Request::Cancel(9),
             Request::Watch,
+            Request::Reduce(ReduceRequest { jobs: vec![3, 4, 5], ..Default::default() }),
+            Request::Reduce(ReduceRequest {
+                jobs: vec![7],
+                field: ReduceField::Warped,
+                scale: Some(-0.5),
+                apply: Some("tpl01".into()),
+                ref_id: Some("tpl00".into()),
+                pin: true,
+                unpin: Some("tplff".into()),
+                ..Default::default()
+            }),
+            Request::Reduce(ReduceRequest {
+                ids: vec!["aa".into(), "bb".into()],
+                pin: true,
+                ..Default::default()
+            }),
             Request::Stats,
             Request::Shutdown { drain: false },
         ] {
@@ -1080,6 +1362,42 @@ mod tests {
         let err = Request::parse(r#"{"cmd":"submit_batch","jobs":[{},{"n":"x"}]}"#).unwrap_err();
         assert!(err.to_string().contains("jobs[1]"), "{err}");
         assert_eq!(err.code(), ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn reduce_parse_is_validated_and_sparse() {
+        // Exactly one of jobs/ids, non-empty.
+        assert!(Request::parse(r#"{"cmd":"reduce"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[],"ids":[]}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[1],"ids":["a"]}"#).is_err());
+        // Element and knob typing is strict.
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":["1"]}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[1.5]}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","ids":[7]}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[1],"field":"images"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[1],"scale":"x"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[1],"pin":"yes"}"#).is_err());
+        assert!(Request::parse(r#"{"cmd":"reduce","jobs":[1],"apply":3}"#).is_err());
+        // Decode failures carry the structured bad_request code.
+        assert_eq!(
+            Request::parse(r#"{"cmd":"reduce"}"#).unwrap_err().code(),
+            ErrorCode::BadRequest
+        );
+        // Absent knobs take defaults ...
+        let min = Request::parse(r#"{"cmd":"reduce","jobs":[1]}"#).unwrap();
+        let Request::Reduce(r) = min else { panic!("reduce expected") };
+        assert_eq!(r.field, ReduceField::Velocity);
+        assert_eq!((r.scale, r.pin), (None, false));
+        assert!(r.apply.is_none() && r.ref_id.is_none() && r.unpin.is_none());
+        // ... and stay off the wire when unset (emit-only-when-present).
+        let line = Request::Reduce(ReduceRequest {
+            jobs: vec![1],
+            ..Default::default()
+        })
+        .to_line();
+        for absent in ["ids", "field", "scale", "apply", "ref", "pin", "unpin"] {
+            assert!(!line.contains(absent), "{absent} leaked into {line}");
+        }
     }
 
     #[test]
@@ -1218,7 +1536,26 @@ mod tests {
             levels: Some(3),
             converged: Some(true),
             error: None,
+            velocity: None,
+            warped: None,
         };
+        // Absent retained outputs stay off the wire entirely (the
+        // pre-template job bytes).
+        let line = Response::Job(v.clone()).to_line();
+        assert!(!line.contains("velocity") && !line.contains("warped"), "{line}");
+        // Present ones roundtrip.
+        let retained = JobView {
+            velocity: Some("vel01".into()),
+            warped: Some("img02".into()),
+            ..v.clone()
+        };
+        match Response::parse(&Response::Job(retained).to_line()).unwrap() {
+            Response::Job(got) => {
+                assert_eq!(got.velocity.as_deref(), Some("vel01"));
+                assert_eq!(got.warped.as_deref(), Some("img02"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
         match Response::parse(&Response::Job(v.clone()).to_line()).unwrap() {
             Response::Job(got) => {
                 assert_eq!(got.id, v.id);
@@ -1262,6 +1599,7 @@ mod tests {
                 uploads: 5,
                 dedup_hits: 2,
                 evictions: 1,
+                pinned: 0,
             },
             nodes: Vec::new(),
             batches: 0,
@@ -1274,6 +1612,15 @@ mod tests {
         let line = Response::Stats(s.clone()).to_line();
         assert!(!line.contains("nodes"), "{line}");
         assert!(!line.contains("batches") && !line.contains("coalesced"), "{line}");
+        // A pin-free store never mentions the pin counter; a pinning one
+        // roundtrips it.
+        assert!(!line.contains("pinned"), "{line}");
+        let pinning =
+            ServeStats { store: StoreStats { pinned: 2, ..s.store }, ..s.clone() };
+        match Response::parse(&Response::Stats(pinning).to_line()).unwrap() {
+            Response::Stats(got) => assert_eq!(got.store.pinned, 2),
+            other => panic!("unexpected {other:?}"),
+        }
         // Non-zero batch counters roundtrip.
         let busy = ServeStats { batches: 3, coalesced: 11, ..s.clone() };
         match Response::parse(&Response::Stats(busy.clone()).to_line()).unwrap() {
@@ -1413,6 +1760,54 @@ mod tests {
                         msg: "queue full".into()
                     }
                 );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduced_receipt_roundtrips_and_nests() {
+        let r = Response::Reduced {
+            id: "tpl01".into(),
+            n: 16,
+            kind: "velocity".into(),
+            count: 4,
+            bytes: 49152,
+            dedup: false,
+            delta_rel: None,
+        };
+        let line = r.to_line_v2(Some(3));
+        // delta_rel rides only when a ref was named.
+        assert!(!line.contains("delta_rel"), "{line}");
+        // The receipt nests under "reduced": no top-level keys that an
+        // older decoder would misread (id -> submitted, job, stats, ...).
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("id").is_none() && j.get("job").is_none(), "{line}");
+        match Response::parse(&line).unwrap() {
+            Response::Reduced { id, n, kind, count, bytes, dedup, delta_rel } => {
+                assert_eq!(id, "tpl01");
+                assert_eq!((n, count), (16, 4));
+                assert_eq!(kind, "velocity");
+                assert_eq!(bytes, 49152);
+                assert!(!dedup);
+                assert_eq!(delta_rel, None);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let with_delta = Response::Reduced {
+            id: "tpl02".into(),
+            n: 16,
+            kind: "scalar".into(),
+            count: 4,
+            bytes: 16384,
+            dedup: true,
+            delta_rel: Some(0.125),
+        };
+        match Response::parse(&with_delta.to_line()).unwrap() {
+            Response::Reduced { delta_rel, dedup, kind, .. } => {
+                assert_eq!(delta_rel, Some(0.125));
+                assert!(dedup);
+                assert_eq!(kind, "scalar");
             }
             other => panic!("unexpected {other:?}"),
         }

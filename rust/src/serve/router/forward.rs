@@ -4,7 +4,7 @@
 
 use crate::error::{Error, ErrorCode, Result};
 use crate::request::{JobRequest, JobSource};
-use crate::serve::proto::{Response, PROTO_VERSION};
+use crate::serve::proto::{ReduceRequest, Response, PROTO_VERSION};
 use crate::serve::router::Fleet;
 use crate::serve::scheduler::{JobId, JobView, NodeStats, ServeStats};
 use crate::serve::store::content_id;
@@ -65,7 +65,18 @@ fn candidates(fleet: &Fleet, spec: &JobRequest) -> Result<Vec<usize>> {
                 };
                 let h0 = st.volumes.get(m0).ok_or_else(|| miss(m0))?;
                 let h1 = st.volumes.get(m1).ok_or_else(|| miss(m1))?;
-                h0.holders.intersection(&h1.holders).copied().collect()
+                let mut both: Vec<usize> =
+                    h0.holders.intersection(&h1.holders).copied().collect();
+                // A warm-start velocity the router knows about (e.g. a
+                // reduce result) narrows the candidates further; ids it
+                // never saw (backend-retained outputs) are left to pair
+                // affinity, and the backend validates at admission.
+                if let Some(ws) = spec.warm_start.as_deref() {
+                    if let Some(hw) = st.volumes.get(ws) {
+                        both.retain(|s| hw.holders.contains(s));
+                    }
+                }
+                both
             };
             if both.is_empty() {
                 return Err(Error::wire(
@@ -140,6 +151,84 @@ pub(crate) fn handle_cancel(fleet: &Fleet, global: JobId) -> Result<()> {
     fleet.pool.with_client(slot, |c| c.cancel(local))
 }
 
+/// Forward a `reduce`: the reduction runs where the volumes are, so
+/// every input must resolve to ONE backend. Jobs mode translates the
+/// router-global job ids to backend-local ids and requires every named
+/// job to have been routed to the same slot; ids mode picks a common
+/// holder from the volume index (ranked by ring preference on the input
+/// key so repeat reduces land on the same node). Inputs spanning
+/// backends are `invalid_state` — the router does not migrate volumes
+/// (documented limitation: raise `replication` so a round's pairs
+/// co-locate, or point the template driver at one daemon).
+///
+/// The result volume lands on that backend's store only; it is recorded
+/// in the router's volume index so a later `submit` naming the reduced
+/// template resolves.
+pub(crate) fn handle_reduce(fleet: &Fleet, req: ReduceRequest) -> Result<Response> {
+    let (slot, fwd) = if !req.jobs.is_empty() {
+        let mut slot: Option<usize> = None;
+        let mut local = Vec::with_capacity(req.jobs.len());
+        for &global in &req.jobs {
+            let (s, l) = fleet.route(global)?;
+            if *slot.get_or_insert(s) != s {
+                return Err(Error::wire(
+                    ErrorCode::InvalidState,
+                    "reduce inputs span backends; the router cannot reduce across \
+                     nodes — raise replication so the round's pairs co-locate",
+                ));
+            }
+            local.push(l);
+        }
+        let mut fwd = req.clone();
+        fwd.jobs = local;
+        (slot.expect("jobs checked non-empty"), fwd)
+    } else {
+        // ids mode: every input — and the apply/ref templates, which the
+        // backend must also resolve — needs a shared live holder.
+        let mut need: Vec<&str> = req.ids.iter().map(String::as_str).collect();
+        need.extend(req.apply.as_deref());
+        need.extend(req.ref_id.as_deref());
+        let common: Vec<usize> = {
+            let st = fleet.st.lock().unwrap();
+            let mut holders: Option<std::collections::BTreeSet<usize>> = None;
+            for id in &need {
+                let entry = st.volumes.get(*id).ok_or_else(|| {
+                    Error::wire(
+                        ErrorCode::UnknownVolume,
+                        format!("unknown volume id '{id}' (not uploaded through this router)"),
+                    )
+                })?;
+                holders = Some(match holders {
+                    None => entry.holders.clone(),
+                    Some(h) => h.intersection(&entry.holders).copied().collect(),
+                });
+            }
+            holders.map(|h| h.into_iter().collect()).unwrap_or_default()
+        };
+        let key = need.join(":");
+        let pref = fleet.ring.place(&key, 0, |s| fleet.pool.is_up(s));
+        let Some(slot) = pref.into_iter().find(|s| common.contains(s)) else {
+            return Err(Error::wire(
+                ErrorCode::InvalidState,
+                "reduce inputs share no live backend; re-upload them \
+                 (or raise replication so they co-locate)",
+            ));
+        };
+        (slot, req.clone())
+    };
+    let r = fleet.pool.with_client(slot, |c| c.reduce(&fwd))?;
+    fleet.record_volume(&r.id, r.n, &[slot]);
+    Ok(Response::Reduced {
+        id: r.id,
+        n: r.n,
+        kind: r.kind,
+        count: r.count,
+        bytes: r.bytes,
+        dedup: r.dedup,
+        delta_rel: r.delta_rel,
+    })
+}
+
 /// Merged job listing: fan out to live backends and translate. Jobs
 /// submitted directly to a backend have no global id and are invisible
 /// here — the router only speaks for work it placed.
@@ -196,6 +285,7 @@ pub(crate) fn handle_stats(fleet: &Fleet) -> ServeStats {
                 total.store.uploads += s.store.uploads;
                 total.store.dedup_hits += s.store.dedup_hits;
                 total.store.evictions += s.store.evictions;
+                total.store.pinned += s.store.pinned;
                 total.batches += s.batches;
                 total.coalesced += s.coalesced;
                 nodes.push(NodeStats {

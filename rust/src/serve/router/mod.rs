@@ -514,6 +514,13 @@ fn handle_router_connection(stream: TcpStream, fleet: Arc<Fleet>) {
                 )),
                 None,
             ),
+            Request::Reduce(_) if !v2 => (
+                Response::from_error(&Error::wire(
+                    ErrorCode::BadRequest,
+                    "unknown command 'reduce'",
+                )),
+                None,
+            ),
             Request::Watch => {
                 if watch_sub.is_some_and(|id| fleet.fan.is_subscribed(id)) {
                     (
@@ -559,6 +566,10 @@ fn handle_router_connection(stream: TcpStream, fleet: Arc<Fleet>) {
             },
             Request::Cancel(id) => match forward::handle_cancel(&fleet, id) {
                 Ok(()) => (Response::Ok, None),
+                Err(e) => (Response::from_error(&e), None),
+            },
+            Request::Reduce(r) => match forward::handle_reduce(&fleet, r) {
+                Ok(resp) => (resp, None),
                 Err(e) => (Response::from_error(&e), None),
             },
             Request::Stats => (Response::Stats(forward::handle_stats(&fleet)), None),

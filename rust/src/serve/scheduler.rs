@@ -37,14 +37,14 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, ErrorCode, Result};
-use crate::field::Field3;
+use crate::field::{Field3, VecField3};
 use crate::registration::algorithm::{IterEvent, Session, SolveCx, SolveObserver};
 use crate::registration::problem::{RegParams, RegProblem};
 use crate::registration::report::RunReport;
 use crate::registration::solver::{GaussNewtonKrylov, IterRecord};
 use crate::runtime::OpRegistry;
 use crate::serve::proto::{JobSpec, Priority};
-use crate::serve::store::StoreStats;
+use crate::serve::store::{StoreStats, VolumeStore};
 use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use crate::util::sync::{Arc, Condvar, Mutex};
 
@@ -95,7 +95,16 @@ impl JobState {
 #[derive(Clone, Debug)]
 pub enum JobPayload {
     Spec(JobSpec),
-    Volumes { spec: JobSpec, m0: Arc<Field3>, m1: Arc<Field3> },
+    Volumes {
+        spec: JobSpec,
+        m0: Arc<Field3>,
+        m1: Arc<Field3>,
+        /// Initial velocity resolved from the store at admission (the
+        /// request's `warm_start` content id), pinned into the payload so
+        /// eviction cannot invalidate an admitted job. The template
+        /// driver seeds round R+1 solves with round R's velocities here.
+        warm_start: Option<Arc<VecField3>>,
+    },
     Problem { problem: RegProblem, params: RegParams },
 }
 
@@ -167,6 +176,15 @@ pub struct JobView {
     pub levels: Option<usize>,
     pub converged: Option<bool>,
     pub error: Option<String>,
+    /// Content id of the solve's final velocity, retained in the volume
+    /// store by executors with a store attached (`None` otherwise — stub
+    /// executors and storeless embedders). The `reduce` verb resolves
+    /// these server-side, so driving a template round never downloads a
+    /// velocity field.
+    pub velocity: Option<String>,
+    /// Content id of the warped moving image m0 ∘ φ⁻¹, retained alongside
+    /// the velocity when the transport op is available.
+    pub warped: Option<String>,
 }
 
 /// One backend's slice of a router-merged [`ServeStats`]: identity,
@@ -237,6 +255,9 @@ struct JobRecord {
     wall_s: Option<f64>,
     error: Option<String>,
     report: Option<RunReport>,
+    /// Store content ids of retained solve outputs (see `JobView`).
+    velocity: Option<String>,
+    warped: Option<String>,
     /// Cooperative cancellation flag, shared with the worker's `SolveCx`:
     /// `cancel` on a running job sets it, and the solver observes it at
     /// the next iteration boundary.
@@ -745,6 +766,8 @@ impl Scheduler {
                     wall_s: None,
                     error: None,
                     report: None,
+                    velocity: None,
+                    warped: None,
                     cancel: Arc::new(AtomicBool::new(false)),
                     progress: None,
                 },
@@ -935,16 +958,18 @@ impl Scheduler {
     /// solve that observed its cancellation flag (`Error::Cancelled`)
     /// lands in `Cancelled` — the `running → cancelled` transition — with
     /// its partial-history length preserved in the progress view.
-    pub fn complete(&self, id: JobId, result: Result<RunReport>, wall_s: f64) {
+    pub fn complete(&self, id: JobId, result: Result<ExecOutcome>, wall_s: f64) {
         let mut st = self.inner.st.lock().unwrap();
         let Some(rec) = st.jobs.get_mut(&id) else { return };
         let latency = rec.submitted_at.elapsed().as_secs_f64();
         rec.latency_s = Some(latency);
         rec.wall_s = Some(wall_s);
         match result {
-            Ok(report) => {
+            Ok(outcome) => {
                 rec.state = JobState::Done;
-                rec.report = Some(report);
+                rec.report = Some(outcome.report);
+                rec.velocity = outcome.velocity;
+                rec.warped = outcome.warped;
             }
             Err(Error::Cancelled { history }) => {
                 rec.state = JobState::Cancelled;
@@ -1190,10 +1215,31 @@ fn view_of(id: JobId, r: &JobRecord) -> JobView {
         levels: r.report.as_ref().map(|rep| rep.levels),
         converged: r.report.as_ref().map(|rep| rep.converged),
         error: r.error.clone(),
+        velocity: r.velocity.clone(),
+        warped: r.warped.clone(),
     }
 }
 
 // -- Execution backend ------------------------------------------------------
+
+/// What one executed job hands back to the scheduler: the wire-facing
+/// report plus store content ids of any retained outputs. Executors
+/// without a store attached (stubs, storeless embedders) return a bare
+/// report via `From<RunReport>` — `Ok(stub_report("x").into())`.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    pub report: RunReport,
+    /// Content id of the final velocity, when retained in the store.
+    pub velocity: Option<String>,
+    /// Content id of the warped moving image, when retained.
+    pub warped: Option<String>,
+}
+
+impl From<RunReport> for ExecOutcome {
+    fn from(report: RunReport) -> ExecOutcome {
+        ExecOutcome { report, velocity: None, warped: None }
+    }
+}
 
 /// One worker's job runner. Implementations own whatever per-worker context
 /// they need (the real one owns a PJRT client + operator cache; tests use
@@ -1204,7 +1250,7 @@ pub trait Executor {
     /// (`Session::solve_cx`) so a running job can be cancelled at
     /// iteration boundaries and report live progress; a stub that ignores
     /// it simply runs uninterruptible, progress-silent jobs.
-    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport>;
+    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<ExecOutcome>;
 
     /// Run a coalesced batch, returning one result per member in order.
     /// The default runs members sequentially through `execute`, so stub
@@ -1212,9 +1258,15 @@ pub trait Executor {
     /// per-job semantics under a coalescing scheduler; `PjrtExecutor`
     /// overrides this to solve compatible members through one warm batched
     /// executable with per-subject convergence masking.
-    fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<RunReport>> {
+    fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<ExecOutcome>> {
         jobs.iter().map(|(payload, cx)| self.execute(payload, cx)).collect()
     }
+
+    /// Give the executor a handle to the daemon's volume store so solve
+    /// outputs (velocity, warped image) can be retained server-side for
+    /// the `reduce` verb. Default: ignore it — retention is opt-in and
+    /// stub executors stay storeless.
+    fn attach_store(&mut self, _store: Arc<VolumeStore>) {}
 
     /// Cumulative (compiles, warm hits) of this worker's operator cache.
     fn cache_stats(&self) -> (u64, u64) {
@@ -1227,20 +1279,28 @@ pub trait Executor {
 /// worker process lifetime, not once per request.
 pub struct PjrtExecutor {
     registry: OpRegistry,
+    /// Attached by the daemon at worker spawn; when present, solve
+    /// outputs are retained as content-addressed store entries.
+    store: Option<Arc<VolumeStore>>,
 }
 
 impl PjrtExecutor {
     pub fn open(artifacts_dir: &Path) -> Result<PjrtExecutor> {
-        Ok(PjrtExecutor { registry: OpRegistry::open(artifacts_dir)? })
+        Ok(PjrtExecutor { registry: OpRegistry::open(artifacts_dir)?, store: None })
     }
 
-    /// Materialize a payload into the problem + validated params a solve
-    /// needs (shared by the single and batched execute paths).
-    fn resolve(&self, payload: &JobPayload) -> Result<(RegProblem, RegParams)> {
+    /// Materialize a payload into the problem + validated params + warm
+    /// start a solve needs (shared by the single and batched execute
+    /// paths).
+    fn resolve(
+        &self,
+        payload: &JobPayload,
+    ) -> Result<(RegProblem, RegParams, Option<Arc<VecField3>>)> {
         Ok(match payload {
             JobPayload::Spec(spec) => (
                 crate::data::synth::nirep_analog_pair(&self.registry, spec.n, &spec.subject)?,
                 spec.validate()?,
+                None,
             ),
             // `RegProblem` owns its fields, so executing an uploaded job
             // copies both volumes once. That is bounded by the worker
@@ -1249,25 +1309,53 @@ impl PjrtExecutor {
             // resident copy per distinct volume and dedup'd uploads.
             // Making `RegProblem` hold `Arc<Field3>` would ripple through
             // every layer for a per-job memcpy.
-            JobPayload::Volumes { spec, m0, m1 } => (
+            JobPayload::Volumes { spec, m0, m1, warm_start } => (
                 RegProblem::new(spec.name(), (**m0).clone(), (**m1).clone()),
                 spec.validate()?,
+                warm_start.clone(),
             ),
-            JobPayload::Problem { problem, params } => (problem.clone(), params.clone()),
+            JobPayload::Problem { problem, params } => (problem.clone(), params.clone(), None),
         })
+    }
+
+    /// Retain a finished solve's outputs in the attached store: the final
+    /// velocity always, the warped image m0 ∘ φ⁻¹ when the transport op
+    /// lowers for this grid/variant. Best-effort by design — retention
+    /// failures (budget, missing op) must never fail a solved job, they
+    /// only cost the `reduce` verb a resolvable id.
+    fn retain(
+        &self,
+        solver: &GaussNewtonKrylov,
+        problem: &RegProblem,
+        res: &crate::registration::solver::RegResult,
+    ) -> (Option<String>, Option<String>) {
+        let Some(store) = &self.store else { return (None, None) };
+        let velocity = store.put_vec(res.v.n, res.v.data.clone()).ok().map(|r| r.id);
+        let warped = solver
+            .transport(&res.v, &problem.m0.data)
+            .and_then(|data| store.put(problem.m0.n, data))
+            .ok()
+            .map(|r| r.id);
+        (velocity, warped)
     }
 }
 
 impl Executor for PjrtExecutor {
-    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport> {
-        let (problem, params) = self.resolve(payload)?;
+    fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<ExecOutcome> {
+        let (problem, params, warm) = self.resolve(payload)?;
         // The unified entry point: `params.algorithm` selects the
         // optimizer (GN-Krylov or a first-order baseline), `multires`
         // picks grid continuation, and the scheduler's context makes the
         // solve observable and cancellable at iteration boundaries.
-        let res = Session::new(&self.registry).params(params.clone()).solve_cx(&problem, cx)?;
+        let mut session = Session::new(&self.registry).params(params.clone());
+        if let Some(ws) = warm {
+            session = session.warm_start((*ws).clone());
+        }
+        let res = session.solve_cx(&problem, cx)?;
         let solver = GaussNewtonKrylov::new(&self.registry, params);
-        RunReport::build(&solver, &problem, &res)
+        let (velocity, warped) = self.retain(&solver, &problem, &res);
+        let report = RunReport::build(&solver, &problem, &res)?;
+        Ok(ExecOutcome { report, velocity, warped })
     }
 
     /// Coalesced members solve through `Session::solve_batch_cx`: one warm
@@ -1275,19 +1363,26 @@ impl Executor for PjrtExecutor {
     /// per-subject convergence masking, falling back to sequential solves
     /// inside the session when no batched artifact fits. A member that
     /// fails to materialize (bad spec, unknown subject) fails alone; the
-    /// rest still batch.
-    fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<RunReport>> {
-        if jobs.len() < 2 {
+    /// rest still batch. Warm-started members always take the sequential
+    /// path: the batched artifact evaluates all subjects from one zero
+    /// initial iterate, and a per-subject seed cannot ride along (the
+    /// coalesce key already keeps differently-seeded jobs apart; this
+    /// guards the same-seed fusion case).
+    fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<ExecOutcome>> {
+        let any_warm = jobs
+            .iter()
+            .any(|(p, _)| matches!(p, JobPayload::Volumes { warm_start: Some(_), .. }));
+        if jobs.len() < 2 || any_warm {
             return jobs.iter().map(|(payload, cx)| self.execute(payload, cx)).collect();
         }
-        let mut out: Vec<Option<Result<RunReport>>> = (0..jobs.len()).map(|_| None).collect();
+        let mut out: Vec<Option<Result<ExecOutcome>>> = (0..jobs.len()).map(|_| None).collect();
         let mut probs = Vec::new();
         let mut cxs = Vec::new();
         let mut idxs = Vec::new();
         let mut params: Option<RegParams> = None;
         for (i, (payload, cx)) in jobs.iter().enumerate() {
             match self.resolve(payload) {
-                Ok((prob, p)) => {
+                Ok((prob, p, _)) => {
                     // Members share a coalesce key, so their validated
                     // params agree on everything the solver reads.
                     params.get_or_insert(p);
@@ -1304,7 +1399,11 @@ impl Executor for PjrtExecutor {
             match Session::new(&self.registry).params(params).solve_batch_cx(&prob_refs, &cxs) {
                 Ok(results) => {
                     for ((&i, prob), res) in idxs.iter().zip(probs.iter()).zip(results) {
-                        out[i] = Some(res.and_then(|r| RunReport::build(&solver, prob, &r)));
+                        out[i] = Some(res.and_then(|r| {
+                            let (velocity, warped) = self.retain(&solver, prob, &r);
+                            let report = RunReport::build(&solver, prob, &r)?;
+                            Ok(ExecOutcome { report, velocity, warped })
+                        }));
                     }
                 }
                 Err(e) => {
@@ -1317,6 +1416,10 @@ impl Executor for PjrtExecutor {
             }
         }
         out.into_iter().map(|o| o.expect("every batch member has a result")).collect()
+    }
+
+    fn attach_store(&mut self, store: Arc<VolumeStore>) {
+        self.store = Some(store);
     }
 
     fn cache_stats(&self) -> (u64, u64) {
@@ -1332,7 +1435,7 @@ pub struct FailingExecutor {
 }
 
 impl Executor for FailingExecutor {
-    fn execute(&mut self, _payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
+    fn execute(&mut self, _payload: &JobPayload, _cx: &SolveCx) -> Result<ExecOutcome> {
         Err(Error::Serve(self.msg.clone()))
     }
 }
@@ -1434,13 +1537,13 @@ mod tests {
     }
 
     impl Executor for Recording {
-        fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
+        fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<ExecOutcome> {
             let name = payload.name();
             self.ran.push(name.clone());
             if name.contains("poison") {
                 return Err(Error::Serve("injected failure".into()));
             }
-            Ok(stub_report(&name))
+            Ok(stub_report(&name).into())
         }
 
         fn cache_stats(&self) -> (u64, u64) {
@@ -1463,7 +1566,7 @@ mod tests {
         let mut order = Vec::new();
         while let Some((id, _)) = sched.next_job(0) {
             order.push(id);
-            sched.complete(id, Ok(stub_report("x")), 0.0);
+            sched.complete(id, Ok(stub_report("x").into()), 0.0);
         }
         assert_eq!(order, vec![e1, u1, b1, b2]);
     }
@@ -1480,7 +1583,7 @@ mod tests {
         let mut order = Vec::new();
         while let Some((id, _)) = sched.next_job(0) {
             order.push(id);
-            sched.complete(id, Ok(stub_report("x")), 0.0);
+            sched.complete(id, Ok(stub_report("x").into()), 0.0);
         }
         assert_eq!(order, ids, "same-priority jobs drain in submission order");
     }
@@ -1515,7 +1618,7 @@ mod tests {
         let mut order = Vec::new();
         while let Some((id, _)) = sched.next_job(0) {
             order.push(id);
-            sched.complete(id, Ok(stub_report("x")), 0.0);
+            sched.complete(id, Ok(stub_report("x").into()), 0.0);
         }
         assert_eq!(order, vec![c]);
     }
@@ -1545,7 +1648,7 @@ mod tests {
                 sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap();
             let (got, _) = sched.next_job(0).unwrap();
             assert_eq!(got, id);
-            sched.complete(id, Ok(stub_report("x")), 0.0);
+            sched.complete(id, Ok(stub_report("x").into()), 0.0);
         }
         let views = sched.jobs();
         assert_eq!(views.len(), 1024, "history bounded at retention");
@@ -1569,7 +1672,7 @@ mod tests {
                 .unwrap();
             let (got, _) = sched.next_job(0).unwrap();
             assert_eq!(got, id, "emergencies pop before the stale batch entry");
-            sched.complete(id, Ok(stub_report("e")), 0.0);
+            sched.complete(id, Ok(stub_report("e").into()), 0.0);
         }
         assert!(sched.status(x).is_none(), "cancelled record evicted by retention");
         sched.shutdown(true);
@@ -1585,7 +1688,7 @@ mod tests {
     }
 
     impl Executor for Cooperative {
-        fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<RunReport> {
+        fn execute(&mut self, payload: &JobPayload, cx: &SolveCx) -> Result<ExecOutcome> {
             let iters = match payload {
                 JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
                     s.max_iter.unwrap_or(1)
@@ -1602,7 +1705,7 @@ mod tests {
                 history.push(rec);
                 thread::sleep(std::time::Duration::from_millis(self.step_ms));
             }
-            Ok(stub_report(&payload.name()))
+            Ok(stub_report(&payload.name()).into())
         }
     }
 
@@ -1692,7 +1795,7 @@ mod tests {
         assert_eq!(id, a);
         sched.cancel(a).unwrap(); // running: accepted as a request
         // Executor never checks the flag again and completes normally.
-        sched.complete(id, Ok(stub_report(&payload.name())), 0.0);
+        sched.complete(id, Ok(stub_report(&payload.name()).into()), 0.0);
         assert_eq!(sched.status(a).unwrap().state, JobState::Done);
         let s = sched.stats();
         assert_eq!(s.completed, 1);
@@ -1712,7 +1815,7 @@ mod tests {
         let mut order = Vec::new();
         while let Some((id, _)) = sched.next_job(0) {
             order.push(id);
-            sched.complete(id, Ok(stub_report("x")), 0.0);
+            sched.complete(id, Ok(stub_report("x").into()), 0.0);
         }
         assert_eq!(order, vec![a], "cancelled job is never dispatched");
         assert_eq!(sched.status(b).unwrap().dispatch_seq, None);
@@ -1756,11 +1859,11 @@ mod tests {
     fn panicking_executor_fails_job_and_worker_survives() {
         struct Panicky;
         impl Executor for Panicky {
-            fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
+            fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<ExecOutcome> {
                 if payload.name().contains("boom") {
                     panic!("solver exploded");
                 }
-                Ok(stub_report(&payload.name()))
+                Ok(stub_report(&payload.name()).into())
             }
         }
         let sched = Scheduler::new(8, 1);
@@ -1784,11 +1887,11 @@ mod tests {
     }
 
     impl Executor for BatchRecording {
-        fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<RunReport> {
-            Ok(stub_report(&payload.name()))
+        fn execute(&mut self, payload: &JobPayload, _cx: &SolveCx) -> Result<ExecOutcome> {
+            Ok(stub_report(&payload.name()).into())
         }
 
-        fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<RunReport>> {
+        fn execute_batch(&mut self, jobs: &[(JobPayload, SolveCx)]) -> Vec<Result<ExecOutcome>> {
             self.sizes.lock().unwrap().push(jobs.len());
             jobs.iter().map(|(p, cx)| self.execute(p, cx)).collect()
         }
@@ -1898,7 +2001,7 @@ mod tests {
         assert_ne!(a, b, "distinct tokens admit distinct jobs");
         // The token survives the job reaching a terminal state...
         let (id, _) = sched.next_job(0).unwrap();
-        sched.complete(id, Ok(stub_report("a")), 0.0);
+        sched.complete(id, Ok(stub_report("a").into()), 0.0);
         assert_eq!(
             sched
                 .submit_dedup(Priority::Batch, spec("a", Priority::Batch), Some("tok-1".into()))
@@ -1957,7 +2060,7 @@ mod tests {
         sched.shutdown(true);
         let (id, _) = sched.next_job(0).unwrap();
         assert_eq!(id, a);
-        sched.complete(id, Ok(stub_report("a")), 0.0);
+        sched.complete(id, Ok(stub_report("a").into()), 0.0);
         assert_eq!(
             *events.lock().unwrap(),
             vec!["submitted", "submitted", "cancelled", "started", "done"]
@@ -1994,7 +2097,7 @@ mod tests {
         let c = sched.submit(Priority::Batch, spec("c", Priority::Batch)).unwrap();
         let (got, _) = sched.next_job(0).unwrap();
         assert_eq!(got, c);
-        sched.complete(c, Ok(stub_report("c")), 0.25);
+        sched.complete(c, Ok(stub_report("c").into()), 0.25);
         let mut last = None;
         for _ in 0..3 {
             if let Some(BusMsg::Event(ev)) = h2.recv() {
@@ -2046,7 +2149,7 @@ mod tests {
                 sched.submit(Priority::Batch, spec(&format!("j{i}"), Priority::Batch)).unwrap();
             let (got, _) = sched.next_job(0).unwrap();
             assert_eq!(got, id);
-            sched.complete(id, Ok(stub_report("x")), 0.0);
+            sched.complete(id, Ok(stub_report("x").into()), 0.0);
         }
         assert_eq!(sched.stats().completed, 16);
     }

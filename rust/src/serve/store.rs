@@ -3,17 +3,26 @@
 //!
 //! The `upload` wire verb lands real volume data here; `submit` jobs with
 //! an uploaded source resolve their `(m0, m1)` content ids against it at
-//! admission time. Three properties carry the design:
+//! admission time. Four properties carry the design:
 //!
 //! * **Content addressing** — a volume's id is a hash of its shape and
 //!   bytes (FNV-1a 128), so re-uploading the same scan is a dedup hit,
 //!   not a second copy. A population study registering one atlas against
-//!   N subjects stores the atlas once.
+//!   N subjects stores the atlas once. Vector fields (retained solve
+//!   velocities, `reduce` outputs) live in the same map under a disjoint
+//!   hash domain, so a scalar id can never resolve to a velocity.
 //! * **Byte-budget LRU eviction** — the store holds at most `budget`
 //!   bytes of volume data; least-recently-used volumes are evicted first.
 //!   Jobs are immune to eviction once admitted: the scheduler payload
 //!   carries `Arc<Field3>` resolved at submit time, so eviction only
 //!   invalidates *future* submits referencing the id.
+//! * **Pinning** — [`pin`](VolumeStore::pin)/[`unpin`](VolumeStore::unpin)
+//!   refcounts exempt a volume from eviction entirely: the template
+//!   driver pins the evolving template (and admission pins the volumes of
+//!   queued jobs) so a cold-start byte budget cannot evict them
+//!   mid-round. When every resident volume is pinned, a put admits *over*
+//!   budget rather than failing — pins are correctness, the budget is a
+//!   target.
 //! * **Reject-on-shape-mismatch** — a put whose sample count is not n^3
 //!   (or whose n is outside the wire bound) is an error, mirroring the
 //!   protocol-level validation so in-process users (benches, tests,
@@ -22,7 +31,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{Error, ErrorCode, Result};
-use crate::field::Field3;
+use crate::field::{Field3, VecField3};
 use crate::serve::proto::MAX_GRID_N;
 use crate::util::sync::{Arc, Mutex};
 
@@ -41,14 +50,27 @@ fn fnv1a(mut h: u128, bytes: &[u8]) -> u128 {
     h
 }
 
-/// Content id of a volume: hash of the grid size and the little-endian
-/// sample bytes, rendered as 32 hex chars.
-pub fn content_id(n: usize, data: &[f32]) -> String {
-    let mut h = fnv1a(FNV_OFFSET, &(n as u64).to_le_bytes());
+fn fnv1a_samples(mut h: u128, data: &[f32]) -> u128 {
     for &x in data {
         h = fnv1a(h, &x.to_le_bytes());
     }
-    format!("{h:032x}")
+    h
+}
+
+/// Content id of a scalar volume: hash of the grid size and the
+/// little-endian sample bytes, rendered as 32 hex chars.
+pub fn content_id(n: usize, data: &[f32]) -> String {
+    let h = fnv1a(FNV_OFFSET, &(n as u64).to_le_bytes());
+    format!("{:032x}", fnv1a_samples(h, data))
+}
+
+/// Content id of a vector (velocity) field: same construction under a
+/// disjoint hash domain (a `"vec:"` prefix enters the hash), so vector
+/// ids can never collide with scalar ids even for byte-identical data.
+pub fn content_id_vec(n: usize, data: &[f32]) -> String {
+    let h = fnv1a(FNV_OFFSET, b"vec:");
+    let h = fnv1a(h, &(n as u64).to_le_bytes());
+    format!("{:032x}", fnv1a_samples(h, data))
 }
 
 /// What a successful put returns (and the `upload` verb echoes).
@@ -75,13 +97,40 @@ pub struct StoreStats {
     pub dedup_hits: u64,
     /// Volumes evicted by the byte budget.
     pub evictions: u64,
+    /// Volumes currently pinned against eviction (templates, volumes of
+    /// admitted-but-queued jobs). On the wire this travels only when
+    /// non-zero, keeping a never-pinning daemon's stats byte-identical.
+    pub pinned: usize,
+}
+
+/// What one entry holds: a scalar image volume or a vector velocity
+/// field. The two kinds share the map (and the byte budget) but live in
+/// disjoint content-id domains.
+enum Stored {
+    Scalar(Arc<Field3>),
+    Vector(Arc<VecField3>),
+}
+
+impl Stored {
+    fn n(&self) -> usize {
+        match self {
+            Stored::Scalar(f) => f.n,
+            Stored::Vector(v) => v.n,
+        }
+    }
+
+    fn is_vector(&self) -> bool {
+        matches!(self, Stored::Vector(_))
+    }
 }
 
 struct Entry {
-    field: Arc<Field3>,
+    data: Stored,
     bytes: u64,
     /// Logical clock of the last put/get touch (LRU order).
     last_used: u64,
+    /// Eviction-exemption refcount; 0 = ordinary LRU resident.
+    pins: u32,
 }
 
 struct Inner {
@@ -117,17 +166,22 @@ impl VolumeStore {
         }
     }
 
-    /// Admit a volume. Same content twice is a dedup hit (same id, no
-    /// second copy); a new volume may evict least-recently-used residents
-    /// to fit the budget. Errors: shape mismatch, n out of range, or a
-    /// single volume larger than the whole budget.
-    pub fn put(&self, n: usize, data: Vec<f32>) -> Result<UploadReceipt> {
+    fn check_n(&self, n: usize) -> Result<()> {
         if n == 0 || n > MAX_GRID_N {
             return Err(Error::wire(
                 ErrorCode::BadRequest,
                 format!("volume n = {n} out of range (1..={MAX_GRID_N})"),
             ));
         }
+        Ok(())
+    }
+
+    /// Admit a scalar volume. Same content twice is a dedup hit (same id,
+    /// no second copy); a new volume may evict least-recently-used
+    /// *unpinned* residents to fit the budget. Errors: shape mismatch, n
+    /// out of range, or a single volume larger than the whole budget.
+    pub fn put(&self, n: usize, data: Vec<f32>) -> Result<UploadReceipt> {
+        self.check_n(n)?;
         if data.len() != n * n * n {
             return Err(Error::ShapeMismatch {
                 what: format!("uploaded volume ({n}^3)"),
@@ -135,7 +189,30 @@ impl VolumeStore {
                 got: data.len(),
             });
         }
-        let bytes = (data.len() * 4) as u64;
+        let id = content_id(n, &data);
+        self.put_entry(id, n, Stored::Scalar(Arc::new(Field3 { n, data })))
+    }
+
+    /// Admit a vector (velocity) field: 3*n^3 samples, same budget and
+    /// eviction rules, content id in the vector hash domain.
+    pub fn put_vec(&self, n: usize, data: Vec<f32>) -> Result<UploadReceipt> {
+        self.check_n(n)?;
+        if data.len() != 3 * n * n * n {
+            return Err(Error::ShapeMismatch {
+                what: format!("uploaded velocity field (3x{n}^3)"),
+                expected: 3 * n * n * n,
+                got: data.len(),
+            });
+        }
+        let id = content_id_vec(n, &data);
+        self.put_entry(id, n, Stored::Vector(Arc::new(VecField3 { n, data })))
+    }
+
+    fn put_entry(&self, id: String, n: usize, data: Stored) -> Result<UploadReceipt> {
+        let bytes = match &data {
+            Stored::Scalar(f) => (f.data.len() * 4) as u64,
+            Stored::Vector(v) => (v.data.len() * 4) as u64,
+        };
         if bytes > self.budget {
             return Err(Error::wire(
                 ErrorCode::BadRequest,
@@ -145,7 +222,6 @@ impl VolumeStore {
                 ),
             ));
         }
-        let id = content_id(n, &data);
         let mut st = self.inner.lock().unwrap();
         let st = &mut *st; // split-borrow the guard's fields
         st.clock += 1;
@@ -154,8 +230,10 @@ impl VolumeStore {
         if let Some(e) = st.entries.get_mut(&id) {
             // 128-bit collision between different volumes is negligible;
             // the shape check still guards the impossible-in-practice case
-            // so a collision could never hand a job the wrong grid size.
-            if e.field.n != n {
+            // so a collision could never hand a job the wrong grid size —
+            // or the wrong kind (scalar vs vector domains are disjoint by
+            // construction, checked here anyway).
+            if e.data.n() != n || e.data.is_vector() != data.is_vector() {
                 return Err(Error::Serve(format!("content id collision on '{id}'")));
             }
             e.last_used = clock;
@@ -163,9 +241,13 @@ impl VolumeStore {
             return Ok(UploadReceipt { id, n, bytes, dedup: true });
         }
         while st.bytes + bytes > self.budget {
+            // Pinned volumes are never victims. When everything resident
+            // is pinned, admit over budget: the budget is a target, pins
+            // are correctness (an evicted template kills a round).
             let Some(victim) = st
                 .entries
                 .iter()
+                .filter(|(_, e)| e.pins == 0)
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone())
             else {
@@ -176,22 +258,57 @@ impl VolumeStore {
             st.evictions += 1;
         }
         st.bytes += bytes;
-        st.entries.insert(
-            id.clone(),
-            Entry { field: Arc::new(Field3 { n, data }), bytes, last_used: clock },
-        );
+        st.entries.insert(id.clone(), Entry { data, bytes, last_used: clock, pins: 0 });
         Ok(UploadReceipt { id, n, bytes, dedup: false })
     }
 
-    /// Resolve a content id. A hit refreshes the volume's LRU position
-    /// (jobs re-referencing a volume keep it warm).
+    /// Resolve a scalar content id. A hit refreshes the volume's LRU
+    /// position (jobs re-referencing a volume keep it warm). Vector ids
+    /// resolve `None` here — use [`get_vec`](VolumeStore::get_vec).
     pub fn get(&self, id: &str) -> Option<Arc<Field3>> {
         let mut st = self.inner.lock().unwrap();
         st.clock += 1;
         let clock = st.clock;
         let e = st.entries.get_mut(id)?;
+        let Stored::Scalar(f) = &e.data else { return None };
+        let f = f.clone();
         e.last_used = clock;
-        Some(e.field.clone())
+        Some(f)
+    }
+
+    /// Resolve a vector (velocity) content id; scalar ids resolve `None`.
+    pub fn get_vec(&self, id: &str) -> Option<Arc<VecField3>> {
+        let mut st = self.inner.lock().unwrap();
+        st.clock += 1;
+        let clock = st.clock;
+        let e = st.entries.get_mut(id)?;
+        let Stored::Vector(v) = &e.data else { return None };
+        let v = v.clone();
+        e.last_used = clock;
+        Some(v)
+    }
+
+    /// Exempt a resident volume from eviction (refcounted: pin twice,
+    /// unpin twice). Returns false when the id is not resident — callers
+    /// that need the volume later must treat that as a failed acquire.
+    pub fn pin(&self, id: &str) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        match st.entries.get_mut(id) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one pin (idempotent past zero, and a no-op for ids already
+    /// evicted or never resident — unpin-after-evict must not panic).
+    pub fn unpin(&self, id: &str) {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(e) = st.entries.get_mut(id) {
+            e.pins = e.pins.saturating_sub(1);
+        }
     }
 
     pub fn stats(&self) -> StoreStats {
@@ -202,6 +319,7 @@ impl VolumeStore {
             uploads: st.uploads,
             dedup_hits: st.dedup_hits,
             evictions: st.evictions,
+            pinned: st.entries.values().filter(|e| e.pins > 0).count(),
         }
     }
 }
@@ -214,6 +332,10 @@ mod tests {
         (0..n * n * n).map(|i| seed + i as f32).collect()
     }
 
+    fn vvol(n: usize, seed: f32) -> Vec<f32> {
+        (0..3 * n * n * n).map(|i| seed + i as f32).collect()
+    }
+
     #[test]
     fn content_id_is_deterministic_and_shape_sensitive() {
         let a = content_id(4, &vol(4, 0.0));
@@ -221,6 +343,12 @@ mod tests {
         assert_ne!(a, content_id(4, &vol(4, 1.0)), "different data, different id");
         assert_eq!(a.len(), 32);
         assert!(a.bytes().all(|b| b.is_ascii_hexdigit()));
+        // Vector ids live in a disjoint domain: identical bytes hash to a
+        // different id, and both renderers agree on shape.
+        let v = content_id_vec(4, &vol(4, 0.0));
+        assert_ne!(a, v, "scalar and vector domains must not collide");
+        assert_eq!(v, content_id_vec(4, &vol(4, 0.0)));
+        assert_eq!(v.len(), 32);
     }
 
     #[test]
@@ -245,7 +373,24 @@ mod tests {
         assert!(store.put(4, vec![0.0; 63]).is_err(), "63 != 4^3");
         assert!(store.put(0, vec![]).is_err());
         assert!(store.put(MAX_GRID_N + 1, vec![0.0; 8]).is_err());
+        assert!(store.put_vec(4, vec![0.0; 64]).is_err(), "64 != 3*4^3");
+        assert!(store.put_vec(0, vec![]).is_err());
         assert_eq!(store.stats().volumes, 0);
+    }
+
+    #[test]
+    fn vector_entries_resolve_only_through_get_vec() {
+        let store = VolumeStore::new(1 << 20);
+        let rv = store.put_vec(4, vvol(4, 0.0)).unwrap();
+        assert!(!rv.dedup);
+        assert_eq!(rv.bytes, (3 * 64 * 4) as u64);
+        assert_eq!(store.get_vec(&rv.id).unwrap().data, vvol(4, 0.0));
+        assert!(store.get(&rv.id).is_none(), "vector id must not resolve as scalar");
+        let rs = store.put(4, vol(4, 0.0)).unwrap();
+        assert!(store.get_vec(&rs.id).is_none(), "scalar id must not resolve as vector");
+        // Re-putting the identical field is a dedup hit, same as scalars.
+        assert!(store.put_vec(4, vvol(4, 0.0)).unwrap().dedup);
+        assert_eq!(store.stats().volumes, 2);
     }
 
     #[test]
@@ -266,6 +411,63 @@ mod tests {
         assert_eq!(s.volumes, 2);
         assert_eq!(s.evictions, 1);
         assert_eq!(s.bytes, 2 * V);
+    }
+
+    /// The template-eviction bug this PR fixes, reproduced: under a
+    /// 2-volume budget, a round's subject uploads used to evict the
+    /// (least-recently-touched) template out from under the driver.
+    /// Pinning exempts it; unpinning restores ordinary LRU behavior.
+    #[test]
+    fn pinned_template_survives_lru_pressure() {
+        const V: u64 = 16 * 16 * 16 * 4;
+        let store = VolumeStore::new(2 * V);
+        let template = store.put(16, vol(16, 0.0)).unwrap().id;
+        assert!(store.pin(&template));
+        // Two subject uploads: without the pin the template is the LRU
+        // victim of the second (this exact sequence failed before).
+        let s1 = store.put(16, vol(16, 1.0)).unwrap().id;
+        let s2 = store.put(16, vol(16, 2.0)).unwrap().id;
+        assert!(store.get(&template).is_some(), "pinned template survives");
+        assert!(store.get(&s1).is_none(), "pressure fell on the unpinned subject");
+        assert!(store.get(&s2).is_some());
+        assert_eq!(store.stats().pinned, 1);
+        // Unpin: the template rejoins the LRU pool. Touch the subject so
+        // the template is the older resident, then overflow once more.
+        store.unpin(&template);
+        assert_eq!(store.stats().pinned, 0);
+        assert!(store.get(&s2).is_some());
+        // get(&template) above refreshed it; age it below s2 by touching
+        // s2 last, then push a third volume.
+        let s3 = store.put(16, vol(16, 3.0)).unwrap().id;
+        assert!(store.get(&s3).is_some());
+        assert!(store.get(&template).is_none(), "unpinned template evictable again");
+        assert_eq!(store.stats().volumes, 2);
+    }
+
+    #[test]
+    fn all_pinned_store_admits_over_budget() {
+        // Budget of one volume, and that volume is pinned: the next put
+        // must admit over budget (evicting the pinned resident would
+        // corrupt a round; failing the put would wedge the driver).
+        const V: u64 = 16 * 16 * 16 * 4;
+        let store = VolumeStore::new(V);
+        let a = store.put(16, vol(16, 0.0)).unwrap().id;
+        assert!(store.pin(&a));
+        let b = store.put(16, vol(16, 1.0)).unwrap().id;
+        assert!(store.get(&a).is_some());
+        assert!(store.get(&b).is_some());
+        let s = store.stats();
+        assert_eq!(s.volumes, 2);
+        assert_eq!(s.evictions, 0);
+        assert!(s.bytes > V, "over-budget admission is visible in stats");
+        // Pins are refcounted; unpin of unknown ids is a quiet no-op.
+        assert!(store.pin(&a));
+        store.unpin(&a);
+        assert_eq!(store.stats().pinned, 1, "one pin still held");
+        store.unpin(&a);
+        assert_eq!(store.stats().pinned, 0);
+        store.unpin("never-resident");
+        assert!(!store.pin("never-resident"));
     }
 
     #[test]

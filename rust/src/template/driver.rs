@@ -1,0 +1,279 @@
+//! The iterative template-building driver.
+//!
+//! Orchestration only: every volume operation (mean, exp, warp, L2
+//! drift) runs server-side through the wire `reduce` verb, so the
+//! driver moves content ids and job ids, never samples. The step-wise
+//! [`TemplateDriver::run_round`] API exists for the restart tests; most
+//! callers use [`TemplateDriver::run`].
+
+use std::path::PathBuf;
+
+use crate::error::{Error, ErrorCode, Result};
+use crate::request::{JobRequest, JobSource};
+use crate::serve::proto::{ReduceField, ReduceRequest, Verdict};
+use crate::serve::scheduler::{JobId, JobState, JobView};
+use crate::serve::{Client, RetryPolicy};
+use crate::template::journal::{self, RoundJournal, RoundRecord, TemplateState};
+
+/// Template-build configuration. `spec` is the base job request every
+/// per-subject registration inherits (grid size, variant, tolerances,
+/// priority); its `source`, `warm_start` and `dedup` fields are
+/// overwritten per subject and round.
+#[derive(Clone, Debug)]
+pub struct TemplateConfig {
+    /// Total round budget (counting rounds completed by a previous,
+    /// resumed incarnation).
+    pub rounds: usize,
+    /// Convergence tolerance on the template's relative L2 change.
+    pub tol: f64,
+    /// Step scale on the mean velocity before exponentiation (1 = the
+    /// full log-domain mean).
+    pub scale: f64,
+    /// Round-state journal path; `None` disables restartability.
+    pub state: Option<PathBuf>,
+    /// Retry policy for batch submission.
+    pub policy: RetryPolicy,
+    /// Base job request (see struct docs).
+    pub spec: JobRequest,
+    /// Per-job wait bound, seconds.
+    pub wait_timeout_s: f64,
+}
+
+impl Default for TemplateConfig {
+    fn default() -> Self {
+        TemplateConfig {
+            rounds: 5,
+            tol: 1e-3,
+            scale: 1.0,
+            state: None,
+            policy: RetryPolicy::default(),
+            spec: JobRequest::default(),
+            wait_timeout_s: 300.0,
+        }
+    }
+}
+
+/// What one completed round produced.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// 1-based round index.
+    pub round: usize,
+    /// Content id of the round's template.
+    pub template: String,
+    /// Relative L2 change against the previous template.
+    pub delta_rel: Option<f64>,
+    /// Daemon job ids of the round's registrations.
+    pub jobs: Vec<JobId>,
+    /// Per-subject solver iteration counts.
+    pub iters: Vec<Option<usize>>,
+    /// Which retained output the round reduced (`velocity`, or the
+    /// `warped` fallback when a backend retained no velocities).
+    pub field: ReduceField,
+    /// True once `delta_rel <= tol`.
+    pub converged: bool,
+}
+
+/// Iterative group-wise template builder over one daemon or router
+/// connection (see the module docs in `template/mod.rs` for the
+/// algorithm and the journal contract).
+pub struct TemplateDriver {
+    client: Client,
+    cfg: TemplateConfig,
+    st: TemplateState,
+    journal: Option<RoundJournal>,
+}
+
+impl TemplateDriver {
+    /// Build a driver over `client` for the uploaded `subjects`
+    /// (content ids). With a journaled `cfg.state` that already holds a
+    /// run, the driver *resumes*: run id, current template, completed
+    /// rounds and warm-start velocities are replayed, and `subjects`
+    /// must match the journaled set (pass an empty slice to adopt it).
+    /// Otherwise the round-0 bootstrap runs here: the initial template
+    /// is the server-side mean of the subjects, pinned in the store.
+    pub fn new(mut client: Client, subjects: Vec<String>, cfg: TemplateConfig) -> Result<Self> {
+        if client.proto() < 2 {
+            return Err(Error::Serve(
+                "template building requires a protocol-v2 daemon (reduce/submit_batch)".into(),
+            ));
+        }
+        if let Some(path) = &cfg.state {
+            if let Some(st) = journal::replay(path)? {
+                if !subjects.is_empty() && subjects != st.subjects {
+                    return Err(Error::Config(format!(
+                        "state file {} was built from {} different subject(s); pass the \
+                         same --subjects (or none) to resume",
+                        path.display(),
+                        st.subjects.len()
+                    )));
+                }
+                let journal = Some(RoundJournal::open(path)?);
+                return Ok(TemplateDriver { client, cfg, st, journal });
+            }
+        }
+        if subjects.len() < 2 {
+            return Err(Error::Config(
+                "template building needs at least 2 uploaded subjects".into(),
+            ));
+        }
+        // Fresh build: bootstrap the template as the subjects' mean,
+        // computed and pinned server-side.
+        let receipt = client.reduce(&ReduceRequest {
+            ids: subjects.clone(),
+            pin: true,
+            ..Default::default()
+        })?;
+        let st = TemplateState {
+            run_id: fresh_run_id(),
+            subjects,
+            n: receipt.n,
+            initial: receipt.id,
+            rounds: Vec::new(),
+        };
+        let journal = match &cfg.state {
+            Some(path) => {
+                let j = RoundJournal::open(path)?;
+                j.append_init(&st)?;
+                Some(j)
+            }
+            None => None,
+        };
+        Ok(TemplateDriver { client, cfg, st, journal })
+    }
+
+    /// The current template's content id.
+    pub fn template(&self) -> &str {
+        self.st.template()
+    }
+
+    /// Replayed + accumulated round state.
+    pub fn state(&self) -> &TemplateState {
+        &self.st
+    }
+
+    /// Rounds still available under the budget.
+    pub fn rounds_remaining(&self) -> usize {
+        self.cfg.rounds.saturating_sub(self.st.rounds.len())
+    }
+
+    /// Run one round: register every subject against the current
+    /// template (batch submit, exactly-once tokens, warm starts),
+    /// reduce the outputs into the next template, journal, and report.
+    pub fn run_round(&mut self) -> Result<RoundOutcome> {
+        let round = self.st.next_round();
+        let template = self.st.template().to_string();
+        let warm = self.st.warm();
+        let specs: Vec<JobRequest> = self
+            .st
+            .subjects
+            .iter()
+            .enumerate()
+            .map(|(i, subject)| {
+                let mut spec = self.cfg.spec.clone();
+                spec.source =
+                    JobSource::Uploaded { m0: template.clone(), m1: subject.clone() };
+                spec.warm_start = warm.get(i).cloned().flatten();
+                // Deterministic per-(run, round, subject) token: a
+                // restarted driver resubmitting this round gets the
+                // originally admitted job ids back.
+                spec.dedup = Some(format!("tmpl-{}-r{round}-s{i}", self.st.run_id));
+                spec
+            })
+            .collect();
+        let verdicts = self.client.submit_batch_with_retry(&specs, &self.cfg.policy)?;
+        let mut jobs = Vec::with_capacity(verdicts.len());
+        for (i, v) in verdicts.iter().enumerate() {
+            match v {
+                Verdict::Admitted { id } => jobs.push(*id),
+                Verdict::Rejected { code, msg, .. } => {
+                    return Err(Error::wire(
+                        *code,
+                        format!("round {round}, subject {i}: {msg}"),
+                    ));
+                }
+            }
+        }
+        let mut views: Vec<JobView> = Vec::with_capacity(jobs.len());
+        for &id in &jobs {
+            let view = self.client.wait_terminal(id, self.cfg.wait_timeout_s)?;
+            if view.state != JobState::Done {
+                return Err(Error::wire(
+                    ErrorCode::Internal,
+                    format!(
+                        "round {round}: job {id} {}{}",
+                        view.state.as_str(),
+                        view.error.as_deref().map(|e| format!(" ({e})")).unwrap_or_default()
+                    ),
+                ));
+            }
+            views.push(view);
+        }
+        // Log-domain velocity averaging is the paper-faithful update;
+        // fall back to the warped-image mean against backends that
+        // retained no velocities (stub executors, transport-less ops).
+        let field = if views.iter().all(|v| v.velocity.is_some()) {
+            ReduceField::Velocity
+        } else {
+            ReduceField::Warped
+        };
+        let req = ReduceRequest {
+            jobs: jobs.clone(),
+            field,
+            scale: (field == ReduceField::Velocity && self.cfg.scale != 1.0)
+                .then_some(self.cfg.scale),
+            apply: (field == ReduceField::Velocity).then(|| template.clone()),
+            ref_id: Some(template.clone()),
+            pin: true,
+            unpin: Some(template.clone()),
+            ..Default::default()
+        };
+        let receipt = self.client.reduce(&req)?;
+        let record = RoundRecord {
+            round,
+            template: receipt.id.clone(),
+            delta_rel: receipt.delta_rel,
+            velocities: views.iter().map(|v| v.velocity.clone()).collect(),
+            iters: views.iter().map(|v| v.iters).collect(),
+        };
+        if let Some(j) = &self.journal {
+            j.append_round(&record)?;
+        }
+        self.st.rounds.push(record);
+        Ok(RoundOutcome {
+            round,
+            template: receipt.id,
+            delta_rel: receipt.delta_rel,
+            jobs,
+            iters: views.iter().map(|v| v.iters).collect(),
+            field,
+            converged: receipt.delta_rel.is_some_and(|d| d <= self.cfg.tol),
+        })
+    }
+
+    /// Run rounds until convergence or budget exhaustion, calling
+    /// `progress` after each. Returns the completed rounds (this
+    /// incarnation's — resumed rounds are in [`state`](Self::state)).
+    pub fn run(&mut self, mut progress: impl FnMut(&RoundOutcome)) -> Result<Vec<RoundOutcome>> {
+        let mut out = Vec::new();
+        while self.rounds_remaining() > 0 {
+            let o = self.run_round()?;
+            let done = o.converged;
+            progress(&o);
+            out.push(o);
+            if done {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A run id unique enough to namespace dedup tokens across driver
+/// incarnations: wall-clock nanos + pid.
+fn fresh_run_id() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!("{nanos:016x}-{}", std::process::id())
+}

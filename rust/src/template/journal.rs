@@ -1,0 +1,297 @@
+//! Round-state journal: crash-safe NDJSON record of a template build.
+//!
+//! One `init` line (run identity, subjects, bootstrap template) followed
+//! by one `round` line per *completed* round. Replay is torn-line
+//! tolerant — a driver killed mid-append loses at most the line being
+//! written, i.e. the round that had not completed — so a restarted
+//! driver resumes exactly at the last completed round. The format is
+//! append-only NDJSON like the serve and router journals.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::sync::Mutex;
+
+/// One completed round as journaled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundRecord {
+    /// 1-based round index.
+    pub round: usize,
+    /// Content id of the template this round produced.
+    pub template: String,
+    /// Relative L2 change against the previous template.
+    pub delta_rel: Option<f64>,
+    /// Per-subject retained velocity ids (the next round's warm starts);
+    /// `None` for subjects whose backend retained nothing.
+    pub velocities: Vec<Option<String>>,
+    /// Per-subject solver iteration counts (warm-start telemetry).
+    pub iters: Vec<Option<usize>>,
+}
+
+/// Everything replay recovers from a journal.
+#[derive(Clone, Debug, Default)]
+pub struct TemplateState {
+    /// Stable run identity (namespaces the exactly-once dedup tokens).
+    pub run_id: String,
+    /// Subject content ids, in submission order.
+    pub subjects: Vec<String>,
+    /// Grid size.
+    pub n: usize,
+    /// Bootstrap template id (round 0).
+    pub initial: String,
+    /// Completed rounds, in order.
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl TemplateState {
+    /// The current template: the last completed round's, or the
+    /// bootstrap mean.
+    pub fn template(&self) -> &str {
+        self.rounds.last().map(|r| r.template.as_str()).unwrap_or(&self.initial)
+    }
+
+    /// Next round to run (1-based).
+    pub fn next_round(&self) -> usize {
+        self.rounds.len() + 1
+    }
+
+    /// Warm-start velocity ids for the next round (empty = cold).
+    pub fn warm(&self) -> Vec<Option<String>> {
+        self.rounds
+            .last()
+            .map(|r| r.velocities.clone())
+            .unwrap_or_else(|| vec![None; self.subjects.len()])
+    }
+}
+
+/// Append-only journal handle. All writes flush before returning, so a
+/// `round` line on disk means that round fully completed (its reduce
+/// succeeded and the new template is pinned server-side).
+pub struct RoundJournal {
+    file: Mutex<std::fs::File>,
+}
+
+impl RoundJournal {
+    /// Open (creating or appending). Call [`replay`] first when
+    /// resuming — opening never reads.
+    pub fn open(path: &Path) -> Result<RoundJournal> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(RoundJournal { file: Mutex::new(file) })
+    }
+
+    fn append(&self, j: Json) -> Result<()> {
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{}", j.render())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Journal the run header (once, on a fresh build).
+    pub fn append_init(&self, st: &TemplateState) -> Result<()> {
+        self.append(Json::object([
+            ("kind", Json::str("init")),
+            ("run", Json::str(&st.run_id)),
+            ("n", Json::num(st.n as f64)),
+            (
+                "subjects",
+                Json::Arr(st.subjects.iter().map(Json::str).collect()),
+            ),
+            ("template", Json::str(&st.initial)),
+        ]))
+    }
+
+    /// Journal one completed round.
+    pub fn append_round(&self, r: &RoundRecord) -> Result<()> {
+        let opt_str = |v: &Option<String>| match v {
+            Some(s) => Json::str(s),
+            None => Json::Null,
+        };
+        let mut pairs = vec![
+            ("kind", Json::str("round")),
+            ("round", Json::num(r.round as f64)),
+            ("template", Json::str(&r.template)),
+            (
+                "velocities",
+                Json::Arr(r.velocities.iter().map(opt_str).collect()),
+            ),
+            (
+                "iters",
+                Json::Arr(
+                    r.iters
+                        .iter()
+                        .map(|i| i.map(|v| Json::num(v as f64)).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(d) = r.delta_rel {
+            pairs.push(("delta_rel", Json::num(d)));
+        }
+        self.append(Json::object(pairs))
+    }
+}
+
+/// Replay a journal into a [`TemplateState`]. Returns `Ok(None)` when
+/// the file is missing or holds no `init` line (fresh build); malformed
+/// or torn lines are skipped like the serve journals do. Round lines
+/// must arrive in order — an out-of-order round (a corrupted or
+/// hand-edited file) is an error rather than a silently wrong resume.
+pub fn replay(path: &Path) -> Result<Option<TemplateState>> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Ok(None);
+    };
+    let mut st: Option<TemplateState> = None;
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line.trim()) else {
+            continue; // torn tail from a mid-append kill
+        };
+        match j.get("kind").and_then(Json::as_str) {
+            Some("init") => {
+                let (Some(run), Some(n), Some(subjects), Some(template)) = (
+                    j.get("run").and_then(Json::as_str),
+                    j.get("n").and_then(Json::as_usize),
+                    j.get("subjects").and_then(Json::as_arr),
+                    j.get("template").and_then(Json::as_str),
+                ) else {
+                    continue;
+                };
+                st = Some(TemplateState {
+                    run_id: run.to_string(),
+                    subjects: subjects
+                        .iter()
+                        .filter_map(|s| s.as_str().map(str::to_string))
+                        .collect(),
+                    n,
+                    initial: template.to_string(),
+                    rounds: Vec::new(),
+                });
+            }
+            Some("round") => {
+                let Some(st) = st.as_mut() else { continue };
+                let (Some(round), Some(template)) = (
+                    j.get("round").and_then(Json::as_usize),
+                    j.get("template").and_then(Json::as_str),
+                ) else {
+                    continue;
+                };
+                if round != st.rounds.len() + 1 {
+                    return Err(Error::Serve(format!(
+                        "template journal out of order: round {round} after {} completed \
+                         rounds (corrupted state file?)",
+                        st.rounds.len()
+                    )));
+                }
+                let strs = |key: &str| -> Vec<Option<String>> {
+                    j.get(key)
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().map(|v| v.as_str().map(str::to_string)).collect())
+                        .unwrap_or_default()
+                };
+                st.rounds.push(RoundRecord {
+                    round,
+                    template: template.to_string(),
+                    delta_rel: j.get("delta_rel").and_then(Json::as_f64),
+                    velocities: strs("velocities"),
+                    iters: j
+                        .get("iters")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                });
+            }
+            _ => {}
+        }
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("claire-tmpl-journal-{}-{name}", std::process::id()))
+    }
+
+    fn state() -> TemplateState {
+        TemplateState {
+            run_id: "run-1".into(),
+            subjects: vec!["s0".into(), "s1".into()],
+            n: 16,
+            initial: "t0".into(),
+            rounds: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_resume_point() {
+        let path = tmp("roundtrip.ndjson");
+        std::fs::remove_file(&path).ok();
+        let st = state();
+        let j = RoundJournal::open(&path).unwrap();
+        j.append_init(&st).unwrap();
+        let r1 = RoundRecord {
+            round: 1,
+            template: "t1".into(),
+            delta_rel: Some(0.5),
+            velocities: vec![Some("v0".into()), None],
+            iters: vec![Some(10), Some(9)],
+        };
+        j.append_round(&r1).unwrap();
+        let back = replay(&path).unwrap().unwrap();
+        assert_eq!(back.run_id, "run-1");
+        assert_eq!(back.subjects, vec!["s0", "s1"]);
+        assert_eq!(back.template(), "t1");
+        assert_eq!(back.next_round(), 2);
+        assert_eq!(back.warm(), vec![Some("v0".to_string()), None]);
+        assert_eq!(back.rounds, vec![r1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_line_is_dropped() {
+        let path = tmp("torn.ndjson");
+        std::fs::remove_file(&path).ok();
+        let st = state();
+        let j = RoundJournal::open(&path).unwrap();
+        j.append_init(&st).unwrap();
+        j.append_round(&RoundRecord {
+            round: 1,
+            template: "t1".into(),
+            delta_rel: None,
+            velocities: vec![None, None],
+            iters: vec![None, None],
+        })
+        .unwrap();
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"kind\":\"round\",\"round\":2,\"templ").unwrap();
+        }
+        let back = replay(&path).unwrap().unwrap();
+        assert_eq!(back.next_round(), 2, "torn round 2 does not count as completed");
+        assert_eq!(back.template(), "t1");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_fresh_and_out_of_order_rejected() {
+        assert!(replay(&tmp("never-written.ndjson")).unwrap().is_none());
+
+        let path = tmp("ooo.ndjson");
+        std::fs::remove_file(&path).ok();
+        let j = RoundJournal::open(&path).unwrap();
+        j.append_init(&state()).unwrap();
+        j.append_round(&RoundRecord {
+            round: 3, // rounds 1-2 never journaled
+            template: "t3".into(),
+            delta_rel: None,
+            velocities: vec![],
+            iters: vec![],
+        })
+        .unwrap();
+        assert!(replay(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,44 @@
+//! Group-wise atlas/template building over the serve fleet.
+//!
+//! The classic unbiased-template iteration (Joshi et al., and the
+//! group-wise setting CLAIRE's clinical workflow targets) as an
+//! orchestration layer on top of the registration daemon:
+//!
+//! 1. **Bootstrap** (round 0): the initial template is the voxel-wise
+//!    mean of the N uploaded subjects — computed *server-side* via the
+//!    wire `reduce` verb in ids mode, so no volume ever round-trips
+//!    through the driver.
+//! 2. **Register**: each round submits one job per subject
+//!    (`m0 = template`, `m1 = subject`) in a single `submit_batch`
+//!    line, with per-subject exactly-once `dedup` tokens derived from
+//!    the run id and round index — a driver killed and restarted
+//!    mid-round resubmits the same tokens and receives the originally
+//!    admitted job ids instead of doubling the work.
+//! 3. **Reduce**: the round's retained outputs are averaged on the
+//!    daemon (`reduce` in jobs mode). The default path takes the
+//!    log-domain mean of the stationary velocities and warps the
+//!    current template through `exp(scale * mean)`; when a backend did
+//!    not retain velocities the driver falls back to the plain mean of
+//!    the warped images. Either way the daemon answers with the new
+//!    template's content id plus `delta_rel`, the relative L2 change
+//!    against the previous template — the convergence signal, again
+//!    without downloading a volume.
+//! 4. **Iterate**: the new template is pinned in the store (the old
+//!    one unpinned), each subject's next-round job is warm-started
+//!    from its previous velocity, and the loop repeats until
+//!    `delta_rel <= tol` or the round budget is exhausted.
+//!
+//! Every completed round is appended to an NDJSON **round-state
+//! journal** ([`journal::RoundJournal`]); a restarted driver replays it
+//! and resumes at the last completed round with the same run id,
+//! template, and warm-start velocities.
+//!
+//! Exposed on the CLI as `claire template --subjects ... --rounds R
+//! --tol T`; see [`driver::TemplateDriver`] for the step-wise API the
+//! restart tests drive directly.
+
+pub mod driver;
+pub mod journal;
+
+pub use driver::{RoundOutcome, TemplateConfig, TemplateDriver};
+pub use journal::{RoundJournal, RoundRecord, TemplateState};

@@ -11,7 +11,6 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use claire::error::Result;
-use claire::registration::RunReport;
 use claire::serve::{
     scheduler::stub_report, Client, Daemon, DaemonConfig, DaemonHandle, EventMsg, Executor,
     ExecutorFactory, JobPayload, JobSource, JobSpec, JobState, Router, RouterConfig,
@@ -28,14 +27,14 @@ impl Executor for StubExec {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
+    ) -> Result<claire::serve::ExecOutcome> {
         let spec = match payload {
             JobPayload::Spec(s) => s,
             JobPayload::Volumes { spec, .. } => spec,
-            JobPayload::Problem { .. } => return Ok(stub_report("problem")),
+            JobPayload::Problem { .. } => return Ok(stub_report("problem").into()),
         };
         std::thread::sleep(Duration::from_millis(spec.max_iter.unwrap_or(1) as u64));
-        Ok(stub_report(&spec.name()))
+        Ok(stub_report(&spec.name()).into())
     }
 
     fn cache_stats(&self) -> (u64, u64) {

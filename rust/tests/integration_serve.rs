@@ -11,7 +11,6 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use claire::error::Result;
-use claire::registration::RunReport;
 use claire::serve::{
     scheduler::stub_report, Client, Daemon, DaemonConfig, EventMsg, Executor, ExecutorFactory,
     JobPayload, JobSource, JobSpec, JobState, Priority, Verdict,
@@ -34,17 +33,17 @@ impl Executor for StubExec {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
+    ) -> Result<claire::serve::ExecOutcome> {
         let spec = match payload {
             JobPayload::Spec(s) => s,
-            JobPayload::Volumes { spec, m0, m1 } => {
+            JobPayload::Volumes { spec, m0, m1, .. } => {
                 // The daemon resolved real volume data at admission time;
                 // sanity-check the contract the executor relies on.
                 assert_eq!(m0.n, spec.n, "admission validated m0 shape");
                 assert_eq!(m1.n, spec.n, "admission validated m1 shape");
                 spec
             }
-            JobPayload::Problem { .. } => return Ok(stub_report("problem")),
+            JobPayload::Problem { .. } => return Ok(stub_report("problem").into()),
         };
         if self.warm.insert((spec.variant.clone(), spec.n, spec.precision)) {
             self.compiles += 5;
@@ -57,7 +56,7 @@ impl Executor for StubExec {
         // Mirror the real executor: the report carries the realized level
         // count (equal to the request under a stub).
         report.levels = spec.multires.unwrap_or(1);
-        Ok(report)
+        Ok(report.into())
     }
 
     fn cache_stats(&self) -> (u64, u64) {
@@ -900,7 +899,7 @@ fn cooperative_factory(step_ms: u64) -> ExecutorFactory {
             &mut self,
             payload: &JobPayload,
             cx: &claire::registration::SolveCx,
-        ) -> Result<RunReport> {
+        ) -> Result<claire::serve::ExecOutcome> {
             let iters = match payload {
                 JobPayload::Spec(s) | JobPayload::Volumes { spec: s, .. } => {
                     s.max_iter.unwrap_or(1)
@@ -917,7 +916,7 @@ fn cooperative_factory(step_ms: u64) -> ExecutorFactory {
                 history.push(rec);
                 std::thread::sleep(std::time::Duration::from_millis(self.step_ms));
             }
-            Ok(stub_report(&payload.name()))
+            Ok(stub_report(&payload.name()).into())
         }
     }
     let factory: ExecutorFactory = Arc::new(move |_w| {

@@ -1,0 +1,226 @@
+//! End-to-end template building against a live daemon over the real
+//! wire protocol: convergence of the round loop (strictly decreasing
+//! template drift under a contractive stub executor), the journaled
+//! kill/restart contract (a rebuilt driver resumes at the last
+//! completed round, and resubmitted rounds dedup to the original job
+//! ids), and warm starts (round 2+ solves report fewer iterations).
+
+use std::sync::Arc;
+
+use claire::error::Result;
+use claire::serve::{
+    scheduler::stub_report, Client, Daemon, DaemonConfig, DaemonHandle, ExecOutcome, Executor,
+    ExecutorFactory, JobPayload, ReduceField, VolumeStore,
+};
+use claire::template::{TemplateConfig, TemplateDriver};
+
+/// Template-loop stub: warps the fixed image toward the moving one,
+/// `warped = m0 + alpha * (m1 - m0)`, with a per-subject `alpha` read
+/// off the subject's first voxel. The warped-image mean update is then
+/// `t' = t + mean(alpha_i * (s_i - t))`, a contraction toward the
+/// alpha-weighted subject blend — which differs from the round-0
+/// bootstrap (the plain mean), so the loop has real work to do and the
+/// drift shrinks geometrically by `1 - mean(alpha)` per round.
+///
+/// With `velocity` set, it also retains a constant velocity field and
+/// reports 10 solver iterations cold versus 3 warm-started — the
+/// telemetry the warm-start acceptance checks.
+struct BlendExec {
+    store: Option<Arc<VolumeStore>>,
+    velocity: bool,
+}
+
+impl Executor for BlendExec {
+    fn attach_store(&mut self, store: Arc<VolumeStore>) {
+        self.store = Some(store);
+    }
+
+    fn execute(
+        &mut self,
+        payload: &JobPayload,
+        _cx: &claire::registration::SolveCx,
+    ) -> Result<ExecOutcome> {
+        let JobPayload::Volumes { spec, m0, m1, warm_start } = payload else {
+            return Ok(stub_report("synthetic").into());
+        };
+        let store = self.store.as_ref().expect("daemon attaches its store");
+        let alpha = 0.25 + 0.5 * m1.data[0].clamp(0.0, 1.0);
+        let warped: Vec<f32> =
+            m0.data.iter().zip(&m1.data).map(|(t, s)| t + alpha * (s - t)).collect();
+        let wrec = store.put(spec.n, warped)?;
+        let mut report = stub_report(&spec.name());
+        report.iters = if warm_start.is_some() { 3 } else { 10 };
+        let mut out = ExecOutcome::from(report);
+        out.warped = Some(wrec.id);
+        if self.velocity {
+            // A small constant velocity keyed off the subject, so the
+            // log-domain mean is a nonzero constant field (exact
+            // translation under the exponential — groupwise's pinned
+            // contract) and round templates keep changing.
+            let n = spec.n;
+            let c = 0.02 * (0.5 + m1.data[0]);
+            let vrec = store.put_vec(n, vec![c; 3 * n * n * n])?;
+            out.velocity = Some(vrec.id);
+        }
+        Ok(out)
+    }
+}
+
+fn blend_factory(velocity: bool) -> ExecutorFactory {
+    Arc::new(move |_w| Ok(Box::new(BlendExec { store: None, velocity }) as Box<dyn Executor>))
+}
+
+fn start_daemon(velocity: bool) -> DaemonHandle {
+    let cfg = DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_cap: 32,
+        journal: None,
+        ..Default::default()
+    };
+    Daemon::start(cfg, blend_factory(velocity)).unwrap()
+}
+
+fn connect_v2(addr: &str) -> Client {
+    let mut c = Client::connect(addr).unwrap();
+    c.hello().unwrap();
+    c
+}
+
+/// Four 16^3 subjects whose first voxel encodes distinct blend weights.
+fn upload_subjects(client: &mut Client, n: usize) -> Vec<String> {
+    (0..4u32)
+        .map(|i| {
+            let mut data: Vec<f32> =
+                (0..n * n * n).map(|v| ((v as f32 * 0.37 + i as f32).sin() + 1.0) * 0.5).collect();
+            data[0] = i as f32 / 4.0;
+            client.upload(n, &data).unwrap().id
+        })
+        .collect()
+}
+
+fn tmp_state(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("claire_template_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// The convergence acceptance scenario: a template build over 4 uploaded
+/// subjects reaches tolerance within budget with a *strictly decreasing*
+/// residual, entirely server-side (warped-mean fallback — the stub
+/// retains no velocities here).
+#[test]
+fn template_build_converges_with_decreasing_residual() {
+    let handle = start_daemon(false);
+    let addr = handle.addr().to_string();
+    let mut client = connect_v2(&addr);
+    let subjects = upload_subjects(&mut client, 16);
+
+    let cfg = TemplateConfig { rounds: 10, tol: 2e-3, ..Default::default() };
+    let mut driver = TemplateDriver::new(connect_v2(&addr), subjects, cfg).unwrap();
+    let t0 = driver.template().to_string();
+    let outcomes = driver.run(|_| {}).unwrap();
+
+    assert!(outcomes.len() >= 3, "contraction ratio ~0.5 needs several rounds: {outcomes:?}");
+    assert!(outcomes.len() < 10, "must converge inside the budget");
+    assert!(outcomes.last().unwrap().converged);
+    let deltas: Vec<f64> = outcomes.iter().map(|o| o.delta_rel.unwrap()).collect();
+    for w in deltas.windows(2) {
+        assert!(w[1] < w[0], "residual must strictly decrease: {deltas:?}");
+    }
+    for o in &outcomes {
+        assert_eq!(o.field, ReduceField::Warped, "no velocities retained => warped fallback");
+        assert_eq!(o.jobs.len(), 4);
+    }
+    // The template moved off the round-0 bootstrap and each round's id is
+    // a fresh pinned volume; exactly one pin remains at the end (the
+    // final template — intermediates were handed back round by round).
+    assert_ne!(driver.template(), t0);
+    let stats = client.wait_idle(10.0).unwrap();
+    assert_eq!(stats.store.pinned, 1, "only the final template stays pinned: {stats:?}");
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}
+
+/// The kill/restart acceptance scenario, against one live daemon:
+///
+/// 1. driver A (round budget 1) completes round 1 and is dropped;
+/// 2. driver B resumes from the journal — same run id, same template,
+///    next round 2 — and runs round 2 with warm starts (3 iters vs 10);
+/// 3. driver C resumes from a copy of the journal *truncated to round 1*
+///    (a driver killed after round 2's submits but before its journal
+///    append): re-running round 2 dedups to B's exact job ids and
+///    reduces to B's exact template — the round is exactly-once.
+#[test]
+fn template_driver_restarts_at_last_completed_round() {
+    let handle = start_daemon(true);
+    let addr = handle.addr().to_string();
+    let mut client = connect_v2(&addr);
+    let subjects = upload_subjects(&mut client, 16);
+    let state = tmp_state("restart.ndjson");
+
+    // Driver A: exactly one round, then "killed" (dropped).
+    let cfg_a = TemplateConfig {
+        rounds: 1,
+        tol: 0.0, // never converge: every delta is > 0 under the stub
+        state: Some(state.clone()),
+        ..Default::default()
+    };
+    let mut a = TemplateDriver::new(connect_v2(&addr), subjects.clone(), cfg_a).unwrap();
+    let a_out = a.run(|_| {}).unwrap();
+    assert_eq!(a_out.len(), 1);
+    assert_eq!(a_out[0].field, ReduceField::Velocity, "stub retains velocities here");
+    assert!(a_out[0].iters.iter().all(|i| *i == Some(10)), "round 1 is cold: {a_out:?}");
+    let run_id = a.state().run_id.clone();
+    let t1 = a.template().to_string();
+    drop(a);
+
+    // Driver B: resumes (empty subject list adopts the journaled set).
+    let cfg_b = TemplateConfig {
+        rounds: 2,
+        tol: 0.0,
+        state: Some(state.clone()),
+        ..Default::default()
+    };
+    let mut b = TemplateDriver::new(connect_v2(&addr), Vec::new(), cfg_b.clone()).unwrap();
+    assert_eq!(b.state().run_id, run_id, "resume keeps the run identity");
+    assert_eq!(b.state().subjects, subjects, "subjects adopted from the journal");
+    assert_eq!(b.template(), t1, "resume points at the last completed round's template");
+    assert_eq!(b.state().next_round(), 2);
+    assert_eq!(b.rounds_remaining(), 1, "budget counts the resumed round");
+
+    // Mismatched subjects are refused rather than silently rebuilt.
+    let err = TemplateDriver::new(
+        connect_v2(&addr),
+        vec!["deadbeef".into()],
+        cfg_b.clone(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("same --subjects"), "{err}");
+
+    let b2 = b.run_round().unwrap();
+    assert_eq!(b2.round, 2);
+    assert!(
+        b2.iters.iter().all(|i| *i == Some(3)),
+        "round 2 warm-starts from round 1's velocities: {b2:?}"
+    );
+
+    // Driver C: journal truncated to round 1 — the post-submit,
+    // pre-journal crash window. Its round 2 must be the same round.
+    let text = std::fs::read_to_string(&state).unwrap();
+    let torn = tmp_state("restart_torn.ndjson");
+    let keep: Vec<&str> = text.lines().take(2).collect(); // init + round 1
+    std::fs::write(&torn, format!("{}\n", keep.join("\n"))).unwrap();
+    let cfg_c = TemplateConfig { rounds: 2, tol: 0.0, state: Some(torn), ..Default::default() };
+    let mut c = TemplateDriver::new(connect_v2(&addr), Vec::new(), cfg_c).unwrap();
+    assert_eq!(c.state().next_round(), 2, "torn journal resumes at the lost round");
+    let c2 = c.run_round().unwrap();
+    assert_eq!(c2.jobs, b2.jobs, "per-(run,round,subject) dedup tokens: no re-solve");
+    assert_eq!(c2.template, b2.template, "content-addressed reduce replays to the same id");
+
+    client.shutdown(true).unwrap();
+    handle.join().unwrap();
+}

@@ -62,7 +62,7 @@ fn submit_vs_cancel_queued() {
             // Drain: stale heap entries for the cancelled job are skipped;
             // None once the queue is empty under Drain.
             while let Some((jid, _payload)) = s.next_job(0) {
-                s.complete(jid, Ok(stub_report("a")), 0.0);
+                s.complete(jid, Ok(stub_report("a").into()), 0.0);
             }
         });
         canceller.join().unwrap();
@@ -103,7 +103,7 @@ fn dwell_interrupt_renotifies() {
             // when `second` served the only admitted job and drained.
             if let Some(batch) = s.next_batch(0) {
                 for (jid, _payload) in batch {
-                    s.complete(jid, Ok(stub_report("b")), 0.0);
+                    s.complete(jid, Ok(stub_report("b").into()), 0.0);
                 }
             }
         });
@@ -115,7 +115,7 @@ fn dwell_interrupt_renotifies() {
             // and only afterwards — releases the dweller from its window;
             // an earlier shutdown would mask a missed notify.
             if let Some((jid, _payload)) = s.next_job(1) {
-                s.complete(jid, Ok(stub_report("u")), 0.0);
+                s.complete(jid, Ok(stub_report("u").into()), 0.0);
             }
             s.shutdown(true);
         });
@@ -224,7 +224,7 @@ fn shutdown_drain_vs_dispatch() {
         let s = sched.clone();
         let worker = thread::spawn(move || {
             while let Some((jid, _payload)) = s.next_job(0) {
-                s.complete(jid, Ok(stub_report("d")), 0.0);
+                s.complete(jid, Ok(stub_report("d").into()), 0.0);
             }
         });
         let s = sched.clone();

@@ -8,7 +8,6 @@
 use std::sync::Arc;
 
 use claire::error::Result;
-use claire::registration::RunReport;
 use claire::serve::{
     scheduler::stub_report, Daemon, DaemonConfig, Executor, ExecutorFactory, JobPayload,
     JobRequest, JobSource, Priority, Request, Response,
@@ -559,8 +558,8 @@ impl Executor for InstantStub {
         &mut self,
         payload: &JobPayload,
         _cx: &claire::registration::SolveCx,
-    ) -> Result<RunReport> {
-        Ok(stub_report(&payload.name()))
+    ) -> Result<claire::serve::ExecOutcome> {
+        Ok(stub_report(&payload.name()).into())
     }
 }
 

@@ -1,0 +1,180 @@
+//! Property tests for the template-building reduction math
+//! (`registration::groupwise`), via the in-tree `util/prop.rs`
+//! mini-framework:
+//!
+//! * the log-domain mean is identity-preserving — averaging k copies of
+//!   one velocity returns it, and a template warped through the
+//!   exponential of that zero-update mean is unchanged;
+//! * `log_mean` / `mean_scalar` are invariant under permutation of
+//!   their inputs (the `reduce` verb must not care about job order);
+//! * the warped-image mean on a 16^3 grid matches a float64 reference
+//!   computed outside Rust (fixture from `scripts/gen_reduce_fixture.py`,
+//!   NumPy when available) at probed voxels, in L2, and in total mass.
+
+use claire::field::{Field3, VecField3};
+use claire::registration::groupwise::{
+    exponential, log_mean, mean_scalar, rel_change, scale, warp_scalar,
+};
+use claire::util::json::Json;
+use claire::util::prop::{self, Config};
+use claire::util::rng::Rng;
+
+fn gen_vec_field(r: &mut Rng, n: usize, amp: f32) -> VecField3 {
+    VecField3::from_vec(n, prop::vec_f32(r, 3 * n * n * n, -amp, amp)).unwrap()
+}
+
+fn gen_field(r: &mut Rng, n: usize) -> Field3 {
+    Field3::from_vec(n, prop::vec_f32(r, n * n * n, 0.0, 1.0)).unwrap()
+}
+
+#[test]
+fn log_mean_of_identical_velocities_is_identity() {
+    prop::check_msg(
+        Config { cases: 32, ..Config::default() },
+        |r| {
+            let n = prop::pow2(r, 4, 8);
+            let k = 2 + r.below(5) as usize;
+            (gen_vec_field(r, n, 0.3), k)
+        },
+        |(v, k)| {
+            let copies: Vec<&VecField3> = std::iter::repeat(v).take(*k).collect();
+            let mean = log_mean(&copies).map_err(|e| e.to_string())?;
+            // k identical f32 addends accumulate exactly in f64 and the
+            // division by k restores each sample bit-for-bit.
+            if mean != *v {
+                return Err(format!("mean of {k} copies differs from the input"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zero_update_mean_leaves_template_unchanged() {
+    // If the cohort's velocities cancel (here: v and -v), the log-domain
+    // mean is zero, its exponential is the identity map, and warping the
+    // template through it is a no-op — the fixed-point property the
+    // template loop's convergence test relies on.
+    prop::check_msg(
+        Config { cases: 16, ..Config::default() },
+        |r| {
+            let n = prop::pow2(r, 4, 8);
+            (gen_vec_field(r, n, 0.2), gen_field(r, n))
+        },
+        |(v, template)| {
+            let neg = scale(v, -1.0);
+            let mean = log_mean(&[v, &neg]).map_err(|e| e.to_string())?;
+            if mean.data.iter().any(|&x| x != 0.0) {
+                return Err("mean of v and -v is not exactly zero".into());
+            }
+            let warped =
+                warp_scalar(template, &exponential(&mean)).map_err(|e| e.to_string())?;
+            let d = rel_change(&warped, template).map_err(|e| e.to_string())?;
+            if d > 1e-6 {
+                return Err(format!("zero-velocity warp moved the template: delta {d:e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn reductions_are_permutation_invariant() {
+    prop::check_msg(
+        Config { cases: 32, ..Config::default() },
+        |r| {
+            let n = prop::pow2(r, 4, 8);
+            let k = 2 + r.below(5) as usize;
+            let vels: Vec<VecField3> = (0..k).map(|_| gen_vec_field(r, n, 0.3)).collect();
+            let imgs: Vec<Field3> = (0..k).map(|_| gen_field(r, n)).collect();
+            let mut perm: Vec<usize> = (0..k).collect();
+            r.shuffle(&mut perm);
+            (vels, imgs, perm)
+        },
+        |(vels, imgs, perm)| {
+            let fwd: Vec<&VecField3> = vels.iter().collect();
+            let shuf: Vec<&VecField3> = perm.iter().map(|&i| &vels[i]).collect();
+            let a = log_mean(&fwd).map_err(|e| e.to_string())?;
+            let b = log_mean(&shuf).map_err(|e| e.to_string())?;
+            // f64 accumulation of <=6 f32 addends; reassociation under
+            // the permutation stays within one f32 ulp of each sample.
+            for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                if (x - y).abs() > 1e-6 * x.abs().max(1.0) {
+                    return Err(format!("log_mean sample {i}: {x} vs {y} under {perm:?}"));
+                }
+            }
+            let fwd_s: Vec<&Field3> = imgs.iter().collect();
+            let shuf_s: Vec<&Field3> = perm.iter().map(|&i| &imgs[i]).collect();
+            let a = mean_scalar(&fwd_s).map_err(|e| e.to_string())?;
+            let b = mean_scalar(&shuf_s).map_err(|e| e.to_string())?;
+            for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                if (x - y).abs() > 1e-6 * x.abs().max(1.0) {
+                    return Err(format!("mean_scalar sample {i}: {x} vs {y} under {perm:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -- Fixture cross-check ------------------------------------------------------
+
+/// The 32-bit LCG from `scripts/gen_reduce_fixture.py`, bit-exact: f32
+/// samples of `state / 2^32` with state advanced as `a*s + c mod 2^32`.
+fn lcg_volume(n: usize, seed: u64, a: u64, c: u64, subject: u64) -> Vec<f32> {
+    const MOD: u64 = 1 << 32;
+    let mut state = (seed + subject * 9973) % MOD;
+    (0..n * n * n)
+        .map(|_| {
+            state = (a.wrapping_mul(state).wrapping_add(c)) % MOD;
+            (state as f64 / MOD as f64) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn warped_mean_matches_float64_fixture() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/reduce_mean_16.json");
+    let text = std::fs::read_to_string(path).expect("fixture present (scripts/gen_reduce_fixture.py)");
+    let j = Json::parse(&text).unwrap();
+    let n = j.get("n").and_then(Json::as_usize).unwrap();
+    let k = j.get("k").and_then(Json::as_usize).unwrap();
+    let seed = j.get("seed").and_then(Json::as_f64).unwrap() as u64;
+    let a = j.get("lcg_a").and_then(Json::as_f64).unwrap() as u64;
+    let c = j.get("lcg_c").and_then(Json::as_f64).unwrap() as u64;
+
+    let vols: Vec<Field3> = (0..k as u64)
+        .map(|s| Field3::from_vec(n, lcg_volume(n, seed, a, c, s)).unwrap())
+        .collect();
+    let refs: Vec<&Field3> = vols.iter().collect();
+    let mean = mean_scalar(&refs).unwrap();
+
+    let probes = j.get("probe_indices").and_then(Json::as_arr).unwrap();
+    let expected = j.get("mean_probes").and_then(Json::as_arr).unwrap();
+    assert_eq!(probes.len(), expected.len());
+    for (pi, pe) in probes.iter().zip(expected) {
+        let idx = pi.as_usize().unwrap();
+        let want = pe.as_f64().unwrap();
+        let got = mean.data[idx] as f64;
+        // The fixture keeps full f64 precision; the crate's f64
+        // accumulate + f32 store rounds once at the end.
+        assert!(
+            (got - want).abs() <= 1e-6,
+            "probe {idx}: rust {got} vs fixture {want}"
+        );
+    }
+
+    let (mut l2, mut total) = (0.0f64, 0.0f64);
+    for &x in &mean.data {
+        l2 += (x as f64) * (x as f64);
+        total += x as f64;
+    }
+    let l2 = l2.sqrt();
+    let want_l2 = j.get("mean_l2").and_then(Json::as_f64).unwrap();
+    let want_sum = j.get("mean_sum").and_then(Json::as_f64).unwrap();
+    assert!((l2 - want_l2).abs() <= 1e-4 * want_l2, "L2 {l2} vs {want_l2}");
+    assert!(
+        (total - want_sum).abs() <= 1e-4 * want_sum.abs(),
+        "sum {total} vs {want_sum}"
+    );
+}

@@ -18,6 +18,14 @@
 //!                     every code; retryable + exit match for table rows).
 //!   R5 emit-guards    emit-only-when-present back-compat fields stay
 //!                     behind a conditional (`if` opener before `fn`).
+//!                     PR-9's wire fields (request `warm_start`, job-view
+//!                     `velocity`/`warped`, stats `pinned`, reduce
+//!                     `delta_rel`) joined the needle table.
+//!   R6 template-sync  the template subsystem and the reduce verb's
+//!                     module must take sync primitives through the
+//!                     `util/sync.rs` shim: any file under `template/`
+//!                     (or serve/daemon.rs) that mentions Mutex/RwLock/
+//!                     Condvar/`thread::` must import `crate::util::sync`.
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -43,7 +51,18 @@ const EMIT_GUARDS: &[(&str, &str)] = &[
     ("serve/proto.rs", "insert(\"nodes\""),
     ("serve/proto.rs", "insert(\"batches\""),
     ("serve/proto.rs", "insert(\"coalesced\""),
+    // PR-9 wire fields: pre-template peers must keep decoding our lines.
+    ("request.rs", "push((\"warm_start\""),
+    ("serve/proto.rs", "insert(\"velocity\""),
+    ("serve/proto.rs", "insert(\"warped\""),
+    ("serve/proto.rs", "insert(\"pinned\""),
+    ("serve/proto.rs", "insert(\"delta_rel\""),
 ];
+
+/// R6 scope: template subsystem files (prefix) + the reduce verb's home.
+const TEMPLATE_SYNC_SCOPE: &[&str] = &["template/", "serve/daemon.rs"];
+const TEMPLATE_SYNC_TOKENS: &[&str] = &["Mutex", "RwLock", "Condvar", "thread::"];
+const TEMPLATE_SYNC_SHIM: &str = "crate::util::sync";
 
 struct Lint {
     repo: PathBuf,
@@ -72,10 +91,11 @@ fn main() {
     lint.rule_store_journal();
     lint.rule_error_codes();
     lint.rule_emit_guards();
+    lint.rule_template_sync();
     if lint.violations.is_empty() {
         println!(
             "xtask lint: OK (shim-imports, lock-order, store-journal, \
-             error-codes, emit-guards)"
+             error-codes, emit-guards, template-sync)"
         );
     } else {
         for v in &lint.violations {
@@ -391,6 +411,49 @@ impl Lint {
             }
         }
     }
+
+    // R6 -------------------------------------------------------------------
+
+    /// Template/reduce modules must take sync primitives through the
+    /// `util/sync.rs` shim. R1 already bans `std::sync` tree-wide; this
+    /// rule additionally requires the *positive* shim import in the new
+    /// subsystem — a scoped file mentioning a sync primitive without a
+    /// `crate::util::sync` path is flagged even if the primitive comes
+    /// from somewhere R1 does not know about.
+    fn rule_template_sync(&mut self) {
+        for path in self.rs_files() {
+            let rel = path
+                .strip_prefix(&self.src)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let scoped = TEMPLATE_SYNC_SCOPE
+                .iter()
+                .any(|s| rel == *s || (s.ends_with('/') && rel.starts_with(s)));
+            if !scoped {
+                continue;
+            }
+            let Ok(text) = fs::read_to_string(&path) else { continue };
+            let has_shim = text.contains(TEMPLATE_SYNC_SHIM);
+            for (i, raw) in text.lines().enumerate() {
+                let code = strip_comment(raw);
+                let Some(tok) =
+                    TEMPLATE_SYNC_TOKENS.iter().find(|t| code.contains(*t))
+                else {
+                    continue;
+                };
+                if !has_shim {
+                    let msg = format!(
+                        "uses sync primitive `{tok}` but never imports \
+                         {TEMPLATE_SYNC_SHIM} — template/reduce modules must \
+                         go through the util/sync.rs shim"
+                    );
+                    self.flag(&path, i + 1, "template-sync", &msg);
+                    break; // one flag per file is enough signal
+                }
+            }
+        }
+    }
 }
 
 /// Which forbidden-pattern did this line hit, if any (mirror of the Python
@@ -537,4 +600,118 @@ fn parse_table_rows(section: &str) -> Vec<(String, &'static str, u32)> {
         out.push((code[1..code.len() - 1].to_string(), retry, exit));
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a Lint over a throwaway src tree.
+    fn fixture(name: &str, files: &[(&str, &str)]) -> Lint {
+        let root = std::env::temp_dir()
+            .join(format!("claire-xtask-lint-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        let src = root.join("src");
+        for (rel, body) in files {
+            let p = src.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(&p, body).unwrap();
+        }
+        Lint { repo: root.clone(), src, violations: Vec::new() }
+    }
+
+    // R6 negative: a template/ file reaching for a sync primitive without
+    // the shim import is flagged; the shim-importing twin is not.
+    #[test]
+    fn template_sync_flags_shimless_primitives() {
+        let mut lint = fixture(
+            "r6",
+            &[
+                (
+                    "template/bad.rs",
+                    "use other::sync::Mutex;\nfn f() { let _ = Mutex::new(0); }\n",
+                ),
+                (
+                    "template/good.rs",
+                    "use crate::util::sync::Mutex;\nfn f() { let _ = Mutex::new(0); }\n",
+                ),
+                // Out of scope: primitives elsewhere are R1's business.
+                (
+                    "serve/router/mod.rs",
+                    "use other::sync::RwLock;\nfn f() { let _ = RwLock::new(0); }\n",
+                ),
+            ],
+        );
+        lint.rule_template_sync();
+        assert_eq!(lint.violations.len(), 1, "{:?}", lint.violations);
+        assert!(lint.violations[0].contains("template-sync"), "{:?}", lint.violations);
+        assert!(lint.violations[0].contains("bad.rs"), "{:?}", lint.violations);
+    }
+
+    // R6 negative: the reduce verb's module (serve/daemon.rs) is in scope.
+    #[test]
+    fn template_sync_covers_the_reduce_module() {
+        let mut lint = fixture(
+            "r6d",
+            &[(
+                "serve/daemon.rs",
+                "fn f() { let h = thread::spawn(|| {}); h.join().unwrap(); }\n",
+            )],
+        );
+        lint.rule_template_sync();
+        assert_eq!(lint.violations.len(), 1, "{:?}", lint.violations);
+        assert!(lint.violations[0].contains("thread::"), "{:?}", lint.violations);
+    }
+
+    // R5 negative over the PR-9 needles: an unconditional `velocity`
+    // emission is flagged; the `if`-guarded `warped` twin passes.
+    #[test]
+    fn emit_guards_flag_unconditional_new_wire_fields() {
+        let proto = concat!(
+            "fn encode_bad(m: &mut Map, v: &View) {\n",
+            "    m.insert(\"velocity\".into(), Json::str(x));\n",
+            "}\n",
+            "fn encode_good(m: &mut Map, v: &View) {\n",
+            "    if let Some(w) = &v.warped {\n",
+            "        m.insert(\"warped\".into(), Json::str(w));\n",
+            "    }\n",
+            "}\n",
+        );
+        let mut lint = fixture("r5", &[("serve/proto.rs", proto)]);
+        // Run the emit scan against just the two PR-9 needles present in
+        // the fixture (the production table expects the full proto.rs).
+        for &(rel, needle) in
+            &[("serve/proto.rs", "insert(\"velocity\""), ("serve/proto.rs", "insert(\"warped\"")]
+        {
+            let path = lint.src.join(rel);
+            let text = fs::read_to_string(&path).unwrap();
+            let lines: Vec<&str> = text.lines().collect();
+            for i in 0..lines.len() {
+                if !strip_comment(lines[i]).contains(needle) {
+                    continue;
+                }
+                let mut bal: i64 = 0;
+                let mut guarded = false;
+                for j in (0..i).rev() {
+                    let code = strip_comment(lines[j]);
+                    bal += brace_delta(code);
+                    if bal > 0 {
+                        if has_word(code, "if") {
+                            guarded = true;
+                            break;
+                        }
+                        if has_word(code, "fn") {
+                            break;
+                        }
+                        bal = 0;
+                    }
+                }
+                if !guarded {
+                    lint.flag(&path, i + 1, "emit-guards", needle);
+                }
+            }
+        }
+        assert_eq!(lint.violations.len(), 1, "{:?}", lint.violations);
+        assert!(lint.violations[0].contains("velocity"), "{:?}", lint.violations);
+    }
 }

@@ -5,12 +5,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
-echo "== invariant lint (hard gate: shim-imports, lock-order, store-journal, error-codes, emit-guards) =="
+echo "== invariant lint (hard gate: shim-imports, lock-order, store-journal, error-codes, emit-guards, template-sync) =="
 if command -v cargo >/dev/null 2>&1; then
   cargo xtask lint
 elif command -v python3 >/dev/null 2>&1; then
   echo "WARNING: cargo not found; running the dependency-free Python mirror"
   python3 ../scripts/lint_invariants.py
+  python3 ../scripts/lint_invariants.py --selftest
 else
   echo "ERROR: neither cargo nor python3 available to run the invariant lint" >&2
   exit 1
@@ -67,8 +68,17 @@ cargo test -q --test integration_serve dedup_resubmission_is_exactly_once_across
 echo "== journal crash-safety properties: torn/truncated/interleaved tails =="
 cargo test -q --test prop_journal
 
+echo "== template smoke: group-wise build converges + journaled restart resumes exactly-once =="
+cargo test -q --test integration_template
+
+echo "== reduction-math properties: log-mean/warp invariants + float64 NumPy fixture =="
+cargo test -q --test prop_reduce
+
 echo "== service bench smoke: batched-vs-sequential throughput -> BENCH_service.json =="
 CLAIRE_BENCH_SMOKE=1 cargo bench --bench bench_service
+
+echo "== template bench smoke: round/reduce latency sweep -> BENCH_template.json =="
+CLAIRE_BENCH_SMOKE=1 cargo bench --bench bench_template
 
 echo "== cargo doc --no-deps (public API docs, warnings as errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Generate the reduction-math cross-check fixture.
+
+Builds K synthetic 16^3 volumes from a 32-bit LCG (exactly reproducible
+in Rust with wrapping u64 arithmetic), computes their voxelwise mean in
+float64, and records summary values — L2 norm, plain sum, and a handful
+of probed voxels — in rust/tests/fixtures/reduce_mean_16.json. The Rust
+property test (tests/prop_reduce.rs) regenerates the same volumes,
+reduces them through `groupwise::mean_scalar`, and compares against
+these float64 references.
+
+Uses NumPy when available; falls back to pure python (same arithmetic,
+float64 either way). Run from the repo root:
+
+    python3 scripts/gen_reduce_fixture.py
+"""
+
+import json
+import os
+
+N = 16
+K = 4
+SEED = 0x5EED
+# Numerical Recipes LCG constants, 32-bit state.
+A = 1664525
+C = 1013904223
+MOD = 1 << 32
+PROBES = [0, 1, 255, 1024, 2048, 3071, 4000, 4095]
+
+
+def lcg_volume(subject):
+    """One n^3 volume in [0,1): f32-rounded samples of a 32-bit LCG."""
+    state = (SEED + subject * 9973) % MOD
+    out = []
+    for _ in range(N * N * N):
+        state = (A * state + C) % MOD
+        # Round through f32 the way the Rust store holds samples, so the
+        # float64 mean below is over *identical* inputs.
+        out.append(f32(state / MOD))
+    return out
+
+
+def f32(x):
+    import struct
+
+    return struct.unpack("f", struct.pack("f", x))[0]
+
+
+def main():
+    try:
+        import numpy as np
+
+        vols = [np.array(lcg_volume(s), dtype=np.float64) for s in range(K)]
+        mean = sum(vols) / K
+        l2 = float(np.sqrt(np.sum(mean * mean)))
+        total = float(np.sum(mean))
+        probes = [float(mean[i]) for i in PROBES]
+    except ImportError:
+        vols = [lcg_volume(s) for s in range(K)]
+        m = N * N * N
+        mean = [sum(v[i] for v in vols) / K for i in range(m)]
+        l2 = sum(x * x for x in mean) ** 0.5
+        total = sum(mean)
+        probes = [mean[i] for i in PROBES]
+
+    fixture = {
+        "n": N,
+        "k": K,
+        "seed": SEED,
+        "lcg_a": A,
+        "lcg_c": C,
+        "probe_indices": PROBES,
+        "mean_l2": l2,
+        "mean_sum": total,
+        "mean_probes": probes,
+    }
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust", "tests", "fixtures", "reduce_mean_16.json",
+    )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(fixture, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out} (n={N}, k={K}, l2={l2:.12f})")
+
+
+if __name__ == "__main__":
+    main()

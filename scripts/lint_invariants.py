@@ -25,12 +25,21 @@ hand; the rule IDs and semantics below must match xtask's RULES table):
                     table — presence is still required.)
   R5 emit-guards    Back-compat emit-only-when-present fields (journal
                     `dedup`, request `dedup`, stats `nodes`/`batches`/
-                    `coalesced`) must stay behind a conditional: their
+                    `coalesced`, and PR-9's request `warm_start`, job-view
+                    `velocity`/`warped`, stats `pinned`, reduce
+                    `delta_rel`) must stay behind a conditional: their
                     emission line must have an enclosing `if` opener
                     before the enclosing `fn`.
+  R6 template-sync  The template subsystem and the reduce verb's module
+                    must take sync primitives through the util/sync.rs
+                    shim: any file under template/ (or serve/daemon.rs)
+                    that mentions Mutex/RwLock/Condvar/`thread::` must
+                    import `crate::util::sync`.
 
 Exit 0 with no output (beyond the summary) when clean; exit 1 listing
 violations otherwise. Runs on bare python3 — no Rust toolchain, no pip.
+`--selftest` runs the rules against synthetic bad/good fixtures (the
+negative tests mirroring rust/xtask's `cargo test -p xtask`).
 """
 
 import os
@@ -73,7 +82,18 @@ EMIT_GUARDS = [
     ("serve/proto.rs", 'insert("nodes"'),
     ("serve/proto.rs", 'insert("batches"'),
     ("serve/proto.rs", 'insert("coalesced"'),
+    # PR-9 wire fields: pre-template peers must keep decoding our lines.
+    ("request.rs", 'push(("warm_start"'),
+    ("serve/proto.rs", 'insert("velocity"'),
+    ("serve/proto.rs", 'insert("warped"'),
+    ("serve/proto.rs", 'insert("pinned"'),
+    ("serve/proto.rs", 'insert("delta_rel"'),
 ]
+
+# R6 scope: template subsystem files (prefix) + the reduce verb's home.
+TEMPLATE_SYNC_SCOPE = ("template/", "serve/daemon.rs")
+TEMPLATE_SYNC_TOKENS = ("Mutex", "RwLock", "Condvar", "thread::")
+TEMPLATE_SYNC_SHIM = "crate::util::sync"
 
 violations = []
 
@@ -280,19 +300,102 @@ def rule_emit_guards():
                  f"expected emission site {needle!r} not found (rule table stale?)")
 
 
+# -- R6: template/reduce sync discipline -------------------------------------
+
+def rule_template_sync():
+    """R1 bans std::sync tree-wide; R6 adds the *positive* requirement in
+    the template subsystem and the reduce verb's module: a scoped file
+    mentioning a sync primitive must import crate::util::sync, even if
+    the primitive comes from somewhere R1 does not know about."""
+    for path in rs_files():
+        rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+        scoped = any(
+            rel == s or (s.endswith("/") and rel.startswith(s))
+            for s in TEMPLATE_SYNC_SCOPE
+        )
+        if not scoped:
+            continue
+        text = open(path, encoding="utf-8").read()
+        has_shim = TEMPLATE_SYNC_SHIM in text
+        if has_shim:
+            continue
+        for lineno, raw in enumerate(text.splitlines(), 1):
+            code = strip_comment(raw)
+            tok = next((t for t in TEMPLATE_SYNC_TOKENS if t in code), None)
+            if tok:
+                flag(path, lineno, "template-sync",
+                     f"uses sync primitive `{tok}` but never imports "
+                     f"{TEMPLATE_SYNC_SHIM} — template/reduce modules must "
+                     "go through the util/sync.rs shim")
+                break  # one flag per file is enough signal
+
+
+# -- Negative-fixture selftest ------------------------------------------------
+
+def selftest():
+    """Run R5/R6 against synthetic bad/good fixtures. Mirrors xtask's
+    `#[cfg(test)]` negatives for containers with no Rust toolchain."""
+    global SRC, EMIT_GUARDS, violations
+    import tempfile
+    saved = (SRC, EMIT_GUARDS, violations)
+    with tempfile.TemporaryDirectory() as td:
+        os.makedirs(os.path.join(td, "template"))
+        os.makedirs(os.path.join(td, "serve"))
+        with open(os.path.join(td, "template", "bad.rs"), "w") as fh:
+            fh.write("use other::sync::Mutex;\nfn f() { let _ = Mutex::new(0); }\n")
+        with open(os.path.join(td, "template", "good.rs"), "w") as fh:
+            fh.write("use crate::util::sync::Mutex;\nfn f() { let _ = Mutex::new(0); }\n")
+        with open(os.path.join(td, "serve", "daemon.rs"), "w") as fh:
+            fh.write("fn f() { let h = thread::spawn(|| {}); h.join().unwrap(); }\n")
+        # Out of R6 scope: primitives elsewhere are R1's business.
+        with open(os.path.join(td, "serve", "router.rs"), "w") as fh:
+            fh.write("use other::sync::RwLock;\nfn f() { let _ = RwLock::new(0); }\n")
+        with open(os.path.join(td, "serve", "proto.rs"), "w") as fh:
+            fh.write(
+                'fn encode_bad(m, v) {\n'
+                '    m.insert("velocity".into(), Json::str(x));\n'
+                '}\n'
+                'fn encode_good(m, v) {\n'
+                '    if let Some(w) = &v.warped {\n'
+                '        m.insert("warped".into(), Json::str(w));\n'
+                '    }\n'
+                '}\n')
+        SRC = td
+        EMIT_GUARDS = [("serve/proto.rs", 'insert("velocity"'),
+                       ("serve/proto.rs", 'insert("warped"')]
+        violations = []
+        rule_template_sync()
+        r6 = list(violations)
+        assert any("template-sync" in v and "bad.rs" in v for v in r6), r6
+        assert any("daemon.rs" in v and "thread::" in v for v in r6), r6
+        assert not any("good.rs" in v for v in r6), r6
+        assert not any("router.rs" in v for v in r6), r6
+        violations = []
+        rule_emit_guards()
+        r5 = list(violations)
+        assert any("emit-guards" in v and "velocity" in v for v in r5), r5
+        assert not any("warped" in v for v in r5), r5
+    SRC, EMIT_GUARDS, violations = saved
+    print("lint_invariants: selftest OK (template-sync + emit-guards negatives)")
+
+
 def main():
+    if "--selftest" in sys.argv:
+        selftest()
+        return 0
     rule_shim_imports()
     rule_lock_order()
     rule_store_journal()
     rule_error_codes()
     rule_emit_guards()
+    rule_template_sync()
     if violations:
         for v in violations:
             print(v)
         print(f"lint_invariants: {len(violations)} violation(s)")
         return 1
     print("lint_invariants: OK (shim-imports, lock-order, store-journal, "
-          "error-codes, emit-guards)")
+          "error-codes, emit-guards, template-sync)")
     return 0
 
 

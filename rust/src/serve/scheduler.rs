@@ -966,13 +966,13 @@ impl Scheduler {
         rec.wall_s = Some(wall_s);
         match result {
             Ok(outcome) => {
-                rec.state = JobState::Done;
+                rec.state = JobState::Done; // lifecycle: running -> done
                 rec.report = Some(outcome.report);
                 rec.velocity = outcome.velocity;
                 rec.warped = outcome.warped;
             }
             Err(Error::Cancelled { history }) => {
-                rec.state = JobState::Cancelled;
+                rec.state = JobState::Cancelled; // lifecycle: running -> cancelled
                 // Keep the partial work visible even when the executor
                 // never routed an observer (the history is authoritative;
                 // observer-fed progress can only match it).
@@ -993,7 +993,7 @@ impl Scheduler {
                 }
             }
             Err(e) => {
-                rec.state = JobState::Failed;
+                rec.state = JobState::Failed; // lifecycle: running -> failed
                 rec.error = Some(e.to_string());
             }
         }

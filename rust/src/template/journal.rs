@@ -89,6 +89,7 @@ impl RoundJournal {
     }
 
     /// Journal the run header (once, on a fresh build).
+    // lifecycle: (start) -> init
     pub fn append_init(&self, st: &TemplateState) -> Result<()> {
         self.append(Json::object([
             ("kind", Json::str("init")),
@@ -103,6 +104,7 @@ impl RoundJournal {
     }
 
     /// Journal one completed round.
+    // lifecycle: init|round -> round
     pub fn append_round(&self, r: &RoundRecord) -> Result<()> {
         let opt_str = |v: &Option<String>| match v {
             Some(s) => Json::str(s),

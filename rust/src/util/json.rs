@@ -314,7 +314,10 @@ impl<'a> Parser<'a> {
                         0xE0..=0xEF => 3,
                         _ => 4,
                     };
-                    self.pos = start + len;
+                    // Clamp against a sequence truncated at end-of-line so
+                    // the slice below stays in bounds; from_utf8 then
+                    // rejects the partial sequence as bad utf8.
+                    self.pos = (start + len).min(self.bytes.len());
                     let s = std::str::from_utf8(&self.bytes[start..self.pos])
                         .map_err(|_| self.err("bad utf8"))?;
                     out.push_str(s);
@@ -332,7 +335,8 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }

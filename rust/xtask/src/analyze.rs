@@ -1,0 +1,2033 @@
+//! `cargo xtask analyze` — semantic invariant analyses. Canonical entry
+//! when a Rust toolchain is present; `scripts/analyze_invariants.py` is
+//! the dependency-free lockstep mirror for toolchain-less containers
+//! (rule IDs, messages, and artifact bytes must match — see its module
+//! docstring for the full semantics).
+//!
+//!   A1 lifecycle     Extract the job-lifecycle transition graph from
+//!                    serve/scheduler.rs (state assignments with their
+//!                    guarding context or `// lifecycle: from -> to`
+//!                    annotation) and the template round-state machine
+//!                    from template/journal.rs; check both against the
+//!                    declared tables in DESIGN.md in both directions.
+//!                    Emits artifacts/lifecycle.dot.
+//!   A2 wire-schema   Walk serve/proto.rs / request.rs encode/decode
+//!                    paths into per-verb and per-object field sets;
+//!                    check encode ⊆ decode, the verb set against
+//!                    DESIGN.md's "### Requests" table, conditionally
+//!                    emitted fields against the "#### Conditional wire
+//!                    fields" table (R5's obligation source), and the
+//!                    golden corpus. Emits artifacts/wire_schema.json.
+//!   A3 panic-budget  Inventory of panic-shaped and slice-indexing
+//!                    sites in non-test rust/src vs
+//!                    scripts/panic_budget.toml; over budget fails,
+//!                    under budget demands a ratchet-down, decode-path
+//!                    files are pinned to zero.
+//!
+//! Like the rest of xtask this module is dependency-free: string
+//! scanning is hand-rolled (no regex crate) and the corpus check uses
+//! the minimal JSON parser at the bottom of this file.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::{has_word, is_guarded, strip_comment};
+
+const SCHED_FILE: &str = "serve/scheduler.rs";
+const TEMPLATE_JOURNAL_FILE: &str = "template/journal.rs";
+const PROTO_FILE: &str = "serve/proto.rs";
+const REQUEST_FILE: &str = "request.rs";
+
+/// Files whose insert("f")/push(("f") emission sites feed the
+/// conditional-wire-field extraction (the wire/journal encoders).
+const CONDITIONAL_SCAN_FILES: &[&str] =
+    &["serve/proto.rs", "request.rs", "serve/journal.rs", "template/journal.rs"];
+
+/// Decode-path files that must budget ZERO panic sites.
+const ZERO_PANIC_FILES: &[&str] = &["serve/proto.rs", "request.rs", "util/json.rs"];
+
+const JOB_TABLE_ANCHOR: &str = "#### Job lifecycle transitions";
+const ROUND_TABLE_ANCHOR: &str = "#### Template round-state transitions";
+const COND_TABLE_ANCHOR: &str = "#### Conditional wire fields";
+const REQUESTS_ANCHOR: &str = "### Requests";
+
+const NEW_STATE: &str = "(new)";
+
+pub struct Analyze {
+    pub repo: PathBuf,
+    pub src: PathBuf,
+    pub design: PathBuf,
+    pub budget: PathBuf,
+    pub corpus: PathBuf,
+    pub artifacts: PathBuf,
+    pub violations: Vec<String>,
+}
+
+impl Analyze {
+    pub fn new(repo: PathBuf, src: PathBuf) -> Self {
+        Analyze {
+            design: repo.join("DESIGN.md"),
+            budget: repo.join("scripts").join("panic_budget.toml"),
+            corpus: repo.join("rust").join("tests").join("fixtures").join("wire_corpus.ndjson"),
+            artifacts: repo.join("artifacts"),
+            repo,
+            src,
+            violations: Vec::new(),
+        }
+    }
+
+    pub fn run(&mut self) {
+        self.analysis_lifecycle(true);
+        self.analysis_wire_schema(true);
+        self.analysis_panic_budget();
+    }
+
+    fn flag(&mut self, path: &Path, lineno: usize, rule: &str, msg: &str) {
+        let rel = path.strip_prefix(&self.repo).unwrap_or(path).display().to_string();
+        self.violations.push(format!("{rel}:{lineno}: [{rule}] {msg}"));
+    }
+
+    fn read(&mut self, path: &Path, rule: &str) -> Option<String> {
+        match fs::read_to_string(path) {
+            Ok(t) => Some(t),
+            Err(_) => {
+                self.flag(path, 1, rule, "cannot read file");
+                None
+            }
+        }
+    }
+}
+
+// -- shared scanning helpers -------------------------------------------------
+
+/// Longest leading identifier run (`\w+`).
+fn ident(s: &str) -> &str {
+    let end = s.find(|c: char| !(c.is_alphanumeric() || c == '_')).unwrap_or(s.len());
+    &s[..end]
+}
+
+/// Is position `i` preceded by a non-word character (regex `\b`)?
+fn left_boundary(text: &str, i: usize) -> bool {
+    i == 0 || {
+        let c = text.as_bytes()[i - 1];
+        !(c.is_ascii_alphanumeric() || c == b'_')
+    }
+}
+
+/// Captures of `needle"FIELD"` (left word boundary on the needle); with
+/// `closed`, a `)` must follow the closing quote. Mirrors the Python
+/// GET_FIELD-family regexes `\bNAME\("(\w+)"\)`.
+fn quoted_calls(text: &str, needle: &str, closed: bool) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut from = 0;
+    while let Some(i) = text[from..].find(needle) {
+        let start = from + i;
+        from = start + needle.len();
+        if !left_boundary(text, start) {
+            continue;
+        }
+        let Some(r) = text[from..].strip_prefix('"') else { continue };
+        let name = ident(r);
+        if name.is_empty() {
+            continue;
+        }
+        if let Some(a) = r[name.len()..].strip_prefix('"') {
+            if !closed || a.starts_with(')') {
+                out.insert(name.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Captures of `("FIELD",` — the pair-literal idiom (Python PAIR_FIELD).
+fn pair_fields(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut from = 0;
+    while let Some(i) = text[from..].find("(\"") {
+        let start = from + i + 2;
+        from = start;
+        let name = ident(&text[start..]);
+        if !name.is_empty() && text[start + name.len()..].starts_with("\",") {
+            out.insert(name.to_string());
+        }
+    }
+    out
+}
+
+/// Captures of `field(j, "FIELD"` (JobRequest decode helper).
+fn field_j_calls(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut from = 0;
+    while let Some(i) = text[from..].find("field(j,") {
+        let start = from + i + 8;
+        from = start;
+        if let Some(r) = text[start..].trim_start().strip_prefix('"') {
+            let name = ident(r);
+            if !name.is_empty() && r[name.len()..].starts_with('"') {
+                out.insert(name.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Decode-side field set of a match-arm chunk: `get("f")` plus the local
+/// reader closures `str_opt("f")` / `num("f")`, plus `id` when the arm
+/// goes through `id_of(` — minus the envelope keys.
+fn decode_fields(chunk: &str) -> BTreeSet<String> {
+    let mut fields = quoted_calls(chunk, "get(", true);
+    fields.extend(quoted_calls(chunk, "str_opt(", true));
+    fields.extend(quoted_calls(chunk, "num(", true));
+    if chunk.contains("id_of(") {
+        fields.insert("id".to_string());
+    }
+    fields.remove("cmd");
+    fields.remove("seq");
+    fields
+}
+
+/// `"verb" => …` arms of a match-on-string region, keyed by verb; a
+/// verb's repeated arms are concatenated (Python split_str_arms).
+fn split_str_arms(region: &str) -> BTreeMap<String, String> {
+    let mut arms: BTreeMap<String, String> = BTreeMap::new();
+    let mut current: Option<String> = None;
+    for line in region.lines() {
+        let head = line.trim_start().strip_prefix('"').and_then(|r| {
+            let name = ident(r);
+            let rest = r.get(name.len()..)?.strip_prefix('"')?.trim_start();
+            let tail = rest.strip_prefix("=>")?;
+            if name.is_empty() {
+                None
+            } else {
+                Some((name.to_string(), tail.to_string()))
+            }
+        });
+        match head {
+            Some((verb, tail)) => {
+                let entry = arms.entry(verb.clone()).or_default();
+                if !entry.is_empty() {
+                    entry.push('\n');
+                }
+                entry.push_str(&tail);
+                current = Some(verb);
+            }
+            None => {
+                if let Some(v) = &current {
+                    let entry = arms.get_mut(v).expect("current arm exists");
+                    entry.push('\n');
+                    entry.push_str(line);
+                }
+            }
+        }
+    }
+    arms
+}
+
+/// Brace-matched body of the first fn whose definition contains `marker`,
+/// plus its 1-based line. String-naive brace counting (fine here: braces
+/// inside these codecs' literals come in pairs).
+fn fn_region(text: &str, marker: &str) -> Option<(String, usize)> {
+    let start = text.find(marker)?;
+    let open = start + text[start..].find('{')?;
+    let mut depth = 0i64;
+    for (off, c) in text[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    let line = text[..start].matches('\n').count() + 1;
+                    return Some((text[open..open + off + 1].to_string(), line));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// (section text, 1-based start line). A section runs from its anchor
+/// heading to the next heading of same-or-higher level.
+fn design_section(design: &str, anchor: &str) -> Option<(String, usize)> {
+    let start = design.find(anchor)?;
+    let level = anchor.split(' ').next().unwrap_or("").len();
+    let mut stops = vec!["\n## "];
+    if level >= 3 {
+        stops.push("\n### ");
+    }
+    if level >= 4 {
+        stops.push("\n#### ");
+    }
+    let tail = &design[start..];
+    let mut end = tail.len();
+    for s in stops {
+        if let Some(i) = tail[1..].find(s) {
+            end = end.min(i + 1);
+        }
+    }
+    Some((tail[..end].to_string(), design[..start].matches('\n').count() + 1))
+}
+
+/// First-two-backticked-cell rows: `| \`a\` | \`b\` | …` -> [(a, b)].
+fn parse_pair_table(section: &str) -> Vec<(String, String)> {
+    fn cell(s: &str) -> Option<(String, &str)> {
+        let s = s.trim_start().strip_prefix('`')?;
+        let end = s.find('`')?;
+        let c = &s[..end];
+        if c.is_empty()
+            || !c.chars().all(|ch| ch.is_alphanumeric() || "_()./|-".contains(ch))
+        {
+            return None;
+        }
+        Some((c.to_string(), s[end + 1..].trim_start()))
+    }
+    let mut rows = Vec::new();
+    for line in section.lines() {
+        let Some(r) = line.strip_prefix('|') else { continue };
+        let Some((a, r)) = cell(r) else { continue };
+        let Some(r) = r.strip_prefix('|') else { continue };
+        let Some((b, r)) = cell(r) else { continue };
+        if r.starts_with('|') {
+            rows.push((a, b));
+        }
+    }
+    rows
+}
+
+// -- A1: lifecycle state-machine extraction ----------------------------------
+
+/// `// lifecycle: from -> to` (from may be `a|b` alternatives).
+fn lifecycle_ann(raw: &str) -> Option<(Vec<String>, String)> {
+    let c = raw.find("//")?;
+    let rest = raw[c + 2..].trim_start().strip_prefix("lifecycle:")?.trim_start();
+    let from_end = rest
+        .find(|ch: char| !(ch.is_alphanumeric() || "_()|".contains(ch)))
+        .unwrap_or(rest.len());
+    let from = &rest[..from_end];
+    let rest = rest[from_end..].trim_start().strip_prefix("->")?.trim_start();
+    let to_end = rest
+        .find(|ch: char| !(ch.is_alphanumeric() || "_()".contains(ch)))
+        .unwrap_or(rest.len());
+    let to = &rest[..to_end];
+    if from.is_empty() || to.is_empty() {
+        return None;
+    }
+    Some((from.split('|').map(str::to_string).collect(), to.to_string()))
+}
+
+/// `rec.state = JobState::X;` -> X (rejects `==` comparisons).
+fn state_mut(code: &str) -> Option<String> {
+    let i = code.find("rec.state")?;
+    let rest = code[i + 9..].trim_start().strip_prefix('=')?;
+    if rest.starts_with('=') {
+        return None;
+    }
+    let rest = rest.trim_start().strip_prefix("JobState::")?;
+    let name = ident(rest);
+    if name.is_empty() || !rest[name.len()..].trim_start().starts_with(';') {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// `if rec.state != JobState::X` -> X.
+fn guard_neq(code: &str) -> Option<String> {
+    let i = code.find("rec.state")?;
+    let before = code[..i].trim_end();
+    if !(before.ends_with("if") && left_boundary(before, before.len() - 2)) {
+        return None;
+    }
+    let rest = code[i + 9..].trim_start().strip_prefix("!=")?.trim_start();
+    let name = ident(rest.strip_prefix("JobState::")?);
+    if name.is_empty() {
+        None
+    } else {
+        Some(name.to_string())
+    }
+}
+
+/// Line-leading `JobState::X =>` match arm -> X.
+fn match_arm(code: &str) -> Option<String> {
+    let rest = code.trim_start().strip_prefix("JobState::")?;
+    let name = ident(rest);
+    if name.is_empty() || !rest[name.len()..].trim_start().starts_with("=>") {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// `state: JobState::X,` struct-literal field -> X.
+fn state_construct(code: &str) -> Option<String> {
+    let mut from = 0;
+    while let Some(i) = code[from..].find("state:") {
+        let start = from + i;
+        from = start + 6;
+        if !left_boundary(code, start) {
+            continue;
+        }
+        let Some(rest) = code[start + 6..].trim_start().strip_prefix("JobState::") else {
+            continue;
+        };
+        let name = ident(rest);
+        if !name.is_empty() && rest[name.len()..].trim_start().starts_with(',') {
+            return Some(name.to_string());
+        }
+    }
+    None
+}
+
+/// JobState variants (lowercased) and the is_terminal variant list.
+fn extract_job_states(text: &str) -> (Vec<String>, Vec<String>) {
+    let mut states = Vec::new();
+    if let Some(i) = text.find("enum JobState") {
+        if let Some(open) = text[i..].find('{') {
+            let body_start = i + open + 1;
+            if let Some(close) = text[body_start..].find('}') {
+                let body = &text[body_start..body_start + close];
+                let bytes = body.as_bytes();
+                let mut k = 0;
+                while k < body.len() {
+                    if (bytes[k] as char).is_ascii_uppercase() && left_boundary(body, k) {
+                        let name = ident(&body[k..]);
+                        states.push(name.to_lowercase());
+                        k += name.len();
+                    } else {
+                        k += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut terminals = Vec::new();
+    if let Some(i) = text.find("fn is_terminal") {
+        if let Some(m) = text[i..].find("matches!(self,") {
+            let rest = &text[i + m + 14..];
+            let span = &rest[..rest.find(')').unwrap_or(rest.len())];
+            let mut from = 0;
+            while let Some(p) = span[from..].find("JobState::") {
+                let s = from + p + 10;
+                let name = ident(&span[s..]);
+                if !name.is_empty() {
+                    terminals.push(name.to_lowercase());
+                }
+                from = s + name.len().max(1);
+            }
+        }
+    }
+    (states, terminals)
+}
+
+type Edge = (String, String, usize);
+
+impl Analyze {
+    /// (from, to, lineno) transitions from scheduler source; unresolvable
+    /// assignment sites are flagged.
+    fn extract_job_edges(&mut self, sched_path: &Path) -> Vec<Edge> {
+        let Some(text) = self.read(&sched_path.to_path_buf(), "lifecycle") else {
+            return Vec::new();
+        };
+        let raw_lines: Vec<&str> = text.lines().collect();
+        let mut edges = Vec::new();
+        for (i, raw) in raw_lines.iter().enumerate() {
+            let code = strip_comment(raw);
+            if let Some(to_var) = state_mut(code) {
+                let to = to_var.to_lowercase();
+                if let Some((froms, ann_to)) = lifecycle_ann(raw) {
+                    if ann_to.to_lowercase() != to {
+                        let msg = format!(
+                            "annotation says `-> {ann_to}` but the assignment \
+                             sets JobState::{to_var}"
+                        );
+                        self.flag(sched_path, i + 1, "lifecycle", &msg);
+                    }
+                    for frm in froms {
+                        edges.push((frm.to_lowercase(), to.clone(), i + 1));
+                    }
+                    continue;
+                }
+                let mut frm = None;
+                for j in (0..i).rev() {
+                    let prev = strip_comment(raw_lines[j]);
+                    if let Some(g) = guard_neq(prev) {
+                        frm = Some(g.to_lowercase());
+                        break;
+                    }
+                    if let Some(a) = match_arm(prev) {
+                        frm = Some(a.to_lowercase());
+                        break;
+                    }
+                    if has_word(prev, "fn") {
+                        break;
+                    }
+                }
+                match frm {
+                    Some(f) => edges.push((f, to, i + 1)),
+                    None => self.flag(
+                        sched_path,
+                        i + 1,
+                        "lifecycle",
+                        "cannot derive the from-state of this transition \
+                         (no `if rec.state != …` guard, `match rec.state` \
+                         arm, or `// lifecycle: from -> to` annotation)",
+                    ),
+                }
+                continue;
+            }
+            if let Some(to) = state_construct(code) {
+                // Initial state of a freshly constructed record — but only
+                // in a JobRecord literal (WatchEvent snapshots are views of
+                // existing state, not transitions).
+                for j in (0..=i).rev() {
+                    let prev = strip_comment(raw_lines[j]);
+                    if prev.contains("JobRecord {") {
+                        edges.push((NEW_STATE.to_string(), to.to_lowercase(), i + 1));
+                        break;
+                    }
+                    if prev.contains("WatchEvent {") {
+                        break;
+                    }
+                }
+            }
+        }
+        edges
+    }
+
+    /// (appended kinds, replayed kinds, annotated edges, has the
+    /// sequential-order guard) from template/journal.rs.
+    fn extract_round_machine(
+        &mut self,
+        path: &Path,
+    ) -> (Vec<String>, Vec<String>, Vec<Edge>, bool) {
+        let Some(text) = self.read(&path.to_path_buf(), "lifecycle") else {
+            return (Vec::new(), Vec::new(), Vec::new(), true);
+        };
+        let mut appended = BTreeSet::new();
+        let mut from = 0;
+        while let Some(i) = text[from..].find("(\"kind\",") {
+            let start = from + i + 8;
+            from = start;
+            if let Some(r) = text[start..].trim_start().strip_prefix("Json::str(\"") {
+                let name = ident(r);
+                if !name.is_empty() && r[name.len()..].starts_with("\"))") {
+                    appended.insert(name.to_string());
+                }
+            }
+        }
+        let replay = fn_region(&text, "fn replay").map(|(b, _)| b).unwrap_or_default();
+        let mut replayed = BTreeSet::new();
+        let mut from = 0;
+        while let Some(i) = replay[from..].find("Some(\"") {
+            let s = from + i + 6;
+            let name = ident(&replay[s..]);
+            from = s + name.len().max(1);
+            if !name.is_empty()
+                && replay[s + name.len()..].starts_with("\")")
+                && replay[s + name.len() + 2..].trim_start().starts_with("=>")
+            {
+                replayed.insert(name.to_string());
+            }
+        }
+        let mut edges = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            if let Some((froms, to)) = lifecycle_ann(raw) {
+                for f in froms {
+                    edges.push((f, to.clone(), i + 1));
+                }
+            }
+        }
+        let has_seq_guard = replay.contains("rounds.len() + 1");
+        (
+            appended.into_iter().collect(),
+            replayed.into_iter().collect(),
+            edges,
+            has_seq_guard,
+        )
+    }
+
+    /// Extracted-vs-declared edge diff, both directions.
+    fn check_machine(
+        &mut self,
+        path: &Path,
+        extracted: &[Edge],
+        declared: &[(String, String)],
+        sec_line: usize,
+        what: &str,
+    ) {
+        let extracted_set: BTreeSet<(&str, &str)> =
+            extracted.iter().map(|(f, t, _)| (f.as_str(), t.as_str())).collect();
+        let declared_set: BTreeSet<(&str, &str)> =
+            declared.iter().map(|(f, t)| (f.as_str(), t.as_str())).collect();
+        for (f, t, lineno) in extracted {
+            if !declared_set.contains(&(f.as_str(), t.as_str())) {
+                let msg = format!(
+                    "implements undeclared {what} transition `{f}` -> `{t}` \
+                     (add it to DESIGN.md's table or fix the code)"
+                );
+                self.flag(path, *lineno, "lifecycle", &msg);
+            }
+        }
+        let design = self.design.clone();
+        for (f, t) in declared {
+            if !extracted_set.contains(&(f.as_str(), t.as_str())) {
+                let msg =
+                    format!("declares {what} transition `{f}` -> `{t}` that no code implements");
+                self.flag(&design, sec_line, "lifecycle", &msg);
+            }
+        }
+    }
+
+    fn analysis_lifecycle(&mut self, write_artifacts: bool) {
+        let sched_path = self.src.join(SCHED_FILE);
+        let tj_path = self.src.join(TEMPLATE_JOURNAL_FILE);
+        let design_path = self.design.clone();
+        let Some(design) = self.read(&design_path, "lifecycle") else { return };
+
+        // Job lifecycle.
+        let edges = self.extract_job_edges(&sched_path);
+        let sched_text = fs::read_to_string(&sched_path).unwrap_or_default();
+        let (states, terminals) = extract_job_states(&sched_text);
+        let mut declared = Vec::new();
+        let mut sec_line = 0;
+        match design_section(&design, JOB_TABLE_ANCHOR) {
+            None => {
+                let msg = format!("section {JOB_TABLE_ANCHOR:?} not found");
+                self.flag(&design_path, 1, "lifecycle", &msg);
+            }
+            Some((section, line)) => {
+                sec_line = line;
+                declared = parse_pair_table(&section);
+                if declared.is_empty() {
+                    let msg = format!("{JOB_TABLE_ANCHOR:?} holds no | `from` | `to` | rows");
+                    self.flag(&design_path, sec_line, "lifecycle", &msg);
+                }
+            }
+        }
+        self.check_machine(&sched_path, &edges, &declared, sec_line, "job");
+        for (f, t) in &declared {
+            if terminals.contains(f) {
+                let msg = format!(
+                    "terminal state `{f}` (JobState::is_terminal) has a \
+                     declared outgoing transition to `{t}`"
+                );
+                self.flag(&design_path, sec_line, "lifecycle", &msg);
+            }
+            for s in [f, t] {
+                if s != NEW_STATE && !states.is_empty() && !states.contains(s) {
+                    let msg = format!(
+                        "declared transition names unknown state `{s}` \
+                         (JobState has {})",
+                        states.join(", ")
+                    );
+                    self.flag(&design_path, sec_line, "lifecycle", &msg);
+                }
+            }
+        }
+
+        // Template round-state machine.
+        let (appended, replayed, redges, has_seq_guard) = self.extract_round_machine(&tj_path);
+        for kind in &appended {
+            if !replayed.contains(kind) {
+                let msg = format!(
+                    "journal line kind `{kind}` is appended but replay() \
+                     never handles it (restart would silently drop it)"
+                );
+                self.flag(&tj_path, 1, "lifecycle", &msg);
+            }
+        }
+        let mut rdeclared = Vec::new();
+        let mut rsec_line = 0;
+        match design_section(&design, ROUND_TABLE_ANCHOR) {
+            None => {
+                let msg = format!("section {ROUND_TABLE_ANCHOR:?} not found");
+                self.flag(&design_path, 1, "lifecycle", &msg);
+            }
+            Some((section, line)) => {
+                rsec_line = line;
+                rdeclared = parse_pair_table(&section);
+            }
+        }
+        self.check_machine(&tj_path, &redges, &rdeclared, rsec_line, "round-state");
+        let declared_kinds: BTreeSet<&str> = rdeclared.iter().map(|(_, t)| t.as_str()).collect();
+        for kind in &appended {
+            if !rdeclared.is_empty() && !declared_kinds.contains(kind.as_str()) {
+                let msg = format!(
+                    "journal line kind `{kind}` does not appear in the \
+                     declared round-state table"
+                );
+                self.flag(&tj_path, 1, "lifecycle", &msg);
+            }
+        }
+        if !has_seq_guard {
+            self.flag(
+                &tj_path,
+                1,
+                "lifecycle",
+                "replay() no longer enforces sequential round order \
+                 (`rounds.len() + 1` guard missing) — the `round` -> \
+                 `round` row in DESIGN.md promises strict sequencing",
+            );
+        }
+
+        if write_artifacts && self.violations.is_empty() {
+            let mut out = String::new();
+            out.push_str(
+                "// Generated by the invariant analyzer (cargo xtask analyze / \
+                 scripts/analyze_invariants.py). Do not edit.\n",
+            );
+            out.push_str("digraph job_lifecycle {\n  rankdir=LR;\n");
+            let eset: BTreeSet<(&str, &str)> =
+                edges.iter().map(|(f, t, _)| (f.as_str(), t.as_str())).collect();
+            for (f, t) in &eset {
+                out.push_str(&format!("  \"{f}\" -> \"{t}\";\n"));
+            }
+            for s in &terminals {
+                out.push_str(&format!("  \"{s}\" [shape=doublecircle];\n"));
+            }
+            out.push_str("}\n");
+            out.push_str("digraph template_rounds {\n  rankdir=LR;\n");
+            let rset: BTreeSet<(&str, &str)> =
+                redges.iter().map(|(f, t, _)| (f.as_str(), t.as_str())).collect();
+            for (f, t) in &rset {
+                out.push_str(&format!("  \"{f}\" -> \"{t}\";\n"));
+            }
+            out.push_str("}\n");
+            let _ = fs::create_dir_all(&self.artifacts);
+            let _ = fs::write(self.artifacts.join("lifecycle.dot"), out);
+        }
+    }
+}
+
+// -- A2: wire-schema extraction & conformance --------------------------------
+
+/// Python repr of a sorted string set: `['a', 'b']` — message lockstep.
+fn pylist(items: &BTreeSet<String>) -> String {
+    let inner: Vec<String> = items.iter().map(|s| format!("'{s}'")).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+/// `("KEY", Json::str("NAME"))` markers: (offset of the marker, NAME).
+fn tag_marks(region: &str, key: &str) -> Vec<(usize, String)> {
+    let needle = format!("(\"{key}\",");
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(i) = region[from..].find(&needle) {
+        let start = from + i;
+        from = start + needle.len();
+        if let Some(r) = region[from..].trim_start().strip_prefix("Json::str(\"") {
+            let name = ident(r);
+            if !name.is_empty() && r[name.len()..].starts_with("\"))") {
+                out.push((start, name.to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// All `.insert("F"` / `.push(("F"` captures on one line.
+fn emit_site_fields(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for needle in [".insert(\"", ".push((\""] {
+        let mut from = 0;
+        while let Some(i) = code[from..].find(needle) {
+            let s = from + i + needle.len();
+            from = s;
+            let name = ident(&code[s..]);
+            if !name.is_empty() && code[s + name.len()..].starts_with('"') {
+                out.push(name.to_string());
+            }
+        }
+    }
+    out
+}
+
+/// Extra decode-side capture idioms beyond `get("f")`.
+enum DecExtra {
+    /// `NAME("f")` local reader closure.
+    Call(&'static str),
+    /// `field(j, "f"` typed-field helper.
+    FieldJ,
+}
+
+/// verb -> (decode fields, encode fields).
+type VerbSchema = BTreeMap<String, (BTreeSet<String>, BTreeSet<String>)>;
+
+impl Analyze {
+    fn extract_request_schema(&mut self, proto: &str, proto_path: &Path) -> VerbSchema {
+        let (Some(start), Some(end)) = (proto.find("match cmd {"), proto.find("unknown command"))
+        else {
+            self.flag(
+                proto_path,
+                1,
+                "wire-schema",
+                "cannot locate Request::from_json's `match cmd` dispatch",
+            );
+            return BTreeMap::new();
+        };
+        let mut schema: VerbSchema = split_str_arms(&proto[start..end])
+            .into_iter()
+            .map(|(v, chunk)| (v, (decode_fields(&chunk), BTreeSet::new())))
+            .collect();
+
+        // Encode side: chunks of Request::to_json keyed by ("cmd", …"verb").
+        let encode_region = match proto.find("pub fn to_line") {
+            Some(i) if i > 0 => &proto[..i],
+            _ => proto,
+        };
+        let marks = tag_marks(encode_region, "cmd");
+        for (k, (pos, verb)) in marks.iter().enumerate() {
+            let stop = marks.get(k + 1).map(|(p, _)| *p).unwrap_or(encode_region.len());
+            let mut fields = pair_fields(&encode_region[*pos..stop]);
+            for drop in ["cmd", "m0", "m1"] {
+                // m0/m1 are nested source-object keys, not verb fields.
+                fields.remove(drop);
+            }
+            match schema.get_mut(verb) {
+                None => {
+                    let msg = format!(
+                        "Request::to_json encodes verb `{verb}` that \
+                         Request::from_json cannot decode"
+                    );
+                    self.flag(proto_path, 1, "wire-schema", &msg);
+                }
+                Some((_, encode)) => encode.extend(fields),
+            }
+        }
+        let mut round_trip = Vec::new();
+        for (verb, (decode, encode)) in &schema {
+            let extra: BTreeSet<String> = encode.difference(decode).cloned().collect();
+            if !extra.is_empty() {
+                round_trip.push(format!(
+                    "verb `{verb}` encodes field(s) {} its decode arm never \
+                     reads — a round-trip would drop them",
+                    pylist(&extra)
+                ));
+            }
+        }
+        for msg in round_trip {
+            self.flag(proto_path, 1, "wire-schema", &msg);
+        }
+        schema
+    }
+
+    /// Field sets of an encode/decode fn pair; checks encode ⊆ decode.
+    fn extract_codec_pair(
+        &mut self,
+        text: &str,
+        path: &Path,
+        name: &str,
+        enc_marker: &str,
+        dec_marker: &str,
+        dec_extra: &[DecExtra],
+    ) -> Option<(Vec<String>, Vec<String>)> {
+        let enc = fn_region(text, enc_marker);
+        let dec = fn_region(text, dec_marker);
+        let (Some((enc_body, enc_line)), Some((dec_body, _))) = (enc, dec) else {
+            let msg = format!("cannot locate codec pair {enc_marker:?}/{dec_marker:?}");
+            self.flag(path, 1, "wire-schema", &msg);
+            return None;
+        };
+        let mut enc_fields = pair_fields(&enc_body);
+        enc_fields.extend(quoted_calls(&enc_body, "insert(", false));
+        let mut dec_fields = quoted_calls(&dec_body, "get(", true);
+        for extra in dec_extra {
+            match extra {
+                DecExtra::Call(fn_name) => {
+                    dec_fields.extend(quoted_calls(&dec_body, &format!("{fn_name}("), true));
+                }
+                DecExtra::FieldJ => dec_fields.extend(field_j_calls(&dec_body)),
+            }
+        }
+        let mut extra: BTreeSet<String> =
+            enc_fields.difference(&dec_fields).cloned().collect();
+        extra.remove("cmd");
+        extra.remove("seq");
+        if !extra.is_empty() {
+            let msg = format!(
+                "object `{name}` encodes field(s) {} the decoder never \
+                 reads — a round-trip would drop them",
+                pylist(&extra)
+            );
+            self.flag(path, enc_line, "wire-schema", &msg);
+        }
+        Some((
+            enc_fields.into_iter().collect(),
+            dec_fields.into_iter().collect(),
+        ))
+    }
+
+    /// kind -> (encode fields, decode fields) for EventMsg.
+    fn extract_event_schema(
+        &mut self,
+        proto: &str,
+        proto_path: &Path,
+    ) -> BTreeMap<String, (Vec<String>, Vec<String>)> {
+        let pairs_marker = "pub fn to_line(&self) -> String {\n        let mut pairs";
+        let enc = fn_region(proto, pairs_marker).or_else(|| {
+            // Fall back: the EventMsg impl is the last to_line in the file.
+            let idx = proto.rfind("pub fn to_line")?;
+            fn_region(&proto[idx..], "pub fn to_line")
+        });
+        let dec = proto.find("impl EventMsg").and_then(|imp| {
+            fn_region(&proto[imp..], "fn from_json")
+        });
+        let (Some((enc_body, enc_line)), Some((dec_body, _))) = (enc, dec) else {
+            self.flag(proto_path, 1, "wire-schema", "cannot locate EventMsg codec");
+            return BTreeMap::new();
+        };
+        let marks = tag_marks(&enc_body, "event");
+        let mut enc_by_kind: Vec<(String, BTreeSet<String>)> = Vec::new();
+        for (k, (pos, kind)) in marks.iter().enumerate() {
+            let stop = marks.get(k + 1).map(|(p, _)| *p).unwrap_or(enc_body.len());
+            let mut fields = pair_fields(&enc_body[*pos..stop]);
+            fields.remove("event");
+            enc_by_kind.push((kind.clone(), fields));
+        }
+        let dec_arms = split_str_arms(&dec_body);
+        let mut out = BTreeMap::new();
+        for (kind, enc_fields) in enc_by_kind {
+            let Some(arm) = dec_arms.get(&kind) else {
+                let msg = format!(
+                    "event kind `{kind}` is emitted but EventMsg::from_json \
+                     never decodes it"
+                );
+                self.flag(proto_path, enc_line, "wire-schema", &msg);
+                continue;
+            };
+            let mut dec_fields = decode_fields(arm);
+            dec_fields.insert("seq".to_string());
+            let extra: BTreeSet<String> =
+                enc_fields.difference(&dec_fields).cloned().collect();
+            if !extra.is_empty() {
+                let msg = format!(
+                    "event `{kind}` encodes field(s) {} its decode arm never reads",
+                    pylist(&extra)
+                );
+                self.flag(proto_path, enc_line, "wire-schema", &msg);
+            }
+            out.insert(
+                kind,
+                (enc_fields.into_iter().collect(), dec_fields.into_iter().collect()),
+            );
+        }
+        out
+    }
+
+    /// (rel file, field) -> (guarded lines, unguarded lines), 1-based,
+    /// over every insert("f")/push(("f") emission site in the
+    /// wire/journal encoders.
+    fn extract_conditional_fields(
+        &mut self,
+    ) -> BTreeMap<(String, String), (Vec<usize>, Vec<usize>)> {
+        let mut sites: BTreeMap<(String, String), (Vec<usize>, Vec<usize>)> = BTreeMap::new();
+        for rel in CONDITIONAL_SCAN_FILES {
+            let path = self.src.join(rel);
+            let Some(text) = self.read(&path, "wire-schema") else { continue };
+            let lines: Vec<&str> = text.lines().collect();
+            for (i, raw) in lines.iter().enumerate() {
+                if raw.contains("#[cfg(test)]") {
+                    break; // test modules are file-final by crate convention
+                }
+                let code = strip_comment(raw);
+                let mut fields = emit_site_fields(code);
+                // rustfmt splits wide pushes over two lines:
+                //   pairs.push((
+                //       "field", …
+                let t = code.trim_end();
+                if (t.ends_with(".push((") || t.ends_with(".insert(")) && i + 1 < lines.len() {
+                    if let Some(r) =
+                        strip_comment(lines[i + 1]).trim_start().strip_prefix('"')
+                    {
+                        let name = ident(r);
+                        if !name.is_empty() && r[name.len()..].starts_with('"') {
+                            fields.push(name.to_string());
+                        }
+                    }
+                }
+                for field in fields {
+                    let entry = sites
+                        .entry((rel.to_string(), field))
+                        .or_default();
+                    if is_guarded(&lines, i) {
+                        entry.0.push(i + 1);
+                    } else {
+                        entry.1.push(i + 1);
+                    }
+                }
+            }
+        }
+        sites
+    }
+}
+
+impl Analyze {
+    fn analysis_wire_schema(&mut self, write_artifacts: bool) {
+        let proto_path = self.src.join(PROTO_FILE);
+        let request_path = self.src.join(REQUEST_FILE);
+        let design_path = self.design.clone();
+        let Some(proto) = self.read(&proto_path, "wire-schema") else { return };
+        let Some(request) = self.read(&request_path, "wire-schema") else { return };
+        let Some(design) = self.read(&design_path, "wire-schema") else { return };
+
+        let verbs = self.extract_request_schema(&proto, &proto_path);
+
+        // DESIGN.md's Requests table must list exactly the decodable verbs.
+        match design_section(&design, REQUESTS_ANCHOR) {
+            None => {
+                let msg = format!("section {REQUESTS_ANCHOR:?} not found");
+                self.flag(&design_path, 1, "wire-schema", &msg);
+            }
+            Some((section, sec_line)) => {
+                let documented = documented_verbs(&section);
+                for v in verbs.keys() {
+                    if !documented.contains(v) {
+                        let msg = format!(
+                            "verb `{v}` is decodable but missing from the \
+                             {REQUESTS_ANCHOR:?} table"
+                        );
+                        self.flag(&design_path, sec_line, "wire-schema", &msg);
+                    }
+                }
+                for v in &documented {
+                    if !verbs.contains_key(v) {
+                        let msg = format!(
+                            "{REQUESTS_ANCHOR:?} documents verb `{v}` that \
+                             Request::from_json does not decode"
+                        );
+                        self.flag(&design_path, sec_line, "wire-schema", &msg);
+                    }
+                }
+            }
+        }
+
+        let mut objects: BTreeMap<&str, (Vec<String>, Vec<String>)> = BTreeMap::new();
+        if let Some(spec) =
+            self.extract_codec_pair(&proto, &proto_path, "job", "fn job_to_json", "fn job_from_json", &[])
+        {
+            objects.insert("job", spec);
+        }
+        if let Some(spec) = self.extract_codec_pair(
+            &proto,
+            &proto_path,
+            "node_stats",
+            "fn node_stats_to_json",
+            "fn node_stats_from_json",
+            &[],
+        ) {
+            objects.insert("node_stats", spec);
+        }
+        if let Some(spec) = self.extract_codec_pair(
+            &proto,
+            &proto_path,
+            "stats",
+            "fn stats_to_json",
+            "fn stats_from_json",
+            &[DecExtra::Call("g"), DecExtra::Call("gs")],
+        ) {
+            objects.insert("stats", spec);
+        }
+        if let Some(spec) = self.extract_codec_pair(
+            &request,
+            &request_path,
+            "job_request",
+            "pub fn to_json",
+            "pub fn from_json",
+            &[DecExtra::FieldJ, DecExtra::Call("id_of")],
+        ) {
+            objects.insert("job_request", spec);
+        }
+        let events = self.extract_event_schema(&proto, &proto_path);
+
+        // Conditional (emit-only-when-present) fields vs the declared table.
+        let sites = self.extract_conditional_fields();
+        let mut declared = Vec::new();
+        let mut csec_line = 0;
+        match design_section(&design, COND_TABLE_ANCHOR) {
+            None => {
+                let msg = format!("section {COND_TABLE_ANCHOR:?} not found");
+                self.flag(&design_path, 1, "wire-schema", &msg);
+            }
+            Some((section, line)) => {
+                csec_line = line;
+                declared = parse_pair_table(&section);
+            }
+        }
+        let declared_set: BTreeSet<(&str, &str)> =
+            declared.iter().map(|(f, t)| (f.as_str(), t.as_str())).collect();
+        let mut conditional: Vec<(String, String, Vec<usize>)> = Vec::new();
+        for ((rel, field), (guarded, unguarded)) in &sites {
+            let path = self.src.join(rel);
+            if !guarded.is_empty() && !unguarded.is_empty() {
+                let msg = format!(
+                    "field `{field}` is emitted both guarded (line(s) \
+                     {guarded:?}) and unguarded — emit-only-when-present \
+                     discipline must be all-or-nothing per file"
+                );
+                self.flag(&path, unguarded[0], "wire-schema", &msg);
+            } else if !guarded.is_empty() {
+                conditional.push((rel.clone(), field.clone(), guarded.clone()));
+                if !declared_set.contains(&(rel.as_str(), field.as_str())) {
+                    let msg = format!(
+                        "conditionally emitted field `{field}` is not \
+                         declared in DESIGN.md's {COND_TABLE_ANCHOR:?} table"
+                    );
+                    self.flag(&path, guarded[0], "wire-schema", &msg);
+                }
+            }
+        }
+        for (rel, field) in &declared {
+            match sites.get(&(rel.clone(), field.clone())) {
+                None => {
+                    let msg = format!(
+                        "declared conditional field `{field}` has no \
+                         insert/push emission site in {rel} (stale row?)"
+                    );
+                    self.flag(&design_path, csec_line, "wire-schema", &msg);
+                }
+                Some((guarded, unguarded)) => {
+                    if !unguarded.is_empty() && guarded.is_empty() {
+                        let path = self.src.join(rel);
+                        let msg = format!(
+                            "declared conditional field `{field}` is emitted \
+                             unconditionally — this field is emit-only-when-\
+                             present for wire/journal back-compat"
+                        );
+                        self.flag(&path, unguarded[0], "wire-schema", &msg);
+                    }
+                }
+            }
+        }
+
+        // Golden corpus: every verb in v1 (bare) and v2 (seq) form, every
+        // field decodable per the extracted schema.
+        let corpus_path = self.corpus.clone();
+        let mut seen: BTreeMap<String, BTreeSet<&'static str>> = BTreeMap::new();
+        match fs::read_to_string(&corpus_path) {
+            Err(_) => self.flag(&corpus_path, 1, "wire-schema", "golden wire corpus missing"),
+            Ok(corpus) => {
+                for (k, raw) in corpus.lines().enumerate() {
+                    let lineno = k + 1;
+                    let line = raw.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let Some(JVal::Obj(obj)) = parse_json(line) else {
+                        self.flag(&corpus_path, lineno, "wire-schema", "line is not valid JSON");
+                        continue;
+                    };
+                    let verb = match obj.iter().find(|(k, _)| k == "cmd") {
+                        Some((_, JVal::Str(s))) => s.clone(),
+                        _ => String::new(),
+                    };
+                    let Some((decode, _)) = verbs.get(&verb) else {
+                        let shown =
+                            if verb.is_empty() { "None".to_string() } else { format!("'{verb}'") };
+                        let msg = format!("unknown verb {shown}");
+                        self.flag(&corpus_path, lineno, "wire-schema", &msg);
+                        continue;
+                    };
+                    let form = if obj.iter().any(|(k, _)| k == "seq") { "v2" } else { "v1" };
+                    seen.entry(verb.clone()).or_default().insert(form);
+                    let extra: BTreeSet<String> = obj
+                        .iter()
+                        .map(|(k, _)| k.clone())
+                        .filter(|k| k != "cmd" && k != "seq" && !decode.contains(k))
+                        .collect();
+                    if !extra.is_empty() {
+                        let msg = format!(
+                            "verb `{verb}` carries field(s) {} its decode arm \
+                             never reads",
+                            pylist(&extra)
+                        );
+                        self.flag(&corpus_path, lineno, "wire-schema", &msg);
+                    }
+                    let jr = objects.get("job_request").map(|(_, dec)| dec);
+                    let mut jobs: Vec<&Vec<(String, JVal)>> = Vec::new();
+                    if verb == "submit" {
+                        if let Some((_, JVal::Obj(j))) = obj.iter().find(|(k, _)| k == "job") {
+                            jobs.push(j);
+                        }
+                    } else if verb == "submit_batch" {
+                        if let Some((_, JVal::Arr(items))) =
+                            obj.iter().find(|(k, _)| k == "jobs")
+                        {
+                            for item in items {
+                                if let JVal::Obj(j) = item {
+                                    jobs.push(j);
+                                }
+                            }
+                        }
+                    }
+                    if let Some(jr) = jr {
+                        for j in jobs {
+                            let extra: BTreeSet<String> = j
+                                .iter()
+                                .map(|(k, _)| k.clone())
+                                .filter(|k| !jr.contains(k))
+                                .collect();
+                            if !extra.is_empty() {
+                                let msg = format!(
+                                    "job object carries field(s) {} \
+                                     JobRequest::from_json never reads",
+                                    pylist(&extra)
+                                );
+                                self.flag(&corpus_path, lineno, "wire-schema", &msg);
+                            }
+                        }
+                    }
+                }
+                for verb in verbs.keys() {
+                    for form in ["v1", "v2"] {
+                        if !seen.get(verb).is_some_and(|forms| forms.contains(form)) {
+                            let with = if form == "v2" { "with" } else { "no" };
+                            let msg =
+                                format!("verb `{verb}` has no {form} ({with} seq) corpus line");
+                            self.flag(&corpus_path, 1, "wire-schema", &msg);
+                        }
+                    }
+                }
+            }
+        }
+
+        if write_artifacts && self.violations.is_empty() {
+            let envelope = fn_region(&proto, "pub fn from_json(j: &Json) -> Result<Response>")
+                .map(|(b, _)| b)
+                .unwrap_or_default();
+            let discriminators: Vec<String> =
+                quoted_calls(&envelope, "get(", true).into_iter().collect();
+            let field_sets = |enc: &[String], dec: &[String]| {
+                JOut::Map(vec![
+                    ("decode".into(), JOut::list_of(dec)),
+                    ("encode".into(), JOut::list_of(enc)),
+                ])
+            };
+            let schema = JOut::Map(vec![
+                (
+                    "generated_by".into(),
+                    JOut::Str(
+                        "cargo xtask analyze / scripts/analyze_invariants.py (lockstep)".into(),
+                    ),
+                ),
+                (
+                    "verbs".into(),
+                    JOut::Map(
+                        verbs
+                            .iter()
+                            .map(|(v, (dec, enc))| {
+                                let dec: Vec<String> = dec.iter().cloned().collect();
+                                let enc: Vec<String> = enc.iter().cloned().collect();
+                                (
+                                    v.clone(),
+                                    JOut::Map(vec![("request".into(), field_sets(&enc, &dec))]),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "objects".into(),
+                    JOut::Map(
+                        objects
+                            .iter()
+                            .map(|(n, (enc, dec))| (n.to_string(), field_sets(enc, dec)))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "events".into(),
+                    JOut::Map(
+                        events
+                            .iter()
+                            .map(|(k, (enc, dec))| (k.clone(), field_sets(enc, dec)))
+                            .collect(),
+                    ),
+                ),
+                ("response_discriminators".into(), JOut::list_of(&discriminators)),
+                (
+                    "conditional_fields".into(),
+                    JOut::List(
+                        conditional
+                            .iter()
+                            .map(|(file, field, lines)| {
+                                JOut::Map(vec![
+                                    ("file".into(), JOut::Str(file.clone())),
+                                    ("field".into(), JOut::Str(field.clone())),
+                                    (
+                                        "lines".into(),
+                                        JOut::List(
+                                            lines.iter().map(|n| JOut::Int(*n)).collect(),
+                                        ),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]);
+            let mut out = String::new();
+            schema.render(0, &mut out);
+            out.push('\n');
+            let _ = fs::create_dir_all(&self.artifacts);
+            let _ = fs::write(self.artifacts.join("wire_schema.json"), out);
+        }
+    }
+}
+
+/// `"cmd": "verb"` captures in the Requests table (tolerating spaces
+/// around the colon, as the Python mirror's regex does).
+fn documented_verbs(section: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut from = 0;
+    while let Some(i) = section[from..].find("\"cmd\"") {
+        let start = from + i + 5;
+        from = start;
+        let rest = section[start..].trim_start();
+        let Some(r) = rest.strip_prefix(':') else { continue };
+        let Some(r) = r.trim_start().strip_prefix('"') else { continue };
+        let name = ident(r);
+        if !name.is_empty() && r[name.len()..].starts_with('"') {
+            out.insert(name.to_string());
+        }
+    }
+    out
+}
+
+// -- minimal JSON: corpus reader + artifact writer ---------------------------
+
+/// Parsed JSON value — just enough for the corpus cross-check. Objects
+/// keep insertion order (key lookup is a linear scan; corpus objects are
+/// tiny).
+enum JVal {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JVal>),
+    Obj(Vec<(String, JVal)>),
+}
+
+fn parse_json(text: &str) -> Option<JVal> {
+    let bytes = text.as_bytes();
+    let mut pos = 0;
+    let val = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos == bytes.len() {
+        Some(val)
+    } else {
+        None
+    }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Option<JVal> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos)? {
+        b'{' => {
+            *pos += 1;
+            let mut obj = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Some(JVal::Obj(obj));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = match parse_value(bytes, pos)? {
+                    JVal::Str(s) => s,
+                    _ => return None,
+                };
+                skip_ws(bytes, pos);
+                if bytes.get(*pos) != Some(&b':') {
+                    return None;
+                }
+                *pos += 1;
+                obj.push((key, parse_value(bytes, pos)?));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos)? {
+                    b',' => *pos += 1,
+                    b'}' => {
+                        *pos += 1;
+                        return Some(JVal::Obj(obj));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut arr = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Some(JVal::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos)? {
+                    b',' => *pos += 1,
+                    b']' => {
+                        *pos += 1;
+                        return Some(JVal::Arr(arr));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'"' => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match bytes.get(*pos)? {
+                    b'"' => {
+                        *pos += 1;
+                        return Some(JVal::Str(s));
+                    }
+                    b'\\' => {
+                        *pos += 1;
+                        match bytes.get(*pos)? {
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'r' => s.push('\r'),
+                            b'b' => s.push('\u{8}'),
+                            b'f' => s.push('\u{c}'),
+                            b'u' => {
+                                let hex = bytes.get(*pos + 1..*pos + 5)?;
+                                let code =
+                                    u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16)
+                                        .ok()?;
+                                s.push(char::from_u32(code)?);
+                                *pos += 4;
+                            }
+                            c => s.push(*c as char),
+                        }
+                        *pos += 1;
+                    }
+                    c => {
+                        s.push(*c as char);
+                        *pos += 1;
+                    }
+                }
+            }
+        }
+        b't' => {
+            lit(bytes, pos, b"true")?;
+            Some(JVal::Bool(true))
+        }
+        b'f' => {
+            lit(bytes, pos, b"false")?;
+            Some(JVal::Bool(false))
+        }
+        b'n' => {
+            lit(bytes, pos, b"null")?;
+            Some(JVal::Null)
+        }
+        _ => {
+            let start = *pos;
+            while *pos < bytes.len()
+                && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&bytes[start..*pos]).ok()?;
+            s.parse::<f64>().ok().map(JVal::Num)
+        }
+    }
+}
+
+fn lit(bytes: &[u8], pos: &mut usize, word: &[u8]) -> Option<()> {
+    if bytes.get(*pos..*pos + word.len()) == Some(word) {
+        *pos += word.len();
+        Some(())
+    } else {
+        None
+    }
+}
+
+/// Output JSON value for the schema artifact. `render` replicates
+/// Python's `json.dump(obj, fh, indent=1, sort_keys=True)` byte for byte
+/// (maps sort their keys; 1-space indent; `", "`/`": "` separators).
+enum JOut {
+    Str(String),
+    Int(usize),
+    List(Vec<JOut>),
+    Map(Vec<(String, JOut)>),
+}
+
+impl JOut {
+    fn list_of(items: &[String]) -> JOut {
+        JOut::List(items.iter().map(|s| JOut::Str(s.clone())).collect())
+    }
+
+    fn render(&self, level: usize, out: &mut String) {
+        let pad = |out: &mut String, n: usize| {
+            for _ in 0..n {
+                out.push(' ');
+            }
+        };
+        match self {
+            JOut::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 || (c as u32) > 0x7e => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            JOut::Int(n) => out.push_str(&n.to_string()),
+            JOut::List(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (k, item) in items.iter().enumerate() {
+                    pad(out, level + 1);
+                    item.render(level + 1, out);
+                    if k + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, level);
+                out.push(']');
+            }
+            JOut::Map(entries) => {
+                if entries.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                let mut sorted: Vec<&(String, JOut)> = entries.iter().collect();
+                sorted.sort_by(|a, b| a.0.cmp(&b.0));
+                out.push_str("{\n");
+                for (k, (key, val)) in sorted.iter().enumerate() {
+                    pad(out, level + 1);
+                    JOut::Str(key.clone()).render(level + 1, out);
+                    out.push_str(": ");
+                    val.render(level + 1, out);
+                    if k + 1 < sorted.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, level);
+                out.push('}');
+            }
+        }
+    }
+}
+
+// -- A3: panic-path ratchet --------------------------------------------------
+
+/// Panic-shaped sites on one comment-stripped line: `.unwrap()`,
+/// `.expect(` (excluding the JSON parser's own `expect(b'X')`
+/// byte-matcher), and the diverging macros.
+fn count_panics(code: &str) -> usize {
+    let mut n = code.matches(".unwrap()").count();
+    let mut from = 0;
+    while let Some(i) = code[from..].find(".expect(") {
+        let after = from + i + 8;
+        if !code[after..].starts_with("b'") {
+            n += 1;
+        }
+        from = after;
+    }
+    for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        let mut from = 0;
+        while let Some(i) = code[from..].find(mac) {
+            let start = from + i;
+            from = start + mac.len();
+            if left_boundary(code, start) && code[from..].trim_start().starts_with('(') {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Slice/array-indexing proxy: `[` directly after an identifier char,
+/// `)`, or `]` (not `#[attr]`, not an array type/literal).
+fn count_index(code: &str) -> usize {
+    let bytes = code.as_bytes();
+    let mut n = 0;
+    for w in bytes.windows(2) {
+        let head = w[0].is_ascii_alphanumeric() || matches!(w[0], b'_' | b')' | b']');
+        if head && w[1] == b'[' {
+            n += 1;
+        }
+    }
+    n
+}
+
+fn count_sites(text: &str) -> (usize, usize) {
+    let mut n_panic = 0;
+    let mut n_index = 0;
+    for line in text.lines() {
+        if line.contains("#[cfg(test)]") {
+            break; // test modules are file-final by crate convention
+        }
+        let code = strip_comment(line);
+        n_panic += count_panics(code);
+        n_index += count_index(code);
+    }
+    (n_panic, n_index)
+}
+
+impl Analyze {
+    /// {"panics": {file: n}, "index": {file: n}} from the flat two-table
+    /// TOML (no dependency on a TOML parser).
+    fn parse_budget(&mut self, path: &Path) -> BTreeMap<String, BTreeMap<String, usize>> {
+        let mut tables: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+        tables.insert("panics".into(), BTreeMap::new());
+        tables.insert("index".into(), BTreeMap::new());
+        let Some(text) = self.read(&path.to_path_buf(), "panic-budget") else {
+            return tables;
+        };
+        let mut current: Option<String> = None;
+        for (k, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line
+                .strip_prefix('[')
+                .and_then(|r| r.strip_suffix(']'))
+                .filter(|n| !n.is_empty() && n.chars().all(|c| c.is_alphanumeric() || c == '_'))
+            {
+                if !tables.contains_key(name) {
+                    let msg = format!("unknown budget table [{name}]");
+                    self.flag(path, k + 1, "panic-budget", &msg);
+                    tables.insert(name.to_string(), BTreeMap::new());
+                }
+                current = Some(name.to_string());
+                continue;
+            }
+            let entry = line.strip_prefix('"').and_then(|r| {
+                let close = r.find('"')?;
+                let file = &r[..close];
+                if file.is_empty() {
+                    return None;
+                }
+                let rest = r[close + 1..].trim_start().strip_prefix('=')?.trim();
+                if rest.is_empty() || !rest.chars().all(|c| c.is_ascii_digit()) {
+                    return None;
+                }
+                Some((file.to_string(), rest.parse::<usize>().ok()?))
+            });
+            match (&current, entry) {
+                (Some(table), Some((file, n))) => {
+                    tables.get_mut(table).expect("table exists").insert(file, n);
+                }
+                _ => {
+                    let msg = format!("unparseable budget line {:?}", raw.trim());
+                    self.flag(path, k + 1, "panic-budget", &msg);
+                }
+            }
+        }
+        tables
+    }
+
+    fn analysis_panic_budget(&mut self) {
+        let budget_path = self.budget.clone();
+        if !budget_path.exists() {
+            self.flag(&budget_path, 1, "panic-budget", "budget file missing");
+            return;
+        }
+        let budget = self.parse_budget(&budget_path);
+        let mut actual: BTreeMap<&str, BTreeMap<String, usize>> = BTreeMap::new();
+        actual.insert("panics", BTreeMap::new());
+        actual.insert("index", BTreeMap::new());
+        let mut stack = vec![self.src.clone()];
+        let mut files = Vec::new();
+        while let Some(dir) = stack.pop() {
+            let Ok(entries) = fs::read_dir(&dir) else { continue };
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if p.is_dir() {
+                    stack.push(p);
+                } else if p.extension().is_some_and(|e| e == "rs") {
+                    files.push(p);
+                }
+            }
+        }
+        files.sort();
+        for path in files {
+            let rel = path
+                .strip_prefix(&self.src)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let Ok(text) = fs::read_to_string(&path) else { continue };
+            let (n_panic, n_index) = count_sites(&text);
+            if n_panic > 0 {
+                actual.get_mut("panics").expect("table").insert(rel.clone(), n_panic);
+            }
+            if n_index > 0 {
+                actual.get_mut("index").expect("table").insert(rel, n_index);
+            }
+        }
+        for table in ["panics", "index"] {
+            for (rel, n) in &actual[table] {
+                let path = self.src.join(rel);
+                let b = budget[table].get(rel).copied();
+                if table == "panics" && ZERO_PANIC_FILES.contains(&rel.as_str()) {
+                    let msg = format!(
+                        "decode-path file has {n} panic site(s); malformed \
+                         client input must surface as structured errors \
+                         (budget is pinned to zero)"
+                    );
+                    self.flag(&path, 1, "panic-budget", &msg);
+                    continue;
+                }
+                match b {
+                    None => {
+                        let msg = format!(
+                            "{n} {table} site(s) but no [{table}] budget entry \
+                             in scripts/panic_budget.toml"
+                        );
+                        self.flag(&path, 1, "panic-budget", &msg);
+                    }
+                    Some(b) if *n > b => {
+                        let msg = format!(
+                            "{n} {table} site(s) exceed the budget of {b} — \
+                             convert the new sites to structured errors"
+                        );
+                        self.flag(&path, 1, "panic-budget", &msg);
+                    }
+                    Some(b) if *n < b => {
+                        let msg = format!(
+                            "only {n} {table} site(s) against a budget of {b} \
+                             — ratchet the budget down to {n} (budgets only \
+                             ever decrease)"
+                        );
+                        self.flag(&path, 1, "panic-budget", &msg);
+                    }
+                    Some(_) => {}
+                }
+            }
+            for rel in budget[table].keys() {
+                if !actual[table].contains_key(rel) {
+                    let msg = format!(
+                        "stale [{table}] entry for {rel} (no such site or \
+                         file) — delete it"
+                    );
+                    self.flag(&budget_path, 1, "panic-budget", &msg);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Negative fixtures kept in lockstep with the Python mirror's
+    // --selftest (scripts/analyze_invariants.py).
+
+    const FIXTURE_SCHED: &str = r#"pub enum JobState {
+    Queued,
+    Running,
+    Done,
+}
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done)
+    }
+}
+fn submit(st: &mut St) {
+    st.jobs.insert(id, JobRecord {
+        state: JobState::Queued,
+    });
+}
+fn dispatch(rec: &mut JobRecord) {
+    if rec.state != JobState::Done {
+        rec.state = JobState::Running;
+    }
+}
+"#;
+
+    const FIXTURE_TJ: &str = r#"fn append_init(&self) {
+    // lifecycle: (start) -> init
+    let pairs = vec![("kind", Json::str("init"))];
+}
+fn append_round(&self) {
+    // lifecycle: init|round -> round
+    let pairs = vec![("kind", Json::str("round"))];
+}
+fn replay(path: &Path) {
+    match kind {
+        Some("init") => {}
+        Some("round") => {
+            if round != st.rounds.len() + 1 {
+                return Err(out_of_order());
+            }
+        }
+        _ => {}
+    }
+}
+"#;
+
+    const FIXTURE_DESIGN: &str = r#"### Requests
+
+| Request | Response |
+|---|---|
+| `{"cmd":"ping"}` | `{"ok":true}` |
+| `{"cmd":"status","id":7}` | `{"ok":true}` |
+
+#### Job lifecycle transitions
+
+| From | To | Trigger |
+|---|---|---|
+| `(new)` | `queued` | admission |
+| `queued` | `running` | dispatch |
+
+#### Template round-state transitions
+
+| From | To | Line |
+|---|---|---|
+| `(start)` | `init` | run header |
+| `init` | `round` | first round |
+| `round` | `round` | each next round |
+
+#### Conditional wire fields
+
+| File | Field | Emitted when |
+|---|---|---|
+| `serve/proto.rs` | `velocity` | retained |
+| `request.rs` | `dedup` | token supplied |
+"#;
+
+    const FIXTURE_PROTO: &str = r#"impl Request {
+    fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::object([("cmd", Json::str("ping"))]),
+            Request::Status(Some(id)) => {
+                Json::object([("cmd", Json::str("status")), ("id", Json::num(*id as f64))])
+            }
+        }
+    }
+    pub fn to_line(&self) -> String { self.to_json().render() }
+    pub fn from_json(j: &Json) -> Result<Request> {
+        match cmd {
+            "ping" => Ok(Request::Ping),
+            "status" => match j.get("id") {
+                None => Ok(Request::Status(None)),
+                Some(_) => Ok(Request::Status(Some(id_of(j)?))),
+            },
+            other => Err(bad(format!("unknown command '{other}'"))),
+        }
+    }
+}
+fn job_to_json(v: &JobView) -> Json {
+    let mut j = Json::object([("id", Json::num(v.id as f64))]);
+    if let Json::Obj(m) = &mut j {
+        m.insert("velocity".into(), Json::str(vel));
+    }
+    m.insert("ghost".into(), Json::str(g));
+    j
+}
+fn job_from_json(j: &Json) -> Result<JobView> {
+    let id = j.get("id");
+    let v = j.get("velocity");
+    let g = j.get("ghost");
+}
+fn node_stats_to_json(n: &NodeStats) -> Json {
+    Json::object([("node", Json::str(&n.node))])
+}
+fn node_stats_from_json(j: &Json) -> Result<NodeStats> {
+    let node = j.get("node");
+}
+fn stats_to_json(s: &ServeStats) -> Json {
+    Json::object([("queued", Json::num(s.queued as f64))])
+}
+fn stats_from_json(j: &Json) -> Result<ServeStats> {
+    let queued = g("queued");
+}
+impl EventMsg {
+    pub fn to_line(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        pairs.push(("event", Json::str("job")));
+        Json::object(pairs).render()
+    }
+    pub fn from_json(j: &Json) -> Result<EventMsg> {
+        match kind {
+            "job" => Ok(EventMsg::Job {}),
+            other => Err(unknown()),
+        }
+    }
+}
+"#;
+
+    const FIXTURE_REQUEST: &str = r#"impl JobRequest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("subject", Json::str(&self.subject))];
+        if let Some(t) = &self.dedup {
+            pairs.push(("dedup", Json::str(t)));
+        }
+        Json::object(pairs)
+    }
+    pub fn from_json(j: &Json) -> Result<JobRequest> {
+        let subject = field(j, "subject", Json::as_str, "a string")?;
+        let dedup = field(j, "dedup", Json::as_str, "a string")?;
+    }
+}
+"#;
+
+    const FIXTURE_CORPUS: &str = "{\"cmd\":\"ping\"}\n\
+                                  {\"cmd\":\"ping\",\"seq\":1}\n\
+                                  {\"cmd\":\"status\",\"id\":7}\n\
+                                  {\"cmd\":\"status\",\"id\":7,\"seq\":2}\n";
+
+    /// Build an Analyze over a throwaway fixture tree.
+    fn fixture(name: &str) -> Analyze {
+        let root = std::env::temp_dir()
+            .join(format!("claire-xtask-analyze-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        let src = root.join("src");
+        let files: &[(&str, &str)] = &[
+            ("src/serve/scheduler.rs", FIXTURE_SCHED),
+            ("src/template/journal.rs", FIXTURE_TJ),
+            ("src/serve/proto.rs", FIXTURE_PROTO),
+            ("src/request.rs", FIXTURE_REQUEST),
+            ("src/serve/journal.rs", "fn f() {}\n"),
+            ("DESIGN.md", FIXTURE_DESIGN),
+            ("corpus.ndjson", FIXTURE_CORPUS),
+            (
+                "panic_budget.toml",
+                "[panics]\n\"over.rs\" = 1\n\"under.rs\" = 5\n\"gone.rs\" = 1\n[index]\n",
+            ),
+            ("src/over.rs", "fn f() { a.unwrap(); b.unwrap(); }\n"),
+            ("src/under.rs", "fn f() { a.unwrap(); }\n"),
+            ("src/unbudgeted.rs", "fn f() { panic!(\"boom\"); }\n"),
+            (
+                "src/tested.rs",
+                "fn f() {}\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\n",
+            ),
+        ];
+        for (rel, body) in files {
+            let p = root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(&p, body).unwrap();
+        }
+        Analyze {
+            design: root.join("DESIGN.md"),
+            budget: root.join("panic_budget.toml"),
+            corpus: root.join("corpus.ndjson"),
+            artifacts: root.join("artifacts"),
+            repo: root,
+            src,
+            violations: Vec::new(),
+        }
+    }
+
+    // A1: the fixture implements `done -> running` (an injected illegal
+    // transition: its guard admits any non-done state) which the
+    // declared table does not list; the declared `queued -> running`
+    // row is then unimplemented. Round-state tables agree.
+    #[test]
+    fn lifecycle_flags_illegal_and_unimplemented_transitions() {
+        let mut an = fixture("a1");
+        an.analysis_lifecycle(false);
+        let v = &an.violations;
+        assert!(
+            v.iter().any(|m| m.contains("undeclared job transition `done` -> `running`")),
+            "{v:?}"
+        );
+        assert!(
+            v.iter().any(|m| m.contains("declares job transition `queued` -> `running`")),
+            "{v:?}"
+        );
+        assert!(!v.iter().any(|m| m.contains("round-state")), "{v:?}");
+    }
+
+    // A2 baseline: the fixture's schema, tables, and corpus agree.
+    #[test]
+    fn wire_schema_clean_on_conforming_fixture() {
+        let mut an = fixture("a2ok");
+        an.analysis_wire_schema(false);
+        assert!(an.violations.is_empty(), "{:?}", an.violations);
+    }
+
+    // A2 negatives: a declared conditional field emitted unconditionally
+    // (schema/DESIGN.md mismatch) and a new guarded field nobody declared.
+    #[test]
+    fn wire_schema_flags_conditional_field_drift() {
+        let mut an = fixture("a2bad");
+        let proto_path = an.src.join("serve/proto.rs");
+        let bad = FIXTURE_PROTO
+            .replace(
+                "    if let Json::Obj(m) = &mut j {\n\
+                 \x20       m.insert(\"velocity\".into(), Json::str(vel));\n\
+                 \x20   }\n",
+                "    m.insert(\"velocity\".into(), Json::str(vel));\n\
+                 \x20   if let Some(x) = &v.extra {\n\
+                 \x20       m.insert(\"extra\".into(), Json::str(x));\n\
+                 \x20   }\n",
+            )
+            .replace(
+                "    let g = j.get(\"ghost\");\n",
+                "    let g = j.get(\"ghost\");\n    let x = j.get(\"extra\");\n",
+            );
+        assert!(bad != FIXTURE_PROTO, "fixture patch must apply");
+        fs::write(&proto_path, bad).unwrap();
+        an.analysis_wire_schema(false);
+        let v = &an.violations;
+        assert!(
+            v.iter().any(|m| m.contains("`velocity` is emitted unconditionally")),
+            "{v:?}"
+        );
+        assert!(v.iter().any(|m| m.contains("`extra` is not declared")), "{v:?}");
+    }
+
+    // A2 negative: a corpus line with a field the verb cannot decode.
+    #[test]
+    fn wire_schema_flags_undecodable_corpus_field() {
+        let mut an = fixture("a2corpus");
+        let mut corpus = FIXTURE_CORPUS.to_string();
+        corpus.push_str("{\"cmd\":\"ping\",\"bogus\":1}\n");
+        fs::write(&an.corpus, corpus).unwrap();
+        an.analysis_wire_schema(false);
+        let v = &an.violations;
+        assert!(v.iter().any(|m| m.contains("field(s) ['bogus']")), "{v:?}");
+    }
+
+    // A3: over budget, under budget (ratchet), unbudgeted, stale — and
+    // test-module sites are not counted.
+    #[test]
+    fn panic_budget_ratchets_in_both_directions() {
+        let mut an = fixture("a3");
+        an.analysis_panic_budget();
+        let v = &an.violations;
+        assert!(
+            v.iter().any(|m| m.contains("over.rs") && m.contains("exceed the budget")),
+            "{v:?}"
+        );
+        assert!(
+            v.iter().any(|m| m.contains("under.rs") && m.contains("ratchet the budget down")),
+            "{v:?}"
+        );
+        assert!(
+            v.iter()
+                .any(|m| m.contains("unbudgeted.rs") && m.contains("no [panics] budget entry")),
+            "{v:?}"
+        );
+        assert!(v.iter().any(|m| m.contains("stale [panics] entry for gone.rs")), "{v:?}");
+        assert!(!v.iter().any(|m| m.contains("tested.rs")), "{v:?}");
+    }
+}

@@ -1,10 +1,12 @@
-//! `cargo xtask lint` — the repo's invariant lint (canonical CI entry).
+//! `cargo xtask lint` / `cargo xtask analyze` — the repo's invariant
+//! gates (canonical CI entries).
 //!
 //! Table-driven source analysis of `rust/src` + `DESIGN.md`. The rule list
 //! is defined ONCE conceptually and implemented twice: here (when a Rust
-//! toolchain is present) and in `scripts/lint_invariants.py` (dependency-
-//! free mirror for toolchain-less containers). Rule IDs, semantics, and
-//! the needle tables below must stay in lockstep with the Python mirror.
+//! toolchain is present) and in `scripts/lint_invariants.py` /
+//! `scripts/analyze_invariants.py` (dependency-free mirrors for
+//! toolchain-less containers). Rule IDs, semantics, and the tables below
+//! must stay in lockstep with the Python mirrors.
 //!
 //!   R1 shim-imports   no direct `std::sync::{Mutex,Condvar,RwLock,atomic}`
 //!                     or `std::thread` outside `util/sync.rs` (`Arc` is
@@ -16,16 +18,23 @@
 //!   R4 error-codes    error.rs::ErrorCode in sync with DESIGN.md's
 //!                     "Structured errors" registry (backtick presence for
 //!                     every code; retryable + exit match for table rows).
-//!   R5 emit-guards    emit-only-when-present back-compat fields stay
-//!                     behind a conditional (`if` opener before `fn`).
-//!                     PR-9's wire fields (request `warm_start`, job-view
-//!                     `velocity`/`warped`, stats `pinned`, reduce
-//!                     `delta_rel`) joined the needle table.
+//!   R5 emit-guards    every emission site of a field declared in
+//!                     DESIGN.md's "#### Conditional wire fields" table
+//!                     stays behind a conditional (`if` opener before
+//!                     `fn`). Obligations are parsed from that table (no
+//!                     hand-maintained needle list); `analyze` checks the
+//!                     table itself for completeness against the source,
+//!                     closing the drift loop in both directions.
 //!   R6 template-sync  the template subsystem and the reduce verb's
 //!                     module must take sync primitives through the
 //!                     `util/sync.rs` shim: any file under `template/`
 //!                     (or serve/daemon.rs) that mentions Mutex/RwLock/
 //!                     Condvar/`thread::` must import `crate::util::sync`.
+//!
+//! The semantic analyses (A1 lifecycle, A2 wire-schema, A3 panic-budget)
+//! live in [`analyze`].
+
+mod analyze;
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -45,19 +54,9 @@ const STORE_JOURNAL_FILE: &str = "serve/store.rs";
 const STORE_JOURNAL_TOKENS: &[&str] = &["journal", ".append("];
 const DESIGN_SECTION: &str = "### Structured errors";
 
-const EMIT_GUARDS: &[(&str, &str)] = &[
-    ("serve/journal.rs", "push((\"dedup\""),
-    ("request.rs", "push((\"dedup\""),
-    ("serve/proto.rs", "insert(\"nodes\""),
-    ("serve/proto.rs", "insert(\"batches\""),
-    ("serve/proto.rs", "insert(\"coalesced\""),
-    // PR-9 wire fields: pre-template peers must keep decoding our lines.
-    ("request.rs", "push((\"warm_start\""),
-    ("serve/proto.rs", "insert(\"velocity\""),
-    ("serve/proto.rs", "insert(\"warped\""),
-    ("serve/proto.rs", "insert(\"pinned\""),
-    ("serve/proto.rs", "insert(\"delta_rel\""),
-];
+/// R5's (file, field) obligations are parsed from this DESIGN.md table —
+/// the same table `analyze` checks for completeness against the source.
+const EMIT_GUARDS_SECTION: &str = "#### Conditional wire fields";
 
 /// R6 scope: template subsystem files (prefix) + the reduce verb's home.
 const TEMPLATE_SYNC_SCOPE: &[&str] = &["template/", "serve/daemon.rs"];
@@ -73,35 +72,48 @@ struct Lint {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("lint");
-    if cmd != "lint" {
-        eprintln!("usage: cargo xtask lint");
-        std::process::exit(2);
-    }
     // xtask lives at <repo>/rust/xtask; walk up to the repo root.
     let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     let rust_dir = manifest.parent().expect("xtask has a parent").to_path_buf();
     let repo = rust_dir.parent().expect("rust/ has a parent").to_path_buf();
-    let mut lint = Lint {
-        src: rust_dir.join("src"),
-        repo,
-        violations: Vec::new(),
-    };
-    lint.rule_shim_imports();
-    lint.rule_lock_order();
-    lint.rule_store_journal();
-    lint.rule_error_codes();
-    lint.rule_emit_guards();
-    lint.rule_template_sync();
-    if lint.violations.is_empty() {
-        println!(
-            "xtask lint: OK (shim-imports, lock-order, store-journal, \
-             error-codes, emit-guards, template-sync)"
-        );
+    let src = rust_dir.join("src");
+    match cmd {
+        "lint" => {
+            let mut lint = Lint { src, repo, violations: Vec::new() };
+            lint.rule_shim_imports();
+            lint.rule_lock_order();
+            lint.rule_store_journal();
+            lint.rule_error_codes();
+            lint.rule_emit_guards();
+            lint.rule_template_sync();
+            finish("xtask lint", "shim-imports, lock-order, store-journal, \
+                    error-codes, emit-guards, template-sync", lint.violations);
+        }
+        "analyze" => {
+            let mut an = analyze::Analyze::new(repo, src);
+            an.run();
+            finish(
+                "xtask analyze",
+                "lifecycle, wire-schema, panic-budget; artifacts/lifecycle.dot \
+                 + artifacts/wire_schema.json written",
+                an.violations,
+            );
+        }
+        _ => {
+            eprintln!("usage: cargo xtask [lint|analyze]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn finish(what: &str, passes: &str, violations: Vec<String>) {
+    if violations.is_empty() {
+        println!("{what}: OK ({passes})");
     } else {
-        for v in &lint.violations {
+        for v in &violations {
             println!("{v}");
         }
-        println!("xtask lint: {} violation(s)", lint.violations.len());
+        println!("{what}: {} violation(s)", violations.len());
         std::process::exit(1);
     }
 }
@@ -366,47 +378,68 @@ impl Lint {
 
     // R5 -------------------------------------------------------------------
 
+    /// `(rel file, field)` rows from DESIGN.md's declared table.
+    fn emit_guard_obligations(&mut self) -> Vec<(String, String)> {
+        let design_path = self.repo.join("DESIGN.md");
+        let Ok(design) = fs::read_to_string(&design_path) else {
+            self.flag(&design_path, 1, "emit-guards", "cannot read DESIGN.md");
+            return Vec::new();
+        };
+        let Some(start) = design.find(EMIT_GUARDS_SECTION) else {
+            self.flag(
+                &design_path,
+                1,
+                "emit-guards",
+                &format!("section {EMIT_GUARDS_SECTION:?} not found"),
+            );
+            return Vec::new();
+        };
+        let tail = &design[start..];
+        let mut end = tail.len();
+        for stop in ["\n## ", "\n### ", "\n#### "] {
+            if let Some(i) = tail[1..].find(stop) {
+                end = end.min(i + 1);
+            }
+        }
+        let rows = parse_field_rows(&tail[..end]);
+        if rows.is_empty() {
+            self.flag(
+                &design_path,
+                design[..start].lines().count() + 1,
+                "emit-guards",
+                &format!("{EMIT_GUARDS_SECTION:?} holds no | `file` | `field` | rows"),
+            );
+        }
+        rows
+    }
+
     fn rule_emit_guards(&mut self) {
-        for &(rel, needle) in EMIT_GUARDS {
-            let path = self.src.join(rel);
+        for (rel, field) in self.emit_guard_obligations() {
+            let path = self.src.join(&rel);
             let Ok(text) = fs::read_to_string(&path) else {
-                self.flag(&path, 1, "emit-guards", "cannot read file");
+                let msg = format!(
+                    "DESIGN.md declares conditional field `{field}` in a \
+                     file that does not exist (stale row?)"
+                );
+                self.flag(&path, 1, "emit-guards", &msg);
                 continue;
             };
             let lines: Vec<&str> = text.lines().collect();
-            let mut found = false;
-            for i in 0..lines.len() {
-                if !strip_comment(lines[i]).contains(needle) {
-                    continue;
-                }
-                found = true;
-                let mut bal: i64 = 0;
-                let mut guarded = false;
-                for j in (0..i).rev() {
-                    let code = strip_comment(lines[j]);
-                    bal += brace_delta(code);
-                    if bal > 0 {
-                        // An enclosing opener.
-                        if has_word(code, "if") {
-                            guarded = true;
-                            break;
-                        }
-                        if has_word(code, "fn") {
-                            break;
-                        }
-                        bal = 0; // consumed this level; keep climbing
-                    }
-                }
-                if !guarded {
+            let sites = emission_sites(&lines, &field);
+            for &i in &sites {
+                if !is_guarded(&lines, i) {
                     let msg = format!(
-                        "{needle:?} emitted unconditionally — this field is \
+                        "`{field}` emitted unconditionally — this field is \
                          emit-only-when-present for wire/journal back-compat"
                     );
                     self.flag(&path, i + 1, "emit-guards", &msg);
                 }
             }
-            if !found {
-                let msg = format!("expected emission site {needle:?} not found (rule table stale?)");
+            if sites.is_empty() {
+                let msg = format!(
+                    "declared conditional field `{field}` has no emission \
+                     site (stale DESIGN.md row?)"
+                );
                 self.flag(&path, 1, "emit-guards", &msg);
             }
         }
@@ -500,6 +533,86 @@ fn has_word(code: &str, word: &str) -> bool {
             return true;
         }
         from = end;
+    }
+    false
+}
+
+/// Leading | `file` | `field` | cells of the declared conditional-field
+/// table rows (header/separator rows carry no backticks and are skipped).
+fn parse_field_rows(section: &str) -> Vec<(String, String)> {
+    let tick = |s: &str| {
+        s.len() > 2
+            && s.starts_with('`')
+            && s.ends_with('`')
+            && s[1..s.len() - 1]
+                .chars()
+                .all(|c| c.is_alphanumeric() || matches!(c, '_' | '/' | '.'))
+    };
+    let mut out = Vec::new();
+    for line in section.lines() {
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = t.split('|').map(str::trim).collect();
+        // ["", "`file`", "`field`", when, ""]
+        if cells.len() < 4 || !tick(cells[1]) || !tick(cells[2]) {
+            continue;
+        }
+        let (file, field) = (cells[1], cells[2]);
+        if field[1..field.len() - 1].contains(['/', '.']) {
+            continue; // field cells are bare identifiers
+        }
+        out.push((
+            file[1..file.len() - 1].to_string(),
+            field[1..field.len() - 1].to_string(),
+        ));
+    }
+    out
+}
+
+/// Line indices emitting `field` via the post-hoc insert/push idioms
+/// (including the two-line rustfmt split), non-test code only. Shared by
+/// R5 and the wire-schema analysis.
+fn emission_sites(lines: &[&str], field: &str) -> Vec<usize> {
+    let single_insert = format!(".insert(\"{field}\"");
+    let single_push = format!(".push((\"{field}\"");
+    let continuation = format!("\"{field}\"");
+    let mut sites = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        if raw.contains("#[cfg(test)]") {
+            break; // test modules are file-final by crate convention
+        }
+        let code = strip_comment(raw);
+        if code.contains(&single_insert) || code.contains(&single_push) {
+            sites.push(i);
+        } else if (code.trim_end().ends_with(".push((") || code.trim_end().ends_with(".insert("))
+            && i + 1 < lines.len()
+            && strip_comment(lines[i + 1]).trim_start().starts_with(&continuation)
+        {
+            sites.push(i);
+        }
+    }
+    sites
+}
+
+/// Climb enclosing openers outward from line `i`: an `if` opener before
+/// any `fn` opener means the site is conditionally reached.
+fn is_guarded(lines: &[&str], i: usize) -> bool {
+    let mut bal: i64 = 0;
+    for j in (0..i).rev() {
+        let code = strip_comment(lines[j]);
+        bal += brace_delta(code);
+        if bal > 0 {
+            // An enclosing opener.
+            if has_word(code, "if") {
+                return true;
+            }
+            if has_word(code, "fn") {
+                return false;
+            }
+            bal = 0; // consumed this level; keep climbing
+        }
     }
     false
 }
@@ -663,8 +776,10 @@ mod tests {
         assert!(lint.violations[0].contains("thread::"), "{:?}", lint.violations);
     }
 
-    // R5 negative over the PR-9 needles: an unconditional `velocity`
-    // emission is flagged; the `if`-guarded `warped` twin passes.
+    // R5 negative: obligations come from the fixture's DESIGN.md table.
+    // The unconditional `velocity` emission is flagged; the `if`-guarded
+    // `warped` twin (two-line rustfmt push idiom) passes; a declared row
+    // with no emission site is flagged as stale.
     #[test]
     fn emit_guards_flag_unconditional_new_wire_fields() {
         let proto = concat!(
@@ -673,45 +788,41 @@ mod tests {
             "}\n",
             "fn encode_good(m: &mut Map, v: &View) {\n",
             "    if let Some(w) = &v.warped {\n",
-            "        m.insert(\"warped\".into(), Json::str(w));\n",
+            "        m.insert(\n",
+            "            \"warped\".into(),\n",
+            "            Json::str(w),\n",
+            "        );\n",
             "    }\n",
             "}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn t(m: &mut Map) { m.insert(\"velocity\".into(), Json::num(0.0)); }\n",
+            "}\n",
+        );
+        let design = concat!(
+            "#### Conditional wire fields\n",
+            "\n",
+            "| File | Field | Emitted when |\n",
+            "| --- | --- | --- |\n",
+            "| `serve/proto.rs` | `velocity` | reduce pinned a velocity |\n",
+            "| `serve/proto.rs` | `warped` | reduce pinned a warp |\n",
+            "| `serve/proto.rs` | `ghost` | stale row, no such site |\n",
+            "\n",
+            "## Next section\n",
         );
         let mut lint = fixture("r5", &[("serve/proto.rs", proto)]);
-        // Run the emit scan against just the two PR-9 needles present in
-        // the fixture (the production table expects the full proto.rs).
-        for &(rel, needle) in
-            &[("serve/proto.rs", "insert(\"velocity\""), ("serve/proto.rs", "insert(\"warped\"")]
-        {
-            let path = lint.src.join(rel);
-            let text = fs::read_to_string(&path).unwrap();
-            let lines: Vec<&str> = text.lines().collect();
-            for i in 0..lines.len() {
-                if !strip_comment(lines[i]).contains(needle) {
-                    continue;
-                }
-                let mut bal: i64 = 0;
-                let mut guarded = false;
-                for j in (0..i).rev() {
-                    let code = strip_comment(lines[j]);
-                    bal += brace_delta(code);
-                    if bal > 0 {
-                        if has_word(code, "if") {
-                            guarded = true;
-                            break;
-                        }
-                        if has_word(code, "fn") {
-                            break;
-                        }
-                        bal = 0;
-                    }
-                }
-                if !guarded {
-                    lint.flag(&path, i + 1, "emit-guards", needle);
-                }
-            }
-        }
-        assert_eq!(lint.violations.len(), 1, "{:?}", lint.violations);
-        assert!(lint.violations[0].contains("velocity"), "{:?}", lint.violations);
+        fs::write(lint.repo.join("DESIGN.md"), design).unwrap();
+        lint.rule_emit_guards();
+        assert_eq!(lint.violations.len(), 2, "{:?}", lint.violations);
+        assert!(
+            lint.violations[0].contains("`velocity` emitted unconditionally"),
+            "{:?}",
+            lint.violations
+        );
+        assert!(
+            lint.violations[1].contains("`ghost` has no emission site"),
+            "{:?}",
+            lint.violations
+        );
     }
 }

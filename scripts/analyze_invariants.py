@@ -1,0 +1,1073 @@
+#!/usr/bin/env python3
+"""Semantic invariant analysis for the claire crate — dependency-free
+mirror of `cargo xtask analyze` (rust/xtask/src/analyze.rs).
+
+Where `lint_invariants.py` greps for needles, this pass *extracts facts*
+from the source and checks them against declared models in DESIGN.md.
+Both implementations are kept in lockstep by hand (rule IDs and
+semantics below must match xtask's analyze module):
+
+  A1 lifecycle     Extract the real job-lifecycle transition graph from
+                   serve/scheduler.rs (every `rec.state = JobState::X`
+                   with its guarding `if rec.state != …` / `match
+                   rec.state` arm / `// lifecycle: from -> to`
+                   annotation, plus the JobRecord construction state)
+                   and the template round-state machine from
+                   template/journal.rs (journal line kinds + `//
+                   lifecycle:` annotations). Check both against the
+                   declared tables in DESIGN.md ("#### Job lifecycle
+                   transitions" / "#### Template round-state
+                   transitions"): an extracted transition missing from
+                   the table fails, and so does a declared row no code
+                   implements. Declared terminal states must have no
+                   outgoing edges. Emits artifacts/lifecycle.dot.
+
+  A2 wire-schema   Walk serve/proto.rs (and request.rs) encode/decode
+                   paths: per-verb request field sets from
+                   `Request::from_json` match arms and
+                   `Request::to_json`, object field sets from the
+                   job/stats/node-stats/job-request/event codec pairs.
+                   Check: encoded fields are a subset of decoded fields
+                   (we can always parse what we emit), the verb set
+                   matches DESIGN.md's "### Requests" table, and every
+                   *conditionally* emitted field (`insert("f"`/
+                   `push(("f"` behind an `if`) appears in DESIGN.md's
+                   "#### Conditional wire fields" table — and every
+                   declared row is still conditional in the source.
+                   This table is what lint R5's emit-guard obligations
+                   are derived from (the old hand-maintained needle
+                   table is gone). Cross-checks the golden corpus
+                   (rust/tests/fixtures/wire_corpus.ndjson): every verb
+                   covered in v1 (no seq) and v2 (seq) form, every
+                   field decodable. Emits artifacts/wire_schema.json.
+
+  A3 panic-budget  Inventory of panic-shaped sites (`unwrap()`,
+                   `expect(`, `panic!`, `unreachable!`, `todo!`,
+                   `unimplemented!`) and slice-indexing sites in
+                   non-test rust/src code (counting stops at the first
+                   `#[cfg(test)]`), checked against
+                   scripts/panic_budget.toml. A file over budget fails;
+                   a file *under* budget also fails until the budget is
+                   ratcheted down (budgets only ever decrease); missing
+                   and stale entries fail. Wire-decode files
+                   (serve/proto.rs, request.rs, util/json.rs) must
+                   budget zero panic sites — malformed client input
+                   must surface as structured errors, never a panic.
+
+Exit 0 when clean; exit 1 listing violations. Runs on bare python3 —
+no Rust toolchain, no pip. `--selftest` runs the analyses against
+synthetic bad/good fixtures (mirroring xtask's `#[cfg(test)]`
+negatives): an injected illegal state transition, a schema/DESIGN.md
+conditional-field mismatch, and a panic-budget overrun.
+"""
+
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "rust", "src")
+DESIGN = os.path.join(REPO, "DESIGN.md")
+BUDGET = os.path.join(REPO, "scripts", "panic_budget.toml")
+CORPUS = os.path.join(REPO, "rust", "tests", "fixtures", "wire_corpus.ndjson")
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+SCHED_FILE = "serve/scheduler.rs"
+TEMPLATE_JOURNAL_FILE = "template/journal.rs"
+PROTO_FILE = "serve/proto.rs"
+REQUEST_FILE = "request.rs"
+
+# Files whose insert("f")/push(("f") emission sites feed the
+# conditional-wire-field extraction (the wire/journal encoders).
+CONDITIONAL_SCAN_FILES = (
+    "serve/proto.rs",
+    "request.rs",
+    "serve/journal.rs",
+    "template/journal.rs",
+)
+
+# Decode-path files that must budget ZERO panic sites: everything
+# reachable from a malformed client line must be a structured error.
+ZERO_PANIC_FILES = ("serve/proto.rs", "request.rs", "util/json.rs")
+
+JOB_TABLE_ANCHOR = "#### Job lifecycle transitions"
+ROUND_TABLE_ANCHOR = "#### Template round-state transitions"
+COND_TABLE_ANCHOR = "#### Conditional wire fields"
+REQUESTS_ANCHOR = "### Requests"
+
+NEW_STATE = "(new)"
+START_STATE = "(start)"
+
+violations = []
+
+
+def flag(path, lineno, rule, msg):
+    rel = os.path.relpath(path, REPO)
+    violations.append(f"{rel}:{lineno}: [{rule}] {msg}")
+
+
+def strip_comment(line):
+    # Good enough for this tree: no `//` inside string literals on the
+    # lines these analyses look at.
+    i = line.find("//")
+    return line if i < 0 else line[:i]
+
+
+def read(path):
+    with open(path, encoding="utf-8") as fh:
+        return fh.read()
+
+
+def design_section(design_text, anchor):
+    """(section text, 1-based start line) or (None, 0). A section runs
+    from its anchor heading to the next heading of same-or-higher level."""
+    start = design_text.find(anchor)
+    if start < 0:
+        return None, 0
+    level = anchor.split(" ", 1)[0]  # "####" or "###"
+    stops = ["\n## "]
+    if len(level) >= 3:
+        stops.append("\n### ")
+    if len(level) >= 4:
+        stops.append("\n#### ")
+    tail = design_text[start:]
+    end = len(tail)
+    for s in stops:
+        i = tail.find(s, 1)
+        if 0 < i < end:
+            end = i
+    return tail[:end], design_text[:start].count("\n") + 1
+
+
+def parse_pair_table(section):
+    """First-two-backticked-cell rows: | `a` | `b` | ... -> [(a, b)]."""
+    rows = []
+    for line in section.splitlines():
+        m = re.match(r"^\|\s*`([\w()./|-]+)`\s*\|\s*`([\w()./|-]+)`\s*\|", line)
+        if m:
+            rows.append((m.group(1), m.group(2)))
+    return rows
+
+
+def fn_region(text, marker):
+    """Brace-matched body of the first fn whose definition contains
+    `marker` (e.g. "fn job_to_json"). Returns (body, 1-based line) or
+    (None, 0). Brace counting is string-naive, which is fine here:
+    braces inside the format! literals of these codecs come in pairs."""
+    start = text.find(marker)
+    if start < 0:
+        return None, 0
+    open_i = text.find("{", start)
+    if open_i < 0:
+        return None, 0
+    depth = 0
+    for i in range(open_i, len(text)):
+        c = text[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return text[open_i : i + 1], text[:start].count("\n") + 1
+    return None, 0
+
+
+def is_guarded(lines, i):
+    """Emit-guard climb (same algorithm as lint R5): does line i have an
+    enclosing `if` opener before the enclosing `fn`?"""
+    bal = 0
+    for j in range(i - 1, -1, -1):
+        code = strip_comment(lines[j])
+        bal += code.count("{") - code.count("}")
+        if bal > 0:  # an enclosing opener
+            if re.search(r"\bif\b", code):
+                return True
+            if re.search(r"\bfn\b", code):
+                return False
+            bal = 0  # consumed this level; keep climbing
+    return False
+
+
+# -- A1: lifecycle state-machine extraction ---------------------------------
+
+LIFECYCLE_ANN = re.compile(r"//\s*lifecycle:\s*([\w()|]+)\s*->\s*([\w()]+)")
+STATE_MUT = re.compile(r"rec\.state\s*=\s*JobState::(\w+)\s*;")
+STATE_CONSTRUCT = re.compile(r"\bstate:\s*JobState::(\w+)\s*,")
+GUARD_NEQ = re.compile(r"if\s+rec\.state\s*!=\s*JobState::(\w+)")
+MATCH_ARM = re.compile(r"^\s*JobState::(\w+)\s*=>")
+
+
+def lower(name):
+    # JobState::Queued -> "queued" (as_str is lowercase of the variant).
+    return name.lower()
+
+
+def extract_job_edges(sched_path):
+    """[(from, to, lineno)] from scheduler source, plus flagged sites the
+    analysis cannot resolve."""
+    text = read(sched_path)
+    raw_lines = text.splitlines()
+    edges = []
+    for i, raw in enumerate(raw_lines):
+        code = strip_comment(raw)
+        m = STATE_MUT.search(code)
+        if m:
+            to = lower(m.group(1))
+            ann = LIFECYCLE_ANN.search(raw)
+            if ann:
+                if lower(ann.group(2)) != to:
+                    flag(sched_path, i + 1, "lifecycle",
+                         f"annotation says `-> {ann.group(2)}` but the "
+                         f"assignment sets JobState::{m.group(1)}")
+                for frm in ann.group(1).split("|"):
+                    edges.append((lower(frm), to, i + 1))
+                continue
+            frm = None
+            for j in range(i - 1, -1, -1):
+                prev = strip_comment(raw_lines[j])
+                g = GUARD_NEQ.search(prev)
+                if g:
+                    frm = lower(g.group(1))
+                    break
+                a = MATCH_ARM.match(prev)
+                if a:
+                    frm = lower(a.group(1))
+                    break
+                if re.search(r"\bfn\b", prev):
+                    break
+            if frm is None:
+                flag(sched_path, i + 1, "lifecycle",
+                     "cannot derive the from-state of this transition "
+                     "(no `if rec.state != …` guard, `match rec.state` "
+                     "arm, or `// lifecycle: from -> to` annotation)")
+            else:
+                edges.append((frm, to, i + 1))
+            continue
+        m = STATE_CONSTRUCT.search(code)
+        if m:
+            # Initial state of a freshly constructed record — but only
+            # in a JobRecord literal (WatchEvent snapshots are views of
+            # existing state, not transitions).
+            for j in range(i, -1, -1):
+                prev = strip_comment(raw_lines[j])
+                if "JobRecord {" in prev:
+                    edges.append((NEW_STATE, lower(m.group(1)), i + 1))
+                    break
+                if "WatchEvent {" in prev:
+                    break
+    return edges
+
+
+def extract_job_states(sched_path):
+    """(variant names lowercased, terminal names lowercased)."""
+    text = read(sched_path)
+    m = re.search(r"enum JobState\s*\{(.*?)\}", text, re.S)
+    states = []
+    if m:
+        states = [lower(v) for v in re.findall(r"\b([A-Z]\w*)\b", m.group(1))]
+    t = re.search(r"fn is_terminal[^{]*\{\s*matches!\(self,\s*(.*?)\)\s*\}", text, re.S)
+    terminals = [lower(v) for v in re.findall(r"JobState::(\w+)", t.group(1))] if t else []
+    return states, terminals
+
+
+def extract_round_machine(journal_path):
+    """(appended kinds, replayed kinds, annotated edges [(from,to,line)],
+    has sequential-order guard)."""
+    text = read(journal_path)
+    appended = sorted(set(re.findall(r'\("kind",\s*Json::str\("(\w+)"\)\)', text)))
+    replay_body, _ = fn_region(text, "fn replay")
+    replay_body = replay_body or ""
+    replayed = sorted(set(re.findall(r'Some\("(\w+)"\)\s*=>', replay_body)))
+    edges = []
+    for i, raw in enumerate(text.splitlines()):
+        ann = LIFECYCLE_ANN.search(raw)
+        if ann:
+            for frm in ann.group(1).split("|"):
+                edges.append((frm, ann.group(2), i + 1))
+    has_seq_guard = "rounds.len() + 1" in replay_body
+    return appended, replayed, edges, has_seq_guard
+
+
+def check_machine(rule, path, design_path, extracted, declared, sec_line, what):
+    """Extracted-vs-declared edge diff, both directions."""
+    extracted_set = {(f, t) for f, t, _ in extracted}
+    declared_set = set(declared)
+    for f, t, lineno in extracted:
+        if (f, t) not in declared_set:
+            flag(path, lineno, rule,
+                 f"implements undeclared {what} transition `{f}` -> `{t}` "
+                 f"(add it to DESIGN.md's table or fix the code)")
+    for f, t in declared:
+        if (f, t) not in extracted_set:
+            flag(design_path, sec_line, rule,
+                 f"declares {what} transition `{f}` -> `{t}` that no "
+                 "code implements")
+
+
+def analysis_lifecycle(write_artifacts=True):
+    sched_path = os.path.join(SRC, SCHED_FILE)
+    tj_path = os.path.join(SRC, TEMPLATE_JOURNAL_FILE)
+    design = read(DESIGN)
+
+    # Job lifecycle.
+    edges = extract_job_edges(sched_path)
+    states, terminals = extract_job_states(sched_path)
+    section, sec_line = design_section(design, JOB_TABLE_ANCHOR)
+    if section is None:
+        flag(DESIGN, 1, "lifecycle", f"section {JOB_TABLE_ANCHOR!r} not found")
+        declared = []
+    else:
+        declared = parse_pair_table(section)
+        if not declared:
+            flag(DESIGN, sec_line, "lifecycle",
+                 f"{JOB_TABLE_ANCHOR!r} holds no | `from` | `to` | rows")
+    check_machine("lifecycle", sched_path, DESIGN, edges, declared, sec_line, "job")
+    for f, t in declared:
+        if f in terminals:
+            flag(DESIGN, sec_line, "lifecycle",
+                 f"terminal state `{f}` (JobState::is_terminal) has a "
+                 f"declared outgoing transition to `{t}`")
+        for s in (x for x in (f, t) if x != NEW_STATE):
+            if states and s not in states:
+                flag(DESIGN, sec_line, "lifecycle",
+                     f"declared transition names unknown state `{s}` "
+                     f"(JobState has {', '.join(states)})")
+
+    # Template round-state machine.
+    appended, replayed, redges, has_seq_guard = extract_round_machine(tj_path)
+    for kind in appended:
+        if kind not in replayed:
+            flag(tj_path, 1, "lifecycle",
+                 f"journal line kind `{kind}` is appended but replay() "
+                 "never handles it (restart would silently drop it)")
+    rsection, rsec_line = design_section(design, ROUND_TABLE_ANCHOR)
+    if rsection is None:
+        flag(DESIGN, 1, "lifecycle", f"section {ROUND_TABLE_ANCHOR!r} not found")
+        rdeclared = []
+    else:
+        rdeclared = parse_pair_table(rsection)
+    check_machine("lifecycle", tj_path, DESIGN, redges, rdeclared, rsec_line, "round-state")
+    declared_kinds = {t for _, t in rdeclared}
+    for kind in appended:
+        if rdeclared and kind not in declared_kinds:
+            flag(tj_path, 1, "lifecycle",
+                 f"journal line kind `{kind}` does not appear in the "
+                 "declared round-state table")
+    if not has_seq_guard:
+        flag(tj_path, 1, "lifecycle",
+             "replay() no longer enforces sequential round order "
+             "(`rounds.len() + 1` guard missing) — the `round` -> "
+             "`round` row in DESIGN.md promises strict sequencing")
+
+    if write_artifacts and not violations:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        with open(os.path.join(ARTIFACTS, "lifecycle.dot"), "w") as fh:
+            fh.write("// Generated by the invariant analyzer (cargo xtask "
+                     "analyze / scripts/analyze_invariants.py). Do not edit.\n")
+            fh.write("digraph job_lifecycle {\n  rankdir=LR;\n")
+            for f, t in sorted({(f, t) for f, t, _ in edges}):
+                fh.write(f'  "{f}" -> "{t}";\n')
+            for s in terminals:
+                fh.write(f'  "{s}" [shape=doublecircle];\n')
+            fh.write("}\n")
+            fh.write("digraph template_rounds {\n  rankdir=LR;\n")
+            for f, t in sorted({(f, t) for f, t, _ in redges}):
+                fh.write(f'  "{f}" -> "{t}";\n')
+            fh.write("}\n")
+
+
+# -- A2: wire-schema extraction & conformance --------------------------------
+
+GET_FIELD = re.compile(r'\bget\("(\w+)"\)')
+PAIR_FIELD = re.compile(r'\("(\w+)",')
+ENVELOPE = {"cmd", "seq"}
+
+
+def split_str_arms(region):
+    """`"verb" => …` arms of a match-on-string region: {verb: chunk}."""
+    parts = re.split(r'\n\s*"(\w+)"\s*=>', region)
+    arms = {}
+    for k in range(1, len(parts), 2):
+        arms.setdefault(parts[k], []).append(parts[k + 1])
+    return {v: "\n".join(chunks) for v, chunks in arms.items()}
+
+
+def decode_fields(chunk):
+    fields = set(GET_FIELD.findall(chunk))
+    # Local reader closures: str_opt("k") in the reduce arm, num("k") in
+    # the progress-event arm (both wrap j.get(k) with a typed error).
+    fields |= set(re.findall(r'\bstr_opt\("(\w+)"\)', chunk))
+    fields |= set(re.findall(r'\bnum\("(\w+)"\)', chunk))
+    if "id_of(" in chunk:
+        fields.add("id")
+    return fields - ENVELOPE
+
+
+def extract_request_schema(proto_text, proto_path):
+    """{verb: {"decode": set, "encode": set}}."""
+    start = proto_text.find("match cmd {")
+    end = proto_text.find("unknown command")
+    if start < 0 or end < 0:
+        flag(proto_path, 1, "wire-schema",
+             "cannot locate Request::from_json's `match cmd` dispatch")
+        return {}
+    arms = split_str_arms(proto_text[start:end])
+    schema = {v: {"decode": decode_fields(chunk), "encode": set()}
+              for v, chunk in arms.items()}
+
+    # Encode side: chunks of Request::to_json keyed by ("cmd", …"verb").
+    to_json_end = proto_text.find("pub fn to_line")
+    encode_region = proto_text[:to_json_end] if to_json_end > 0 else proto_text
+    marks = [(m.start(), m.group(1))
+             for m in re.finditer(r'\("cmd",\s*Json::str\("(\w+)"\)\)', encode_region)]
+    for k, (pos, verb) in enumerate(marks):
+        stop = marks[k + 1][0] if k + 1 < len(marks) else len(encode_region)
+        fields = set(PAIR_FIELD.findall(encode_region[pos:stop])) - {"cmd"}
+        fields -= {"m0", "m1"}  # nested source-object keys, not verb fields
+        if verb not in schema:
+            flag(proto_path, 1, "wire-schema",
+                 f"Request::to_json encodes verb `{verb}` that "
+                 "Request::from_json cannot decode")
+            continue
+        schema[verb]["encode"] |= fields
+    for verb, s in schema.items():
+        extra = s["encode"] - s["decode"]
+        if extra:
+            flag(proto_path, 1, "wire-schema",
+                 f"verb `{verb}` encodes field(s) {sorted(extra)} its "
+                 "decode arm never reads — a round-trip would drop them")
+    return schema
+
+
+def extract_codec_pair(text, path, name, enc_marker, dec_marker,
+                       enc_extra=(), dec_extra_re=()):
+    """Field sets of an encode/decode fn pair; checks encode ⊆ decode."""
+    enc_body, enc_line = fn_region(text, enc_marker)
+    dec_body, _ = fn_region(text, dec_marker)
+    if enc_body is None or dec_body is None:
+        flag(path, 1, "wire-schema",
+             f"cannot locate codec pair {enc_marker!r}/{dec_marker!r}")
+        return None
+    enc = set(PAIR_FIELD.findall(enc_body))
+    enc |= set(re.findall(r'insert\("(\w+)"', enc_body))
+    enc |= set(enc_extra)
+    dec = set(GET_FIELD.findall(dec_body))
+    for pat in dec_extra_re:
+        dec |= set(re.findall(pat, dec_body))
+    extra = enc - dec - ENVELOPE
+    if extra:
+        flag(path, enc_line, "wire-schema",
+             f"object `{name}` encodes field(s) {sorted(extra)} the "
+             "decoder never reads — a round-trip would drop them")
+    return {"encode": sorted(enc), "decode": sorted(dec)}
+
+
+def extract_event_schema(proto_text, proto_path):
+    """{kind: {"encode": set, "decode": set}} for EventMsg."""
+    enc_body, enc_line = fn_region(proto_text, "pub fn to_line(&self) -> String {\n        let mut pairs")
+    if enc_body is None:
+        # Fall back: the EventMsg impl is the last to_line in the file.
+        idx = proto_text.rfind("pub fn to_line")
+        enc_body, enc_line = fn_region(proto_text[idx:], "pub fn to_line") if idx >= 0 else (None, 0)
+    dec_start = proto_text.find("fn from_json", proto_text.find("impl EventMsg"))
+    dec_body, _ = fn_region(proto_text[dec_start:], "fn from_json") if dec_start >= 0 else (None, 0)
+    if enc_body is None or dec_body is None:
+        flag(proto_path, 1, "wire-schema", "cannot locate EventMsg codec")
+        return {}
+    marks = [(m.start(), m.group(1))
+             for m in re.finditer(r'\("event",\s*Json::str\("(\w+)"\)\)', enc_body)]
+    enc_by_kind = {}
+    for k, (pos, kind) in enumerate(marks):
+        stop = marks[k + 1][0] if k + 1 < len(marks) else len(enc_body)
+        enc_by_kind[kind] = set(PAIR_FIELD.findall(enc_body[pos:stop])) - {"event"}
+    dec_arms = split_str_arms(dec_body)
+    out = {}
+    for kind, enc in enc_by_kind.items():
+        if kind not in dec_arms:
+            flag(proto_path, enc_line, "wire-schema",
+                 f"event kind `{kind}` is emitted but EventMsg::from_json "
+                 "never decodes it")
+            continue
+        dec = decode_fields(dec_arms[kind]) | {"seq"}
+        extra = enc - dec - {"seq"}
+        if extra:
+            flag(proto_path, enc_line, "wire-schema",
+                 f"event `{kind}` encodes field(s) {sorted(extra)} its "
+                 "decode arm never reads")
+        out[kind] = {"encode": sorted(enc), "decode": sorted(dec)}
+    return out
+
+
+EMIT_SITE = re.compile(r'(?:\.insert\(|\.push\(\()"(\w+)"')
+
+
+def extract_conditional_fields():
+    """{(rel file, field): {"guarded": [lines], "unguarded": [lines]}}
+    over every insert("f")/push(("f") emission site in the wire/journal
+    encoders (the post-hoc-append idioms used for optional fields —
+    always-present fields live in Json::object literals instead)."""
+    sites = {}
+    for rel in CONDITIONAL_SCAN_FILES:
+        path = os.path.join(SRC, rel)
+        lines = read(path).splitlines()
+        in_tests = False
+        for i, raw in enumerate(lines):
+            if "#[cfg(test)]" in raw:
+                in_tests = True
+            if in_tests:
+                continue
+            code = strip_comment(raw)
+            fields = [m.group(1) for m in EMIT_SITE.finditer(code)]
+            # rustfmt splits wide pushes over two lines:
+            #   pairs.push((
+            #       "field", …
+            if re.search(r"\.(?:push\(\(|insert\()\s*$", code) and i + 1 < len(lines):
+                m = re.match(r'\s*"(\w+)"', strip_comment(lines[i + 1]))
+                if m:
+                    fields.append(m.group(1))
+            for field in fields:
+                entry = sites.setdefault((rel, field),
+                                         {"guarded": [], "unguarded": []})
+                key = "guarded" if is_guarded(lines, i) else "unguarded"
+                entry[key].append(i + 1)
+    return sites
+
+
+def analysis_wire_schema(write_artifacts=True):
+    proto_path = os.path.join(SRC, PROTO_FILE)
+    request_path = os.path.join(SRC, REQUEST_FILE)
+    proto = read(proto_path)
+    request = read(request_path)
+    design = read(DESIGN)
+
+    verbs = extract_request_schema(proto, proto_path)
+
+    # DESIGN.md's Requests table must list exactly the decodable verbs.
+    rsection, rsec_line = design_section(design, REQUESTS_ANCHOR)
+    if rsection is None:
+        flag(DESIGN, 1, "wire-schema", f"section {REQUESTS_ANCHOR!r} not found")
+    else:
+        documented = set(re.findall(r'"cmd"\s*:\s*"(\w+)"', rsection))
+        for v in sorted(set(verbs) - documented):
+            flag(DESIGN, rsec_line, "wire-schema",
+                 f"verb `{v}` is decodable but missing from the "
+                 f"{REQUESTS_ANCHOR!r} table")
+        for v in sorted(documented - set(verbs)):
+            flag(DESIGN, rsec_line, "wire-schema",
+                 f"{REQUESTS_ANCHOR!r} documents verb `{v}` that "
+                 "Request::from_json does not decode")
+
+    objects = {}
+    spec = extract_codec_pair(
+        proto, proto_path, "job", "fn job_to_json", "fn job_from_json")
+    if spec:
+        objects["job"] = spec
+    spec = extract_codec_pair(
+        proto, proto_path, "node_stats",
+        "fn node_stats_to_json", "fn node_stats_from_json")
+    if spec:
+        objects["node_stats"] = spec
+    spec = extract_codec_pair(
+        proto, proto_path, "stats", "fn stats_to_json", "fn stats_from_json",
+        dec_extra_re=(r'\bg\("(\w+)"\)', r'\bgs\("(\w+)"\)'))
+    if spec:
+        objects["stats"] = spec
+    spec = extract_codec_pair(
+        request, request_path, "job_request", "pub fn to_json", "pub fn from_json",
+        dec_extra_re=(r'field\(j,\s*"(\w+)"', r'id_of\("(\w+)"\)'))
+    if spec:
+        objects["job_request"] = spec
+    events = extract_event_schema(proto, proto_path)
+
+    # Conditional (emit-only-when-present) fields vs the declared table.
+    sites = extract_conditional_fields()
+    csection, csec_line = design_section(design, COND_TABLE_ANCHOR)
+    if csection is None:
+        flag(DESIGN, 1, "wire-schema", f"section {COND_TABLE_ANCHOR!r} not found")
+        declared = []
+    else:
+        declared = parse_pair_table(csection)
+    declared_set = set(declared)
+    conditional = []
+    for (rel, field), entry in sorted(sites.items()):
+        path = os.path.join(SRC, rel)
+        if entry["guarded"] and entry["unguarded"]:
+            flag(path, entry["unguarded"][0], "wire-schema",
+                 f"field `{field}` is emitted both guarded (line(s) "
+                 f"{entry['guarded']}) and unguarded — emit-only-when-"
+                 "present discipline must be all-or-nothing per file")
+        elif entry["guarded"]:
+            conditional.append({"file": rel, "field": field,
+                                "lines": entry["guarded"]})
+            if (rel, field) not in declared_set:
+                flag(path, entry["guarded"][0], "wire-schema",
+                     f"conditionally emitted field `{field}` is not "
+                     f"declared in DESIGN.md's {COND_TABLE_ANCHOR!r} table")
+    for rel, field in declared:
+        entry = sites.get((rel, field))
+        if entry is None:
+            flag(DESIGN, csec_line, "wire-schema",
+                 f"declared conditional field `{field}` has no "
+                 f"insert/push emission site in {rel} (stale row?)")
+        elif entry["unguarded"] and not entry["guarded"]:
+            flag(os.path.join(SRC, rel), entry["unguarded"][0], "wire-schema",
+                 f"declared conditional field `{field}` is emitted "
+                 "unconditionally — this field is emit-only-when-present "
+                 "for wire/journal back-compat")
+
+    # Golden corpus: every verb in v1 (bare) and v2 (seq) form, every
+    # field decodable per the extracted schema.
+    seen = {}  # verb -> set of forms ("v1"/"v2")
+    if not os.path.exists(CORPUS):
+        flag(CORPUS, 1, "wire-schema", "golden wire corpus missing")
+    else:
+        with open(CORPUS, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                except ValueError:
+                    flag(CORPUS, lineno, "wire-schema", "line is not valid JSON")
+                    continue
+                verb = obj.get("cmd")
+                if verb not in verbs:
+                    flag(CORPUS, lineno, "wire-schema",
+                         f"unknown verb {verb!r}")
+                    continue
+                seen.setdefault(verb, set()).add("v2" if "seq" in obj else "v1")
+                extra = set(obj) - ENVELOPE - verbs[verb]["decode"]
+                if extra:
+                    flag(CORPUS, lineno, "wire-schema",
+                         f"verb `{verb}` carries field(s) {sorted(extra)} "
+                         "its decode arm never reads")
+                jr = objects.get("job_request")
+                jobs = []
+                if verb == "submit" and isinstance(obj.get("job"), dict):
+                    jobs = [obj["job"]]
+                elif verb == "submit_batch" and isinstance(obj.get("jobs"), list):
+                    jobs = [j for j in obj["jobs"] if isinstance(j, dict)]
+                for j in jobs:
+                    extra = set(j) - set(jr["decode"] if jr else [])
+                    if jr and extra:
+                        flag(CORPUS, lineno, "wire-schema",
+                             f"job object carries field(s) {sorted(extra)} "
+                             "JobRequest::from_json never reads")
+        for verb in sorted(verbs):
+            for form in ("v1", "v2"):
+                if form not in seen.get(verb, set()):
+                    flag(CORPUS, 1, "wire-schema",
+                         f"verb `{verb}` has no {form} "
+                         f"({'with' if form == 'v2' else 'no'} seq) corpus line")
+
+    if write_artifacts and not violations:
+        envelope, _ = fn_region(proto, "pub fn from_json(j: &Json) -> Result<Response>")
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        schema = {
+            "generated_by": "cargo xtask analyze / scripts/analyze_invariants.py (lockstep)",
+            "verbs": {
+                v: {"request": {"decode": sorted(s["decode"]),
+                                "encode": sorted(s["encode"])}}
+                for v, s in sorted(verbs.items())
+            },
+            "objects": objects,
+            "events": events,
+            "response_discriminators":
+                sorted(set(GET_FIELD.findall(envelope or ""))),
+            "conditional_fields": conditional,
+        }
+        with open(os.path.join(ARTIFACTS, "wire_schema.json"), "w") as fh:
+            json.dump(schema, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+
+
+# -- A3: panic-path ratchet ---------------------------------------------------
+
+# `.expect(` with a `(?!b')` lookahead: the JSON parser's own
+# `expect(b'{')` byte-matcher is not Result::expect.
+PANIC_RE = re.compile(
+    r"\.unwrap\(\)|\.expect\((?!b')|\bpanic!\s*\(|\bunreachable!\s*\(|"
+    r"\btodo!\s*\(|\bunimplemented!\s*\(")
+# Slice/array indexing proxy: an index expression directly following an
+# identifier, call, or index (not `#[attr]`, not array type/literal).
+INDEX_RE = re.compile(r"[A-Za-z0-9_\)\]]\[")
+
+
+def count_sites(path):
+    n_panic = n_index = 0
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            if "#[cfg(test)]" in line:
+                break  # test modules are file-final by crate convention
+            code = strip_comment(line)
+            n_panic += len(PANIC_RE.findall(code))
+            n_index += len(INDEX_RE.findall(code))
+    return n_panic, n_index
+
+
+def parse_budget(path):
+    """{"panics": {file: n}, "index": {file: n}} from the flat two-table
+    TOML (no dependency on a TOML parser)."""
+    tables = {"panics": {}, "index": {}}
+    current = None
+    with open(path, encoding="utf-8") as fh:
+        for lineno, raw in enumerate(fh, 1):
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            m = re.match(r"^\[(\w+)\]$", line)
+            if m:
+                current = m.group(1)
+                if current not in tables:
+                    flag(path, lineno, "panic-budget",
+                         f"unknown budget table [{current}]")
+                    tables[current] = {}
+                continue
+            m = re.match(r'^"([^"]+)"\s*=\s*(\d+)$', line)
+            if m and current:
+                tables[current][m.group(1)] = int(m.group(2))
+            else:
+                flag(path, lineno, "panic-budget",
+                     f"unparseable budget line {raw.strip()!r}")
+    return tables
+
+
+def analysis_panic_budget():
+    if not os.path.exists(BUDGET):
+        flag(BUDGET, 1, "panic-budget", "budget file missing")
+        return
+    budget = parse_budget(BUDGET)
+    actual = {"panics": {}, "index": {}}
+    for root, _dirs, files in os.walk(SRC):
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            path = os.path.join(root, f)
+            rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+            n_panic, n_index = count_sites(path)
+            if n_panic:
+                actual["panics"][rel] = n_panic
+            if n_index:
+                actual["index"][rel] = n_index
+    for table in ("panics", "index"):
+        for rel, n in sorted(actual[table].items()):
+            path = os.path.join(SRC, rel)
+            b = budget[table].get(rel)
+            if table == "panics" and rel in ZERO_PANIC_FILES:
+                flag(path, 1, "panic-budget",
+                     f"decode-path file has {n} panic site(s); malformed "
+                     "client input must surface as structured errors "
+                     "(budget is pinned to zero)")
+                continue
+            if b is None:
+                flag(path, 1, "panic-budget",
+                     f"{n} {table} site(s) but no [{table}] budget entry "
+                     "in scripts/panic_budget.toml")
+            elif n > b:
+                flag(path, 1, "panic-budget",
+                     f"{n} {table} site(s) exceed the budget of {b} — "
+                     "convert the new sites to structured errors")
+            elif n < b:
+                flag(path, 1, "panic-budget",
+                     f"only {n} {table} site(s) against a budget of {b} — "
+                     f"ratchet the budget down to {n} (budgets only "
+                     "ever decrease)")
+        for rel, b in sorted(budget[table].items()):
+            if rel not in actual[table]:
+                flag(BUDGET, 1, "panic-budget",
+                     f"stale [{table}] entry for {rel} (no such site "
+                     "or file) — delete it")
+
+
+# -- Negative-fixture selftest ------------------------------------------------
+
+FIXTURE_SCHED = """\
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+}
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done)
+    }
+}
+fn submit(st: &mut St) {
+    st.jobs.insert(id, JobRecord {
+        state: JobState::Queued,
+    });
+}
+fn dispatch(rec: &mut JobRecord) {
+    if rec.state != JobState::Done {
+        rec.state = JobState::Running;
+    }
+}
+"""
+
+FIXTURE_TJ = """\
+fn append_init(&self) {
+    // lifecycle: (start) -> init
+    let pairs = vec![("kind", Json::str("init"))];
+}
+fn append_round(&self) {
+    // lifecycle: init|round -> round
+    let pairs = vec![("kind", Json::str("round"))];
+}
+fn replay(path: &Path) {
+    match kind {
+        Some("init") => {}
+        Some("round") => {
+            if round != st.rounds.len() + 1 {
+                return Err(out_of_order());
+            }
+        }
+        _ => {}
+    }
+}
+"""
+
+FIXTURE_DESIGN = """\
+### Requests
+
+| Request | Response |
+|---|---|
+| `{"cmd":"ping"}` | `{"ok":true}` |
+| `{"cmd":"status","id":7}` | `{"ok":true}` |
+
+#### Job lifecycle transitions
+
+| From | To | Trigger |
+|---|---|---|
+| `(new)` | `queued` | admission |
+| `queued` | `running` | dispatch |
+
+#### Template round-state transitions
+
+| From | To | Line |
+|---|---|---|
+| `(start)` | `init` | run header |
+| `init` | `round` | first round |
+| `round` | `round` | each next round |
+
+#### Conditional wire fields
+
+| File | Field | Emitted when |
+|---|---|---|
+| `serve/proto.rs` | `velocity` | retained |
+| `request.rs` | `dedup` | token supplied |
+"""
+
+FIXTURE_PROTO = """\
+impl Request {
+    fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::object([("cmd", Json::str("ping"))]),
+            Request::Status(Some(id)) => {
+                Json::object([("cmd", Json::str("status")), ("id", Json::num(*id as f64))])
+            }
+        }
+    }
+    pub fn to_line(&self) -> String { self.to_json().render() }
+    pub fn from_json(j: &Json) -> Result<Request> {
+        match cmd {
+            "ping" => Ok(Request::Ping),
+            "status" => match j.get("id") {
+                None => Ok(Request::Status(None)),
+                Some(_) => Ok(Request::Status(Some(id_of(j)?))),
+            },
+            other => Err(bad(format!("unknown command '{other}'"))),
+        }
+    }
+}
+fn job_to_json(v: &JobView) -> Json {
+    let mut j = Json::object([("id", Json::num(v.id as f64))]);
+    if let Json::Obj(m) = &mut j {
+        m.insert("velocity".into(), Json::str(vel));
+    }
+    m.insert("ghost".into(), Json::str(g));
+    j
+}
+fn job_from_json(j: &Json) -> Result<JobView> {
+    let id = j.get("id");
+    let v = j.get("velocity");
+    let g = j.get("ghost");
+}
+fn node_stats_to_json(n: &NodeStats) -> Json {
+    Json::object([("node", Json::str(&n.node))])
+}
+fn node_stats_from_json(j: &Json) -> Result<NodeStats> {
+    let node = j.get("node");
+}
+fn stats_to_json(s: &ServeStats) -> Json {
+    Json::object([("queued", Json::num(s.queued as f64))])
+}
+fn stats_from_json(j: &Json) -> Result<ServeStats> {
+    let queued = g("queued");
+}
+impl EventMsg {
+    pub fn to_line(&self) -> String {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        pairs.push(("event", Json::str("job")));
+        Json::object(pairs).render()
+    }
+    pub fn from_json(j: &Json) -> Result<EventMsg> {
+        match kind {
+            "job" => Ok(EventMsg::Job {}),
+            other => Err(unknown()),
+        }
+    }
+}
+"""
+
+FIXTURE_REQUEST = """\
+impl JobRequest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("subject", Json::str(&self.subject))];
+        if let Some(t) = &self.dedup {
+            pairs.push(("dedup", Json::str(t)));
+        }
+        Json::object(pairs)
+    }
+    pub fn from_json(j: &Json) -> Result<JobRequest> {
+        let subject = field(j, "subject", Json::as_str, "a string")?;
+        let dedup = field(j, "dedup", Json::as_str, "a string")?;
+    }
+}
+"""
+
+FIXTURE_CORPUS = """\
+{"cmd":"ping"}
+{"cmd":"ping","seq":1}
+{"cmd":"status","id":7}
+{"cmd":"status","id":7,"seq":2}
+"""
+
+
+def selftest():
+    global SRC, DESIGN, BUDGET, CORPUS, violations
+    import tempfile
+    saved = (SRC, DESIGN, BUDGET, CORPUS, violations)
+    with tempfile.TemporaryDirectory() as td:
+        src = os.path.join(td, "src")
+        os.makedirs(os.path.join(src, "serve"))
+        os.makedirs(os.path.join(src, "template"))
+        fixtures = {
+            os.path.join(src, "serve", "scheduler.rs"): FIXTURE_SCHED,
+            os.path.join(src, "template", "journal.rs"): FIXTURE_TJ,
+            os.path.join(src, "serve", "proto.rs"): FIXTURE_PROTO,
+            os.path.join(src, "request.rs"): FIXTURE_REQUEST,
+            os.path.join(src, "serve", "journal.rs"): "fn f() {}\n",
+            os.path.join(td, "DESIGN.md"): FIXTURE_DESIGN,
+            os.path.join(td, "corpus.ndjson"): FIXTURE_CORPUS,
+            os.path.join(td, "panic_budget.toml"):
+                '[panics]\n"over.rs" = 1\n"under.rs" = 5\n"gone.rs" = 1\n'
+                "[index]\n",
+            os.path.join(src, "over.rs"):
+                "fn f() { a.unwrap(); b.unwrap(); }\n",
+            os.path.join(src, "under.rs"):
+                "fn f() { a.unwrap(); }\n",
+            os.path.join(src, "unbudgeted.rs"):
+                "fn f() { panic!(\"boom\"); }\n",
+            os.path.join(src, "tested.rs"):
+                "fn f() {}\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\n",
+        }
+        for path, body in fixtures.items():
+            with open(path, "w") as fh:
+                fh.write(body)
+        SRC, DESIGN = src, os.path.join(td, "DESIGN.md")
+        BUDGET = os.path.join(td, "panic_budget.toml")
+        CORPUS = os.path.join(td, "corpus.ndjson")
+
+        # A1: the fixture implements `done -> running` (an injected
+        # illegal transition: its guard admits any non-done state) which
+        # the declared table does not list; the declared `queued ->
+        # running` row is then unimplemented. Round-state tables agree.
+        violations = []
+        analysis_lifecycle(write_artifacts=False)
+        a1 = list(violations)
+        assert any("undeclared job transition `done` -> `running`" in v
+                   for v in a1), a1
+        assert any("declares job transition `queued` -> `running`" in v
+                   for v in a1), a1
+        assert not any("round-state" in v for v in a1), a1
+
+        # A2: `ghost` is emitted guarded... no — unguarded and undeclared
+        # decode-wise; `velocity` is declared AND guarded (clean); the
+        # corpus and verb tables agree. The unguarded `ghost` insert is
+        # fine for R5 (always-present), but job_to_json round-trips it,
+        # so only the undeclared-conditional check must stay quiet.
+        violations = []
+        analysis_wire_schema(write_artifacts=False)
+        a2 = list(violations)
+        assert not a2, a2
+
+        # A2 negative: unguard `velocity` (schema/DESIGN.md mismatch —
+        # a declared conditional field emitted unconditionally) and emit
+        # a new guarded `extra` field nobody declared.
+        proto_path = os.path.join(src, "serve", "proto.rs")
+        bad = FIXTURE_PROTO.replace(
+            "    if let Json::Obj(m) = &mut j {\n"
+            "        m.insert(\"velocity\".into(), Json::str(vel));\n"
+            "    }\n",
+            "    m.insert(\"velocity\".into(), Json::str(vel));\n"
+            "    if let Some(x) = &v.extra {\n"
+            "        m.insert(\"extra\".into(), Json::str(x));\n"
+            "    }\n").replace(
+            "    let g = j.get(\"ghost\");\n",
+            "    let g = j.get(\"ghost\");\n    let x = j.get(\"extra\");\n")
+        with open(proto_path, "w") as fh:
+            fh.write(bad)
+        violations = []
+        analysis_wire_schema(write_artifacts=False)
+        a2 = list(violations)
+        assert any("`velocity` is emitted unconditionally" in v for v in a2), a2
+        assert any("`extra` is not declared" in v for v in a2), a2
+
+        # A2 negative: a corpus line with a field the verb cannot decode.
+        with open(proto_path, "w") as fh:
+            fh.write(FIXTURE_PROTO)
+        with open(CORPUS, "a") as fh:
+            fh.write('{"cmd":"ping","bogus":1}\n')
+        violations = []
+        analysis_wire_schema(write_artifacts=False)
+        a2 = list(violations)
+        assert any("field(s) ['bogus']" in v for v in a2), a2
+
+        # A3: over budget, under budget (ratchet), unbudgeted, stale —
+        # and test-module sites are not counted.
+        violations = []
+        analysis_panic_budget()
+        a3 = list(violations)
+        assert any("over.rs" in v and "exceed the budget" in v for v in a3), a3
+        assert any("under.rs" in v and "ratchet the budget down" in v
+                   for v in a3), a3
+        assert any("unbudgeted.rs" in v and "no [panics] budget entry" in v
+                   for v in a3), a3
+        assert any("stale [panics] entry for gone.rs" in v for v in a3), a3
+        assert not any("tested.rs" in v for v in a3), a3
+    SRC, DESIGN, BUDGET, CORPUS, violations = saved
+    print("analyze_invariants: selftest OK (lifecycle, wire-schema, "
+          "panic-budget negatives)")
+
+
+def main():
+    if "--selftest" in sys.argv:
+        selftest()
+        return 0
+    analysis_lifecycle()
+    analysis_wire_schema()
+    analysis_panic_budget()
+    if violations:
+        for v in violations:
+            print(v)
+        print(f"analyze_invariants: {len(violations)} violation(s)")
+        return 1
+    print("analyze_invariants: OK (lifecycle, wire-schema, panic-budget; "
+          "artifacts/lifecycle.dot + artifacts/wire_schema.json written)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,23 @@ else
   exit 1
 fi
 
+echo "== semantic invariant analysis (hard gate: lifecycle, wire-schema, panic-budget) =="
+# Extracts the job/round lifecycle machines and the wire schema from the
+# source, diffs both against the declared tables in DESIGN.md, and holds
+# every non-test file to its panic budget (scripts/panic_budget.toml).
+# Writes artifacts/lifecycle.dot + artifacts/wire_schema.json on success.
+if command -v cargo >/dev/null 2>&1; then
+  cargo xtask analyze
+elif command -v python3 >/dev/null 2>&1; then
+  echo "WARNING: cargo not found; running the dependency-free Python mirror"
+  python3 ../scripts/analyze_invariants.py
+  python3 ../scripts/analyze_invariants.py --selftest
+else
+  echo "ERROR: neither cargo nor python3 available to run the invariant analyzer" >&2
+  exit 1
+fi
+echo "analysis artifacts: artifacts/lifecycle.dot artifacts/wire_schema.json"
+
 echo "== python -m compileall (syntax gate for the L1/L2 layers) =="
 if command -v python3 >/dev/null 2>&1; then
   python3 -m compileall -q ../python

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Regenerate the golden wire corpus at
+rust/tests/fixtures/wire_corpus.ndjson.
+
+One request line per (verb, form): every verb in the wire protocol in
+its v1 form (no `seq`) and its v2 form (with `seq`), every line
+decodable by `Request::parse_line`. The corpus is consumed twice:
+
+  * rust/tests/wire_corpus.rs decodes every line — a decoder change
+    that breaks a committed line is a wire-compat break, caught in CI;
+  * scripts/analyze_invariants.py (and `cargo xtask analyze`)
+    cross-checks every field name on every line against the schema it
+    extracts from serve/proto.rs into artifacts/wire_schema.json, so a
+    corpus line cannot silently carry a field the decoder ignores.
+
+Deterministic output — field values are fixed here, objects render in
+insertion order — so regeneration is diff-stable. `upload` uses the
+smallest legal payload: n=1, one zero f32 (4 LE bytes, base64
+"AAAAAA==").
+"""
+
+import json
+import os
+
+OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "rust", "tests", "fixtures", "wire_corpus.ndjson")
+
+FULL_JOB = {
+    "subject": "na02",
+    "n": 16,
+    "variant": "opt-fd8-cubic",
+    "precision": "mixed",
+    "priority": "emergency",
+    "algorithm": "gn",
+    "multires": 3,
+    "max_iter": 50,
+    "max_krylov": 10,
+    "beta": 0.0005,
+    "gamma": 1.0,
+    "gtol": 0.05,
+    "continuation": True,
+    "incompressible": False,
+    "verbose": False,
+}
+
+UPLOADED_JOB = {
+    "n": 16,
+    "source": {"m0": "vol-a", "m1": "vol-b"},
+    "dedup": "client-1/try-1",
+    "warm_start": "vel-prev",
+}
+
+# (verb, v1 body, v2 body) — bodies exclude cmd/seq.
+LINES = [
+    ("ping", {}, {}),
+    ("hello", {"proto": 1}, {"proto": 2}),
+    ("upload", {"n": 1, "data": "AAAAAA=="}, {"n": 1, "data": "AAAAAA=="}),
+    ("submit", {"job": FULL_JOB}, {"job": UPLOADED_JOB}),
+    ("submit_batch",
+     {"jobs": [{"subject": "na02", "n": 16}, {"subject": "na03", "n": 16}]},
+     {"jobs": [{"subject": "na02", "n": 16}]}),
+    ("status", {}, {"id": 7}),
+    ("cancel", {"id": 7}, {"id": 7}),
+    ("watch", {}, {}),
+    ("reduce",
+     {"ids": ["vol-a", "vol-b"], "pin": True},
+     {"jobs": [3, 4, 5], "field": "velocity", "scale": 1.0,
+      "apply": "tpl-1", "ref": "tpl-1", "pin": True, "unpin": "tpl-0"}),
+    ("stats", {}, {}),
+    ("shutdown", {"drain": True}, {"drain": False}),
+]
+
+
+def main():
+    lines = []
+    seq = 0
+    for verb, v1, v2 in LINES:
+        lines.append({"cmd": verb, **v1})
+        seq += 1
+        lines.append({"cmd": verb, **v2, "seq": seq})
+    with open(OUT, "w") as fh:
+        for obj in lines:
+            fh.write(json.dumps(obj, separators=(",", ":")) + "\n")
+    print(f"wrote {len(lines)} lines to {os.path.relpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

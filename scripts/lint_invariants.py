@@ -23,13 +23,15 @@ hand; the rule IDs and semantics below must match xtask's RULES table):
                     exists with matching `retryable` and CLI exit code.
                     (`unavailable` lives in the section's prose, not the
                     table — presence is still required.)
-  R5 emit-guards    Back-compat emit-only-when-present fields (journal
-                    `dedup`, request `dedup`, stats `nodes`/`batches`/
-                    `coalesced`, and PR-9's request `warm_start`, job-view
-                    `velocity`/`warped`, stats `pinned`, reduce
-                    `delta_rel`) must stay behind a conditional: their
-                    emission line must have an enclosing `if` opener
-                    before the enclosing `fn`.
+  R5 emit-guards    Back-compat emit-only-when-present fields must stay
+                    behind a conditional: every emission site of a field
+                    declared in DESIGN.md's "#### Conditional wire
+                    fields" table must have an enclosing `if` opener
+                    before the enclosing `fn`. The obligations are
+                    parsed from that table (no hand-maintained needle
+                    list); `analyze` checks the table itself for
+                    completeness against the source, so the two passes
+                    close the drift loop in both directions.
   R6 template-sync  The template subsystem and the reduce verb's module
                     must take sync primitives through the util/sync.rs
                     shim: any file under template/ (or serve/daemon.rs)
@@ -76,19 +78,9 @@ STORE_JOURNAL_TOKENS = ("journal", ".append(")
 
 DESIGN_SECTION = "### Structured errors"
 
-EMIT_GUARDS = [
-    ("serve/journal.rs", 'push(("dedup"'),
-    ("request.rs", 'push(("dedup"'),
-    ("serve/proto.rs", 'insert("nodes"'),
-    ("serve/proto.rs", 'insert("batches"'),
-    ("serve/proto.rs", 'insert("coalesced"'),
-    # PR-9 wire fields: pre-template peers must keep decoding our lines.
-    ("request.rs", 'push(("warm_start"'),
-    ("serve/proto.rs", 'insert("velocity"'),
-    ("serve/proto.rs", 'insert("warped"'),
-    ("serve/proto.rs", 'insert("pinned"'),
-    ("serve/proto.rs", 'insert("delta_rel"'),
-]
+# R5's (file, field) obligations are parsed from this DESIGN.md table —
+# the same table `analyze` checks for completeness against the source.
+EMIT_GUARDS_SECTION = "#### Conditional wire fields"
 
 # R6 scope: template subsystem files (prefix) + the reduce verb's home.
 TEMPLATE_SYNC_SCOPE = ("template/", "serve/daemon.rs")
@@ -270,15 +262,57 @@ FN_DEF = re.compile(r"\bfn\b")
 IF_KW = re.compile(r"\bif\b")
 
 
+def emit_guard_obligations():
+    """(rel file, field) rows from DESIGN.md's declared table."""
+    design = open(DESIGN, encoding="utf-8").read()
+    start = design.find(EMIT_GUARDS_SECTION)
+    if start < 0:
+        flag(DESIGN, 1, "emit-guards",
+             f"section {EMIT_GUARDS_SECTION!r} not found")
+        return []
+    tail = design[start:]
+    end = len(tail)
+    for stop in ("\n## ", "\n### ", "\n#### "):
+        i = tail.find(stop, 1)
+        if 0 < i < end:
+            end = i
+    rows = re.findall(r"^\|\s*`([\w/.]+)`\s*\|\s*`(\w+)`\s*\|", tail[:end], re.M)
+    if not rows:
+        flag(DESIGN, design[:start].count("\n") + 1, "emit-guards",
+             f"{EMIT_GUARDS_SECTION!r} holds no | `file` | `field` | rows")
+    return rows
+
+
+def emission_sites(lines, field):
+    """Line indices emitting `field` via the post-hoc insert/push idioms
+    (including the two-line rustfmt split), non-test code only."""
+    sites = []
+    single = re.compile(r'(?:\.insert\(|\.push\(\()"' + re.escape(field) + '"')
+    for i, raw in enumerate(lines):
+        if "#[cfg(test)]" in raw:
+            break  # test modules are file-final by crate convention
+        code = strip_comment(raw)
+        if single.search(code):
+            sites.append(i)
+        elif (re.search(r"\.(?:push\(\(|insert\()\s*$", code)
+              and i + 1 < len(lines)
+              and re.match(r'\s*"' + re.escape(field) + '"',
+                           strip_comment(lines[i + 1]))):
+            sites.append(i)
+    return sites
+
+
 def rule_emit_guards():
-    for rel, needle in EMIT_GUARDS:
+    for rel, field in emit_guard_obligations():
         path = os.path.join(SRC, rel)
+        if not os.path.exists(path):
+            flag(path, 1, "emit-guards",
+                 f"DESIGN.md declares conditional field `{field}` in a "
+                 "file that does not exist (stale row?)")
+            continue
         lines = open(path, encoding="utf-8").read().splitlines()
-        found = False
-        for i, raw in enumerate(lines):
-            if needle not in strip_comment(raw):
-                continue
-            found = True
+        sites = emission_sites(lines, field)
+        for i in sites:
             bal = 0
             guarded = False
             for j in range(i - 1, -1, -1):
@@ -293,11 +327,12 @@ def rule_emit_guards():
                     bal = 0  # consumed this level; keep climbing
             if not guarded:
                 flag(path, i + 1, "emit-guards",
-                     f"{needle!r} emitted unconditionally — this field is "
+                     f"`{field}` emitted unconditionally — this field is "
                      "emit-only-when-present for wire/journal back-compat")
-        if not found:
+        if not sites:
             flag(path, 1, "emit-guards",
-                 f"expected emission site {needle!r} not found (rule table stale?)")
+                 f"declared conditional field `{field}` has no emission "
+                 "site (stale DESIGN.md row?)")
 
 
 # -- R6: template/reduce sync discipline -------------------------------------
@@ -335,9 +370,9 @@ def rule_template_sync():
 def selftest():
     """Run R5/R6 against synthetic bad/good fixtures. Mirrors xtask's
     `#[cfg(test)]` negatives for containers with no Rust toolchain."""
-    global SRC, EMIT_GUARDS, violations
+    global SRC, DESIGN, violations
     import tempfile
-    saved = (SRC, EMIT_GUARDS, violations)
+    saved = (SRC, DESIGN, violations)
     with tempfile.TemporaryDirectory() as td:
         os.makedirs(os.path.join(td, "template"))
         os.makedirs(os.path.join(td, "serve"))
@@ -360,9 +395,15 @@ def selftest():
                 '        m.insert("warped".into(), Json::str(w));\n'
                 '    }\n'
                 '}\n')
+        with open(os.path.join(td, "DESIGN.md"), "w") as fh:
+            fh.write(
+                "#### Conditional wire fields\n\n"
+                "| File | Field | Emitted when |\n"
+                "|---|---|---|\n"
+                "| `serve/proto.rs` | `velocity` | retained |\n"
+                "| `serve/proto.rs` | `warped` | retained |\n")
         SRC = td
-        EMIT_GUARDS = [("serve/proto.rs", 'insert("velocity"'),
-                       ("serve/proto.rs", 'insert("warped"')]
+        DESIGN = os.path.join(td, "DESIGN.md")
         violations = []
         rule_template_sync()
         r6 = list(violations)
@@ -375,7 +416,7 @@ def selftest():
         r5 = list(violations)
         assert any("emit-guards" in v and "velocity" in v for v in r5), r5
         assert not any("warped" in v for v in r5), r5
-    SRC, EMIT_GUARDS, violations = saved
+    SRC, DESIGN, violations = saved
     print("lint_invariants: selftest OK (template-sync + emit-guards negatives)")
 
 
